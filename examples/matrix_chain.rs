@@ -1,0 +1,54 @@
+//! Fig. 1 in miniature: watch Float32 and Float64 chains die while the
+//! GOOM chain sails on — including through the AOT/PJRT artifact.
+//!
+//! ```bash
+//! cargo run --release --example matrix_chain -- [--d=16] [--steps=20000]
+//! ```
+
+use goomrs::chain::{empirical_log_growth_rate, run_chain, Method};
+use goomrs::runtime::Engine;
+use goomrs::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let d = args.get_usize("d", 16)?;
+    let steps = args.get_usize("steps", 20_000)?;
+    let seed = args.get_u64("seed", 42)?;
+
+    let growth = empirical_log_growth_rate(d, 200, seed);
+    println!("d = {d}: empirical log-magnitude growth ≈ {growth:.3}/step");
+    println!("predicted failure: f32 ≈ step {:.0}, f64 ≈ step {:.0}\n",
+             88.7 / growth, 709.8 / growth);
+
+    let engine = Engine::from_default_artifacts().ok();
+    let methods: Vec<Method> = [
+        Some(Method::F32),
+        Some(Method::F64),
+        Some(Method::GoomC64),
+        Some(Method::GoomC128),
+        engine.as_ref().and_then(|_| {
+            if [8usize, 16, 32].contains(&d) { Some(Method::GoomHlo) } else { None }
+        }),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+
+    for m in methods {
+        let cap = match m {
+            Method::F32 | Method::F64 => steps,
+            _ => steps.min(4096), // GOOMs always finish; cap for demo runtime
+        };
+        let res = run_chain(m, d, cap, seed, engine.as_ref())?;
+        let status = if res.failed {
+            format!("DIED at step {}", res.steps_completed)
+        } else {
+            format!(
+                "completed {} steps, max logmag {:.1}",
+                res.steps_completed, res.final_max_logmag
+            )
+        };
+        println!("{:<28} {}", m.label(), status);
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: the GOOM public API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use goomrs::goom::{goom_dot, lmme, scan_seq, Goom, GoomMat};
+use goomrs::linalg::Mat;
+use goomrs::rng::rng_from_seed;
+
+fn main() -> anyhow::Result<()> {
+    // --- scalars ---------------------------------------------------------
+    // A GOOM represents sign · exp(logmag): any real, at absurd magnitudes.
+    let a = Goom::<f64>::from_real(-3.0);
+    let b = Goom::<f64>::from_real(4.0);
+    println!("(-3) * 4       = {}", a.mul(b).to_f64());
+    println!("(-3) + 4       = {}", a.add(b).to_f64());
+
+    // The paper's Example 2: exp(1000)·exp(1000) overflows f64 as a real
+    // number but is just logmag 2000 as a GOOM.
+    let huge = Goom::<f64>::from_logmag(1000.0);
+    let sq = huge.mul(huge);
+    println!("exp(1000)^2    = exp({})  [f64 would overflow at exp(709)]", sq.logmag);
+
+    // Dot products become signed log-sum-exps:
+    let v = vec![Goom::<f64>::from_logmag(1000.0); 3];
+    println!("huge dot       = exp({:.4})", goom_dot(&v, &v).logmag);
+
+    // --- matrices and LMME ----------------------------------------------
+    let mut rng = rng_from_seed(0);
+    let x = Mat::randn(4, 4, &mut rng);
+    let y = Mat::randn(4, 4, &mut rng);
+    let gx = GoomMat::<f64>::from_mat(&x);
+    let gy = GoomMat::<f64>::from_mat(&y);
+    let real = x.matmul(&y);
+    let via_goom = lmme(&gx, &gy).to_mat();
+    println!(
+        "LMME == matmul: max |Δ| = {:.2e}",
+        real.data
+            .iter()
+            .zip(&via_goom.data)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f64, f64::max)
+    );
+
+    // --- a chain that floats cannot survive ------------------------------
+    // 2000 random-normal matmuls: element magnitudes reach ~exp(2000+).
+    let chain: Vec<GoomMat<f64>> =
+        (0..2000).map(|_| GoomMat::randn(4, 4, &mut rng)).collect();
+    let states = scan_seq(&chain, &|earlier, later| lmme(later, earlier));
+    let last = states.last().unwrap();
+    println!(
+        "2000-step chain: max logmag = {:.1} (f64 dies at 709.8)",
+        last.max_logmag()
+    );
+
+    // --- the AOT path (optional: needs `make artifacts`) ------------------
+    match goomrs::runtime::Engine::from_default_artifacts() {
+        Ok(engine) => {
+            let (al, asg) = goomrs::runtime::goommat_to_literals(&GoomMat::<f32>::from_mat(&{
+                let mut r = rng_from_seed(1);
+                Mat::randn(16, 16, &mut r)
+            }))?;
+            let (bl, bsg) = goomrs::runtime::goommat_to_literals(&GoomMat::<f32>::from_mat(&{
+                let mut r = rng_from_seed(2);
+                Mat::randn(16, 16, &mut r)
+            }))?;
+            let out = engine.run("lmme_d16", &[al, asg, bl, bsg])?;
+            println!(
+                "AOT LMME on PJRT ({}) returned {} outputs — three-layer stack OK",
+                engine.platform(),
+                out.len()
+            );
+        }
+        Err(_) => println!("(run `make artifacts` to enable the AOT/PJRT demo)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,274 @@
+"""AOT compiler: lowers every Layer-1/Layer-2 graph to HLO text and writes
+the artifact manifest the Rust runtime consumes.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (see DESIGN.md §2):
+  lmme_d16 / lmme_d64      one fused Pallas LMME
+  chain_block_d{8,16,32}   K=64 LMME chain steps + max-logmag trace (Fig. 1)
+  lle_scan_d3_T512         eq. 24 parallel LLE numerator (§4.2.2)
+  spectrum_d3_T256         §4.2.1 full parallel spectrum
+  rnn_train_step/forward   §4.3 GOOM-SSM RNN (copy-memory config)
+  manifest.json            input/output specs for every artifact
+  rnn_init.gbin            initial params + Adam state (custom container)
+
+Run once via `make artifacts`; never on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import goom, lyapunov, model
+from .kernels.lmme import lmme_pallas
+
+CHAIN_BLOCK_K = 64
+LLE_D, LLE_T = 3, 512
+SPEC_D, SPEC_T = 3, 256
+
+
+# ------------------------------------------------------------- lowering --
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_and_save(fn, specs, out_dir, name, input_names, output_names,
+                   meta=None):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "path": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+            for n, s in zip(input_names, specs)
+        ],
+        "outputs": output_names,
+    }
+    if meta:
+        entry["meta"] = meta
+    print(f"  wrote {path} ({len(text)} chars, {len(specs)} inputs)")
+    return entry
+
+
+# ------------------------------------------------------------ gbin I/O --
+
+_DTYPE_TAGS = {"float32": 0, "int32": 1, "float64": 2}
+
+
+def write_gbin(path, tensors):
+    """tensors: list of (name, np.ndarray). Little-endian custom container."""
+    with open(path, "wb") as f:
+        f.write(b"GBIN")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", _DTYPE_TAGS[str(arr.dtype)]))
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            f.write(arr.tobytes())
+
+
+# ------------------------------------------------------------ artifacts --
+
+
+def build_lmme(out_dir, d):
+    def fn(al, asg, bl, bsg):
+        return lmme_pallas(al, asg, bl, bsg, bm=d, bn=d, bk=d)
+
+    s = spec((d, d))
+    return lower_and_save(
+        fn, [s, s, s, s], out_dir, f"lmme_d{d}",
+        ["a_logmag", "a_sign", "b_logmag", "b_sign"],
+        ["out_logmag", "out_sign"])
+
+
+def build_chain_block(out_dir, d, k=CHAIN_BLOCK_K):
+    """One Fig.-1 chain block: scan K LMME steps, carry the state, emit the
+    per-step max logmag (the growth trace the driver logs)."""
+
+    def fn(jl, js, sl, ss):
+        def body(carry, step):
+            cl, cs = carry
+            nl, ns = goom.lmme((step[0], step[1]), (cl, cs))
+            return (nl, ns), jnp.max(nl)
+
+        (ol, os_), trace = jax.lax.scan(body, (sl, ss), (jl, js))
+        return ol, os_, trace
+
+    return lower_and_save(
+        fn,
+        [spec((k, d, d)), spec((k, d, d)), spec((d, d)), spec((d, d))],
+        out_dir, f"chain_block_d{d}",
+        ["j_logmag", "j_sign", "state_logmag", "state_sign"],
+        ["state_logmag", "state_sign", "max_logmag_trace"],
+        meta={"block_steps": k})
+
+
+def build_lle(out_dir, d=LLE_D, t=LLE_T):
+    fn = lyapunov.make_lle_scan(d, t)
+    return lower_and_save(
+        fn,
+        [spec((t, d, d)), spec((t, d, d)), spec((d,)), spec(())],
+        out_dir, f"lle_scan_d{d}_T{t}",
+        ["j_logmag", "j_sign", "u0", "dt"],
+        ["lle", "log_norm_trace"],
+        meta={"d": d, "t": t})
+
+
+def build_spectrum(out_dir, d=SPEC_D, t=SPEC_T):
+    fn = lyapunov.make_spectrum(d, t)
+    return lower_and_save(
+        fn,
+        [spec((t, d, d)), spec((t, d, d)), spec(())],
+        out_dir, f"spectrum_d{d}_T{t}",
+        ["j_logmag", "j_sign", "dt"],
+        ["lambda", "n_resets"],
+        meta={"d": d, "t": t})
+
+
+def build_rnn(out_dir, cfg, tag):
+    names = model.param_names(cfg)
+
+    def train_flat(*args):
+        n = len(names)
+        params = dict(zip(names, args[:n]))
+        m = dict(zip(names, args[n:2 * n]))
+        v = dict(zip(names, args[2 * n:3 * n]))
+        step, tokens, targets = args[3 * n:]
+        new_p, new_m, new_v, loss = model.make_train_step(cfg)(
+            params, m, v, step, tokens, targets)
+        out = tuple(new_p[k] for k in names) + tuple(new_m[k] for k in names) \
+            + tuple(new_v[k] for k in names) + (loss,)
+        return out
+
+    def forward_flat(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens = args[len(names)]
+        return (model.forward(cfg, params, tokens),)
+
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    p_specs = [spec(params[k].shape) for k in names]
+    target_shape = (cfg.batch,) if cfg.mode == "cls" else (cfg.batch, cfg.seq_len)
+    train_specs = (p_specs + p_specs + p_specs
+                   + [spec((), jnp.int32),
+                      spec((cfg.batch, cfg.seq_len), jnp.int32),
+                      spec(target_shape, jnp.int32)])
+    input_names = ([f"param.{k}" for k in names]
+                   + [f"adam_m.{k}" for k in names]
+                   + [f"adam_v.{k}" for k in names]
+                   + ["step", "tokens", "targets"])
+    output_names = ([f"param.{k}" for k in names]
+                    + [f"adam_m.{k}" for k in names]
+                    + [f"adam_v.{k}" for k in names]
+                    + ["loss"])
+    meta = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head, "d_state": cfg.d_state, "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len, "batch": cfg.batch, "mode": cfg.mode,
+        "lr": cfg.lr, "param_names": names,
+        "n_params": int(sum(int(np.prod(params[k].shape)) for k in names)),
+        "init_gbin": f"rnn_{tag}_init.gbin",
+    }
+    entries = [lower_and_save(train_flat, train_specs, out_dir,
+                              f"rnn_{tag}_train_step", input_names,
+                              output_names, meta=meta)]
+    entries.append(lower_and_save(
+        forward_flat, p_specs + [spec((cfg.batch, cfg.seq_len), jnp.int32)],
+        out_dir, f"rnn_{tag}_forward",
+        [f"param.{k}" for k in names] + ["tokens"], ["logits"], meta=meta))
+
+    # Initial params + zeroed Adam state in one gbin.
+    tensors = [(f"param.{k}", np.asarray(params[k])) for k in names]
+    tensors += [(f"adam_m.{k}", np.zeros_like(np.asarray(params[k]))) for k in names]
+    tensors += [(f"adam_v.{k}", np.zeros_like(np.asarray(params[k]))) for k in names]
+    write_gbin(os.path.join(out_dir, f"rnn_{tag}_init.gbin"), tensors)
+    print(f"  wrote rnn_{tag}_init.gbin ({meta['n_params']} params)")
+    return entries
+
+
+COPY_CFG = model.RnnConfig(vocab=16, d_model=32, n_heads=2, d_head=8,
+                           d_state=8, n_layers=2, seq_len=48, batch=16,
+                           mode="lm", lr=3e-3)
+
+# Pixel-sequence classification (sMNIST substitute): classify a 64-step
+# quantized pixel sequence from the LAST position (paper Fig. 4 right).
+PIXEL_CFG = model.RnnConfig(vocab=8, d_model=32, n_heads=2, d_head=8,
+                            d_state=8, n_layers=2, seq_len=64, batch=16,
+                            mode="cls", lr=3e-3)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact groups: lmme,chain,lle,spectrum,rnn")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    groups = set(args.only.split(",")) if args.only else \
+        {"lmme", "chain", "lle", "spectrum", "rnn"}
+
+    entries = []
+    if "lmme" in groups:
+        print("[lmme]")
+        entries.append(build_lmme(out_dir, 16))
+        entries.append(build_lmme(out_dir, 64))
+    if "chain" in groups:
+        print("[chain blocks]")
+        for d in (8, 16, 32):
+            entries.append(build_chain_block(out_dir, d))
+    if "lle" in groups:
+        print("[lle scan]")
+        entries.append(build_lle(out_dir))
+    if "spectrum" in groups:
+        print("[spectrum]")
+        entries.append(build_spectrum(out_dir))
+    if "rnn" in groups:
+        print("[rnn]")
+        entries.extend(build_rnn(out_dir, COPY_CFG, "copy"))
+        entries.extend(build_rnn(out_dir, PIXEL_CFG, "pixel"))
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    existing = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            existing = {e["name"]: e for e in json.load(f)["artifacts"]}
+    for e in entries:
+        existing[e["name"]] = e
+    with open(manifest_path, "w") as f:
+        json.dump({"artifacts": sorted(existing.values(), key=lambda e: e["name"])},
+                  f, indent=1)
+    print(f"wrote {manifest_path} ({len(existing)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

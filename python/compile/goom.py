@@ -1,0 +1,232 @@
+"""Layer-2 GOOM operations in JAX.
+
+GOOM tensors are ``(logmag, sign)`` pairs of real arrays — the explicit form
+of the paper's complex-typed GOOMs (imaginary component 0 or pi == sign
++1/-1). ``logmag = -inf`` encodes exact zero; by the paper's convention zero
+is non-negative (sign +1).
+
+This module provides:
+
+* ``to_goom`` / ``from_goom``    — the paper's eq. 4 / eq. 7 maps, with the
+  custom derivatives of eq. 5, 6 and 8 implemented as ``jax.custom_vjp``.
+* ``goom_mul`` / ``goom_add``    — Examples 1 and 2 (signed log-sum-exp).
+* ``lmme`` / ``lmme_exact``      — paper §3.2, delegating the hot path to the
+  Pallas kernel (Layer 1) or a pure-jnp fallback.
+* ``goom_scan_affine``           — parallel prefix scan of the affine GOOM
+  recurrence x'_t = LSE(LMME(A', x'_{t-1}), b'_t) (paper eq. 26) via
+  ``jax.lax.associative_scan``.
+* ``rescale_export``             — the paper's eq. 27 log-rescaled export.
+
+Everything here is build-time Python: it exists to be traced by jax.jit and
+lowered to HLO text by ``aot.py``. Nothing imports torch; nothing runs at
+serving time.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Finite floor for log(0): the paper's footnote 5 uses log(SNN^2) where SNN
+# is the smallest normal number of the component format. For f32 that is
+# 2*ln(1.1754944e-38) ~= -174.673, which exponentiates to exactly 0.0 in f32.
+LOG_FLOOR_F32 = -174.673
+# Epsilon for the redefined derivatives (eq. 6 / eq. 8).
+EPS_F32 = 1e-30
+
+
+def _signum_nonneg(x):
+    """sign(x) with sign(0) = +1 (paper: zero is non-negative)."""
+    return jnp.where(x < 0, -1.0, 1.0).astype(x.dtype)
+
+
+# ----------------------------------------------------------- to/from goom --
+
+
+@jax.custom_vjp
+def to_goom(x):
+    """Map a real tensor to a GOOM pair (paper eq. 4).
+
+    Uses the finite-floor variant (option (b) of §3.1) so downstream graphs
+    never see -inf: log(|x|) is clamped below at LOG_FLOOR_F32.
+    """
+    logmag = jnp.log(jnp.maximum(jnp.abs(x), jnp.exp(jnp.asarray(LOG_FLOOR_F32, x.dtype))))
+    logmag = jnp.maximum(logmag, LOG_FLOOR_F32)
+    return logmag.astype(x.dtype), _signum_nonneg(x)
+
+
+def _to_goom_fwd(x):
+    return to_goom(x), x
+
+
+def _to_goom_bwd(x, cot):
+    g_logmag, _g_sign = cot
+    # eq. 5 (abs' = sign, never 0) composed with eq. 6 (1/(|x| + eps)):
+    grad = g_logmag * _signum_nonneg(x) / (jnp.abs(x) + EPS_F32)
+    return (grad,)
+
+
+to_goom.defvjp(_to_goom_fwd, _to_goom_bwd)
+
+
+@jax.custom_vjp
+def from_goom(logmag, sign):
+    """Map a GOOM pair back to a real tensor (paper eq. 7)."""
+    return sign * jnp.exp(logmag)
+
+
+def _from_goom_fwd(logmag, sign):
+    x = from_goom(logmag, sign)
+    return x, x
+
+
+def _from_goom_bwd(x, g):
+    # eq. 8: derivative w.r.t. the GOOM is exp(x') shifted away from zero by
+    # +/- eps, so gradients vanish only when the backpropagated error does.
+    d = x + EPS_F32 * _signum_nonneg(x)
+    return g * d, jnp.zeros_like(x)
+
+
+from_goom.defvjp(_from_goom_fwd, _from_goom_bwd)
+
+
+# ------------------------------------------------------- scalar operations --
+
+
+def goom_mul(a, b):
+    """Real multiplication = GOOM addition (paper Example 1). a,b = pairs."""
+    (al, asg), (bl, bsg) = a, b
+    return al + bl, asg * bsg
+
+
+def goom_add(a, b):
+    """Real addition = signed log-sum-exp of two GOOM pairs (Example 2)."""
+    (al, asg), (bl, bsg) = a, b
+    hi = jnp.maximum(al, bl)
+    lo = jnp.minimum(al, bl)
+    hi_sign = jnp.where(al >= bl, asg, bsg)
+    lo_sign = jnp.where(al >= bl, bsg, asg)
+    # r = s_hi + s_lo * exp(lo - hi) in [-2, 2]; exact-cancellation -> floor.
+    r = hi_sign + lo_sign * jnp.exp(lo - hi)
+    absr = jnp.abs(r)
+    logmag = hi + jnp.log(jnp.maximum(absr, EPS_F32))
+    logmag = jnp.where(absr > 0, logmag, LOG_FLOOR_F32)
+    # hi == -inf (both zero) -> floor.
+    logmag = jnp.maximum(logmag, LOG_FLOOR_F32)
+    return logmag, _signum_nonneg(r)
+
+
+def goom_lse(logmag, sign, axis=-1):
+    """Signed log-sum-exp reduction along ``axis`` (the paper's LSE)."""
+    m = jnp.max(logmag, axis=axis, keepdims=True)
+    m_safe = jnp.maximum(m, LOG_FLOOR_F32)
+    acc = jnp.sum(sign * jnp.exp(logmag - m_safe), axis=axis)
+    absacc = jnp.abs(acc)
+    out_l = jnp.squeeze(m_safe, axis) + jnp.log(jnp.maximum(absacc, EPS_F32))
+    out_l = jnp.where(absacc > 0, out_l, LOG_FLOOR_F32)
+    out_l = jnp.maximum(out_l, LOG_FLOOR_F32)
+    return out_l, _signum_nonneg(acc)
+
+
+# ------------------------------------------------------------------- LMME --
+
+
+def lmme(a, b, kernel=None):
+    """LMME(A', B') over batched GOOM pairs (paper §3.2 eq. 10).
+
+    ``a = (logmag, sign)`` with shape [..., n, d]; ``b`` with [..., d, m].
+    The compromise implementation: per-row/per-column log-scaling constants
+    (detached, eq. 11), one real matmul on the scaled exponentials, then log
+    and rescale. ``kernel`` optionally substitutes the Pallas Layer-1 kernel
+    for the unbatched [n,d]x[d,m] case.
+    """
+    (al, asg), (bl, bsg) = a, b
+    if kernel is not None and al.ndim == 2 and bl.ndim == 2:
+        return kernel(al, asg, bl, bsg)
+    # eq. 11 scaling constants, detached from the gradient graph. We use the
+    # plain row/col max (not clamped at 0 — see rust goom::lmme docs: the
+    # clamp underflows all-tiny inputs; plain max coincides otherwise).
+    ascale = jax.lax.stop_gradient(jnp.max(al, axis=-1, keepdims=True))
+    ascale = jnp.maximum(ascale, LOG_FLOOR_F32)  # all-zero rows
+    bscale = jax.lax.stop_gradient(jnp.max(bl, axis=-2, keepdims=True))
+    bscale = jnp.maximum(bscale, LOG_FLOOR_F32)
+    ea = asg * jnp.exp(al - ascale)
+    eb = bsg * jnp.exp(bl - bscale)
+    prod = jnp.matmul(ea, eb)  # scaled matmul over R (the delegated hot path)
+    absprod = jnp.abs(prod)
+    out_l = jnp.log(jnp.maximum(absprod, EPS_F32)) + ascale + bscale
+    out_l = jnp.where(absprod > 0, out_l, LOG_FLOOR_F32)
+    # Floor-scaled rows/cols are GOOM zeros; plain-max scaling would
+    # otherwise resurrect them as exp(0) = 1.
+    dead = (ascale <= LOG_FLOOR_F32 + 0.5) | (bscale <= LOG_FLOOR_F32 + 0.5)
+    out_l = jnp.where(dead, LOG_FLOOR_F32, out_l)
+    out_l = jnp.maximum(out_l, LOG_FLOOR_F32)
+    return out_l, _signum_nonneg(prod)
+
+
+def lmme_exact(a, b):
+    """Exact LMME (paper eq. 9): signed LSE of pairwise sums, O(ndm) space.
+
+    Used as an oracle and for precision studies; never exponentiates at full
+    magnitude.
+    """
+    (al, asg), (bl, bsg) = a, b
+    s = al[..., :, :, None] + bl[..., None, :, :]  # [..., n, d, m]
+    sg = asg[..., :, :, None] * bsg[..., None, :, :]
+    return goom_lse(s, sg, axis=-2)
+
+
+# ------------------------------------------------------------------- scan --
+
+
+def goom_scan_affine(a_seq, b_seq, reverse=False):
+    """Parallel prefix scan of x'_t = LSE(LMME(A'_t, x'_{t-1}), b'_t)
+    (paper eq. 26) via ``jax.lax.associative_scan``.
+
+    ``a_seq = (logmag, sign)`` with shape [T, d, d] (non-diagonal transition
+    GOOMs); ``b_seq`` with shape [T, d, m] (bias GOOMs, m columns of state).
+    Returns the stacked states x'_1..x'_T as a pair of [T, d, m] arrays.
+
+    The scan element is the affine map (A', b'); composition is
+    (A2', b2') after (A1', b1')  =  (LMME(A2', A1'), LSE(LMME(A2', b1'), b2')).
+    """
+
+    def combine(earlier, later):
+        a1, b1 = earlier
+        a2, b2 = later
+        a = lmme(a2, a1)
+        ab = lmme(a2, b1)
+        b = goom_add(ab, b2)
+        return a, b
+
+    elems = ((a_seq[0], a_seq[1]), (b_seq[0], b_seq[1]))
+    (_, _), (xl, xs) = jax.lax.associative_scan(combine, elems, reverse=reverse)
+    return xl, xs
+
+
+def matrix_chain_scan(a_seq):
+    """Prefix scan of the pure matrix chain H_t = A_t ... A_1 over GOOMs
+    (the Fig. 1 / eq. 24 PSCAN(LMME) primitive).
+
+    ``a_seq = (logmag, sign)`` with shape [T, d, d]. Returns [T, d, d] pairs.
+    """
+
+    def combine(earlier, later):
+        return lmme(later, earlier)
+
+    return jax.lax.associative_scan(combine, a_seq)
+
+
+# ----------------------------------------------------------------- export --
+
+
+def rescale_export(logmag, sign, axis=None, margin=2.0):
+    """The paper's eq. 27: log-rescale then exponentiate, so the exported
+    floats land in (-e^margin, e^margin) regardless of GOOM magnitude.
+
+    Returns (x_scaled, c) with c detached from the gradient graph.
+    """
+    c = jnp.max(logmag, axis=axis, keepdims=axis is not None)
+    c = jax.lax.stop_gradient(c)
+    x = from_goom(logmag - c + margin, sign)
+    return x, c

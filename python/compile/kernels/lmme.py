@@ -1,0 +1,148 @@
+"""Layer-1 Pallas kernel: tiled LMME over (logmag, sign) pairs.
+
+The paper (§3.2, §6) notes its PyTorch implementation cannot express a
+fused complex-typed kernel and therefore pays two elementwise passes plus a
+cuBLAS call. Splitting GOOMs into (logmag, sign) real planes removes that
+obstruction: this kernel fuses scale -> exponentiate -> dot -> log -> rescale
+in one pass over VMEM-resident tiles, with the inner dot targeting the MXU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+CUDA threadblocks/shared memory; here the BlockSpec expresses the HBM->VMEM
+schedule. Block sizes are chosen so one (bm x bk) + (bk x bn) tile pair plus
+the (bm x bn) f32 accumulator fit comfortably in 16 MiB VMEM with
+double-buffering headroom (see ``vmem_bytes``).
+
+The kernel MUST run with interpret=True in this environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are identical either way; pytest validates against ``ref.py``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG_FLOOR_F32 = -174.673
+
+# Default tile sizes (MXU-aligned: multiples of 128 for real deployments;
+# smaller here so tests exercise multi-tile grids at toy shapes).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step: A-tile pair + B-tile pair
+    + f32 accumulator + output tile pair, times 2 for double buffering of
+    the streamed inputs."""
+    a_tiles = 2 * bm * bk * dtype_bytes  # logmag + sign
+    b_tiles = 2 * bk * bn * dtype_bytes
+    acc = bm * bn * 4
+    out_tiles = 2 * bm * bn * dtype_bytes
+    return 2 * (a_tiles + b_tiles) + acc + out_tiles
+
+
+def _lmme_kernel(ascale_ref, bscale_ref, al_ref, asg_ref, bl_ref, bsg_ref,
+                 ol_ref, osg_ref, *, nsteps_k):
+    """Grid = (m_blocks, n_blocks, k_blocks); k innermost accumulates."""
+    k = pl.program_id(2)
+
+    # Row/col scaling constants for this tile (precomputed in L2; eq. 11).
+    ascale = ascale_ref[...]  # [bm, 1]
+    bscale = bscale_ref[...]  # [1, bn]
+
+    # Scale and exponentiate the input tiles in VMEM (fused; the paper's
+    # implementation pays a separate elementwise pass through HBM for this).
+    ea = asg_ref[...] * jnp.exp(al_ref[...] - ascale)
+    eb = bsg_ref[...] * jnp.exp(bl_ref[...] - bscale)
+
+    # MXU tile dot, f32 accumulation.
+    partial_prod = jnp.dot(ea, eb, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        ol_ref[...] = partial_prod
+
+    @pl.when(k > 0)
+    def _accum():
+        ol_ref[...] += partial_prod
+
+    # Last k step: convert the accumulated real product back to GOOM form.
+    @pl.when(k == nsteps_k - 1)
+    def _finish():
+        prod = ol_ref[...]
+        absprod = jnp.abs(prod)
+        logmag = jnp.log(jnp.maximum(absprod, 1e-30)) + ascale + bscale
+        logmag = jnp.where(absprod > 0, logmag, LOG_FLOOR_F32)
+        # Rows/columns whose scale sits at the finite floor are GOOM zeros:
+        # the plain-max scaling would otherwise resurrect them as exp(0)=1.
+        dead = (ascale <= LOG_FLOOR_F32 + 0.5) | (bscale <= LOG_FLOOR_F32 + 0.5)
+        logmag = jnp.where(dead, LOG_FLOOR_F32, logmag)
+        logmag = jnp.maximum(logmag, LOG_FLOOR_F32)
+        ol_ref[...] = logmag
+        osg_ref[...] = jnp.where(prod < 0, -1.0, 1.0).astype(osg_ref.dtype)
+
+
+def lmme_pallas(al, asg, bl, bsg, *, bm=None, bn=None, bk=None,
+                interpret=True):
+    """Tiled Pallas LMME: (al, asg) [n,d] x (bl, bsg) [d,m] -> [n,m] pair.
+
+    Scaling constants are computed here (cheap O(nd) jnp work, detached) and
+    streamed to the kernel per-tile; everything O(n*d*m) happens inside the
+    kernel.
+    """
+    n, d = al.shape
+    d2, m = bl.shape
+    assert d == d2, f"shape mismatch {al.shape} x {bl.shape}"
+
+    bm = bm or min(DEFAULT_BM, n)
+    bn = bn or min(DEFAULT_BN, m)
+    bk = bk or min(DEFAULT_BK, d)
+    assert n % bm == 0 and m % bn == 0 and d % bk == 0, (
+        f"dims ({n},{d},{m}) must divide tiles ({bm},{bk},{bn})")
+
+    # eq. 11 scaling constants (plain max — see goom.lmme for rationale).
+    ascale = jax.lax.stop_gradient(jnp.max(al, axis=1, keepdims=True))
+    ascale = jnp.maximum(ascale, LOG_FLOOR_F32)
+    bscale = jax.lax.stop_gradient(jnp.max(bl, axis=0, keepdims=True))
+    bscale = jnp.maximum(bscale, LOG_FLOOR_F32)
+
+    grid = (n // bm, m // bn, d // bk)
+    nsteps_k = grid[2]
+
+    out_shape = [
+        jax.ShapeDtypeStruct((n, m), jnp.float32),  # logmag (accumulator)
+        jax.ShapeDtypeStruct((n, m), al.dtype),     # sign
+    ]
+    ol, osg = pl.pallas_call(
+        partial(_lmme_kernel, nsteps_k=nsteps_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),   # ascale
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),   # bscale
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # al
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # asg
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # bl
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # bsg
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # ol
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # osg
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ascale, bscale, al, asg, bl, bsg)
+    return ol.astype(al.dtype), osg
+
+
+def mxu_utilization_estimate(n, d, m, bm, bn, bk):
+    """Estimated MXU utilization of the kernel: useful dot FLOPs over dot
+    FLOPs plus the elementwise scale/exp/log overhead, assuming the VPU
+    issues 1 elementwise op per MXU-equivalent slot. Used by DESIGN.md §Perf
+    to compare against the paper's ~2x-matmul LMME cost."""
+    dot_flops = 2.0 * n * d * m
+    # per-tile elementwise work: 2*(bm*bk + bk*bn) exp/mul + bm*bn log/abs
+    tiles = (n // bm) * (m // bn) * (d // bk)
+    elem = tiles * (2.0 * (bm * bk + bk * bn)) + (n / bm) * (m / bn) * (3.0 * bm * bn)
+    return dot_flops / (dot_flops + elem)

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels and the
+Layer-2 GOOM ops.
+
+These are the ground truth the pytest/hypothesis suites compare the kernel
+and the jitted graphs against. They favour clarity over speed, never leave
+log space at full magnitude, and deliberately do NOT import compile.goom
+(an oracle should be independent of the code under test).
+"""
+
+import jax.numpy as jnp
+
+LOG_FLOOR_F32 = -174.673
+
+
+def _signum_nonneg(x):
+    return jnp.where(x < 0, -1.0, 1.0).astype(x.dtype)
+
+
+def _signed_add(al, asg, bl, bsg):
+    """Elementwise signed log-sum-exp of two GOOM arrays."""
+    hi = jnp.maximum(al, bl)
+    lo = jnp.minimum(al, bl)
+    hs = jnp.where(al >= bl, asg, bsg)
+    ls = jnp.where(al >= bl, bsg, asg)
+    r = hs + ls * jnp.exp(lo - hi)
+    absr = jnp.abs(r)
+    out = hi + jnp.log(jnp.maximum(absr, 1e-30))
+    out = jnp.where(absr > 0, out, LOG_FLOOR_F32)
+    out = jnp.maximum(out, LOG_FLOOR_F32)
+    return out, _signum_nonneg(r)
+
+
+def lmme_ref(al, asg, bl, bsg):
+    """Exact LMME (paper eq. 9): per-output-element signed log-sum-exp of
+    the d pairwise logmag sums. Shapes: al [n,d], bl [d,m]."""
+    s = al[:, :, None] + bl[None, :, :]  # [n, d, m]
+    sg = asg[:, :, None] * bsg[None, :, :]
+    m = jnp.max(s, axis=1, keepdims=True)
+    m_safe = jnp.maximum(m, LOG_FLOOR_F32)
+    acc = jnp.sum(sg * jnp.exp(s - m_safe), axis=1)
+    absacc = jnp.abs(acc)
+    out_l = jnp.squeeze(m_safe, 1) + jnp.log(jnp.maximum(absacc, 1e-30))
+    out_l = jnp.where(absacc > 0, out_l, LOG_FLOOR_F32)
+    out_l = jnp.maximum(out_l, LOG_FLOOR_F32)
+    return out_l, _signum_nonneg(acc)
+
+
+def matmul_log_ref(a, b):
+    """Real matmul computed through log space (for error studies):
+    log-map, exact LMME, exp-map."""
+    al = jnp.log(jnp.maximum(jnp.abs(a), 1e-38))
+    asg = _signum_nonneg(a)
+    bl = jnp.log(jnp.maximum(jnp.abs(b), 1e-38))
+    bsg = _signum_nonneg(b)
+    ol, osg = lmme_ref(al, asg, bl, bsg)
+    return osg * jnp.exp(ol)
+
+
+def scan_chain_ref(al, asg):
+    """Sequential reference for the GOOM matrix-chain prefix scan:
+    H_t = A_t . H_{t-1}, computed with exact LMME. Shapes: [T, d, d]."""
+    T = al.shape[0]
+    outs_l, outs_s = [al[0]], [asg[0]]
+    for t in range(1, T):
+        ol, osg = lmme_ref(al[t], asg[t], outs_l[-1], outs_s[-1])
+        outs_l.append(ol)
+        outs_s.append(osg)
+    return jnp.stack(outs_l), jnp.stack(outs_s)
+
+
+def affine_scan_ref(a_l, a_s, b_l, b_s):
+    """Sequential reference for the affine GOOM recurrence (paper eq. 26):
+    x'_t = LSE(LMME(A'_t, x'_{t-1}), b'_t), with x'_0 = GOOM zero.
+
+    Shapes: a [T,d,d], b [T,d,m]. Returns stacked states [T,d,m]."""
+    T, d, m = b_l.shape
+    xl = jnp.full((d, m), LOG_FLOOR_F32, a_l.dtype)
+    xs = jnp.ones((d, m), a_l.dtype)
+    outs_l, outs_s = [], []
+    for t in range(T):
+        pl, ps = lmme_ref(a_l[t], a_s[t], xl, xs)
+        xl, xs = _signed_add(pl, ps, b_l[t], b_s[t])
+        outs_l.append(xl)
+        outs_s.append(xs)
+    return jnp.stack(outs_l), jnp.stack(outs_s)

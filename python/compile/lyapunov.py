@@ -1,0 +1,188 @@
+"""Layer-2 Lyapunov graphs, lowered to HLO by aot.py.
+
+Two graphs:
+
+* ``make_lle_scan(cfg)``      — paper eq. 24: prefix scan of LMME over a
+  Jacobian stack applied to u0, no normalization anywhere; returns the LLE
+  numerator log||s_T|| plus the per-step log-norm trace.
+
+* ``make_spectrum(cfg)``      — paper §4.2.1 groups (a)-(d) as ONE fused
+  graph: selective-reset prefix scan over GOOMs (reset = in-graph batched
+  MGS QR of the log-rescaled state), batch QR of every state, push each
+  Jacobian through its predecessor basis, and average the log|diag R|.
+
+Everything is pure jnp — in particular QR is hand-rolled modified
+Gram-Schmidt (mirroring rust linalg::qr_mgs) so the lowered HLO contains no
+LAPACK custom-calls and runs on any PJRT backend.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import goom
+
+LOG_FLOOR_F32 = goom.LOG_FLOOR_F32
+
+
+# ----------------------------------------------------------- batched MGS --
+
+
+def mgs_qr(x):
+    """Thin MGS QR of x [..., n, d] with d static; diag(R) >= 0.
+
+    Unrolled over columns (d is small and static in these graphs), fully
+    traceable, custom-call-free. Returns (q [...,n,d], r [...,d,d]).
+    """
+    d = x.shape[-1]
+    cols = [x[..., :, k] for k in range(d)]
+    q_cols = []
+    r_rows = [[jnp.zeros(x.shape[:-2], x.dtype) for _ in range(d)] for _ in range(d)]
+    for k in range(d):
+        v = cols[k]
+        rkk = jnp.sqrt(jnp.sum(v * v, axis=-1) + 1e-30)
+        r_rows[k][k] = rkk
+        qk = v / rkk[..., None]
+        for j in range(k + 1, d):
+            s = jnp.sum(qk * cols[j], axis=-1)
+            r_rows[k][j] = s
+            cols[j] = cols[j] - s[..., None] * qk
+        q_cols.append(qk)
+    q = jnp.stack(q_cols, axis=-1)
+    r = jnp.stack([jnp.stack(row, axis=-1) for row in r_rows], axis=-2)
+    return q, r
+
+
+# ----------------------------------------------------- log-space helpers --
+
+
+def col_log_norms(xl):
+    """0.5*LSE(2*logmag) per column: xl [..., n, d] -> [..., d]."""
+    m = jnp.max(xl, axis=-2, keepdims=True)
+    m = jnp.maximum(m, LOG_FLOOR_F32)
+    acc = jnp.sum(jnp.exp(2.0 * (xl - m)), axis=-2)
+    return jnp.squeeze(m, -2) + 0.5 * jnp.log(jnp.maximum(acc, 1e-30))
+
+
+def max_pairwise_col_cosine(xl, xs):
+    """Max |cosine| over column pairs, computed stably in log space.
+    xl, xs: [..., n, d]. Returns [...]."""
+    d = xl.shape[-1]
+    norms = col_log_norms(xl)  # [..., d]
+    worst = jnp.zeros(xl.shape[:-2], xl.dtype)
+    for i in range(d):
+        for j in range(i + 1, d):
+            s = xl[..., :, i] + xl[..., :, j]  # [..., n]
+            sg = xs[..., :, i] * xs[..., :, j]
+            m = jnp.maximum(jnp.max(s, axis=-1), LOG_FLOOR_F32)
+            acc = jnp.sum(sg * jnp.exp(s - m[..., None]), axis=-1)
+            log_dot = m + jnp.log(jnp.maximum(jnp.abs(acc), 1e-30))
+            log_cos = log_dot - norms[..., i] - norms[..., j]
+            cos = jnp.exp(jnp.minimum(log_cos, 0.0))
+            worst = jnp.maximum(worst, cos)
+    return worst
+
+
+def orthonormalize_goom(xl, xs):
+    """The reset function R (paper §4.2.1(a)): log-normalize columns,
+    export to floats, MGS QR, log-map Q back."""
+    norms = col_log_norms(xl)  # [..., d]
+    xl_n = xl - norms[..., None, :]
+    real = xs * jnp.exp(jnp.maximum(xl_n, LOG_FLOOR_F32))
+    q, _ = mgs_qr(real)
+    ql = jnp.log(jnp.maximum(jnp.abs(q), 1e-30))
+    ql = jnp.maximum(ql, LOG_FLOOR_F32)
+    # Entries that are exactly zero stay at the floor.
+    return ql, jnp.where(q < 0, -1.0, 1.0).astype(xs.dtype)
+
+
+# ------------------------------------------------------------- LLE graph --
+
+
+def make_lle_scan(d, t_steps):
+    """Returns lle(jl, js, u0, dt) with jl/js [T,d,d], u0 [d], dt scalar.
+
+    Output: (lle, log_norm_trace [T]) — eq. 24 with the whole prefix trace
+    (the paper's PSCAN exposes all interim states; the trace is what the
+    rust driver logs)."""
+
+    def lle(jl, js, u0, dt):
+        # H_t = J_t ... J_1 via PSCAN(LMME).
+        hl, hs = goom.matrix_chain_scan((jl, js))  # [T,d,d]
+        # s_t = H_t u0 over GOOMs (u0 is representable; log-map in-graph).
+        u0l, u0s = goom.to_goom(u0[:, None])  # [d,1]
+        sl, ss = goom.lmme((hl, hs), (jnp.broadcast_to(u0l, (t_steps, d, 1)),
+                                      jnp.broadcast_to(u0s, (t_steps, d, 1))))
+        # log||s_t|| = 0.5 * LSE(2 logmag) per step.
+        sl2 = sl[..., 0]  # [T, d]
+        m = jnp.maximum(jnp.max(sl2, axis=-1), LOG_FLOOR_F32)
+        acc = jnp.sum(jnp.exp(2.0 * (sl2 - m[:, None])), axis=-1)
+        log_norms = m + 0.5 * jnp.log(jnp.maximum(acc, 1e-30))  # [T]
+        lle_val = log_norms[-1] / (dt * t_steps)
+        return lle_val, log_norms
+
+    return lle
+
+
+# -------------------------------------------------------- spectrum graph --
+
+
+def make_spectrum(d, t_steps, threshold=0.995):
+    """Returns spectrum(jl, js, dt) -> (lambda [d], n_resets).
+
+    Groups (a)-(d) of paper §4.2.1 in one graph. The scan element is the
+    affine pair (A', B') plus a was-reset flag; the combine applies the
+    eq. 28 selective reset to the earlier element, then composes.
+    """
+
+    def combine(earlier, later):
+        a1l, a1s, b1l, b1s, f1 = earlier
+        a2l, a2s, b2l, b2s, f2 = later
+        # Selective reset of the earlier tuple (once-only, guarded by flag).
+        cos = max_pairwise_col_cosine(a1l, a1s)
+        a1_nonzero = jnp.max(a1l, axis=(-2, -1)) > LOG_FLOOR_F32 + 1.0
+        fire = (cos > threshold) & (f1 < 0.5) & a1_nonzero
+        rl, rs = orthonormalize_goom(a1l, a1s)
+        zl = jnp.full_like(a1l, LOG_FLOOR_F32)
+        zs = jnp.ones_like(a1s)
+        a1l = jnp.where(fire[..., None, None], zl, a1l)
+        a1s = jnp.where(fire[..., None, None], zs, a1s)
+        b1l_new = jnp.where(fire[..., None, None], rl, b1l)
+        b1s_new = jnp.where(fire[..., None, None], rs, b1s)
+        f1 = jnp.where(fire, 1.0, f1)
+        # Ordinary affine composition over GOOMs.
+        al, as_ = goom.lmme((a2l, a2s), (a1l, a1s))
+        pl, ps = goom.lmme((a2l, a2s), (b1l_new, b1s_new))
+        bl, bs = goom.goom_add((pl, ps), (b2l, b2s))
+        return al, as_, bl, bs, jnp.maximum(f1, f2)
+
+    def spectrum(jl, js, dt):
+        # Scan elements: first = S0 (identity basis), then J_1..J_{T-1}.
+        eye = jnp.eye(d, dtype=jl.dtype)
+        s0l, s0s = goom.to_goom(eye)
+        al = jnp.concatenate([s0l[None], jl[:-1]], axis=0)  # [T,d,d]
+        as_ = jnp.concatenate([s0s[None], js[:-1]], axis=0)
+        bl = jnp.full_like(al, LOG_FLOOR_F32)
+        bs = jnp.ones_like(as_)
+        flags = jnp.zeros((t_steps,), jl.dtype)
+        scanned = jax.lax.associative_scan(
+            combine, (al, as_, bl, bs, flags), axis=0)
+        sl_a, ss_a, sl_b, ss_b, flags_out = scanned
+        # State = A* + B* (exactly one non-zero per position).
+        stl, sts = goom.goom_add((sl_a, ss_a), (sl_b, ss_b))
+        # Group (b): log-normalize + export + QR -> Q_{t-1} for every t.
+        norms = col_log_norms(stl)
+        stl_n = stl - norms[..., None, :]
+        real_states = sts * jnp.exp(jnp.maximum(stl_n, LOG_FLOOR_F32))
+        q_prev, _ = mgs_qr(real_states)  # [T,d,d]
+        # Group (c): S*_t = J_t . Q_{t-1}; jacobian t pairs with state t-1,
+        # i.e. jl[t] with q_prev[t] given our element layout.
+        real_j = js * jnp.exp(jnp.maximum(jl, LOG_FLOOR_F32))
+        s_out = jnp.einsum("tij,tjk->tik", real_j, q_prev)
+        # Group (d): QR of every output, mean log|diag R|.
+        _, r = mgs_qr(s_out)
+        diag = jnp.abs(jnp.stack([r[..., i, i] for i in range(d)], axis=-1))
+        logdiag = jnp.log(jnp.maximum(diag, 1e-30))  # [T, d]
+        lam = jnp.sum(logdiag, axis=0) / (dt * t_steps)
+        return lam, jnp.sum(flags_out)
+
+    return spectrum

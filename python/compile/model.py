@@ -1,0 +1,229 @@
+"""Layer-2: the paper's §4.3 deep RNN with non-diagonal GOOM-SSM recurrences.
+
+Architecture (per paper):
+  embedding -> N x residual recurrent layer -> task head
+
+Residual recurrent layer, per token, multiple heads:
+  1. LayerNorm + linear(+bias) -> per-head inputs u_t
+  2. non-diagonal linear SSM  x_t = A x_{t-1} + B u_t  per head, computed
+     over GOOMs via a parallel prefix scan (eq. 26) with NO stabilization —
+     recurrent magnitudes fluctuate freely in log space;
+  3. log-rescaled export back to floats (eq. 27), y_t = C x_t + D u_t,
+     GLU, linear over flattened heads, residual add.
+
+The whole train step (forward + loss + backward + Adam update) is one jitted
+function, lowered once by aot.py; the Rust Layer-3 trainer only feeds
+batches and carries the parameter/optimizer buffers.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import goom
+
+
+# ------------------------------------------------------------- config ------
+
+
+class RnnConfig:
+    """Static hyperparameters (baked into the lowered HLO)."""
+
+    def __init__(self, vocab=16, d_model=32, n_heads=2, d_head=8, d_state=8,
+                 n_layers=2, seq_len=48, batch=16, mode="lm",
+                 lr=3e-3, beta1=0.9, beta2=0.999, adam_eps=1e-8):
+        assert n_heads * d_head <= d_model * 4
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_head = d_head
+        self.d_state = d_state
+        self.n_layers = n_layers
+        self.seq_len = seq_len
+        self.batch = batch
+        # "lm": next-token loss at every position.
+        # "cls": classification from the LAST position only (targets [B]).
+        self.mode = mode
+        self.lr = lr
+        self.beta1 = beta1
+        self.beta2 = beta2
+        self.adam_eps = adam_eps
+
+
+# ------------------------------------------------------------- params ------
+
+
+def init_params(cfg, key):
+    """Initialize the parameter pytree (a flat dict of named arrays)."""
+    keys = jax.random.split(key, 4 + cfg.n_layers * 8)
+    k = iter(keys)
+
+    def dense(key, fan_in, shape):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    p = {"embed": dense(next(k), 1.0, (cfg.vocab, cfg.d_model))}
+    h, dh, ds = cfg.n_heads, cfg.d_head, cfg.d_state
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        p[pre + "ln_scale"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[pre + "ln_bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[pre + "w_in"] = dense(next(k), cfg.d_model, (cfg.d_model, h * dh))
+        p[pre + "b_in"] = jnp.zeros((h * dh,), jnp.float32)
+        # Non-diagonal transition: near-identity + small noise. The paper
+        # needs NO spectral constraint — GOOMs absorb growth/decay.
+        a = jnp.eye(ds)[None].repeat(h, 0) + 0.05 * jax.random.normal(next(k), (h, ds, ds))
+        p[pre + "A"] = a.astype(jnp.float32)
+        p[pre + "B"] = dense(next(k), dh, (h, ds, dh))
+        p[pre + "C"] = dense(next(k), ds, (h, 2 * dh, ds))
+        p[pre + "D"] = dense(next(k), dh, (h, 2 * dh, dh))
+        p[pre + "w_out"] = dense(next(k), h * dh, (h * dh, cfg.d_model))
+        p[pre + "b_out"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["head_ln_scale"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["head_ln_bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["head_w"] = dense(next(k), cfg.d_model, (cfg.d_model, cfg.vocab))
+    p["head_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+def param_names(cfg):
+    """Deterministic parameter ordering (the manifest/runtime contract)."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        names += [pre + s for s in
+                  ["ln_scale", "ln_bias", "w_in", "b_in", "A", "B", "C", "D",
+                   "w_out", "b_out"]]
+    names += ["head_ln_scale", "head_ln_bias", "head_w", "head_b"]
+    return names
+
+
+# ------------------------------------------------------------ forward ------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _ssm_layer_goom(u, a, b):
+    """The non-diagonal GOOM-SSM recurrence for ONE head over a batch.
+
+    u: [B, T, dh] float inputs; a: [ds, ds]; b: [ds, dh].
+    Returns x: [B, T, ds] floats, exported via eq. 27 per (batch, step).
+
+    Everything between to_goom and rescale_export happens in log space; the
+    scan is a parallel prefix scan (eq. 26) with no stabilization.
+    """
+    B, T, dh = u.shape
+    ds = a.shape[0]
+    # GOOM-map parameters and inputs (custom VJPs, eq. 4-6).
+    al, asg = goom.to_goom(a)
+    bl, bsg = goom.to_goom(b)
+    ul, usg = goom.to_goom(u)
+
+    # b'_t = LMME(B', u'_t): [B, T, ds, 1] column states.
+    # Batched over (B, T) via broadcasting inside goom.lmme.
+    ul_col = ul[..., :, None]  # [B,T,dh,1]
+    usg_col = usg[..., :, None]
+    bias_l, bias_s = goom.lmme((jnp.broadcast_to(bl, (B, T, ds, dh)),
+                                jnp.broadcast_to(bsg, (B, T, ds, dh))),
+                               (ul_col, usg_col))  # [B,T,ds,1]
+
+    # Transition stack: same A' at every step.
+    a_l = jnp.broadcast_to(al, (B, T, ds, ds))
+    a_s = jnp.broadcast_to(asg, (B, T, ds, ds))
+
+    def combine(earlier, later):
+        (a1l, a1s, b1l, b1s) = earlier
+        (a2l, a2s, b2l, b2s) = later
+        al_, as_ = goom.lmme((a2l, a2s), (a1l, a1s))
+        pl_, ps_ = goom.lmme((a2l, a2s), (b1l, b1s))
+        bl_, bs_ = goom.goom_add((pl_, ps_), (b2l, b2s))
+        return al_, as_, bl_, bs_
+
+    elems = (a_l, a_s, bias_l, bias_s)
+    # Scan over axis=1 (time).
+    _, _, xl, xs = jax.lax.associative_scan(combine, elems, axis=1)
+    # eq. 27 export, rescaled per (batch, step) slice so every exported
+    # state lands in (-e^2, e^2) while gradients flow through from_goom.
+    x, _c = goom.rescale_export(xl[..., 0], xs[..., 0], axis=-1)
+    return x  # [B, T, ds]
+
+
+def forward(cfg, params, tokens):
+    """tokens [B, T] int32 -> logits [B, T, vocab]."""
+    x = params["embed"][tokens]  # [B, T, d_model]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layer_norm(x, params[pre + "ln_scale"], params[pre + "ln_bias"])
+        u = jnp.matmul(h, params[pre + "w_in"]) + params[pre + "b_in"]
+        B, T = u.shape[0], u.shape[1]
+        u = u.reshape(B, T, cfg.n_heads, cfg.d_head)
+        outs = []
+        for hd in range(cfg.n_heads):  # static unroll over heads
+            xh = _ssm_layer_goom(u[:, :, hd, :], params[pre + "A"][hd],
+                                 params[pre + "B"][hd])
+            # y_t = C x_t + D u_t over floats, then GLU.
+            y = (jnp.einsum("od,btd->bto", params[pre + "C"][hd], xh)
+                 + jnp.einsum("od,btd->bto", params[pre + "D"][hd],
+                              u[:, :, hd, :]))
+            y1, y2 = jnp.split(y, 2, axis=-1)
+            outs.append(y1 * jax.nn.sigmoid(y2))  # GLU
+        glu = jnp.concatenate(outs, axis=-1)  # [B, T, h*dh]
+        x = x + jnp.matmul(glu, params[pre + "w_out"]) + params[pre + "b_out"]
+    h = _layer_norm(x, params["head_ln_scale"], params["head_ln_bias"])
+    return jnp.matmul(h, params["head_w"]) + params["head_b"]
+
+
+def loss_fn(cfg, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    if cfg.mode == "cls":
+        logits = logits[:, -1, :]  # classify from the last position
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)
+        return jnp.mean(nll)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------- adam ------
+
+
+def adam_update(cfg, params, grads, m, v, step):
+    """One Adam step over the flat dicts. step counts from 1."""
+    b1, b2 = cfg.beta1, cfg.beta2
+    new_p, new_m, new_v = {}, {}, {}
+    t = step.astype(jnp.float32)
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        mhat = m_k / (1 - b1 ** t)
+        vhat = v_k / (1 - b2 ** t)
+        new_p[k] = params[k] - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg):
+    """Returns train_step(params, m, v, step, tokens, targets) ->
+    (params', m', v', loss). This is the function aot.py lowers."""
+
+    def train_step(params, m, v, step, tokens, targets):
+        loss, grads = jax.value_and_grad(partial(loss_fn, cfg))(
+            params, tokens, targets)
+        new_p, new_m, new_v = adam_update(cfg, params, grads, m, v, step + 1)
+        return new_p, new_m, new_v, loss
+
+    return train_step
+
+
+def make_forward(cfg):
+    def fwd(params, tokens):
+        return forward(cfg, params, tokens)
+
+    return fwd

@@ -1,0 +1,144 @@
+"""Layer-2 GOOM op validation: maps, arithmetic, LSE, LMME, custom VJPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import goom
+from compile.kernels.ref import lmme_ref
+
+
+def test_to_from_goom_roundtrip():
+    x = jnp.array([0.0, 1.0, -1.0, 3.5e10, -2.75e-20, 17.0], jnp.float32)
+    l, s = goom.to_goom(x)
+    back = goom.from_goom(l, s)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6, atol=1e-35)
+
+
+def test_zero_maps_to_floor_and_back():
+    l, s = goom.to_goom(jnp.zeros((3,), jnp.float32))
+    assert np.all(np.asarray(l) <= goom.LOG_FLOOR_F32 + 1e-3)
+    assert np.all(np.asarray(s) == 1.0)  # zero is non-negative by convention
+    back = goom.from_goom(l, s)
+    np.testing.assert_allclose(np.asarray(back), 0.0, atol=1e-37)
+
+
+def test_goom_mul_add_match_reals():
+    rng = np.random.RandomState(0)
+    x = rng.randn(100).astype("float32") * 10
+    y = rng.randn(100).astype("float32") * 10
+    gx, gy = goom.to_goom(jnp.array(x)), goom.to_goom(jnp.array(y))
+    prod = goom.from_goom(*goom.goom_mul(gx, gy))
+    np.testing.assert_allclose(np.asarray(prod), x * y, rtol=1e-5, atol=1e-5)
+    ssum = goom.from_goom(*goom.goom_add(gx, gy))
+    np.testing.assert_allclose(np.asarray(ssum), x + y, rtol=1e-4, atol=1e-4)
+
+
+def test_goom_add_beyond_float_range():
+    # exp(1000) + exp(1000) = 2 exp(1000) — unrepresentable as f32 reals.
+    l = jnp.full((2,), 1000.0, jnp.float32)
+    s = jnp.ones((2,), jnp.float32)
+    ol, osg = goom.goom_add((l[:1], s[:1]), (l[1:], s[1:]))
+    np.testing.assert_allclose(float(ol[0]), 1000.0 + np.log(2.0), rtol=1e-6)
+    assert float(osg[0]) == 1.0
+
+
+def test_goom_lse_matches_sum():
+    rng = np.random.RandomState(1)
+    x = rng.randn(6, 50).astype("float32")
+    g = goom.to_goom(jnp.array(x))
+    ol, osg = goom.goom_lse(*g, axis=-1)
+    got = np.asarray(goom.from_goom(ol, osg))
+    np.testing.assert_allclose(got, x.sum(-1), rtol=1e-4, atol=1e-4)
+
+
+def test_lmme_matches_oracle_and_batches():
+    rng = np.random.RandomState(2)
+    a = rng.randn(5, 8, 4).astype("float32")
+    b = rng.randn(5, 4, 6).astype("float32")
+    ga, gb = goom.to_goom(jnp.array(a)), goom.to_goom(jnp.array(b))
+    ol, osg = goom.lmme(ga, gb)
+    for i in range(5):
+        rl, rs = lmme_ref(*goom.to_goom(jnp.array(a[i])), *goom.to_goom(jnp.array(b[i])))
+        np.testing.assert_allclose(np.asarray(ol[i]), np.asarray(rl), rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(osg[i]), np.asarray(rs))
+
+
+def test_lmme_exact_agrees_with_compromise():
+    rng = np.random.RandomState(3)
+    a = (rng.randn(6, 6) * 2).astype("float32")
+    b = (rng.randn(6, 6) * 2).astype("float32")
+    ga, gb = goom.to_goom(jnp.array(a)), goom.to_goom(jnp.array(b))
+    l1, s1 = goom.lmme(ga, gb)
+    l2, s2 = goom.lmme_exact(ga, gb)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_to_goom_gradient_is_finite_at_zero():
+    # eq. 5/6: gradient must be finite (and non-zero) even at x = 0.
+    def f(x):
+        l, s = goom.to_goom(x)
+        return jnp.sum(l)
+
+    g = jax.grad(f)(jnp.zeros((4,), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.all(np.asarray(g) > 0)  # 1/(0 + eps), sign +
+
+
+def test_from_goom_gradient_nonzero_at_floor():
+    # eq. 8: derivative shifted away from zero by ±eps.
+    def f(l):
+        return jnp.sum(goom.from_goom(l, jnp.ones_like(l)))
+
+    g = jax.grad(f)(jnp.full((4,), goom.LOG_FLOOR_F32, jnp.float32))
+    assert np.all(np.asarray(g) != 0.0)
+
+
+def test_roundtrip_gradient_chain():
+    # Gradients flow through R -> C' -> R (the paper's backprop claim).
+    def f(x):
+        l, s = goom.to_goom(x)
+        l2, s2 = goom.goom_mul((l, s), (l, s))  # x^2 in goom space
+        return jnp.sum(goom.from_goom(l2, s2))
+
+    x = jnp.array([2.0, -3.0], jnp.float32)
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0 * np.asarray(x), rtol=1e-3)
+
+
+def test_rescale_export_bounds():
+    l = jnp.array([[5000.0, 4990.0], [4980.0, 5000.0]], jnp.float32)
+    s = jnp.array([[1.0, -1.0], [1.0, 1.0]], jnp.float32)
+    x, c = goom.rescale_export(l, s, axis=-1)
+    assert np.all(np.abs(np.asarray(x)) <= np.exp(2.0) + 1e-5)
+    assert float(np.max(np.abs(np.asarray(x)))) > 1.0  # max element ~ e^2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    # Shifts below ≈ -165 push logmags under the finite zero floor
+    # (-174.673); entries there ARE semantic zeros, so invariance
+    # legitimately breaks. Stay above the floor.
+    shift=st.floats(min_value=-160, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_lmme_magnitude_invariance(shift, seed):
+    """LMME(A'+c, B') == LMME(A', B') + c elementwise in log space: shifting
+    logmags must shift the output exactly, at any magnitude."""
+    rng = np.random.RandomState(seed)
+    al = rng.randn(4, 4).astype("float32")
+    asg = np.where(rng.randn(4, 4) < 0, -1.0, 1.0).astype("float32")
+    bl = rng.randn(4, 4).astype("float32")
+    bsg = np.where(rng.randn(4, 4) < 0, -1.0, 1.0).astype("float32")
+    base_l, base_s = goom.lmme((jnp.array(al), jnp.array(asg)),
+                               (jnp.array(bl), jnp.array(bsg)))
+    shift_l, shift_s = goom.lmme((jnp.array(al + shift), jnp.array(asg)),
+                                 (jnp.array(bl), jnp.array(bsg)))
+    # Tolerance floor reflects f32 input quantization: (al + shift) rounds
+    # at ulp(shift) ~ 1.2e-7*|shift| per entry, amplified ~2-4x through the
+    # scaled exp/sum/log pipeline.
+    np.testing.assert_allclose(np.asarray(shift_l) - shift, np.asarray(base_l),
+                               rtol=0, atol=max(2e-4, 1e-6 * abs(shift)))
+    np.testing.assert_array_equal(np.asarray(shift_s), np.asarray(base_s))

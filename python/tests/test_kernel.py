@@ -1,0 +1,155 @@
+"""Layer-1 kernel validation: Pallas LMME vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel: hypothesis sweeps
+shapes, tile configurations, magnitude regimes and signs, asserting
+allclose against ref.lmme_ref and against the plain real matmul where
+representable.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lmme import lmme_pallas, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.ref import lmme_ref
+
+
+LOG_FLOOR = -174.673
+
+
+def goomify(x):
+    l = np.log(np.maximum(np.abs(x), 1e-38)).astype("float32")
+    l = np.where(x == 0, LOG_FLOOR, l).astype("float32")  # exact zeros -> floor
+    s = np.where(x < 0, -1.0, 1.0).astype("float32")
+    return l, s
+
+
+def run_both(a, b, **tiles):
+    al, asg = goomify(a)
+    bl, bsg = goomify(b)
+    ol, osg = lmme_pallas(al, asg, bl, bsg, **tiles)
+    rl, rs = lmme_ref(jnp.array(al), jnp.array(asg), jnp.array(bl), jnp.array(bsg))
+    return (np.asarray(ol), np.asarray(osg)), (np.asarray(rl), np.asarray(rs))
+
+
+def assert_goom_close(got, ref, rtol=2e-4, atol=2e-3):
+    # Tolerances reflect f32 accumulation-order differences between the
+    # tiled k-loop and the oracle's single reduction (worst on
+    # cancellation-prone outputs whose logmag is far below the inputs').
+    gl, gs = got
+    rl, rs = ref
+    # Where both are at the floor (zero), skip.
+    live = ~((gl < -170) & (rl < -170))
+    np.testing.assert_allclose(gl[live], rl[live], rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(gs[live], rs[live])
+
+
+def test_single_tile_matches_ref_and_matmul():
+    rng = np.random.RandomState(0)
+    a = rng.randn(16, 16).astype("float32")
+    b = rng.randn(16, 16).astype("float32")
+    got, ref = run_both(a, b, bm=16, bn=16, bk=16)
+    assert_goom_close(got, ref)
+    real = np.asarray(got[1]) * np.exp(np.asarray(got[0]))
+    np.testing.assert_allclose(real, a @ b, rtol=1e-4, atol=1e-5)
+
+
+def test_multi_tile_grid_matches_ref():
+    rng = np.random.RandomState(1)
+    a = rng.randn(32, 48).astype("float32")
+    b = rng.randn(48, 24).astype("float32")
+    got, ref = run_both(a, b, bm=8, bn=8, bk=16)
+    assert_goom_close(got, ref)
+
+
+def test_huge_magnitudes_beyond_float32():
+    # logmags around 1e4: the represented reals are ~exp(10000), far beyond
+    # float32/float64; the kernel must stay exact in log space.
+    rng = np.random.RandomState(2)
+    al = (rng.randn(8, 8) * 3 + 10_000).astype("float32")
+    asg = np.where(rng.randn(8, 8) < 0, -1.0, 1.0).astype("float32")
+    bl = (rng.randn(8, 8) * 3 + 10_000).astype("float32")
+    bsg = np.where(rng.randn(8, 8) < 0, -1.0, 1.0).astype("float32")
+    ol, osg = lmme_pallas(al, asg, bl, bsg, bm=8, bn=8, bk=8)
+    rl, rs = lmme_ref(jnp.array(al), jnp.array(asg), jnp.array(bl), jnp.array(bsg))
+    assert np.all(np.isfinite(np.asarray(ol)))
+    assert np.asarray(ol).max() > 19_000
+    np.testing.assert_allclose(np.asarray(ol), np.asarray(rl), rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(osg), np.asarray(rs))
+
+
+def test_zero_rows_stay_zero():
+    rng = np.random.RandomState(3)
+    a = rng.randn(8, 8).astype("float32")
+    a[2, :] = 0.0
+    b = rng.randn(8, 8).astype("float32")
+    got, ref = run_both(a, b, bm=8, bn=8, bk=8)
+    assert np.all(got[0][2, :] < -170), "zero row must stay at the floor"
+    assert_goom_close(got, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([4, 8, 16]),
+    m=st.sampled_from([4, 8, 16]),
+    shift=st.floats(min_value=-3000, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes_and_magnitudes(n, d, m, shift, seed):
+    rng = np.random.RandomState(seed)
+    al = (rng.randn(n, d) + shift).astype("float32")
+    asg = np.where(rng.randn(n, d) < 0, -1.0, 1.0).astype("float32")
+    bl = (rng.randn(d, m) + shift).astype("float32")
+    bsg = np.where(rng.randn(d, m) < 0, -1.0, 1.0).astype("float32")
+    bm = n if n <= 8 else n // 2
+    bn = m if m <= 8 else m // 2
+    bk = d
+    ol, osg = lmme_pallas(al, asg, bl, bsg, bm=bm, bn=bn, bk=bk)
+    rl, rs = lmme_ref(jnp.array(al), jnp.array(asg), jnp.array(bl), jnp.array(bsg))
+    ol, rl = np.asarray(ol), np.asarray(rl)
+    live = ~((ol < -170) & (np.asarray(rl) < -170))
+    # relative-to-magnitude tolerance: logmags around |shift|
+    tol = 3e-5 * max(1.0, abs(shift))
+    np.testing.assert_allclose(ol[live], rl[live], rtol=0, atol=max(3e-3, tol))
+    np.testing.assert_array_equal(np.asarray(osg)[live], np.asarray(rs)[live])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_k_accumulation_tilings_agree(bk, seed):
+    """Different k-tilings must produce the same accumulated product."""
+    rng = np.random.RandomState(seed)
+    a = rng.randn(8, 16).astype("float32")
+    b = rng.randn(16, 8).astype("float32")
+    got_tiled, _ = run_both(a, b, bm=8, bn=8, bk=bk)
+    got_full, _ = run_both(a, b, bm=8, bn=8, bk=16)
+    # different k-tilings reassociate the f32 accumulation; logmag
+    # differences concentrate on cancellation-prone outputs
+    np.testing.assert_allclose(got_tiled[0], got_full[0], rtol=1e-4, atol=2e-2)
+    np.testing.assert_array_equal(got_tiled[1], got_full[1])
+
+
+def test_rejects_misaligned_tiles():
+    rng = np.random.RandomState(4)
+    a, b = rng.randn(10, 8).astype("float32"), rng.randn(8, 8).astype("float32")
+    al, asg = goomify(a)
+    bl, bsg = goomify(b)
+    with pytest.raises(AssertionError):
+        lmme_pallas(al, asg, bl, bsg, bm=4, bn=4, bk=8)  # 10 % 4 != 0
+
+
+def test_vmem_budget_of_default_tiles():
+    # Default 128^3 tiles must fit 16 MiB VMEM with headroom.
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20 / 2
+
+
+def test_mxu_utilization_estimate_reasonable():
+    u = mxu_utilization_estimate(1024, 1024, 1024, 128, 128, 128)
+    assert 0.9 < u <= 1.0, u  # large-d LMME is dot-dominated
+    u_small = mxu_utilization_estimate(8, 8, 8, 8, 8, 8)
+    assert u_small < u  # small tiles pay relatively more elementwise work

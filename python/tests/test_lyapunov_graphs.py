@@ -1,0 +1,104 @@
+"""Validation of the AOT Lyapunov graphs on systems with known exponents."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.lyapunov import (col_log_norms, make_lle_scan, make_spectrum,
+                              max_pairwise_col_cosine, mgs_qr,
+                              orthonormalize_goom)
+
+
+def goomify(x):
+    return (np.log(np.maximum(np.abs(x), 1e-30)).astype("float32"),
+            np.where(x < 0, -1.0, 1.0).astype("float32"))
+
+
+def triangular_chain(T=256, d=3):
+    j = np.diag([1.1, 0.9, 0.5]).astype("float32")
+    j[0, 1] = 0.05
+    j[1, 2] = -0.03
+    stack = np.tile(j, (T, 1, 1))
+    jl, js = goomify(stack)
+    jl = np.where(stack == 0, -174.673, jl).astype("float32")
+    return jl, js
+
+
+def test_mgs_qr_invariants():
+    rng = np.random.RandomState(0)
+    x = rng.randn(7, 5, 5).astype("float32")
+    q, r = mgs_qr(jnp.array(x))
+    q, r = np.asarray(q), np.asarray(r)
+    for b in range(7):
+        np.testing.assert_allclose(q[b] @ r[b], x[b], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(q[b].T @ q[b], np.eye(5), atol=1e-4)
+        assert np.all(np.diag(r[b]) >= 0)
+        assert np.allclose(np.tril(r[b], -1), 0, atol=1e-6)
+
+
+def test_col_log_norms_matches_real():
+    rng = np.random.RandomState(1)
+    x = rng.randn(6, 4).astype("float32")
+    xl, _ = goomify(x)
+    got = np.asarray(col_log_norms(jnp.array(xl)))
+    expect = np.log(np.linalg.norm(x, axis=0))
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_max_pairwise_cosine_detects_colinearity():
+    x = np.array([[1.0, 1.001, 0.0], [1.0, 0.999, 1.0], [0.5, 0.5, -1.0]],
+                 dtype="float32")
+    xl, xs = goomify(x)
+    cos = float(max_pairwise_col_cosine(jnp.array(xl), jnp.array(xs)))
+    assert cos > 0.999
+    eye_l, eye_s = goomify(np.eye(3).astype("float32") + 0.0)
+    eye_l = np.where(np.eye(3) == 0, -174.673, eye_l).astype("float32")
+    cos_eye = float(max_pairwise_col_cosine(jnp.array(eye_l), jnp.array(eye_s)))
+    assert cos_eye < 1e-3
+
+
+def test_orthonormalize_goom_output_is_orthonormal():
+    rng = np.random.RandomState(2)
+    x = rng.randn(4, 4).astype("float32") * 1e3
+    xl, xs = goomify(x)
+    # Push magnitudes far beyond floats: add 5000 to logmags.
+    ql, qs = orthonormalize_goom(jnp.array(xl + 5000.0), jnp.array(xs))
+    q = np.asarray(qs) * np.exp(np.asarray(ql))
+    np.testing.assert_allclose(q.T @ q, np.eye(4), atol=1e-4)
+
+
+def test_lle_graph_on_triangular_system():
+    T, d = 256, 3
+    jl, js = triangular_chain(T, d)
+    lle = jax.jit(make_lle_scan(d, T))
+    u0 = (np.ones(3) / np.sqrt(3)).astype("float32")
+    val, trace = lle(jl, js, u0, jnp.float32(1.0))
+    assert abs(float(val) - np.log(1.1)) < 0.02
+    # Trace grows ~linearly with slope ln(1.1).
+    slope = (float(trace[-1]) - float(trace[100])) / (T - 101)
+    assert abs(slope - np.log(1.1)) < 0.01
+
+
+def test_spectrum_graph_recovers_all_exponents():
+    T, d = 256, 3
+    jl, js = triangular_chain(T, d)
+    spec = jax.jit(make_spectrum(d, T))
+    lam, nresets = spec(jl, js, jnp.float32(1.0))
+    got = np.sort(np.asarray(lam))[::-1]
+    expect = np.sort(np.log([1.1, 0.9, 0.5]))[::-1]
+    np.testing.assert_allclose(got, expect, atol=0.05)
+    assert float(nresets) > 0  # colinearity resets must fire
+
+
+def test_spectrum_graph_contractive_system_no_blowup():
+    # All-contracting system: states shrink toward zero magnitude; graph
+    # must neither overflow nor produce NaN.
+    T, d = 128, 3
+    j = (0.5 * np.eye(3)).astype("float32")
+    stack = np.tile(j, (T, 1, 1))
+    jl = np.where(stack == 0, -174.673,
+                  np.log(np.maximum(np.abs(stack), 1e-30))).astype("float32")
+    js = np.ones_like(jl)
+    spec = jax.jit(make_spectrum(d, T))
+    lam, _ = spec(jl, js, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(lam), np.log(0.5), atol=0.02)

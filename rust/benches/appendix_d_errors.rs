@@ -1,0 +1,236 @@
+//! Appendix D — magnitude of errors: one-/two-argument scalar functions and
+//! a representative matrix product, computed over GOOMs vs plain floats.
+//!
+//! The paper measures decimal digits of error against Float128. No f128
+//! exists here (DESIGN.md §4 substitution), so we use the two-rung ladder:
+//!   rung 1: f32-backed ops (Complex64 GOOM vs Float32) measured against a
+//!           float64 reference — one precision rung up, same metric;
+//!   rung 2: f64-backed ops measured against compensated (Kahan/2-product)
+//!           f64 arithmetic for the accumulation-sensitive ops.
+//!
+//! Paper claim to reproduce: GOOM errors are "roughly the same to within a
+//! fraction of the least significant decimal digit" of the float's own
+//! error.
+
+use goomrs::goom::{lmme, Goom, GoomMat};
+use goomrs::linalg::Mat;
+use goomrs::rng::rng_from_seed;
+use goomrs::util::timing::Table;
+
+/// Decimal digits of error: -log10(|got-ref|/|ref|); 17 = essentially exact.
+fn digits(got: f64, reference: f64) -> f64 {
+    if reference == 0.0 {
+        return if got == 0.0 { 17.0 } else { 0.0 };
+    }
+    let rel = ((got - reference) / reference).abs();
+    if rel == 0.0 {
+        17.0
+    } else {
+        (-rel.log10()).clamp(0.0, 17.0)
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn main() {
+    let mut rng = rng_from_seed(0xD00D);
+    let n = 20_000;
+    // Inputs spanning the f32-precise decimal range (paper: 1e-6..1e6).
+    let xs: Vec<f64> = (0..n)
+        .map(|i| {
+            let exp10 = -6.0 + 12.0 * (i as f64 / n as f64);
+            10f64.powf(exp10) * if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }
+        })
+        .collect();
+    let ys: Vec<f64> = xs.iter().rev().map(|x| x * 1.7).collect();
+
+    println!("# Appendix D — decimal digits of accuracy (higher is better; f32 has ~7.2)\n");
+    let mut t = Table::new(&["op", "Float32", "C64 GOOM", "Δ digits", "C128 GOOM vs f64"]);
+
+    struct OpRow {
+        name: &'static str,
+        f32_digits: f64,
+        goom32_digits: f64,
+        goom64_digits: f64,
+    }
+
+    let mut rows: Vec<OpRow> = Vec::new();
+
+    // ---- one-argument ops (positive inputs where required) --------------
+    let abs_xs: Vec<f64> = xs.iter().map(|x| x.abs()).collect();
+    let one_arg: Vec<(&str, fn(f64) -> f64, bool)> = vec![
+        ("reciprocal", |x| 1.0 / x, false),
+        ("sqrt", f64::sqrt, true),
+        ("square", |x| x * x, false),
+        ("log", f64::ln, true),
+    ];
+    for (name, f, needs_pos) in one_arg {
+        let inputs = if needs_pos { &abs_xs } else { &xs };
+        let mut d_f32 = Vec::new();
+        let mut d_g32 = Vec::new();
+        let mut d_g64 = Vec::new();
+        for &x in inputs.iter() {
+            let reference = f(x);
+            // plain f32 op
+            let via_f32 = match name {
+                "reciprocal" => (1.0f32 / x as f32) as f64,
+                "sqrt" => (x as f32).sqrt() as f64,
+                "square" => ((x as f32) * (x as f32)) as f64,
+                "log" => (x as f32).ln() as f64,
+                _ => unreachable!(),
+            };
+            // GOOM<f32> op
+            let g = Goom::<f32>::from_real(x as f32);
+            let via_g32 = match name {
+                "reciprocal" => g.recip().to_f64(),
+                "sqrt" => g.sqrt().to_f64(),
+                "square" => g.square().to_f64(),
+                "log" => g.ln_real().unwrap() as f64,
+            _ => unreachable!(),
+            };
+            // GOOM<f64> op vs f64 reference
+            let g64 = Goom::<f64>::from_real(x);
+            let via_g64 = match name {
+                "reciprocal" => g64.recip().to_f64(),
+                "sqrt" => g64.sqrt().to_f64(),
+                "square" => g64.square().to_f64(),
+                "log" => g64.ln_real().unwrap(),
+                _ => unreachable!(),
+            };
+            d_f32.push(digits(via_f32, reference));
+            d_g32.push(digits(via_g32, reference));
+            d_g64.push(digits(via_g64, reference));
+        }
+        rows.push(OpRow {
+            name,
+            f32_digits: mean(&d_f32),
+            goom32_digits: mean(&d_g32),
+            goom64_digits: mean(&d_g64),
+        });
+    }
+
+    // exp over the paper's narrower range (1e-5..10)
+    {
+        let mut d_f32 = Vec::new();
+        let mut d_g32 = Vec::new();
+        let mut d_g64 = Vec::new();
+        for i in 0..n {
+            let x = 1e-5 + (10.0 - 1e-5) * (i as f64 / n as f64);
+            let reference = x.exp();
+            d_f32.push(digits((x as f32).exp() as f64, reference));
+            // exp over GOOMs: logmag add in log space == from_logmag(x).
+            let g = Goom::<f32>::from_logmag(x as f32);
+            d_g32.push(digits(g.to_f64(), reference));
+            d_g64.push(digits(Goom::<f64>::from_logmag(x).to_f64(), reference));
+        }
+        rows.push(OpRow {
+            name: "exp",
+            f32_digits: mean(&d_f32),
+            goom32_digits: mean(&d_g32),
+            goom64_digits: mean(&d_g64),
+        });
+    }
+
+    // ---- two-argument ops ------------------------------------------------
+    {
+        let mut d_add_f32 = Vec::new();
+        let mut d_add_g32 = Vec::new();
+        let mut d_add_g64 = Vec::new();
+        let mut d_mul_f32 = Vec::new();
+        let mut d_mul_g32 = Vec::new();
+        let mut d_mul_g64 = Vec::new();
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            let (rs, rp) = (x + y, x * y);
+            d_add_f32.push(digits((x as f32 + y as f32) as f64, rs));
+            d_mul_f32.push(digits((x as f32 * y as f32) as f64, rp));
+            let (gx, gy) = (Goom::<f32>::from_real(x as f32), Goom::<f32>::from_real(y as f32));
+            d_add_g32.push(digits(gx.add(gy).to_f64(), rs));
+            d_mul_g32.push(digits(gx.mul(gy).to_f64(), rp));
+            let (hx, hy) = (Goom::<f64>::from_real(x), Goom::<f64>::from_real(y));
+            d_add_g64.push(digits(hx.add(hy).to_f64(), rs));
+            d_mul_g64.push(digits(hx.mul(hy).to_f64(), rp));
+        }
+        rows.push(OpRow {
+            name: "add/sub",
+            f32_digits: mean(&d_add_f32),
+            goom32_digits: mean(&d_add_g32),
+            goom64_digits: mean(&d_add_g64),
+        });
+        rows.push(OpRow {
+            name: "mul/div",
+            f32_digits: mean(&d_mul_f32),
+            goom32_digits: mean(&d_mul_g32),
+            goom64_digits: mean(&d_mul_g64),
+        });
+    }
+
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.2}", r.f32_digits),
+            format!("{:.2}", r.goom32_digits),
+            format!("{:+.2}", r.goom32_digits - r.f32_digits),
+            format!("{:.2}", r.goom64_digits),
+        ]);
+    }
+    t.print();
+
+    // Paper-shape assertion: within a fraction of a decimal digit.
+    for r in &rows {
+        assert!(
+            r.goom32_digits > r.f32_digits - 1.0,
+            "{}: GOOM {:.2} digits vs float {:.2}",
+            r.name,
+            r.goom32_digits,
+            r.f32_digits
+        );
+    }
+
+    // ---- representative matrix product -----------------------------------
+    println!("\n# matrix product (256x256, N(0,1)): Frobenius-normalized error");
+    let mut rng = rng_from_seed(7);
+    let a = Mat::randn(256, 256, &mut rng);
+    let b = Mat::randn(256, 256, &mut rng);
+    let reference = a.matmul(&b); // f64 reference (rung-1 ladder)
+    let fro = reference.frobenius_norm();
+
+    // f32 matmul
+    let a32: Vec<f32> = a.data.iter().map(|&x| x as f32).collect();
+    let b32: Vec<f32> = b.data.iter().map(|&x| x as f32).collect();
+    let mut c32 = vec![0.0f32; 256 * 256];
+    for i in 0..256 {
+        for k in 0..256 {
+            let av = a32[i * 256 + k];
+            for j in 0..256 {
+                c32[i * 256 + j] += av * b32[k * 256 + j];
+            }
+        }
+    }
+    let err_f32 = reference
+        .data
+        .iter()
+        .zip(&c32)
+        .map(|(r, &g)| (r - g as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / fro;
+
+    // GOOM<f32> LMME
+    let ga = GoomMat::<f32>::from_mat(&a);
+    let gb = GoomMat::<f32>::from_mat(&b);
+    let gc = lmme(&ga, &gb).to_mat();
+    let err_goom = reference
+        .data
+        .iter()
+        .zip(&gc.data)
+        .map(|(r, g)| (r - g).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / fro;
+    println!("  Float32 matmul: {err_f32:.3e}");
+    println!("  C64-GOOM LMME:  {err_goom:.3e}  (ratio {:.2}x)", err_goom / err_f32);
+    assert!(err_goom < err_f32 * 10.0, "LMME error within 10x of float32 matmul");
+    println!("\nappendix_d_errors OK");
+}

@@ -1,0 +1,112 @@
+//! Appendix D — running time: each op over GOOMs as a multiple of the same
+//! op over floats, on batches processed in a tight loop (the paper uses
+//! 100M-element GPU batches; we use 1M-element CPU batches — the RATIO is
+//! the reproduced quantity).
+//!
+//! Paper claims to reproduce: most ops ≈ 2x floats; `log` over GOOMs is
+//! FREE (a GOOM is already a log); LMME ≈ 2x the underlying matmul.
+
+use goomrs::goom::{lmme, Goom, GoomMat};
+use goomrs::linalg::Mat;
+use goomrs::rng::rng_from_seed;
+use goomrs::util::timing::{bench, fmt_duration, Table};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let n = if fast { 200_000 } else { 1_000_000 };
+    let iters = if fast { 3 } else { 5 };
+    let mut rng = rng_from_seed(1);
+    let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() + 1e-3).collect();
+    let ys: Vec<f64> = (0..n).map(|_| rng.next_f64() + 1e-3).collect();
+    let gx: Vec<Goom<f64>> = xs.iter().map(|&x| Goom::from_real(x)).collect();
+    let gy: Vec<Goom<f64>> = ys.iter().map(|&y| Goom::from_real(y)).collect();
+
+    println!("# Appendix D — running time multiples (batch n={n}, mean of {iters})\n");
+    let mut t = Table::new(&["op", "float64", "C128 GOOM", "multiple"]);
+    let mut multiples: Vec<(&str, f64)> = Vec::new();
+
+    macro_rules! compare {
+        ($name:expr, $float:expr, $goom:expr) => {{
+            let tf = bench(1, iters, || $float).mean_s;
+            let tg = bench(1, iters, || $goom).mean_s;
+            let mult = tg / tf;
+            multiples.push(($name, mult));
+            t.row(&[
+                $name.to_string(),
+                fmt_duration(tf),
+                fmt_duration(tg),
+                format!("{mult:.2}x"),
+            ]);
+        }};
+    }
+
+    compare!(
+        "mul",
+        xs.iter().zip(&ys).map(|(a, b)| a * b).sum::<f64>(),
+        gx.iter().zip(&gy).map(|(a, b)| a.mul(*b).logmag).sum::<f64>()
+    );
+    compare!(
+        "add",
+        xs.iter().zip(&ys).map(|(a, b)| a + b).sum::<f64>(),
+        gx.iter().zip(&gy).map(|(a, b)| a.add(*b).logmag).sum::<f64>()
+    );
+    compare!(
+        "reciprocal",
+        xs.iter().map(|a| 1.0 / a).sum::<f64>(),
+        gx.iter().map(|a| a.recip().logmag).sum::<f64>()
+    );
+    compare!(
+        "sqrt",
+        xs.iter().map(|a| a.sqrt()).sum::<f64>(),
+        gx.iter().map(|a| a.sqrt().logmag).sum::<f64>()
+    );
+    compare!(
+        "square",
+        xs.iter().map(|a| a * a).sum::<f64>(),
+        gx.iter().map(|a| a.square().logmag).sum::<f64>()
+    );
+    compare!(
+        "log",
+        xs.iter().map(|a| a.ln()).sum::<f64>(),
+        gx.iter().map(|a| a.ln_real().unwrap()).sum::<f64>()
+    );
+    compare!(
+        "exp(to real)",
+        xs.iter().map(|a| a.exp()).sum::<f64>(),
+        gx.iter().map(|a| a.to_f64()).sum::<f64>()
+    );
+
+    // matmul vs LMME (the paper's headline ~2x claim).
+    let d = if fast { 96 } else { 192 };
+    let mut rng2 = rng_from_seed(2);
+    let a = Mat::randn(d, d, &mut rng2);
+    let b = Mat::randn(d, d, &mut rng2);
+    let ga = GoomMat::<f64>::from_mat(&a);
+    let gb = GoomMat::<f64>::from_mat(&b);
+    let tf = bench(1, iters, || a.matmul(&b)).mean_s;
+    let tg = bench(1, iters, || lmme(&ga, &gb)).mean_s;
+    multiples.push(("matmul (LMME)", tg / tf));
+    t.row(&[
+        format!("matmul {d}x{d} (LMME)"),
+        fmt_duration(tf),
+        fmt_duration(tg),
+        format!("{:.2}x", tg / tf),
+    ]);
+
+    t.print();
+
+    // Paper-shape assertions.
+    let log_mult = multiples.iter().find(|(n, _)| *n == "log").unwrap().1;
+    assert!(log_mult < 0.7, "GOOM log must be ~free, got {log_mult:.2}x");
+    let mul_mult = multiples.iter().find(|(n, _)| *n == "mul").unwrap().1;
+    assert!(mul_mult < 6.0, "GOOM mul multiple {mul_mult:.2}x");
+    let lmme_mult = multiples.last().unwrap().1;
+    assert!(
+        lmme_mult < 8.0,
+        "LMME should be a small multiple of matmul, got {lmme_mult:.2}x"
+    );
+    println!(
+        "\npaper anchors: log free ({log_mult:.2}x), LMME {lmme_mult:.1}x matmul (paper: ~2x on GPU)"
+    );
+    println!("\nappendix_d_runtime OK");
+}

@@ -1,0 +1,106 @@
+//! Fig. 2: precision vs magnitude for GOOMs relative to the backing float.
+//!
+//! Paper claim: a Complex64 GOOM (f32 logmag) has *greater* precision than
+//! Float32 at small real magnitudes (the logmag is small, where f32 is
+//! dense) and its relative precision decays as magnitude grows toward —
+//! and beyond — the float's max, where plain floats first lose precision
+//! and then overflow entirely.
+//!
+//! We measure: for reals of magnitude exp(L), the relative spacing of
+//! representable GOOM values (= ulp of the logmag, since Δx/x = Δlogmag)
+//! versus the relative spacing of f32/f64 values at the same magnitude.
+
+use goomrs::goom::GoomFloat;
+use goomrs::util::timing::Table;
+
+fn goom_rel_spacing_f32(logmag: f32) -> f64 {
+    // Relative spacing of representable reals: d(exp(l))/exp(l) = d(l).
+    (logmag.next_up() - logmag) as f64
+}
+
+fn float_rel_spacing(x: f64) -> f64 {
+    if x == 0.0 {
+        return f64::MIN_POSITIVE;
+    }
+    (x.next_up() - x) / x
+}
+
+fn f32_rel_spacing(x: f32) -> f64 {
+    if !x.is_finite() || x == 0.0 {
+        return f64::INFINITY;
+    }
+    ((x.next_up() - x) / x) as f64
+}
+
+fn main() {
+    println!("# Fig. 2 — relative precision vs magnitude: Complex64 GOOM vs Float32\n");
+    let mut t = Table::new(&[
+        "real magnitude",
+        "ln(x)",
+        "f32 rel. spacing",
+        "GOOM(C64) rel. spacing",
+        "winner",
+    ]);
+    // Sweep ln(x) from deep-subnormal-for-floats to far-beyond-overflow.
+    let cases: &[(f64, &str)] = &[
+        (-120.0, "exp(-120) (f32 underflowed)"),
+        (-80.0, "exp(-80)"),
+        (-20.0, "exp(-20)"),
+        (-1.0, "1/e"),
+        (0.0, "1"),
+        (1.0, "e"),
+        (20.0, "exp(20)"),
+        (80.0, "exp(80)"),
+        (88.0, "exp(88) (near f32 max)"),
+        (120.0, "exp(120) (f32 overflowed)"),
+        (10_000.0, "exp(1e4)"),
+        (1e30, "exp(1e30)"),
+    ];
+    let mut goom_wins_small = 0;
+    let mut float_wins_large_prec = 0;
+    for &(l, label) in cases {
+        let goom_spacing = goom_rel_spacing_f32(l as f32);
+        let f32_spacing = if l.abs() < 88.0 { f32_rel_spacing((l).exp() as f32) } else { f64::INFINITY };
+        let winner = if goom_spacing < f32_spacing { "GOOM" } else { "Float32" };
+        if l.abs() < 1.0 && winner == "GOOM" {
+            goom_wins_small += 1;
+        }
+        if (20.0..88.0).contains(&l) && winner == "Float32" {
+            float_wins_large_prec += 1;
+        }
+        t.row(&[
+            label.to_string(),
+            format!("{l:.0}"),
+            if f32_spacing.is_finite() {
+                format!("{f32_spacing:.2e}")
+            } else {
+                "unrepresentable".into()
+            },
+            format!("{goom_spacing:.2e}"),
+            winner.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Paper-shape assertions (§3, Fig. 2):
+    // 1. Near magnitude 1 the GOOM spacing (ulp of a small logmag) beats
+    //    the float's ~1.2e-7 relative spacing.
+    assert!(goom_wins_small >= 1, "GOOM must win near |ln x| < 1");
+    // 2. At large-but-representable magnitudes the float's relative
+    //    spacing is constant while the GOOM's grows with ulp(logmag).
+    assert!(float_wins_large_prec >= 1, "float wins at large ln(x) while finite");
+    // 3. Beyond the float's max, only the GOOM represents anything at all.
+    assert!(goom_rel_spacing_f32(120.0).is_finite());
+
+    // Same sweep for Complex128 vs Float64 (condensed).
+    println!("\n# Complex128 GOOM vs Float64 (condensed)");
+    for &l in &[-1.0f64, 0.5, 50.0, 700.0, 1e5, 1e300] {
+        let goom = l.next_up() - l;
+        let f = if l.abs() < 709.0 { float_rel_spacing(l.exp()) } else { f64::INFINITY };
+        println!(
+            "  ln(x)={l:<8.1}  f64 spacing {}  C128-GOOM spacing {goom:.2e}",
+            if f.is_finite() { format!("{f:.2e}") } else { "unrepresentable".into() }
+        );
+    }
+    println!("\nfig2_precision OK");
+}

@@ -1,0 +1,346 @@
+//! The Fig. 1 experiment: long chains of random-normal matrix products.
+//!
+//! `S_t = A_t S_{t-1}`, `A_t ~ N(0,1)^{d×d}` (paper eq. 14). Over floats the
+//! element magnitudes compound to overflow (f32 dies around step
+//! 88/E[log-growth], f64 around 8.1× later); over GOOMs (eq. 15) the chain
+//! completes arbitrarily many steps.
+//!
+//! Four native methods (f32, f64, Goom<f32> ≙ Complex64, Goom<f64> ≙
+//! Complex128) plus the AOT path (`GoomHlo`) that runs the same GOOM chain
+//! through the compiled `chain_block_d*` artifact — proving the three-layer
+//! stack composes.
+
+use crate::goom::{lmme, GoomMat};
+use crate::linalg::Mat;
+use crate::rng::{child_seed, rng_from_seed, Normal, Rng};
+use crate::runtime::{goommat_stack_to_literals, goommat_to_literals, Engine};
+use anyhow::Result;
+
+/// Which arithmetic carries the chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    F32,
+    F64,
+    GoomC64,
+    GoomC128,
+    /// Goom<f32> chain executed through the AOT chain_block artifact.
+    GoomHlo,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::F32 => "Float32",
+            Method::F64 => "Float64",
+            Method::GoomC64 => "Complex64 GOOM",
+            Method::GoomC128 => "Complex128 GOOM",
+            Method::GoomHlo => "Complex64 GOOM (AOT/PJRT)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float32" => Some(Method::F32),
+            "f64" | "float64" => Some(Method::F64),
+            "goom" | "goomc64" | "c64" => Some(Method::GoomC64),
+            "goomc128" | "c128" => Some(Method::GoomC128),
+            "hlo" | "goomhlo" => Some(Method::GoomHlo),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of one chain run.
+#[derive(Debug, Clone)]
+pub struct ChainResult {
+    pub method: Method,
+    pub d: usize,
+    pub steps_completed: usize,
+    pub failed: bool,
+    /// max log-magnitude (natural log) reached by any element, as far as
+    /// trackable by the method.
+    pub final_max_logmag: f64,
+}
+
+fn randn_mat_f32(d: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut normal = Normal::standard();
+    (0..d * d).map(|_| normal.sample(rng) as f32).collect()
+}
+
+fn matmul_f32(a: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..d {
+        for k in 0..d {
+            let av = a[i * d + k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[k * d..(k + 1) * d];
+            let orow = &mut out[i * d..(i + 1) * d];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Run a chain with the given method for up to `max_steps`, stopping early
+/// on catastrophic numerical failure (any non-finite element, or a
+/// degenerate all-zero state from underflow).
+pub fn run_chain(
+    method: Method,
+    d: usize,
+    max_steps: usize,
+    seed: u64,
+    engine: Option<&Engine>,
+) -> Result<ChainResult> {
+    match method {
+        Method::F32 => Ok(run_chain_f32(d, max_steps, seed)),
+        Method::F64 => Ok(run_chain_f64(d, max_steps, seed)),
+        Method::GoomC64 => Ok(run_chain_goom::<f32>(d, max_steps, seed)),
+        Method::GoomC128 => Ok(run_chain_goom::<f64>(d, max_steps, seed)),
+        Method::GoomHlo => run_chain_hlo(d, max_steps, seed, engine),
+    }
+}
+
+fn run_chain_f32(d: usize, max_steps: usize, seed: u64) -> ChainResult {
+    let mut rng = rng_from_seed(seed);
+    let mut s = randn_mat_f32(d, &mut rng);
+    let mut tmp = vec![0.0f32; d * d];
+    let mut max_abs = 0.0f32;
+    for t in 0..max_steps {
+        let a = randn_mat_f32(d, &mut rng);
+        matmul_f32(&a, &s, d, &mut tmp);
+        std::mem::swap(&mut s, &mut tmp);
+        max_abs = s.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let failed = s.iter().any(|x| !x.is_finite()) || max_abs == 0.0;
+        if failed {
+            return ChainResult {
+                method: Method::F32,
+                d,
+                steps_completed: t,
+                failed: true,
+                final_max_logmag: max_abs.max(f32::MIN_POSITIVE).ln() as f64,
+            };
+        }
+    }
+    ChainResult {
+        method: Method::F32,
+        d,
+        steps_completed: max_steps,
+        failed: false,
+        final_max_logmag: max_abs.ln() as f64,
+    }
+}
+
+fn run_chain_f64(d: usize, max_steps: usize, seed: u64) -> ChainResult {
+    let mut rng = rng_from_seed(seed);
+    let mut s = Mat::randn(d, d, &mut rng);
+    let mut max_abs = 0.0f64;
+    for t in 0..max_steps {
+        let a = Mat::randn(d, d, &mut rng);
+        s = a.matmul(&s);
+        max_abs = s.max_abs();
+        if s.has_non_finite() || max_abs == 0.0 {
+            return ChainResult {
+                method: Method::F64,
+                d,
+                steps_completed: t,
+                failed: true,
+                final_max_logmag: max_abs.max(f64::MIN_POSITIVE).ln(),
+            };
+        }
+    }
+    ChainResult {
+        method: Method::F64,
+        d,
+        steps_completed: max_steps,
+        failed: false,
+        final_max_logmag: max_abs.ln(),
+    }
+}
+
+fn run_chain_goom<T: crate::goom::GoomFloat>(
+    d: usize,
+    max_steps: usize,
+    seed: u64,
+) -> ChainResult {
+    let method =
+        if std::mem::size_of::<T>() == 4 { Method::GoomC64 } else { Method::GoomC128 };
+    let mut rng = rng_from_seed(seed);
+    let mut s = GoomMat::<T>::randn(d, d, &mut rng);
+    for t in 0..max_steps {
+        let a = GoomMat::<T>::randn(d, d, &mut rng);
+        s = lmme(&a, &s);
+        if s.has_nan() || !s.max_logmag().is_finite() {
+            return ChainResult {
+                method,
+                d,
+                steps_completed: t,
+                failed: true,
+                final_max_logmag: s.max_logmag().to_f64(),
+            };
+        }
+    }
+    ChainResult {
+        method,
+        d,
+        steps_completed: max_steps,
+        failed: false,
+        final_max_logmag: s.max_logmag().to_f64(),
+    }
+}
+
+/// GOOM chain through the AOT `chain_block_d{d}` artifact: the driver
+/// streams blocks of K pre-sampled transition GOOMs; the compiled graph
+/// scans each block and returns the carried state + growth trace.
+fn run_chain_hlo(
+    d: usize,
+    max_steps: usize,
+    seed: u64,
+    engine: Option<&Engine>,
+) -> Result<ChainResult> {
+    let engine =
+        engine.ok_or_else(|| anyhow::anyhow!("GoomHlo chain requires an Engine"))?;
+    let artifact_name = format!("chain_block_d{d}");
+    let block_k = engine
+        .artifact(&artifact_name)?
+        .meta_usize("block_steps")
+        .unwrap_or(64);
+    let mut rng = rng_from_seed(seed);
+    let mut state = GoomMat::<f32>::randn(d, d, &mut rng);
+    let mut done = 0usize;
+    let mut last_max = f64::NEG_INFINITY;
+    while done < max_steps {
+        let k = block_k.min(max_steps - done);
+        // The artifact's block length is fixed; pad short tails with
+        // identity transitions (LMME-neutral).
+        let mut block: Vec<GoomMat<f32>> = Vec::with_capacity(block_k);
+        for _ in 0..k {
+            block.push(GoomMat::<f32>::randn(d, d, &mut rng));
+        }
+        for _ in k..block_k {
+            block.push(GoomMat::<f32>::eye(d));
+        }
+        let (jl, js) = goommat_stack_to_literals(&block)?;
+        let (sl, ss) = goommat_to_literals(&state)?;
+        let out = engine.run(&artifact_name, &[jl, js, sl, ss])?;
+        state = crate::runtime::literals_to_goommat(&out[0], &out[1], d, d)?;
+        let trace = crate::runtime::literal_f32_vec(&out[2])?;
+        if state.has_nan() {
+            return Ok(ChainResult {
+                method: Method::GoomHlo,
+                d,
+                steps_completed: done,
+                failed: true,
+                final_max_logmag: last_max,
+            });
+        }
+        last_max = trace[k - 1] as f64;
+        done += k;
+    }
+    Ok(ChainResult {
+        method: Method::GoomHlo,
+        d,
+        steps_completed: max_steps,
+        failed: false,
+        final_max_logmag: last_max,
+    })
+}
+
+/// Mean steps-to-failure (or completion) over `runs` seeds — one Fig. 1
+/// point. Returns (mean, standard error).
+pub fn survival_stats(
+    method: Method,
+    d: usize,
+    max_steps: usize,
+    runs: usize,
+    master_seed: u64,
+    engine: Option<&Engine>,
+) -> Result<(f64, f64)> {
+    let mut lengths = Vec::with_capacity(runs);
+    for r in 0..runs {
+        let res =
+            run_chain(method, d, max_steps, child_seed(master_seed, r as u64), engine)?;
+        lengths.push(res.steps_completed as f64);
+    }
+    let n = lengths.len() as f64;
+    let mean = lengths.iter().sum::<f64>() / n;
+    let var = lengths.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Ok((mean, (var / n).sqrt()))
+}
+
+/// Empirical per-step log-magnitude growth rate of the chain at dimension
+/// `d` (used to predict float failure steps: budget / rate).
+pub fn empirical_log_growth_rate(d: usize, probe_steps: usize, seed: u64) -> f64 {
+    let mut rng = rng_from_seed(seed);
+    let mut s = GoomMat::<f64>::randn(d, d, &mut rng);
+    let start = s.max_logmag();
+    for _ in 0..probe_steps {
+        let a = GoomMat::<f64>::randn(d, d, &mut rng);
+        s = lmme(&a, &s);
+    }
+    (s.max_logmag() - start) / probe_steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_chain_fails_near_budget() {
+        let growth = empirical_log_growth_rate(8, 200, 1);
+        let predicted = (88.7 / growth).round() as usize;
+        let res = run_chain(Method::F32, 8, 100_000, 42, None).unwrap();
+        assert!(res.failed, "f32 chain must fail");
+        let lo = predicted / 2;
+        let hi = predicted * 2;
+        assert!(
+            (lo..hi).contains(&res.steps_completed),
+            "failed at {} expected ~{predicted}",
+            res.steps_completed
+        );
+    }
+
+    #[test]
+    fn f64_chain_fails_about_8x_later_than_f32() {
+        let f32_res = run_chain(Method::F32, 16, 100_000, 7, None).unwrap();
+        let f64_res = run_chain(Method::F64, 16, 100_000, 7, None).unwrap();
+        assert!(f32_res.failed && f64_res.failed);
+        let ratio = f64_res.steps_completed as f64 / f32_res.steps_completed as f64;
+        // 709.8/88.7 = 8.0; allow wide sampling noise.
+        assert!((4.0..16.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn goom_chain_completes_where_floats_die() {
+        let steps = 5000; // far past the f32 failure point for d=8
+        let res = run_chain(Method::GoomC64, 8, steps, 11, None).unwrap();
+        assert!(!res.failed, "GOOM chain must complete");
+        assert_eq!(res.steps_completed, steps);
+        assert!(res.final_max_logmag > 1000.0, "{}", res.final_max_logmag);
+    }
+
+    #[test]
+    fn goom_c128_handles_larger_d() {
+        let res = run_chain(Method::GoomC128, 32, 2000, 13, None).unwrap();
+        assert!(!res.failed);
+        assert!(res.final_max_logmag > 1000.0);
+    }
+
+    #[test]
+    fn survival_stats_are_deterministic_per_seed() {
+        let (m1, _) = survival_stats(Method::F32, 8, 10_000, 5, 99, None).unwrap();
+        let (m2, _) = survival_stats(Method::F32, 8, 10_000, 5, 99, None).unwrap();
+        assert_eq!(m1, m2);
+        assert!(m1 > 10.0 && m1 < 10_000.0);
+    }
+
+    #[test]
+    fn growth_rate_increases_with_d() {
+        let g8 = empirical_log_growth_rate(8, 150, 3);
+        let g64 = empirical_log_growth_rate(64, 150, 3);
+        assert!(g64 > g8, "growth {g8} vs {g64}");
+        assert!((g64 - g8) > 0.5 * (64f64 / 8.0).ln() * 0.5);
+    }
+}

@@ -1,0 +1,178 @@
+//! Layered configuration: compiled defaults < config file < CLI overrides.
+//!
+//! File format: `key = value` lines, `#` comments. All values are strings
+//! until a typed getter parses them, so experiments share one mechanism.
+
+use crate::util::cli::Args;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+    /// Which layer set each key (for `repro config` introspection).
+    provenance: BTreeMap<String, &'static str>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed with compiled defaults.
+    pub fn with_defaults(defaults: &[(&str, &str)]) -> Self {
+        let mut c = Self::new();
+        for (k, v) in defaults {
+            c.set(k, v, "default");
+        }
+        c
+    }
+
+    pub fn set(&mut self, key: &str, value: &str, layer: &'static str) {
+        self.values.insert(key.to_string(), value.to_string());
+        self.provenance.insert(key.to_string(), layer);
+    }
+
+    /// Load `key = value` lines from a file (missing file is not an error
+    /// unless `required`).
+    pub fn load_file(&mut self, path: impl AsRef<Path>, required: bool) -> Result<()> {
+        let path = path.as_ref();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if !required => {
+                let _ = e;
+                return Ok(());
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading config {path:?}")),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim(), "file");
+        }
+        Ok(())
+    }
+
+    /// Apply `--key=value` CLI options (flags become "true").
+    pub fn apply_cli(&mut self, args: &Args) {
+        for (k, v) in &args.options {
+            self.set(k, v, "cli");
+        }
+        for f in &args.flags {
+            self.set(f, "true", "cli");
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.parse_or(key, default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("config {key}={s}: {e}")),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow!("config {key}: bad element '{p}': {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Dump as sorted `key = value (layer)` lines.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            let layer = self.provenance.get(k).copied().unwrap_or("?");
+            out.push_str(&format!("{k} = {v}  ({layer})\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn layering_order() {
+        let mut c = Config::with_defaults(&[("steps", "100"), ("seed", "1")]);
+        let dir = std::env::temp_dir().join("goomrs_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("c.conf");
+        std::fs::write(&f, "# comment\nsteps = 200\nruns = 5\n").unwrap();
+        c.load_file(&f, true).unwrap();
+        let args = Args::parse_from(["p", "x", "--steps=300", "--fast"]).unwrap();
+        c.apply_cli(&args);
+        assert_eq!(c.usize("steps", 0).unwrap(), 300); // cli wins
+        assert_eq!(c.usize("runs", 0).unwrap(), 5); // file wins over default
+        assert_eq!(c.u64("seed", 0).unwrap(), 1); // default survives
+        assert!(c.bool("fast", false).unwrap());
+        assert!(c.dump().contains("steps = 300  (cli)"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_ok_unless_required() {
+        let mut c = Config::new();
+        assert!(c.load_file("/no/such/file.conf", false).is_ok());
+        assert!(c.load_file("/no/such/file.conf", true).is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let mut c = Config::new();
+        c.set("steps", "abc", "cli");
+        assert!(c.usize("steps", 0).is_err());
+        assert_eq!(c.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let mut c = Config::new();
+        c.set("dims", "8, 16,32", "cli");
+        assert_eq!(c.usize_list("dims", &[]).unwrap(), vec![8, 16, 32]);
+        assert_eq!(c.usize_list("other", &[1]).unwrap(), vec![1]);
+    }
+}

@@ -1,0 +1,126 @@
+//! Lightweight metrics registry: named counters and timers with a text
+//! summary. Experiments report through this so the launcher can persist a
+//! uniform run summary.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn record_secs(&mut self, name: &str, secs: f64) {
+        self.timers.entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// Time a closure under the named timer.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_secs(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn timer_total(&self, name: &str) -> f64 {
+        self.timers.get(name).map(|v| v.iter().sum()).unwrap_or(0.0)
+    }
+
+    pub fn timer_mean(&self, name: &str) -> Option<f64> {
+        let v = self.timers.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        Some(v.iter().sum::<f64>() / v.len() as f64)
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in &self.counters {
+                out.push_str(&format!("  {k}: {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in &self.gauges {
+                out.push_str(&format!("  {k}: {v:.6}\n"));
+            }
+        }
+        if !self.timers.is_empty() {
+            out.push_str("timers:\n");
+            for (k, v) in &self.timers {
+                let total: f64 = v.iter().sum();
+                out.push_str(&format!(
+                    "  {k}: n={} total={} mean={}\n",
+                    v.len(),
+                    crate::util::timing::fmt_duration(total),
+                    crate::util::timing::fmt_duration(total / v.len() as f64),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.incr("steps", 3);
+        m.incr("steps", 2);
+        m.gauge("loss", 0.5);
+        assert_eq!(m.counter("steps"), 5);
+        assert_eq!(m.gauge_value("loss"), Some(0.5));
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let mut m = Metrics::new();
+        let x = m.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        m.record_secs("work", 0.5);
+        assert_eq!(m.timers.get("work").unwrap().len(), 2);
+        assert!(m.timer_total("work") >= 0.5);
+        assert!(m.timer_mean("work").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn summary_contains_all_sections() {
+        let mut m = Metrics::new();
+        m.incr("a", 1);
+        m.gauge("b", 2.0);
+        m.record_secs("c", 0.1);
+        let s = m.summary();
+        assert!(s.contains("counters:") && s.contains("gauges:") && s.contains("timers:"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: layered config, experiment registry, metrics, and
+//! run-directory management. The `repro` binary is a thin shell over this.
+
+pub mod config;
+pub mod metrics;
+pub mod registry;
+pub mod runs;
+
+pub use config::Config;
+pub use metrics::Metrics;
+pub use registry::{find, registry, Experiment};
+pub use runs::RunContext;

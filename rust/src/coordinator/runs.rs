@@ -1,0 +1,70 @@
+//! Run-directory management: every experiment invocation gets a fresh
+//! directory under `runs/` holding its config, metrics summary, and CSVs.
+
+use super::metrics::Metrics;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+pub struct RunContext {
+    pub run_dir: PathBuf,
+    pub metrics: Metrics,
+}
+
+impl RunContext {
+    /// Create `runs/<experiment>-<epoch-seconds>[-N]/`.
+    pub fn create(base: impl AsRef<Path>, experiment: &str) -> Result<Self> {
+        let epoch = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let base = base.as_ref();
+        let mut dir = base.join(format!("{experiment}-{epoch}"));
+        let mut n = 1;
+        while dir.exists() {
+            dir = base.join(format!("{experiment}-{epoch}-{n}"));
+            n += 1;
+        }
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        Ok(Self { run_dir: dir, metrics: Metrics::new() })
+    }
+
+    /// In-memory context for tests (temp dir).
+    pub fn ephemeral(experiment: &str) -> Result<Self> {
+        Self::create(std::env::temp_dir().join("goomrs_runs"), experiment)
+    }
+
+    pub fn write_text(&self, name: &str, content: &str) -> Result<()> {
+        std::fs::write(self.run_dir.join(name), content)
+            .with_context(|| format!("writing {name}"))
+    }
+
+    pub fn csv(&self, name: &str, headers: &[&str]) -> Result<crate::util::csv::CsvWriter> {
+        Ok(crate::util::csv::CsvWriter::create(self.run_dir.join(name), headers)?)
+    }
+
+    /// Persist the metrics summary (called by the launcher after run()).
+    pub fn finalize(&self) -> Result<()> {
+        self.write_text("metrics.txt", &self.metrics.summary())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_unique_dirs_and_writes() {
+        let a = RunContext::ephemeral("test-exp").unwrap();
+        let b = RunContext::ephemeral("test-exp").unwrap();
+        assert_ne!(a.run_dir, b.run_dir);
+        a.write_text("hello.txt", "hi").unwrap();
+        assert!(a.run_dir.join("hello.txt").exists());
+        let mut w = a.csv("data.csv", &["x"]).unwrap();
+        w.row(&["1".into()]).unwrap();
+        w.flush().unwrap();
+        assert!(a.run_dir.join("data.csv").exists());
+        std::fs::remove_dir_all(&a.run_dir).ok();
+        std::fs::remove_dir_all(&b.run_dir).ok();
+    }
+}

@@ -1,0 +1,747 @@
+//! Continuous-time chaotic (and limit-cycle) flows with analytic Jacobians.
+//!
+//! Parameter values are the standard chaotic-regime choices from the
+//! literature; `reference_lle` cites widely reproduced largest-Lyapunov-
+//! exponent values where they are well established (used as accuracy
+//! anchors by the Lyapunov benches, with generous tolerances since LLE
+//! estimates depend on trajectory, discretization, and horizon).
+
+use super::rk4::{rk4_step, rk4_step_jacobian, VectorField};
+use super::DynamicalSystem;
+use crate::linalg::Mat;
+
+/// Implements `DynamicalSystem` for a flow struct that implements
+/// `VectorField` and provides `DT`, `IC`, `NAME`, and optionally `LLE`.
+macro_rules! impl_flow_system {
+    ($ty:ident, $name:literal, $dt:expr, $ic:expr, $lle:expr) => {
+        impl DynamicalSystem for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn dim(&self) -> usize {
+                VectorField::dim(self)
+            }
+            fn is_map(&self) -> bool {
+                false
+            }
+            fn dt(&self) -> f64 {
+                $dt
+            }
+            fn step(&self, x: &[f64]) -> Vec<f64> {
+                rk4_step(self, x, $dt)
+            }
+            fn step_jacobian(&self, x: &[f64]) -> Mat {
+                rk4_step_jacobian(self, x, $dt)
+            }
+            fn default_ic(&self) -> Vec<f64> {
+                $ic
+            }
+            fn reference_lle(&self) -> Option<f64> {
+                $lle
+            }
+        }
+    };
+}
+
+// ---------------------------------------------------------------- Lorenz --
+
+/// Lorenz (1963): the canonical chaotic flow. λ₁ ≈ 0.9056 at the classic
+/// parameters (σ=10, ρ=28, β=8/3); spectrum ≈ (0.906, 0, −14.57).
+pub struct Lorenz {
+    pub sigma: f64,
+    pub rho: f64,
+    pub beta: f64,
+}
+
+impl Default for Lorenz {
+    fn default() -> Self {
+        Self { sigma: 10.0, rho: 28.0, beta: 8.0 / 3.0 }
+    }
+}
+
+impl VectorField for Lorenz {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            self.sigma * (x[1] - x[0]),
+            x[0] * (self.rho - x[2]) - x[1],
+            x[0] * x[1] - self.beta * x[2],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.sigma, self.sigma, 0.0],
+            &[self.rho - x[2], -1.0, -x[0]],
+            &[x[1], x[0], -self.beta],
+        ])
+    }
+}
+
+impl_flow_system!(Lorenz, "Lorenz", 0.01, vec![1.0, 1.0, 1.0], Some(0.9056));
+
+// --------------------------------------------------------------- Rossler --
+
+/// Rössler (1976), a=b=0.2, c=5.7. λ₁ ≈ 0.071.
+pub struct Rossler {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for Rossler {
+    fn default() -> Self {
+        Self { a: 0.2, b: 0.2, c: 5.7 }
+    }
+}
+
+impl VectorField for Rossler {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![-x[1] - x[2], x[0] + self.a * x[1], self.b + x[2] * (x[0] - self.c)]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[0.0, -1.0, -1.0],
+            &[1.0, self.a, 0.0],
+            &[x[2], 0.0, x[0] - self.c],
+        ])
+    }
+}
+
+impl_flow_system!(Rossler, "Rossler", 0.05, vec![1.0, 1.0, 1.0], Some(0.071));
+
+// ------------------------------------------------------------------ Chen --
+
+/// Chen (1999), a=35, b=3, c=28. λ₁ ≈ 2.02.
+pub struct Chen {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for Chen {
+    fn default() -> Self {
+        Self { a: 35.0, b: 3.0, c: 28.0 }
+    }
+}
+
+impl VectorField for Chen {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            self.a * (x[1] - x[0]),
+            (self.c - self.a) * x[0] - x[0] * x[2] + self.c * x[1],
+            x[0] * x[1] - self.b * x[2],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.a, self.a, 0.0],
+            &[self.c - self.a - x[2], self.c, -x[0]],
+            &[x[1], x[0], -self.b],
+        ])
+    }
+}
+
+impl_flow_system!(Chen, "Chen", 0.002, vec![-3.0, 2.0, 20.0], Some(2.02));
+
+// ------------------------------------------------------------------ Chua --
+
+/// Chua's circuit (dimensionless form) with the piecewise-linear diode.
+pub struct Chua {
+    pub alpha: f64,
+    pub beta: f64,
+    pub m0: f64,
+    pub m1: f64,
+}
+
+impl Default for Chua {
+    fn default() -> Self {
+        Self { alpha: 15.6, beta: 28.0, m0: -8.0 / 7.0, m1: -5.0 / 7.0 }
+    }
+}
+
+impl Chua {
+    fn h(&self, x: f64) -> f64 {
+        self.m1 * x + 0.5 * (self.m0 - self.m1) * ((x + 1.0).abs() - (x - 1.0).abs())
+    }
+    fn dh(&self, x: f64) -> f64 {
+        if x.abs() < 1.0 {
+            self.m0
+        } else {
+            self.m1
+        }
+    }
+}
+
+impl VectorField for Chua {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            self.alpha * (x[1] - x[0] - self.h(x[0])),
+            x[0] - x[1] + x[2],
+            -self.beta * x[1],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.alpha * (1.0 + self.dh(x[0])), self.alpha, 0.0],
+            &[1.0, -1.0, 1.0],
+            &[0.0, -self.beta, 0.0],
+        ])
+    }
+}
+
+impl_flow_system!(Chua, "Chua", 0.01, vec![0.7, 0.0, 0.0], None);
+
+// ---------------------------------------------------------------- Thomas --
+
+/// Thomas' cyclically symmetric attractor, b = 0.208186.
+pub struct Thomas {
+    pub b: f64,
+}
+
+impl Default for Thomas {
+    fn default() -> Self {
+        Self { b: 0.208186 }
+    }
+}
+
+impl VectorField for Thomas {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            x[1].sin() - self.b * x[0],
+            x[2].sin() - self.b * x[1],
+            x[0].sin() - self.b * x[2],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.b, x[1].cos(), 0.0],
+            &[0.0, -self.b, x[2].cos()],
+            &[x[0].cos(), 0.0, -self.b],
+        ])
+    }
+}
+
+impl_flow_system!(Thomas, "Thomas", 0.05, vec![0.1, 1.1, -0.1], None);
+
+// ------------------------------------------------------------- Halvorsen --
+
+/// Halvorsen's cyclically symmetric attractor, a = 1.89.
+pub struct Halvorsen {
+    pub a: f64,
+}
+
+impl Default for Halvorsen {
+    fn default() -> Self {
+        Self { a: 1.89 }
+    }
+}
+
+impl VectorField for Halvorsen {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            -self.a * x[0] - 4.0 * x[1] - 4.0 * x[2] - x[1] * x[1],
+            -self.a * x[1] - 4.0 * x[2] - 4.0 * x[0] - x[2] * x[2],
+            -self.a * x[2] - 4.0 * x[0] - 4.0 * x[1] - x[0] * x[0],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.a, -4.0 - 2.0 * x[1], -4.0],
+            &[-4.0, -self.a, -4.0 - 2.0 * x[2]],
+            &[-4.0 - 2.0 * x[0], -4.0, -self.a],
+        ])
+    }
+}
+
+impl_flow_system!(Halvorsen, "Halvorsen", 0.01, vec![-1.48, -1.51, 2.04], None);
+
+// ---------------------------------------------------------------- Dadras --
+
+/// Dadras-Momeni attractor.
+pub struct Dadras {
+    pub p: f64,
+    pub q: f64,
+    pub r: f64,
+    pub s: f64,
+    pub e: f64,
+}
+
+impl Default for Dadras {
+    fn default() -> Self {
+        Self { p: 3.0, q: 2.7, r: 1.7, s: 2.0, e: 9.0 }
+    }
+}
+
+impl VectorField for Dadras {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            x[1] - self.p * x[0] + self.q * x[1] * x[2],
+            self.r * x[1] - x[0] * x[2] + x[2],
+            self.s * x[0] * x[1] - self.e * x[2],
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[-self.p, 1.0 + self.q * x[2], self.q * x[1]],
+            &[-x[2], self.r, 1.0 - x[0]],
+            &[self.s * x[1], self.s * x[0], -self.e],
+        ])
+    }
+}
+
+impl_flow_system!(Dadras, "Dadras", 0.01, vec![1.1, 2.1, -2.0], None);
+
+// ---------------------------------------------------------------- Aizawa --
+
+/// Aizawa (Langford) attractor.
+pub struct Aizawa {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+    pub e: f64,
+    pub f: f64,
+}
+
+impl Default for Aizawa {
+    fn default() -> Self {
+        Self { a: 0.95, b: 0.7, c: 0.6, d: 3.5, e: 0.25, f: 0.1 }
+    }
+}
+
+impl VectorField for Aizawa {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        let (px, py, pz) = (x[0], x[1], x[2]);
+        vec![
+            (pz - self.b) * px - self.d * py,
+            self.d * px + (pz - self.b) * py,
+            self.c + self.a * pz - pz.powi(3) / 3.0
+                - (px * px + py * py) * (1.0 + self.e * pz)
+                + self.f * pz * px.powi(3),
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        let (px, py, pz) = (x[0], x[1], x[2]);
+        Mat::from_rows(&[
+            &[pz - self.b, -self.d, px],
+            &[self.d, pz - self.b, py],
+            &[
+                -2.0 * px * (1.0 + self.e * pz) + 3.0 * self.f * pz * px * px,
+                -2.0 * py * (1.0 + self.e * pz),
+                self.a - pz * pz - self.e * (px * px + py * py) + self.f * px.powi(3),
+            ],
+        ])
+    }
+}
+
+impl_flow_system!(Aizawa, "Aizawa", 0.01, vec![0.1, 0.0, 0.0], None);
+
+// --------------------------------------------------------------- SprottB --
+
+/// Sprott case B: one of the algebraically simplest chaotic flows.
+pub struct SprottB;
+
+impl Default for SprottB {
+    fn default() -> Self {
+        SprottB
+    }
+}
+
+impl VectorField for SprottB {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![x[1] * x[2], x[0] - x[1], 1.0 - x[0] * x[1]]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[0.0, x[2], x[1]],
+            &[1.0, -1.0, 0.0],
+            &[-x[1], -x[0], 0.0],
+        ])
+    }
+}
+
+impl_flow_system!(SprottB, "SprottB", 0.05, vec![0.05, 0.05, 0.05], None);
+
+// ------------------------------------------------- Rabinovich-Fabrikant --
+
+/// Rabinovich–Fabrikant equations (α=1.1, γ=0.87).
+pub struct RabinovichFabrikant {
+    pub alpha: f64,
+    pub gamma: f64,
+}
+
+impl Default for RabinovichFabrikant {
+    fn default() -> Self {
+        Self { alpha: 1.1, gamma: 0.87 }
+    }
+}
+
+impl VectorField for RabinovichFabrikant {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        let (px, py, pz) = (x[0], x[1], x[2]);
+        vec![
+            py * (pz - 1.0 + px * px) + self.gamma * px,
+            px * (3.0 * pz + 1.0 - px * px) + self.gamma * py,
+            -2.0 * pz * (self.alpha + px * py),
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        let (px, py, pz) = (x[0], x[1], x[2]);
+        Mat::from_rows(&[
+            &[2.0 * px * py + self.gamma, pz - 1.0 + px * px, py],
+            &[3.0 * pz + 1.0 - 3.0 * px * px, self.gamma, 3.0 * px],
+            &[-2.0 * pz * py, -2.0 * pz * px, -2.0 * (self.alpha + px * py)],
+        ])
+    }
+}
+
+impl_flow_system!(
+    RabinovichFabrikant,
+    "RabinovichFabrikant",
+    0.01,
+    vec![-1.0, 0.0, 0.5],
+    None
+);
+
+// ------------------------------------------------------------ NoseHoover --
+
+/// Nosé–Hoover oscillator (Sprott A): conservative chaos.
+pub struct NoseHoover;
+
+impl Default for NoseHoover {
+    fn default() -> Self {
+        NoseHoover
+    }
+}
+
+impl VectorField for NoseHoover {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![x[1], -x[0] + x[1] * x[2], 1.0 - x[1] * x[1]]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[0.0, 1.0, 0.0],
+            &[-1.0, x[2], x[1]],
+            &[0.0, -2.0 * x[1], 0.0],
+        ])
+    }
+}
+
+impl_flow_system!(NoseHoover, "NoseHoover", 0.02, vec![0.0, 5.0, 0.0], None);
+
+// --------------------------------------------------------- HindmarshRose --
+
+/// Hindmarsh–Rose neuron in its chaotic bursting regime.
+pub struct HindmarshRose {
+    pub b: f64,
+    pub i_ext: f64,
+    pub r: f64,
+    pub s: f64,
+    pub x_rest: f64,
+}
+
+impl Default for HindmarshRose {
+    fn default() -> Self {
+        Self { b: 3.0, i_ext: 3.25, r: 0.006, s: 4.0, x_rest: -1.6 }
+    }
+}
+
+impl VectorField for HindmarshRose {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        let (px, py, pz) = (x[0], x[1], x[2]);
+        vec![
+            py + self.b * px * px - px.powi(3) - pz + self.i_ext,
+            1.0 - 5.0 * px * px - py,
+            self.r * (self.s * (px - self.x_rest) - pz),
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        let px = x[0];
+        Mat::from_rows(&[
+            &[2.0 * self.b * px - 3.0 * px * px, 1.0, -1.0],
+            &[-10.0 * px, -1.0, 0.0],
+            &[self.r * self.s, 0.0, -self.r],
+        ])
+    }
+}
+
+impl_flow_system!(HindmarshRose, "HindmarshRose", 0.05, vec![-1.0, 0.0, 2.5], None);
+
+// -------------------------------------------------------------- VanDerPol --
+
+/// Unforced Van der Pol oscillator, μ=5: a stable limit cycle, λ₁ = 0.
+/// Included as a non-chaotic control for the Lyapunov estimators.
+pub struct VanDerPol {
+    pub mu: f64,
+}
+
+impl Default for VanDerPol {
+    fn default() -> Self {
+        Self { mu: 5.0 }
+    }
+}
+
+impl VectorField for VanDerPol {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![x[1], self.mu * (1.0 - x[0] * x[0]) * x[1] - x[0]]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[0.0, 1.0],
+            &[-2.0 * self.mu * x[0] * x[1] - 1.0, self.mu * (1.0 - x[0] * x[0])],
+        ])
+    }
+}
+
+impl_flow_system!(VanDerPol, "VanDerPol", 0.01, vec![1.0, 0.0], Some(0.0));
+
+// ---------------------------------------------------------------- Duffing --
+
+/// Driven Duffing oscillator, made autonomous with a phase variable:
+/// ẋ=y, ẏ=−δy+x−x³+γ·cos(z), ż=ω. Chaotic at δ=0.3, γ=0.5, ω=1.2.
+pub struct Duffing {
+    pub delta: f64,
+    pub gamma: f64,
+    pub omega: f64,
+}
+
+impl Default for Duffing {
+    fn default() -> Self {
+        Self { delta: 0.3, gamma: 0.5, omega: 1.2 }
+    }
+}
+
+impl VectorField for Duffing {
+    fn dim(&self) -> usize {
+        3
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        vec![
+            x[1],
+            -self.delta * x[1] + x[0] - x[0].powi(3) + self.gamma * x[2].cos(),
+            self.omega,
+        ]
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[
+            &[0.0, 1.0, 0.0],
+            &[1.0 - 3.0 * x[0] * x[0], -self.delta, -self.gamma * x[2].sin()],
+            &[0.0, 0.0, 0.0],
+        ])
+    }
+}
+
+impl_flow_system!(Duffing, "Duffing", 0.02, vec![0.5, 0.0, 0.0], None);
+
+// --------------------------------------------------------------- Lorenz96 --
+
+/// Lorenz-96 with d=6 sites, forcing F=8 (chaotic).
+pub struct Lorenz96 {
+    pub d: usize,
+    pub f: f64,
+}
+
+impl Default for Lorenz96 {
+    fn default() -> Self {
+        Self { d: 6, f: 8.0 }
+    }
+}
+
+impl VectorField for Lorenz96 {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        (0..d)
+            .map(|i| {
+                let ip1 = (i + 1) % d;
+                let im1 = (i + d - 1) % d;
+                let im2 = (i + d - 2) % d;
+                (x[ip1] - x[im2]) * x[im1] - x[i] + self.f
+            })
+            .collect()
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        let d = self.d;
+        let mut j = Mat::zeros(d, d);
+        for i in 0..d {
+            let ip1 = (i + 1) % d;
+            let im1 = (i + d - 1) % d;
+            let im2 = (i + d - 2) % d;
+            // Accumulate (+=) so overlapping indices at small d stay correct.
+            j[(i, ip1)] += x[im1];
+            j[(i, im1)] += x[ip1] - x[im2];
+            j[(i, im2)] += -x[im1];
+            j[(i, i)] += -1.0;
+        }
+        j
+    }
+}
+
+impl_flow_system!(
+    Lorenz96,
+    "Lorenz96",
+    0.01,
+    vec![8.01, 8.0, 8.0, 8.0, 8.0, 8.0],
+    None
+);
+
+// ---------------------------------------------------------- LotkaVolterra4 --
+
+/// 4-species competitive Lotka–Volterra system (Vano et al. 2006): the
+/// lowest-dimensional chaotic LV system; stands in for the Gilpin dataset's
+/// ecology-domain systems (e.g. MacArthur) with smooth dynamics and a known
+/// chaotic regime. λ₁ ≈ 0.0203.
+pub struct LotkaVolterra4 {
+    pub r: [f64; 4],
+    pub a: [[f64; 4]; 4],
+}
+
+impl Default for LotkaVolterra4 {
+    fn default() -> Self {
+        Self {
+            r: [1.0, 0.72, 1.53, 1.27],
+            a: [
+                [1.0, 1.09, 1.52, 0.0],
+                [0.0, 1.0, 0.44, 1.36],
+                [2.33, 0.0, 1.0, 0.47],
+                [1.21, 0.51, 0.35, 1.0],
+            ],
+        }
+    }
+}
+
+impl VectorField for LotkaVolterra4 {
+    fn dim(&self) -> usize {
+        4
+    }
+    fn v(&self, x: &[f64]) -> Vec<f64> {
+        (0..4)
+            .map(|i| {
+                let interaction: f64 = (0..4).map(|j| self.a[i][j] * x[j]).sum();
+                self.r[i] * x[i] * (1.0 - interaction)
+            })
+            .collect()
+    }
+    fn dv(&self, x: &[f64]) -> Mat {
+        let mut j = Mat::zeros(4, 4);
+        for i in 0..4 {
+            let interaction: f64 = (0..4).map(|k| self.a[i][k] * x[k]).sum();
+            for jj in 0..4 {
+                j[(i, jj)] = -self.r[i] * x[i] * self.a[i][jj];
+                if i == jj {
+                    j[(i, jj)] += self.r[i] * (1.0 - interaction);
+                }
+            }
+        }
+        j
+    }
+}
+
+impl_flow_system!(
+    LotkaVolterra4,
+    "LotkaVolterra4",
+    0.1,
+    vec![0.301, 0.459, 0.131, 0.356],
+    Some(0.0203)
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynsys::DynamicalSystem;
+
+    #[test]
+    fn lorenz_vector_field_at_known_point() {
+        let sys = Lorenz::default();
+        let v = VectorField::v(&sys, &[1.0, 2.0, 3.0]);
+        // σ(y−x)=10, x(ρ−z)−y = 25−2 = 23, xy−βz = 2−8 = −6
+        assert!((v[0] - 10.0).abs() < 1e-14);
+        assert!((v[1] - 23.0).abs() < 1e-14);
+        assert!((v[2] + 6.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lorenz96_jacobian_row_structure() {
+        let sys = Lorenz96::default();
+        let x: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        let j = VectorField::dv(&sys, &x);
+        // Row 0: ip1=1, im1=5, im2=4. dv0/dx1 = x5 = 5.
+        assert!((j[(0, 1)] - 5.0).abs() < 1e-14);
+        // dv0/dx5 = x1 - x4 = 1 - 4 = -3.
+        assert!((j[(0, 5)] + 3.0).abs() < 1e-14);
+        // dv0/dx4 = -x5 = -5.
+        assert!((j[(0, 4)] + 5.0).abs() < 1e-14);
+        assert!((j[(0, 0)] + 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn vanderpol_settles_on_limit_cycle() {
+        let sys = VanDerPol::default();
+        let mut x = vec![0.1, 0.0];
+        for _ in 0..200_000 {
+            x = sys.step(&x);
+        }
+        // On the μ=5 limit cycle, |x| stays within ~[0, 2.1].
+        assert!(x[0].abs() < 2.5 && x[0].is_finite(), "{x:?}");
+    }
+
+    #[test]
+    fn lotka_volterra_stays_positive() {
+        let sys = LotkaVolterra4::default();
+        let mut x = sys.default_ic();
+        for _ in 0..20_000 {
+            x = sys.step(&x);
+            assert!(x.iter().all(|&v| v > 0.0 && v < 2.0), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn chua_double_scroll_bounded() {
+        let sys = Chua::default();
+        let mut x = sys.default_ic();
+        for _ in 0..50_000 {
+            x = sys.step(&x);
+        }
+        assert!(x.iter().all(|v| v.is_finite() && v.abs() < 20.0), "{x:?}");
+    }
+}

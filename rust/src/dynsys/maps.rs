@@ -1,0 +1,260 @@
+//! Discrete-time chaotic maps with analytic Jacobians.
+
+use super::DynamicalSystem;
+use crate::linalg::Mat;
+
+// ------------------------------------------------------------------ Hénon --
+
+/// Hénon map (a=1.4, b=0.3). λ₁ ≈ 0.419 per iteration;
+/// λ₁+λ₂ = ln|b| ≈ −1.204 (constant-Jacobian identity used in tests).
+pub struct Henon {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Default for Henon {
+    fn default() -> Self {
+        Self { a: 1.4, b: 0.3 }
+    }
+}
+
+impl DynamicalSystem for Henon {
+    fn name(&self) -> &'static str {
+        "Henon"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn is_map(&self) -> bool {
+        true
+    }
+    fn dt(&self) -> f64 {
+        1.0
+    }
+    fn step(&self, x: &[f64]) -> Vec<f64> {
+        vec![1.0 - self.a * x[0] * x[0] + x[1], self.b * x[0]]
+    }
+    fn step_jacobian(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[&[-2.0 * self.a * x[0], 1.0], &[self.b, 0.0]])
+    }
+    fn default_ic(&self) -> Vec<f64> {
+        vec![0.1, 0.1]
+    }
+    fn reference_lle(&self) -> Option<f64> {
+        Some(0.419)
+    }
+}
+
+// --------------------------------------------------------------- Logistic --
+
+/// Logistic map at r=4 (fully chaotic). λ = ln 2 exactly.
+pub struct Logistic {
+    pub r: f64,
+}
+
+impl Default for Logistic {
+    fn default() -> Self {
+        Self { r: 4.0 }
+    }
+}
+
+impl DynamicalSystem for Logistic {
+    fn name(&self) -> &'static str {
+        "Logistic"
+    }
+    fn dim(&self) -> usize {
+        1
+    }
+    fn is_map(&self) -> bool {
+        true
+    }
+    fn dt(&self) -> f64 {
+        1.0
+    }
+    fn step(&self, x: &[f64]) -> Vec<f64> {
+        vec![self.r * x[0] * (1.0 - x[0])]
+    }
+    fn step_jacobian(&self, x: &[f64]) -> Mat {
+        Mat::from_rows(&[&[self.r * (1.0 - 2.0 * x[0])]])
+    }
+    fn default_ic(&self) -> Vec<f64> {
+        vec![0.3141592]
+    }
+    fn reference_lle(&self) -> Option<f64> {
+        Some(std::f64::consts::LN_2)
+    }
+}
+
+// ------------------------------------------------------------------ Ikeda --
+
+/// Ikeda map (u=0.9). λ₁ ≈ 0.507 per iteration.
+pub struct Ikeda {
+    pub u: f64,
+}
+
+impl Default for Ikeda {
+    fn default() -> Self {
+        Self { u: 0.9 }
+    }
+}
+
+impl Ikeda {
+    fn t_and_grads(&self, x: f64, y: f64) -> (f64, f64, f64) {
+        let s = 1.0 + x * x + y * y;
+        let t = 0.4 - 6.0 / s;
+        let dt_dx = 12.0 * x / (s * s);
+        let dt_dy = 12.0 * y / (s * s);
+        (t, dt_dx, dt_dy)
+    }
+}
+
+impl DynamicalSystem for Ikeda {
+    fn name(&self) -> &'static str {
+        "Ikeda"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn is_map(&self) -> bool {
+        true
+    }
+    fn dt(&self) -> f64 {
+        1.0
+    }
+    fn step(&self, p: &[f64]) -> Vec<f64> {
+        let (x, y) = (p[0], p[1]);
+        let (t, _, _) = self.t_and_grads(x, y);
+        vec![
+            1.0 + self.u * (x * t.cos() - y * t.sin()),
+            self.u * (x * t.sin() + y * t.cos()),
+        ]
+    }
+    fn step_jacobian(&self, p: &[f64]) -> Mat {
+        let (x, y) = (p[0], p[1]);
+        let (t, tx, ty) = self.t_and_grads(x, y);
+        let (ct, st) = (t.cos(), t.sin());
+        // d/dt of (x cos t − y sin t) = −x sin t − y cos t
+        let da_dt = -x * st - y * ct;
+        // d/dt of (x sin t + y cos t) = x cos t − y sin t
+        let db_dt = x * ct - y * st;
+        Mat::from_rows(&[
+            &[self.u * (ct + da_dt * tx), self.u * (-st + da_dt * ty)],
+            &[self.u * (st + db_dt * tx), self.u * (ct + db_dt * ty)],
+        ])
+    }
+    fn default_ic(&self) -> Vec<f64> {
+        vec![0.1, 0.1]
+    }
+    fn reference_lle(&self) -> Option<f64> {
+        Some(0.507)
+    }
+}
+
+// ------------------------------------------------------------- Tinkerbell --
+
+/// Tinkerbell map (a=0.9, b=−0.6013, c=2.0, d=0.5).
+pub struct Tinkerbell {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl Default for Tinkerbell {
+    fn default() -> Self {
+        Self { a: 0.9, b: -0.6013, c: 2.0, d: 0.5 }
+    }
+}
+
+impl DynamicalSystem for Tinkerbell {
+    fn name(&self) -> &'static str {
+        "Tinkerbell"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn is_map(&self) -> bool {
+        true
+    }
+    fn dt(&self) -> f64 {
+        1.0
+    }
+    fn step(&self, p: &[f64]) -> Vec<f64> {
+        let (x, y) = (p[0], p[1]);
+        vec![
+            x * x - y * y + self.a * x + self.b * y,
+            2.0 * x * y + self.c * x + self.d * y,
+        ]
+    }
+    fn step_jacobian(&self, p: &[f64]) -> Mat {
+        let (x, y) = (p[0], p[1]);
+        Mat::from_rows(&[
+            &[2.0 * x + self.a, -2.0 * y + self.b],
+            &[2.0 * y + self.c, 2.0 * x + self.d],
+        ])
+    }
+    fn default_ic(&self) -> Vec<f64> {
+        vec![-0.72, -0.64]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn henon_jacobian_determinant_is_minus_b() {
+        let sys = Henon::default();
+        let j = sys.step_jacobian(&[0.37, -0.12]);
+        let det = j[(0, 0)] * j[(1, 1)] - j[(0, 1)] * j[(1, 0)];
+        assert!((det + sys.b).abs() < 1e-14, "det {det}");
+    }
+
+    #[test]
+    fn logistic_invariant_density_region() {
+        let sys = Logistic::default();
+        let mut x = sys.default_ic();
+        for _ in 0..10_000 {
+            x = sys.step(&x);
+            assert!((0.0..=1.0).contains(&x[0]), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn logistic_exact_lyapunov_via_derivative_logs() {
+        // λ = mean ln|f'(x)| along the orbit should converge to ln 2 at r=4.
+        let sys = Logistic::default();
+        let mut x = sys.default_ic();
+        for _ in 0..100 {
+            x = sys.step(&x);
+        }
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += sys.step_jacobian(&x)[(0, 0)].abs().ln();
+            x = sys.step(&x);
+        }
+        let lambda = acc / n as f64;
+        assert!((lambda - std::f64::consts::LN_2).abs() < 0.01, "λ={lambda}");
+    }
+
+    #[test]
+    fn ikeda_attractor_bounded() {
+        let sys = Ikeda::default();
+        let mut x = sys.default_ic();
+        for _ in 0..50_000 {
+            x = sys.step(&x);
+            assert!(x.iter().all(|v| v.abs() < 10.0), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn tinkerbell_attractor_bounded() {
+        let sys = Tinkerbell::default();
+        let mut x = sys.default_ic();
+        for _ in 0..50_000 {
+            x = sys.step(&x);
+            assert!(x.iter().all(|v| v.abs() < 5.0), "{x:?}");
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Dynamical-systems substrate — the Gilpin (2023) chaotic-systems dataset
+//! substitute (see DESIGN.md §4).
+//!
+//! Twenty named systems spanning the same regimes the paper's evaluation
+//! sweeps: 3-D chaotic flows (Lorenz, Rössler, Chen, Chua, Thomas,
+//! Halvorsen, Dadras, Aizawa, Sprott-B, Rabinovich-Fabrikant, Nosé-Hoover,
+//! Hindmarsh-Rose), limit-cycle flows (Van der Pol), driven oscillators
+//! (Duffing), higher-dimensional flows (Lorenz-96, 4-species
+//! Lotka-Volterra), and discrete chaotic maps (Hénon, logistic, Ikeda,
+//! Tinkerbell).
+//!
+//! Every system exposes the *step map* `x_{t+1} = f(x_t)` (flows are
+//! advanced with one RK4 step of size `dt`) and its **analytic Jacobian**
+//! (flows propagate the exact tangent of the RK4 map). Analytic Jacobians
+//! are validated against central finite differences in the test suite.
+
+mod flows;
+mod maps;
+mod rk4;
+
+pub use flows::*;
+pub use maps::*;
+pub use rk4::{rk4_step, rk4_step_jacobian, VectorField};
+
+use crate::linalg::Mat;
+
+/// A discrete-time view of a dynamical system: the unit of work the
+/// Lyapunov estimators consume.
+pub trait DynamicalSystem: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn dim(&self) -> usize;
+    /// True for discrete maps; false for RK4-stepped flows.
+    fn is_map(&self) -> bool;
+    /// Time advanced per step (1.0 for maps).
+    fn dt(&self) -> f64;
+    /// One step of the dynamics.
+    fn step(&self, x: &[f64]) -> Vec<f64>;
+    /// Jacobian of the step map at `x` (exact RK4 tangent for flows).
+    fn step_jacobian(&self, x: &[f64]) -> Mat;
+    /// An initial condition on/near the attractor.
+    fn default_ic(&self) -> Vec<f64>;
+    /// Published largest Lyapunov exponent, where well established
+    /// (units: per unit time for flows, per iteration for maps).
+    fn reference_lle(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Advance `steps` steps from `x0`, returning the trajectory (excluding x0).
+pub fn trajectory(sys: &dyn DynamicalSystem, x0: &[f64], steps: usize) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(steps);
+    let mut x = x0.to_vec();
+    for _ in 0..steps {
+        x = sys.step(&x);
+        out.push(x.clone());
+    }
+    out
+}
+
+/// Burn in `steps` steps to land on the attractor.
+pub fn burn_in(sys: &dyn DynamicalSystem, steps: usize) -> Vec<f64> {
+    let mut x = sys.default_ic();
+    for _ in 0..steps {
+        x = sys.step(&x);
+    }
+    x
+}
+
+/// Jacobians along a trajectory starting at `x0` (after burn-in):
+/// returns (J_1..J_T, trajectory points x_1..x_T).
+pub fn jacobian_chain(
+    sys: &dyn DynamicalSystem,
+    x0: &[f64],
+    steps: usize,
+) -> (Vec<Mat>, Vec<Vec<f64>>) {
+    let mut jacs = Vec::with_capacity(steps);
+    let mut traj = Vec::with_capacity(steps);
+    let mut x = x0.to_vec();
+    for _ in 0..steps {
+        jacs.push(sys.step_jacobian(&x));
+        x = sys.step(&x);
+        traj.push(x.clone());
+    }
+    (jacs, traj)
+}
+
+/// The full system registry (the "dataset").
+pub fn all_systems() -> Vec<Box<dyn DynamicalSystem>> {
+    vec![
+        Box::new(Lorenz::default()),
+        Box::new(Rossler::default()),
+        Box::new(Chen::default()),
+        Box::new(Chua::default()),
+        Box::new(Thomas::default()),
+        Box::new(Halvorsen::default()),
+        Box::new(Dadras::default()),
+        Box::new(Aizawa::default()),
+        Box::new(SprottB::default()),
+        Box::new(RabinovichFabrikant::default()),
+        Box::new(NoseHoover::default()),
+        Box::new(HindmarshRose::default()),
+        Box::new(VanDerPol::default()),
+        Box::new(Duffing::default()),
+        Box::new(Lorenz96::default()),
+        Box::new(LotkaVolterra4::default()),
+        Box::new(Henon::default()),
+        Box::new(Logistic::default()),
+        Box::new(Ikeda::default()),
+        Box::new(Tinkerbell::default()),
+    ]
+}
+
+/// Look a system up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Box<dyn DynamicalSystem>> {
+    all_systems().into_iter().find(|s| s.name().eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::finite_difference_jacobian;
+
+    #[test]
+    fn registry_has_twenty_distinct_systems() {
+        let systems = all_systems();
+        assert_eq!(systems.len(), 20);
+        let mut names: Vec<&str> = systems.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 20, "duplicate names");
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive() {
+        assert!(by_name("lorenz").is_some());
+        assert!(by_name("LORENZ").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_analytic_jacobian_matches_finite_differences() {
+        // The core substrate validation: exercise each system at several
+        // points along its own trajectory.
+        for sys in all_systems() {
+            let mut x = burn_in(sys.as_ref(), 200);
+            for k in 0..5 {
+                let f = |p: &[f64]| sys.step(p);
+                let analytic = sys.step_jacobian(&x);
+                let fd = finite_difference_jacobian(&f, &x, 1e-7);
+                let scale = analytic.max_abs().max(1.0);
+                for i in 0..analytic.rows {
+                    for j in 0..analytic.cols {
+                        let (a, b) = (analytic[(i, j)], fd[(i, j)]);
+                        assert!(
+                            (a - b).abs() < 2e-4 * scale,
+                            "{} J[{i}][{j}] analytic {a} vs fd {b} (point {k})",
+                            sys.name()
+                        );
+                    }
+                }
+                // Move along the trajectory a bit between checks.
+                for _ in 0..17 {
+                    x = sys.step(&x);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trajectories_stay_bounded_on_attractor() {
+        for sys in all_systems() {
+            let x = burn_in(sys.as_ref(), 500);
+            let traj = trajectory(sys.as_ref(), &x, 2000);
+            for (t, p) in traj.iter().enumerate() {
+                assert!(
+                    p.iter().all(|v| v.is_finite()),
+                    "{} diverged at step {t}: {p:?}",
+                    sys.name()
+                );
+                let norm: f64 = p.iter().map(|v| v * v).sum::<f64>();
+                assert!(norm < 1e12, "{} left the attractor: {p:?}", sys.name());
+            }
+        }
+    }
+
+    #[test]
+    fn jacobian_chain_lengths_and_shapes() {
+        let sys = Lorenz::default();
+        let x0 = burn_in(&sys, 100);
+        let (jacs, traj) = jacobian_chain(&sys, &x0, 50);
+        assert_eq!(jacs.len(), 50);
+        assert_eq!(traj.len(), 50);
+        for j in &jacs {
+            assert_eq!((j.rows, j.cols), (3, 3));
+        }
+    }
+
+    #[test]
+    fn maps_and_flows_report_dt() {
+        for sys in all_systems() {
+            if sys.is_map() {
+                assert_eq!(sys.dt(), 1.0, "{}", sys.name());
+            } else {
+                assert!(sys.dt() > 0.0 && sys.dt() < 1.0, "{}", sys.name());
+            }
+        }
+    }
+}

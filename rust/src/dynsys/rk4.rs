@@ -1,0 +1,159 @@
+//! RK4 integration and its exact tangent map.
+//!
+//! For a flow ẋ = v(x), one RK4 step is a smooth map Φ_dt(x); its Jacobian
+//! is obtained by differentiating the stage recursion (the "discrete
+//! tangent"), which is exactly what the Lyapunov estimators need: the chain
+//! of step Jacobians IS the variational equation of the discretized system.
+
+use crate::linalg::Mat;
+
+/// A smooth vector field with an analytic Jacobian.
+pub trait VectorField: Send + Sync {
+    fn dim(&self) -> usize;
+    /// v(x)
+    fn v(&self, x: &[f64]) -> Vec<f64>;
+    /// Dv(x): Jacobian of the vector field.
+    fn dv(&self, x: &[f64]) -> Mat;
+}
+
+/// One classical RK4 step of size `dt`.
+pub fn rk4_step(field: &dyn VectorField, x: &[f64], dt: f64) -> Vec<f64> {
+    let d = x.len();
+    let k1 = field.v(x);
+    let x2: Vec<f64> = (0..d).map(|i| x[i] + 0.5 * dt * k1[i]).collect();
+    let k2 = field.v(&x2);
+    let x3: Vec<f64> = (0..d).map(|i| x[i] + 0.5 * dt * k2[i]).collect();
+    let k3 = field.v(&x3);
+    let x4: Vec<f64> = (0..d).map(|i| x[i] + dt * k3[i]).collect();
+    let k4 = field.v(&x4);
+    (0..d)
+        .map(|i| x[i] + dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]))
+        .collect()
+}
+
+/// Exact Jacobian of the RK4 step map:
+///
+/// ```text
+/// J_k1 = Dv(x)
+/// J_k2 = Dv(x + dt/2·k1) · (I + dt/2·J_k1)
+/// J_k3 = Dv(x + dt/2·k2) · (I + dt/2·J_k2)
+/// J_k4 = Dv(x + dt·k3)   · (I + dt·J_k3)
+/// J    = I + dt/6 · (J_k1 + 2·J_k2 + 2·J_k3 + J_k4)
+/// ```
+pub fn rk4_step_jacobian(field: &dyn VectorField, x: &[f64], dt: f64) -> Mat {
+    let d = x.len();
+    let eye = Mat::eye(d);
+
+    let k1 = field.v(x);
+    let jk1 = field.dv(x);
+
+    let x2: Vec<f64> = (0..d).map(|i| x[i] + 0.5 * dt * k1[i]).collect();
+    let k2 = field.v(&x2);
+    let jk2 = field.dv(&x2).matmul(&(&eye + &jk1.scale(0.5 * dt)));
+
+    let x3: Vec<f64> = (0..d).map(|i| x[i] + 0.5 * dt * k2[i]).collect();
+    let k3 = field.v(&x3);
+    let jk3 = field.dv(&x3).matmul(&(&eye + &jk2.scale(0.5 * dt)));
+
+    let x4: Vec<f64> = (0..d).map(|i| x[i] + dt * k3[i]).collect();
+    let jk4 = field.dv(&x4).matmul(&(&eye + &jk3.scale(dt)));
+
+    let sum = &(&jk1 + &jk2.scale(2.0)) + &(&jk3.scale(2.0) + &jk4);
+    &eye + &sum.scale(dt / 6.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::finite_difference_jacobian;
+
+    /// Linear field ẋ = A x: RK4 step Jacobian must equal the degree-4
+    /// Taylor polynomial of exp(dt·A).
+    struct LinearField {
+        a: Mat,
+    }
+
+    impl VectorField for LinearField {
+        fn dim(&self) -> usize {
+            self.a.rows
+        }
+        fn v(&self, x: &[f64]) -> Vec<f64> {
+            self.a.matvec(x)
+        }
+        fn dv(&self, _x: &[f64]) -> Mat {
+            self.a.clone()
+        }
+    }
+
+    #[test]
+    fn linear_field_matches_truncated_exponential() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[-1.0, -0.1]]);
+        let field = LinearField { a: a.clone() };
+        let dt = 0.05;
+        let j = rk4_step_jacobian(&field, &[0.3, -0.2], dt);
+        // I + dtA + (dtA)²/2 + (dtA)³/6 + (dtA)⁴/24
+        let da = a.scale(dt);
+        let mut expected = Mat::eye(2);
+        let mut term = Mat::eye(2);
+        for k in 1..=4 {
+            term = term.matmul(&da).scale(1.0 / k as f64);
+            expected = &expected + &term;
+        }
+        for (x, y) in j.data.iter().zip(&expected.data) {
+            assert!((x - y).abs() < 1e-14, "{x} vs {y}");
+        }
+    }
+
+    /// Nonlinear field: tangent must match finite differences of the step.
+    struct Cubic;
+
+    impl VectorField for Cubic {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn v(&self, x: &[f64]) -> Vec<f64> {
+            vec![x[1], -x[0] - x[0].powi(3)]
+        }
+        fn dv(&self, x: &[f64]) -> Mat {
+            Mat::from_rows(&[&[0.0, 1.0], &[-1.0 - 3.0 * x[0] * x[0], 0.0]])
+        }
+    }
+
+    #[test]
+    fn nonlinear_tangent_matches_fd() {
+        let field = Cubic;
+        let x = [0.7, -0.4];
+        let dt = 0.02;
+        let j = rk4_step_jacobian(&field, &x, dt);
+        let f = |p: &[f64]| rk4_step(&field, p, dt);
+        let fd = finite_difference_jacobian(&f, &x, 1e-7);
+        for (a, b) in j.data.iter().zip(&fd.data) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rk4_accuracy_on_harmonic_oscillator() {
+        // ẋ = y, ẏ = -x: solution rotates; after 2π time, back to start.
+        struct Osc;
+        impl VectorField for Osc {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn v(&self, x: &[f64]) -> Vec<f64> {
+                vec![x[1], -x[0]]
+            }
+            fn dv(&self, _: &[f64]) -> Mat {
+                Mat::from_rows(&[&[0.0, 1.0], &[-1.0, 0.0]])
+            }
+        }
+        let steps = 628usize;
+        let dt = 2.0 * std::f64::consts::PI / steps as f64; // steps·dt = 2π exactly
+        let mut x = vec![1.0, 0.0];
+        for _ in 0..steps {
+            x = rk4_step(&Osc, &x, dt);
+        }
+        assert!((x[0] - 1.0).abs() < 1e-6, "{x:?}");
+        assert!(x[1].abs() < 1e-6, "{x:?}");
+    }
+}

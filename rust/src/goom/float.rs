@@ -1,0 +1,192 @@
+//! Minimal float abstraction so the GOOM types are generic over f32/f64
+//! (the paper's Complex64 and Complex128 GOOMs respectively) without pulling
+//! in `num-traits`.
+
+use std::fmt::{Debug, Display};
+
+/// Operations the GOOM implementation needs from its component float type.
+pub trait GoomFloat:
+    Copy
+    + Clone
+    + PartialOrd
+    + PartialEq
+    + Debug
+    + Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const NEG_INFINITY: Self;
+    const INFINITY: Self;
+    /// Machine epsilon of the component format.
+    const EPSILON: Self;
+    /// ln of the smallest positive normal number (the paper's finite-floor
+    /// anchor, §3.1 footnote 5: floor = log(SNN²) = 2·ln(SNN)).
+    const LN_MIN_POSITIVE: Self;
+    /// ln of the largest finite number.
+    const LN_MAX: Self;
+
+    fn ln(self) -> Self;
+    fn exp(self) -> Self;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn is_finite(self) -> bool;
+    fn is_nan(self) -> bool;
+    fn is_infinite(self) -> bool;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    /// IEEE-754 ulp distance helper used in precision probes.
+    fn next_up(self) -> Self;
+}
+
+impl GoomFloat for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const NEG_INFINITY: f32 = f32::NEG_INFINITY;
+    const INFINITY: f32 = f32::INFINITY;
+    const EPSILON: f32 = f32::EPSILON;
+    // ln(1.1754944e-38)
+    const LN_MIN_POSITIVE: f32 = -87.336_54;
+    // ln(3.4028235e38)
+    const LN_MAX: f32 = 88.722_84;
+
+    fn ln(self) -> f32 {
+        self.ln()
+    }
+    fn exp(self) -> f32 {
+        self.exp()
+    }
+    fn abs(self) -> f32 {
+        self.abs()
+    }
+    fn sqrt(self) -> f32 {
+        self.sqrt()
+    }
+    fn is_finite(self) -> bool {
+        self.is_finite()
+    }
+    fn is_nan(self) -> bool {
+        self.is_nan()
+    }
+    fn is_infinite(self) -> bool {
+        self.is_infinite()
+    }
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn max(self, other: f32) -> f32 {
+        f32::max(self, other)
+    }
+    fn min(self, other: f32) -> f32 {
+        f32::min(self, other)
+    }
+    fn next_up(self) -> f32 {
+        // Stable-Rust implementation of f32::next_up.
+        if self.is_nan() || self == f32::INFINITY {
+            return self;
+        }
+        let bits = self.to_bits();
+        let next = if self == 0.0 {
+            1 // smallest positive subnormal
+        } else if bits >> 31 == 0 {
+            bits + 1
+        } else {
+            bits - 1
+        };
+        f32::from_bits(next)
+    }
+}
+
+impl GoomFloat for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const NEG_INFINITY: f64 = f64::NEG_INFINITY;
+    const INFINITY: f64 = f64::INFINITY;
+    const EPSILON: f64 = f64::EPSILON;
+    // ln(2.2250738585072014e-308)
+    const LN_MIN_POSITIVE: f64 = -708.396_418_532_264_1;
+    // ln(1.7976931348623157e308)
+    const LN_MAX: f64 = 709.782_712_893_384;
+
+    fn ln(self) -> f64 {
+        self.ln()
+    }
+    fn exp(self) -> f64 {
+        self.exp()
+    }
+    fn abs(self) -> f64 {
+        self.abs()
+    }
+    fn sqrt(self) -> f64 {
+        self.sqrt()
+    }
+    fn is_finite(self) -> bool {
+        self.is_finite()
+    }
+    fn is_nan(self) -> bool {
+        self.is_nan()
+    }
+    fn is_infinite(self) -> bool {
+        self.is_infinite()
+    }
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn max(self, other: f64) -> f64 {
+        f64::max(self, other)
+    }
+    fn min(self, other: f64) -> f64 {
+        f64::min(self, other)
+    }
+    fn next_up(self) -> f64 {
+        if self.is_nan() || self == f64::INFINITY {
+            return self;
+        }
+        let bits = self.to_bits();
+        let next = if self == 0.0 {
+            1
+        } else if bits >> 63 == 0 {
+            bits + 1
+        } else {
+            bits - 1
+        };
+        f64::from_bits(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_min_positive_constants_match_std() {
+        assert!((<f32 as GoomFloat>::LN_MIN_POSITIVE - f32::MIN_POSITIVE.ln()).abs() < 1e-4);
+        assert!((<f64 as GoomFloat>::LN_MIN_POSITIVE - f64::MIN_POSITIVE.ln()).abs() < 1e-10);
+        assert!((<f32 as GoomFloat>::LN_MAX - f32::MAX.ln()).abs() < 1e-4);
+        assert!((<f64 as GoomFloat>::LN_MAX - f64::MAX.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn next_up_moves_one_ulp() {
+        assert!(1.0f64.next_up() > 1.0);
+        assert_eq!(1.0f64.next_up(), 1.0 + f64::EPSILON);
+        assert!(0.0f32.next_up() > 0.0);
+        assert_eq!(f64::INFINITY.next_up(), f64::INFINITY);
+        assert_eq!((-1.0f64).next_up(), -1.0 + f64::EPSILON / 2.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! LMME: log-matrix-multiplication-exp (paper §3.2).
+//!
+//! Two implementations:
+//!
+//! * [`lmme`] — the paper's "compromise" (eq. 10): per-row/per-column
+//!   log-scaling constants (eq. 11), one real matmul on the scaled
+//!   exponentials, then log + rescale. This delegates the O(ndm) work to the
+//!   optimized real matmul — exactly the trade the paper makes with cuBLAS,
+//!   here with the blocked `linalg::Mat::matmul` (and, through the AOT
+//!   path, with XLA's dot).
+//!
+//! * [`lmme_exact`] — the exact signed log-sum-exp of pairwise sums
+//!   (eq. 9), O(ndm) in log space with a per-output-element max. Slower but
+//!   never leaves ℂ'; used as the correctness oracle and for precision
+//!   studies.
+
+use super::float::GoomFloat;
+use super::scalar::Goom;
+use super::tensor::GoomMat;
+
+/// Per-row scaling constants `a_i = max_j logmag` of the left matrix.
+///
+/// Deviation from paper eq. 11: the paper clamps the scale at 0
+/// (`max(max_j(·), 0)`), which makes the interim exponentials underflow when
+/// *every* entry of a row is far below 1 (e.g. logmags ≈ -400 in f64). We
+/// use the plain row max, which keeps the scaled entries in [-1, 1] in all
+/// regimes and coincides with the paper's choice whenever any entry ≥ 1.
+/// All-zero rows (max = -inf) fall back to scale 0.
+fn row_scales<T: GoomFloat>(a: &GoomMat<T>) -> Vec<T> {
+    (0..a.rows)
+        .map(|i| {
+            let mut m = T::NEG_INFINITY;
+            for j in 0..a.cols {
+                m = m.max(a.logmag[i * a.cols + j]);
+            }
+            if m == T::NEG_INFINITY {
+                T::ZERO
+            } else {
+                m
+            }
+        })
+        .collect()
+}
+
+/// Per-column scaling constants `b_k = max_j logmag` of the right matrix
+/// (same deviation as [`row_scales`]).
+fn col_scales<T: GoomFloat>(b: &GoomMat<T>) -> Vec<T> {
+    let mut scales = vec![T::NEG_INFINITY; b.cols];
+    for j in 0..b.rows {
+        for k in 0..b.cols {
+            let l = b.logmag[j * b.cols + k];
+            if l > scales[k] {
+                scales[k] = l;
+            }
+        }
+    }
+    for s in scales.iter_mut() {
+        if *s == T::NEG_INFINITY {
+            *s = T::ZERO;
+        }
+    }
+    scales
+}
+
+/// The paper's compromise LMME (eq. 10):
+/// `LMME(A', B') = log( exp(A' - a_i) · exp(B' - b_k) ) + a_i + b_k`.
+///
+/// The interim scaled matmul runs over f64 regardless of `T`, mirroring how
+/// the CUDA implementation runs the scaled product over the component float
+/// type; scaling guarantees every interim entry is in [-d, d].
+pub fn lmme<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    assert_eq!(a.cols, b.rows, "lmme shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (n, d, m) = (a.rows, a.cols, b.cols);
+    let ascale = row_scales(a);
+    let bscale = col_scales(b);
+
+    // Scaled exponentials (entries in [-1, 1]).
+    let mut ea = vec![0.0f64; n * d];
+    for i in 0..n {
+        let s = ascale[i].to_f64();
+        for j in 0..d {
+            let idx = i * d + j;
+            ea[idx] = a.sign[idx].to_f64() * (a.logmag[idx].to_f64() - s).exp();
+        }
+    }
+    let mut eb = vec![0.0f64; d * m];
+    for j in 0..d {
+        for k in 0..m {
+            let idx = j * m + k;
+            eb[idx] = b.sign[idx].to_f64() * (b.logmag[idx].to_f64() - bscale[k].to_f64()).exp();
+        }
+    }
+
+    // Real matmul on the scaled values (i-k-j order, branch-free inner loop).
+    let mut prod = vec![0.0f64; n * m];
+    for i in 0..n {
+        let orow = &mut prod[i * m..(i + 1) * m];
+        for j in 0..d {
+            let av = ea[i * d + j];
+            let brow = &eb[j * m..(j + 1) * m];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+
+    // log + undo scaling.
+    let mut out = GoomMat::<T>::zeros(n, m);
+    for i in 0..n {
+        for k in 0..m {
+            let p = prod[i * m + k];
+            let idx = i * m + k;
+            if p == 0.0 {
+                out.logmag[idx] = T::NEG_INFINITY;
+                out.sign[idx] = T::ONE;
+            } else {
+                out.logmag[idx] =
+                    T::from_f64(p.abs().ln()) + ascale[i] + bscale[k];
+                out.sign[idx] = if p < 0.0 { -T::ONE } else { T::ONE };
+            }
+        }
+    }
+    out
+}
+
+/// Exact LMME (paper eq. 9): each output element is a signed log-sum-exp of
+/// the d pairwise logmag sums. Never exponentiates to ℝ at full magnitude.
+pub fn lmme_exact<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    assert_eq!(a.cols, b.rows, "lmme shape mismatch");
+    let (n, d, m) = (a.rows, a.cols, b.cols);
+    let mut out = GoomMat::<T>::zeros(n, m);
+    for i in 0..n {
+        for k in 0..m {
+            // Pass 1: max of pairwise sums.
+            let mut mx = T::NEG_INFINITY;
+            for j in 0..d {
+                let l = a.logmag[i * d + j] + b.logmag[j * m + k];
+                if l > mx {
+                    mx = l;
+                }
+            }
+            let idx = i * m + k;
+            if mx == T::NEG_INFINITY {
+                continue; // stays zero
+            }
+            // Pass 2: signed scaled sum.
+            let mut acc = T::ZERO;
+            for j in 0..d {
+                let l = a.logmag[i * d + j] + b.logmag[j * m + k];
+                if l != T::NEG_INFINITY {
+                    let s = a.sign[i * d + j] * b.sign[j * m + k];
+                    acc = acc + s * (l - mx).exp();
+                }
+            }
+            if acc == T::ZERO {
+                continue;
+            }
+            out.logmag[idx] = mx + acc.abs().ln();
+            out.sign[idx] = if acc < T::ZERO { -T::ONE } else { T::ONE };
+        }
+    }
+    out
+}
+
+/// LMME on a GOOM matrix-vector pair (convenience for the LLE pipeline).
+pub fn lmme_vec<T: GoomFloat>(a: &GoomMat<T>, v: &[Goom<T>]) -> Vec<Goom<T>> {
+    assert_eq!(a.cols, v.len());
+    let mut b = GoomMat::<T>::zeros(v.len(), 1);
+    for (j, g) in v.iter().enumerate() {
+        b.logmag[j] = g.logmag;
+        b.sign[j] = g.sign;
+    }
+    let out = lmme(a, &b);
+    (0..a.rows).map(|i| Goom::raw(out.logmag[i], out.sign[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::rng_from_seed;
+    use crate::util::prop::{self, close, Config};
+
+    fn assert_goommat_close<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>, rtol: f64, atol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for i in 0..a.logmag.len() {
+            let (la, lb) = (a.logmag[i].to_f64(), b.logmag[i].to_f64());
+            if la == f64::NEG_INFINITY && lb == f64::NEG_INFINITY {
+                continue;
+            }
+            close(la, lb, rtol, atol).unwrap_or_else(|e| panic!("logmag[{i}]: {e}"));
+            assert_eq!(a.sign[i].to_f64(), b.sign[i].to_f64(), "sign[{i}]");
+        }
+    }
+
+    #[test]
+    fn lmme_matches_real_matmul_small() {
+        let mut rng = rng_from_seed(40);
+        for &(n, d, m) in &[(2usize, 3usize, 4usize), (5, 5, 5), (1, 8, 1), (7, 2, 3)] {
+            let a = Mat::randn(n, d, &mut rng);
+            let b = Mat::randn(d, m, &mut rng);
+            let real = a.matmul(&b);
+            let ga = GoomMat::<f64>::from_mat(&a);
+            let gb = GoomMat::<f64>::from_mat(&b);
+            let out = lmme(&ga, &gb).to_mat();
+            for (x, y) in out.data.iter().zip(&real.data) {
+                close(*x, *y, 1e-10, 1e-12).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn exact_matches_compromise_at_moderate_magnitudes() {
+        let mut rng = rng_from_seed(41);
+        let a = GoomMat::<f64>::randn(6, 6, &mut rng);
+        let b = GoomMat::<f64>::randn(6, 6, &mut rng);
+        let c1 = lmme(&a, &b);
+        let c2 = lmme_exact(&a, &b);
+        assert_goommat_close(&c1, &c2, 1e-9, 1e-11);
+    }
+
+    #[test]
+    fn lmme_survives_huge_magnitudes() {
+        // Entries around exp(5000): product entries around exp(10000+ln d),
+        // far beyond f64. Exact and compromise must agree in log space.
+        let mut rng = rng_from_seed(42);
+        let mut a = GoomMat::<f64>::randn(4, 4, &mut rng);
+        let mut b = GoomMat::<f64>::randn(4, 4, &mut rng);
+        for l in a.logmag.iter_mut() {
+            *l += 5000.0;
+        }
+        for l in b.logmag.iter_mut() {
+            *l += 5000.0;
+        }
+        let c1 = lmme(&a, &b);
+        let c2 = lmme_exact(&a, &b);
+        assert!(!c1.has_nan());
+        assert!(c1.max_logmag() > 9000.0);
+        assert_goommat_close(&c1, &c2, 1e-9, 1e-9);
+    }
+
+    #[test]
+    fn lmme_handles_zero_rows_and_columns() {
+        let mut a = GoomMat::<f64>::zeros(2, 3); // all-zero left matrix
+        let b = GoomMat::<f64>::randn(3, 2, &mut rng_from_seed(43));
+        let c = lmme(&a, &b);
+        assert!(c.logmag.iter().all(|&l| l == f64::NEG_INFINITY));
+        // Identity behaviour
+        a = GoomMat::<f64>::eye(3);
+        let c = lmme(&a, &b);
+        assert_goommat_close(&c, &b, 1e-12, 0.0);
+    }
+
+    #[test]
+    fn lmme_identity_is_neutral_under_chain() {
+        let mut rng = rng_from_seed(44);
+        let a = GoomMat::<f64>::randn(5, 5, &mut rng);
+        let i = GoomMat::<f64>::eye(5);
+        assert_goommat_close(&lmme(&a, &i), &a, 1e-12, 1e-12);
+        assert_goommat_close(&lmme(&i, &a), &a, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn f32_goom_lmme_matches_f64_reference() {
+        let mut rng = rng_from_seed(45);
+        let a = Mat::randn(8, 8, &mut rng);
+        let b = Mat::randn(8, 8, &mut rng);
+        let real = a.matmul(&b);
+        let ga = GoomMat::<f32>::from_mat(&a);
+        let gb = GoomMat::<f32>::from_mat(&b);
+        let out = lmme(&ga, &gb).to_mat();
+        for (x, y) in out.data.iter().zip(&real.data) {
+            close(*x, *y, 1e-5, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn lmme_vec_matches_matvec() {
+        let mut rng = rng_from_seed(46);
+        let a = Mat::randn(5, 5, &mut rng);
+        let v: Vec<f64> = (0..5).map(|i| (i as f64) - 2.0).collect();
+        let expected = a.matvec(&v);
+        let ga = GoomMat::<f64>::from_mat(&a);
+        let gv: Vec<Goom<f64>> = v.iter().map(|&x| Goom::from_real(x)).collect();
+        let out = lmme_vec(&ga, &gv);
+        for (g, &y) in out.iter().zip(&expected) {
+            close(g.to_f64(), y, 1e-10, 1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn property_lmme_vs_exact_across_magnitudes() {
+        prop::check(
+            Config { cases: 120, seed: 0x17BEEF },
+            "lmme-compromise-vs-exact",
+            |rng, scale| {
+                let d = 2 + rng.next_below(5) as usize;
+                let shift = scale * 3000.0 * (rng.next_f64() - 0.5);
+                let mut a = GoomMat::<f64>::randn(d, d, rng);
+                let mut b = GoomMat::<f64>::randn(d, d, rng);
+                for l in a.logmag.iter_mut() {
+                    *l += shift;
+                }
+                for l in b.logmag.iter_mut() {
+                    *l += shift;
+                }
+                (a, b)
+            },
+            |(a, b)| {
+                let c1 = lmme(a, b);
+                let c2 = lmme_exact(a, b);
+                if c1.has_nan() {
+                    return Err("compromise produced NaN".into());
+                }
+                for i in 0..c1.logmag.len() {
+                    if c1.logmag[i] == f64::NEG_INFINITY && c2.logmag[i] == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    close(c1.logmag[i], c2.logmag[i], 1e-8, 1e-8)
+                        .map_err(|e| format!("logmag[{i}]: {e}"))?;
+                    if c1.sign[i] != c2.sign[i] {
+                        return Err(format!("sign[{i}] mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Generalized orders of magnitude (GOOMs) — the paper's core contribution.
+//!
+//! A GOOM represents a real number as `sign · exp(logmag)`, giving a dynamic
+//! range of ±exp(±largest logmag): `Goom<f32>` covers ±exp(±10³⁸) (the
+//! paper's Complex64 GOOM) and `Goom<f64>` covers ±exp(±10³⁰⁸) (Complex128).
+//!
+//! Modules:
+//! * [`scalar`] — scalar GOOMs and signed log-sum-exp.
+//! * [`tensor`] — `GoomMat` with planar (logmag, sign) storage.
+//! * [`lmme`] — log-matrix-multiplication-exp (paper §3.2).
+//! * [`scan`] — sequential + parallel prefix scans and the work/span model.
+//! * [`reset`] — the selective-resetting scan (paper §5).
+
+mod float;
+mod lmme;
+pub mod ops;
+mod reset;
+mod scalar;
+mod scan;
+mod tensor;
+
+pub use float::GoomFloat;
+pub use lmme::{lmme, lmme_exact, lmme_vec};
+pub use reset::{
+    reset_combine, reset_scan_par, reset_scan_par_chunked, reset_scan_seq, ResetElem, ResetPair,
+};
+pub use scalar::{goom_dot, signed_lse, Goom};
+pub use scan::{scan_par, scan_par_chunked, scan_seq, ScanCost};
+pub use tensor::GoomMat;

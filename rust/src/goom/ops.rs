@@ -1,0 +1,439 @@
+//! Real-valued functions over GOOM matrices (paper §3.3).
+//!
+//! The paper: "we can naively formulate the equivalent over ℂ' of any
+//! real-valued function f as log ∘ f ∘ exp — in practice we must either (a)
+//! avoid interim exponentiation altogether, staying in ℂ', or (b) scale in
+//! the log domain before exponentiating and undo the scaling after."
+//! Every function here is implemented one of those two ways and documents
+//! which; none materializes unscaled reals.
+//!
+//! Conventions: elementwise ops are strategy (a) when possible (mul, div,
+//! powi, sqrt, abs, neg, square are pure log-domain arithmetic); additive
+//! reductions are signed LSE (strategy (a)); softmax-like exports use the
+//! eq. 27 rescaling (strategy (b)).
+
+use super::float::GoomFloat;
+use super::lmme::lmme;
+use super::scalar::{signed_lse, Goom};
+use super::tensor::GoomMat;
+
+// ------------------------------------------------------ elementwise maps --
+
+/// Elementwise application of a scalar GOOM function. Strategy (a).
+pub fn map<T: GoomFloat>(m: &GoomMat<T>, f: impl Fn(Goom<T>) -> Goom<T>) -> GoomMat<T> {
+    let mut out = GoomMat::zeros(m.rows, m.cols);
+    for i in 0..m.logmag.len() {
+        let g = f(Goom::raw(m.logmag[i], m.sign[i]));
+        out.logmag[i] = g.logmag;
+        out.sign[i] = g.sign;
+    }
+    out
+}
+
+/// Elementwise binary op. Strategy (a).
+pub fn zip<T: GoomFloat>(
+    a: &GoomMat<T>,
+    b: &GoomMat<T>,
+    f: impl Fn(Goom<T>, Goom<T>) -> Goom<T>,
+) -> GoomMat<T> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "zip shape mismatch");
+    let mut out = GoomMat::zeros(a.rows, a.cols);
+    for i in 0..a.logmag.len() {
+        let g = f(Goom::raw(a.logmag[i], a.sign[i]), Goom::raw(b.logmag[i], b.sign[i]));
+        out.logmag[i] = g.logmag;
+        out.sign[i] = g.sign;
+    }
+    out
+}
+
+pub fn ew_add<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    zip(a, b, |x, y| x.add(y))
+}
+
+pub fn ew_sub<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    zip(a, b, |x, y| x.sub(y))
+}
+
+pub fn ew_mul<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    zip(a, b, |x, y| x.mul(y))
+}
+
+pub fn ew_div<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    zip(a, b, |x, y| x.div(y))
+}
+
+pub fn ew_abs<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    map(m, |x| x.abs())
+}
+
+pub fn ew_neg<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    map(m, |x| x.neg())
+}
+
+pub fn ew_square<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    map(m, |x| x.square())
+}
+
+pub fn ew_sqrt<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    map(m, |x| x.sqrt())
+}
+
+pub fn ew_recip<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    map(m, |x| x.recip())
+}
+
+pub fn ew_powi<T: GoomFloat>(m: &GoomMat<T>, n: i32) -> GoomMat<T> {
+    map(m, |x| x.powi(n))
+}
+
+/// Scale every element by the real number exp(c)·sign — pure logmag shift.
+pub fn scale_by<T: GoomFloat>(m: &GoomMat<T>, factor: Goom<T>) -> GoomMat<T> {
+    map(m, |x| x.mul(factor))
+}
+
+// ----------------------------------------------------------- reductions --
+
+/// Sum of all elements (signed LSE over the whole matrix). Strategy (a).
+pub fn sum_all<T: GoomFloat>(m: &GoomMat<T>) -> Goom<T> {
+    let elems: Vec<Goom<T>> =
+        (0..m.logmag.len()).map(|i| Goom::raw(m.logmag[i], m.sign[i])).collect();
+    signed_lse(&elems)
+}
+
+/// Mean of all elements.
+pub fn mean_all<T: GoomFloat>(m: &GoomMat<T>) -> Goom<T> {
+    let n = Goom::<T>::from_f64((m.rows * m.cols) as f64);
+    sum_all(m).div(n)
+}
+
+/// Row sums -> column vector [rows, 1].
+pub fn sum_rows<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    let mut out = GoomMat::zeros(m.rows, 1);
+    for r in 0..m.rows {
+        let elems: Vec<Goom<T>> = (0..m.cols).map(|c| m.get(r, c)).collect();
+        out.set(r, 0, signed_lse(&elems));
+    }
+    out
+}
+
+/// Column sums -> row vector [1, cols].
+pub fn sum_cols<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    let mut out = GoomMat::zeros(1, m.cols);
+    for c in 0..m.cols {
+        let elems: Vec<Goom<T>> = (0..m.rows).map(|r| m.get(r, c)).collect();
+        out.set(0, c, signed_lse(&elems));
+    }
+    out
+}
+
+/// Largest element by real value.
+pub fn max_all<T: GoomFloat>(m: &GoomMat<T>) -> Goom<T> {
+    let mut best = m.get(0, 0);
+    for i in 1..m.logmag.len() {
+        let g = Goom::raw(m.logmag[i], m.sign[i]);
+        if g.cmp_real(best) == std::cmp::Ordering::Greater {
+            best = g;
+        }
+    }
+    best
+}
+
+/// Smallest element by real value.
+pub fn min_all<T: GoomFloat>(m: &GoomMat<T>) -> Goom<T> {
+    let mut best = m.get(0, 0);
+    for i in 1..m.logmag.len() {
+        let g = Goom::raw(m.logmag[i], m.sign[i]);
+        if g.cmp_real(best) == std::cmp::Ordering::Less {
+            best = g;
+        }
+    }
+    best
+}
+
+/// Matrix trace (signed LSE of the diagonal).
+pub fn trace<T: GoomFloat>(m: &GoomMat<T>) -> Goom<T> {
+    assert_eq!(m.rows, m.cols, "trace of non-square");
+    let elems: Vec<Goom<T>> = (0..m.rows).map(|i| m.get(i, i)).collect();
+    signed_lse(&elems)
+}
+
+/// Dot product of a row of `a` and a column of `b` without materializing
+/// the product matrix.
+pub fn row_col_dot<T: GoomFloat>(
+    a: &GoomMat<T>,
+    row: usize,
+    b: &GoomMat<T>,
+    col: usize,
+) -> Goom<T> {
+    assert_eq!(a.cols, b.rows);
+    let elems: Vec<Goom<T>> =
+        (0..a.cols).map(|j| a.get(row, j).mul(b.get(j, col))).collect();
+    signed_lse(&elems)
+}
+
+// ----------------------------------------------------- cumulative ops ----
+
+/// Cumulative product along each row (logmag prefix sums). Strategy (a) —
+/// this is the scalar version of the paper's matrix-chain scan.
+pub fn cumprod_rows<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    let mut out = m.clone();
+    for r in 0..m.rows {
+        for c in 1..m.cols {
+            let prev = out.get(r, c - 1);
+            let cur = out.get(r, c);
+            out.set(r, c, prev.mul(cur));
+        }
+    }
+    out
+}
+
+/// Cumulative sum along each row (running signed LSE).
+pub fn cumsum_rows<T: GoomFloat>(m: &GoomMat<T>) -> GoomMat<T> {
+    let mut out = m.clone();
+    for r in 0..m.rows {
+        for c in 1..m.cols {
+            let prev = out.get(r, c - 1);
+            let cur = out.get(r, c);
+            out.set(r, c, prev.add(cur));
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- matrix algebra --
+
+/// Matrix power A^n via binary exponentiation over LMME (n >= 1).
+pub fn mat_powi<T: GoomFloat>(m: &GoomMat<T>, n: u32) -> GoomMat<T> {
+    assert_eq!(m.rows, m.cols, "mat_powi of non-square");
+    assert!(n >= 1);
+    let mut result: Option<GoomMat<T>> = None;
+    let mut base = m.clone();
+    let mut k = n;
+    while k > 0 {
+        if k & 1 == 1 {
+            result = Some(match result {
+                None => base.clone(),
+                Some(acc) => lmme(&base, &acc),
+            });
+        }
+        k >>= 1;
+        if k > 0 {
+            base = lmme(&base, &base);
+        }
+    }
+    result.unwrap()
+}
+
+/// log-softmax over each row, computed entirely in the log domain
+/// (doubly-logarithmic care: inputs are GOOMs x'_ij; softmax over the REAL
+/// values x_ij requires exp(x') which may be unrepresentable — this
+/// function instead softmaxes the LOG-magnitudes, the standard use when
+/// GOOM logmags play the role of logits). Returns plain floats.
+pub fn logmag_log_softmax<T: GoomFloat>(m: &GoomMat<T>) -> Vec<Vec<f64>> {
+    (0..m.rows)
+        .map(|r| {
+            let logits: Vec<f64> = (0..m.cols).map(|c| m.get(r, c).logmag.to_f64()).collect();
+            let mx = logits.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            let lse = mx + logits.iter().map(|&l| (l - mx).exp()).sum::<f64>().ln();
+            logits.iter().map(|&l| l - lse).collect()
+        })
+        .collect()
+}
+
+/// Frobenius inner product <A, B> = Σ a_ij b_ij as a GOOM.
+pub fn frobenius_inner<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> Goom<T> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let elems: Vec<Goom<T>> = (0..a.logmag.len())
+        .map(|i| Goom::raw(a.logmag[i], a.sign[i]).mul(Goom::raw(b.logmag[i], b.sign[i])))
+        .collect();
+    signed_lse(&elems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::rng_from_seed;
+    use crate::util::prop::{all_close, close};
+
+    fn sample(r: usize, c: usize, seed: u64) -> (Mat, GoomMat<f64>) {
+        let mut rng = rng_from_seed(seed);
+        let m = Mat::randn(r, c, &mut rng);
+        let g = GoomMat::from_mat(&m);
+        (m, g)
+    }
+
+    #[test]
+    fn elementwise_ops_match_reals() {
+        let (a, ga) = sample(4, 5, 1);
+        let (b, gb) = sample(4, 5, 2);
+        let cases: Vec<(GoomMat<f64>, Box<dyn Fn(f64, f64) -> f64>)> = vec![
+            (ew_add(&ga, &gb), Box::new(|x, y| x + y)),
+            (ew_sub(&ga, &gb), Box::new(|x, y| x - y)),
+            (ew_mul(&ga, &gb), Box::new(|x, y| x * y)),
+            (ew_div(&ga, &gb), Box::new(|x, y| x / y)),
+        ];
+        for (got, f) in cases {
+            let real = got.to_mat();
+            for i in 0..a.data.len() {
+                close(real.data[i], f(a.data[i], b.data[i]), 1e-10, 1e-12).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn unary_ops_match_reals() {
+        let (a, ga) = sample(3, 3, 3);
+        let sq = ew_square(&ga).to_mat();
+        let ab = ew_abs(&ga).to_mat();
+        let ng = ew_neg(&ga).to_mat();
+        let rc = ew_recip(&ga).to_mat();
+        for i in 0..a.data.len() {
+            close(sq.data[i], a.data[i] * a.data[i], 1e-12, 1e-14).unwrap();
+            close(ab.data[i], a.data[i].abs(), 1e-12, 1e-14).unwrap();
+            close(ng.data[i], -a.data[i], 1e-12, 1e-14).unwrap();
+            close(rc.data[i], 1.0 / a.data[i], 1e-12, 1e-14).unwrap();
+        }
+    }
+
+    #[test]
+    fn reductions_match_reals() {
+        let (a, ga) = sample(5, 4, 4);
+        close(sum_all(&ga).to_f64(), a.data.iter().sum::<f64>(), 1e-10, 1e-12).unwrap();
+        close(
+            mean_all(&ga).to_f64(),
+            a.data.iter().sum::<f64>() / 20.0,
+            1e-10,
+            1e-12,
+        )
+        .unwrap();
+        let rows = sum_rows(&ga).to_mat();
+        for r in 0..5 {
+            close(rows[(r, 0)], a.row(r).iter().sum::<f64>(), 1e-10, 1e-12).unwrap();
+        }
+        let cols = sum_cols(&ga).to_mat();
+        for c in 0..4 {
+            close(cols[(0, c)], a.col(c).iter().sum::<f64>(), 1e-10, 1e-12).unwrap();
+        }
+        let mx = a.data.iter().fold(f64::NEG_INFINITY, |x, &y| x.max(y));
+        let mn = a.data.iter().fold(f64::INFINITY, |x, &y| x.min(y));
+        close(max_all(&ga).to_f64(), mx, 1e-12, 0.0).unwrap();
+        close(min_all(&ga).to_f64(), mn, 1e-12, 0.0).unwrap();
+    }
+
+    #[test]
+    fn reductions_beyond_float_range() {
+        // Sum of 4 elements each ~exp(1000): floats die, GOOM logmag exact.
+        let mut g = GoomMat::<f64>::zeros(2, 2);
+        for i in 0..4 {
+            g.set(i / 2, i % 2, Goom::from_logmag(1000.0));
+        }
+        let s = sum_all(&g);
+        close(s.logmag, 1000.0 + 4f64.ln(), 1e-12, 0.0).unwrap();
+        let m = mean_all(&g);
+        close(m.logmag, 1000.0, 1e-12, 0.0).unwrap();
+    }
+
+    #[test]
+    fn trace_and_inner_product() {
+        let (a, ga) = sample(4, 4, 5);
+        let (b, gb) = sample(4, 4, 6);
+        close(trace(&ga).to_f64(), a.diag().iter().sum::<f64>(), 1e-11, 1e-13).unwrap();
+        let inner: f64 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        close(frobenius_inner(&ga, &gb).to_f64(), inner, 1e-10, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn row_col_dot_matches_lmme_entry() {
+        let (_, ga) = sample(3, 4, 7);
+        let (_, gb) = sample(4, 5, 8);
+        let full = lmme(&ga, &gb);
+        for r in 0..3 {
+            for c in 0..5 {
+                let single = row_col_dot(&ga, r, &gb, c);
+                let expect = full.get(r, c);
+                if single.is_zero() && expect.is_zero() {
+                    continue;
+                }
+                close(single.logmag, expect.logmag, 1e-9, 1e-10).unwrap();
+                assert_eq!(single.sign, expect.sign);
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_ops_match_reals() {
+        let (a, ga) = sample(2, 6, 9);
+        let cp = cumprod_rows(&ga).to_mat();
+        let cs = cumsum_rows(&ga).to_mat();
+        for r in 0..2 {
+            let mut prod = 1.0;
+            let mut sum = 0.0;
+            for c in 0..6 {
+                prod *= a[(r, c)];
+                sum += a[(r, c)];
+                close(cp[(r, c)], prod, 1e-10, 1e-12).unwrap();
+                close(cs[(r, c)], sum, 1e-10, 1e-12).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn cumprod_survives_underflow_territory() {
+        // 400 factors of ~1e-3: real product ~1e-1200, far below f64.
+        let mut g = GoomMat::<f64>::zeros(1, 400);
+        for c in 0..400 {
+            g.set(0, c, Goom::from_real(1e-3));
+        }
+        let cp = cumprod_rows(&g);
+        let last = cp.get(0, 399);
+        close(last.logmag, 400.0 * 1e-3f64.ln(), 1e-9, 0.0).unwrap();
+    }
+
+    #[test]
+    fn mat_powi_matches_repeated_matmul() {
+        let mut rng = rng_from_seed(10);
+        let a = Mat::randn(3, 3, &mut rng).scale(0.5);
+        let ga = GoomMat::<f64>::from_mat(&a);
+        let mut expect = a.clone();
+        for n in 1..=6u32 {
+            if n > 1 {
+                expect = expect.matmul(&a);
+            }
+            let got = mat_powi(&ga, n).to_mat();
+            all_close(&got.data, &expect.data, 1e-8, 1e-10)
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn mat_powi_huge_exponent_stays_finite() {
+        let mut rng = rng_from_seed(11);
+        let a = Mat::randn(4, 4, &mut rng);
+        let ga = GoomMat::<f64>::from_mat(&a);
+        let p = mat_powi(&ga, 4096);
+        assert!(!p.has_nan());
+        // ~4096·log-growth-rate logmag — far beyond floats.
+        assert!(p.max_logmag() > 1000.0, "{}", p.max_logmag());
+    }
+
+    #[test]
+    fn log_softmax_rows_normalized() {
+        let (_, ga) = sample(3, 7, 12);
+        let ls = logmag_log_softmax(&ga);
+        for row in &ls {
+            let total: f64 = row.iter().map(|&l| l.exp()).sum();
+            close(total, 1.0, 1e-12, 0.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn scale_by_shifts_logmags() {
+        let (_, ga) = sample(2, 2, 13);
+        let factor = Goom::<f64>::from_logmag(5000.0);
+        let scaled = scale_by(&ga, factor);
+        for i in 0..4 {
+            close(scaled.logmag[i], ga.logmag[i] + 5000.0, 1e-12, 0.0).unwrap();
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Selective-resetting method for parallel scans of linear recurrences
+//! (paper §5, eq. 28; intuition in Appendix C).
+//!
+//! The recurrence `X_t = A_t X_{t-1}` is augmented with bias matrices
+//! `B_t = 0`, giving scan elements `(A_t, B_t)`. The binary combine first
+//! gives the *earlier* interim tuple a chance to reset itself (if the
+//! selection function fires and it has not been reset before, its state
+//! moves into the bias slot and its transition zeroes out), then applies the
+//! ordinary affine composition:
+//!
+//! ```text
+//! if S(A*_prev) and B*_prev == 0:          // selective reset
+//!     B*_prev ← R(A*_prev); A*_prev ← 0
+//! A*  ← A*_curr · A*_prev                  // ordinary recurrence
+//! B*  ← A*_curr · B*_prev + B*_curr
+//! ```
+//!
+//! The combine stays associative because a tuple can be reset at most once
+//! (guarded by `B == 0`) and a reset zeroes the transition, which then
+//! annihilates all earlier history by cumulative multiplication.
+//!
+//! Generic over the element algebra so the same scan drives both the plain
+//! `Mat` (used in tests that mirror Appendix C) and `GoomMat` (used by the
+//! Lyapunov pipeline, where resetting replaces near-colinear deviation
+//! states with an orthonormal basis).
+
+use super::float::GoomFloat;
+use super::lmme::lmme;
+use super::scan::{scan_par, scan_seq};
+use super::tensor::GoomMat;
+use crate::linalg::Mat;
+
+/// The element algebra a selective-reset scan needs.
+pub trait ResetElem: Clone + Send + Sync {
+    /// `later · earlier` (matrix composition: apply `earlier` first).
+    fn compose(later: &Self, earlier: &Self) -> Self;
+    /// Elementwise addition.
+    fn add(&self, other: &Self) -> Self;
+    /// An all-zeros element of the same shape.
+    fn zeros_like(&self) -> Self;
+    /// Exact all-zeros test (the once-only reset guard).
+    fn is_zero(&self) -> bool;
+}
+
+impl ResetElem for Mat {
+    fn compose(later: &Self, earlier: &Self) -> Self {
+        later.matmul(earlier)
+    }
+    fn add(&self, other: &Self) -> Self {
+        self + other
+    }
+    fn zeros_like(&self) -> Self {
+        Mat::zeros(self.rows, self.cols)
+    }
+    fn is_zero(&self) -> bool {
+        self.data.iter().all(|&x| x == 0.0)
+    }
+}
+
+impl<T: GoomFloat> ResetElem for GoomMat<T> {
+    fn compose(later: &Self, earlier: &Self) -> Self {
+        lmme(later, earlier)
+    }
+    fn add(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = GoomMat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(r, c, self.get(r, c).add(other.get(r, c)));
+            }
+        }
+        out
+    }
+    fn zeros_like(&self) -> Self {
+        GoomMat::zeros(self.rows, self.cols)
+    }
+    fn is_zero(&self) -> bool {
+        self.logmag.iter().all(|&l| l == T::NEG_INFINITY)
+    }
+}
+
+/// A scan element: transition + bias, with a flag marking tuples that have
+/// already been reset (mirrors the paper's `B ≠ 0` guard but stays correct
+/// even when `R` returns an all-zero matrix).
+#[derive(Clone, Debug)]
+pub struct ResetPair<E: ResetElem> {
+    pub a: E,
+    pub b: E,
+    pub was_reset: bool,
+}
+
+impl<E: ResetElem> ResetPair<E> {
+    /// Wrap a transition matrix with a zero bias.
+    pub fn from_transition(a: E) -> Self {
+        let b = a.zeros_like();
+        Self { a, b, was_reset: false }
+    }
+
+    /// The represented state, given that the initial state was folded into
+    /// the first scan element: `X = A* + B*` is wrong in general — the state
+    /// is `A*·X0 + B*`, but when element 0 *is* X0 the compound `A*` already
+    /// contains it, so the state of an interim tuple is `A* + B*` with
+    /// exactly one of the two non-zero.
+    pub fn state(&self) -> E {
+        self.a.add(&self.b)
+    }
+}
+
+/// The eq.-28 combine, parameterized by selection and reset functions.
+/// `select`/`reset` receive the *compound transition* `A*` of the earlier
+/// tuple (which equals the interim state when the initial state is folded
+/// into the first scan element, as the Lyapunov pipeline does).
+pub fn reset_combine<E: ResetElem>(
+    earlier: &ResetPair<E>,
+    later: &ResetPair<E>,
+    select: &(dyn Fn(&E) -> bool + Sync),
+    reset: &(dyn Fn(&E) -> E + Sync),
+) -> ResetPair<E> {
+    // Selective reset of the earlier tuple (at most once).
+    let (ap, bp, was_reset) = if !earlier.was_reset && select(&earlier.a) {
+        (earlier.a.zeros_like(), reset(&earlier.a), true)
+    } else {
+        (earlier.a.clone(), earlier.b.clone(), earlier.was_reset)
+    };
+    // Ordinary affine recurrence.
+    let a = E::compose(&later.a, &ap);
+    let b = E::compose(&later.a, &bp).add(&later.b);
+    ResetPair { a, b, was_reset: was_reset || later.was_reset }
+}
+
+/// Inclusive selective-reset scan (sequential order).
+pub fn reset_scan_seq<E: ResetElem>(
+    items: &[ResetPair<E>],
+    select: &(dyn Fn(&E) -> bool + Sync),
+    reset: &(dyn Fn(&E) -> E + Sync),
+) -> Vec<ResetPair<E>> {
+    scan_seq(items, &|e: &ResetPair<E>, l: &ResetPair<E>| reset_combine(e, l, select, reset))
+}
+
+/// Inclusive selective-reset scan (chunked parallel order).
+pub fn reset_scan_par<E: ResetElem>(
+    items: &[ResetPair<E>],
+    select: &(dyn Fn(&E) -> bool + Sync),
+    reset: &(dyn Fn(&E) -> E + Sync),
+    threads: usize,
+) -> Vec<ResetPair<E>> {
+    scan_par(
+        items,
+        &|e: &ResetPair<E>, l: &ResetPair<E>| reset_combine(e, l, select, reset),
+        threads,
+    )
+}
+
+/// Chunked reset scan with the chunk count decoupled from the worker count.
+/// Resets can fire once per chunk (plus once in the fix-up combine), so the
+/// chunk count sets the reset cadence — the knob the Lyapunov pipeline uses
+/// to emulate the paper's many-lane GPU scan on few cores.
+pub fn reset_scan_par_chunked<E: ResetElem>(
+    items: &[ResetPair<E>],
+    select: &(dyn Fn(&E) -> bool + Sync),
+    reset: &(dyn Fn(&E) -> E + Sync),
+    chunks: usize,
+    threads: usize,
+) -> Vec<ResetPair<E>> {
+    super::scan::scan_par_chunked(
+        items,
+        &|e: &ResetPair<E>, l: &ResetPair<E>| reset_combine(e, l, select, reset),
+        chunks,
+        threads,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn no_select(_: &Mat) -> bool {
+        false
+    }
+
+    #[test]
+    fn without_resets_scan_equals_plain_recurrence() {
+        let mut rng = rng_from_seed(60);
+        let x0 = Mat::randn(3, 3, &mut rng);
+        let mats: Vec<Mat> = (0..9).map(|_| Mat::randn(3, 3, &mut rng)).collect();
+        let mut items = vec![ResetPair::from_transition(x0.clone())];
+        items.extend(mats.iter().cloned().map(ResetPair::from_transition));
+        let out = reset_scan_seq(&items, &no_select, &|m: &Mat| m.clone());
+        // Compare against the direct recurrence X_t = A_t X_{t-1}.
+        let mut x = x0;
+        for (t, a) in mats.iter().enumerate() {
+            x = a.matmul(&x);
+            let state = out[t + 1].state();
+            for (p, q) in state.data.iter().zip(&x.data) {
+                assert!((p - q).abs() < 1e-9 * q.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn appendix_c_single_reset_example() {
+        // Mirror Appendix C.2: reset the state at position 1 (A1·X0),
+        // replacing it with R(A1·X0). Expected final state: A3·A2·R(A1·X0).
+        let mut rng = rng_from_seed(61);
+        let x0 = Mat::randn(2, 2, &mut rng);
+        let a1 = Mat::randn(2, 2, &mut rng);
+        let a2 = Mat::randn(2, 2, &mut rng);
+        let a3 = Mat::randn(2, 2, &mut rng);
+        let r = |m: &Mat| m.scale(0.5); // arbitrary reset function
+        // Select exactly the state A1·X0 by matching its Frobenius norm.
+        let target = a1.matmul(&x0);
+        let target_norm = target.frobenius_norm();
+        let select = move |m: &Mat| (m.frobenius_norm() - target_norm).abs() < 1e-12;
+
+        let items = vec![
+            ResetPair::from_transition(x0.clone()),
+            ResetPair::from_transition(a1.clone()),
+            ResetPair::from_transition(a2.clone()),
+            ResetPair::from_transition(a3.clone()),
+        ];
+        let out = reset_scan_seq(&items, &select, &r);
+        let expected_x2 = a2.matmul(&r(&target));
+        let expected_x3 = a3.matmul(&expected_x2);
+        let got_x2 = out[2].state();
+        let got_x3 = out[3].state();
+        for (p, q) in got_x2.data.iter().zip(&expected_x2.data) {
+            assert!((p - q).abs() < 1e-10 * q.abs().max(1.0), "{p} vs {q}");
+        }
+        for (p, q) in got_x3.data.iter().zip(&expected_x3.data) {
+            assert!((p - q).abs() < 1e-10 * q.abs().max(1.0), "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_when_no_reset_fires() {
+        // With a select that never fires, the combine reduces to plain
+        // affine composition, which IS associative — seq and par must agree
+        // exactly (up to fp reassociation).
+        let mut rng = rng_from_seed(62);
+        let x0 = Mat::randn(3, 3, &mut rng).scale(1.0 / 3.0);
+        let mats: Vec<Mat> = (0..40).map(|_| Mat::randn(3, 3, &mut rng)).collect();
+        let mut items = vec![ResetPair::from_transition(x0)];
+        items.extend(mats.into_iter().map(ResetPair::from_transition));
+        let select = |_: &Mat| false;
+        let reset = |m: &Mat| m.clone();
+        let seq = reset_scan_seq(&items, &select, &reset);
+        for threads in [2usize, 3, 5, 8] {
+            let par = reset_scan_par(&items, &select, &reset, threads);
+            assert_eq!(seq.len(), par.len());
+            for (t, (s, p)) in seq.iter().zip(par.iter()).enumerate() {
+                let ss = s.state();
+                let ps = p.state();
+                for (x, y) in ss.data.iter().zip(&ps.data) {
+                    assert!(
+                        (x - y).abs() < 1e-6 * y.abs().max(1.0),
+                        "threads={threads} t={t}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_order_resets_once_then_restarts_recurrence() {
+        // In strictly sequential combine order, the first reset moves the
+        // state into the bias slot and zeroes the compound transition; the
+        // zero transition then blocks `select` forever after (the paper's
+        // §5 note (b): propagation stops at a previously-reset state). So
+        // the sequential scan must equal: plain recurrence until the first
+        // t* with S(X_{t*}), then X_{t*} ← R(X_{t*}), then plain recurrence
+        // from that new initial state with no further resets.
+        let mut rng = rng_from_seed(62);
+        let x0 = Mat::randn(3, 3, &mut rng).scale(1.0 / 3.0);
+        let mats: Vec<Mat> = (0..40).map(|_| Mat::randn(3, 3, &mut rng)).collect();
+        let mut items = vec![ResetPair::from_transition(x0.clone())];
+        items.extend(mats.iter().cloned().map(ResetPair::from_transition));
+        let select = |m: &Mat| m.frobenius_norm() > 10.0;
+        let reset = |m: &Mat| m.scale(1.0 / m.frobenius_norm());
+        let out = reset_scan_seq(&items, &select, &reset);
+
+        // Hand-rolled reference with the once-only semantics.
+        let mut x = x0;
+        let mut fired = false;
+        for (t, a) in mats.iter().enumerate() {
+            // The combine checks S on the PREVIOUS state before composing.
+            if !fired && select(&x) {
+                x = reset(&x);
+                fired = true;
+            }
+            x = a.matmul(&x);
+            let got = out[t + 1].state();
+            for (p, q) in got.data.iter().zip(&x.data) {
+                assert!((p - q).abs() < 1e-9 * q.abs().max(1e-12), "t={t}: {p} vs {q}");
+            }
+        }
+        assert!(fired, "test should exercise a reset");
+    }
+
+    #[test]
+    fn parallel_order_keeps_states_bounded_with_rescaling_resets() {
+        // Across parallel scan orders WHICH interim states get reset differs
+        // (paper §5: the modified sequence "may or may not match the
+        // original"), but with a norm-triggered rescaling reset every
+        // schedule must keep all emitted states finite.
+        let mut rng = rng_from_seed(65);
+        let x0 = Mat::randn(3, 3, &mut rng).scale(1.0 / 3.0);
+        let mats: Vec<Mat> = (0..60).map(|_| Mat::randn(3, 3, &mut rng)).collect();
+        let mut items = vec![ResetPair::from_transition(x0)];
+        items.extend(mats.into_iter().map(ResetPair::from_transition));
+        let select = |m: &Mat| m.frobenius_norm() > 1e3;
+        let reset = |m: &Mat| m.scale(1.0 / m.frobenius_norm());
+        for threads in [2usize, 3, 5, 8] {
+            let out = reset_scan_par(&items, &select, &reset, threads);
+            for (t, pair) in out.iter().enumerate() {
+                let st = pair.state();
+                assert!(!st.has_non_finite(), "threads={threads} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_guard_fires_at_most_once_per_tuple() {
+        // A select that always fires: the first combine resets, after which
+        // the tuple's was_reset flag must block further resets.
+        let mut rng = rng_from_seed(63);
+        let items: Vec<ResetPair<Mat>> =
+            (0..6).map(|_| ResetPair::from_transition(Mat::randn(2, 2, &mut rng))).collect();
+        let select = |_: &Mat| true;
+        let reset = |m: &Mat| m.clone();
+        let out = reset_scan_seq(&items, &select, &reset);
+        // Every output must be finite and the scan must terminate (trivially
+        // true) with states equal to suffix products of at most one step,
+        // because each combine resets the accumulated prefix.
+        for pair in &out {
+            assert!(!pair.state().has_non_finite());
+            assert!(pair.was_reset || pair.b.is_zero());
+        }
+    }
+
+    #[test]
+    fn goommat_reset_scan_smoke() {
+        let mut rng = rng_from_seed(64);
+        let items: Vec<ResetPair<GoomMat<f64>>> = (0..12)
+            .map(|_| ResetPair::from_transition(GoomMat::randn(3, 3, &mut rng)))
+            .collect();
+        let select = |m: &GoomMat<f64>| m.max_pairwise_col_cosine() > 0.99;
+        let reset = |m: &GoomMat<f64>| m.normalize_cols_log();
+        let seq = reset_scan_seq(&items, &select, &reset);
+        let par = reset_scan_par(&items, &select, &reset, 4);
+        // Order-dependent resets mean seq and par need not match elementwise
+        // (paper §5); both must however stay finite and non-NaN throughout.
+        for pair in seq.iter().chain(par.iter()) {
+            assert!(!pair.state().has_nan());
+        }
+        assert_eq!(seq.len(), par.len());
+    }
+}

@@ -1,0 +1,497 @@
+//! Scalar GOOMs: the paper's §2 objects, stored as `(logmag, sign)`.
+//!
+//! A GOOM x' ∈ ℂ' represents the real number exp(x'). The imaginary
+//! component of x' is only ever 0 or π (mod 2π) — a sign — so we store a
+//! GOOM as a real log-magnitude plus an explicit sign, the decomposition of
+//! paper eq. (2): x = e^a · e^{bi} with e^{bi} ∈ {-1, +1}.
+//!
+//!   real x  <->  Goom { logmag: ln|x|, sign: ±1 }      (eq. 4)
+//!   zero    <->  Goom { logmag: -inf,  sign: +1 }      (zero is non-negative
+//!                                                       by the paper's convention)
+//!
+//! `Goom<f32>` matches the paper's Complex64 GOOM (dynamic range
+//! ±exp(±10³⁸)); `Goom<f64>` matches Complex128 (±exp(±10³⁰⁸)). Multiplying
+//! reals is adding GOOMs' logmags (paper Example 1); adding reals is a
+//! signed log-sum-exp (paper Example 2).
+
+use super::float::GoomFloat;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A generalized order of magnitude: `sign · exp(logmag)`.
+#[derive(Clone, Copy, PartialEq)]
+pub struct Goom<T: GoomFloat> {
+    /// ln|x|; `-inf` encodes exact zero.
+    pub logmag: T,
+    /// Exponentiated imaginary component, always -1 or +1.
+    pub sign: T,
+}
+
+impl<T: GoomFloat> fmt::Debug for Goom<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = if self.sign < T::ZERO { '-' } else { '+' };
+        write!(f, "Goom({s}exp({}))", self.logmag)
+    }
+}
+
+impl<T: GoomFloat> Goom<T> {
+    pub const fn raw(logmag: T, sign: T) -> Self {
+        Self { logmag, sign }
+    }
+
+    /// The GOOM representing exact real zero (paper convention: positive).
+    pub fn zero() -> Self {
+        Self { logmag: T::NEG_INFINITY, sign: T::ONE }
+    }
+
+    pub fn one() -> Self {
+        Self { logmag: T::ZERO, sign: T::ONE }
+    }
+
+    /// Map a real number into ℂ' (paper eq. 4: custom log of custom abs).
+    pub fn from_real(x: T) -> Self {
+        if x == T::ZERO {
+            return Self::zero();
+        }
+        let sign = if x < T::ZERO { -T::ONE } else { T::ONE };
+        Self { logmag: x.abs().ln(), sign }
+    }
+
+    pub fn from_f64(x: f64) -> Self {
+        Self::from_real(T::from_f64(x))
+    }
+
+    /// Construct from an explicit log-magnitude of a positive number.
+    pub fn from_logmag(logmag: T) -> Self {
+        Self { logmag, sign: T::ONE }
+    }
+
+    /// Map back to ℝ (paper eq. 7). May overflow/underflow the component
+    /// float format — that is the caller's concern (`to_real_scaled` exists
+    /// for the log-scaling escape hatch, paper eq. 27).
+    pub fn to_real(self) -> T {
+        self.sign * self.logmag.exp()
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.sign.to_f64() * self.logmag.to_f64().exp()
+    }
+
+    /// True if this GOOM represents zero.
+    pub fn is_zero(self) -> bool {
+        self.logmag == T::NEG_INFINITY
+    }
+
+    pub fn is_finite(self) -> bool {
+        !self.logmag.is_nan() && self.logmag < T::INFINITY
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.logmag.is_nan()
+    }
+
+    /// Whether the represented real is (strictly) negative.
+    pub fn is_negative(self) -> bool {
+        self.sign < T::ZERO && !self.is_zero()
+    }
+
+    /// |x| as a GOOM (drop the sign).
+    pub fn abs(self) -> Self {
+        Self { logmag: self.logmag, sign: T::ONE }
+    }
+
+    pub fn neg(self) -> Self {
+        if self.is_zero() {
+            self // zero stays non-negative by convention
+        } else {
+            Self { logmag: self.logmag, sign: -self.sign }
+        }
+    }
+
+    /// Real multiplication = GOOM addition of logmags (paper Example 1).
+    pub fn mul(self, other: Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        Self { logmag: self.logmag + other.logmag, sign: self.sign * other.sign }
+    }
+
+    /// Real division.
+    pub fn div(self, other: Self) -> Self {
+        self.mul(other.recip())
+    }
+
+    /// Real reciprocal: negate the logmag. Reciprocal of zero is +inf logmag
+    /// (an "infinite" GOOM), mirroring 1/0 = inf in IEEE.
+    pub fn recip(self) -> Self {
+        Self { logmag: -self.logmag, sign: self.sign }
+    }
+
+    /// Real addition = signed log-sum-exp (paper Example 2, extended to
+    /// signed operands). Numerically stable: factors out the max logmag.
+    ///
+    /// Hot path (§Perf): one branch on operand order, one `exp`, one `ln`.
+    /// Zero operands need no special casing on the `lo` side — `exp(-inf -
+    /// hi) = 0` makes the arithmetic fall through correctly — so only the
+    /// both-zero case (where `lo - hi = NaN`) is guarded, via the single
+    /// `hi == -inf` test.
+    pub fn add(self, other: Self) -> Self {
+        let (hi, lo) = if self.logmag >= other.logmag { (self, other) } else { (other, self) };
+        if hi.logmag == T::NEG_INFINITY {
+            return Self::zero(); // both operands are zero
+        }
+        // r = s_hi + s_lo * exp(lo - hi), with |r| in [0, 2];
+        // lo == -inf (zero operand) gives exp(-inf) = 0 -> r = s_hi.
+        let r = hi.sign + lo.sign * (lo.logmag - hi.logmag).exp();
+        if r == T::ZERO {
+            return Self::zero(); // exact cancellation
+        }
+        Self { logmag: hi.logmag + r.abs().ln(), sign: if r < T::ZERO { -T::ONE } else { T::ONE } }
+    }
+
+    pub fn sub(self, other: Self) -> Self {
+        self.add(other.neg())
+    }
+
+    /// Integer power: logmag scales linearly, sign follows parity.
+    pub fn powi(self, n: i32) -> Self {
+        if n == 0 {
+            return Self::one();
+        }
+        if self.is_zero() {
+            return if n > 0 { Self::zero() } else { Self::raw(T::INFINITY, T::ONE) };
+        }
+        let sign = if n % 2 == 0 { T::ONE } else { self.sign };
+        Self { logmag: self.logmag * T::from_f64(n as f64), sign }
+    }
+
+    /// Square root; requires a non-negative GOOM (NaN logmag otherwise, as
+    /// with real sqrt).
+    pub fn sqrt(self) -> Self {
+        if self.is_negative() {
+            return Self::raw(T::from_f64(f64::NAN), T::ONE);
+        }
+        Self { logmag: self.logmag * T::from_f64(0.5), sign: T::ONE }
+    }
+
+    /// x² — always non-negative.
+    pub fn square(self) -> Self {
+        Self { logmag: self.logmag + self.logmag, sign: T::ONE }
+    }
+
+    /// Natural log of the represented (positive) real: this is just the
+    /// logmag (the paper notes log over GOOMs "incurs zero running time").
+    /// Returns None for negative GOOMs (log undefined over ℝ).
+    pub fn ln_real(self) -> Option<T> {
+        if self.is_negative() {
+            None
+        } else {
+            Some(self.logmag)
+        }
+    }
+
+    /// Total order by represented real value. NaNs compare greater
+    /// (consistent ordering for sorting; callers filter NaNs first).
+    pub fn cmp_real(self, other: Self) -> Ordering {
+        if self.is_nan() || other.is_nan() {
+            return if self.is_nan() && other.is_nan() {
+                Ordering::Equal
+            } else if self.is_nan() {
+                Ordering::Greater
+            } else {
+                Ordering::Less
+            };
+        }
+        let sa = if self.is_zero() { T::ZERO } else { self.sign };
+        let sb = if other.is_zero() { T::ZERO } else { other.sign };
+        // Compare sign classes first.
+        let ca = if sa > T::ZERO { 1i8 } else if sa < T::ZERO { -1 } else { 0 };
+        let cb = if sb > T::ZERO { 1i8 } else if sb < T::ZERO { -1 } else { 0 };
+        if ca != cb {
+            return ca.cmp(&cb);
+        }
+        match ca {
+            0 => Ordering::Equal,
+            1 => self.logmag.partial_cmp(&other.logmag).unwrap(),
+            _ => other.logmag.partial_cmp(&self.logmag).unwrap(),
+        }
+    }
+}
+
+impl<T: GoomFloat> std::ops::Add for Goom<T> {
+    type Output = Self;
+    fn add(self, rhs: Self) -> Self {
+        Goom::add(self, rhs)
+    }
+}
+
+impl<T: GoomFloat> std::ops::Sub for Goom<T> {
+    type Output = Self;
+    fn sub(self, rhs: Self) -> Self {
+        Goom::sub(self, rhs)
+    }
+}
+
+impl<T: GoomFloat> std::ops::Mul for Goom<T> {
+    type Output = Self;
+    fn mul(self, rhs: Self) -> Self {
+        Goom::mul(self, rhs)
+    }
+}
+
+impl<T: GoomFloat> std::ops::Div for Goom<T> {
+    type Output = Self;
+    fn div(self, rhs: Self) -> Self {
+        Goom::div(self, rhs)
+    }
+}
+
+impl<T: GoomFloat> std::ops::Neg for Goom<T> {
+    type Output = Self;
+    fn neg(self) -> Self {
+        Goom::neg(self)
+    }
+}
+
+/// Signed log-sum-exp over a slice of GOOMs: the reduction behind dot
+/// products and LMME (paper eq. 9). Single pass for the max, single pass for
+/// the scaled sum; exact-cancellation aware.
+pub fn signed_lse<T: GoomFloat>(xs: &[Goom<T>]) -> Goom<T> {
+    let mut m = T::NEG_INFINITY;
+    for x in xs {
+        if x.logmag > m {
+            m = x.logmag;
+        }
+    }
+    if m == T::NEG_INFINITY {
+        return Goom::zero();
+    }
+    let mut acc = T::ZERO;
+    for x in xs {
+        if !x.is_zero() {
+            acc = acc + x.sign * (x.logmag - m).exp();
+        }
+    }
+    if acc == T::ZERO {
+        return Goom::zero();
+    }
+    Goom { logmag: m + acc.abs().ln(), sign: if acc < T::ZERO { -T::ONE } else { T::ONE } }
+}
+
+/// Dot product of two GOOM vectors (paper Example 2 with signs).
+pub fn goom_dot<T: GoomFloat>(a: &[Goom<T>], b: &[Goom<T>]) -> Goom<T> {
+    assert_eq!(a.len(), b.len());
+    let prods: Vec<Goom<T>> = a.iter().zip(b.iter()).map(|(&x, &y)| x.mul(y)).collect();
+    signed_lse(&prods)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+    use crate::util::prop::{self, close, Config};
+
+    type G64 = Goom<f64>;
+    type G32 = Goom<f32>;
+
+    #[test]
+    fn roundtrip_representable_values() {
+        for &x in &[0.0, 1.0, -1.0, 3.5, -2.25e10, 1e-30, -7e-15, 20.0855] {
+            let g = G64::from_real(x);
+            close(g.to_f64(), x, 1e-14, 1e-300).unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_is_positive_by_convention() {
+        let z = G64::from_real(0.0);
+        assert!(z.is_zero());
+        assert!(!z.is_negative());
+        assert_eq!(z.sign, 1.0);
+        // -0.0 also maps to the canonical zero
+        let nz = G64::from_real(-0.0);
+        assert!(nz.is_zero());
+        assert_eq!(nz.sign, 1.0);
+    }
+
+    #[test]
+    fn paper_example_exp3() {
+        // The paper: 3 + 2πi and 3 + 4πi both represent exp(3) ≈ 20.0855.
+        // In our encoding both are (logmag=3, sign=+1).
+        let g = G64::from_logmag(3.0);
+        close(g.to_f64(), 20.085536923187668, 1e-14, 0.0).unwrap();
+    }
+
+    #[test]
+    fn mul_is_real_mul() {
+        let a = G64::from_real(-3.0);
+        let b = G64::from_real(4.0);
+        close(a.mul(b).to_f64(), -12.0, 1e-14, 0.0).unwrap();
+        close(a.mul(a).to_f64(), 9.0, 1e-14, 0.0).unwrap();
+        assert!(a.mul(G64::zero()).is_zero());
+    }
+
+    #[test]
+    fn add_is_real_add_including_signs() {
+        let cases = [
+            (2.0, 3.0),
+            (-2.0, 3.0),
+            (2.0, -3.0),
+            (-2.0, -3.0),
+            (1e-20, 1.0),
+            (1e20, -1e20), // exact cancellation at equal magnitude
+            (0.0, 5.0),
+            (5.0, 0.0),
+        ];
+        for &(x, y) in &cases {
+            let g = G64::from_real(x).add(G64::from_real(y));
+            close(g.to_f64(), x + y, 1e-12, 1e-300).unwrap();
+        }
+    }
+
+    #[test]
+    fn add_beyond_float_range() {
+        // exp(1000) + exp(1000) = 2·exp(1000): logmag = 1000 + ln 2.
+        let a = G64::from_logmag(1000.0);
+        let s = a.add(a);
+        close(s.logmag, 1000.0 + std::f64::consts::LN_2, 1e-14, 0.0).unwrap();
+        // Paper's Example 2 anchor: exp(1000)·exp(1000) has logmag 2000.
+        close(a.mul(a).logmag, 2000.0, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn sub_and_cancellation() {
+        let a = G64::from_real(5.0);
+        let b = G64::from_real(5.0);
+        assert!(a.sub(b).is_zero());
+        close(a.sub(G64::from_real(2.0)).to_f64(), 3.0, 1e-13, 0.0).unwrap();
+    }
+
+    #[test]
+    fn recip_and_div() {
+        let a = G64::from_real(-4.0);
+        close(a.recip().to_f64(), -0.25, 1e-14, 0.0).unwrap();
+        close(a.div(G64::from_real(8.0)).to_f64(), -0.5, 1e-14, 0.0).unwrap();
+        // 1/0 = infinite GOOM
+        assert_eq!(G64::zero().recip().logmag, f64::INFINITY);
+    }
+
+    #[test]
+    fn powers_and_roots() {
+        let a = G64::from_real(-2.0);
+        close(a.powi(3).to_f64(), -8.0, 1e-13, 0.0).unwrap();
+        close(a.powi(2).to_f64(), 4.0, 1e-13, 0.0).unwrap();
+        close(a.powi(0).to_f64(), 1.0, 0.0, 0.0).unwrap();
+        close(G64::from_real(9.0).sqrt().to_f64(), 3.0, 1e-14, 0.0).unwrap();
+        assert!(G64::from_real(-9.0).sqrt().is_nan());
+        close(a.square().to_f64(), 4.0, 1e-13, 0.0).unwrap();
+        assert!(!a.square().is_negative());
+    }
+
+    #[test]
+    fn huge_powers_stay_representable() {
+        // (1e300)^1000 overflows f64 catastrophically; as a GOOM it's just
+        // logmag = 1000·ln(1e300) ≈ 690775.
+        let a = G64::from_real(1e300);
+        let p = a.powi(1000);
+        assert!(p.is_finite());
+        close(p.logmag, 1000.0 * 1e300f64.ln(), 1e-10, 0.0).unwrap();
+    }
+
+    #[test]
+    fn ordering_matches_reals() {
+        let vals = [-1e10, -2.0, -1e-5, 0.0, 1e-8, 1.0, 3e7];
+        for &x in &vals {
+            for &y in &vals {
+                let gx = G64::from_real(x);
+                let gy = G64::from_real(y);
+                assert_eq!(
+                    gx.cmp_real(gy),
+                    x.partial_cmp(&y).unwrap(),
+                    "ordering mismatch for {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signed_lse_matches_sum() {
+        let xs: Vec<G64> = [1.5, -2.5, 3.0, -0.25, 10.0].iter().map(|&x| G64::from_real(x)).collect();
+        close(signed_lse(&xs).to_f64(), 11.75, 1e-12, 0.0).unwrap();
+        // all zeros
+        assert!(signed_lse(&[G64::zero(), G64::zero()]).is_zero());
+        // empty
+        assert!(signed_lse::<f64>(&[]).is_zero());
+    }
+
+    #[test]
+    fn dot_product_paper_example() {
+        // a_j = b_j = exp(1000): dot of length-3 vectors = 3·exp(2000).
+        let a = vec![G64::from_logmag(1000.0); 3];
+        let d = goom_dot(&a, &a);
+        close(d.logmag, 2000.0 + 3f64.ln(), 1e-12, 0.0).unwrap();
+        assert!(!d.is_negative());
+    }
+
+    #[test]
+    fn f32_goom_covers_complex64_range() {
+        // Representable far beyond f32's exp(±88).
+        let g = G32::from_logmag(1e37);
+        assert!(g.is_finite());
+        let sq = g.mul(g);
+        assert!((sq.logmag - 2e37).abs() < 1e31);
+    }
+
+    #[test]
+    fn property_field_ops_match_f64() {
+        prop::check(
+            Config { cases: 400, seed: 0x600D_600D },
+            "goom-ops-match-f64",
+            |rng, scale| {
+                let mag = 30.0 * scale;
+                let x = rng.uniform(-1.0, 1.0) * mag.exp();
+                let y = rng.uniform(-1.0, 1.0) * mag.exp();
+                (x, y)
+            },
+            |&(x, y)| {
+                let gx = G64::from_real(x);
+                let gy = G64::from_real(y);
+                close(gx.add(gy).to_f64(), x + y, 1e-10, 1e-290)?;
+                close(gx.mul(gy).to_f64(), x * y, 1e-12, 1e-290)?;
+                close(gx.sub(gy).to_f64(), x - y, 1e-10, 1e-290)?;
+                if y != 0.0 {
+                    close(gx.div(gy).to_f64(), x / y, 1e-12, 1e-290)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_mul_associative_commutative() {
+        prop::check(
+            Config { cases: 300, seed: 77 },
+            "goom-mul-laws",
+            |rng, scale| {
+                let m = 1e5 * scale;
+                (
+                    G64::raw(rng.uniform(-m, m), if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }),
+                    G64::raw(rng.uniform(-m, m), if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }),
+                    G64::raw(rng.uniform(-m, m), if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }),
+                )
+            },
+            |&(a, b, c)| {
+                let ab_c = a.mul(b).mul(c);
+                let a_bc = a.mul(b.mul(c));
+                close(ab_c.logmag, a_bc.logmag, 1e-12, 1e-12)?;
+                if ab_c.sign != a_bc.sign {
+                    return Err("sign assoc".into());
+                }
+                let ab = a.mul(b);
+                let ba = b.mul(a);
+                close(ab.logmag, ba.logmag, 0.0, 0.0)?;
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,251 @@
+//! Prefix scans over associative operators (Blelloch 1990).
+//!
+//! The paper computes linear recurrences `S_t = A_t · S_{t-1}` in parallel
+//! by scanning the associative operator `compose(earlier, later) = later ∘
+//! earlier` over the transition elements. We provide:
+//!
+//! * [`scan_seq`] — the sequential inclusive scan (the baseline).
+//! * [`scan_par`] — the classic three-phase chunked parallel scan (scan
+//!   chunks independently, scan the chunk totals, fix up). Work O(2n), span
+//!   O(n/P + P). Runs on `std::thread::scope` — on this 1-core container
+//!   the *structure* is exercised while wall-clock parallelism is modeled by
+//!   [`ScanCost`].
+//! * [`ScanCost`] — work/span accounting used by the Fig. 3 bench to report
+//!   Brent-style modeled times for a P-way device alongside measured
+//!   1-core times.
+//!
+//! Convention: `combine(earlier, later)` composes two adjacent segments,
+//! earlier first. For matrix recurrences `combine(x, y) = y · x` (apply x,
+//! then y).
+
+/// Sequential inclusive scan: `out[t] = combine(out[t-1], items[t])`.
+pub fn scan_seq<T: Clone>(items: &[T], combine: &(dyn Fn(&T, &T) -> T + Sync)) -> Vec<T> {
+    let mut out = Vec::with_capacity(items.len());
+    for (t, item) in items.iter().enumerate() {
+        if t == 0 {
+            out.push(item.clone());
+        } else {
+            let prev = &out[t - 1];
+            out.push(combine(prev, item));
+        }
+    }
+    out
+}
+
+/// Three-phase chunked parallel inclusive scan over `threads` workers.
+///
+/// Phase 1: each worker scans its chunk independently (parallel).
+/// Phase 2: exclusive scan of the chunk totals (sequential, length `threads`).
+/// Phase 3: each worker combines its chunk prefix into its outputs (parallel).
+pub fn scan_par<T: Clone + Send + Sync>(
+    items: &[T],
+    combine: &(dyn Fn(&T, &T) -> T + Sync),
+    threads: usize,
+) -> Vec<T> {
+    scan_par_chunked(items, combine, threads, threads)
+}
+
+/// [`scan_par`] with the chunk count decoupled from the worker count.
+///
+/// `chunks` models the device's parallel lanes (a GPU scan has thousands);
+/// the combine structure — and therefore WHERE selective resets can fire in
+/// a reset scan — follows the chunk boundaries, while only `threads` OS
+/// threads do the work. The Lyapunov pipeline uses many chunks on this
+/// 1-core box to reproduce the paper's reset cadence.
+pub fn scan_par_chunked<T: Clone + Send + Sync>(
+    items: &[T],
+    combine: &(dyn Fn(&T, &T) -> T + Sync),
+    chunks_wanted: usize,
+    threads: usize,
+) -> Vec<T> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let nchunks = chunks_wanted.max(1).min(n);
+    if nchunks == 1 {
+        return scan_seq(items, combine);
+    }
+    let threads = threads.max(1).min(nchunks);
+    let chunk = n.div_ceil(nchunks);
+    let nchunks = n.div_ceil(chunk);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(nchunks);
+    // Phase 1 — per-chunk scans, `threads` workers striding over chunks.
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..threads {
+            handles.push(scope.spawn(move || {
+                let mut out: Vec<(usize, Vec<T>)> = Vec::new();
+                let mut c = w;
+                while c * chunk < n {
+                    let lo = c * chunk;
+                    let hi = ((c + 1) * chunk).min(n);
+                    out.push((c, scan_seq(&items[lo..hi], combine)));
+                    c += threads;
+                }
+                out
+            }));
+        }
+        let mut collected: Vec<(usize, Vec<T>)> = Vec::new();
+        for h in handles {
+            collected.extend(h.join().expect("scan worker panicked"));
+        }
+        collected.sort_by_key(|(c, _)| *c);
+        chunks.extend(collected.into_iter().map(|(_, v)| v));
+    });
+    // Phase 2 — sequential scan of chunk totals → per-chunk prefixes.
+    let mut prefixes: Vec<Option<T>> = vec![None; chunks.len()];
+    let mut acc: Option<T> = None;
+    for (c, ch) in chunks.iter().enumerate() {
+        prefixes[c] = acc.clone();
+        let total = ch.last().expect("non-empty chunk");
+        acc = Some(match &acc {
+            None => total.clone(),
+            Some(a) => combine(a, total),
+        });
+    }
+    // Phase 3 — parallel fix-up (`threads` workers striding over chunks).
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let work: Vec<(&mut Vec<T>, &Option<T>)> =
+            chunks.iter_mut().zip(prefixes.iter()).collect();
+        let mut per_worker: Vec<Vec<(&mut Vec<T>, &Option<T>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, item) in work.into_iter().enumerate() {
+            per_worker[i % threads].push(item);
+        }
+        for batch in per_worker {
+            handles.push(scope.spawn(move || {
+                for (ch, prefix) in batch {
+                    if let Some(p) = prefix {
+                        for x in ch.iter_mut() {
+                            // out = combine(prefix, local): prefix is earlier.
+                            *x = combine(p, x);
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("fixup worker panicked");
+        }
+    });
+    chunks.concat()
+}
+
+/// Work/span accounting for the parallel-device cost model used by the
+/// Fig. 3 bench (the container has 1 physical core, so measured wall-clock
+/// cannot show device parallelism; this model makes the claimed scaling
+/// explicit and auditable).
+#[derive(Debug, Clone, Copy)]
+pub struct ScanCost {
+    /// Total number of `combine` applications.
+    pub work: usize,
+    /// Longest dependency chain of `combine` applications.
+    pub span: usize,
+}
+
+impl ScanCost {
+    /// Sequential inclusive scan of n elements: n-1 combines, all chained.
+    pub fn sequential(n: usize) -> ScanCost {
+        let w = n.saturating_sub(1);
+        ScanCost { work: w, span: w }
+    }
+
+    /// Work-efficient parallel scan (Blelloch up/down sweep) of n elements:
+    /// work ≈ 2n, span = 2·ceil(log2 n).
+    pub fn parallel(n: usize) -> ScanCost {
+        if n <= 1 {
+            return ScanCost { work: 0, span: 0 };
+        }
+        let log2 = usize::BITS as usize - (n - 1).leading_zeros() as usize;
+        ScanCost { work: 2 * n, span: 2 * log2 }
+    }
+
+    /// Brent's bound: time on P processors ≈ work/P + span, in units of one
+    /// combine application.
+    pub fn brent_time(&self, p: usize, sec_per_op: f64) -> f64 {
+        (self.work as f64 / p as f64 + self.span as f64) * sec_per_op
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goom::{lmme, GoomMat};
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn seq_scan_sums() {
+        let items = vec![1i64, 2, 3, 4, 5];
+        let out = scan_seq(&items, &|a, b| a + b);
+        assert_eq!(out, vec![1, 3, 6, 10, 15]);
+    }
+
+    #[test]
+    fn par_scan_matches_seq_for_sums() {
+        let items: Vec<i64> = (1..=1000).collect();
+        let seq = scan_seq(&items, &|a, b| a + b);
+        for threads in [1, 2, 3, 4, 7, 16] {
+            let par = scan_par(&items, &|a, b| a + b, threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_scan_noncommutative_strings() {
+        // String concatenation is associative but NOT commutative — catches
+        // argument-order bugs in the fix-up phase.
+        let items: Vec<String> = (0..37).map(|i| format!("{i},")).collect();
+        let combine = |a: &String, b: &String| format!("{a}{b}");
+        let seq = scan_seq(&items, &combine);
+        let par = scan_par(&items, &combine, 5);
+        assert_eq!(par, seq);
+        assert!(seq.last().unwrap().starts_with("0,1,2,"));
+    }
+
+    #[test]
+    fn par_scan_matrix_chain_matches_seq() {
+        // The actual use: S_t = A_t · S_{t-1} over GOOMs.
+        let mut rng = rng_from_seed(50);
+        let items: Vec<GoomMat<f64>> =
+            (0..33).map(|_| GoomMat::randn(4, 4, &mut rng)).collect();
+        let combine =
+            |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+        let seq = scan_seq(&items, &combine);
+        let par = scan_par(&items, &combine, 4);
+        for (s, p) in seq.iter().zip(par.iter()) {
+            for i in 0..s.logmag.len() {
+                let (a, b) = (s.logmag[i], p.logmag[i]);
+                if a == f64::NEG_INFINITY && b == f64::NEG_INFINITY {
+                    continue;
+                }
+                assert!(
+                    (a - b).abs() <= 1e-9 * a.abs().max(1.0),
+                    "logmag[{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<i64> = vec![];
+        assert!(scan_par(&empty, &|a, b| a + b, 4).is_empty());
+        assert_eq!(scan_par(&[42i64], &|a, b| a + b, 4), vec![42]);
+    }
+
+    #[test]
+    fn cost_model_shapes() {
+        let seq = ScanCost::sequential(1024);
+        let par = ScanCost::parallel(1024);
+        assert_eq!(seq.work, 1023);
+        assert_eq!(seq.span, 1023);
+        assert_eq!(par.work, 2048);
+        assert_eq!(par.span, 20); // 2·log2(1024)
+        // With enough processors the parallel span wins by ~n/log n.
+        let t_seq = seq.brent_time(1, 1.0);
+        let t_par = par.brent_time(1 << 14, 1.0);
+        assert!(t_seq / t_par > 40.0, "speedup {}", t_seq / t_par);
+    }
+}

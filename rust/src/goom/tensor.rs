@@ -1,0 +1,357 @@
+//! `GoomMat`: a dense matrix of GOOMs stored as two planar buffers
+//! (logmag, sign) — the structure-of-arrays layout the LMME hot path and
+//! the PJRT runtime both want.
+
+use super::float::GoomFloat;
+use super::scalar::Goom;
+use crate::linalg::Mat;
+use crate::rng::{Normal, Rng};
+
+/// Dense row-major matrix of GOOMs with planar (logmag, sign) storage.
+#[derive(Clone, PartialEq)]
+pub struct GoomMat<T: GoomFloat> {
+    pub rows: usize,
+    pub cols: usize,
+    pub logmag: Vec<T>,
+    pub sign: Vec<T>,
+}
+
+impl<T: GoomFloat> std::fmt::Debug for GoomMat<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "GoomMat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(6) {
+                let g = self.get(r, c);
+                let s = if g.sign < T::ZERO { '-' } else { '+' };
+                write!(f, "{s}e^{:<12.4} ", g.logmag)?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl<T: GoomFloat> GoomMat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            logmag: vec![T::NEG_INFINITY; rows * cols],
+            sign: vec![T::ONE; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, Goom::one());
+        }
+        m
+    }
+
+    /// Log-map a real matrix into GOOM space (paper eq. 4, elementwise).
+    pub fn from_mat(m: &Mat) -> Self {
+        let mut out = Self::zeros(m.rows, m.cols);
+        for (i, &x) in m.data.iter().enumerate() {
+            let g = Goom::<T>::from_f64(x);
+            out.logmag[i] = g.logmag;
+            out.sign[i] = g.sign;
+        }
+        out
+    }
+
+    /// Sample a matrix of GOOMs representing i.i.d. N(0,1) reals — the
+    /// paper's `A'_t ~ log N(0,1)^{d×d}` (eq. 15): sample in ℝ, log-map.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut normal = Normal::standard();
+        let mut out = Self::zeros(rows, cols);
+        for i in 0..rows * cols {
+            let g = Goom::<T>::from_f64(normal.sample(rng));
+            out.logmag[i] = g.logmag;
+            out.sign[i] = g.sign;
+        }
+        out
+    }
+
+    /// Exponentiate back to a real matrix (paper eq. 7). Overflows to ±inf
+    /// if magnitudes exceed f64 — callers needing safety use
+    /// `to_mat_scaled`.
+    pub fn to_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.logmag.len() {
+            m.data[i] = self.sign[i].to_f64() * self.logmag[i].to_f64().exp();
+        }
+        m
+    }
+
+    /// Log-scale then exponentiate (paper eq. 27): returns
+    /// `(exp(X' - c), c)` with `c = max logmag`, so the returned real matrix
+    /// has entries in [-1, 1] regardless of the GOOMs' magnitudes.
+    pub fn to_mat_scaled(&self) -> (Mat, f64) {
+        let c = self
+            .logmag
+            .iter()
+            .fold(T::NEG_INFINITY, |acc, &x| acc.max(x))
+            .to_f64();
+        if c == f64::NEG_INFINITY {
+            return (Mat::zeros(self.rows, self.cols), 0.0);
+        }
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.logmag.len() {
+            m.data[i] = self.sign[i].to_f64() * (self.logmag[i].to_f64() - c).exp();
+        }
+        (m, c)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> Goom<T> {
+        let i = r * self.cols + c;
+        Goom::raw(self.logmag[i], self.sign[i])
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, g: Goom<T>) {
+        let i = r * self.cols + c;
+        self.logmag[i] = g.logmag;
+        self.sign[i] = g.sign;
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut t = Self::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    /// Largest logmag in the matrix — the chain experiment's growth trace.
+    pub fn max_logmag(&self) -> T {
+        self.logmag.iter().fold(T::NEG_INFINITY, |acc, &x| acc.max(x))
+    }
+
+    /// True if every entry is the GOOM zero (logmag = -inf).
+    pub fn is_zero_matrix(&self) -> bool {
+        self.logmag.iter().all(|&l| l == T::NEG_INFINITY)
+    }
+
+    /// Any NaN logmag or non-±1 sign ⇒ the computation has failed.
+    pub fn has_nan(&self) -> bool {
+        self.logmag.iter().any(|x| x.is_nan())
+            || self.sign.iter().any(|s| !(*s == T::ONE || *s == -T::ONE))
+    }
+
+    /// Elementwise real-scale by exp(c): adds c to every logmag. Used for
+    /// the log-unit-norm rescaling in the Lyapunov pipeline.
+    pub fn scale_logmag(&self, c: T) -> Self {
+        let mut out = self.clone();
+        for x in out.logmag.iter_mut() {
+            *x = *x + c;
+        }
+        out
+    }
+
+    /// Log of the Frobenius norm, computed entirely in log space:
+    /// 0.5 · LSE(2·logmag).
+    pub fn log_frobenius_norm(&self) -> T {
+        let m = self.max_logmag();
+        if m == T::NEG_INFINITY {
+            return T::NEG_INFINITY;
+        }
+        let mut acc = T::ZERO;
+        for &l in &self.logmag {
+            if l != T::NEG_INFINITY {
+                let d = l - m;
+                acc = acc + (d + d).exp();
+            }
+        }
+        m + acc.ln() * T::from_f64(0.5)
+    }
+
+    /// Log-norm of column `c`: 0.5 · LSE(2·logmag of the column).
+    pub fn col_log_norm(&self, c: usize) -> T {
+        let mut m = T::NEG_INFINITY;
+        for r in 0..self.rows {
+            m = m.max(self.logmag[r * self.cols + c]);
+        }
+        if m == T::NEG_INFINITY {
+            return T::NEG_INFINITY;
+        }
+        let mut acc = T::ZERO;
+        for r in 0..self.rows {
+            let l = self.logmag[r * self.cols + c];
+            if l != T::NEG_INFINITY {
+                let d = l - m;
+                acc = acc + (d + d).exp();
+            }
+        }
+        m + acc.ln() * T::from_f64(0.5)
+    }
+
+    /// Normalize every column to log-unit norm (subtract its log-norm) —
+    /// paper §4.2.1(a)/(b): "log-scale them to log-unit norms".
+    pub fn normalize_cols_log(&self) -> Self {
+        let mut out = self.clone();
+        for c in 0..self.cols {
+            let ln = self.col_log_norm(c);
+            if ln == T::NEG_INFINITY {
+                continue;
+            }
+            for r in 0..self.rows {
+                let i = r * self.cols + c;
+                out.logmag[i] = out.logmag[i] - ln;
+            }
+        }
+        out
+    }
+
+    /// Cosine similarity between columns i and j computed stably in log
+    /// space (sign-aware LSE for the dot product, log-norms for the
+    /// denominators). Returns a plain f64 in [-1, 1].
+    pub fn col_cosine(&self, i: usize, j: usize) -> f64 {
+        // dot = Σ_r x_ri · x_rj, accumulated as signed LSE.
+        let mut m = T::NEG_INFINITY;
+        for r in 0..self.rows {
+            let l = self.logmag[r * self.cols + i] + self.logmag[r * self.cols + j];
+            m = m.max(l);
+        }
+        if m == T::NEG_INFINITY {
+            return 0.0;
+        }
+        let mut acc = T::ZERO;
+        for r in 0..self.rows {
+            let l = self.logmag[r * self.cols + i] + self.logmag[r * self.cols + j];
+            if l != T::NEG_INFINITY {
+                let s = self.sign[r * self.cols + i] * self.sign[r * self.cols + j];
+                acc = acc + s * (l - m).exp();
+            }
+        }
+        if acc == T::ZERO {
+            return 0.0;
+        }
+        let log_dot = m + acc.abs().ln();
+        let log_cos = log_dot - self.col_log_norm(i) - self.col_log_norm(j);
+        let cos = acc.to_f64().signum() * log_cos.to_f64().exp();
+        cos.clamp(-1.0, 1.0)
+    }
+
+    /// Max |cosine| over all column pairs — the selective-reset trigger.
+    pub fn max_pairwise_col_cosine(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..self.cols {
+            for j in (i + 1)..self.cols {
+                worst = worst.max(self.col_cosine(i, j).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::rng::rng_from_seed;
+    use crate::util::prop::close;
+
+    #[test]
+    fn roundtrip_mat() {
+        let mut rng = rng_from_seed(30);
+        let m = Mat::randn(5, 7, &mut rng);
+        let g = GoomMat::<f64>::from_mat(&m);
+        let back = g.to_mat();
+        for (x, y) in back.data.iter().zip(&m.data) {
+            close(*x, *y, 1e-14, 1e-300).unwrap();
+        }
+    }
+
+    #[test]
+    fn scaled_export_bounds_entries() {
+        let mut g = GoomMat::<f64>::zeros(2, 2);
+        g.set(0, 0, Goom::from_logmag(5000.0));
+        g.set(1, 1, Goom::raw(4990.0, -1.0));
+        let (m, c) = g.to_mat_scaled();
+        assert_eq!(c, 5000.0);
+        assert!((m[(0, 0)] - 1.0).abs() < 1e-15);
+        assert!(m.max_abs() <= 1.0);
+        assert!(m[(1, 1)] < 0.0);
+    }
+
+    #[test]
+    fn log_frobenius_matches_real_for_small() {
+        let mut rng = rng_from_seed(31);
+        let m = Mat::randn(6, 6, &mut rng);
+        let g = GoomMat::<f64>::from_mat(&m);
+        close(g.log_frobenius_norm(), m.frobenius_norm().ln(), 1e-12, 0.0).unwrap();
+    }
+
+    #[test]
+    fn log_frobenius_beyond_float_range() {
+        // Two entries exp(1000) each: ‖·‖_F = sqrt(2)·exp(1000).
+        let mut g = GoomMat::<f64>::zeros(1, 2);
+        g.set(0, 0, Goom::from_logmag(1000.0));
+        g.set(0, 1, Goom::from_logmag(1000.0));
+        close(g.log_frobenius_norm(), 1000.0 + 0.5 * 2f64.ln(), 1e-12, 0.0).unwrap();
+    }
+
+    #[test]
+    fn col_norm_and_normalization() {
+        let m = Mat::from_rows(&[&[3.0, 1.0], &[4.0, 0.0]]);
+        let g = GoomMat::<f64>::from_mat(&m);
+        close(g.col_log_norm(0), 5f64.ln(), 1e-13, 0.0).unwrap();
+        let n = g.normalize_cols_log();
+        close(n.col_log_norm(0), 0.0, 1e-12, 1e-12).unwrap();
+        close(n.col_log_norm(1), 0.0, 1e-12, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn col_cosine_matches_real() {
+        let mut rng = rng_from_seed(32);
+        let m = Mat::randn(8, 4, &mut rng);
+        let g = GoomMat::<f64>::from_mat(&m);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    continue;
+                }
+                let real = linalg::cosine_similarity(&m.col(i), &m.col(j));
+                close(g.col_cosine(i, j), real, 1e-10, 1e-12).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn col_cosine_at_huge_magnitudes() {
+        // Two colinear columns scaled to exp(2000) vs exp(-2000): cosine
+        // must still read ±1 even though the reals are unrepresentable.
+        let mut g = GoomMat::<f64>::zeros(2, 2);
+        g.set(0, 0, Goom::raw(2000.0, 1.0));
+        g.set(1, 0, Goom::raw(1999.0, 1.0));
+        g.set(0, 1, Goom::raw(-2000.0, 1.0));
+        g.set(1, 1, Goom::raw(-2001.0, 1.0));
+        assert!(g.col_cosine(0, 1) > 0.999);
+        assert!((g.max_pairwise_col_cosine() - g.col_cosine(0, 1).abs()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = GoomMat::<f32>::eye(3);
+        assert_eq!(i.get(0, 0).to_f64(), 1.0);
+        assert!(i.get(0, 1).is_zero());
+        let t = i.transpose();
+        assert_eq!(t, i);
+    }
+
+    #[test]
+    fn nan_detection() {
+        let mut g = GoomMat::<f64>::zeros(2, 2);
+        assert!(!g.has_nan());
+        g.logmag[1] = f64::NAN;
+        assert!(g.has_nan());
+        g.logmag[1] = 0.0;
+        g.sign[2] = 0.5; // invalid sign
+        assert!(g.has_nan());
+    }
+}

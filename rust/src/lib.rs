@@ -1,0 +1,32 @@
+//! # goomrs — Generalized Orders of Magnitude
+//!
+//! A Rust + JAX + Pallas reproduction of *"Generalized Orders of Magnitude
+//! for Scalable, Parallel, High-Dynamic-Range Computation"* (Heinsen &
+//! Kozachkov, 2025).
+//!
+//! The library represents real numbers as `(logmag, sign)` pairs — the
+//! explicit form of the paper's complex-typed GOOMs — and provides:
+//!
+//! * [`goom`] — scalar and matrix GOOM arithmetic, LMME (log-matmul-exp),
+//!   prefix scans, and the selective-resetting scan.
+//! * [`linalg`], [`rng`], [`util`] — dependency-free substrates.
+//! * [`dynsys`] — a library of chaotic dynamical systems with analytic
+//!   Jacobians (the Gilpin-dataset substitute).
+//! * [`lyapunov`] — sequential baselines and the paper's parallel
+//!   Lyapunov-spectrum / largest-exponent estimators.
+//! * [`chain`] — the Fig. 1 long-matrix-product-chain experiment.
+//! * [`runtime`] — PJRT engine that loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text) and executes them natively.
+//! * [`rnn`] — the training driver for the paper's §4.3 GOOM-SSM RNN.
+//! * [`coordinator`] — experiment registry, config, metrics, launcher.
+
+pub mod chain;
+pub mod coordinator;
+pub mod dynsys;
+pub mod goom;
+pub mod linalg;
+pub mod lyapunov;
+pub mod rng;
+pub mod rnn;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,319 @@
+//! Dense row-major f64 matrix substrate.
+//!
+//! Deliberately small: just what the Lyapunov pipeline, the chain
+//! experiment, and the GOOM reference paths need (construction, arithmetic,
+//! matmul, norms, transposes, similarity measures).
+
+use crate::rng::{Normal, Rng};
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:>12.5e} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Matrix with i.i.d. N(mean, std²) entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut normal = Normal::standard();
+        let data = normal.sample_vec(rng, rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self[(r, c)] = v[r];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product, blocked over the inner dimension for cache locality.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        // i-k-j loop order: streams `other` rows and `out` rows linearly.
+        for i in 0..n {
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * m..(kk + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(v.iter()).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |acc, x| acc.max(x.abs()))
+    }
+
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, other: &Mat) -> Mat {
+        self.matmul(other)
+    }
+}
+
+/// Euclidean norm of a vector.
+pub fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+/// Cosine similarity; 0 if either vector is ~zero.
+pub fn cosine_similarity(a: &[f64], b: &[f64]) -> f64 {
+    let (na, nb) = (norm(a), norm(b));
+    if na < 1e-300 || nb < 1e-300 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// Max |cosine similarity| over all column pairs — the colinearity measure
+/// the paper's selective-resetting trigger uses (§4.2.1(a)).
+pub fn max_pairwise_col_cosine(m: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..m.cols {
+        let ci = m.col(i);
+        for j in (i + 1)..m.cols {
+            let cj = m.col(j);
+            worst = worst.max(cosine_similarity(&ci, &cj).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = rng_from_seed(5);
+        let a = Mat::randn(7, 7, &mut rng);
+        let i = Mat::eye(7);
+        let prod = a.matmul(&i);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn matmul_associative() {
+        let mut rng = rng_from_seed(6);
+        let a = Mat::randn(4, 5, &mut rng);
+        let b = Mat::randn(5, 6, &mut rng);
+        let c = Mat::randn(6, 3, &mut rng);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        for (x, y) in left.data.iter().zip(&right.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = rng_from_seed(7);
+        let a = Mat::randn(3, 8, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = rng_from_seed(8);
+        let a = Mat::randn(5, 4, &mut rng);
+        let v: Vec<f64> = (0..4).map(|i| i as f64 + 0.5).collect();
+        let via_vec = a.matvec(&v);
+        let vm = Mat::from_vec(4, 1, v.clone());
+        let via_mat = a.matmul(&vm);
+        for (x, y) in via_vec.iter().zip(&via_mat.data) {
+            assert!((x - y).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn cosine_of_parallel_and_orthogonal() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-15);
+        assert!(cosine_similarity(&[1.0, 0.0], &[0.0, 3.0]).abs() < 1e-15);
+        assert!((cosine_similarity(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-15);
+        assert_eq!(cosine_similarity(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn pairwise_cosine_detects_colinearity() {
+        let near = Mat::from_rows(&[&[1.0, 1.0001], &[1.0, 0.9999]]);
+        assert!(max_pairwise_col_cosine(&near) > 0.999);
+        let orth = Mat::eye(3);
+        assert!(max_pairwise_col_cosine(&orth) < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let m = Mat::from_rows(&[&[3.0], &[4.0]]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let mut m = Mat::zeros(2, 2);
+        assert!(!m.has_non_finite());
+        m[(0, 1)] = f64::INFINITY;
+        assert!(m.has_non_finite());
+        m[(0, 1)] = f64::NAN;
+        assert!(m.has_non_finite());
+    }
+}

@@ -1,0 +1,62 @@
+//! Dense linear-algebra substrate: matrices, QR decompositions, and the
+//! finite-difference Jacobian checker used to validate `dynsys` analytics.
+
+mod mat;
+mod qr;
+
+pub use mat::{cosine_similarity, dot, max_pairwise_col_cosine, norm, Mat};
+pub use qr::{orthonormality_defect, qr_householder, qr_mgs};
+
+/// Central finite-difference Jacobian of `f` at `x` (used in tests to
+/// validate every analytic Jacobian in `dynsys`).
+pub fn finite_difference_jacobian(
+    f: &dyn Fn(&[f64]) -> Vec<f64>,
+    x: &[f64],
+    eps: f64,
+) -> Mat {
+    let d_out = f(x).len();
+    let d_in = x.len();
+    let mut jac = Mat::zeros(d_out, d_in);
+    let mut xp = x.to_vec();
+    let mut xm = x.to_vec();
+    for j in 0..d_in {
+        let h = eps * (1.0 + x[j].abs());
+        xp[j] = x[j] + h;
+        xm[j] = x[j] - h;
+        let fp = f(&xp);
+        let fm = f(&xm);
+        for i in 0..d_out {
+            jac[(i, j)] = (fp[i] - fm[i]) / (2.0 * h);
+        }
+        xp[j] = x[j];
+        xm[j] = x[j];
+    }
+    jac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fd_jacobian_of_linear_map_is_the_matrix() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let a2 = a.clone();
+        let f = move |x: &[f64]| a2.matvec(x);
+        let j = finite_difference_jacobian(&f, &[0.3, -0.7], 1e-6);
+        for (x, y) in j.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn fd_jacobian_of_nonlinear_map() {
+        // f(x, y) = (x², xy) => J = [[2x, 0], [y, x]]
+        let f = |x: &[f64]| vec![x[0] * x[0], x[0] * x[1]];
+        let j = finite_difference_jacobian(&f, &[2.0, 3.0], 1e-6);
+        assert!((j[(0, 0)] - 4.0).abs() < 1e-6);
+        assert!(j[(0, 1)].abs() < 1e-6);
+        assert!((j[(1, 0)] - 3.0).abs() < 1e-6);
+        assert!((j[(1, 1)] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,239 @@
+//! QR decompositions: Householder (numerically robust, used by the
+//! sequential Lyapunov baseline) and modified Gram-Schmidt (mirrors the
+//! in-graph jnp implementation used by the AOT spectrum artifact, which must
+//! avoid LAPACK custom-calls).
+//!
+//! Both return the *sign-normalized* thin factorization A = Q·R with
+//! `diag(R) >= 0`, which makes the factorization unique for full-rank A and
+//! keeps the Lyapunov log-diagonals well-defined.
+
+use super::mat::{norm, Mat};
+
+/// Householder QR. Returns (Q, R) with Q: n×m orthonormal columns, R: m×m
+/// upper-triangular with non-negative diagonal, for A: n×m with n >= m.
+pub fn qr_householder(a: &Mat) -> (Mat, Mat) {
+    let (n, m) = (a.rows, a.cols);
+    assert!(n >= m, "qr expects rows >= cols");
+    let mut r = a.clone();
+    // Store the Householder vectors to accumulate Q afterwards.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(m);
+    for k in 0..m {
+        // Build the Householder vector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..n).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * norm(&v);
+        v[0] -= alpha;
+        let vnorm = norm(&v);
+        if vnorm > 1e-300 {
+            for x in v.iter_mut() {
+                *x /= vnorm;
+            }
+            // Apply H = I - 2vvᵀ to the trailing submatrix of R.
+            for j in k..m {
+                let mut s = 0.0;
+                for i in k..n {
+                    s += v[i - k] * r[(i, j)];
+                }
+                s *= 2.0;
+                for i in k..n {
+                    r[(i, j)] -= s * v[i - k];
+                }
+            }
+        } else {
+            v = vec![0.0; n - k]; // degenerate column: identity reflector
+        }
+        vs.push(v);
+    }
+    // Accumulate Q = H_0 H_1 ... H_{m-1} · I_{n×m} by applying reflectors in
+    // reverse to the thin identity.
+    let mut q = Mat::zeros(n, m);
+    for i in 0..m {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..m).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..m {
+            let mut s = 0.0;
+            for i in k..n {
+                s += v[i - k] * q[(i, j)];
+            }
+            s *= 2.0;
+            for i in k..n {
+                q[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+    // Zero R's subdiagonal and truncate to m×m.
+    let mut r_thin = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in i..m {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    sign_normalize(&mut q, &mut r_thin);
+    (q, r_thin)
+}
+
+/// Modified Gram-Schmidt QR (thin). Mirrors `python/compile/lyapunov.py`'s
+/// in-graph QR so rust-side and HLO-side spectra agree bit-for-bit in shape.
+pub fn qr_mgs(a: &Mat) -> (Mat, Mat) {
+    let (n, m) = (a.rows, a.cols);
+    assert!(n >= m, "qr expects rows >= cols");
+    let mut q = a.clone();
+    let mut r = Mat::zeros(m, m);
+    for k in 0..m {
+        let qk = q.col(k);
+        let rkk = norm(&qk);
+        r[(k, k)] = rkk;
+        let inv = if rkk > 1e-300 { 1.0 / rkk } else { 0.0 };
+        for i in 0..n {
+            q[(i, k)] *= inv;
+        }
+        for j in (k + 1)..m {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += q[(i, k)] * q[(i, j)];
+            }
+            r[(k, j)] = s;
+            for i in 0..n {
+                let qik = q[(i, k)];
+                q[(i, j)] -= s * qik;
+            }
+        }
+    }
+    sign_normalize(&mut q, &mut r);
+    (q, r)
+}
+
+/// Flip signs so diag(R) >= 0 (compensating in Q's columns).
+fn sign_normalize(q: &mut Mat, r: &mut Mat) {
+    let m = r.rows;
+    for k in 0..m {
+        if r[(k, k)] < 0.0 {
+            for j in k..m {
+                r[(k, j)] = -r[(k, j)];
+            }
+            for i in 0..q.rows {
+                q[(i, k)] = -q[(i, k)];
+            }
+        }
+    }
+}
+
+/// Orthonormality defect ‖QᵀQ - I‖_F: used in tests and in the Lyapunov
+/// pipeline's self-checks.
+pub fn orthonormality_defect(q: &Mat) -> f64 {
+    let qtq = q.transpose().matmul(q);
+    let mut defect = 0.0;
+    for i in 0..qtq.rows {
+        for j in 0..qtq.cols {
+            let target = if i == j { 1.0 } else { 0.0 };
+            let d = qtq[(i, j)] - target;
+            defect += d * d;
+        }
+    }
+    defect.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+    use crate::util::prop::{self, Config};
+
+    fn check_qr(a: &Mat, q: &Mat, r: &Mat, tol: f64) {
+        // Q orthonormal
+        assert!(orthonormality_defect(q) < tol, "defect {}", orthonormality_defect(q));
+        // R upper triangular with non-negative diagonal
+        for i in 0..r.rows {
+            assert!(r[(i, i)] >= 0.0);
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < tol);
+            }
+        }
+        // QR = A
+        let qr = q.matmul(r);
+        for (x, y) in qr.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn householder_reconstructs() {
+        let mut rng = rng_from_seed(20);
+        for &(n, m) in &[(4usize, 4usize), (8, 8), (10, 6), (32, 32)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let (q, r) = qr_householder(&a);
+            check_qr(&a, &q, &r, 1e-10);
+        }
+    }
+
+    #[test]
+    fn mgs_reconstructs() {
+        let mut rng = rng_from_seed(21);
+        for &(n, m) in &[(4usize, 4usize), (8, 8), (10, 6)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let (q, r) = qr_mgs(&a);
+            check_qr(&a, &q, &r, 1e-9);
+        }
+    }
+
+    #[test]
+    fn householder_and_mgs_agree_on_well_conditioned() {
+        let mut rng = rng_from_seed(22);
+        let a = Mat::randn(6, 6, &mut rng);
+        let (qh, rh) = qr_householder(&a);
+        let (qm, rm) = qr_mgs(&a);
+        // Unique factorization (diag(R) > 0) => factors agree.
+        for (x, y) in rh.data.iter().zip(&rm.data) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+        for (x, y) in qh.data.iter().zip(&qm.data) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency_gracefully() {
+        // Two identical columns: R gets a (near-)zero diagonal entry; Q must
+        // still be finite and QR still reconstructs A.
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let (q, r) = qr_householder(&a);
+        assert!(!q.has_non_finite());
+        let qr = q.matmul(&r);
+        for (x, y) in qr.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn property_qr_invariants() {
+        prop::check(
+            Config { cases: 60, seed: 0xA11CE },
+            "householder-qr-invariants",
+            |rng, scale| {
+                let n = 2 + (rng.next_below(6) as usize);
+                let mag = (scale * 20.0).exp(); // up to ~e^20 magnitudes
+                let mut m = Mat::randn(n, n, rng);
+                m = m.scale(mag);
+                m
+            },
+            |a| {
+                let (q, r) = qr_householder(a);
+                if orthonormality_defect(&q) > 1e-8 {
+                    return Err(format!("Q not orthonormal: {}", orthonormality_defect(&q)));
+                }
+                let qr = q.matmul(&r);
+                let scale = a.max_abs().max(1.0);
+                for (x, y) in qr.data.iter().zip(&a.data) {
+                    if (x - y).abs() > 1e-9 * scale {
+                        return Err(format!("reconstruction {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Lyapunov-exponent estimation (paper §4.2).
+//!
+//! [`sequential`] holds the standard baselines (iterative QR spectrum,
+//! renormalized-vector LLE); [`parallel`] holds the paper's contribution
+//! (prefix-scan estimators over GOOMs with selective resetting);
+//! [`cost`] holds the device model used by the Fig. 3 bench.
+
+pub mod cost;
+pub mod parallel;
+pub mod sequential;
+
+pub use cost::{model_lle, model_spectrum, ModeledTimes, OpCosts};
+pub use parallel::{
+    deviation_states, lle_parallel, spectrum_from_states, spectrum_parallel,
+    system_lle_parallel, system_spectrum_parallel, ParallelOpts,
+};
+pub use sequential::{
+    lle_sequential, spectrum_sequential, system_lle_sequential,
+    system_spectrum_sequential,
+};

@@ -1,0 +1,288 @@
+//! Parallel Lyapunov estimation over GOOMs (paper §4.2).
+//!
+//! * [`spectrum_parallel`] — the paper's §4.2.1 algorithm, groups (a)–(d):
+//!   (a) all deviation states via a selective-reset prefix scan over GOOMs
+//!       (reset = orthonormalize near-colinear states in the same subspace);
+//!   (b) orthonormal bases Q_t by QR of every (log-rescaled) state, batch;
+//!   (c) output states S*_t = J_t · Q_{t-1}, batch;
+//!   (d) Λ = mean over t of ln|diag R_t| from QR of every S*_t, batch.
+//!
+//! * [`lle_parallel`] — the paper's §4.2.2 / eq. 24: one prefix scan of
+//!   LMME over the Jacobian stack applied to u₀, then a single log-norm.
+//!   No normalization anywhere — GOOM dynamic range absorbs the growth.
+//!
+//! Only the scan in (a) has sequential *structure*; (b)–(d) are
+//! embarrassingly parallel over t. On this 1-core container the batch
+//! groups run on a few worker threads; device-level scaling is modeled in
+//! [`super::cost`].
+
+use crate::dynsys::DynamicalSystem;
+use crate::goom::{
+    lmme, reset_scan_par_chunked, scan_par_chunked, GoomMat, ResetPair,
+};
+use crate::linalg::{qr_householder, Mat};
+
+/// Tuning knobs for the parallel spectrum estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelOpts {
+    /// |cosine| threshold above which a state counts as near-colinear and
+    /// is selectively reset (paper §4.2.1(a)).
+    pub colinear_threshold: f64,
+    /// Number of scan chunks (models device lanes; sets the maximum reset
+    /// cadence). 0 = auto: ~one chunk per 1024 steps. Every chunk-local
+    /// reset restarts the Lyapunov alignment transient, so chunks should
+    /// stay well below T — resets are only *needed* when colinearity would
+    /// defeat f64 QR (column ratio ~ 1/eps), which takes hundreds of steps
+    /// for typical λ-gaps.
+    pub chunks: usize,
+    /// OS worker threads.
+    pub threads: usize,
+}
+
+impl Default for ParallelOpts {
+    fn default() -> Self {
+        Self { colinear_threshold: 0.995, chunks: 0, threads: 4 }
+    }
+}
+
+impl ParallelOpts {
+    fn effective_chunks(&self, t: usize) -> usize {
+        if self.chunks > 0 {
+            self.chunks
+        } else {
+            (t / 1024).clamp(4, 64)
+        }
+    }
+}
+
+/// Orthonormalize a GOOM state in its own subspace: log-scale columns to
+/// log-unit norms, exponentiate to floats (now representable), QR, and
+/// log-map Q back (paper §4.2.1(a), the reset function R).
+fn orthonormalize_goom(state: &GoomMat<f64>) -> GoomMat<f64> {
+    let normalized = state.normalize_cols_log();
+    let (real, _) = normalized.to_mat_scaled();
+    let (q, _) = qr_householder(&real);
+    GoomMat::from_mat(&q)
+}
+
+/// Group (a): compute all deviation states S_0..S_{T-1} in parallel via the
+/// selective-reset scan over GOOMs. `jacs` = J_1..J_{T-1} (note: one fewer
+/// than T). Returns the T state matrices (as GOOMs).
+pub fn deviation_states(
+    s0: &Mat,
+    jacs: &[Mat],
+    opts: &ParallelOpts,
+) -> Vec<GoomMat<f64>> {
+    let mut items: Vec<ResetPair<GoomMat<f64>>> =
+        Vec::with_capacity(jacs.len() + 1);
+    items.push(ResetPair::from_transition(GoomMat::from_mat(s0)));
+    items.extend(jacs.iter().map(|j| ResetPair::from_transition(GoomMat::from_mat(j))));
+    let threshold = opts.colinear_threshold;
+    let select = move |m: &GoomMat<f64>| {
+        // Zero transitions (already-reset ranges) never re-fire.
+        !m.is_zero_matrix() && m.max_pairwise_col_cosine() > threshold
+    };
+    let reset = |m: &GoomMat<f64>| orthonormalize_goom(m);
+    let chunks = opts.effective_chunks(items.len());
+    let scanned = reset_scan_par_chunked(&items, &select, &reset, chunks, opts.threads);
+    scanned.into_iter().map(|p| p.state()).collect()
+}
+
+/// Groups (b)+(c)+(d): batch-QR every state, push each Jacobian through its
+/// preceding basis, QR again, and average the log-diagonals.
+pub fn spectrum_from_states(
+    states: &[GoomMat<f64>],
+    jacs: &[Mat],
+    dt: f64,
+    threads: usize,
+) -> Vec<f64> {
+    // states = S_0..S_{T-1}; jacs = J_1..J_T would be ideal, but the caller
+    // passes J_1..J_{T-1} for the scan — here we need J_t for t=1..T where
+    // the LAST state has no following Jacobian, so we consume jacs.len()
+    // pairs: (S_{t-1}, J_t).
+    let t_pairs = jacs.len().min(states.len());
+    let d = states[0].rows;
+    let mut logdiags = vec![vec![0.0f64; d]; t_pairs];
+    let threads = threads.max(1);
+
+    std::thread::scope(|scope| {
+        let chunk = t_pairs.div_ceil(threads);
+        let mut handles = Vec::new();
+        for (w, out_chunk) in logdiags.chunks_mut(chunk).enumerate() {
+            let lo = w * chunk;
+            handles.push(scope.spawn(move || {
+                for (k, out) in out_chunk.iter_mut().enumerate() {
+                    let t = lo + k;
+                    // Group (b): orthonormal basis of the input state.
+                    let (real, _) = states[t].normalize_cols_log().to_mat_scaled();
+                    let (q_prev, _) = qr_householder(&real);
+                    // Group (c): output state S*_{t+1} = J_{t+1} · Q_t.
+                    let s_out = jacs[t].matmul(&q_prev);
+                    // Group (d): log |diag R|.
+                    let (_, r) = qr_householder(&s_out);
+                    for i in 0..d {
+                        out[i] = r[(i, i)].abs().ln();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("spectrum worker panicked");
+        }
+    });
+
+    let mut lam = vec![0.0f64; d];
+    for row in &logdiags {
+        for (l, &v) in lam.iter_mut().zip(row.iter()) {
+            *l += v;
+        }
+    }
+    for l in lam.iter_mut() {
+        *l /= dt * t_pairs as f64;
+    }
+    lam
+}
+
+/// The paper's §4.2.1 parallel full-spectrum algorithm.
+pub fn spectrum_parallel(jacs: &[Mat], dt: f64, opts: &ParallelOpts) -> Vec<f64> {
+    assert!(jacs.len() >= 2);
+    let d = jacs[0].rows;
+    let s0 = Mat::eye(d);
+    // Scan uses J_1..J_{T-1}; the last Jacobian is consumed by group (c).
+    let states = deviation_states(&s0, &jacs[..jacs.len() - 1], opts);
+    spectrum_from_states(&states, jacs, dt, opts.threads)
+}
+
+/// The paper's §4.2.2 parallel LLE (eq. 24): prefix scan of LMME over
+/// (u0, J_1, …, J_T) with NO normalization; LLE = log‖s_T‖ / (Δt·T).
+pub fn lle_parallel(jacs: &[Mat], dt: f64, chunks: usize, threads: usize) -> f64 {
+    assert!(!jacs.is_empty());
+    let d = jacs[0].rows;
+    // Same deterministic start vector as the sequential baseline.
+    let mut u: Vec<f64> = (0..d).map(|i| ((i + 1) as f64).sin()).collect();
+    let n0 = crate::linalg::norm(&u);
+    for x in u.iter_mut() {
+        *x /= n0;
+    }
+    let mut u_mat = Mat::zeros(d, 1);
+    for (i, &v) in u.iter().enumerate() {
+        u_mat[(i, 0)] = v;
+    }
+    // Scan elements: [u0', J'_1, ..., J'_T]; combine = LMME(later, earlier).
+    let mut items: Vec<GoomMat<f64>> = Vec::with_capacity(jacs.len() + 1);
+    items.push(GoomMat::from_mat(&u_mat));
+    items.extend(jacs.iter().map(GoomMat::from_mat));
+    let combine =
+        |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+    let scanned = scan_par_chunked(&items, &combine, chunks, threads);
+    let s_final = scanned.last().unwrap();
+    // log‖s_T‖ = 0.5·LSE(2·logmag) — computed entirely in log space
+    // (paper eq. 24's (1/2)·LSE(2·PSCAN(...)) term).
+    let log_norm = s_final.log_frobenius_norm();
+    log_norm / (dt * jacs.len() as f64)
+}
+
+/// Convenience: parallel spectrum for a named system.
+pub fn system_spectrum_parallel(
+    sys: &dyn DynamicalSystem,
+    burn: usize,
+    steps: usize,
+    opts: &ParallelOpts,
+) -> Vec<f64> {
+    let x0 = crate::dynsys::burn_in(sys, burn);
+    let (jacs, _) = crate::dynsys::jacobian_chain(sys, &x0, steps);
+    spectrum_parallel(&jacs, sys.dt(), opts)
+}
+
+/// Convenience: parallel LLE for a named system.
+pub fn system_lle_parallel(
+    sys: &dyn DynamicalSystem,
+    burn: usize,
+    steps: usize,
+    chunks: usize,
+    threads: usize,
+) -> f64 {
+    let x0 = crate::dynsys::burn_in(sys, burn);
+    let (jacs, _) = crate::dynsys::jacobian_chain(sys, &x0, steps);
+    lle_parallel(&jacs, sys.dt(), chunks, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynsys::{Henon, Logistic, Lorenz, Rossler};
+    use crate::lyapunov::sequential::{lle_sequential, spectrum_sequential};
+
+    fn lorenz_jacs(steps: usize) -> (Vec<Mat>, f64) {
+        let sys = Lorenz::default();
+        let x0 = crate::dynsys::burn_in(&sys, 2000);
+        let (jacs, _) = crate::dynsys::jacobian_chain(&sys, &x0, steps);
+        (jacs, sys.dt())
+    }
+
+    #[test]
+    fn lle_parallel_matches_sequential_lorenz() {
+        let (jacs, dt) = lorenz_jacs(4000);
+        let seq = lle_sequential(&jacs, dt);
+        let par = lle_parallel(&jacs, dt, 32, 4);
+        assert!((seq - par).abs() < 1e-6, "seq {seq} vs par {par}");
+    }
+
+    #[test]
+    fn lle_parallel_survives_long_horizons_where_floats_cannot() {
+        // 4000 Lorenz steps grow ‖s‖ by ≈ e^{0.9·40} ≈ e^36 — still fine in
+        // f64 — but 40_000 steps reach e^360, far past f64. The GOOM scan
+        // must sail through; compare against sequential (which renormalizes
+        // every step so it never overflows).
+        let (jacs, dt) = lorenz_jacs(40_000);
+        let seq = lle_sequential(&jacs, dt);
+        let par = lle_parallel(&jacs, dt, 128, 4);
+        assert!(par.is_finite());
+        assert!((seq - par).abs() < 1e-6, "seq {seq} vs par {par}");
+    }
+
+    #[test]
+    fn spectrum_parallel_matches_sequential_lorenz() {
+        let (jacs, dt) = lorenz_jacs(8000);
+        let seq = spectrum_sequential(&jacs, dt);
+        let par = spectrum_parallel(&jacs, dt, &ParallelOpts::default());
+        assert!((seq[0] - par[0]).abs() < 0.15, "λ1 seq {} par {}", seq[0], par[0]);
+        assert!((seq[1] - par[1]).abs() < 0.15, "λ2 seq {} par {}", seq[1], par[1]);
+        assert!((seq[2] - par[2]).abs() < 1.0, "λ3 seq {} par {}", seq[2], par[2]);
+    }
+
+    #[test]
+    fn spectrum_parallel_rossler() {
+        let sys = Rossler::default();
+        let par = system_spectrum_parallel(&sys, 2000, 8000, &ParallelOpts::default());
+        let seq = crate::lyapunov::sequential::system_spectrum_sequential(&sys, 2000, 8000);
+        assert!((par[0] - seq[0]).abs() < 0.05, "λ1 par {} seq {}", par[0], seq[0]);
+    }
+
+    #[test]
+    fn lle_parallel_logistic_is_ln2() {
+        let lle = system_lle_parallel(&Logistic::default(), 100, 50_000, 64, 4);
+        assert!((lle - std::f64::consts::LN_2).abs() < 0.02, "λ = {lle}");
+    }
+
+    #[test]
+    fn spectrum_parallel_henon_area_contraction() {
+        let sys = Henon::default();
+        let par = system_spectrum_parallel(&sys, 500, 8000, &ParallelOpts::default());
+        assert!((par[0] - 0.419).abs() < 0.05, "λ1 = {}", par[0]);
+        let sum: f64 = par.iter().sum();
+        assert!((sum - 0.3f64.ln()).abs() < 0.1, "Σλ = {sum}");
+    }
+
+    #[test]
+    fn deviation_states_stay_non_colinear_enough_for_qr() {
+        let (jacs, _) = lorenz_jacs(2000);
+        let s0 = Mat::eye(3);
+        let opts = ParallelOpts { chunks: 32, ..Default::default() };
+        let states = deviation_states(&s0, &jacs[..jacs.len() - 1], &opts);
+        assert_eq!(states.len(), 2000);
+        for (t, s) in states.iter().enumerate() {
+            assert!(!s.has_nan(), "state {t} has NaN");
+        }
+    }
+}

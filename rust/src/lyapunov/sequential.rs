@@ -1,0 +1,123 @@
+//! Sequential Lyapunov-exponent estimators — the paper's baselines.
+//!
+//! * [`spectrum_sequential`] — the standard iterative-QR method
+//!   (paper eq. 19–20; Pikovsky & Politi 2016 §3): inherently sequential
+//!   because each step re-orthonormalizes against the previous step's Q.
+//! * [`lle_sequential`] — the standard largest-exponent method
+//!   (paper eq. 21–22): propagate one deviation vector, renormalizing each
+//!   step; sequential for the same reason.
+
+use crate::dynsys::DynamicalSystem;
+use crate::linalg::{norm, qr_householder, Mat};
+
+/// Full-spectrum estimate by iterative QR re-orthonormalization.
+///
+/// `jacs` are the step Jacobians J_1..J_T along a trajectory; `dt` is the
+/// time per step. Returns Λ sorted descending (QR naturally orders it).
+pub fn spectrum_sequential(jacs: &[Mat], dt: f64) -> Vec<f64> {
+    assert!(!jacs.is_empty());
+    let d = jacs[0].rows;
+    let mut q = Mat::eye(d);
+    let mut acc = vec![0.0f64; d];
+    for j in jacs {
+        let s = j.matmul(&q); // S_t = J_t Q_{t-1}   (eq. 20)
+        let (qq, r) = qr_householder(&s);
+        q = qq;
+        for (i, a) in acc.iter_mut().enumerate() {
+            let rii = r[(i, i)].abs();
+            *a += if rii > 0.0 { rii.ln() } else { f64::NEG_INFINITY };
+        }
+    }
+    let t = jacs.len() as f64;
+    acc.iter().map(|a| a / (dt * t)).collect() // eq. 19
+}
+
+/// Largest-exponent estimate by per-step renormalization (eq. 21–22).
+pub fn lle_sequential(jacs: &[Mat], dt: f64) -> f64 {
+    assert!(!jacs.is_empty());
+    let d = jacs[0].rows;
+    // Deterministic unit-norm start direction.
+    let mut u: Vec<f64> = (0..d).map(|i| ((i + 1) as f64).sin()).collect();
+    let n0 = norm(&u);
+    for x in u.iter_mut() {
+        *x /= n0;
+    }
+    let mut acc = 0.0f64;
+    for j in jacs {
+        let s = j.matvec(&u); // s_t = J_t u_{t-1}
+        let ns = norm(&s);
+        acc += ns.ln(); // ‖u_{t-1}‖ = 1 by construction
+        for (ui, si) in u.iter_mut().zip(s.iter()) {
+            *ui = si / ns;
+        }
+    }
+    acc / (dt * jacs.len() as f64)
+}
+
+/// Convenience: run a system for `steps` after `burn` steps of burn-in and
+/// estimate its spectrum sequentially.
+pub fn system_spectrum_sequential(
+    sys: &dyn DynamicalSystem,
+    burn: usize,
+    steps: usize,
+) -> Vec<f64> {
+    let x0 = crate::dynsys::burn_in(sys, burn);
+    let (jacs, _) = crate::dynsys::jacobian_chain(sys, &x0, steps);
+    spectrum_sequential(&jacs, sys.dt())
+}
+
+/// Convenience: sequential LLE for a system.
+pub fn system_lle_sequential(sys: &dyn DynamicalSystem, burn: usize, steps: usize) -> f64 {
+    let x0 = crate::dynsys::burn_in(sys, burn);
+    let (jacs, _) = crate::dynsys::jacobian_chain(sys, &x0, steps);
+    lle_sequential(&jacs, sys.dt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynsys::{Henon, Logistic, Lorenz, VanDerPol};
+
+    #[test]
+    fn lorenz_spectrum_matches_literature() {
+        // Literature: (0.906, 0.0, −14.57) at σ=10, ρ=28, β=8/3.
+        let lam = system_spectrum_sequential(&Lorenz::default(), 2000, 20_000);
+        assert!((lam[0] - 0.906).abs() < 0.1, "λ1 = {}", lam[0]);
+        assert!(lam[1].abs() < 0.05, "λ2 = {}", lam[1]);
+        assert!((lam[2] + 14.57).abs() < 0.5, "λ3 = {}", lam[2]);
+        // Trace identity: Σλ = ∇·v = −(σ+1+β) ≈ −13.667.
+        let sum: f64 = lam.iter().sum();
+        assert!((sum + 13.667).abs() < 0.3, "Σλ = {sum}");
+    }
+
+    #[test]
+    fn henon_spectrum_matches_literature() {
+        let lam = system_spectrum_sequential(&Henon::default(), 500, 50_000);
+        assert!((lam[0] - 0.419).abs() < 0.02, "λ1 = {}", lam[0]);
+        // λ1 + λ2 = ln|−b| = ln 0.3 (area contraction is constant).
+        let sum: f64 = lam.iter().sum();
+        assert!((sum - 0.3f64.ln()).abs() < 1e-6, "Σλ = {sum}");
+    }
+
+    #[test]
+    fn logistic_lle_is_ln2() {
+        let lle = system_lle_sequential(&Logistic::default(), 100, 100_000);
+        assert!((lle - std::f64::consts::LN_2).abs() < 0.01, "λ = {lle}");
+    }
+
+    #[test]
+    fn vanderpol_lle_is_zero() {
+        let lle = system_lle_sequential(&VanDerPol::default(), 5000, 50_000);
+        assert!(lle.abs() < 0.02, "λ = {lle}");
+    }
+
+    #[test]
+    fn lle_agrees_with_top_of_spectrum() {
+        let sys = Lorenz::default();
+        let x0 = crate::dynsys::burn_in(&sys, 2000);
+        let (jacs, _) = crate::dynsys::jacobian_chain(&sys, &x0, 20_000);
+        let lle = lle_sequential(&jacs, sys.dt());
+        let lam = spectrum_sequential(&jacs, sys.dt());
+        assert!((lle - lam[0]).abs() < 0.05, "lle {lle} vs λ1 {}", lam[0]);
+    }
+}

@@ -1,0 +1,132 @@
+//! `repro` — the experiment launcher.
+//!
+//! ```text
+//! repro list                          # enumerate experiments
+//! repro run <name> [--key=val ...]    # run one (config: defaults < file < CLI)
+//! repro all [--key=val ...]           # smoke-run every experiment
+//! repro config <name>                 # show the resolved config
+//! repro systems                       # list the dynamical-systems dataset
+//! ```
+//!
+//! Config file: `repro.conf` in the working directory (key = value lines),
+//! overridden per-run by `--key=value` CLI options.
+
+use anyhow::Result;
+use goomrs::coordinator::{self, Config, RunContext};
+use goomrs::dynsys;
+use goomrs::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            print_help();
+            Ok(())
+        }
+        Some("list") => {
+            println!("experiments:");
+            for e in coordinator::registry() {
+                println!("  {:<12} {}", e.name(), e.description());
+            }
+            Ok(())
+        }
+        Some("systems") => {
+            println!("dynamical systems ({} total):", dynsys::all_systems().len());
+            for s in dynsys::all_systems() {
+                println!(
+                    "  {:<22} dim={} {} dt={}{}",
+                    s.name(),
+                    s.dim(),
+                    if s.is_map() { "map " } else { "flow" },
+                    s.dt(),
+                    s.reference_lle()
+                        .map_or(String::new(), |l| format!("  λ1≈{l:+.3}")),
+                );
+            }
+            Ok(())
+        }
+        Some("config") => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro config <experiment>"))?;
+            let exp = coordinator::find(name)?;
+            let cfg = resolve_config(exp.as_ref(), args)?;
+            print!("{}", cfg.dump());
+            Ok(())
+        }
+        Some("run") => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro run <experiment>"))?
+                .clone();
+            run_one(&name, args)
+        }
+        Some("all") => {
+            for e in coordinator::registry() {
+                println!("\n=== {} ===", e.name());
+                run_one(e.name(), args)?;
+            }
+            Ok(())
+        }
+        Some(other) => {
+            // Convenience: `repro chain` == `repro run chain`.
+            if coordinator::find(other).is_ok() {
+                return run_one(other, args);
+            }
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn resolve_config(exp: &dyn coordinator::Experiment, args: &Args) -> Result<Config> {
+    let mut cfg = Config::with_defaults(&exp.defaults());
+    cfg.load_file("repro.conf", false)?;
+    cfg.apply_cli(args);
+    Ok(cfg)
+}
+
+fn run_one(name: &str, args: &Args) -> Result<()> {
+    let exp = coordinator::find(name)?;
+    let cfg = resolve_config(exp.as_ref(), args)?;
+    let mut ctx = RunContext::create("runs", exp.name())?;
+    ctx.write_text("config.txt", &cfg.dump())?;
+    println!("run dir: {:?}", ctx.run_dir);
+    let result = exp.run(&cfg, &mut ctx);
+    ctx.finalize()?;
+    println!("\n{}", ctx.metrics.summary());
+    result
+}
+
+fn print_help() {
+    println!(
+        "repro — GOOMs paper reproduction launcher
+
+USAGE:
+  repro list                        list experiments
+  repro systems                     list the dynamical-systems dataset
+  repro run <name> [--key=val ...]  run one experiment
+  repro <name> [--key=val ...]      shorthand for `run`
+  repro config <name>               show resolved config
+  repro all                         run every experiment at default scale
+
+Config layering: built-in defaults < ./repro.conf < --key=value flags.
+Artifacts: set GOOMRS_ARTIFACTS or run from the repo root (./artifacts)."
+    );
+}

@@ -1,0 +1,98 @@
+//! Sampling distributions on top of the raw generators.
+
+use super::Xoshiro256PlusPlus;
+
+/// Normal distribution sampled with the Marsaglia polar method (a cached
+/// Box-Muller variant: every other call is free).
+#[derive(Clone, Debug)]
+pub struct Normal {
+    mean: f64,
+    std: f64,
+    cached: Option<f64>,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "std must be non-negative");
+        Self { mean, std, cached: None }
+    }
+
+    pub fn standard() -> Self {
+        Self::new(0.0, 1.0)
+    }
+
+    /// Draw one sample.
+    pub fn sample(&mut self, rng: &mut Xoshiro256PlusPlus) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return self.mean + self.std * z;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let factor = (-2.0 * s.ln() / s).sqrt();
+                self.cached = Some(v * factor);
+                return self.mean + self.std * u * factor;
+            }
+        }
+    }
+
+    /// Fill a buffer with i.i.d. samples.
+    pub fn fill(&mut self, rng: &mut Xoshiro256PlusPlus, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.sample(rng);
+        }
+    }
+
+    /// Draw `n` samples into a fresh Vec.
+    pub fn sample_vec(&mut self, rng: &mut Xoshiro256PlusPlus, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill(rng, &mut v);
+        v
+    }
+}
+
+/// Convenience: `n` standard-normal samples.
+pub fn randn(rng: &mut Xoshiro256PlusPlus, n: usize) -> Vec<f64> {
+    Normal::standard().sample_vec(rng, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn standard_normal_moments() {
+        let mut rng = rng_from_seed(10);
+        let mut d = Normal::standard();
+        let n = 200_000;
+        let xs = d.sample_vec(&mut rng, n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // Fourth moment of N(0,1) is 3 (kurtosis sanity check).
+        let m4 = xs.iter().map(|x| x.powi(4)).sum::<f64>() / n as f64;
+        assert!((m4 - 3.0).abs() < 0.15, "m4 {m4}");
+    }
+
+    #[test]
+    fn scaled_normal_moments() {
+        let mut rng = rng_from_seed(11);
+        let mut d = Normal::new(5.0, 2.0);
+        let n = 100_000;
+        let xs = d.sample_vec(&mut rng, n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.03);
+        assert!((var - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_std_panics() {
+        let _ = Normal::new(0.0, -1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Layer-3 RNN training driver (paper §4.3): task generators + a trainer
+//! that steps the AOT-compiled train-step artifact.
+
+pub mod tasks;
+pub mod trainer;
+
+pub use tasks::{Batch, CopyMemoryTask, PixelSeqTask, TinyCorpusTask};
+pub use trainer::{RnnSpec, Trainer};

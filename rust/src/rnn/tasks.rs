@@ -1,0 +1,264 @@
+//! Task generators for the §4.3 RNN experiments — the data substrate
+//! replacing The Pile / MNIST (DESIGN.md §4 substitutions).
+//!
+//! * [`CopyMemoryTask`]  — the classic copy-memory benchmark the paper
+//!   trains on: recall a payload after a delay, next-token loss.
+//! * [`PixelSeqTask`]    — sequential-pixel classification à la sMNIST:
+//!   procedurally generated class-conditional "images" flattened to pixel
+//!   sequences, classified from the last position.
+//! * [`TinyCorpusTask`]  — character-level language modeling over an
+//!   embedded corpus, bucketed to the model's vocabulary.
+
+use crate::rng::{rng_from_seed, Rng};
+
+/// A generated batch: tokens [batch, seq] and LM targets [batch, seq]
+/// (classification targets are [batch], padded into the same vec).
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Copy-memory: `[payload (L) | SEP | zeros (L) ...]` and the model must
+/// reproduce the payload after the separator. Targets are next-token
+/// everywhere (teacher forcing), so loss below `ln(vocab-2)/2` means the
+/// recall half is being solved.
+pub struct CopyMemoryTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub payload_len: usize,
+    rng: Rng,
+}
+
+impl CopyMemoryTask {
+    pub const BLANK: i32 = 0;
+    pub const SEP: i32 = 1;
+
+    /// Default payload: 4 symbols (learnable within a few hundred steps at
+    /// the quickstart model scale), or shorter if the sequence forces it.
+    pub fn new(vocab: usize, seq_len: usize, batch: usize, seed: u64) -> Self {
+        let payload_len = 4.min((seq_len - 1) / 2);
+        Self::with_payload(vocab, seq_len, batch, payload_len, seed)
+    }
+
+    /// Explicit payload length (the difficulty knob: the model must carry
+    /// `payload_len` symbols across the separator).
+    pub fn with_payload(
+        vocab: usize,
+        seq_len: usize,
+        batch: usize,
+        payload_len: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(vocab > 2 && seq_len >= 2 * payload_len + 1 && payload_len > 0);
+        Self { vocab, seq_len, batch, payload_len, rng: rng_from_seed(seed) }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, t, l) = (self.batch, self.seq_len, self.payload_len);
+        let mut tokens = vec![Self::BLANK; b * t];
+        for row in 0..b {
+            let payload: Vec<i32> = (0..l)
+                .map(|_| 2 + self.rng.next_below((self.vocab - 2) as u64) as i32)
+                .collect();
+            for (i, &p) in payload.iter().enumerate() {
+                tokens[row * t + i] = p;
+            }
+            tokens[row * t + l] = Self::SEP;
+            // Recall region repeats the payload so next-token prediction
+            // after SEP is exactly the copy task.
+            for (i, &p) in payload.iter().enumerate() {
+                if l + 1 + i < t {
+                    tokens[row * t + l + 1 + i] = p;
+                }
+            }
+        }
+        // LM targets: next token (last position predicts BLANK).
+        let mut targets = vec![Self::BLANK; b * t];
+        for row in 0..b {
+            for i in 0..t - 1 {
+                targets[row * t + i] = tokens[row * t + i + 1];
+            }
+        }
+        Batch { tokens, targets, batch: b, seq_len: t }
+    }
+}
+
+/// Sequential-pixel classification: each class has a fixed random template
+/// "image" (seq_len quantized pixels); samples are the template with pixel
+/// noise. Mirrors the paper's MNIST-pixel-sequence task shape (classify
+/// from the last pixel).
+pub struct PixelSeqTask {
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    templates: Vec<Vec<i32>>,
+    noise: f64,
+    rng: Rng,
+}
+
+impl PixelSeqTask {
+    pub fn new(
+        vocab: usize,
+        n_classes: usize,
+        seq_len: usize,
+        batch: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = rng_from_seed(seed);
+        let templates = (0..n_classes)
+            .map(|_| {
+                (0..seq_len)
+                    .map(|_| rng.next_below(vocab as u64) as i32)
+                    .collect()
+            })
+            .collect();
+        Self { vocab, n_classes, seq_len, batch, templates, noise, rng }
+    }
+
+    /// Returns (tokens [batch*seq], labels [batch]).
+    pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let class = self.rng.next_below(self.n_classes as u64) as usize;
+            labels.push(class as i32);
+            for i in 0..self.seq_len {
+                let clean = self.templates[class][i];
+                let tok = if self.rng.next_f64() < self.noise {
+                    self.rng.next_below(self.vocab as u64) as i32
+                } else {
+                    clean
+                };
+                tokens.push(tok);
+            }
+        }
+        (tokens, labels)
+    }
+}
+
+/// Character-level LM over an embedded corpus, bytes bucketed to `vocab`
+/// classes by frequency rank.
+pub struct TinyCorpusTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    data: Vec<i32>,
+    rng: Rng,
+}
+
+/// A small public-domain English sample (Lincoln's Gettysburg Address plus
+/// assorted pangrams) — enough structure for a loss curve to be meaningful.
+const CORPUS: &str = "Four score and seven years ago our fathers brought forth on this \
+continent, a new nation, conceived in Liberty, and dedicated to the proposition that \
+all men are created equal. Now we are engaged in a great civil war, testing whether \
+that nation, or any nation so conceived and so dedicated, can long endure. We are met \
+on a great battle-field of that war. We have come to dedicate a portion of that field, \
+as a final resting place for those who here gave their lives that that nation might \
+live. It is altogether fitting and proper that we should do this. The quick brown fox \
+jumps over the lazy dog. Pack my box with five dozen liquor jugs. Sphinx of black \
+quartz, judge my vow. How vexingly quick daft zebras jump. The five boxing wizards \
+jump quickly. Jackdaws love my big sphinx of quartz.";
+
+impl TinyCorpusTask {
+    pub fn new(vocab: usize, seq_len: usize, batch: usize, seed: u64) -> Self {
+        // Frequency-rank bucketing of bytes into `vocab` classes.
+        let bytes: Vec<u8> = CORPUS.bytes().collect();
+        let mut counts = [0usize; 256];
+        for &b in &bytes {
+            counts[b as usize] += 1;
+        }
+        let mut by_freq: Vec<usize> = (0..256).filter(|&b| counts[b] > 0).collect();
+        by_freq.sort_by_key(|&b| std::cmp::Reverse(counts[b]));
+        let mut class_of = [0i32; 256];
+        for (rank, &b) in by_freq.iter().enumerate() {
+            class_of[b] = (rank.min(vocab - 1)) as i32;
+        }
+        let data: Vec<i32> = bytes.iter().map(|&b| class_of[b as usize]).collect();
+        assert!(data.len() > seq_len + 1);
+        Self { vocab, seq_len, batch, data, rng: rng_from_seed(seed) }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, t) = (self.batch, self.seq_len);
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let start =
+                self.rng.next_below((self.data.len() - t - 1) as u64) as usize;
+            tokens.extend_from_slice(&self.data[start..start + t]);
+            targets.extend_from_slice(&self.data[start + 1..start + t + 1]);
+        }
+        Batch { tokens, targets, batch: b, seq_len: t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_task_structure() {
+        let mut task = CopyMemoryTask::with_payload(16, 48, 4, 23, 1);
+        let batch = task.next_batch();
+        assert_eq!(batch.tokens.len(), 4 * 48);
+        let l = task.payload_len;
+        for row in 0..4 {
+            let row_tokens = &batch.tokens[row * 48..(row + 1) * 48];
+            assert_eq!(row_tokens[l], CopyMemoryTask::SEP);
+            // payload repeats after SEP
+            for i in 0..l.min(48 - l - 1) {
+                assert_eq!(row_tokens[i], row_tokens[l + 1 + i], "row {row} pos {i}");
+                assert!(row_tokens[i] >= 2);
+            }
+            // targets are next tokens
+            for i in 0..47 {
+                assert_eq!(batch.targets[row * 48 + i], row_tokens[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_task_labels_in_range_and_learnable() {
+        let mut task = PixelSeqTask::new(8, 4, 64, 16, 0.05, 2);
+        let (tokens, labels) = task.next_batch();
+        assert_eq!(tokens.len(), 16 * 64);
+        assert_eq!(labels.len(), 16);
+        assert!(labels.iter().all(|&l| (0..4).contains(&l)));
+        assert!(tokens.iter().all(|&t| (0..8).contains(&t)));
+        // Same class twice -> mostly equal pixels (templates are stable).
+        let mut t2 = PixelSeqTask::new(8, 4, 64, 2, 0.0, 2);
+        let (a, la) = t2.next_batch();
+        let (b, lb) = t2.next_batch();
+        if la[0] == lb[0] {
+            assert_eq!(&a[..64], &b[..64]);
+        }
+    }
+
+    #[test]
+    fn corpus_task_next_token_alignment() {
+        let mut task = TinyCorpusTask::new(16, 32, 3, 3);
+        let batch = task.next_batch();
+        assert_eq!(batch.tokens.len(), 3 * 32);
+        for row in 0..3 {
+            for i in 0..31 {
+                assert_eq!(
+                    batch.targets[row * 32 + i],
+                    batch.tokens[row * 32 + i + 1]
+                );
+            }
+        }
+        assert!(batch.tokens.iter().all(|&t| (0..16).contains(&t)));
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        let mut a = CopyMemoryTask::new(16, 48, 2, 7);
+        let mut b = CopyMemoryTask::new(16, 48, 2, 7);
+        assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+}

@@ -1,0 +1,267 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once
+//! on the CPU PJRT client, and executes them from the Layer-3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file
+//! -> XlaComputation::from_proto -> client.compile -> execute`. Executables
+//! are cached per artifact name; inputs/outputs are validated against the
+//! manifest so a mismatched aot.py regeneration fails loudly, not silently.
+
+use super::manifest::{Artifact, Manifest};
+use crate::goom::GoomMat;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The runtime engine. One per process; construction builds the PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Build from an artifacts directory (must contain manifest.json).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Build from the default artifacts location.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(super::manifest::default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let artifact = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", artifact.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with validated inputs; returns the flattened
+    /// output tuple.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_borrowed(name, &refs)
+    }
+
+    /// Like [`Engine::run`] but borrowing the inputs, so callers that carry
+    /// state between steps (the RNN trainer) avoid re-materializing
+    /// literals.
+    pub fn run_borrowed(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let artifact = self.manifest.get(name)?;
+        if inputs.len() != artifact.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                artifact.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(&artifact.inputs) {
+            let count = lit.element_count();
+            if count != spec.element_count() {
+                bail!(
+                    "artifact '{name}' input '{}': expected {} elements ({:?}), got {}",
+                    spec.name,
+                    spec.element_count(),
+                    spec.shape,
+                    count
+                );
+            }
+        }
+        self.executable(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("cached above");
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: flatten the tuple.
+        out.to_tuple().context("decomposing output tuple")
+    }
+
+    /// Warm the executable cache (used by drivers to move compile time out
+    /// of the measured region).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.manifest.get(name)
+    }
+}
+
+// ----------------------------------------------------- literal conversion --
+
+/// Build an f32 literal of the given shape (row-major data).
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// GoomMat<f32> -> (logmag, sign) literal pair with shape [rows, cols].
+pub fn goommat_to_literals(m: &GoomMat<f32>) -> Result<(xla::Literal, xla::Literal)> {
+    let shape = [m.rows, m.cols];
+    Ok((lit_f32(&m.logmag, &shape)?, lit_f32(&m.sign, &shape)?))
+}
+
+/// Stack of GoomMat<f32> -> [T, rows, cols] literal pair.
+pub fn goommat_stack_to_literals(
+    ms: &[GoomMat<f32>],
+) -> Result<(xla::Literal, xla::Literal)> {
+    assert!(!ms.is_empty());
+    let (r, c) = (ms[0].rows, ms[0].cols);
+    let mut logmag = Vec::with_capacity(ms.len() * r * c);
+    let mut sign = Vec::with_capacity(ms.len() * r * c);
+    for m in ms {
+        assert_eq!((m.rows, m.cols), (r, c), "ragged stack");
+        logmag.extend_from_slice(&m.logmag);
+        sign.extend_from_slice(&m.sign);
+    }
+    let shape = [ms.len(), r, c];
+    Ok((lit_f32(&logmag, &shape)?, lit_f32(&sign, &shape)?))
+}
+
+/// Literal pair -> GoomMat<f32> (expects shape [rows, cols]).
+pub fn literals_to_goommat(
+    logmag: &xla::Literal,
+    sign: &xla::Literal,
+    rows: usize,
+    cols: usize,
+) -> Result<GoomMat<f32>> {
+    let l = logmag.to_vec::<f32>()?;
+    let s = sign.to_vec::<f32>()?;
+    if l.len() != rows * cols || s.len() != rows * cols {
+        bail!("literal size mismatch for {rows}x{cols}");
+    }
+    Ok(GoomMat { rows, cols, logmag: l, sign: s })
+}
+
+/// Fetch a literal as Vec<f32>.
+pub fn literal_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::rng_from_seed;
+    use crate::runtime::manifest::default_artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built; integration covered in CI order
+        }
+        Some(Engine::new(dir).expect("engine"))
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(literal_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn goommat_literal_roundtrip() {
+        let mut rng = rng_from_seed(70);
+        let m = Mat::randn(3, 4, &mut rng);
+        let g = GoomMat::<f32>::from_mat(&m);
+        let (l, s) = goommat_to_literals(&g).unwrap();
+        let back = literals_to_goommat(&l, &s, 3, 4).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn lmme_artifact_matches_native_lmme() {
+        let Some(engine) = engine() else { return };
+        let mut rng = rng_from_seed(71);
+        let a = Mat::randn(16, 16, &mut rng);
+        let b = Mat::randn(16, 16, &mut rng);
+        let ga = GoomMat::<f32>::from_mat(&a);
+        let gb = GoomMat::<f32>::from_mat(&b);
+        let (al, asg) = goommat_to_literals(&ga).unwrap();
+        let (bl, bsg) = goommat_to_literals(&gb).unwrap();
+        let out = engine.run("lmme_d16", &[al, asg, bl, bsg]).unwrap();
+        assert_eq!(out.len(), 2);
+        let got = literals_to_goommat(&out[0], &out[1], 16, 16).unwrap();
+        let native = crate::goom::lmme(&ga, &gb);
+        for i in 0..got.logmag.len() {
+            let (x, y) = (got.logmag[i], native.logmag[i]);
+            if x < -170.0 && y == f32::NEG_INFINITY {
+                continue; // HLO floor vs native -inf encode the same zero
+            }
+            assert!((x - y).abs() < 3e-3 * y.abs().max(1.0), "logmag[{i}]: {x} vs {y}");
+            assert_eq!(got.sign[i], native.sign[i], "sign[{i}]");
+        }
+    }
+
+    #[test]
+    fn input_validation_rejects_wrong_arity_and_shape() {
+        let Some(engine) = engine() else { return };
+        let lit = lit_f32(&[0.0; 4], &[2, 2]).unwrap();
+        assert!(engine.run("lmme_d16", &[lit]).is_err());
+        let bad = [
+            lit_f32(&[0.0; 4], &[2, 2]).unwrap(),
+            lit_f32(&[0.0; 4], &[2, 2]).unwrap(),
+            lit_f32(&[0.0; 4], &[2, 2]).unwrap(),
+            lit_f32(&[0.0; 4], &[2, 2]).unwrap(),
+        ];
+        assert!(engine.run("lmme_d16", &bad).is_err());
+        assert!(engine.run("no_such_artifact", &[]).is_err());
+    }
+}

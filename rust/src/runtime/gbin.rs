@@ -1,0 +1,188 @@
+//! `.gbin` tensor container reader (written by `aot.write_gbin`).
+//!
+//! Layout (little-endian):
+//!   magic "GBIN" | u32 version | u32 count |
+//!   per tensor: u32 name_len | name | u32 dtype_tag | u32 ndim |
+//!               u64 dims[ndim] | raw data
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded tensor (host memory, row-major).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F64 { shape: Vec<usize>, data: Vec<f64> },
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+            HostTensor::F64 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("gbin truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Load every tensor in the container, keyed by name.
+pub fn load_gbin(path: impl AsRef<Path>) -> Result<BTreeMap<String, HostTensor>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut r = Reader { buf: &bytes, pos: 0 };
+    if r.take(4)? != b"GBIN" {
+        bail!("bad magic — not a gbin file");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported gbin version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let tag = r.u32()?;
+        let ndim = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let tensor = match tag {
+            0 => {
+                let raw = r.take(4 * n)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostTensor::F32 { shape, data }
+            }
+            1 => {
+                let raw = r.take(4 * n)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostTensor::I32 { shape, data }
+            }
+            2 => {
+                let raw = r.take(8 * n)?;
+                let data = raw
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostTensor::F64 { shape, data }
+            }
+            other => bail!("unknown dtype tag {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_gbin(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"GBIN").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap(); // 2 tensors
+        // tensor "w": f32 [2,2]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"w").unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        // tensor "s": i32 []
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"s").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&7i32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("goomrs_gbin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.gbin");
+        write_test_gbin(&path);
+        let m = load_gbin(&path).unwrap();
+        assert_eq!(m.len(), 2);
+        let w = m.get("w").unwrap();
+        assert_eq!(w.shape(), &[2, 2]);
+        assert_eq!(w.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        match m.get("s").unwrap() {
+            HostTensor::I32 { shape, data } => {
+                assert!(shape.is_empty());
+                assert_eq!(data, &vec![7]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("goomrs_gbin_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.gbin");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load_gbin(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_init_gbin_loads_when_built() {
+        let dir = crate::runtime::manifest::default_artifacts_dir();
+        let path = dir.join("rnn_copy_init.gbin");
+        if !path.exists() {
+            return;
+        }
+        let m = load_gbin(&path).unwrap();
+        assert!(m.keys().any(|k| k.starts_with("param.")));
+        assert!(m.keys().any(|k| k.starts_with("adam_m.")));
+    }
+}

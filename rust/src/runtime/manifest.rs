@@ -1,0 +1,206 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! runtime. Parsed with the in-repo JSON substrate (no serde offline).
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype as named in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "float64" => Ok(DType::F64),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One input tensor spec.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub meta: Option<Json>,
+}
+
+impl Artifact {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.as_ref()?.get(key)?.as_usize()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.as_ref()?.get(key)?.as_str()
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.as_ref()?.get(key)?.as_f64()
+    }
+
+    pub fn meta_str_list(&self, key: &str) -> Option<Vec<String>> {
+        let arr = self.meta.as_ref()?.get(key)?.as_arr()?;
+        arr.iter().map(|v| v.as_str().map(str::to_string)).collect()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let list = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = BTreeMap::new();
+        for entry in list {
+            let name = entry
+                .require("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact name not a string"))?
+                .to_string();
+            let rel = entry
+                .require("path")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact path not a string"))?;
+            let mut inputs = Vec::new();
+            for inp in entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+            {
+                let iname = inp
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("input missing name"))?;
+                let dtype = DType::from_str(
+                    inp.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("input {iname}: missing dtype"))?,
+                )?;
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("input {iname}: missing shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                inputs.push(TensorSpec { name: iname.to_string(), dtype, shape });
+            }
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            let meta = entry.get("meta").cloned();
+            artifacts.insert(
+                name.clone(),
+                Artifact { name, path: dir.join(rel), inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({:?})", self.dir))
+    }
+}
+
+/// Locate the artifacts directory: `$GOOMRS_ARTIFACTS` or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GOOMRS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let candidate = dir.join("artifacts");
+        if candidate.join("manifest.json").exists() {
+            return candidate;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        let dir = std::env::temp_dir().join("goomrs_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"x","path":"x.hlo.txt","inputs":[{"name":"a","dtype":"float32","shape":[2,3]}],"outputs":["y"],"meta":{"k":5}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("x").unwrap();
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].element_count(), 6);
+        assert_eq!(a.meta_usize("k"), Some(5));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_loads_when_built() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.contains_key("lmme_d16"));
+        let rnn = m.get("rnn_copy_train_step").unwrap();
+        let names = rnn.meta_str_list("param_names").unwrap();
+        assert!(!names.is_empty());
+        assert_eq!(rnn.inputs.len(), 3 * names.len() + 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them natively.
+//!
+//! * [`manifest`] — the aot.py <-> runtime contract (JSON).
+//! * [`gbin`]     — tensor container for initial params/optimizer state.
+//! * [`engine`]   — PJRT client + executable cache + literal conversions.
+
+pub mod engine;
+pub mod gbin;
+pub mod manifest;
+
+pub use engine::{
+    goommat_stack_to_literals, goommat_to_literals, lit_f32, lit_i32,
+    lit_scalar_f32, lit_scalar_i32, literal_f32_vec, literals_to_goommat, Engine,
+};
+pub use gbin::{load_gbin, HostTensor};
+pub use manifest::{default_artifacts_dir, Artifact, DType, Manifest, TensorSpec};

@@ -1,0 +1,167 @@
+//! Minimal command-line argument parser (the offline registry has no clap).
+//!
+//! Grammar: `repro <subcommand> [positional ...] [--key=value | --key value | --flag] ...`
+//! Typed accessors parse on demand and report helpful errors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = program name).
+    pub fn parse_from<I, S>(tokens: I) -> Result<Self, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = tokens.into_iter().map(Into::into);
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let tok = &rest[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err(CliError("bare '--' is not supported".into()));
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.options.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse_from(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{key}={s}: {e}"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parsed::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parsed::<u64>(key)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parsed::<f64>(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list of usizes, e.g. `--dims=8,16,32`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|e| CliError(format!("--{key}: bad element '{p}': {e}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn basic_subcommand_and_options() {
+        let a = parse(&["repro", "chain", "--dims=8,16", "--runs", "5", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("chain"));
+        assert_eq!(a.get("dims"), Some("8,16"));
+        assert_eq!(a.get_usize("runs", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["repro", "run", "lorenz", "rossler"]);
+        assert_eq!(a.positional, vec!["lorenz", "rossler"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["repro", "x", "--dims=8, 16,32"]);
+        assert_eq!(a.get_usize_list("dims", &[]).unwrap(), vec![8, 16, 32]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["repro", "x", "--runs=abc"]);
+        assert!(a.get_usize("runs", 0).is_err());
+    }
+
+    #[test]
+    fn option_value_following_token() {
+        let a = parse(&["p", "sub", "--seed", "42", "--flag"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!(a.flag("flag"));
+    }
+}

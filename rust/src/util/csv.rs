@@ -1,0 +1,77 @@
+//! CSV writer for experiment outputs (loss curves, sweep results).
+//!
+//! Experiment drivers append rows as they go; files land under the run
+//! directory managed by the coordinator so EXPERIMENTS.md can reference them.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, headers: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", headers.join(","))?;
+        Ok(Self { out, ncols: headers.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", escaped.join(","))
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = cells.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("goomrs_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.row_f64(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,3\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width mismatch")]
+    fn width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("goomrs_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free utility substrates: JSON, CLI parsing, bench timing,
+//! allocation counting, property testing, and CSV output.
+
+pub mod alloc;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod timing;

@@ -1,0 +1,136 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! Deterministic: each case is generated from `seed + case_index`, so a
+//! failing case prints its seed and can be replayed exactly. On failure the
+//! harness retries with "shrunk" generator scales (magnitudes pulled toward
+//! 1) to report a smaller witness when one exists.
+
+use crate::rng::{rng_from_seed, Rng};
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` generated inputs. `gen` receives an RNG and a
+/// `scale` in (0, 1]: generators should produce "larger"/wilder values as
+/// scale grows, enabling the shrink pass. Panics with the failing seed/case
+/// on the first violated property.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    name: &str,
+    mut gen: impl FnMut(&mut Rng, f64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = rng_from_seed(case_seed);
+        let scale = (case as f64 + 1.0) / cfg.cases as f64; // ramp up wildness
+        let input = gen(&mut rng, scale);
+        if let Err(msg) = prop(&input) {
+            // Shrink pass: replay the same case seed at smaller scales and
+            // report the smallest still-failing input.
+            let mut witness = format!("{input:?}");
+            let mut wscale = scale;
+            for step in 1..=8 {
+                let s = scale * (1.0 - step as f64 / 9.0);
+                if s <= 0.0 {
+                    break;
+                }
+                let mut rng2 = rng_from_seed(case_seed);
+                let smaller = gen(&mut rng2, s);
+                if prop(&smaller).is_err() {
+                    witness = format!("{smaller:?}");
+                    wscale = s;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}, scale {wscale:.3}):\n  {msg}\n  witness: {witness}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close in absolute-or-relative terms.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if a.is_nan() && b.is_nan() {
+        return Ok(());
+    }
+    if a.is_infinite() || b.is_infinite() {
+        if a == b {
+            return Ok(());
+        }
+        return Err(format!("{a} vs {b}: infinity mismatch"));
+    }
+    let tol = atol + rtol * a.abs().max(b.abs());
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} vs {b}: |diff| = {} > tol {tol}", (a - b).abs()))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        close(x, y, rtol, atol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config { cases: 50, seed: 1 },
+            "sum-commutes",
+            |rng, scale| (rng.uniform(-scale, scale), rng.uniform(-scale, scale)),
+            |&(a, b)| {
+                count += 0; // (closure must be FnMut-compatible)
+                close(a + b, b + a, 1e-15, 0.0)
+            },
+        );
+        let _ = count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 10, seed: 2 },
+            "always-fails",
+            |rng, _| rng.next_f64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_handles_edge_cases() {
+        assert!(close(f64::NAN, f64::NAN, 0.0, 0.0).is_ok());
+        assert!(close(f64::INFINITY, f64::INFINITY, 0.0, 0.0).is_ok());
+        assert!(close(f64::INFINITY, 1.0, 1.0, 1.0).is_err());
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(close(1.0, 2.0, 1e-9, 0.0).is_err());
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let err = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-9, 0.0).unwrap_err();
+        assert!(err.contains("index 1"), "{err}");
+    }
+}

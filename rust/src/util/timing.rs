@@ -1,0 +1,187 @@
+//! Benchmark timing harness (the offline registry has no criterion).
+//!
+//! Provides warmup + repeated measurement with robust statistics, and a
+//! small table printer so every bench binary emits the rows/series the
+//! paper's tables and figures report.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated timed runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: sorted[0],
+            median_s: sorted[n / 2],
+            max_s: sorted[n - 1],
+        }
+    }
+
+    /// Standard error of the mean.
+    pub fn sem_s(&self) -> f64 {
+        self.std_s / (self.n as f64).sqrt()
+    }
+}
+
+/// Time `f` once, returning (elapsed seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `iters` measured runs.
+/// The closure's output is passed to `std::hint::black_box` to prevent the
+/// optimizer from deleting the work.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Benchmark with a time budget: runs at least `min_iters` and stops after
+/// `budget` wall-clock time. Used for the heavier end-to-end benches.
+pub fn bench_budget<T>(budget: Duration, min_iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && start.elapsed() >= budget {
+            break;
+        }
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Human-readable duration, e.g. "12.3 ms".
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+/// Fixed-width text table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$} | ", cell, width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 5.0);
+        assert_eq!(s.median_s, 3.0);
+        assert!((s.std_s - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(1, 5, || (0..1000).map(|i: u64| i * i).sum::<u64>());
+        assert!(s.mean_s > 0.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["d", "steps"]);
+        t.row(&["8".into(), "1000000".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| d | steps"));
+        assert!(s.contains("1000000"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-6).ends_with("µs"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with("s"));
+    }
+}
