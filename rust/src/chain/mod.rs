@@ -10,7 +10,7 @@
 //! through the compiled `chain_block_d*` artifact — proving the three-layer
 //! stack composes.
 
-use crate::goom::{lmme, GoomMat};
+use crate::goom::{lmme, lmme_batched, GoomMat};
 use crate::linalg::Mat;
 use crate::rng::{child_seed, rng_from_seed, Normal, Rng};
 use crate::runtime::{goommat_stack_to_literals, goommat_to_literals, Engine};
@@ -191,6 +191,82 @@ fn run_chain_goom<T: crate::goom::GoomFloat>(
     }
 }
 
+/// One chain request inside a batched GOOM run: its own horizon and seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainSpec {
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// Advance many independent same-dimension GOOM chains in lockstep, one
+/// stacked LMME pass per step — the serving layer's batch executor.
+///
+/// Each spec gets its own RNG stream seeded exactly like [`run_chain`], so
+/// the per-chain results are identical to running them one at a time (a
+/// cached solo result and a batched recompute can never disagree).
+pub fn run_chain_goom_batched<T: crate::goom::GoomFloat>(
+    d: usize,
+    specs: &[ChainSpec],
+) -> Vec<ChainResult> {
+    let method =
+        if std::mem::size_of::<T>() == 4 { Method::GoomC64 } else { Method::GoomC128 };
+    let mut rngs: Vec<Rng> = specs.iter().map(|s| rng_from_seed(s.seed)).collect();
+    let mut states: Vec<GoomMat<T>> =
+        rngs.iter_mut().map(|r| GoomMat::<T>::randn(d, d, r)).collect();
+    let mut results: Vec<Option<ChainResult>> = vec![None; specs.len()];
+    for (i, spec) in specs.iter().enumerate() {
+        if spec.steps == 0 {
+            results[i] = Some(ChainResult {
+                method,
+                d,
+                steps_completed: 0,
+                failed: false,
+                final_max_logmag: states[i].max_logmag().to_f64(),
+            });
+        }
+    }
+    let max_steps = specs.iter().map(|s| s.steps).max().unwrap_or(0);
+    for t in 0..max_steps {
+        // Draw this step's transition for every still-active chain.
+        let mut active: Vec<usize> = Vec::new();
+        let mut trans: Vec<GoomMat<T>> = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            if results[i].is_none() && t < spec.steps {
+                trans.push(GoomMat::<T>::randn(d, d, &mut rngs[i]));
+                active.push(i);
+            }
+        }
+        if active.is_empty() {
+            break;
+        }
+        let pairs: Vec<(&GoomMat<T>, &GoomMat<T>)> =
+            active.iter().zip(trans.iter()).map(|(&i, a)| (a, &states[i])).collect();
+        let stepped = lmme_batched(&pairs);
+        for (new_state, &i) in stepped.into_iter().zip(active.iter()) {
+            states[i] = new_state;
+            let failed = states[i].has_nan() || !states[i].max_logmag().is_finite();
+            if failed {
+                results[i] = Some(ChainResult {
+                    method,
+                    d,
+                    steps_completed: t,
+                    failed: true,
+                    final_max_logmag: states[i].max_logmag().to_f64(),
+                });
+            } else if t + 1 == specs[i].steps {
+                results[i] = Some(ChainResult {
+                    method,
+                    d,
+                    steps_completed: specs[i].steps,
+                    failed: false,
+                    final_max_logmag: states[i].max_logmag().to_f64(),
+                });
+            }
+        }
+    }
+    results.into_iter().map(|r| r.expect("every chain resolved")).collect()
+}
+
 /// GOOM chain through the AOT `chain_block_d{d}` artifact: the driver
 /// streams blocks of K pre-sampled transition GOOMs; the compiled graph
 /// scans each block and returns the carried state + growth trace.
@@ -326,6 +402,29 @@ mod tests {
         let res = run_chain(Method::GoomC128, 32, 2000, 13, None).unwrap();
         assert!(!res.failed);
         assert!(res.final_max_logmag > 1000.0);
+    }
+
+    #[test]
+    fn batched_goom_chains_match_solo_runs_exactly() {
+        // Mixed horizons and seeds in one batch: every chain must land on
+        // exactly the same state statistics as its solo run — this is the
+        // invariant that lets the server cache solo results and serve them
+        // for requests later executed in a batch (and vice versa).
+        let specs = [
+            ChainSpec { steps: 120, seed: 7 },
+            ChainSpec { steps: 37, seed: 8 },
+            ChainSpec { steps: 0, seed: 9 },
+            ChainSpec { steps: 120, seed: 7 }, // duplicate of the first
+        ];
+        let batched = run_chain_goom_batched::<f32>(8, &specs);
+        for (spec, got) in specs.iter().zip(&batched) {
+            let solo = run_chain(Method::GoomC64, 8, spec.steps, spec.seed, None).unwrap();
+            assert_eq!(got.steps_completed, solo.steps_completed);
+            assert_eq!(got.failed, solo.failed);
+            assert_eq!(got.final_max_logmag, solo.final_max_logmag, "seed {}", spec.seed);
+        }
+        // Identical requests produce identical results within the batch too.
+        assert_eq!(batched[0].final_max_logmag, batched[3].final_max_logmag);
     }
 
     #[test]

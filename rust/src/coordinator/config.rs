@@ -85,6 +85,10 @@ impl Config {
         self.parse_or(key, default)
     }
 
+    pub fn u16(&self, key: &str, default: u16) -> Result<u16> {
+        self.parse_or(key, default)
+    }
+
     pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
         self.parse_or(key, default)
     }

@@ -5,11 +5,41 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Samples kept per timer for percentile estimates. Totals (count/sum) stay
+/// exact and all-time; the sample window is a ring so a long-lived daemon
+/// recording per-request latencies holds bounded memory.
+const TIMER_WINDOW: usize = 4096;
+
+#[derive(Debug, Default, Clone)]
+struct Timer {
+    /// Ring buffer of the most recent samples (percentiles).
+    window: Vec<f64>,
+    /// Next overwrite position once the window is full.
+    next: usize,
+    /// All-time sample count.
+    count: u64,
+    /// All-time sum of samples.
+    sum: f64,
+}
+
+impl Timer {
+    fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.sum += secs;
+        if self.window.len() < TIMER_WINDOW {
+            self.window.push(secs);
+        } else {
+            self.window[self.next] = secs;
+            self.next = (self.next + 1) % TIMER_WINDOW;
+        }
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
-    timers: BTreeMap<String, Vec<f64>>,
+    timers: BTreeMap<String, Timer>,
 }
 
 impl Metrics {
@@ -26,7 +56,7 @@ impl Metrics {
     }
 
     pub fn record_secs(&mut self, name: &str, secs: f64) {
-        self.timers.entry(name.to_string()).or_default().push(secs);
+        self.timers.entry(name.to_string()).or_default().record(secs);
     }
 
     /// Time a closure under the named timer.
@@ -46,15 +76,49 @@ impl Metrics {
     }
 
     pub fn timer_total(&self, name: &str) -> f64 {
-        self.timers.get(name).map(|v| v.iter().sum()).unwrap_or(0.0)
+        self.timers.get(name).map_or(0.0, |t| t.sum)
     }
 
     pub fn timer_mean(&self, name: &str) -> Option<f64> {
-        let v = self.timers.get(name)?;
-        if v.is_empty() {
+        let t = self.timers.get(name)?;
+        if t.count == 0 {
             return None;
         }
-        Some(v.iter().sum::<f64>() / v.len() as f64)
+        Some(t.sum / t.count as f64)
+    }
+
+    /// All-time sample count (exact even after the window wraps).
+    pub fn timer_count(&self, name: &str) -> usize {
+        self.timers.get(name).map_or(0, |t| t.count as usize)
+    }
+
+    /// Nearest-rank percentile (q in [0, 1]) over the timer's recent-sample
+    /// window (last [`TIMER_WINDOW`] samples). The serving layer reports
+    /// p50/p95/p99 latency through this.
+    pub fn timer_percentile(&self, name: &str, q: f64) -> Option<f64> {
+        let t = self.timers.get(name)?;
+        if t.window.is_empty() {
+            return None;
+        }
+        let mut sorted = t.window.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite timer samples"));
+        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(sorted[idx])
+    }
+
+    /// Iterate counters (name, value) — the serving layer's `metrics` op
+    /// serializes these to the wire.
+    pub fn counters_iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges_iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate timer names and their recent-sample windows.
+    pub fn timers_iter(&self) -> impl Iterator<Item = (&str, &[f64])> {
+        self.timers.iter().map(|(k, t)| (k.as_str(), t.window.as_slice()))
     }
 
     /// Human-readable summary block.
@@ -74,13 +138,12 @@ impl Metrics {
         }
         if !self.timers.is_empty() {
             out.push_str("timers:\n");
-            for (k, v) in &self.timers {
-                let total: f64 = v.iter().sum();
+            for (k, t) in &self.timers {
                 out.push_str(&format!(
                     "  {k}: n={} total={} mean={}\n",
-                    v.len(),
-                    crate::util::timing::fmt_duration(total),
-                    crate::util::timing::fmt_duration(total / v.len() as f64),
+                    t.count,
+                    crate::util::timing::fmt_duration(t.sum),
+                    crate::util::timing::fmt_duration(t.sum / t.count.max(1) as f64),
                 ));
             }
         }
@@ -109,9 +172,49 @@ mod tests {
         let x = m.time("work", || 21 * 2);
         assert_eq!(x, 42);
         m.record_secs("work", 0.5);
-        assert_eq!(m.timers.get("work").unwrap().len(), 2);
+        assert_eq!(m.timer_count("work"), 2);
         assert!(m.timer_total("work") >= 0.5);
         assert!(m.timer_mean("work").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn timer_window_is_bounded_but_totals_stay_exact() {
+        let mut m = Metrics::new();
+        let n = TIMER_WINDOW + 500;
+        for i in 0..n {
+            m.record_secs("lat", i as f64);
+        }
+        // All-time stats are exact...
+        assert_eq!(m.timer_count("lat"), n);
+        let want_sum = (n * (n - 1) / 2) as f64;
+        assert!((m.timer_total("lat") - want_sum).abs() < 1e-6 * want_sum);
+        // ...while the percentile window holds only the most recent samples
+        // (the 500 oldest were overwritten), keeping memory bounded.
+        let (_, window) = m.timers_iter().next().unwrap();
+        assert_eq!(window.len(), TIMER_WINDOW);
+        assert!(m.timer_percentile("lat", 0.0).unwrap() >= 0.0);
+        assert!(m.timer_percentile("lat", 1.0).unwrap() >= (n - 1) as f64 - 0.5);
+    }
+
+    #[test]
+    fn percentiles_and_iteration() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_secs("lat", i as f64);
+        }
+        assert_eq!(m.timer_count("lat"), 100);
+        assert_eq!(m.timer_percentile("lat", 0.0), Some(1.0));
+        assert_eq!(m.timer_percentile("lat", 1.0), Some(100.0));
+        let p50 = m.timer_percentile("lat", 0.5).unwrap();
+        assert!((50.0..=51.0).contains(&p50), "p50 = {p50}");
+        let p99 = m.timer_percentile("lat", 0.99).unwrap();
+        assert!((98.0..=100.0).contains(&p99), "p99 = {p99}");
+        assert_eq!(m.timer_percentile("missing", 0.5), None);
+        m.incr("a", 2);
+        m.gauge("g", 1.5);
+        assert_eq!(m.counters_iter().collect::<Vec<_>>(), vec![("a", 2)]);
+        assert_eq!(m.gauges_iter().collect::<Vec<_>>(), vec![("g", 1.5)]);
+        assert_eq!(m.timers_iter().count(), 1);
     }
 
     #[test]

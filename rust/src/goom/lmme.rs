@@ -62,6 +62,24 @@ fn col_scales<T: GoomFloat>(b: &GoomMat<T>) -> Vec<T> {
     scales
 }
 
+/// Reusable interim buffers for [`lmme`]: the scaled exponentials and the
+/// real product. One instance serves any sequence of calls; buffers grow to
+/// the largest shape seen and are reused thereafter (the win for batched
+/// serving, where thousands of same-shape multiplies would otherwise each
+/// allocate three `n·d`-sized vectors).
+#[derive(Debug, Default)]
+pub struct LmmeScratch {
+    ea: Vec<f64>,
+    eb: Vec<f64>,
+    prod: Vec<f64>,
+}
+
+impl LmmeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// The paper's compromise LMME (eq. 10):
 /// `LMME(A', B') = log( exp(A' - a_i) · exp(B' - b_k) ) + a_i + b_k`.
 ///
@@ -69,13 +87,25 @@ fn col_scales<T: GoomFloat>(b: &GoomMat<T>) -> Vec<T> {
 /// the CUDA implementation runs the scaled product over the component float
 /// type; scaling guarantees every interim entry is in [-d, d].
 pub fn lmme<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
+    lmme_with_scratch(a, b, &mut LmmeScratch::new())
+}
+
+/// [`lmme`] with caller-owned interim buffers. Bit-identical to [`lmme`]
+/// (same operations in the same order); only the allocations differ.
+pub fn lmme_with_scratch<T: GoomFloat>(
+    a: &GoomMat<T>,
+    b: &GoomMat<T>,
+    scratch: &mut LmmeScratch,
+) -> GoomMat<T> {
     assert_eq!(a.cols, b.rows, "lmme shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let (n, d, m) = (a.rows, a.cols, b.cols);
     let ascale = row_scales(a);
     let bscale = col_scales(b);
 
     // Scaled exponentials (entries in [-1, 1]).
-    let mut ea = vec![0.0f64; n * d];
+    let ea = &mut scratch.ea;
+    ea.clear();
+    ea.resize(n * d, 0.0);
     for i in 0..n {
         let s = ascale[i].to_f64();
         for j in 0..d {
@@ -83,7 +113,9 @@ pub fn lmme<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
             ea[idx] = a.sign[idx].to_f64() * (a.logmag[idx].to_f64() - s).exp();
         }
     }
-    let mut eb = vec![0.0f64; d * m];
+    let eb = &mut scratch.eb;
+    eb.clear();
+    eb.resize(d * m, 0.0);
     for j in 0..d {
         for k in 0..m {
             let idx = j * m + k;
@@ -92,7 +124,9 @@ pub fn lmme<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
     }
 
     // Real matmul on the scaled values (i-k-j order, branch-free inner loop).
-    let mut prod = vec![0.0f64; n * m];
+    let prod = &mut scratch.prod;
+    prod.clear();
+    prod.resize(n * m, 0.0);
     for i in 0..n {
         let orow = &mut prod[i * m..(i + 1) * m];
         for j in 0..d {
@@ -121,6 +155,36 @@ pub fn lmme<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
         }
     }
     out
+}
+
+/// One stacked LMME pass over a batch of independent same-shape pairs —
+/// the serving layer's entry point for batching concurrent chain requests.
+///
+/// Results are bit-identical to calling [`lmme`] on each pair (the pairs
+/// are independent; the batch shares one interim-buffer allocation and one
+/// pass of the dispatch overhead, which is exactly the trade a stacked
+/// `[B, n, m]` cuBLAS/XLA batch matmul makes on device).
+///
+/// Panics if the batch is heterogeneous in shape (callers group by shape —
+/// the server's batch key includes the dimension).
+pub fn lmme_batched<T: GoomFloat>(
+    pairs: &[(&GoomMat<T>, &GoomMat<T>)],
+) -> Vec<GoomMat<T>> {
+    let Some(((a0, b0), rest)) = pairs.split_first() else {
+        return Vec::new();
+    };
+    for (a, b) in rest {
+        assert_eq!(
+            (a.rows, a.cols, b.rows, b.cols),
+            (a0.rows, a0.cols, b0.rows, b0.cols),
+            "lmme_batched: heterogeneous batch"
+        );
+    }
+    let mut scratch = LmmeScratch::new();
+    pairs
+        .iter()
+        .map(|(a, b)| lmme_with_scratch(a, b, &mut scratch))
+        .collect()
 }
 
 /// Exact LMME (paper eq. 9): each output element is a signed log-sum-exp of
@@ -272,6 +336,30 @@ mod tests {
         for (x, y) in out.data.iter().zip(&real.data) {
             close(*x, *y, 1e-5, 1e-6).unwrap();
         }
+    }
+
+    #[test]
+    fn lmme_batched_matches_individual_calls_exactly() {
+        let mut rng = rng_from_seed(47);
+        let mats: Vec<(GoomMat<f64>, GoomMat<f64>)> = (0..6)
+            .map(|_| (GoomMat::randn(5, 5, &mut rng), GoomMat::randn(5, 5, &mut rng)))
+            .collect();
+        let pairs: Vec<(&GoomMat<f64>, &GoomMat<f64>)> =
+            mats.iter().map(|(a, b)| (a, b)).collect();
+        let batched = lmme_batched(&pairs);
+        assert_eq!(batched.len(), 6);
+        for ((a, b), got) in mats.iter().zip(&batched) {
+            // Same code path + same op order ⇒ exact equality, not "close".
+            let solo = lmme(a, b);
+            assert_eq!(solo.logmag, got.logmag);
+            assert_eq!(solo.sign, got.sign);
+        }
+        // Empty batch is a no-op, and scratch reuse across different shapes
+        // in separate batches stays correct.
+        assert!(lmme_batched::<f64>(&[]).is_empty());
+        let small = (GoomMat::<f64>::randn(2, 3, &mut rng), GoomMat::randn(3, 4, &mut rng));
+        let out = lmme_batched(&[(&small.0, &small.1)]);
+        assert_eq!(out[0].logmag, lmme(&small.0, &small.1).logmag);
     }
 
     #[test]

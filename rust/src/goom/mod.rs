@@ -20,7 +20,7 @@ mod scan;
 mod tensor;
 
 pub use float::GoomFloat;
-pub use lmme::{lmme, lmme_exact, lmme_vec};
+pub use lmme::{lmme, lmme_batched, lmme_exact, lmme_vec, lmme_with_scratch, LmmeScratch};
 pub use reset::{
     reset_combine, reset_scan_par, reset_scan_par_chunked, reset_scan_seq, ResetElem, ResetPair,
 };

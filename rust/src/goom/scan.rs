@@ -19,7 +19,15 @@
 //! then y).
 
 /// Sequential inclusive scan: `out[t] = combine(out[t-1], items[t])`.
-pub fn scan_seq<T: Clone>(items: &[T], combine: &(dyn Fn(&T, &T) -> T + Sync)) -> Vec<T> {
+///
+/// `combine` is a generic parameter (not `&dyn Fn`) so the combine —
+/// typically LMME — inlines into the hot loop instead of going through a
+/// vtable per application.
+pub fn scan_seq<T, F>(items: &[T], combine: F) -> Vec<T>
+where
+    T: Clone,
+    F: Fn(&T, &T) -> T,
+{
     let mut out = Vec::with_capacity(items.len());
     for (t, item) in items.iter().enumerate() {
         if t == 0 {
@@ -37,11 +45,11 @@ pub fn scan_seq<T: Clone>(items: &[T], combine: &(dyn Fn(&T, &T) -> T + Sync)) -
 /// Phase 1: each worker scans its chunk independently (parallel).
 /// Phase 2: exclusive scan of the chunk totals (sequential, length `threads`).
 /// Phase 3: each worker combines its chunk prefix into its outputs (parallel).
-pub fn scan_par<T: Clone + Send + Sync>(
-    items: &[T],
-    combine: &(dyn Fn(&T, &T) -> T + Sync),
-    threads: usize,
-) -> Vec<T> {
+pub fn scan_par<T, F>(items: &[T], combine: F, threads: usize) -> Vec<T>
+where
+    T: Clone + Send + Sync,
+    F: Fn(&T, &T) -> T + Sync,
+{
     scan_par_chunked(items, combine, threads, threads)
 }
 
@@ -52,12 +60,16 @@ pub fn scan_par<T: Clone + Send + Sync>(
 /// a reset scan — follows the chunk boundaries, while only `threads` OS
 /// threads do the work. The Lyapunov pipeline uses many chunks on this
 /// 1-core box to reproduce the paper's reset cadence.
-pub fn scan_par_chunked<T: Clone + Send + Sync>(
+pub fn scan_par_chunked<T, F>(
     items: &[T],
-    combine: &(dyn Fn(&T, &T) -> T + Sync),
+    combine: F,
     chunks_wanted: usize,
     threads: usize,
-) -> Vec<T> {
+) -> Vec<T>
+where
+    T: Clone + Send + Sync,
+    F: Fn(&T, &T) -> T + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -66,6 +78,8 @@ pub fn scan_par_chunked<T: Clone + Send + Sync>(
     if nchunks == 1 {
         return scan_seq(items, combine);
     }
+    // Share one borrow across the scoped worker threads (F: Sync).
+    let combine = &combine;
     let threads = threads.max(1).min(nchunks);
     let chunk = n.div_ceil(nchunks);
     let nchunks = n.div_ceil(chunk);
@@ -233,6 +247,71 @@ mod tests {
         let empty: Vec<i64> = vec![];
         assert!(scan_par(&empty, &|a, b| a + b, 4).is_empty());
         assert_eq!(scan_par(&[42i64], &|a, b| a + b, 4), vec![42]);
+    }
+
+    #[test]
+    fn chunked_empty_input_all_configs() {
+        let empty: Vec<String> = vec![];
+        let combine = |a: &String, b: &String| format!("{a}{b}");
+        for (chunks, threads) in [(0usize, 0usize), (1, 1), (7, 3), (64, 2)] {
+            assert!(scan_par_chunked(&empty, &combine, chunks, threads).is_empty());
+        }
+    }
+
+    #[test]
+    fn chunked_with_fewer_items_than_chunks() {
+        // n < chunks: the chunk count must clamp to n (one item per chunk)
+        // and still produce the exact sequential result.
+        let items: Vec<String> = (0..5).map(|i| format!("{i}.")).collect();
+        let combine = |a: &String, b: &String| format!("{a}{b}");
+        let seq = scan_seq(&items, &combine);
+        for chunks in [6usize, 16, 1000] {
+            for threads in [1usize, 2, 8] {
+                let par = scan_par_chunked(&items, &combine, chunks, threads);
+                assert_eq!(par, seq, "chunks={chunks} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_single_chunk_is_sequential() {
+        // chunks = 1 must take the sequential path regardless of threads.
+        let items: Vec<i64> = (1..=100).collect();
+        let seq = scan_seq(&items, &|a, b| a + b);
+        for threads in [0usize, 1, 4] {
+            assert_eq!(scan_par_chunked(&items, &|a, b| a + b, 1, threads), seq);
+        }
+        // chunks = 0 clamps up to 1 (also sequential).
+        assert_eq!(scan_par_chunked(&items, &|a, b| a + b, 0, 4), seq);
+    }
+
+    #[test]
+    fn chunked_noncommutative_equivalence_across_shapes() {
+        // String concatenation is associative but NOT commutative — any
+        // argument-order bug in phase 2/3 scrambles the output. Sweep chunk
+        // counts that divide n evenly, unevenly, and degenerately.
+        let items: Vec<String> = (0..41).map(|i| format!("{i},")).collect();
+        let combine = |a: &String, b: &String| format!("{a}{b}");
+        let seq = scan_seq(&items, &combine);
+        for chunks in [2usize, 3, 5, 8, 40, 41] {
+            for threads in [1usize, 2, 5] {
+                let par = scan_par_chunked(&items, &combine, chunks, threads);
+                assert_eq!(par, seq, "chunks={chunks} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn combine_accepts_plain_fn_items() {
+        // The monomorphized signature must keep accepting fn pointers and
+        // owned closures, not just references.
+        fn add(a: &i64, b: &i64) -> i64 {
+            a + b
+        }
+        let items: Vec<i64> = (1..=10).collect();
+        assert_eq!(scan_seq(&items, add).last(), Some(&55));
+        assert_eq!(scan_par_chunked(&items, add, 3, 2).last(), Some(&55));
+        assert_eq!(scan_par(&items, |a: &i64, b: &i64| a + b, 3).last(), Some(&55));
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //!   `python/compile/aot.py` (HLO text) and executes them natively.
 //! * [`rnn`] — the training driver for the paper's §4.3 GOOM-SSM RNN.
 //! * [`coordinator`] — experiment registry, config, metrics, launcher.
+//! * [`server`] — `goomd`, the batched GOOM compute service: a TCP daemon
+//!   (newline-delimited JSON) serving chain/scan/LLE requests through a
+//!   persistent worker pool with backpressure, same-shape request batching
+//!   (one stacked LMME pass), and an LRU cache over seeded requests. See
+//!   `docs/SERVING.md` for the wire protocol.
 
 pub mod chain;
 pub mod coordinator;
@@ -29,4 +34,5 @@ pub mod lyapunov;
 pub mod rng;
 pub mod rnn;
 pub mod runtime;
+pub mod server;
 pub mod util;

@@ -6,14 +6,17 @@
 //! repro all [--key=val ...]           # smoke-run every experiment
 //! repro config <name>                 # show the resolved config
 //! repro systems                       # list the dynamical-systems dataset
+//! repro serve [--port ...]            # run goomd, the GOOM compute daemon
+//! repro loadgen [--clients ...]       # hammer a live daemon, report latency
 //! ```
 //!
 //! Config file: `repro.conf` in the working directory (key = value lines),
 //! overridden per-run by `--key=value` CLI options.
 
 use anyhow::Result;
-use goomrs::coordinator::{self, Config, RunContext};
+use goomrs::coordinator::{self, Config, Metrics, RunContext};
 use goomrs::dynsys;
+use goomrs::server::{self, LoadgenConfig, ServeConfig};
 use goomrs::util::cli::Args;
 
 fn main() {
@@ -76,6 +79,8 @@ fn dispatch(args: &Args) -> Result<()> {
                 .clone();
             run_one(&name, args)
         }
+        Some("serve") => serve(args),
+        Some("loadgen") => loadgen(args),
         Some("all") => {
             for e in coordinator::registry() {
                 println!("\n=== {} ===", e.name());
@@ -102,6 +107,93 @@ fn resolve_config(exp: &dyn coordinator::Experiment, args: &Args) -> Result<Conf
     Ok(cfg)
 }
 
+/// `repro serve [--port --workers --queue-depth --batch-max --cache
+/// --max-request-bytes]` with the same defaults < repro.conf < CLI layering
+/// as experiments (conf keys: serve_port, serve_workers, ...).
+fn serve(args: &Args) -> Result<()> {
+    let mut cfg = Config::new();
+    cfg.load_file("repro.conf", false)?;
+    cfg.apply_cli(args);
+    let defaults = ServeConfig::default();
+    let serve_cfg = ServeConfig {
+        port: cfg.u16("port", cfg.u16("serve_port", defaults.port)?)?,
+        host: cfg
+            .get("host")
+            .or_else(|| cfg.get("serve_host"))
+            .unwrap_or(&defaults.host)
+            .to_string(),
+        workers: cfg.usize("workers", cfg.usize("serve_workers", defaults.workers)?)?,
+        queue_depth: cfg
+            .usize("queue-depth", cfg.usize("serve_queue_depth", defaults.queue_depth)?)?,
+        batch_max: cfg
+            .usize("batch-max", cfg.usize("serve_batch_max", defaults.batch_max)?)?,
+        cache_capacity: cfg
+            .usize("cache", cfg.usize("serve_cache", defaults.cache_capacity)?)?,
+        max_request_bytes: cfg.usize(
+            "max-request-bytes",
+            cfg.usize("serve_max_request_bytes", defaults.max_request_bytes)?,
+        )?,
+        retry_after_ms: cfg
+            .u64("retry-after-ms", cfg.u64("serve_retry_after_ms", defaults.retry_after_ms)?)?,
+        max_connections: cfg.usize(
+            "max-connections",
+            cfg.usize("serve_max_connections", defaults.max_connections)?,
+        )?,
+    };
+    println!(
+        "goomd: {} workers, queue depth {}, batch max {}, cache {} entries",
+        serve_cfg.workers,
+        serve_cfg.queue_depth,
+        serve_cfg.batch_max,
+        serve_cfg.cache_capacity
+    );
+    server::serve_blocking(serve_cfg)
+}
+
+/// `repro loadgen [--addr --clients --requests --d --steps --method
+/// --seed]`: drive a live daemon and report throughput + latency
+/// percentiles through the standard metrics summary.
+fn loadgen(args: &Args) -> Result<()> {
+    let defaults = LoadgenConfig::default();
+    let shared_seed = args.get_parsed::<u64>("seed")?;
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", &defaults.addr).to_string(),
+        clients: args.get_usize("clients", defaults.clients)?,
+        requests: args.get_usize("requests", defaults.requests)?,
+        d: args.get_usize("d", defaults.d)?,
+        steps: args.get_usize("steps", defaults.steps)?,
+        method: args.get_or("method", &defaults.method).to_string(),
+        shared_seed,
+    };
+    println!(
+        "loadgen: {} clients x {} requests → {} (chain {} d={} steps={}{})",
+        cfg.clients,
+        cfg.requests,
+        cfg.addr,
+        cfg.method,
+        cfg.d,
+        cfg.steps,
+        cfg.shared_seed.map_or(String::new(), |s| format!(" seed={s}")),
+    );
+    let mut metrics = Metrics::new();
+    let report = server::loadgen(&cfg, &mut metrics)?;
+    println!(
+        "\n  requests: {} ok, {} errors, {} served from cache, {} retries",
+        report.ok, report.errors, report.cached, report.retries
+    );
+    println!("  elapsed:  {:.3} s", report.elapsed_s);
+    println!("  throughput: {:.1} req/s", report.throughput_rps);
+    println!(
+        "  latency:  p50 {:.2} ms   p95 {:.2} ms   p99 {:.2} ms",
+        report.p50_ms, report.p95_ms, report.p99_ms
+    );
+    println!("\n{}", metrics.summary());
+    if report.errors > 0 {
+        anyhow::bail!("{} requests failed", report.errors);
+    }
+    Ok(())
+}
+
 fn run_one(name: &str, args: &Args) -> Result<()> {
     let exp = coordinator::find(name)?;
     let cfg = resolve_config(exp.as_ref(), args)?;
@@ -125,6 +217,14 @@ USAGE:
   repro <name> [--key=val ...]      shorthand for `run`
   repro config <name>               show resolved config
   repro all                         run every experiment at default scale
+  repro serve [--port=7077 --workers=4 --queue-depth=64 --batch-max=16
+               --cache=1024 --max-request-bytes=1048576 --max-connections=256]
+                                    run goomd, the GOOM compute daemon
+                                    (newline-JSON over TCP; see docs/SERVING.md)
+  repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
+                 --method=goomc64 --d=8 --steps=500 --seed=N]
+                                    drive a live daemon; print throughput and
+                                    p50/p95/p99 latency
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Artifacts: set GOOMRS_ARTIFACTS or run from the repo root (./artifacts)."

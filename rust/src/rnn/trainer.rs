@@ -5,7 +5,7 @@
 //! `rnn_*_train_step` artifact. Python never runs here — the full
 //! fwd+bwd+Adam update is inside the compiled graph.
 
-use crate::runtime::{lit_i32, lit_scalar_i32, Engine, HostTensor};
+use crate::runtime::{lit_i32, lit_scalar_i32, Engine, HostTensor, Literal};
 use anyhow::{bail, Context, Result};
 
 /// RNN configuration recovered from the artifact manifest.
@@ -25,7 +25,7 @@ pub struct Trainer<'e> {
     artifact: String,
     pub spec: RnnSpec,
     /// params ++ adam_m ++ adam_v, in manifest order.
-    state: Vec<xla::Literal>,
+    state: Vec<Literal>,
     pub step: i32,
     pub loss_history: Vec<f32>,
 }
@@ -81,7 +81,7 @@ impl<'e> Trainer<'e> {
         let tgt_lit = lit_i32(targets, target_shape)?;
         let step_lit = lit_scalar_i32(self.step);
         // Inputs by reference: state stays owned by the trainer.
-        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        let mut inputs: Vec<&Literal> = self.state.iter().collect();
         inputs.push(&step_lit);
         inputs.push(&tok_lit);
         inputs.push(&tgt_lit);
@@ -103,7 +103,7 @@ impl<'e> Trainer<'e> {
         Ok(loss)
     }
 
-    fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+    fn run_refs(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
         // Engine::run takes owned literals; replicate its body for refs.
         self.engine.run_borrowed(&self.artifact, inputs)
     }
@@ -116,7 +116,7 @@ impl<'e> Trainer<'e> {
         let t = self.spec.seq_len;
         let tok_lit = lit_i32(tokens, &[b, t])?;
         let n = self.spec.param_names.len();
-        let mut inputs: Vec<&xla::Literal> = self.state[..n].iter().collect();
+        let mut inputs: Vec<&Literal> = self.state[..n].iter().collect();
         inputs.push(&tok_lit);
         let out = self.engine.run_borrowed(&fwd_name, &inputs)?;
         Ok(out[0].to_vec::<f32>()?)
@@ -148,7 +148,7 @@ impl<'e> Trainer<'e> {
     }
 }
 
-fn host_tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+fn host_tensor_to_literal(t: &HostTensor) -> Result<Literal> {
     match t {
         HostTensor::F32 { shape, data } => crate::runtime::lit_f32(data, shape),
         HostTensor::I32 { shape, data } => crate::runtime::lit_i32(data, shape),
@@ -156,7 +156,7 @@ fn host_tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::rnn::tasks::CopyMemoryTask;

@@ -13,6 +13,10 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
+/// The literal type callers outside this module name (the stub build
+/// exports its own `Literal` under the same path).
+pub type Literal = xla::Literal;
+
 /// The runtime engine. One per process; construction builds the PJRT client.
 pub struct Engine {
     client: xla::PjRtClient,

@@ -1,0 +1,136 @@
+//! No-XLA stand-in for [`super::engine`], compiled when the `xla` cargo
+//! feature is off (the default).
+//!
+//! The API surface matches the real engine exactly, so every caller —
+//! `chain::run_chain_hlo`, the RNN trainer, the experiment registry —
+//! compiles unchanged. Construction fails with a clear error, which the
+//! callers that probe with `Engine::from_default_artifacts().ok()` already
+//! treat as "no engine available": experiments skip their HLO columns
+//! instead of crashing.
+
+use super::manifest::Artifact;
+use crate::goom::GoomMat;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+fn built_without_xla() -> anyhow::Error {
+    anyhow!(
+        "goomrs was built without XLA support; rebuild with `cargo build \
+         --features xla` (and a real xla-rs checkout in place of \
+         third_party/xla-stub) to execute AOT artifacts"
+    )
+}
+
+/// Opaque placeholder for `xla::Literal`. Values of this type cannot carry
+/// data; every constructor that could need one fails first.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(built_without_xla())
+    }
+}
+
+/// The stub engine: carries no state because [`Engine::new`] never succeeds.
+pub struct Engine {
+    _unconstructable: (),
+}
+
+impl Engine {
+    pub fn new(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(built_without_xla())
+    }
+
+    pub fn from_default_artifacts() -> Result<Self> {
+        Err(built_without_xla())
+    }
+
+    pub fn manifest(&self) -> &super::manifest::Manifest {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn run(&self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(built_without_xla())
+    }
+
+    pub fn run_borrowed(
+        &self,
+        _name: &str,
+        _inputs: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        Err(built_without_xla())
+    }
+
+    pub fn warmup(&self, _name: &str) -> Result<()> {
+        Err(built_without_xla())
+    }
+
+    pub fn artifact(&self, _name: &str) -> Result<&Artifact> {
+        Err(built_without_xla())
+    }
+}
+
+// ----------------------------------------------------- literal conversion --
+
+pub fn lit_f32(_data: &[f32], _shape: &[usize]) -> Result<Literal> {
+    Err(built_without_xla())
+}
+
+pub fn lit_i32(_data: &[i32], _shape: &[usize]) -> Result<Literal> {
+    Err(built_without_xla())
+}
+
+pub fn lit_scalar_f32(_x: f32) -> Literal {
+    Literal
+}
+
+pub fn lit_scalar_i32(_x: i32) -> Literal {
+    Literal
+}
+
+pub fn goommat_to_literals(_m: &GoomMat<f32>) -> Result<(Literal, Literal)> {
+    Err(built_without_xla())
+}
+
+pub fn goommat_stack_to_literals(
+    _ms: &[GoomMat<f32>],
+) -> Result<(Literal, Literal)> {
+    Err(built_without_xla())
+}
+
+pub fn literals_to_goommat(
+    _logmag: &Literal,
+    _sign: &Literal,
+    _rows: usize,
+    _cols: usize,
+) -> Result<GoomMat<f32>> {
+    Err(built_without_xla())
+}
+
+pub fn literal_f32_vec(_lit: &Literal) -> Result<Vec<f32>> {
+    Err(built_without_xla())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_with_clear_message() {
+        let err = Engine::from_default_artifacts().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("without XLA"), "unhelpful stub error: {msg}");
+        assert!(Engine::new("/tmp/nowhere").is_err());
+        assert!(lit_f32(&[0.0], &[1]).is_err());
+        assert!(literal_f32_vec(&Literal).is_err());
+    }
+}

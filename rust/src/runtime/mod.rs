@@ -3,7 +3,17 @@
 //! * [`manifest`] — the aot.py <-> runtime contract (JSON).
 //! * [`gbin`]     — tensor container for initial params/optimizer state.
 //! * [`engine`]   — PJRT client + executable cache + literal conversions.
+//!
+//! The engine comes in two builds. With the `xla` cargo feature, `engine`
+//! is the real PJRT path (requires the external `xla` crate and its native
+//! libraries). Without it (the default), `engine` is a dependency-free stub
+//! whose constructor returns a clear "built without XLA" error — every
+//! caller that probes for an engine with `.ok()` degrades gracefully.
 
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod gbin;
 pub mod manifest;
@@ -11,6 +21,7 @@ pub mod manifest;
 pub use engine::{
     goommat_stack_to_literals, goommat_to_literals, lit_f32, lit_i32,
     lit_scalar_f32, lit_scalar_i32, literal_f32_vec, literals_to_goommat, Engine,
+    Literal,
 };
 pub use gbin::{load_gbin, HostTensor};
 pub use manifest::{default_artifacts_dir, Artifact, DType, Manifest, TensorSpec};

@@ -1,0 +1,133 @@
+//! Result cache for deterministic requests.
+//!
+//! Every cacheable request (chain/scan/lle — all fully seeded, so their
+//! results are pure functions of the canonical request) maps to exactly one
+//! canonical key ([`crate::server::protocol::Request::canonical_key`]).
+//! Repeats are served from memory without touching the worker pool.
+//!
+//! The cache is LRU by *entry count*, not bytes: entries are small result
+//! documents (a chain result is ~5 numbers; a scan result is one `d×d`
+//! matrix), and the protocol bounds `d`, so count is a good-enough proxy.
+//! Eviction scans for the oldest stamp — O(n) on insert-at-capacity, which
+//! at the default capacity (1024) is noise next to the compute being cached.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    value: Json,
+    last_used: u64,
+}
+
+/// An LRU map from canonical request key to result document.
+#[derive(Debug)]
+pub struct LruCache {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<String, Entry>,
+}
+
+impl LruCache {
+    /// `capacity` = max entries; 0 disables caching entirely.
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, tick: 0, map: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch a clone of the cached result, bumping its recency.
+    pub fn get(&mut self, key: &str) -> Option<Json> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(key)?;
+        e.last_used = tick;
+        Some(e.value.clone())
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used one
+    /// when at capacity.
+    pub fn insert(&mut self, key: String, value: Json) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, Entry { value, last_used: self.tick });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    #[test]
+    fn hit_miss_and_overwrite() {
+        let mut c = LruCache::new(4);
+        assert!(c.is_empty());
+        assert_eq!(c.get("a"), None);
+        c.insert("a".into(), v(1.0));
+        assert_eq!(c.get("a"), Some(v(1.0)));
+        c.insert("a".into(), v(2.0));
+        assert_eq!(c.get("a"), Some(v(2.0)));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(3);
+        c.insert("a".into(), v(1.0));
+        c.insert("b".into(), v(2.0));
+        c.insert("c".into(), v(3.0));
+        // Touch "a" so "b" is now the oldest.
+        assert!(c.get("a").is_some());
+        c.insert("d".into(), v(4.0));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get("b"), None, "LRU entry must be evicted");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert!(c.get("d").is_some());
+    }
+
+    #[test]
+    fn refreshing_an_existing_key_does_not_evict() {
+        let mut c = LruCache::new(2);
+        c.insert("a".into(), v(1.0));
+        c.insert("b".into(), v(2.0));
+        c.insert("a".into(), v(3.0)); // refresh, not a new entry
+        assert_eq!(c.len(), 2);
+        assert!(c.get("b").is_some());
+        assert_eq!(c.get("a"), Some(v(3.0)));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = LruCache::new(0);
+        c.insert("a".into(), v(1.0));
+        assert!(c.is_empty());
+        assert_eq!(c.get("a"), None);
+    }
+}

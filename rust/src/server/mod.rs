@@ -1,0 +1,516 @@
+//! `goomd` — the batched GOOM compute service (layer 4).
+//!
+//! Turns the library's chain/scan/Lyapunov kernels into a long-lived,
+//! multi-client daemon: a std-only TCP listener speaking newline-delimited
+//! JSON ([`protocol`]), a persistent worker pool with a bounded queue,
+//! backpressure, and same-shape request batching ([`pool`]), and an LRU
+//! result cache over canonicalized seeded requests ([`cache`]).
+//!
+//! ```text
+//!   clients ── TCP ──► session threads ──► bounded queue ──► worker pool
+//!                        │   ▲                                │
+//!                        ▼   │ cached result                  ▼
+//!                       LRU cache ◄───── result fill ──── execute_batch
+//! ```
+//!
+//! This module is the seam later scaling work plugs into: sharding across
+//! processes, async I/O in the session layer, and multi-backend dispatch
+//! (native vs AOT/PJRT) in the executor are all local changes here.
+//!
+//! Entry points: `repro serve` ([`serve_blocking`]) and `repro loadgen`
+//! ([`loadgen`]); [`Server::start`] binds an ephemeral port for tests.
+
+pub mod cache;
+pub mod pool;
+pub mod protocol;
+pub mod session;
+
+pub use cache::LruCache;
+pub use pool::{Pool, SubmitError};
+pub use protocol::Request;
+pub use session::{Job, ServerInner};
+
+use crate::coordinator::Metrics;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Daemon tuning knobs (`repro serve --port=… --workers=… --queue-depth=…`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port; 0 = OS-assigned (tests).
+    pub port: u16,
+    /// Bind address.
+    pub host: String,
+    /// Worker threads executing jobs.
+    pub workers: usize,
+    /// Max jobs waiting in the queue before submissions are shed.
+    pub queue_depth: usize,
+    /// Max same-key jobs folded into one stacked pass.
+    pub batch_max: usize,
+    /// LRU result-cache entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Max bytes in one request line.
+    pub max_request_bytes: usize,
+    /// Backoff hint attached to queue-full rejections.
+    pub retry_after_ms: u64,
+    /// Max concurrent client connections (each costs a session thread);
+    /// connections past the cap are refused with an error line.
+    pub max_connections: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            port: 7077,
+            host: "127.0.0.1".to_string(),
+            workers: 4,
+            queue_depth: 64,
+            batch_max: 16,
+            cache_capacity: 1024,
+            max_request_bytes: 1 << 20,
+            retry_after_ms: 100,
+            max_connections: 256,
+        }
+    }
+}
+
+/// A running daemon: accept loop + worker pool, stoppable for tests.
+pub struct Server {
+    addr: SocketAddr,
+    inner: Arc<ServerInner>,
+    pool: Arc<Pool<Job>>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, start workers, and begin accepting in a background thread.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        // Non-blocking accept so the loop can observe the shutdown flag.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let inner = Arc::new(ServerInner::new(cfg.clone()));
+        let pool = {
+            let inner = Arc::clone(&inner);
+            Arc::new(Pool::new(
+                cfg.workers,
+                cfg.queue_depth,
+                cfg.batch_max,
+                |job: &Job| job.request.batch_key(),
+                move |batch| session::execute_batch(&inner, batch),
+            ))
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let max_connections = cfg.max_connections.max(1);
+        let accept_handle = {
+            let inner = Arc::clone(&inner);
+            let pool = Arc::clone(&pool);
+            let shutdown = Arc::clone(&shutdown);
+            // Connection-layer backpressure: every live session costs one
+            // OS thread, so cap them the same way the job queue is capped.
+            let active = Arc::new(AtomicUsize::new(0));
+            std::thread::Builder::new()
+                .name("goomd-accept".to_string())
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((mut stream, _peer)) => {
+                                // BSD-family accept() inherits the listener's
+                                // non-blocking flag; sessions need blocking
+                                // reads everywhere.
+                                if stream.set_nonblocking(false).is_err() {
+                                    continue; // drops (closes) the stream
+                                }
+                                if active.load(Ordering::SeqCst) >= max_connections {
+                                    let mut m =
+                                        inner.metrics.lock().expect("metrics lock");
+                                    m.incr("connections_rejected", 1);
+                                    drop(m);
+                                    let line = protocol::err_line(
+                                        &format!(
+                                            "server busy: connection limit \
+                                             ({max_connections}) reached"
+                                        ),
+                                        Some(inner.cfg.retry_after_ms),
+                                    );
+                                    let _ = stream.write_all(line.as_bytes());
+                                    let _ = stream.write_all(b"\n");
+                                    continue; // drops (closes) the stream
+                                }
+                                inner
+                                    .metrics
+                                    .lock()
+                                    .expect("metrics lock")
+                                    .incr("connections", 1);
+                                active.fetch_add(1, Ordering::SeqCst);
+                                let session_inner = Arc::clone(&inner);
+                                let session_pool = Arc::clone(&pool);
+                                let session_active = Arc::clone(&active);
+                                let spawned = std::thread::Builder::new()
+                                    .name("goomd-session".to_string())
+                                    .spawn(move || {
+                                        session::handle_connection(
+                                            stream,
+                                            &session_inner,
+                                            &session_pool,
+                                        );
+                                        session_active.fetch_sub(1, Ordering::SeqCst);
+                                    });
+                                if spawned.is_err() {
+                                    active.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(_) => {
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                        }
+                    }
+                })
+                .expect("spawning accept thread")
+        };
+        Ok(Server { addr, inner, pool, shutdown, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the daemon's metrics (text form).
+    pub fn metrics_summary(&self) -> String {
+        self.inner.metrics.lock().expect("metrics lock").summary()
+    }
+
+    /// Counter value by name (tests assert on cache hits etc.).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.metrics.lock().expect("metrics lock").counter(name)
+    }
+
+    /// Stop accepting, drain the pool, and join the accept thread.
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// `repro serve`: run the daemon until the process is killed.
+pub fn serve_blocking(cfg: ServeConfig) -> Result<()> {
+    let server = Server::start(cfg)?;
+    println!("goomd listening on {}", server.addr());
+    println!("  protocol: newline-delimited JSON — try: {{\"op\":\"info\"}}");
+    let started = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        let summary = server.metrics_summary();
+        if !summary.is_empty() {
+            println!(
+                "--- goomd metrics ({}s up) ---\n{summary}",
+                started.elapsed().as_secs()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- loadgen --
+
+/// `repro loadgen` knobs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Daemon address, e.g. "127.0.0.1:7077".
+    pub addr: String,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// Chain dimension / horizon the generated requests use.
+    pub d: usize,
+    pub steps: usize,
+    /// Method slug for the generated chain requests.
+    pub method: String,
+    /// When set, every request uses this seed (all cache hits after the
+    /// first); otherwise seeds are distinct per (client, request).
+    pub shared_seed: Option<u64>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7077".to_string(),
+            clients: 8,
+            requests: 32,
+            d: 8,
+            steps: 500,
+            method: "goomc64".to_string(),
+            shared_seed: None,
+        }
+    }
+}
+
+/// Aggregate loadgen outcome.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub total_requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub cached: usize,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Extra attempts spent on retry_after_ms backoffs (0 when the daemon
+    /// never shed load); the backoff time itself is inside the latencies.
+    pub retries: usize,
+}
+
+/// Hammer a live daemon with `clients` concurrent connections and report
+/// throughput + latency percentiles, recording everything into `metrics`.
+pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenReport> {
+    let (tx, rx) = mpsc::channel::<Result<ClientStats>>();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..cfg.clients.max(1) {
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let _ = tx.send(run_client(client as u64, &cfg));
+        }));
+    }
+    drop(tx);
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut errors = 0usize;
+    let mut cached = 0usize;
+    let mut retries = 0usize;
+    for _ in &handles {
+        let stats = rx
+            .recv()
+            .map_err(|_| anyhow!("loadgen client thread vanished"))??;
+        latencies.extend(stats.latencies);
+        errors += stats.errors;
+        cached += stats.cached;
+        retries += stats.retries;
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let total = cfg.clients.max(1) * cfg.requests;
+    let ok = latencies.len();
+    // Percentiles come from THIS run's samples only (a caller may reuse one
+    // Metrics across runs, whose timer window would blend them), but through
+    // the same `Metrics::timer_percentile` definition the daemon reports.
+    let mut this_run = Metrics::new();
+    for &l in &latencies {
+        metrics.record_secs("loadgen_latency", l);
+        this_run.record_secs("latency", l);
+    }
+    let pct = |q: f64| this_run.timer_percentile("latency", q).unwrap_or(0.0) * 1e3;
+    let report = LoadgenReport {
+        total_requests: total,
+        ok,
+        errors,
+        cached,
+        elapsed_s,
+        throughput_rps: ok as f64 / elapsed_s.max(1e-9),
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        retries,
+    };
+    metrics.incr("loadgen_requests", total as u64);
+    metrics.incr("loadgen_ok", ok as u64);
+    metrics.incr("loadgen_errors", errors as u64);
+    metrics.incr("loadgen_cached", cached as u64);
+    metrics.incr("loadgen_retries", retries as u64);
+    metrics.gauge("loadgen_throughput_rps", report.throughput_rps);
+    metrics.gauge("loadgen_p50_ms", report.p50_ms);
+    metrics.gauge("loadgen_p95_ms", report.p95_ms);
+    metrics.gauge("loadgen_p99_ms", report.p99_ms);
+    Ok(report)
+}
+
+/// Per-connection tallies a loadgen client thread reports back.
+struct ClientStats {
+    latencies: Vec<f64>,
+    errors: usize,
+    cached: usize,
+    retries: usize,
+}
+
+/// One loadgen connection: send `requests` chain requests, measure each.
+/// Queue-full rejections honor `retry_after_ms` and retry (bounded).
+fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to {}", cfg.addr))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+    let mut latencies = Vec::with_capacity(cfg.requests);
+    let mut errors = 0usize;
+    let mut cached = 0usize;
+    let mut retries = 0usize;
+    for r in 0..cfg.requests {
+        let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
+        let line =
+            protocol::encode_chain_request(&cfg.method, cfg.d, cfg.steps, seed);
+        let mut attempts = 0usize;
+        // Latency is client-observed end-to-end: the clock starts once per
+        // request and keeps running across retry_after_ms backoffs, so an
+        // overloaded daemon shows up in the percentiles instead of hiding
+        // behind restarted timers.
+        let t = Instant::now();
+        loop {
+            attempts += 1;
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            let mut resp = String::new();
+            if reader.read_line(&mut resp)? == 0 {
+                return Err(anyhow!("server closed the connection"));
+            }
+            let doc = json::parse(resp.trim())
+                .map_err(|e| anyhow!("unparseable response: {e}"))?;
+            let ok = doc.get("ok").and_then(Json::as_bool).unwrap_or(false);
+            if ok {
+                latencies.push(t.elapsed().as_secs_f64());
+                if doc.get("cached").and_then(Json::as_bool) == Some(true) {
+                    cached += 1;
+                }
+                break;
+            }
+            let retry = doc
+                .get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .map(|ms| ms as u64);
+            match retry {
+                Some(ms) if attempts < 50 => {
+                    retries += 1;
+                    std::thread::sleep(Duration::from_millis(ms.clamp(1, 1000)));
+                }
+                _ => {
+                    errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    Ok(ClientStats { latencies, errors, cached, retries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_config() -> ServeConfig {
+        ServeConfig {
+            port: 0,
+            workers: 2,
+            queue_depth: 16,
+            batch_max: 4,
+            cache_capacity: 32,
+            max_request_bytes: 64 * 1024,
+            retry_after_ms: 5,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn roundtrip(stream: &TcpStream, line: &str) -> Json {
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream.try_clone().unwrap());
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        json::parse(resp.trim()).unwrap()
+    }
+
+    #[test]
+    fn server_answers_info_and_metrics() {
+        let server = Server::start(test_config()).unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let info = roundtrip(&stream, r#"{"op":"info"}"#);
+        assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+        let result = info.get("result").unwrap();
+        assert_eq!(result.get("service").unwrap().as_str(), Some("goomd"));
+        assert_eq!(result.get("workers").unwrap().as_usize(), Some(2));
+        assert!(result.get("systems").unwrap().as_arr().unwrap().len() >= 20);
+        let metrics = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        let counters = metrics.get("result").unwrap().get("counters").unwrap();
+        assert!(counters.get("requests_total").unwrap().as_usize().unwrap() >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn repeated_seeded_chain_request_hits_the_cache() {
+        let server = Server::start(test_config()).unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let req = r#"{"op":"chain","method":"goomc64","d":4,"steps":50,"seed":11}"#;
+        let first = roundtrip(&stream, req);
+        assert_eq!(first.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(first.get("cached").unwrap().as_bool(), Some(false));
+        let second = roundtrip(&stream, req);
+        assert_eq!(second.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            first.get("result").unwrap(),
+            second.get("result").unwrap(),
+            "cached result must be identical"
+        );
+        // Default-field spelling maps to the same canonical key.
+        let third =
+            roundtrip(&stream, r#"{"op":"chain","d":4,"steps":50,"seed":11}"#);
+        assert_eq!(third.get("cached").unwrap().as_bool(), Some(true));
+        assert!(server.counter("cache_hits") >= 2);
+        server.stop();
+    }
+
+    #[test]
+    fn loadgen_reports_throughput_and_percentiles() {
+        let server = Server::start(test_config()).unwrap();
+        let mut metrics = Metrics::new();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 4,
+            requests: 6,
+            d: 4,
+            steps: 40,
+            method: "goomc64".to_string(),
+            shared_seed: None,
+        };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.total_requests, 24);
+        assert_eq!(report.ok, 24);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        assert_eq!(metrics.counter("loadgen_ok"), 24);
+        assert!(metrics.gauge_value("loadgen_p99_ms").is_some());
+        // Shared-seed run: everything after the very first compute is cached.
+        let cfg = LoadgenConfig { shared_seed: Some(7), ..cfg };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert!(report.cached >= report.ok - cfg.clients, "cached {} of {}", report.cached, report.ok);
+        server.stop();
+    }
+}

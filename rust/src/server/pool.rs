@@ -1,0 +1,352 @@
+//! Persistent worker pool with a bounded job queue, backpressure, and
+//! same-key batch draining.
+//!
+//! Served traffic must not spawn threads per request (`std::thread::scope`
+//! per call is fine for one-shot experiments, fatal for a daemon): the pool
+//! starts `workers` OS threads once and feeds them from a bounded
+//! `VecDeque`. When the queue is full, [`Pool::try_submit`] rejects
+//! immediately — the session layer turns that into a `retry_after_ms`
+//! response instead of letting latency collapse under overload.
+//!
+//! Batching: when a worker pops a job whose `batch_key` is `Some(k)`, it
+//! also drains every other queued job with the same key (up to
+//! `batch_max`), handing the whole group to the executor in one call. The
+//! server uses this to fold concurrent same-shape GOOM chain requests into
+//! one stacked LMME pass ([`crate::goom::lmme_batched`]).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Why a submission was rejected; the job is handed back so its reply
+/// channel can carry the rejection to the client.
+#[derive(Debug)]
+pub enum SubmitError<J> {
+    /// Queue at capacity — shed load, ask the client to retry.
+    Full(J),
+    /// Pool is shutting down.
+    Shutdown(J),
+}
+
+struct QueueState<J> {
+    queue: VecDeque<J>,
+    shutdown: bool,
+}
+
+struct Shared<J> {
+    state: Mutex<QueueState<J>>,
+    available: Condvar,
+    depth: usize,
+    batch_max: usize,
+}
+
+/// The worker pool. Generic over the job type; the batch-key and executor
+/// closures are fixed at construction.
+pub struct Pool<J: Send + 'static> {
+    shared: Arc<Shared<J>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl<J: Send + 'static> Pool<J> {
+    /// Start `workers` threads (min 1). `queue_depth` bounds jobs *waiting*
+    /// (jobs being executed don't count). `batch_max` caps how many
+    /// same-key jobs one executor call may receive (min 1).
+    pub fn new<K, E>(
+        workers: usize,
+        queue_depth: usize,
+        batch_max: usize,
+        batch_key: K,
+        exec: E,
+    ) -> Self
+    where
+        K: Fn(&J) -> Option<String> + Send + Sync + 'static,
+        E: Fn(Vec<J>) + Send + Sync + 'static,
+    {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            depth: queue_depth.max(1),
+            batch_max: batch_max.max(1),
+        });
+        let batch_key = Arc::new(batch_key);
+        let exec = Arc::new(exec);
+        let handles = (0..workers.max(1))
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let batch_key = Arc::clone(&batch_key);
+                let exec = Arc::clone(&exec);
+                std::thread::Builder::new()
+                    .name(format!("goomd-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, &*batch_key, &*exec))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, workers: Mutex::new(handles) }
+    }
+
+    /// Non-blocking submit; rejects when the queue is at capacity.
+    pub fn try_submit(&self, job: J) -> Result<(), SubmitError<J>> {
+        let mut st = self.shared.state.lock().expect("pool lock");
+        if st.shutdown {
+            return Err(SubmitError::Shutdown(job));
+        }
+        if st.queue.len() >= self.shared.depth {
+            return Err(SubmitError::Full(job));
+        }
+        st.queue.push_back(job);
+        drop(st);
+        self.shared.available.notify_one();
+        Ok(())
+    }
+
+    /// Jobs currently waiting (not counting in-flight execution).
+    pub fn queue_len(&self) -> usize {
+        self.shared.state.lock().expect("pool lock").queue.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth
+    }
+
+    /// Stop accepting work, wake every worker, and join them. Queued but
+    /// unstarted jobs are dropped (their reply channels close, which the
+    /// session layer reports as a shutdown error).
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            st.shutdown = true;
+            st.queue.clear();
+        }
+        self.shared.available.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("pool workers lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<J: Send + 'static> Drop for Pool<J> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop<J, K, E>(shared: &Shared<J>, batch_key: &K, exec: &E)
+where
+    J: Send,
+    K: Fn(&J) -> Option<String>,
+    E: Fn(Vec<J>),
+{
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().expect("pool lock");
+            loop {
+                if let Some(first) = st.queue.pop_front() {
+                    let key = batch_key(&first);
+                    let mut batch = vec![first];
+                    if let Some(key) = key {
+                        let mut i = 0;
+                        while i < st.queue.len() && batch.len() < shared.batch_max {
+                            if batch_key(&st.queue[i]).as_deref() == Some(key.as_str()) {
+                                batch.push(st.queue.remove(i).expect("index in bounds"));
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                    break batch;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.available.wait(st).expect("pool condvar");
+            }
+        };
+        exec(batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    /// Test job: an id, an optional batch key, and a reply channel the
+    /// executor reports (id, batch_size) through. `gate` (when set) makes
+    /// the executor block until released, so tests control worker timing.
+    struct TestJob {
+        id: usize,
+        key: Option<String>,
+        gate: Option<mpsc::Receiver<()>>,
+        started: Option<mpsc::Sender<()>>,
+        reply: mpsc::Sender<(usize, usize)>,
+    }
+
+    fn pool_for_tests(workers: usize, depth: usize, batch_max: usize) -> Pool<TestJob> {
+        Pool::new(
+            workers,
+            depth,
+            batch_max,
+            |j: &TestJob| j.key.clone(),
+            |batch: Vec<TestJob>| {
+                let size = batch.len();
+                for j in batch {
+                    if let Some(s) = &j.started {
+                        s.send(()).unwrap();
+                    }
+                    if let Some(g) = &j.gate {
+                        g.recv().unwrap();
+                    }
+                    j.reply.send((j.id, size)).unwrap();
+                }
+            },
+        )
+    }
+
+    fn plain_job(id: usize, reply: &mpsc::Sender<(usize, usize)>) -> TestJob {
+        TestJob { id, key: None, gate: None, started: None, reply: reply.clone() }
+    }
+
+    #[test]
+    fn executes_every_submitted_job() {
+        let pool = pool_for_tests(3, 64, 1);
+        let (tx, rx) = mpsc::channel();
+        for id in 0..40 {
+            pool.try_submit(plain_job(id, &tx)).map_err(|_| "rejected").unwrap();
+        }
+        let mut seen: Vec<usize> =
+            (0..40).map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap().0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn rejects_when_queue_full_then_recovers() {
+        let pool = pool_for_tests(1, 2, 1);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (started_tx, started_rx) = mpsc::channel();
+        // Occupy the single worker with a gated job...
+        pool.try_submit(TestJob {
+            id: 0,
+            key: None,
+            gate: Some(gate_rx),
+            started: Some(started_tx),
+            reply: tx.clone(),
+        })
+        .map_err(|_| "rejected")
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        // ...fill the queue to depth...
+        pool.try_submit(plain_job(1, &tx)).map_err(|_| "rejected").unwrap();
+        pool.try_submit(plain_job(2, &tx)).map_err(|_| "rejected").unwrap();
+        // ...and the next submit must shed load, handing the job back.
+        match pool.try_submit(plain_job(3, &tx)) {
+            Err(SubmitError::Full(j)) => assert_eq!(j.id, 3),
+            Err(SubmitError::Shutdown(_)) => panic!("unexpected shutdown"),
+            Ok(()) => panic!("expected Full rejection"),
+        }
+        assert_eq!(pool.queue_len(), 2);
+        // Release the worker: queued jobs drain and capacity returns.
+        gate_tx.send(()).unwrap();
+        for _ in 0..3 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        pool.try_submit(plain_job(4, &tx)).map_err(|_| "rejected").unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap().0, 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drains_same_key_jobs_into_one_batch() {
+        let pool = pool_for_tests(1, 64, 8);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (started_tx, started_rx) = mpsc::channel();
+        // Block the worker so the queue builds up deterministically.
+        pool.try_submit(TestJob {
+            id: 0,
+            key: None,
+            gate: Some(gate_rx),
+            started: Some(started_tx),
+            reply: tx.clone(),
+        })
+        .map_err(|_| "rejected")
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let keyed = |id: usize, key: &str| TestJob {
+            id,
+            key: Some(key.to_string()),
+            gate: None,
+            started: None,
+            reply: tx.clone(),
+        };
+        pool.try_submit(keyed(1, "k1")).map_err(|_| "rejected").unwrap();
+        pool.try_submit(keyed(2, "k1")).map_err(|_| "rejected").unwrap();
+        pool.try_submit(keyed(3, "k2")).map_err(|_| "rejected").unwrap();
+        pool.try_submit(keyed(4, "k1")).map_err(|_| "rejected").unwrap();
+        gate_tx.send(()).unwrap();
+        let mut by_id = std::collections::BTreeMap::new();
+        for _ in 0..5 {
+            let (id, size) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            by_id.insert(id, size);
+        }
+        // The three k1 jobs ran as one batch; k2 ran alone; the blocker alone.
+        assert_eq!(by_id[&0], 1);
+        assert_eq!(by_id[&1], 3);
+        assert_eq!(by_id[&2], 3);
+        assert_eq!(by_id[&4], 3);
+        assert_eq!(by_id[&3], 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn batch_max_caps_batch_size() {
+        let pool = pool_for_tests(1, 64, 2);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (started_tx, started_rx) = mpsc::channel();
+        pool.try_submit(TestJob {
+            id: 0,
+            key: None,
+            gate: Some(gate_rx),
+            started: Some(started_tx),
+            reply: tx.clone(),
+        })
+        .map_err(|_| "rejected")
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        for id in 1..=4 {
+            pool.try_submit(TestJob {
+                id,
+                key: Some("k".into()),
+                gate: None,
+                started: None,
+                reply: tx.clone(),
+            })
+            .map_err(|_| "rejected")
+            .unwrap();
+        }
+        gate_tx.send(()).unwrap();
+        for _ in 0..5 {
+            let (_, size) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(size <= 2, "batch_max=2 violated: {size}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work() {
+        let pool = pool_for_tests(2, 8, 1);
+        pool.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        match pool.try_submit(plain_job(0, &tx)) {
+            Err(SubmitError::Shutdown(_)) => {}
+            Err(SubmitError::Full(_)) => panic!("expected Shutdown, got Full"),
+            Ok(()) => panic!("expected Shutdown, got acceptance"),
+        }
+    }
+}

@@ -1,0 +1,574 @@
+//! `goomd` wire protocol: newline-delimited JSON over TCP.
+//!
+//! Every request is one JSON object on one line; every response is one JSON
+//! object on one line. Requests select an operation with `"op"`:
+//!
+//! ```text
+//! {"op":"chain","method":"goomc64","d":8,"steps":1000,"seed":42}
+//! {"op":"scan","d":2,"logmag":[[0,null,null,0]],"sign":[[1,1,1,1]],"chunks":16}
+//! {"op":"lle","system":"lorenz","steps":4000,"burn":1000,"chunks":64}
+//! {"op":"info"}
+//! {"op":"metrics"}
+//! ```
+//!
+//! Responses are `{"ok":true,"cached":…,"result":{…}}` or
+//! `{"ok":false,"error":"…"}` (with `"retry_after_ms"` when the server is
+//! shedding load and the client should back off and retry).
+//!
+//! GOOM zeros (logmag = -inf) have no JSON literal; the protocol encodes
+//! them as `null` in `logmag` arrays, both directions.
+//!
+//! Decoding validates *shape and bounds* here; semantic checks that need
+//! the wider library (e.g. whether a dynamical system exists) happen at
+//! execution so this module stays dependency-light and unit-testable.
+
+use crate::chain::Method;
+use crate::goom::GoomMat;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Hard per-request bounds: a single request must never be able to pin a
+/// worker for unbounded time or memory.
+pub const MAX_CHAIN_D: usize = 128;
+pub const MAX_CHAIN_STEPS: usize = 200_000;
+pub const MAX_SCAN_D: usize = 64;
+pub const MAX_SCAN_LEN: usize = 4096;
+pub const MAX_LLE_STEPS: usize = 200_000;
+pub const MAX_LLE_BURN: usize = 1_000_000;
+pub const MAX_CHUNKS: usize = 4096;
+
+/// A decoded, bounds-checked request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Chain(ChainReq),
+    Scan(ScanReq),
+    Lle(LleReq),
+    Info,
+    Metrics,
+}
+
+/// Fig.-1 matrix-product chain over any served [`Method`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainReq {
+    pub method: Method,
+    pub d: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// Prefix scan (cumulative `S_t = A_t · S_{t-1}`) over client-supplied GOOM
+/// transition matrices. The response carries the final state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScanReq {
+    pub d: usize,
+    pub mats: Vec<GoomMat<f64>>,
+    pub chunks: usize,
+}
+
+/// Largest-Lyapunov-exponent estimate for a registered `dynsys` system.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LleReq {
+    pub system: String,
+    pub steps: usize,
+    pub burn: usize,
+    pub chunks: usize,
+}
+
+/// Canonical lowercase slug for a method (stable across releases — part of
+/// the wire protocol and the cache key).
+pub fn method_slug(m: Method) -> &'static str {
+    match m {
+        Method::F32 => "f32",
+        Method::F64 => "f64",
+        Method::GoomC64 => "goomc64",
+        Method::GoomC128 => "goomc128",
+        Method::GoomHlo => "goomhlo",
+    }
+}
+
+// ---------------------------------------------------------------- decode --
+
+fn bounded_usize(
+    doc: &Json,
+    key: &str,
+    default: usize,
+    min: usize,
+    max: usize,
+) -> Result<usize, String> {
+    let v = match doc.get(key) {
+        None => return Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| format!("'{key}' must be a non-negative integer"))?,
+    };
+    if v < min || v > max {
+        return Err(format!("'{key}' = {v} out of range [{min}, {max}]"));
+    }
+    Ok(v)
+}
+
+fn seed_field(doc: &Json, default: u64) -> Result<u64, String> {
+    match doc.get("seed") {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or("'seed' must be a number")?;
+            if x < 0.0 || x.fract() != 0.0 || x >= 9_007_199_254_740_992.0 {
+                return Err("'seed' must be an integer in [0, 2^53)".to_string());
+            }
+            Ok(x as u64)
+        }
+    }
+}
+
+impl Request {
+    /// Decode and bounds-check one request document.
+    pub fn parse(doc: &Json) -> Result<Request, String> {
+        let op = doc
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("missing string field 'op'")?;
+        match op {
+            "info" => Ok(Request::Info),
+            "metrics" => Ok(Request::Metrics),
+            "chain" => Self::parse_chain(doc),
+            "scan" => Self::parse_scan(doc),
+            "lle" => Self::parse_lle(doc),
+            other => Err(format!(
+                "unknown op '{other}' (expected chain|scan|lle|info|metrics)"
+            )),
+        }
+    }
+
+    fn parse_chain(doc: &Json) -> Result<Request, String> {
+        let method_str = doc
+            .get("method")
+            .map(|v| v.as_str().ok_or("'method' must be a string"))
+            .transpose()?
+            .unwrap_or("goomc64");
+        let method = Method::parse(method_str)
+            .ok_or_else(|| format!("unknown method '{method_str}'"))?;
+        if method == Method::GoomHlo {
+            return Err(
+                "method 'goomhlo' needs the AOT/PJRT engine and is not served; \
+                 use goomc64/goomc128"
+                    .to_string(),
+            );
+        }
+        Ok(Request::Chain(ChainReq {
+            method,
+            d: bounded_usize(doc, "d", 8, 1, MAX_CHAIN_D)?,
+            steps: bounded_usize(doc, "steps", 1000, 0, MAX_CHAIN_STEPS)?,
+            seed: seed_field(doc, 42)?,
+        }))
+    }
+
+    fn parse_scan(doc: &Json) -> Result<Request, String> {
+        let d = bounded_usize(doc, "d", 0, 1, MAX_SCAN_D)?;
+        if d == 0 {
+            return Err("scan requires 'd' (matrix dimension)".to_string());
+        }
+        let logmag = doc
+            .get("logmag")
+            .and_then(Json::as_arr)
+            .ok_or("scan requires 'logmag': array of arrays")?;
+        let sign = doc
+            .get("sign")
+            .and_then(Json::as_arr)
+            .ok_or("scan requires 'sign': array of arrays")?;
+        if logmag.is_empty() {
+            return Err("'logmag' must hold at least one matrix".to_string());
+        }
+        if logmag.len() > MAX_SCAN_LEN {
+            return Err(format!(
+                "'logmag' holds {} matrices (max {MAX_SCAN_LEN})",
+                logmag.len()
+            ));
+        }
+        if sign.len() != logmag.len() {
+            return Err(format!(
+                "'sign' holds {} matrices but 'logmag' holds {}",
+                sign.len(),
+                logmag.len()
+            ));
+        }
+        let mut mats = Vec::with_capacity(logmag.len());
+        for (t, (lm, sg)) in logmag.iter().zip(sign.iter()).enumerate() {
+            let lm = lm
+                .as_arr()
+                .ok_or_else(|| format!("logmag[{t}] is not an array"))?;
+            let sg = sg
+                .as_arr()
+                .ok_or_else(|| format!("sign[{t}] is not an array"))?;
+            if lm.len() != d * d || sg.len() != d * d {
+                return Err(format!(
+                    "matrix {t}: expected {} entries (d={d}), got logmag {} / sign {}",
+                    d * d,
+                    lm.len(),
+                    sg.len()
+                ));
+            }
+            let mut m = GoomMat::<f64>::zeros(d, d);
+            for (i, (l, s)) in lm.iter().zip(sg.iter()).enumerate() {
+                m.logmag[i] = match l {
+                    Json::Null => f64::NEG_INFINITY, // GOOM zero
+                    other => other
+                        .as_f64()
+                        .ok_or_else(|| format!("logmag[{t}][{i}] not a number"))?,
+                };
+                let s = s
+                    .as_f64()
+                    .ok_or_else(|| format!("sign[{t}][{i}] not a number"))?;
+                if s != 1.0 && s != -1.0 {
+                    return Err(format!("sign[{t}][{i}] must be 1 or -1, got {s}"));
+                }
+                m.sign[i] = s;
+            }
+            mats.push(m);
+        }
+        Ok(Request::Scan(ScanReq {
+            d,
+            mats,
+            chunks: bounded_usize(doc, "chunks", 16, 1, MAX_CHUNKS)?,
+        }))
+    }
+
+    fn parse_lle(doc: &Json) -> Result<Request, String> {
+        let system = doc
+            .get("system")
+            .and_then(Json::as_str)
+            .ok_or("lle requires string field 'system'")?
+            .to_ascii_lowercase();
+        Ok(Request::Lle(LleReq {
+            system,
+            steps: bounded_usize(doc, "steps", 4000, 1, MAX_LLE_STEPS)?,
+            burn: bounded_usize(doc, "burn", 1000, 0, MAX_LLE_BURN)?,
+            chunks: bounded_usize(doc, "chunks", 64, 1, MAX_CHUNKS)?,
+        }))
+    }
+
+    /// Canonical cache key: the request re-encoded with every default made
+    /// explicit, keys sorted (the JSON writer emits `BTreeMap` order).
+    /// Large canonical forms (scan payloads run to `max_request_bytes`) are
+    /// digested to a fixed-size key so the entry-count LRU cannot be made
+    /// to retain gigabytes of key strings. `None` for the introspection
+    /// ops, which are never cached.
+    pub fn canonical_key(&self) -> Option<String> {
+        let doc = match self {
+            Request::Info | Request::Metrics => return None,
+            Request::Chain(c) => obj(vec![
+                ("op", Json::Str("chain".into())),
+                ("method", Json::Str(method_slug(c.method).into())),
+                ("d", num(c.d as f64)),
+                ("steps", num(c.steps as f64)),
+                ("seed", num(c.seed as f64)),
+            ]),
+            Request::Scan(s) => obj(vec![
+                ("op", Json::Str("scan".into())),
+                ("d", num(s.d as f64)),
+                ("chunks", num(s.chunks as f64)),
+                (
+                    "logmag",
+                    Json::Arr(
+                        s.mats
+                            .iter()
+                            .map(|m| {
+                                Json::Arr(
+                                    m.logmag.iter().copied().map(num_or_null).collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "sign",
+                    Json::Arr(
+                        s.mats
+                            .iter()
+                            .map(|m| {
+                                Json::Arr(m.sign.iter().map(|&x| num(x)).collect())
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Request::Lle(l) => obj(vec![
+                ("op", Json::Str("lle".into())),
+                ("system", Json::Str(l.system.clone())),
+                ("steps", num(l.steps as f64)),
+                ("burn", num(l.burn as f64)),
+                ("chunks", num(l.chunks as f64)),
+            ]),
+        };
+        let full = json::write(&doc);
+        Some(if full.len() > MAX_VERBATIM_KEY_BYTES {
+            digest_key(&full)
+        } else {
+            full
+        })
+    }
+
+    /// Pool batch key: requests sharing a key may be executed together in
+    /// one stacked pass. Only GOOM chain requests batch (they share the
+    /// per-step LMME); float chains and scans/LLE run solo.
+    pub fn batch_key(&self) -> Option<String> {
+        match self {
+            Request::Chain(c)
+                if c.method == Method::GoomC64 || c.method == Method::GoomC128 =>
+            {
+                Some(format!("chain:{}:{}", method_slug(c.method), c.d))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Canonical keys longer than this are replaced by a 128-bit digest
+/// (2×64-bit SipHash with distinct prefixes, plus the original length).
+/// Accidental collisions are negligible at cache scale; the daemon is not
+/// hardened against adversarial collision construction.
+const MAX_VERBATIM_KEY_BYTES: usize = 4096;
+
+fn digest_key(full: &str) -> String {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h1 = DefaultHasher::new();
+    0u8.hash(&mut h1);
+    full.hash(&mut h1);
+    let mut h2 = DefaultHasher::new();
+    1u8.hash(&mut h2);
+    full.hash(&mut h2);
+    format!("digest:{}:{:016x}{:016x}", full.len(), h1.finish(), h2.finish())
+}
+
+// ---------------------------------------------------------------- encode --
+
+/// Build a JSON object from pairs (convenience for response assembly).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Shorthand for a JSON number.
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// JSON has no ±inf/NaN: encode non-finite magnitudes as `null` (the GOOM
+/// zero convention on the wire).
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// A success response line (no trailing newline).
+pub fn ok_line(result: Json, cached: bool) -> String {
+    json::write(&obj(vec![
+        ("ok", Json::Bool(true)),
+        ("cached", Json::Bool(cached)),
+        ("result", result),
+    ]))
+}
+
+/// An error response line (no trailing newline). `retry_after_ms` marks
+/// load-shedding rejections the client should retry after backing off.
+pub fn err_line(msg: &str, retry_after_ms: Option<u64>) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ];
+    if let Some(ms) = retry_after_ms {
+        pairs.push(("retry_after_ms", num(ms as f64)));
+    }
+    json::write(&obj(pairs))
+}
+
+/// Client-side encoder for a chain request (used by `repro loadgen` and the
+/// round-trip tests).
+pub fn encode_chain_request(method: &str, d: usize, steps: usize, seed: u64) -> String {
+    json::write(&obj(vec![
+        ("op", Json::Str("chain".into())),
+        ("method", Json::Str(method.to_string())),
+        ("d", num(d as f64)),
+        ("steps", num(steps as f64)),
+        ("seed", num(seed as f64)),
+    ]))
+}
+
+/// Client-side encoder for a scan request over real-valued matrices
+/// (log-mapped on the client; mirrors `GoomMat::from_mat`).
+pub fn encode_scan_request(mats: &[GoomMat<f64>], chunks: usize) -> String {
+    let d = mats.first().map_or(0, |m| m.rows);
+    json::write(&obj(vec![
+        ("op", Json::Str("scan".into())),
+        ("d", num(d as f64)),
+        ("chunks", num(chunks as f64)),
+        (
+            "logmag",
+            Json::Arr(
+                mats.iter()
+                    .map(|m| {
+                        Json::Arr(m.logmag.iter().copied().map(num_or_null).collect())
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sign",
+            Json::Arr(
+                mats.iter()
+                    .map(|m| Json::Arr(m.sign.iter().map(|&x| num(x)).collect()))
+                    .collect(),
+            ),
+        ),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn parse_line(line: &str) -> Result<Request, String> {
+        let doc = json::parse(line).map_err(|e| e.to_string())?;
+        Request::parse(&doc)
+    }
+
+    #[test]
+    fn chain_request_round_trips_through_encode_and_parse() {
+        let line = encode_chain_request("goomc128", 16, 5000, 7);
+        let req = parse_line(&line).unwrap();
+        assert_eq!(
+            req,
+            Request::Chain(ChainReq {
+                method: Method::GoomC128,
+                d: 16,
+                steps: 5000,
+                seed: 7
+            })
+        );
+        // Canonical key is itself parseable and stable.
+        let key = req.canonical_key().unwrap();
+        let req2 = parse_line(&key).unwrap();
+        assert_eq!(req, req2);
+        assert_eq!(key, req2.canonical_key().unwrap());
+    }
+
+    #[test]
+    fn chain_defaults_are_canonicalized_into_the_key() {
+        // A request relying on defaults and one spelling them out must map
+        // to the same cache key.
+        let implicit = parse_line(r#"{"op":"chain"}"#).unwrap();
+        let explicit =
+            parse_line(r#"{"op":"chain","method":"goomc64","d":8,"steps":1000,"seed":42}"#)
+                .unwrap();
+        assert_eq!(implicit.canonical_key(), explicit.canonical_key());
+    }
+
+    #[test]
+    fn scan_request_round_trips_with_goom_zeros() {
+        let mut rng = rng_from_seed(90);
+        let mut mats: Vec<GoomMat<f64>> =
+            (0..3).map(|_| GoomMat::randn(2, 2, &mut rng)).collect();
+        mats[1].logmag[2] = f64::NEG_INFINITY; // a GOOM zero → null on the wire
+        let line = encode_scan_request(&mats, 4);
+        let Request::Scan(s) = parse_line(&line).unwrap() else {
+            panic!("not a scan")
+        };
+        assert_eq!(s.d, 2);
+        assert_eq!(s.chunks, 4);
+        assert_eq!(s.mats, mats);
+    }
+
+    #[test]
+    fn rejects_malformed_and_out_of_bounds() {
+        assert!(parse_line("42").is_err());
+        assert!(parse_line(r#"{"no_op":1}"#).is_err());
+        assert!(parse_line(r#"{"op":"fry"}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","method":"quantum"}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","method":"hlo"}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","d":0}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","d":10000}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","steps":99999999}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","seed":-1}"#).is_err());
+        assert!(parse_line(r#"{"op":"chain","seed":1.5}"#).is_err());
+        assert!(parse_line(r#"{"op":"lle","steps":10}"#).is_err()); // no system
+        assert!(parse_line(r#"{"op":"scan","d":2}"#).is_err()); // no payload
+        assert!(
+            parse_line(r#"{"op":"scan","d":2,"logmag":[[0,0,0,0]],"sign":[[1,2,1,1]]}"#)
+                .is_err(),
+            "non-±1 sign must be rejected"
+        );
+        assert!(
+            parse_line(r#"{"op":"scan","d":2,"logmag":[[0,0,0]],"sign":[[1,1,1]]}"#)
+                .is_err(),
+            "wrong entry count must be rejected"
+        );
+    }
+
+    #[test]
+    fn large_scan_payloads_get_fixed_size_digest_keys() {
+        let mut rng = rng_from_seed(91);
+        // 32 8x8 matrices serialize far past the 4 KiB verbatim-key cap.
+        let mats: Vec<GoomMat<f64>> =
+            (0..32).map(|_| GoomMat::randn(8, 8, &mut rng)).collect();
+        let line = encode_scan_request(&mats, 8);
+        let req = parse_line(&line).unwrap();
+        let key = req.canonical_key().unwrap();
+        assert!(key.starts_with("digest:"), "expected digest key, got {} bytes", key.len());
+        assert!(key.len() < 128, "digest keys must stay small: {}", key.len());
+        // Deterministic for identical payloads, distinct for different ones.
+        assert_eq!(key, parse_line(&line).unwrap().canonical_key().unwrap());
+        let other: Vec<GoomMat<f64>> =
+            (0..32).map(|_| GoomMat::randn(8, 8, &mut rng)).collect();
+        let other_key =
+            parse_line(&encode_scan_request(&other, 8)).unwrap().canonical_key().unwrap();
+        assert_ne!(key, other_key);
+        // Small requests keep their verbatim (parseable) canonical form.
+        let small = parse_line(r#"{"op":"chain"}"#).unwrap();
+        assert!(!small.canonical_key().unwrap().starts_with("digest:"));
+    }
+
+    #[test]
+    fn batch_keys_group_only_same_shape_goom_chains() {
+        let a = parse_line(r#"{"op":"chain","method":"goomc64","d":8}"#).unwrap();
+        let b = parse_line(r#"{"op":"chain","method":"goomc64","d":8,"seed":9}"#).unwrap();
+        let c = parse_line(r#"{"op":"chain","method":"goomc64","d":16}"#).unwrap();
+        let d = parse_line(r#"{"op":"chain","method":"f64","d":8}"#).unwrap();
+        let e = parse_line(r#"{"op":"lle","system":"lorenz"}"#).unwrap();
+        assert_eq!(a.batch_key(), b.batch_key());
+        assert!(a.batch_key().is_some());
+        assert_ne!(a.batch_key(), c.batch_key());
+        assert_eq!(d.batch_key(), None);
+        assert_eq!(e.batch_key(), None);
+    }
+
+    #[test]
+    fn response_lines_are_valid_json() {
+        let ok = ok_line(obj(vec![("x", num(1.0))]), true);
+        let parsed = json::parse(&ok).unwrap();
+        assert_eq!(parsed.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("cached").unwrap().as_bool(), Some(true));
+        let err = err_line("queue full", Some(250));
+        let parsed = json::parse(&err).unwrap();
+        assert_eq!(parsed.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(parsed.get("retry_after_ms").unwrap().as_usize(), Some(250));
+        // Non-finite numbers must never leak into the wire format.
+        assert_eq!(num_or_null(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(num_or_null(f64::NAN), Json::Null);
+    }
+
+    #[test]
+    fn info_and_metrics_parse_and_are_uncached() {
+        assert_eq!(parse_line(r#"{"op":"info"}"#).unwrap(), Request::Info);
+        assert_eq!(parse_line(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics);
+        assert_eq!(Request::Info.canonical_key(), None);
+        assert_eq!(Request::Metrics.canonical_key(), None);
+        assert_eq!(Request::Info.batch_key(), None);
+    }
+}

@@ -1,0 +1,441 @@
+//! Per-connection session handling and job execution.
+//!
+//! Each accepted TCP connection gets one session thread that reads
+//! newline-delimited JSON requests, answers introspection ops inline,
+//! serves cache hits from memory, and forwards compute ops to the worker
+//! pool, blocking on the job's reply channel. Compute itself happens on
+//! pool workers via [`execute_batch`] — connection threads never run
+//! kernels, so a slow request cannot starve the accept path.
+
+use super::cache::LruCache;
+use super::pool::{Pool, SubmitError};
+use super::protocol::{
+    err_line, method_slug, num, num_or_null, obj, ok_line, Request,
+};
+use super::ServeConfig;
+use crate::chain::{self, ChainResult, ChainSpec, Method};
+use crate::coordinator::Metrics;
+use crate::dynsys;
+use crate::goom::{lmme, GoomMat};
+use crate::lyapunov;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// State shared by every session and worker: config, cache, metrics.
+pub struct ServerInner {
+    pub cfg: ServeConfig,
+    pub cache: Mutex<LruCache>,
+    pub metrics: Mutex<Metrics>,
+    pub started: Instant,
+}
+
+impl ServerInner {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = Mutex::new(LruCache::new(cfg.cache_capacity));
+        Self { cfg, cache, metrics: Mutex::new(Metrics::new()), started: Instant::now() }
+    }
+}
+
+/// One queued unit of work: the decoded request, its cache key (compute ops
+/// only), and the channel carrying the finished response line back to the
+/// session thread.
+pub struct Job {
+    pub request: Request,
+    pub cache_key: Option<String>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<String>,
+}
+
+// -------------------------------------------------------------- executors --
+
+fn chain_result_json(res: &ChainResult) -> Json {
+    obj(vec![
+        ("method", Json::Str(method_slug(res.method).to_string())),
+        ("d", num(res.d as f64)),
+        ("steps_completed", num(res.steps_completed as f64)),
+        ("failed", Json::Bool(res.failed)),
+        ("final_max_logmag", num_or_null(res.final_max_logmag)),
+    ])
+}
+
+/// Final state of the chunked prefix scan without materializing every
+/// prefix: phases 1+2 of `goom::scan_par_chunked` (per-chunk folds, then a
+/// sequential combine of the chunk totals), skipping the O(n) phase-3
+/// fix-up whose outputs the scan op doesn't serve. Bit-identical to
+/// `scan_par_chunked(mats, combine, chunks, _).last()` — same combines in
+/// the same order — in roughly half the LMMEs and O(1) matrices of memory
+/// (the e2e suite asserts the equivalence over the wire).
+fn scan_final(mats: &[GoomMat<f64>], chunks: usize) -> GoomMat<f64> {
+    let combine = |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+    let n = mats.len();
+    let nchunks = chunks.max(1).min(n);
+    let chunk = n.div_ceil(nchunks);
+    let mut acc: Option<GoomMat<f64>> = None;
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let total = mats[lo + 1..hi]
+            .iter()
+            .fold(mats[lo].clone(), |prev, m| combine(&prev, m));
+        acc = Some(match &acc {
+            None => total,
+            Some(a) => combine(a, &total),
+        });
+        lo = hi;
+    }
+    acc.expect("scan payload validated non-empty")
+}
+
+/// Run one request to a result document. Serving runs single-threaded per
+/// job (`threads = 1` everywhere): parallelism comes from the worker pool
+/// across requests, not nested `thread::scope` fan-out inside one.
+fn execute_single(req: &Request) -> Result<Json, String> {
+    match req {
+        Request::Chain(c) => {
+            let res = chain::run_chain(c.method, c.d, c.steps, c.seed, None)
+                .map_err(|e| format!("{e:#}"))?;
+            Ok(chain_result_json(&res))
+        }
+        Request::Scan(s) => {
+            let fin = scan_final(&s.mats, s.chunks);
+            Ok(obj(vec![
+                ("d", num(s.d as f64)),
+                ("len", num(s.mats.len() as f64)),
+                (
+                    "logmag",
+                    Json::Arr(fin.logmag.iter().copied().map(num_or_null).collect()),
+                ),
+                ("sign", Json::Arr(fin.sign.iter().map(|&x| num(x)).collect())),
+                ("log_frobenius", num_or_null(fin.log_frobenius_norm())),
+            ]))
+        }
+        Request::Lle(l) => {
+            let sys = dynsys::by_name(&l.system).ok_or_else(|| {
+                format!("unknown system '{}' (op 'info' lists them)", l.system)
+            })?;
+            let lle = lyapunov::system_lle_parallel(
+                sys.as_ref(),
+                l.burn,
+                l.steps,
+                l.chunks,
+                1,
+            );
+            Ok(obj(vec![
+                ("system", Json::Str(sys.name().to_string())),
+                ("lle", num_or_null(lle)),
+                ("dt", num(sys.dt())),
+                ("steps", num(l.steps as f64)),
+                ("burn", num(l.burn as f64)),
+                (
+                    "reference_lle",
+                    sys.reference_lle().map_or(Json::Null, Json::Num),
+                ),
+            ]))
+        }
+        Request::Info | Request::Metrics => {
+            Err("internal: introspection ops are answered inline".to_string())
+        }
+    }
+}
+
+/// Pool executor: one call per drained batch. Multi-job batches are GOOM
+/// chain requests sharing (method, d) — the pool's batch key guarantees it —
+/// and collapse into one stacked LMME pass per step.
+pub fn execute_batch(inner: &ServerInner, jobs: Vec<Job>) {
+    let batchable = jobs.len() > 1
+        && jobs.iter().all(|j| {
+            matches!(
+                &j.request,
+                Request::Chain(c)
+                    if c.method == Method::GoomC64 || c.method == Method::GoomC128
+            )
+        });
+    if batchable {
+        let (method, d) = match &jobs[0].request {
+            Request::Chain(c) => (c.method, c.d),
+            _ => unreachable!("checked above"),
+        };
+        let uniform = jobs.iter().all(
+            |j| matches!(&j.request, Request::Chain(c) if c.method == method && c.d == d),
+        );
+        if uniform {
+            let specs: Vec<ChainSpec> = jobs
+                .iter()
+                .map(|j| match &j.request {
+                    Request::Chain(c) => ChainSpec { steps: c.steps, seed: c.seed },
+                    _ => unreachable!("checked above"),
+                })
+                .collect();
+            let results = match method {
+                Method::GoomC64 => chain::run_chain_goom_batched::<f32>(d, &specs),
+                _ => chain::run_chain_goom_batched::<f64>(d, &specs),
+            };
+            {
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                m.incr("batches", 1);
+                m.incr("batched_jobs", jobs.len() as u64);
+            }
+            for (job, res) in jobs.into_iter().zip(results) {
+                finish(inner, job, Ok(chain_result_json(&res)));
+            }
+            return;
+        }
+    }
+    for job in jobs {
+        let out = execute_single(&job.request);
+        finish(inner, job, out);
+    }
+}
+
+fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>) {
+    let line = match out {
+        Ok(result) => {
+            if let Some(key) = &job.cache_key {
+                inner
+                    .cache
+                    .lock()
+                    .expect("cache lock")
+                    .insert(key.clone(), result.clone());
+            }
+            let mut m = inner.metrics.lock().expect("metrics lock");
+            m.incr("requests_ok", 1);
+            m.record_secs("job_latency", job.enqueued.elapsed().as_secs_f64());
+            ok_line(result, false)
+        }
+        Err(msg) => {
+            inner.metrics.lock().expect("metrics lock").incr("requests_err", 1);
+            err_line(&msg, None)
+        }
+    };
+    // Session thread may have hung up; nothing to do then.
+    let _ = job.reply.send(line);
+}
+
+// --------------------------------------------------------------- sessions --
+
+fn info_json(inner: &ServerInner) -> Json {
+    obj(vec![
+        ("service", Json::Str("goomd".to_string())),
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ("workers", num(inner.cfg.workers as f64)),
+        ("queue_depth", num(inner.cfg.queue_depth as f64)),
+        ("batch_max", num(inner.cfg.batch_max as f64)),
+        ("cache_capacity", num(inner.cfg.cache_capacity as f64)),
+        ("max_request_bytes", num(inner.cfg.max_request_bytes as f64)),
+        ("uptime_s", num(inner.started.elapsed().as_secs_f64())),
+        (
+            "ops",
+            Json::Arr(
+                ["chain", "scan", "lle", "info", "metrics"]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "methods",
+            Json::Arr(
+                ["f32", "f64", "goomc64", "goomc128"]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "systems",
+            Json::Arr(
+                dynsys::all_systems()
+                    .iter()
+                    .map(|s| Json::Str(s.name().to_string()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
+    let m = inner.metrics.lock().expect("metrics lock");
+    let counters: std::collections::BTreeMap<String, Json> = m
+        .counters_iter()
+        .map(|(k, v)| (k.to_string(), num(v as f64)))
+        .collect();
+    let gauges: std::collections::BTreeMap<String, Json> = m
+        .gauges_iter()
+        .map(|(k, v)| (k.to_string(), num_or_null(v)))
+        .collect();
+    let timers: std::collections::BTreeMap<String, Json> = m
+        .timers_iter()
+        .map(|(k, _)| {
+            (
+                k.to_string(),
+                obj(vec![
+                    ("n", num(m.timer_count(k) as f64)),
+                    (
+                        "mean_s",
+                        m.timer_mean(k).map_or(Json::Null, Json::Num),
+                    ),
+                    (
+                        "p95_s",
+                        m.timer_percentile(k, 0.95).map_or(Json::Null, Json::Num),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("timers", Json::Obj(timers)),
+        ("queue_len", num(pool.queue_len() as f64)),
+        ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
+    ])
+}
+
+/// Serve one client connection until EOF or a fatal I/O error.
+pub fn handle_connection(
+    stream: TcpStream,
+    inner: &Arc<ServerInner>,
+    pool: &Arc<Pool<Job>>,
+) {
+    if serve_session(&stream, inner, pool).is_err() {
+        inner
+            .metrics
+            .lock()
+            .expect("metrics lock")
+            .incr("connection_errors", 1);
+    }
+}
+
+fn serve_session(
+    stream: &TcpStream,
+    inner: &Arc<ServerInner>,
+    pool: &Arc<Pool<Job>>,
+) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let max = inner.cfg.max_request_bytes;
+    loop {
+        let mut line: Vec<u8> = Vec::new();
+        let n = (&mut reader).take(max as u64 + 1).read_until(b'\n', &mut line)?;
+        if n == 0 {
+            return Ok(()); // clean EOF
+        }
+        let content_len =
+            line.len() - usize::from(line.last() == Some(&b'\n'));
+        if content_len > max {
+            // Oversized: the rest of the line is still in flight. Discard
+            // through the newline (bounded) so the session can resync —
+            // and so the kernel buffer drains before we answer, avoiding
+            // an RST clobbering the error response. Past the discard cap,
+            // give up and close.
+            inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("oversized_rejects", 1);
+            let cap = max.saturating_mul(16).max(1 << 22);
+            let mut discarded = line.len();
+            let mut resynced = false;
+            while discarded < cap {
+                let mut chunk = Vec::new();
+                let k = (&mut reader).take(65536).read_until(b'\n', &mut chunk)?;
+                if k == 0 {
+                    break; // client hung up mid-line
+                }
+                discarded += k;
+                if chunk.last() == Some(&b'\n') {
+                    resynced = true;
+                    break;
+                }
+            }
+            respond(
+                &mut writer,
+                &err_line(&format!("request exceeds {max} bytes"), None),
+            )?;
+            if resynced {
+                continue;
+            }
+            return Ok(());
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        inner.metrics.lock().expect("metrics lock").incr("requests_total", 1);
+        let doc = match json::parse(text) {
+            Ok(d) => d,
+            Err(e) => {
+                respond(&mut writer, &err_line(&format!("bad json: {e}"), None))?;
+                continue;
+            }
+        };
+        let req = match Request::parse(&doc) {
+            Ok(r) => r,
+            Err(e) => {
+                respond(&mut writer, &err_line(&e, None))?;
+                continue;
+            }
+        };
+        let response = dispatch(req, inner, pool);
+        respond(&mut writer, &response)?;
+    }
+}
+
+fn dispatch(req: Request, inner: &ServerInner, pool: &Pool<Job>) -> String {
+    match req {
+        Request::Info => ok_line(info_json(inner), false),
+        Request::Metrics => ok_line(metrics_json(inner, pool), false),
+        compute => {
+            let cache_key = compute.canonical_key();
+            if let Some(key) = &cache_key {
+                let hit = inner.cache.lock().expect("cache lock").get(key);
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                if let Some(result) = hit {
+                    m.incr("cache_hits", 1);
+                    return ok_line(result, true);
+                }
+                m.incr("cache_misses", 1);
+            }
+            let (tx, rx) = mpsc::channel();
+            let job = Job {
+                request: compute,
+                cache_key,
+                enqueued: Instant::now(),
+                reply: tx,
+            };
+            match pool.try_submit(job) {
+                Ok(()) => rx.recv().unwrap_or_else(|_| {
+                    err_line("server shut down before the job completed", None)
+                }),
+                Err(SubmitError::Full(_)) => {
+                    inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("queue_rejects", 1);
+                    err_line(
+                        &format!(
+                            "server busy: job queue is full ({} waiting)",
+                            pool.queue_depth()
+                        ),
+                        Some(inner.cfg.retry_after_ms),
+                    )
+                }
+                Err(SubmitError::Shutdown(_)) => {
+                    err_line("server is shutting down", None)
+                }
+            }
+        }
+    }
+}
+
+fn respond(writer: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}

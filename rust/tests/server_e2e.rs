@@ -1,0 +1,215 @@
+//! End-to-end tests against a live `goomd` daemon over real TCP: protocol
+//! round-trips, result correctness vs the in-process kernels, cache
+//! behaviour, and oversized-request rejection.
+
+use goomrs::goom::{lmme, scan_par_chunked, GoomMat};
+use goomrs::rng::rng_from_seed;
+use goomrs::server::{protocol, Server, ServeConfig};
+use goomrs::util::json::{self, Json};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+fn start_server() -> Server {
+    Server::start(ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 16,
+        batch_max: 8,
+        cache_capacity: 64,
+        max_request_bytes: 8 * 1024,
+        retry_after_ms: 5,
+        ..ServeConfig::default()
+    })
+    .expect("server start")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(server: &Server) -> Client {
+        let stream = TcpStream::connect(server.addr()).expect("connect");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "server closed unexpectedly");
+        json::parse(resp.trim()).expect("response must be valid JSON")
+    }
+}
+
+#[test]
+fn scan_request_matches_local_lmme_chain() {
+    let server = start_server();
+    let mut client = Client::connect(&server);
+    // Build 5 random 3x3 GOOM transition matrices locally...
+    let mut rng = rng_from_seed(1234);
+    let mats: Vec<GoomMat<f64>> =
+        (0..5).map(|_| GoomMat::randn(3, 3, &mut rng)).collect();
+    // ...run the identical scan in-process (same chunks/threads as the
+    // server's executor, so results match bit-for-bit up to the JSON
+    // round-trip, which Rust's shortest-representation floats survive)...
+    let combine = |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+    let scanned = scan_par_chunked(&mats, combine, 4, 1);
+    let local = scanned.last().unwrap();
+    // ...and sanity-check that against the plain sequential product.
+    let mut seq = mats[0].clone();
+    for a in &mats[1..] {
+        seq = lmme(a, &seq);
+    }
+    for i in 0..9 {
+        assert!(
+            (local.logmag[i] - seq.logmag[i]).abs()
+                <= 1e-9 * seq.logmag[i].abs().max(1.0),
+            "scan schedule disagrees with sequential at [{i}]"
+        );
+    }
+    // Now ask the daemon for the same scan.
+    let resp = client.roundtrip(&protocol::encode_scan_request(&mats, 4));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    let result = resp.get("result").unwrap();
+    assert_eq!(result.get("len").unwrap().as_usize(), Some(5));
+    let logmag = result.get("logmag").unwrap().as_arr().unwrap();
+    let sign = result.get("sign").unwrap().as_arr().unwrap();
+    assert_eq!(logmag.len(), 9);
+    for i in 0..9 {
+        let got = logmag[i].as_f64().unwrap_or(f64::NEG_INFINITY);
+        assert_eq!(got, local.logmag[i], "logmag[{i}]");
+        assert_eq!(sign[i].as_f64().unwrap(), local.sign[i], "sign[{i}]");
+    }
+    server.stop();
+}
+
+#[test]
+fn lle_request_returns_a_plausible_lorenz_exponent() {
+    let server = start_server();
+    let mut client = Client::connect(&server);
+    let resp = client
+        .roundtrip(r#"{"op":"lle","system":"lorenz","steps":3000,"burn":1000,"chunks":32}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    let lle = resp.get("result").unwrap().get("lle").unwrap().as_f64().unwrap();
+    // Lorenz λ1 ≈ 0.9; a short window carries bias, so bound loosely.
+    assert!((0.5..1.3).contains(&lle), "λ1 = {lle}");
+    // Unknown systems are a clean protocol error, not a hang or crash.
+    let resp = client.roundtrip(r#"{"op":"lle","system":"narnia"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("unknown system"));
+    server.stop();
+}
+
+#[test]
+fn cache_hit_on_repeated_seeded_request_shows_in_metrics() {
+    let server = start_server();
+    let mut a = Client::connect(&server);
+    let req = protocol::encode_chain_request("goomc64", 6, 64, 2024);
+    let first = a.roundtrip(&req);
+    assert_eq!(first.get("cached").unwrap().as_bool(), Some(false));
+    // A *different* connection repeating the request must hit the cache.
+    let mut b = Client::connect(&server);
+    let second = b.roundtrip(&req);
+    assert_eq!(second.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(first.get("result").unwrap(), second.get("result").unwrap());
+    // And the daemon's own metrics op must report the hit.
+    let metrics = b.roundtrip(r#"{"op":"metrics"}"#);
+    let counters = metrics.get("result").unwrap().get("counters").unwrap();
+    assert!(counters.get("cache_hits").unwrap().as_usize().unwrap() >= 1);
+    assert!(counters.get("cache_misses").unwrap().as_usize().unwrap() >= 1);
+    assert!(server.counter("cache_hits") >= 1);
+    server.stop();
+}
+
+#[test]
+fn oversized_request_is_rejected_cleanly() {
+    let server = start_server();
+    let mut client = Client::connect(&server);
+    // 8 KiB limit: build a ~16 KiB single-line request.
+    let big = format!(
+        r#"{{"op":"chain","steps":10,"junk":"{}"}}"#,
+        "x".repeat(16 * 1024)
+    );
+    let resp = client.roundtrip(&big);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    let msg = resp.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("exceeds"), "unexpected error: {msg}");
+    assert!(server.counter("oversized_rejects") >= 1);
+    // The session discards through the newline and resyncs: the SAME
+    // connection keeps serving valid requests afterwards.
+    let ok = client.roundtrip(r#"{"op":"info"}"#);
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn malformed_lines_get_errors_and_the_session_survives() {
+    let server = start_server();
+    let mut client = Client::connect(&server);
+    let resp = client.roundtrip("this is not json");
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    let resp = client.roundtrip(r#"{"op":"teleport"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    // Same connection still serves valid requests afterwards.
+    let resp = client.roundtrip(r#"{"op":"chain","d":4,"steps":16,"seed":1}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    let result = resp.get("result").unwrap();
+    assert_eq!(result.get("steps_completed").unwrap().as_usize(), Some(16));
+    assert_eq!(result.get("failed").unwrap().as_bool(), Some(false));
+    server.stop();
+}
+
+#[test]
+fn concurrent_same_shape_requests_agree_with_solo_results() {
+    // Many clients fire same-shape GOOM chain requests simultaneously; the
+    // pool may fold them into stacked batches. Every response must equal
+    // the solo (unbatched, cache-cold) result for its seed.
+    let server = start_server();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = server.addr();
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                let req = protocol::encode_chain_request("goomc64", 6, 80, 5000 + i);
+                writer.write_all(req.as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                writer.flush().unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                (i, resp)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (i, resp) = h.join().unwrap();
+        let doc = json::parse(resp.trim()).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        let got = doc
+            .get("result")
+            .unwrap()
+            .get("final_max_logmag")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let solo = goomrs::chain::run_chain(
+            goomrs::chain::Method::GoomC64,
+            6,
+            80,
+            5000 + i,
+            None,
+        )
+        .unwrap();
+        let diff = (got - solo.final_max_logmag).abs();
+        assert!(diff < 1e-3, "seed {}: served {got} vs solo {}", 5000 + i, solo.final_max_logmag);
+    }
+    server.stop();
+}

@@ -1,0 +1,197 @@
+//! Offline placeholder for the `xla` crate (xla-rs).
+//!
+//! This crate exists so `goomrs`'s optional `xla` dependency always resolves
+//! without network access or native XLA libraries. It mirrors the slice of
+//! the xla-rs API that `goomrs::runtime::engine` uses:
+//!
+//! * [`Literal`] is a real host-side tensor (f32/i32 + dims), so literal
+//!   construction and round-trips work.
+//! * [`PjRtClient::cpu`], [`HloModuleProto::from_text_file`], and everything
+//!   downstream of them return [`Error`] — there is no PJRT here.
+//!
+//! To execute AOT artifacts for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at an xla-rs checkout and rebuild with `--features xla`.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's: displayable and convertible via `?` into
+/// `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_pjrt() -> Error {
+    Error(
+        "native XLA/PJRT is not linked (this is the in-repo xla-stub crate); \
+         replace the `xla` path dependency with a real xla-rs checkout"
+            .to_string(),
+    )
+}
+
+// ------------------------------------------------------------- literals --
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side tensor: element buffer + dims. Functional (unlike the PJRT
+/// types below) so conversion helpers and their tests work without XLA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types the stub `Literal` can carry.
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![x]) }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+
+    /// Tuple decomposition exists only on PJRT results, which the stub can
+    /// never produce.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(no_pjrt())
+    }
+}
+
+// ----------------------------------------------------------- PJRT stubs --
+
+/// Unconstructable PJRT client: [`PjRtClient::cpu`] always errors.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(no_pjrt())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(no_pjrt())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(no_pjrt())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(no_pjrt())
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(no_pjrt())
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x").is_err());
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+}
