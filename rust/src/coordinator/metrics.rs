@@ -51,6 +51,14 @@ impl Metrics {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Increment a labeled counter, stored as `name[label]` — e.g. the
+    /// router's per-shard routing tallies `routed[127.0.0.1:7077]`. Labeled
+    /// counters sort next to each other in summaries and the `metrics` op
+    /// (the counter map is a `BTreeMap`).
+    pub fn incr_labeled(&mut self, name: &str, label: &str, by: u64) {
+        *self.counters.entry(format!("{name}[{label}]")).or_insert(0) += by;
+    }
+
     pub fn gauge(&mut self, name: &str, value: f64) {
         self.gauges.insert(name.to_string(), value);
     }
@@ -164,6 +172,17 @@ mod tests {
         assert_eq!(m.counter("steps"), 5);
         assert_eq!(m.gauge_value("loss"), Some(0.5));
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn labeled_counters_are_independent_per_label() {
+        let mut m = Metrics::new();
+        m.incr_labeled("routed", "127.0.0.1:7077", 2);
+        m.incr_labeled("routed", "127.0.0.1:7078", 1);
+        m.incr_labeled("routed", "127.0.0.1:7077", 3);
+        assert_eq!(m.counter("routed[127.0.0.1:7077]"), 5);
+        assert_eq!(m.counter("routed[127.0.0.1:7078]"), 1);
+        assert_eq!(m.counter("routed"), 0, "labels never fold into the base");
     }
 
     #[test]

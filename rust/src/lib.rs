@@ -20,10 +20,14 @@
 //! * [`rnn`] — the training driver for the paper's §4.3 GOOM-SSM RNN.
 //! * [`coordinator`] — experiment registry, config, metrics, launcher.
 //! * [`server`] — `goomd`, the batched GOOM compute service: a TCP daemon
-//!   (newline-delimited JSON) serving chain/scan/LLE requests through a
-//!   persistent worker pool with backpressure, same-shape request batching
-//!   (one stacked LMME pass), and an LRU cache over seeded requests. See
-//!   `docs/SERVING.md` for the wire protocol.
+//!   (newline-delimited JSON) whose readiness event loop drives sans-IO
+//!   session machines over non-blocking sockets, serving chain/scan/LLE
+//!   requests through a persistent worker pool with backpressure,
+//!   same-shape request batching (one stacked LMME pass), in-flight dedup
+//!   of identical requests, and an LRU cache over seeded requests — plus
+//!   the cache-aware router tier (`repro route`) that rendezvous-hashes
+//!   canonical keys across shards. See `docs/SERVING.md` for the wire
+//!   protocol.
 
 pub mod chain;
 pub mod coordinator;

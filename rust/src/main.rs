@@ -16,8 +16,9 @@
 use anyhow::Result;
 use goomrs::coordinator::{self, Config, Metrics, RunContext};
 use goomrs::dynsys;
-use goomrs::server::{self, LoadgenConfig, ServeConfig};
+use goomrs::server::{self, LoadgenConfig, RouterConfig, ServeConfig};
 use goomrs::util::cli::Args;
+use goomrs::util::json::{self, Json};
 
 fn main() {
     let args = match Args::from_env() {
@@ -80,6 +81,8 @@ fn dispatch(args: &Args) -> Result<()> {
             run_one(&name, args)
         }
         Some("serve") => serve(args),
+        Some("route") => route(args),
+        Some("req") => req(args),
         Some("loadgen") => loadgen(args),
         Some("all") => {
             for e in coordinator::registry() {
@@ -150,9 +153,75 @@ fn serve(args: &Args) -> Result<()> {
     server::serve_blocking(serve_cfg)
 }
 
+/// `repro route --backends=host:port[,host:port...] [--port ...]`: run the
+/// cache-aware router tier in front of N `goomd` shards, with the same
+/// defaults < repro.conf < CLI layering (conf keys: route_port, ...).
+fn route(args: &Args) -> Result<()> {
+    let mut cfg = Config::new();
+    cfg.load_file("repro.conf", false)?;
+    cfg.apply_cli(args);
+    let backends_raw = cfg
+        .get("backends")
+        .or_else(|| cfg.get("route_backends"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("route requires --backends=host:port[,host:port...]")
+        })?
+        .to_string();
+    let backends: Vec<String> = backends_raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    let defaults = RouterConfig::default();
+    let router_cfg = RouterConfig {
+        port: cfg.u16("port", cfg.u16("route_port", defaults.port)?)?,
+        host: cfg
+            .get("host")
+            .or_else(|| cfg.get("route_host"))
+            .unwrap_or(&defaults.host)
+            .to_string(),
+        backends,
+        max_request_bytes: cfg.usize(
+            "max-request-bytes",
+            cfg.usize("route_max_request_bytes", defaults.max_request_bytes)?,
+        )?,
+        max_connections: cfg.usize(
+            "max-connections",
+            cfg.usize("route_max_connections", defaults.max_connections)?,
+        )?,
+        retry_after_ms: cfg
+            .u64("retry-after-ms", cfg.u64("route_retry_after_ms", defaults.retry_after_ms)?)?,
+    };
+    println!(
+        "goomd-router: {} backends, rendezvous-hashed on canonical request keys",
+        router_cfg.backends.len()
+    );
+    server::router::route_blocking(router_cfg)
+}
+
+/// `repro req [--addr=...] '<json-request>'`: send one request line to a
+/// daemon or router, print the response line, and exit non-zero when the
+/// response is an error (scriptable probe; the CI smoke job uses it).
+fn req(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7077").to_string();
+    let line = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: repro req [--addr=...] '<json-request>'"))?;
+    let resp = server::request_once(&addr, line)?;
+    println!("{resp}");
+    let doc = json::parse(resp.trim())
+        .map_err(|e| anyhow::anyhow!("unparseable response: {e}"))?;
+    if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+        anyhow::bail!("request failed");
+    }
+    Ok(())
+}
+
 /// `repro loadgen [--addr --clients --requests --d --steps --method
-/// --seed]`: drive a live daemon and report throughput + latency
-/// percentiles through the standard metrics summary.
+/// --seed --min-cached]`: drive a live daemon and report throughput +
+/// latency percentiles through the standard metrics summary.
 fn loadgen(args: &Args) -> Result<()> {
     let defaults = LoadgenConfig::default();
     let shared_seed = args.get_parsed::<u64>("seed")?;
@@ -191,6 +260,15 @@ fn loadgen(args: &Args) -> Result<()> {
     if report.errors > 0 {
         anyhow::bail!("{} requests failed", report.errors);
     }
+    // Smoke-test hook: assert a minimum number of cache-served responses
+    // (repeated keys through the router must hit the owning shard's cache).
+    let min_cached = args.get_usize("min-cached", 0)?;
+    if report.cached < min_cached {
+        anyhow::bail!(
+            "expected at least {min_cached} cache-served responses, saw {}",
+            report.cached
+        );
+    }
     Ok(())
 }
 
@@ -221,10 +299,15 @@ USAGE:
                --cache=1024 --max-request-bytes=1048576 --max-connections=256]
                                     run goomd, the GOOM compute daemon
                                     (newline-JSON over TCP; see docs/SERVING.md)
+  repro route --backends=host:port[,host:port...] [--port=7070]
+                                    run the cache-aware router tier: rendezvous-
+                                    hashes canonical request keys across shards
+  repro req [--addr=127.0.0.1:7077] '<json-request>'
+                                    send one request line, print the response
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
-                 --method=goomc64 --d=8 --steps=500 --seed=N]
-                                    drive a live daemon; print throughput and
-                                    p50/p95/p99 latency
+                 --method=goomc64 --d=8 --steps=500 --seed=N --min-cached=N]
+                                    drive a live daemon or router; print
+                                    throughput and p50/p95/p99 latency
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Artifacts: set GOOMRS_ARTIFACTS or run from the repo root (./artifacts)."

@@ -56,12 +56,14 @@ impl LruCache {
     }
 
     /// Insert (or refresh) an entry, evicting the least-recently-used one
-    /// when at capacity.
-    pub fn insert(&mut self, key: String, value: Json) {
+    /// when at capacity. Returns the evicted key, if any — the serving
+    /// layer counts evictions so shard operators can see cache churn.
+    pub fn insert(&mut self, key: String, value: Json) -> Option<String> {
         if self.capacity == 0 {
-            return;
+            return None;
         }
         self.tick += 1;
+        let mut evicted = None;
         if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
             if let Some(oldest) = self
                 .map
@@ -70,9 +72,11 @@ impl LruCache {
                 .map(|(k, _)| k.clone())
             {
                 self.map.remove(&oldest);
+                evicted = Some(oldest);
             }
         }
         self.map.insert(key, Entry { value, last_used: self.tick });
+        evicted
     }
 }
 
@@ -99,12 +103,12 @@ mod tests {
     #[test]
     fn evicts_least_recently_used() {
         let mut c = LruCache::new(3);
-        c.insert("a".into(), v(1.0));
-        c.insert("b".into(), v(2.0));
-        c.insert("c".into(), v(3.0));
+        assert_eq!(c.insert("a".into(), v(1.0)), None);
+        assert_eq!(c.insert("b".into(), v(2.0)), None);
+        assert_eq!(c.insert("c".into(), v(3.0)), None);
         // Touch "a" so "b" is now the oldest.
         assert!(c.get("a").is_some());
-        c.insert("d".into(), v(4.0));
+        assert_eq!(c.insert("d".into(), v(4.0)), Some("b".to_string()));
         assert_eq!(c.len(), 3);
         assert_eq!(c.get("b"), None, "LRU entry must be evicted");
         assert!(c.get("a").is_some());
@@ -117,7 +121,8 @@ mod tests {
         let mut c = LruCache::new(2);
         c.insert("a".into(), v(1.0));
         c.insert("b".into(), v(2.0));
-        c.insert("a".into(), v(3.0)); // refresh, not a new entry
+        // Refresh, not a new entry: nothing is evicted.
+        assert_eq!(c.insert("a".into(), v(3.0)), None);
         assert_eq!(c.len(), 2);
         assert!(c.get("b").is_some());
         assert_eq!(c.get("a"), Some(v(3.0)));

@@ -1,0 +1,495 @@
+//! Readiness event loop: N connections, O(1) threads.
+//!
+//! The pre-refactor daemon spent one OS thread (and stack) per live
+//! connection. This module replaces that with a single loop thread driving
+//! every connection's [`SessionState`] over non-blocking sockets: `poll(2)`
+//! (declared directly against the C library std already links — no new
+//! dependencies) reports which sockets are readable/writable, the loop
+//! feeds bytes through the sans-IO machines, and compute responses arrive
+//! asynchronously from pool workers over a completion channel paired with
+//! a self-pipe waker. 1k idle connections now cost 1k file descriptors,
+//! not 1k stacks; the thread set is fixed (loop + workers) regardless of
+//! connection count.
+//!
+//! Response ordering: the protocol is strictly request-order per
+//! connection, but the loop pipelines — a connection's later requests can
+//! decode (and even complete) while an earlier compute is still in the
+//! pool. Each request takes a sequence number; finished lines park in a
+//! per-connection reorder buffer and flush only in sequence.
+//!
+//! On non-unix hosts a portable fallback ticks every couple of
+//! milliseconds and treats every socket as ready — spurious readiness
+//! costs one `WouldBlock` per socket, correctness is unchanged.
+
+use super::inflight::Reply;
+use super::pool::Pool;
+use super::protocol::err_line;
+use super::session::{dispatch, Job, ServerInner, SessionEvent, SessionState};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// Bytes read per `read(2)` call.
+const READ_CHUNK: usize = 64 * 1024;
+/// Stop reading from a connection whose un-flushed output exceeds this
+/// (the client isn't draining responses; don't buffer for it unboundedly).
+const MAX_OUTBUF: usize = 4 << 20;
+/// Poll timeout: an upper bound on shutdown latency, not a serving rate —
+/// I/O and completions wake the loop immediately.
+const POLL_TIMEOUT_MS: i32 = 500;
+
+/// A finished response line for connection `.0`, request slot `.1`.
+type Completion = (u64, u64, String);
+
+/// Wakes the loop out of `poll` from worker threads (self-pipe trick).
+pub struct Waker {
+    #[cfg(unix)]
+    tx: std::os::unix::net::UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            // One byte is enough; WouldBlock means a wake is already queued.
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+}
+
+#[cfg(unix)]
+fn waker_pair() -> io::Result<(Waker, std::os::unix::net::UnixStream)> {
+    let (rx, tx) = std::os::unix::net::UnixStream::pair()?;
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    Ok((Waker { tx }, rx))
+}
+
+#[cfg(unix)]
+mod sys {
+    //! The one C declaration the loop needs. std links libc on every unix
+    //! target, so this adds no dependency — just a prototype.
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    // nfds_t is `unsigned long` on Linux (pointer-width) and `unsigned
+    // int` on the BSD family — match the ABI, not just the OS name.
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    pub type Nfds = u64;
+    #[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+    pub type Nfds = u32;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+}
+
+/// One live connection: its socket, protocol state, and the reorder buffer
+/// that keeps pipelined responses in request order.
+struct Conn {
+    stream: TcpStream,
+    session: SessionState,
+    /// Bytes framed and waiting for the socket to accept them.
+    out: Vec<u8>,
+    /// Next request slot to assign.
+    next_seq: u64,
+    /// Next slot whose response may be flushed.
+    emit_seq: u64,
+    /// Completed lines waiting on earlier slots.
+    ready: BTreeMap<u64, String>,
+    read_closed: bool,
+    dead: bool,
+    readable: bool,
+}
+
+impl Conn {
+    fn finished(&self) -> bool {
+        self.read_closed && self.emit_seq == self.next_seq && self.out.is_empty()
+    }
+}
+
+/// Start the loop thread. The returned [`Waker`] interrupts `poll` — used
+/// by job completions and by [`super::Server::stop`].
+pub fn spawn(
+    listener: TcpListener,
+    inner: Arc<ServerInner>,
+    pool: Arc<Pool<Job>>,
+    shutdown: Arc<AtomicBool>,
+) -> io::Result<(JoinHandle<()>, Arc<Waker>)> {
+    #[cfg(unix)]
+    let (waker, wake_rx) = waker_pair()?;
+    #[cfg(not(unix))]
+    let waker = Waker {};
+    let waker = Arc::new(waker);
+    let loop_waker = Arc::clone(&waker);
+    let handle = std::thread::Builder::new()
+        .name("goomd-eventloop".to_string())
+        .spawn(move || {
+            let (tx, rx) = mpsc::channel::<Completion>();
+            EventLoop {
+                listener,
+                inner,
+                pool,
+                shutdown,
+                waker: loop_waker,
+                #[cfg(unix)]
+                wake_rx,
+                completions_tx: tx,
+                completions_rx: rx,
+                conns: HashMap::new(),
+                next_conn_id: 0,
+                listener_ready: false,
+            }
+            .run();
+        })?;
+    Ok((handle, waker))
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    inner: Arc<ServerInner>,
+    pool: Arc<Pool<Job>>,
+    shutdown: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    #[cfg(unix)]
+    wake_rx: std::os::unix::net::UnixStream,
+    completions_tx: mpsc::Sender<Completion>,
+    completions_rx: mpsc::Receiver<Completion>,
+    conns: HashMap<u64, Conn>,
+    next_conn_id: u64,
+    listener_ready: bool,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            self.wait_ready();
+            if self.shutdown.load(Ordering::SeqCst) {
+                // Best-effort final pass: pool teardown has just resolved
+                // queued jobs with shutdown-error lines — deliver what the
+                // sockets will take before closing them.
+                self.drain_completions();
+                self.flush_conns();
+                return;
+            }
+            self.accept_ready();
+            self.read_ready();
+            self.drain_completions();
+            self.flush_conns();
+            self.conns.retain(|_, c| !c.dead && !c.finished());
+        }
+    }
+
+    /// Block until something needs service (or the poll timeout elapses):
+    /// a new connection, readable/writable sockets, or a waker byte from a
+    /// completed job.
+    #[cfg(unix)]
+    fn wait_ready(&mut self) {
+        use std::os::unix::io::AsRawFd;
+
+        let mut fds: Vec<sys::PollFd> = Vec::with_capacity(self.conns.len() + 2);
+        let mut tokens: Vec<Option<u64>> = Vec::with_capacity(self.conns.len() + 2);
+        fds.push(sys::PollFd {
+            fd: self.listener.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        tokens.push(None);
+        fds.push(sys::PollFd {
+            fd: self.wake_rx.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        tokens.push(None);
+        for (&id, conn) in &mut self.conns {
+            conn.readable = false;
+            let mut events = 0i16;
+            if !conn.read_closed && conn.out.len() <= MAX_OUTBUF {
+                events |= sys::POLLIN;
+            }
+            if !conn.out.is_empty() {
+                events |= sys::POLLOUT;
+            }
+            if events == 0 {
+                continue;
+            }
+            fds.push(sys::PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+            tokens.push(Some(id));
+        }
+        let n = unsafe {
+            sys::poll(fds.as_mut_ptr(), fds.len() as sys::Nfds, POLL_TIMEOUT_MS)
+        };
+        self.listener_ready = false;
+        if n < 0 {
+            if io::Error::last_os_error().kind() != io::ErrorKind::Interrupted {
+                // Not expected; avoid a hot error spin.
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            return;
+        }
+        self.listener_ready = fds[0].revents != 0;
+        if fds[1].revents != 0 {
+            // Swallow queued wake bytes; completions drain separately.
+            let mut sink = [0u8; 256];
+            while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+        }
+        for (fd, token) in fds.iter().zip(&tokens).skip(2) {
+            let hang = fd.revents & (sys::POLLERR | sys::POLLHUP) != 0;
+            if fd.revents & sys::POLLIN != 0 || hang {
+                if let Some(conn) =
+                    token.as_ref().and_then(|id| self.conns.get_mut(id))
+                {
+                    // A hangup on a read-closed conn is surfaced by the
+                    // flush path instead.
+                    conn.readable = !conn.read_closed;
+                }
+            }
+        }
+    }
+
+    /// Portable fallback: tick and treat everything as ready. Non-blocking
+    /// sockets make spurious readiness harmless (one `WouldBlock` each).
+    #[cfg(not(unix))]
+    fn wait_ready(&mut self) {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        self.listener_ready = true;
+        for conn in self.conns.values_mut() {
+            conn.readable = !conn.read_closed && conn.out.len() <= MAX_OUTBUF;
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        if !self.listener_ready {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.on_accept(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    // e.g. EMFILE: the pending connection stays in the
+                    // backlog, so poll would report the listener readable
+                    // again immediately — back off briefly instead of
+                    // spinning the loop at 100% CPU.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn on_accept(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // drops (closes) the stream
+        }
+        let max_connections = self.inner.cfg.max_connections.max(1);
+        if self.conns.len() >= max_connections {
+            self.inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("connections_rejected", 1);
+            let mut line = err_line(
+                &format!(
+                    "server busy: connection limit ({max_connections}) reached"
+                ),
+                Some(self.inner.cfg.retry_after_ms),
+            );
+            line.push('\n');
+            // Best-effort: a fresh socket's send buffer is empty, so this
+            // short line fits or the client is already gone.
+            let _ = (&stream).write(line.as_bytes());
+            return; // drops (closes) the stream
+        }
+        self.inner.metrics.lock().expect("metrics lock").incr("connections", 1);
+        let id = self.next_conn_id;
+        self.next_conn_id += 1;
+        self.conns.insert(
+            id,
+            Conn {
+                stream,
+                session: SessionState::new(self.inner.cfg.max_request_bytes),
+                out: Vec::new(),
+                next_seq: 0,
+                emit_seq: 0,
+                ready: BTreeMap::new(),
+                read_closed: false,
+                dead: false,
+                // Serve bytes that raced ahead of the first poll.
+                readable: true,
+            },
+        );
+    }
+
+    fn read_ready(&mut self) {
+        let ids: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.readable && !c.dead && !c.read_closed)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut buf = vec![0u8; READ_CHUNK];
+        for id in ids {
+            let mut events = Vec::new();
+            let conn = self.conns.get_mut(&id).expect("conn exists");
+            // Fairness budget: one firehosing client must not pin the loop;
+            // leftover bytes stay in the kernel buffer and poll reports the
+            // socket readable again next iteration.
+            let mut budget = 16;
+            loop {
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                match (&conn.stream).read(&mut buf) {
+                    Ok(0) => {
+                        conn.session.on_eof(&mut events);
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.session.on_bytes(&buf[..n], &mut events);
+                        if conn.session.is_closed() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.inner
+                            .metrics
+                            .lock()
+                            .expect("metrics lock")
+                            .incr("connection_errors", 1);
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            self.handle_events(id, events);
+        }
+    }
+
+    fn handle_events(&mut self, id: u64, events: Vec<SessionEvent>) {
+        for ev in events {
+            match ev {
+                SessionEvent::Request(req) => {
+                    self.inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("requests_total", 1);
+                    let seq = self.assign_seq(id);
+                    let reply = self.reply_to(id, seq);
+                    dispatch(req, &self.inner, &self.pool, reply);
+                }
+                SessionEvent::BadLine(line) => {
+                    self.inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("requests_total", 1);
+                    let seq = self.assign_seq(id);
+                    self.complete(id, seq, line);
+                }
+                SessionEvent::Oversized(line) => {
+                    self.inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("oversized_rejects", 1);
+                    let seq = self.assign_seq(id);
+                    self.complete(id, seq, line);
+                }
+                SessionEvent::Close => {
+                    if let Some(c) = self.conns.get_mut(&id) {
+                        c.read_closed = true;
+                    }
+                }
+            }
+        }
+    }
+
+    fn assign_seq(&mut self, id: u64) -> u64 {
+        let c = self.conns.get_mut(&id).expect("conn exists");
+        let seq = c.next_seq;
+        c.next_seq += 1;
+        seq
+    }
+
+    /// The [`Reply`] for request slot (`id`, `seq`): routes the finished
+    /// line back through the completion channel and wakes the loop. Works
+    /// from any thread; a reply for a since-closed connection is dropped.
+    fn reply_to(&self, id: u64, seq: u64) -> Reply {
+        let tx = self.completions_tx.clone();
+        let waker = Arc::clone(&self.waker);
+        Box::new(move |line| {
+            let _ = tx.send((id, seq, line));
+            waker.wake();
+        })
+    }
+
+    fn complete(&mut self, id: u64, seq: u64, line: String) {
+        if let Some(c) = self.conns.get_mut(&id) {
+            c.ready.insert(seq, line);
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok((id, seq, line)) = self.completions_rx.try_recv() {
+            self.complete(id, seq, line);
+        }
+    }
+
+    fn flush_conns(&mut self) {
+        for conn in self.conns.values_mut() {
+            if conn.dead {
+                continue;
+            }
+            // Release contiguously-completed responses, in request order.
+            while let Some(line) = conn.ready.remove(&conn.emit_seq) {
+                conn.out.extend_from_slice(line.as_bytes());
+                conn.out.push(b'\n');
+                conn.emit_seq += 1;
+            }
+            if conn.out.is_empty() {
+                continue;
+            }
+            let mut written = 0usize;
+            while written < conn.out.len() {
+                match (&conn.stream).write(&conn.out[written..]) {
+                    Ok(0) => {
+                        conn.dead = true;
+                        break;
+                    }
+                    Ok(n) => written += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.inner
+                            .metrics
+                            .lock()
+                            .expect("metrics lock")
+                            .incr("connection_errors", 1);
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            conn.out.drain(..written);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! In-flight request deduplication: coalescing waiters on canonical keys.
+//!
+//! Concurrent identical requests (same canonical key) used to all compute —
+//! the cache only helps once the first completion has filled it. The
+//! [`Inflight`] registry closes that window: the first arrival for a key
+//! becomes the *leader* and submits one job; everyone else *coalesces*,
+//! parking a [`Reply`] under the key. When the job resolves, every parked
+//! reply receives the same response line, byte for byte.
+//!
+//! Replies are transport-agnostic callbacks, so the same registry serves
+//! the readiness event loop (a reply re-arms the connection's write slot)
+//! and any blocking driver (a reply sends on an mpsc channel).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A one-shot response sink: called exactly once with the finished response
+/// line (no trailing newline). Must be cheap and non-blocking — replies run
+/// on pool worker threads.
+pub type Reply = Box<dyn FnOnce(String) + Send + 'static>;
+
+/// Registry of compute keys currently being executed, each with the replies
+/// waiting on the result.
+#[derive(Default)]
+pub struct Inflight {
+    map: Mutex<HashMap<String, Vec<Reply>>>,
+}
+
+impl Inflight {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Park `reply` under `key`. Returns `true` when the caller is the
+    /// leader for this key (nobody was computing it) and must submit the
+    /// job; `false` when an identical request is already in flight and the
+    /// reply will be resolved by its completion.
+    pub fn join(&self, key: &str, reply: Reply) -> bool {
+        let mut map = self.map.lock().expect("inflight lock");
+        match map.get_mut(key) {
+            Some(waiters) => {
+                waiters.push(reply);
+                false
+            }
+            None => {
+                map.insert(key.to_string(), vec![reply]);
+                true
+            }
+        }
+    }
+
+    /// Remove and return every reply parked under `key` (empty when the key
+    /// was already taken — e.g. a duplicate leader racing a completion).
+    pub fn take(&self, key: &str) -> Vec<Reply> {
+        self.map.lock().expect("inflight lock").remove(key).unwrap_or_default()
+    }
+
+    /// Keys currently in flight (metrics).
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("inflight lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn reply_into(tx: &mpsc::Sender<String>) -> Reply {
+        let tx = tx.clone();
+        Box::new(move |line| {
+            let _ = tx.send(line);
+        })
+    }
+
+    #[test]
+    fn first_join_leads_followers_coalesce() {
+        let inflight = Inflight::new();
+        let (tx, rx) = mpsc::channel();
+        assert!(inflight.join("k", reply_into(&tx)));
+        assert!(!inflight.join("k", reply_into(&tx)));
+        assert!(!inflight.join("k", reply_into(&tx)));
+        assert!(inflight.join("other", reply_into(&tx)));
+        assert_eq!(inflight.len(), 2);
+        // Resolving "k" hands back all three waiters; each gets the line.
+        let waiters = inflight.take("k");
+        assert_eq!(waiters.len(), 3);
+        for w in waiters {
+            w("resp".to_string());
+        }
+        let got: Vec<String> = (0..3).map(|_| rx.try_recv().unwrap()).collect();
+        assert!(got.iter().all(|l| l == "resp"), "byte-identical fan-out");
+        // The key is free again: the next arrival is a fresh leader.
+        assert!(inflight.join("k", reply_into(&tx)));
+    }
+
+    #[test]
+    fn take_is_empty_for_unknown_or_taken_keys() {
+        let inflight = Inflight::new();
+        assert!(inflight.take("nope").is_empty());
+        let (tx, _rx) = mpsc::channel();
+        assert!(inflight.join("k", reply_into(&tx)));
+        assert_eq!(inflight.take("k").len(), 1);
+        assert!(inflight.take("k").is_empty(), "double take yields nothing");
+        assert!(inflight.is_empty());
+    }
+}

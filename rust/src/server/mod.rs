@@ -1,33 +1,46 @@
 //! `goomd` — the batched GOOM compute service (layer 4).
 //!
 //! Turns the library's chain/scan/Lyapunov kernels into a long-lived,
-//! multi-client daemon: a std-only TCP listener speaking newline-delimited
-//! JSON ([`protocol`]), a persistent worker pool with a bounded queue,
-//! backpressure, and same-shape request batching ([`pool`]), and an LRU
-//! result cache over canonicalized seeded requests ([`cache`]).
+//! multi-client daemon: a std-only TCP front served by a readiness event
+//! loop over non-blocking sockets ([`event_loop`]) driving pure sans-IO
+//! protocol state machines ([`session`]), a persistent worker pool with a
+//! bounded queue, backpressure, and same-shape request batching
+//! ([`pool`]), an in-flight registry coalescing concurrent identical
+//! requests onto one computation ([`inflight`]), and an LRU result cache
+//! over canonicalized seeded requests ([`cache`]).
 //!
 //! ```text
-//!   clients ── TCP ──► session threads ──► bounded queue ──► worker pool
-//!                        │   ▲                                │
-//!                        ▼   │ cached result                  ▼
-//!                       LRU cache ◄───── result fill ──── execute_batch
+//!   clients ── TCP ──► event loop ──► dispatch ──► bounded queue ──► workers
+//!              (poll)   │   ▲          │   ▲                           │
+//!                       │   └ ordered  ▼   │ coalesced waiters         ▼
+//!                       │     replies inflight ◄──── fan-out ──── execute_batch
+//!                       ▼                  ▲                           │
+//!                     sans-IO          LRU cache ◄──── result fill ────┘
+//!                     sessions
 //! ```
 //!
-//! This module is the seam later scaling work plugs into: sharding across
-//! processes, async I/O in the session layer, and multi-backend dispatch
-//! (native vs AOT/PJRT) in the executor are all local changes here.
+//! Horizontally, N daemons become shards behind the cache-aware
+//! [`router`] tier (`repro route`), which rendezvous-hashes canonical
+//! request keys so repeats land on the shard owning the cache entry.
 //!
-//! Entry points: `repro serve` ([`serve_blocking`]) and `repro loadgen`
-//! ([`loadgen`]); [`Server::start`] binds an ephemeral port for tests.
+//! Entry points: `repro serve` ([`serve_blocking`]), `repro route`
+//! ([`router::route_blocking`]), `repro loadgen` ([`loadgen`]) and
+//! `repro req` ([`request_once`]); [`Server::start`] binds an ephemeral
+//! port for tests.
 
 pub mod cache;
+pub mod event_loop;
+pub mod inflight;
 pub mod pool;
 pub mod protocol;
+pub mod router;
 pub mod session;
 
 pub use cache::LruCache;
+pub use inflight::{Inflight, Reply};
 pub use pool::{Pool, SubmitError};
 pub use protocol::Request;
+pub use router::{Router, RouterConfig};
 pub use session::{Job, ServerInner};
 
 use crate::coordinator::Metrics;
@@ -35,7 +48,7 @@ use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -59,8 +72,9 @@ pub struct ServeConfig {
     pub max_request_bytes: usize,
     /// Backoff hint attached to queue-full rejections.
     pub retry_after_ms: u64,
-    /// Max concurrent client connections (each costs a session thread);
-    /// connections past the cap are refused with an error line.
+    /// Max concurrent client connections (each costs a file descriptor
+    /// and a poll slot); connections past the cap are refused with an
+    /// error line.
     pub max_connections: usize,
 }
 
@@ -80,22 +94,26 @@ impl Default for ServeConfig {
     }
 }
 
-/// A running daemon: accept loop + worker pool, stoppable for tests.
+/// A running daemon: event-loop thread + worker pool, stoppable for tests.
+/// The thread set is fixed at start (1 loop + `workers`) no matter how
+/// many connections arrive.
 pub struct Server {
     addr: SocketAddr,
     inner: Arc<ServerInner>,
     pool: Arc<Pool<Job>>,
     shutdown: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
+    waker: Arc<event_loop::Waker>,
+    loop_handle: Option<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind, start workers, and begin accepting in a background thread.
+    /// Bind, start workers, and begin serving on the event-loop thread.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
         let addr = listener.local_addr().context("reading bound address")?;
-        // Non-blocking accept so the loop can observe the shutdown flag.
+        // Non-blocking: the event loop multiplexes accepts with everything
+        // else and observes the shutdown flag on its poll timeout.
         listener.set_nonblocking(true).context("set_nonblocking")?;
         let inner = Arc::new(ServerInner::new(cfg.clone()));
         let pool = {
@@ -109,77 +127,21 @@ impl Server {
             ))
         };
         let shutdown = Arc::new(AtomicBool::new(false));
-        let max_connections = cfg.max_connections.max(1);
-        let accept_handle = {
-            let inner = Arc::clone(&inner);
-            let pool = Arc::clone(&pool);
-            let shutdown = Arc::clone(&shutdown);
-            // Connection-layer backpressure: every live session costs one
-            // OS thread, so cap them the same way the job queue is capped.
-            let active = Arc::new(AtomicUsize::new(0));
-            std::thread::Builder::new()
-                .name("goomd-accept".to_string())
-                .spawn(move || {
-                    while !shutdown.load(Ordering::SeqCst) {
-                        match listener.accept() {
-                            Ok((mut stream, _peer)) => {
-                                // BSD-family accept() inherits the listener's
-                                // non-blocking flag; sessions need blocking
-                                // reads everywhere.
-                                if stream.set_nonblocking(false).is_err() {
-                                    continue; // drops (closes) the stream
-                                }
-                                if active.load(Ordering::SeqCst) >= max_connections {
-                                    let mut m =
-                                        inner.metrics.lock().expect("metrics lock");
-                                    m.incr("connections_rejected", 1);
-                                    drop(m);
-                                    let line = protocol::err_line(
-                                        &format!(
-                                            "server busy: connection limit \
-                                             ({max_connections}) reached"
-                                        ),
-                                        Some(inner.cfg.retry_after_ms),
-                                    );
-                                    let _ = stream.write_all(line.as_bytes());
-                                    let _ = stream.write_all(b"\n");
-                                    continue; // drops (closes) the stream
-                                }
-                                inner
-                                    .metrics
-                                    .lock()
-                                    .expect("metrics lock")
-                                    .incr("connections", 1);
-                                active.fetch_add(1, Ordering::SeqCst);
-                                let session_inner = Arc::clone(&inner);
-                                let session_pool = Arc::clone(&pool);
-                                let session_active = Arc::clone(&active);
-                                let spawned = std::thread::Builder::new()
-                                    .name("goomd-session".to_string())
-                                    .spawn(move || {
-                                        session::handle_connection(
-                                            stream,
-                                            &session_inner,
-                                            &session_pool,
-                                        );
-                                        session_active.fetch_sub(1, Ordering::SeqCst);
-                                    });
-                                if spawned.is_err() {
-                                    active.fetch_sub(1, Ordering::SeqCst);
-                                }
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(Duration::from_millis(5));
-                            }
-                            Err(_) => {
-                                std::thread::sleep(Duration::from_millis(50));
-                            }
-                        }
-                    }
-                })
-                .expect("spawning accept thread")
-        };
-        Ok(Server { addr, inner, pool, shutdown, accept_handle: Some(accept_handle) })
+        let (loop_handle, waker) = event_loop::spawn(
+            listener,
+            Arc::clone(&inner),
+            Arc::clone(&pool),
+            Arc::clone(&shutdown),
+        )
+        .context("spawning event loop")?;
+        Ok(Server {
+            addr,
+            inner,
+            pool,
+            shutdown,
+            waker,
+            loop_handle: Some(loop_handle),
+        })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -196,17 +158,24 @@ impl Server {
         self.inner.metrics.lock().expect("metrics lock").counter(name)
     }
 
-    /// Stop accepting, drain the pool, and join the accept thread.
+    /// Stop serving: wake the event loop out of `poll`, join it, then
+    /// drain the pool (queued jobs resolve their waiters with a shutdown
+    /// error as they drop).
     pub fn stop(mut self) {
         self.stop_impl();
     }
 
     fn stop_impl(&mut self) {
+        // Drain the pool first, while the event loop still runs: queued
+        // jobs resolve their waiters with a shutdown-error line, and the
+        // loop can still deliver those responses. Then stop the loop —
+        // it makes a final drain-and-flush pass before closing sockets.
+        self.pool.shutdown();
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        self.waker.wake();
+        if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
-        self.pool.shutdown();
     }
 }
 
@@ -232,6 +201,23 @@ pub fn serve_blocking(cfg: ServeConfig) -> Result<()> {
             );
         }
     }
+}
+
+/// `repro req`: send one raw request line to a daemon or router and return
+/// the single response line (also the CI smoke test's probe).
+pub fn request_once(addr: &str, line: &str) -> Result<String> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut resp = String::new();
+    if reader.read_line(&mut resp)? == 0 {
+        return Err(anyhow!("server closed the connection without answering"));
+    }
+    Ok(resp.trim_end().to_string())
 }
 
 // ---------------------------------------------------------------- loadgen --
@@ -483,6 +469,80 @@ mod tests {
             roundtrip(&stream, r#"{"op":"chain","d":4,"steps":50,"seed":11}"#);
         assert_eq!(third.get("cached").unwrap().as_bool(), Some(true));
         assert!(server.counter("cache_hits") >= 2);
+        server.stop();
+    }
+
+    #[cfg(target_os = "linux")]
+    fn proc_thread_count() -> usize {
+        std::fs::read_to_string("/proc/self/status")
+            .ok()
+            .and_then(|s| {
+                s.lines()
+                    .find(|l| l.starts_with("Threads:"))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|n| n.parse().ok())
+            })
+            .expect("parsing /proc/self/status")
+    }
+
+    #[test]
+    fn many_concurrent_connections_cost_no_extra_threads() {
+        let server = Server::start(test_config()).unwrap();
+        #[cfg(target_os = "linux")]
+        let threads_before = proc_thread_count();
+        let conns: Vec<TcpStream> =
+            (0..100).map(|_| TcpStream::connect(server.addr()).unwrap()).collect();
+        // Every connection is live and served by the same fixed thread set.
+        for stream in &conns {
+            let info = roundtrip(stream, r#"{"op":"info"}"#);
+            assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+        }
+        #[cfg(target_os = "linux")]
+        {
+            // Other tests run concurrently and spawn their own bounded
+            // threads, so allow slack — but nothing close to one thread
+            // per connection.
+            let threads_after = proc_thread_count();
+            assert!(
+                threads_after < threads_before + 50,
+                "connections must not cost threads: {threads_before} -> {threads_after}"
+            );
+        }
+        drop(conns);
+        server.stop();
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_request_order() {
+        let server = Server::start(test_config()).unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut writer = BufWriter::new(stream.try_clone().unwrap());
+        // One write carrying three requests: compute, introspection (which
+        // completes instantly), compute. The loop pipelines them through
+        // the pool, but responses must flush in request order.
+        let burst = format!(
+            "{}\n{}\n{}\n",
+            protocol::encode_chain_request("goomc64", 4, 60, 31),
+            r#"{"op":"info"}"#,
+            protocol::encode_chain_request("goomc64", 4, 60, 32),
+        );
+        writer.write_all(burst.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut l = String::new();
+            assert!(reader.read_line(&mut l).unwrap() > 0, "missing response");
+            lines.push(json::parse(l.trim()).unwrap());
+        }
+        assert!(lines
+            .iter()
+            .all(|d| d.get("ok").unwrap().as_bool() == Some(true)));
+        let result = |i: usize| lines[i].get("result").unwrap();
+        assert_eq!(result(0).get("method").unwrap().as_str(), Some("goomc64"));
+        assert_eq!(result(1).get("service").unwrap().as_str(), Some("goomd"));
+        assert_eq!(result(2).get("method").unwrap().as_str(), Some("goomc64"));
+        assert_ne!(result(0), result(2), "distinct seeds anchor the order");
         server.stop();
     }
 

@@ -11,8 +11,9 @@
 //! Batching: when a worker pops a job whose `batch_key` is `Some(k)`, it
 //! also drains every other queued job with the same key (up to
 //! `batch_max`), handing the whole group to the executor in one call. The
-//! server uses this to fold concurrent same-shape GOOM chain requests into
-//! one stacked LMME pass ([`crate::goom::lmme_batched`]).
+//! server uses this to fold concurrent same-shape GOOM chain requests —
+//! and same-dimension scan requests — into stacked LMME passes
+//! ([`crate::goom::lmme_batched`]).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

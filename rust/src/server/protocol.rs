@@ -246,13 +246,12 @@ impl Request {
         }))
     }
 
-    /// Canonical cache key: the request re-encoded with every default made
+    /// Canonical wire form: the request re-encoded with every default made
     /// explicit, keys sorted (the JSON writer emits `BTreeMap` order).
-    /// Large canonical forms (scan payloads run to `max_request_bytes`) are
-    /// digested to a fixed-size key so the entry-count LRU cannot be made
-    /// to retain gigabytes of key strings. `None` for the introspection
-    /// ops, which are never cached.
-    pub fn canonical_key(&self) -> Option<String> {
+    /// Always a parseable request line — the router forwards this instead
+    /// of the client's spelling, so shards see normalized traffic. `None`
+    /// for the introspection ops.
+    pub fn canonical_line(&self) -> Option<String> {
         let doc = match self {
             Request::Info | Request::Metrics => return None,
             Request::Chain(c) => obj(vec![
@@ -299,7 +298,16 @@ impl Request {
                 ("chunks", num(l.chunks as f64)),
             ]),
         };
-        let full = json::write(&doc);
+        Some(json::write(&doc))
+    }
+
+    /// Canonical cache key: [`canonical_line`](Self::canonical_line), with
+    /// large canonical forms (scan payloads run to `max_request_bytes`)
+    /// digested to a fixed-size key so the entry-count LRU cannot be made
+    /// to retain gigabytes of key strings. `None` for the introspection
+    /// ops, which are never cached.
+    pub fn canonical_key(&self) -> Option<String> {
+        let full = self.canonical_line()?;
         Some(if full.len() > MAX_VERBATIM_KEY_BYTES {
             digest_key(&full)
         } else {
@@ -308,8 +316,10 @@ impl Request {
     }
 
     /// Pool batch key: requests sharing a key may be executed together in
-    /// one stacked pass. Only GOOM chain requests batch (they share the
-    /// per-step LMME); float chains and scans/LLE run solo.
+    /// one stacked pass. GOOM chain requests batch by (method, d) — they
+    /// share the per-step LMME — and scan requests batch by dimension,
+    /// advancing their chunked folds in lockstep. Float chains and LLE
+    /// run solo.
     pub fn batch_key(&self) -> Option<String> {
         match self {
             Request::Chain(c)
@@ -317,6 +327,7 @@ impl Request {
             {
                 Some(format!("chain:{}:{}", method_slug(c.method), c.d))
             }
+            Request::Scan(s) => Some(format!("scan:{}", s.d)),
             _ => None,
         }
     }
@@ -535,7 +546,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_keys_group_only_same_shape_goom_chains() {
+    fn batch_keys_group_same_shape_goom_chains_and_scans() {
         let a = parse_line(r#"{"op":"chain","method":"goomc64","d":8}"#).unwrap();
         let b = parse_line(r#"{"op":"chain","method":"goomc64","d":8,"seed":9}"#).unwrap();
         let c = parse_line(r#"{"op":"chain","method":"goomc64","d":16}"#).unwrap();
@@ -546,6 +557,43 @@ mod tests {
         assert_ne!(a.batch_key(), c.batch_key());
         assert_eq!(d.batch_key(), None);
         assert_eq!(e.batch_key(), None);
+        // Same-dimension scans share a batch key regardless of payload;
+        // other dimensions do not.
+        let mut rng = rng_from_seed(5);
+        let m2: Vec<GoomMat<f64>> =
+            (0..2).map(|_| GoomMat::randn(2, 2, &mut rng)).collect();
+        let n2: Vec<GoomMat<f64>> =
+            (0..4).map(|_| GoomMat::randn(2, 2, &mut rng)).collect();
+        let m3: Vec<GoomMat<f64>> =
+            (0..2).map(|_| GoomMat::randn(3, 3, &mut rng)).collect();
+        let s2 = parse_line(&encode_scan_request(&m2, 4)).unwrap();
+        let t2 = parse_line(&encode_scan_request(&n2, 8)).unwrap();
+        let s3 = parse_line(&encode_scan_request(&m3, 4)).unwrap();
+        assert_eq!(s2.batch_key(), t2.batch_key());
+        assert!(s2.batch_key().is_some());
+        assert_ne!(s2.batch_key(), s3.batch_key());
+        assert_ne!(s2.batch_key(), a.batch_key());
+    }
+
+    #[test]
+    fn canonical_line_is_always_a_parseable_normalized_request() {
+        // Even when the cache key degrades to a digest (large scans), the
+        // canonical line the router forwards stays a full request.
+        let mut rng = rng_from_seed(92);
+        let mats: Vec<GoomMat<f64>> =
+            (0..32).map(|_| GoomMat::randn(8, 8, &mut rng)).collect();
+        let req = parse_line(&encode_scan_request(&mats, 8)).unwrap();
+        assert!(req.canonical_key().unwrap().starts_with("digest:"));
+        let line = req.canonical_line().unwrap();
+        assert_eq!(parse_line(&line).unwrap(), req, "line must round-trip");
+        // Defaults are spelled out, so distinct spellings converge.
+        let implicit = parse_line(r#"{"op":"chain"}"#).unwrap();
+        let explicit = parse_line(
+            r#"{"op":"chain","method":"goomc64","d":8,"steps":1000,"seed":42}"#,
+        )
+        .unwrap();
+        assert_eq!(implicit.canonical_line(), explicit.canonical_line());
+        assert_eq!(Request::Info.canonical_line(), None);
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! `repro route` — the cache-aware router tier in front of `goomd` shards.
+//!
+//! Scaling past one process means splitting the result cache: each `goomd`
+//! shard owns the cache entries for the requests it serves, so the front
+//! tier must send a given request to the *same* shard every time. The
+//! router does that with rendezvous (highest-random-weight) hashing over
+//! the request's canonical key: every backend is scored by
+//! `hash(key, backend)` and the highest score wins. The ranking is
+//! deterministic across router processes and restarts (the hasher is
+//! fixed-key), repeats land on the shard whose cache owns the entry, and
+//! removing a backend only remaps the keys that backend owned.
+//!
+//! Requests are re-encoded in canonical form before forwarding, so shards
+//! see normalized traffic regardless of client spelling. Introspection ops
+//! (`info`/`metrics`) are answered by the router itself — its metrics
+//! carry per-shard routing counters (`routed[host:port]`), failovers, and
+//! errors. On a backend failure the router retries the request once on a
+//! fresh connection, then fails over down the rendezvous ranking (which
+//! costs cache affinity but preserves availability).
+//!
+//! Relay sessions block on the backend round-trip, so the router keeps the
+//! simple thread-per-connection accept loop; the compute daemon behind it
+//! is where concurrency lives ([`super::event_loop`]). Framing and decode
+//! reuse the same sans-IO [`SessionState`] machine as the daemon.
+
+use super::protocol::{err_line, num, num_or_null, obj, ok_line, Request};
+use super::session::{SessionEvent, SessionState};
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Cap on one relayed backend response line (scan results can run large,
+/// but a runaway backend must not buffer unboundedly into the router).
+const MAX_RESPONSE_BYTES: u64 = 32 << 20;
+
+/// Bound on establishing a backend connection: a blackholed shard must
+/// become an error (and a failover) quickly, not a hung relay session.
+const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Bound on one backend round-trip. Generous — requests at the protocol's
+/// compute bounds legitimately take a while — but finite, so a shard that
+/// accepts and then never answers still trips the failover path.
+const BACKEND_IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// `repro route` tuning knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// TCP port; 0 = OS-assigned (tests).
+    pub port: u16,
+    /// Bind address.
+    pub host: String,
+    /// Backend `goomd` shard addresses (`host:port`).
+    pub backends: Vec<String>,
+    /// Max bytes in one client request line.
+    pub max_request_bytes: usize,
+    /// Max concurrent client connections.
+    pub max_connections: usize,
+    /// Backoff hint attached to no-backend-available rejections.
+    pub retry_after_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            port: 7070,
+            host: "127.0.0.1".to_string(),
+            backends: Vec::new(),
+            max_request_bytes: 1 << 20,
+            max_connections: 256,
+            retry_after_ms: 100,
+        }
+    }
+}
+
+/// Stable 64-bit FNV-1a over length-delimited parts. The rendezvous score
+/// must be identical across processes, restarts, *and Rust releases* —
+/// std's `DefaultHasher` algorithm is explicitly unspecified between
+/// releases, which would silently break cache affinity fleet-wide on a
+/// toolchain upgrade — so the hash is spelled out here.
+fn fnv1a64(parts: &[&[u8]]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+        // Part separator so ("ab", "c") and ("a", "bc") score apart.
+        h ^= 0xff;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Rank backend indices for `key`, best first, by rendezvous hashing.
+/// Deterministic across processes: same key + same backend list → same
+/// ranking, always.
+pub fn rendezvous_rank(key: &str, backends: &[String]) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, backend)| {
+            (fnv1a64(&[key.as_bytes(), backend.as_bytes()]), i)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.cmp(a));
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+struct RouterInner {
+    cfg: RouterConfig,
+    metrics: Mutex<Metrics>,
+    started: Instant,
+}
+
+/// A running router: accept loop + relay sessions, stoppable for tests.
+pub struct Router {
+    addr: SocketAddr,
+    inner: Arc<RouterInner>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind and begin accepting in a background thread.
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(
+            !cfg.backends.is_empty(),
+            "router needs at least one backend (--backends=host:port[,host:port...])"
+        );
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let inner = Arc::new(RouterInner {
+            cfg: cfg.clone(),
+            metrics: Mutex::new(Metrics::new()),
+            started: Instant::now(),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let max_connections = cfg.max_connections.max(1);
+        let accept_handle = {
+            let inner = Arc::clone(&inner);
+            let shutdown = Arc::clone(&shutdown);
+            let active = Arc::new(AtomicUsize::new(0));
+            std::thread::Builder::new()
+                .name("goomd-router-accept".to_string())
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((mut stream, _peer)) => {
+                                // Sessions use blocking reads; undo the
+                                // inherited non-blocking accept flag.
+                                if stream.set_nonblocking(false).is_err() {
+                                    continue; // drops (closes) the stream
+                                }
+                                if active.load(Ordering::SeqCst) >= max_connections {
+                                    let mut m =
+                                        inner.metrics.lock().expect("metrics lock");
+                                    m.incr("connections_rejected", 1);
+                                    drop(m);
+                                    let line = err_line(
+                                        &format!(
+                                            "router busy: connection limit \
+                                             ({max_connections}) reached"
+                                        ),
+                                        Some(inner.cfg.retry_after_ms),
+                                    );
+                                    let _ = stream.write_all(line.as_bytes());
+                                    let _ = stream.write_all(b"\n");
+                                    continue; // drops (closes) the stream
+                                }
+                                inner
+                                    .metrics
+                                    .lock()
+                                    .expect("metrics lock")
+                                    .incr("connections", 1);
+                                active.fetch_add(1, Ordering::SeqCst);
+                                let session_inner = Arc::clone(&inner);
+                                let session_active = Arc::clone(&active);
+                                let spawned = std::thread::Builder::new()
+                                    .name("goomd-router-session".to_string())
+                                    .spawn(move || {
+                                        if serve_session(stream, &session_inner)
+                                            .is_err()
+                                        {
+                                            session_inner
+                                                .metrics
+                                                .lock()
+                                                .expect("metrics lock")
+                                                .incr("connection_errors", 1);
+                                        }
+                                        session_active
+                                            .fetch_sub(1, Ordering::SeqCst);
+                                    });
+                                if spawned.is_err() {
+                                    active.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(e)
+                                if e.kind() == std::io::ErrorKind::WouldBlock =>
+                            {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(_) => {
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                        }
+                    }
+                })
+                .expect("spawning router accept thread")
+        };
+        Ok(Router { addr, inner, shutdown, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counter value by name (tests assert on routing decisions).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.metrics.lock().expect("metrics lock").counter(name)
+    }
+
+    pub fn metrics_summary(&self) -> String {
+        self.inner.metrics.lock().expect("metrics lock").summary()
+    }
+
+    /// Stop accepting and join the accept thread (live relay sessions end
+    /// when their clients disconnect).
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// `repro route`: run the router until the process is killed.
+pub fn route_blocking(cfg: RouterConfig) -> Result<()> {
+    let router = Router::start(cfg)?;
+    println!("goomd-router listening on {}", router.addr());
+    println!("  backends:");
+    for b in &router.inner.cfg.backends {
+        println!("    {b}");
+    }
+    let started = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        let summary = router.metrics_summary();
+        if !summary.is_empty() {
+            println!(
+                "--- router metrics ({}s up) ---\n{summary}",
+                started.elapsed().as_secs()
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- sessions --
+
+/// Pooled connections to backends, one per (session, backend).
+struct BackendConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Default)]
+struct BackendConns {
+    conns: HashMap<usize, BackendConn>,
+}
+
+impl BackendConns {
+    /// Send `line` to backend `idx` and read one response line. Retries
+    /// once on a fresh connection (the pooled one may have died with a
+    /// backend restart) before reporting the error.
+    fn forward(&mut self, idx: usize, addr: &str, line: &str) -> std::io::Result<String> {
+        for fresh in [false, true] {
+            if !self.conns.contains_key(&idx) {
+                let stream = connect_backend(addr)?;
+                let reader = BufReader::new(stream.try_clone()?);
+                self.conns.insert(idx, BackendConn { reader, writer: stream });
+            }
+            let conn = self.conns.get_mut(&idx).expect("inserted above");
+            match round_trip(conn, line) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    self.conns.remove(&idx);
+                    if fresh {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        unreachable!("the fresh attempt returns")
+    }
+}
+
+/// Connect with bounded timeouts: an unreachable or unresponsive shard
+/// must become an `Err` (feeding the failover path), never a hung session.
+fn connect_backend(addr: &str) -> std::io::Result<TcpStream> {
+    let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "backend address resolves to nothing",
+        )
+    })?;
+    let stream = TcpStream::connect_timeout(&sockaddr, BACKEND_CONNECT_TIMEOUT)?;
+    stream.set_read_timeout(Some(BACKEND_IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(BACKEND_IO_TIMEOUT))?;
+    Ok(stream)
+}
+
+fn round_trip(conn: &mut BackendConn, line: &str) -> std::io::Result<String> {
+    conn.writer.write_all(line.as_bytes())?;
+    conn.writer.write_all(b"\n")?;
+    let mut resp = String::new();
+    let n = (&mut conn.reader).take(MAX_RESPONSE_BYTES).read_line(&mut resp)?;
+    if n == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "backend closed the connection",
+        ));
+    }
+    if !resp.ends_with('\n') {
+        // Either the response outgrew MAX_RESPONSE_BYTES (its remainder
+        // would desync every later request on this pooled stream) or the
+        // backend died mid-line; both invalidate the connection.
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "backend response truncated or exceeded the relay size cap",
+        ));
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+/// Serve one client connection: frame/decode through the sans-IO session
+/// machine, answer introspection locally, relay compute ops to the shard
+/// the rendezvous ranking picks.
+fn serve_session(stream: TcpStream, inner: &Arc<RouterInner>) -> std::io::Result<()> {
+    let mut session = SessionState::new(inner.cfg.max_request_bytes);
+    let mut backends = BackendConns::default();
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    let mut buf = [0u8; 8192];
+    let mut events = Vec::new();
+    loop {
+        let n = match reader.read(&mut buf) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            session.on_eof(&mut events);
+        } else {
+            session.on_bytes(&buf[..n], &mut events);
+        }
+        for ev in events.drain(..) {
+            match ev {
+                SessionEvent::Request(req) => {
+                    inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("requests_total", 1);
+                    let line = handle_request(req, inner, &mut backends);
+                    respond(&mut writer, &line)?;
+                }
+                SessionEvent::BadLine(line) => {
+                    inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("requests_total", 1);
+                    respond(&mut writer, &line)?;
+                }
+                SessionEvent::Oversized(line) => {
+                    inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("oversized_rejects", 1);
+                    respond(&mut writer, &line)?;
+                }
+                SessionEvent::Close => return Ok(()),
+            }
+        }
+        if n == 0 {
+            return Ok(());
+        }
+    }
+}
+
+fn handle_request(
+    req: Request,
+    inner: &Arc<RouterInner>,
+    backends: &mut BackendConns,
+) -> String {
+    match req {
+        Request::Info => ok_line(info_json(inner), false),
+        Request::Metrics => ok_line(metrics_json(inner), false),
+        compute => {
+            let key = compute
+                .canonical_key()
+                .expect("compute requests always have a canonical key");
+            let line = compute
+                .canonical_line()
+                .expect("compute requests always encode");
+            // Canonicalizing spells out defaults, so a request that just
+            // fit the inbound cap can exceed it (by ~tens of bytes).
+            // Reject here with a clear error rather than letting the
+            // shard's identical cap produce a confusing rejection.
+            if line.len() > inner.cfg.max_request_bytes {
+                inner
+                    .metrics
+                    .lock()
+                    .expect("metrics lock")
+                    .incr("oversized_rejects", 1);
+                return err_line(
+                    &format!(
+                        "canonical request form is {} bytes, exceeding {} \
+                         (raise --max-request-bytes on router and shards)",
+                        line.len(),
+                        inner.cfg.max_request_bytes
+                    ),
+                    None,
+                );
+            }
+            let ranked = rendezvous_rank(&key, &inner.cfg.backends);
+            for (attempt, &idx) in ranked.iter().enumerate() {
+                let addr = &inner.cfg.backends[idx];
+                match backends.forward(idx, addr, &line) {
+                    Ok(resp) => {
+                        let mut m = inner.metrics.lock().expect("metrics lock");
+                        m.incr_labeled("routed", addr, 1);
+                        if attempt > 0 {
+                            m.incr("route_failovers", 1);
+                        }
+                        return resp;
+                    }
+                    Err(_) => continue, // next-ranked backend
+                }
+            }
+            inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
+            err_line(
+                &format!(
+                    "no backend available for request (tried {})",
+                    ranked.len()
+                ),
+                Some(inner.cfg.retry_after_ms),
+            )
+        }
+    }
+}
+
+fn respond(writer: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+fn info_json(inner: &Arc<RouterInner>) -> Json {
+    obj(vec![
+        ("service", Json::Str("goomd-router".to_string())),
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        (
+            "backends",
+            Json::Arr(
+                inner
+                    .cfg
+                    .backends
+                    .iter()
+                    .map(|b| Json::Str(b.clone()))
+                    .collect(),
+            ),
+        ),
+        ("max_request_bytes", num(inner.cfg.max_request_bytes as f64)),
+        ("max_connections", num(inner.cfg.max_connections as f64)),
+        ("uptime_s", num(inner.started.elapsed().as_secs_f64())),
+        (
+            "ops",
+            Json::Arr(
+                ["chain", "scan", "lle", "info", "metrics"]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn metrics_json(inner: &Arc<RouterInner>) -> Json {
+    let m = inner.metrics.lock().expect("metrics lock");
+    let counters: BTreeMap<String, Json> = m
+        .counters_iter()
+        .map(|(k, v)| (k.to_string(), num(v as f64)))
+        .collect();
+    let gauges: BTreeMap<String, Json> = m
+        .gauges_iter()
+        .map(|(k, v)| (k.to_string(), num_or_null(v)))
+        .collect();
+    obj(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backends(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7100 + i)).collect()
+    }
+
+    #[test]
+    fn rendezvous_rank_is_a_deterministic_permutation() {
+        let b = backends(3);
+        let r = rendezvous_rank("chain:42", &b);
+        assert_eq!(r, rendezvous_rank("chain:42", &b), "stable across calls");
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "every backend appears once");
+    }
+
+    #[test]
+    fn rendezvous_spreads_distinct_keys_across_backends() {
+        let b = backends(3);
+        let mut first_choice = [0usize; 3];
+        for k in 0..300 {
+            first_choice[rendezvous_rank(&format!("key-{k}"), &b)[0]] += 1;
+        }
+        assert!(
+            first_choice.iter().all(|&c| c > 50),
+            "skewed spread: {first_choice:?}"
+        );
+    }
+
+    #[test]
+    fn rendezvous_only_remaps_keys_owned_by_a_new_backend() {
+        // The rendezvous property: growing the backend set only moves keys
+        // whose winner IS the new backend; everyone else keeps their shard
+        // (and therefore their warm cache).
+        let two = backends(2);
+        let three = backends(3);
+        for k in 0..200 {
+            let key = format!("k{k}");
+            let w3 = rendezvous_rank(&key, &three)[0];
+            if w3 != 2 {
+                assert_eq!(rendezvous_rank(&key, &two)[0], w3, "key {key} moved");
+            }
+        }
+    }
+}

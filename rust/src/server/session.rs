@@ -1,13 +1,23 @@
-//! Per-connection session handling and job execution.
+//! Sans-IO session protocol and job execution.
 //!
-//! Each accepted TCP connection gets one session thread that reads
-//! newline-delimited JSON requests, answers introspection ops inline,
-//! serves cache hits from memory, and forwards compute ops to the worker
-//! pool, blocking on the job's reply channel. Compute itself happens on
-//! pool workers via [`execute_batch`] — connection threads never run
-//! kernels, so a slow request cannot starve the accept path.
+//! [`SessionState`] is a pure per-connection state machine: transport bytes
+//! go in ([`SessionState::on_bytes`] / [`SessionState::on_eof`]), framed
+//! protocol events come out — decoded requests, ready-to-send error lines,
+//! and close signals. It owns framing (newline splitting, the
+//! `max_request_bytes` slow-loris guard with bounded discard/resync) and
+//! decoding, but touches no sockets, so the same protocol code is driven by
+//! the readiness event loop ([`super::event_loop`]), the blocking router
+//! sessions ([`super::router`]), and plain unit tests.
+//!
+//! [`dispatch`] turns a decoded request into a response: introspection ops
+//! answer inline, cache hits are served from memory, and compute ops are
+//! coalesced through the [`super::inflight`] registry and submitted to the
+//! worker pool. Compute itself happens on pool workers via
+//! [`execute_batch`] — the I/O driver never runs kernels, so a slow request
+//! cannot starve the accept path.
 
 use super::cache::LruCache;
+use super::inflight::{Inflight, Reply};
 use super::pool::{Pool, SubmitError};
 use super::protocol::{
     err_line, method_slug, num, num_or_null, obj, ok_line, Request,
@@ -16,19 +26,18 @@ use super::ServeConfig;
 use crate::chain::{self, ChainResult, ChainSpec, Method};
 use crate::coordinator::Metrics;
 use crate::dynsys;
-use crate::goom::{lmme, GoomMat};
+use crate::goom::{lmme_batched, GoomMat};
 use crate::lyapunov;
 use crate::util::json::{self, Json};
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::net::TcpStream;
-use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// State shared by every session and worker: config, cache, metrics.
+/// State shared by every session and worker: config, cache, in-flight
+/// request registry, metrics.
 pub struct ServerInner {
     pub cfg: ServeConfig,
     pub cache: Mutex<LruCache>,
+    pub inflight: Inflight,
     pub metrics: Mutex<Metrics>,
     pub started: Instant,
 }
@@ -36,18 +45,270 @@ pub struct ServerInner {
 impl ServerInner {
     pub fn new(cfg: ServeConfig) -> Self {
         let cache = Mutex::new(LruCache::new(cfg.cache_capacity));
-        Self { cfg, cache, metrics: Mutex::new(Metrics::new()), started: Instant::now() }
+        Self {
+            cfg,
+            cache,
+            inflight: Inflight::new(),
+            metrics: Mutex::new(Metrics::new()),
+            started: Instant::now(),
+        }
     }
 }
 
-/// One queued unit of work: the decoded request, its cache key (compute ops
-/// only), and the channel carrying the finished response line back to the
-/// session thread.
+// ------------------------------------------------------ sans-IO sessions --
+
+/// What the protocol wants the transport driver to do next.
+#[derive(Debug)]
+pub enum SessionEvent {
+    /// A fully-decoded request: hand it to [`dispatch`].
+    Request(Request),
+    /// A line that failed to decode; the payload is the complete response
+    /// line to send (counted as a request by the driver).
+    BadLine(String),
+    /// A line that exceeded `max_request_bytes`; the payload is the
+    /// complete response line to send.
+    Oversized(String),
+    /// Stop reading and close once pending responses have flushed.
+    Close,
+}
+
+/// Pure per-connection protocol state: bytes in, events out, no sockets.
+///
+/// Framing rules (identical to the pre-refactor blocking reader):
+/// * requests are newline-delimited; blank lines are ignored;
+/// * a line whose content exceeds `max_request_bytes` is answered with a
+///   structured protocol error, and the rest of the line is discarded
+///   (bounded) so the session can resync on the next newline;
+/// * past the discard cap (16 × max, floor 4 MiB) the connection closes;
+/// * an unterminated trailing line at EOF is still decoded and answered.
+pub struct SessionState {
+    max: usize,
+    buf: Vec<u8>,
+    /// `Some(n)` while discarding an oversized line; `n` = bytes of that
+    /// line seen so far.
+    discarding: Option<usize>,
+    closed: bool,
+}
+
+impl SessionState {
+    pub fn new(max_request_bytes: usize) -> Self {
+        Self { max: max_request_bytes, buf: Vec::new(), discarding: None, closed: false }
+    }
+
+    /// Total bytes of one oversized line we are willing to skip while
+    /// resyncing before giving up and closing.
+    fn discard_cap(&self) -> usize {
+        self.max.saturating_mul(16).max(1 << 22)
+    }
+
+    /// True once the machine has emitted [`SessionEvent::Close`]; further
+    /// input is ignored.
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Feed freshly-read transport bytes; events append to `out` in
+    /// protocol order.
+    pub fn on_bytes(&mut self, mut data: &[u8], out: &mut Vec<SessionEvent>) {
+        while !data.is_empty() && !self.closed {
+            if let Some(mut discarded) = self.discarding {
+                match data.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        // Terminator found: answer and resync.
+                        self.discarding = None;
+                        out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                        data = &data[pos + 1..];
+                    }
+                    None => {
+                        discarded += data.len();
+                        if discarded > self.discard_cap() {
+                            out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                            out.push(SessionEvent::Close);
+                            self.closed = true;
+                        } else {
+                            self.discarding = Some(discarded);
+                        }
+                        data = &[];
+                    }
+                }
+                continue;
+            }
+            match data.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.buf.len() + pos > self.max {
+                        // Oversized but already terminated: resync now.
+                        self.buf.clear();
+                        out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                    } else {
+                        self.buf.extend_from_slice(&data[..pos]);
+                        let line = std::mem::take(&mut self.buf);
+                        if let Some(ev) = decode_line(&line) {
+                            out.push(ev);
+                        }
+                    }
+                    data = &data[pos + 1..];
+                }
+                None => {
+                    let total = self.buf.len() + data.len();
+                    if total > self.max {
+                        self.buf.clear();
+                        if total > self.discard_cap() {
+                            out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                            out.push(SessionEvent::Close);
+                            self.closed = true;
+                        } else {
+                            self.discarding = Some(total);
+                        }
+                    } else {
+                        self.buf.extend_from_slice(data);
+                    }
+                    data = &[];
+                }
+            }
+        }
+    }
+
+    /// Signal transport EOF. An unterminated trailing line is decoded as if
+    /// newline-terminated (mid-line disconnects still get their answer);
+    /// an unfinished oversized line gets its rejection before the close.
+    pub fn on_eof(&mut self, out: &mut Vec<SessionEvent>) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        if self.discarding.take().is_some() {
+            out.push(SessionEvent::Oversized(oversized_line(self.max)));
+        } else if !self.buf.is_empty() {
+            let line = std::mem::take(&mut self.buf);
+            if let Some(ev) = decode_line(&line) {
+                out.push(ev);
+            }
+        }
+        out.push(SessionEvent::Close);
+    }
+}
+
+fn oversized_line(max: usize) -> String {
+    err_line(&format!("request exceeds {max} bytes"), None)
+}
+
+fn decode_line(line: &[u8]) -> Option<SessionEvent> {
+    let text = String::from_utf8_lossy(line);
+    let text = text.trim();
+    if text.is_empty() {
+        return None;
+    }
+    Some(match json::parse(text) {
+        Err(e) => SessionEvent::BadLine(err_line(&format!("bad json: {e}"), None)),
+        Ok(doc) => match Request::parse(&doc) {
+            Err(e) => SessionEvent::BadLine(err_line(&e, None)),
+            Ok(req) => SessionEvent::Request(req),
+        },
+    })
+}
+
+// ---------------------------------------------------------------- jobs --
+
+/// One queued unit of work. The responses' recipients are *not* stored
+/// here: every reply waiting on this computation — the submitter and any
+/// coalesced duplicates — is parked in the [`Inflight`] registry under
+/// `cache_key`, and [`Job::resolve`] fans the finished line out to all of
+/// them.
 pub struct Job {
     pub request: Request,
-    pub cache_key: Option<String>,
+    pub cache_key: String,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<String>,
+    inner: Arc<ServerInner>,
+    resolved: bool,
+}
+
+impl Job {
+    pub fn new(request: Request, cache_key: String, inner: Arc<ServerInner>) -> Self {
+        Self { request, cache_key, enqueued: Instant::now(), inner, resolved: false }
+    }
+
+    /// Deliver the finished response line to every coalesced waiter.
+    pub fn resolve(mut self, line: &str) {
+        self.deliver(line);
+    }
+
+    fn deliver(&mut self, line: &str) {
+        self.resolved = true;
+        for reply in self.inner.inflight.take(&self.cache_key) {
+            reply(line.to_string());
+        }
+    }
+}
+
+impl Drop for Job {
+    /// A job dropped without resolution (pool shutdown clears the queue)
+    /// must still answer its waiters, or their connections would hang.
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.deliver(&err_line("server shut down before the job completed", None));
+        }
+    }
+}
+
+// -------------------------------------------------------------- dispatch --
+
+/// Route one decoded request to its response. Introspection ops and cache
+/// hits call `reply` before returning; compute ops park it in the
+/// in-flight registry and return immediately (the pool calls it later).
+/// Concurrent identical requests coalesce: one computation, one response
+/// line fanned out to every waiter.
+pub fn dispatch(req: Request, inner: &Arc<ServerInner>, pool: &Pool<Job>, reply: Reply) {
+    match req {
+        Request::Info => reply(ok_line(info_json(inner), false)),
+        Request::Metrics => reply(ok_line(metrics_json(inner, pool), false)),
+        compute => {
+            let key = compute
+                .canonical_key()
+                .expect("compute requests always have a canonical key");
+            {
+                let hit = inner.cache.lock().expect("cache lock").get(&key);
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                if let Some(result) = hit {
+                    m.incr("cache_hits", 1);
+                    drop(m);
+                    reply(ok_line(result, true));
+                    return;
+                }
+                m.incr("cache_misses", 1);
+            }
+            if !inner.inflight.join(&key, reply) {
+                // An identical request is already computing; its resolution
+                // will answer us too.
+                inner
+                    .metrics
+                    .lock()
+                    .expect("metrics lock")
+                    .incr("inflight_coalesced", 1);
+                return;
+            }
+            let job = Job::new(compute, key, Arc::clone(inner));
+            match pool.try_submit(job) {
+                Ok(()) => {}
+                Err(SubmitError::Full(job)) => {
+                    inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("queue_rejects", 1);
+                    job.resolve(&err_line(
+                        &format!(
+                            "server busy: job queue is full ({} waiting)",
+                            pool.queue_depth()
+                        ),
+                        Some(inner.cfg.retry_after_ms),
+                    ));
+                }
+                Err(SubmitError::Shutdown(job)) => {
+                    job.resolve(&err_line("server is shutting down", None));
+                }
+            }
+        }
+    }
 }
 
 // -------------------------------------------------------------- executors --
@@ -62,32 +323,155 @@ fn chain_result_json(res: &ChainResult) -> Json {
     ])
 }
 
-/// Final state of the chunked prefix scan without materializing every
-/// prefix: phases 1+2 of `goom::scan_par_chunked` (per-chunk folds, then a
+fn scan_result_json(d: usize, len: usize, fin: &GoomMat<f64>) -> Json {
+    obj(vec![
+        ("d", num(d as f64)),
+        ("len", num(len as f64)),
+        (
+            "logmag",
+            Json::Arr(fin.logmag.iter().copied().map(num_or_null).collect()),
+        ),
+        ("sign", Json::Arr(fin.sign.iter().map(|&x| num(x)).collect())),
+        ("log_frobenius", num_or_null(fin.log_frobenius_norm())),
+    ])
+}
+
+/// Which slot of a [`ScanRun`] the in-flight LMME result lands in.
+enum Pending {
+    None,
+    Cur,
+    Acc,
+}
+
+/// One pending LMME for a scan, as `lmme(a, b)` operands. The left operand
+/// of a within-chunk fold is a *borrowed* input matrix — cloning it per
+/// step would put two heap copies on the compute hot path for nothing —
+/// while merge steps hand over the owned intermediates.
+enum StepPair<'a> {
+    /// `cur = lmme(mats[i], cur)`: (input matrix, running chunk total).
+    Fold(&'a GoomMat<f64>, GoomMat<f64>),
+    /// `acc = lmme(total, acc)`: (finished chunk total, running product).
+    Merge(GoomMat<f64>, GoomMat<f64>),
+}
+
+/// Final state of the chunked prefix scan as a resumable step machine:
+/// phases 1+2 of `goom::scan_par_chunked` (per-chunk folds, then a
 /// sequential combine of the chunk totals), skipping the O(n) phase-3
-/// fix-up whose outputs the scan op doesn't serve. Bit-identical to
-/// `scan_par_chunked(mats, combine, chunks, _).last()` — same combines in
-/// the same order — in roughly half the LMMEs and O(1) matrices of memory
-/// (the e2e suite asserts the equivalence over the wire).
-fn scan_final(mats: &[GoomMat<f64>], chunks: usize) -> GoomMat<f64> {
-    let combine = |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
-    let n = mats.len();
-    let nchunks = chunks.max(1).min(n);
-    let chunk = n.div_ceil(nchunks);
-    let mut acc: Option<GoomMat<f64>> = None;
-    let mut lo = 0;
-    while lo < n {
-        let hi = (lo + chunk).min(n);
-        let total = mats[lo + 1..hi]
-            .iter()
-            .fold(mats[lo].clone(), |prev, m| combine(&prev, m));
-        acc = Some(match &acc {
-            None => total,
-            Some(a) => combine(a, &total),
-        });
-        lo = hi;
+/// fix-up whose outputs the scan op doesn't serve. [`ScanRun::next_pair`]
+/// yields the next LMME the scan needs, so N same-dimension scans advance
+/// in lockstep through one stacked [`lmme_batched`] pass per step — and a
+/// solo scan is just a batch of one, so batched and solo results are
+/// identical by construction (same combines, same order; the e2e suite
+/// asserts the equivalence over the wire).
+struct ScanRun<'a> {
+    mats: &'a [GoomMat<f64>],
+    chunk: usize,
+    idx: usize,
+    chunk_end: usize,
+    cur: Option<GoomMat<f64>>,
+    acc: Option<GoomMat<f64>>,
+    pending: Pending,
+}
+
+impl<'a> ScanRun<'a> {
+    fn new(mats: &'a [GoomMat<f64>], chunks: usize) -> Self {
+        let n = mats.len();
+        let nchunks = chunks.max(1).min(n);
+        let chunk = n.div_ceil(nchunks.max(1));
+        Self {
+            mats,
+            chunk,
+            idx: 0,
+            chunk_end: 0,
+            cur: None,
+            acc: None,
+            pending: Pending::None,
+        }
     }
-    acc.expect("scan payload validated non-empty")
+
+    /// Advance to the next LMME this scan needs: the returned pair asks the
+    /// driver to compute `lmme(a, b)` and hand the result to [`apply`];
+    /// `None` means the scan is complete. Combine order is exactly the
+    /// sequential chunked fold: `cur = lmme(m_t, cur)` within a chunk, then
+    /// `acc = lmme(chunk_total, acc)` between chunks.
+    fn next_pair(&mut self) -> Option<StepPair<'a>> {
+        // Copy the `'a` slice out so borrows of input matrices outlive
+        // this `&mut self` call (the driver holds them across runs).
+        let mats: &'a [GoomMat<f64>] = self.mats;
+        loop {
+            if self.cur.is_none() {
+                if self.idx >= mats.len() {
+                    return None;
+                }
+                self.chunk_end = (self.idx + self.chunk).min(mats.len());
+                self.cur = Some(mats[self.idx].clone());
+                self.idx += 1;
+            }
+            if self.idx < self.chunk_end {
+                let a = &mats[self.idx];
+                self.idx += 1;
+                let b = self.cur.take().expect("cur set above");
+                self.pending = Pending::Cur;
+                return Some(StepPair::Fold(a, b));
+            }
+            let total = self.cur.take().expect("cur set above");
+            match self.acc.take() {
+                None => self.acc = Some(total), // first chunk: nothing to merge
+                Some(acc) => {
+                    self.pending = Pending::Acc;
+                    return Some(StepPair::Merge(total, acc));
+                }
+            }
+        }
+    }
+
+    fn apply(&mut self, result: GoomMat<f64>) {
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::Cur => self.cur = Some(result),
+            Pending::Acc => self.acc = Some(result),
+            Pending::None => unreachable!("apply without a pending LMME"),
+        }
+    }
+
+    fn into_final(self) -> GoomMat<f64> {
+        self.acc.expect("scan payload validated non-empty")
+    }
+}
+
+/// Drive N scans in lockstep: each round gathers one pending LMME pair per
+/// still-active scan and executes them as one stacked [`lmme_batched`]
+/// pass. Scans of different lengths simply drop out of later rounds.
+fn drive_scans(runs: &mut [ScanRun]) {
+    loop {
+        let mut who: Vec<usize> = Vec::new();
+        let mut steps: Vec<StepPair> = Vec::new();
+        for (i, run) in runs.iter_mut().enumerate() {
+            if let Some(pair) = run.next_pair() {
+                who.push(i);
+                steps.push(pair);
+            }
+        }
+        if who.is_empty() {
+            break;
+        }
+        let pairs: Vec<(&GoomMat<f64>, &GoomMat<f64>)> = steps
+            .iter()
+            .map(|p| match p {
+                StepPair::Fold(a, b) => (*a, b),
+                StepPair::Merge(a, b) => (a, b),
+            })
+            .collect();
+        for (out, &i) in lmme_batched(&pairs).into_iter().zip(&who) {
+            runs[i].apply(out);
+        }
+    }
+}
+
+fn scan_final(mats: &[GoomMat<f64>], chunks: usize) -> GoomMat<f64> {
+    let mut runs = [ScanRun::new(mats, chunks)];
+    drive_scans(&mut runs);
+    let [run] = runs;
+    run.into_final()
 }
 
 /// Run one request to a result document. Serving runs single-threaded per
@@ -102,16 +486,7 @@ fn execute_single(req: &Request) -> Result<Json, String> {
         }
         Request::Scan(s) => {
             let fin = scan_final(&s.mats, s.chunks);
-            Ok(obj(vec![
-                ("d", num(s.d as f64)),
-                ("len", num(s.mats.len() as f64)),
-                (
-                    "logmag",
-                    Json::Arr(fin.logmag.iter().copied().map(num_or_null).collect()),
-                ),
-                ("sign", Json::Arr(fin.sign.iter().map(|&x| num(x)).collect())),
-                ("log_frobenius", num_or_null(fin.log_frobenius_norm())),
-            ]))
+            Ok(scan_result_json(s.d, s.mats.len(), &fin))
         }
         Request::Lle(l) => {
             let sys = dynsys::by_name(&l.system).ok_or_else(|| {
@@ -142,66 +517,113 @@ fn execute_single(req: &Request) -> Result<Json, String> {
     }
 }
 
-/// Pool executor: one call per drained batch. Multi-job batches are GOOM
-/// chain requests sharing (method, d) — the pool's batch key guarantees it —
-/// and collapse into one stacked LMME pass per step.
+/// Pool executor: one call per drained batch. Multi-job batches share a
+/// batch key, which groups either GOOM chain requests with the same
+/// (method, d) — collapsed into one stacked LMME pass per step — or scan
+/// requests with the same dimension, advanced in lockstep by
+/// [`drive_scans`]. Both batched paths are bit-identical to solo runs.
 pub fn execute_batch(inner: &ServerInner, jobs: Vec<Job>) {
-    let batchable = jobs.len() > 1
-        && jobs.iter().all(|j| {
-            matches!(
-                &j.request,
-                Request::Chain(c)
-                    if c.method == Method::GoomC64 || c.method == Method::GoomC128
-            )
-        });
-    if batchable {
-        let (method, d) = match &jobs[0].request {
-            Request::Chain(c) => (c.method, c.d),
-            _ => unreachable!("checked above"),
-        };
-        let uniform = jobs.iter().all(
-            |j| matches!(&j.request, Request::Chain(c) if c.method == method && c.d == d),
-        );
-        if uniform {
-            let specs: Vec<ChainSpec> = jobs
-                .iter()
-                .map(|j| match &j.request {
-                    Request::Chain(c) => ChainSpec { steps: c.steps, seed: c.seed },
-                    _ => unreachable!("checked above"),
-                })
-                .collect();
-            let results = match method {
-                Method::GoomC64 => chain::run_chain_goom_batched::<f32>(d, &specs),
-                _ => chain::run_chain_goom_batched::<f64>(d, &specs),
-            };
-            {
-                let mut m = inner.metrics.lock().expect("metrics lock");
-                m.incr("batches", 1);
-                m.incr("batched_jobs", jobs.len() as u64);
-            }
-            for (job, res) in jobs.into_iter().zip(results) {
-                finish(inner, job, Ok(chain_result_json(&res)));
-            }
-            return;
-        }
-    }
+    let jobs = if jobs.len() > 1 {
+        let Some(jobs) = try_execute_chain_batch(inner, jobs) else { return };
+        let Some(jobs) = try_execute_scan_batch(inner, jobs) else { return };
+        jobs
+    } else {
+        jobs
+    };
     for job in jobs {
         let out = execute_single(&job.request);
         finish(inner, job, out);
     }
 }
 
+/// Execute a uniform GOOM chain batch; hands the jobs back when the batch
+/// is not one (so the caller can try other batched shapes).
+fn try_execute_chain_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job>> {
+    let (method, d) = match &jobs[0].request {
+        Request::Chain(c) => (c.method, c.d),
+        _ => return Some(jobs),
+    };
+    if method != Method::GoomC64 && method != Method::GoomC128 {
+        return Some(jobs);
+    }
+    let uniform = jobs.iter().all(
+        |j| matches!(&j.request, Request::Chain(c) if c.method == method && c.d == d),
+    );
+    if !uniform {
+        return Some(jobs);
+    }
+    let specs: Vec<ChainSpec> = jobs
+        .iter()
+        .map(|j| match &j.request {
+            Request::Chain(c) => ChainSpec { steps: c.steps, seed: c.seed },
+            _ => unreachable!("checked above"),
+        })
+        .collect();
+    let results = match method {
+        Method::GoomC64 => chain::run_chain_goom_batched::<f32>(d, &specs),
+        _ => chain::run_chain_goom_batched::<f64>(d, &specs),
+    };
+    {
+        let mut m = inner.metrics.lock().expect("metrics lock");
+        m.incr("batches", 1);
+        m.incr("batched_jobs", jobs.len() as u64);
+    }
+    for (job, res) in jobs.into_iter().zip(results) {
+        finish(inner, job, Ok(chain_result_json(&res)));
+    }
+    None
+}
+
+/// Execute a uniform same-dimension scan batch; hands the jobs back when
+/// the batch is not one.
+fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job>> {
+    let d = match &jobs[0].request {
+        Request::Scan(s) => s.d,
+        _ => return Some(jobs),
+    };
+    let uniform =
+        jobs.iter().all(|j| matches!(&j.request, Request::Scan(s) if s.d == d));
+    if !uniform {
+        return Some(jobs);
+    }
+    let finals: Vec<GoomMat<f64>> = {
+        let mut runs: Vec<ScanRun> = jobs
+            .iter()
+            .map(|j| match &j.request {
+                Request::Scan(s) => ScanRun::new(&s.mats, s.chunks),
+                _ => unreachable!("checked above"),
+            })
+            .collect();
+        drive_scans(&mut runs);
+        runs.into_iter().map(ScanRun::into_final).collect()
+    };
+    {
+        let mut m = inner.metrics.lock().expect("metrics lock");
+        m.incr("scan_batches", 1);
+        m.incr("batched_jobs", jobs.len() as u64);
+    }
+    for (job, fin) in jobs.into_iter().zip(finals) {
+        let out = match &job.request {
+            Request::Scan(s) => Ok(scan_result_json(s.d, s.mats.len(), &fin)),
+            _ => unreachable!("checked above"),
+        };
+        finish(inner, job, out);
+    }
+    None
+}
+
 fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>) {
     let line = match out {
         Ok(result) => {
-            if let Some(key) = &job.cache_key {
-                inner
-                    .cache
-                    .lock()
-                    .expect("cache lock")
-                    .insert(key.clone(), result.clone());
-            }
+            let evicted = inner
+                .cache
+                .lock()
+                .expect("cache lock")
+                .insert(job.cache_key.clone(), result.clone());
             let mut m = inner.metrics.lock().expect("metrics lock");
+            if evicted.is_some() {
+                m.incr("cache_evictions", 1);
+            }
             m.incr("requests_ok", 1);
             m.record_secs("job_latency", job.enqueued.elapsed().as_secs_f64());
             ok_line(result, false)
@@ -211,11 +633,10 @@ fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>) {
             err_line(&msg, None)
         }
     };
-    // Session thread may have hung up; nothing to do then.
-    let _ = job.reply.send(line);
+    job.resolve(&line);
 }
 
-// --------------------------------------------------------------- sessions --
+// ----------------------------------------------------------- introspection --
 
 fn info_json(inner: &ServerInner) -> Json {
     obj(vec![
@@ -226,6 +647,7 @@ fn info_json(inner: &ServerInner) -> Json {
         ("batch_max", num(inner.cfg.batch_max as f64)),
         ("cache_capacity", num(inner.cfg.cache_capacity as f64)),
         ("max_request_bytes", num(inner.cfg.max_request_bytes as f64)),
+        ("max_connections", num(inner.cfg.max_connections as f64)),
         ("uptime_s", num(inner.started.elapsed().as_secs_f64())),
         (
             "ops",
@@ -292,150 +714,183 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
         ("timers", Json::Obj(timers)),
         ("queue_len", num(pool.queue_len() as f64)),
         ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
+        ("inflight_keys", num(inner.inflight.len() as f64)),
     ])
 }
 
-/// Serve one client connection until EOF or a fatal I/O error.
-pub fn handle_connection(
-    stream: TcpStream,
-    inner: &Arc<ServerInner>,
-    pool: &Arc<Pool<Job>>,
-) {
-    if serve_session(&stream, inner, pool).is_err() {
-        inner
-            .metrics
-            .lock()
-            .expect("metrics lock")
-            .incr("connection_errors", 1);
-    }
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goom::lmme;
+    use crate::rng::rng_from_seed;
 
-fn serve_session(
-    stream: &TcpStream,
-    inner: &Arc<ServerInner>,
-    pool: &Arc<Pool<Job>>,
-) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream.try_clone()?);
-    let max = inner.cfg.max_request_bytes;
-    loop {
-        let mut line: Vec<u8> = Vec::new();
-        let n = (&mut reader).take(max as u64 + 1).read_until(b'\n', &mut line)?;
-        if n == 0 {
-            return Ok(()); // clean EOF
-        }
-        let content_len =
-            line.len() - usize::from(line.last() == Some(&b'\n'));
-        if content_len > max {
-            // Oversized: the rest of the line is still in flight. Discard
-            // through the newline (bounded) so the session can resync —
-            // and so the kernel buffer drains before we answer, avoiding
-            // an RST clobbering the error response. Past the discard cap,
-            // give up and close.
-            inner
-                .metrics
-                .lock()
-                .expect("metrics lock")
-                .incr("oversized_rejects", 1);
-            let cap = max.saturating_mul(16).max(1 << 22);
-            let mut discarded = line.len();
-            let mut resynced = false;
-            while discarded < cap {
-                let mut chunk = Vec::new();
-                let k = (&mut reader).take(65536).read_until(b'\n', &mut chunk)?;
-                if k == 0 {
-                    break; // client hung up mid-line
-                }
-                discarded += k;
-                if chunk.last() == Some(&b'\n') {
-                    resynced = true;
-                    break;
-                }
-            }
-            respond(
-                &mut writer,
-                &err_line(&format!("request exceeds {max} bytes"), None),
-            )?;
-            if resynced {
-                continue;
-            }
-            return Ok(());
-        }
-        let text = String::from_utf8_lossy(&line);
-        let text = text.trim();
-        if text.is_empty() {
-            continue;
-        }
-        inner.metrics.lock().expect("metrics lock").incr("requests_total", 1);
-        let doc = match json::parse(text) {
-            Ok(d) => d,
-            Err(e) => {
-                respond(&mut writer, &err_line(&format!("bad json: {e}"), None))?;
-                continue;
-            }
-        };
-        let req = match Request::parse(&doc) {
-            Ok(r) => r,
-            Err(e) => {
-                respond(&mut writer, &err_line(&e, None))?;
-                continue;
-            }
-        };
-        let response = dispatch(req, inner, pool);
-        respond(&mut writer, &response)?;
+    fn feed(state: &mut SessionState, data: &[u8]) -> Vec<SessionEvent> {
+        let mut out = Vec::new();
+        state.on_bytes(data, &mut out);
+        out
     }
-}
 
-fn dispatch(req: Request, inner: &ServerInner, pool: &Pool<Job>) -> String {
-    match req {
-        Request::Info => ok_line(info_json(inner), false),
-        Request::Metrics => ok_line(metrics_json(inner, pool), false),
-        compute => {
-            let cache_key = compute.canonical_key();
-            if let Some(key) = &cache_key {
-                let hit = inner.cache.lock().expect("cache lock").get(key);
-                let mut m = inner.metrics.lock().expect("metrics lock");
-                if let Some(result) = hit {
-                    m.incr("cache_hits", 1);
-                    return ok_line(result, true);
-                }
-                m.incr("cache_misses", 1);
+    #[test]
+    fn partial_reads_accumulate_into_one_request() {
+        let mut s = SessionState::new(1024);
+        let line = b"{\"op\":\"info\"}\n";
+        let mut events = Vec::new();
+        // One byte at a time: no event until the newline arrives.
+        for &b in &line[..line.len() - 1] {
+            events.extend(feed(&mut s, &[b]));
+            assert!(events.is_empty(), "no event before the terminator");
+        }
+        events.extend(feed(&mut s, &[b'\n']));
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+    }
+
+    #[test]
+    fn pipelined_requests_in_one_read_decode_in_order() {
+        let mut s = SessionState::new(1024);
+        let burst = b"{\"op\":\"info\"}\nnot json\n\n{\"op\":\"metrics\"}\n";
+        let events = feed(&mut s, burst);
+        assert_eq!(events.len(), 3, "{events:?}");
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        match &events[1] {
+            SessionEvent::BadLine(line) => {
+                assert!(line.contains("bad json"), "{line}");
+                // Responses are byte-identical to the protocol encoder's.
+                assert!(line.starts_with("{\"error\":"), "{line}");
             }
-            let (tx, rx) = mpsc::channel();
-            let job = Job {
-                request: compute,
-                cache_key,
-                enqueued: Instant::now(),
-                reply: tx,
-            };
-            match pool.try_submit(job) {
-                Ok(()) => rx.recv().unwrap_or_else(|_| {
-                    err_line("server shut down before the job completed", None)
-                }),
-                Err(SubmitError::Full(_)) => {
-                    inner
-                        .metrics
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("queue_rejects", 1);
-                    err_line(
-                        &format!(
-                            "server busy: job queue is full ({} waiting)",
-                            pool.queue_depth()
-                        ),
-                        Some(inner.cfg.retry_after_ms),
-                    )
-                }
-                Err(SubmitError::Shutdown(_)) => {
-                    err_line("server is shutting down", None)
-                }
+            other => panic!("expected BadLine, got {other:?}"),
+        }
+        assert!(matches!(events[2], SessionEvent::Request(Request::Metrics)));
+    }
+
+    #[test]
+    fn mid_line_disconnect_still_decodes_the_tail() {
+        // A valid request whose newline never arrives is decoded at EOF.
+        let mut s = SessionState::new(1024);
+        let mut events = feed(&mut s, b"{\"op\":\"info\"}");
+        assert!(events.is_empty());
+        s.on_eof(&mut events);
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[1], SessionEvent::Close));
+        assert!(s.is_closed());
+        // Garbage tails still get their error before the close.
+        let mut s = SessionState::new(1024);
+        let mut events = feed(&mut s, b"garb");
+        s.on_eof(&mut events);
+        assert!(matches!(events[0], SessionEvent::BadLine(_)));
+        assert!(matches!(events[1], SessionEvent::Close));
+        // A clean EOF is just a close.
+        let mut s = SessionState::new(1024);
+        let mut events = Vec::new();
+        s.on_eof(&mut events);
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], SessionEvent::Close));
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_and_the_session_resyncs() {
+        let max = 64;
+        let mut s = SessionState::new(max);
+        // Oversized line arriving in one chunk, terminator included.
+        let mut burst = vec![b'x'; 100];
+        burst.push(b'\n');
+        burst.extend_from_slice(b"{\"op\":\"info\"}\n");
+        let events = feed(&mut s, &burst);
+        assert_eq!(events.len(), 2, "{events:?}");
+        match &events[0] {
+            SessionEvent::Oversized(line) => {
+                assert_eq!(line, &err_line("request exceeds 64 bytes", None));
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        assert!(matches!(events[1], SessionEvent::Request(Request::Info)));
+        // Oversized line dribbling in across chunks: the rejection arrives
+        // when the terminator does, and the session keeps serving.
+        let mut s = SessionState::new(max);
+        assert!(feed(&mut s, &[b'y'; 50]).is_empty());
+        assert!(feed(&mut s, &[b'y'; 50]).is_empty(), "discarding, no event yet");
+        let events = feed(&mut s, b"tail\n{\"op\":\"metrics\"}\n");
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert!(matches!(events[0], SessionEvent::Oversized(_)));
+        assert!(matches!(events[1], SessionEvent::Request(Request::Metrics)));
+    }
+
+    #[test]
+    fn unterminated_oversized_line_past_the_discard_cap_closes() {
+        let max = 64; // discard cap floors at 4 MiB
+        let mut s = SessionState::new(max);
+        let chunk = vec![b'z'; 64 * 1024];
+        let mut events = Vec::new();
+        for _ in 0..((4 << 20) / chunk.len() + 2) {
+            s.on_bytes(&chunk, &mut events);
+            if !events.is_empty() {
+                break;
             }
         }
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert!(matches!(events[0], SessionEvent::Oversized(_)));
+        assert!(matches!(events[1], SessionEvent::Close));
+        assert!(s.is_closed());
+        // Closed machines ignore further input.
+        assert!(feed(&mut s, b"{\"op\":\"info\"}\n").is_empty());
     }
-}
 
-fn respond(writer: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
-    writer.write_all(line.as_bytes())?;
-    writer.write_all(b"\n")?;
-    writer.flush()
+    #[test]
+    fn eof_mid_discard_answers_before_closing() {
+        let mut s = SessionState::new(16);
+        let mut events = feed(&mut s, &[b'q'; 100]);
+        assert!(events.is_empty());
+        s.on_eof(&mut events);
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert!(matches!(events[0], SessionEvent::Oversized(_)));
+        assert!(matches!(events[1], SessionEvent::Close));
+    }
+
+    #[test]
+    fn blank_lines_are_ignored() {
+        let mut s = SessionState::new(1024);
+        assert!(feed(&mut s, b"\n   \n\r\n\t\n").is_empty());
+        let events = feed(&mut s, b"  {\"op\":\"info\"}  \r\n");
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+    }
+
+    #[test]
+    fn batched_scans_are_bit_identical_to_solo_scans() {
+        let mut rng = rng_from_seed(77);
+        // Three same-dimension scans with different lengths and chunking.
+        let payloads: Vec<(Vec<GoomMat<f64>>, usize)> = vec![
+            ((0..1).map(|_| GoomMat::randn(3, 3, &mut rng)).collect(), 4),
+            ((0..5).map(|_| GoomMat::randn(3, 3, &mut rng)).collect(), 2),
+            ((0..7).map(|_| GoomMat::randn(3, 3, &mut rng)).collect(), 16),
+        ];
+        let solo: Vec<GoomMat<f64>> =
+            payloads.iter().map(|(m, c)| scan_final(m, *c)).collect();
+        let mut runs: Vec<ScanRun> =
+            payloads.iter().map(|(m, c)| ScanRun::new(m, *c)).collect();
+        drive_scans(&mut runs);
+        for (run, want) in runs.into_iter().zip(&solo) {
+            assert_eq!(&run.into_final(), want, "batched scan diverged from solo");
+        }
+        // And the solo path agrees exactly with a direct sequential fold
+        // in the same chunked combine order.
+        let (mats, chunks) = &payloads[1];
+        let nchunks = (*chunks).min(mats.len());
+        let chunk = mats.len().div_ceil(nchunks);
+        let mut acc: Option<GoomMat<f64>> = None;
+        let mut lo = 0;
+        while lo < mats.len() {
+            let hi = (lo + chunk).min(mats.len());
+            let total = mats[lo + 1..hi]
+                .iter()
+                .fold(mats[lo].clone(), |prev, m| lmme(m, &prev));
+            acc = Some(match &acc {
+                None => total,
+                Some(a) => lmme(&total, a),
+            });
+            lo = hi;
+        }
+        assert_eq!(solo[1], acc.unwrap());
+    }
 }

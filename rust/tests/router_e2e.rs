@@ -1,0 +1,191 @@
+//! End-to-end tests for the router tier: live `goomd` shards behind a
+//! rendezvous-hashing `repro route` front. Covers cache-affine routing,
+//! spread of distinct keys, local introspection, failover past a dead
+//! backend, and protocol error handling through the relay.
+
+use goomrs::server::{protocol, Router, RouterConfig, Server, ServeConfig};
+use goomrs::util::json::{self, Json};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+
+fn start_shard() -> Server {
+    Server::start(ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 16,
+        batch_max: 4,
+        cache_capacity: 64,
+        max_request_bytes: 64 * 1024,
+        retry_after_ms: 5,
+        ..ServeConfig::default()
+    })
+    .expect("shard start")
+}
+
+fn start_router(backends: Vec<String>) -> Router {
+    Router::start(RouterConfig { port: 0, backends, ..RouterConfig::default() })
+        .expect("router start")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "router closed unexpectedly");
+        json::parse(resp.trim()).expect("response must be valid JSON")
+    }
+}
+
+#[test]
+fn repeated_keys_route_to_the_owning_shard_and_hit_its_cache() {
+    let a = start_shard();
+    let b = start_shard();
+    let router = start_router(vec![a.addr().to_string(), b.addr().to_string()]);
+    let mut client = Client::connect(router.addr());
+    let req = protocol::encode_chain_request("goomc64", 6, 80, 12345);
+    let first = client.roundtrip(&req);
+    assert_eq!(first.get("ok").unwrap().as_bool(), Some(true), "{first:?}");
+    assert_eq!(first.get("cached").unwrap().as_bool(), Some(false));
+    for _ in 0..2 {
+        let again = client.roundtrip(&req);
+        assert_eq!(again.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(again.get("result").unwrap(), first.get("result").unwrap());
+    }
+    // Exactly one shard computed and served the repeats from its cache.
+    let misses = (a.counter("cache_misses"), b.counter("cache_misses"));
+    let hits = (a.counter("cache_hits"), b.counter("cache_hits"));
+    assert!(
+        (misses == (1, 0) && hits == (2, 0))
+            || (misses == (0, 1) && hits == (0, 2)),
+        "cache traffic split across shards: misses {misses:?}, hits {hits:?}"
+    );
+    // The router's per-shard counters agree: all three went one way.
+    let routed_a = router.counter(&format!("routed[{}]", a.addr()));
+    let routed_b = router.counter(&format!("routed[{}]", b.addr()));
+    assert!(
+        (routed_a, routed_b) == (3, 0) || (routed_a, routed_b) == (0, 3),
+        "routed[a]={routed_a} routed[b]={routed_b}"
+    );
+    // A differently-spelled but canonically-identical request still lands
+    // on the owning shard and hits its cache.
+    let implicit = r#"{"op":"chain","d":6,"steps":80,"seed":12345}"#;
+    let doc = client.roundtrip(implicit);
+    assert_eq!(doc.get("cached").unwrap().as_bool(), Some(true), "{doc:?}");
+    router.stop();
+    a.stop();
+    b.stop();
+}
+
+#[test]
+fn distinct_keys_spread_across_shards() {
+    let a = start_shard();
+    let b = start_shard();
+    let router = start_router(vec![a.addr().to_string(), b.addr().to_string()]);
+    let mut client = Client::connect(router.addr());
+    for seed in 0..24 {
+        let resp = client
+            .roundtrip(&protocol::encode_chain_request("goomc64", 4, 40, seed));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    }
+    let routed_a = router.counter(&format!("routed[{}]", a.addr()));
+    let routed_b = router.counter(&format!("routed[{}]", b.addr()));
+    assert_eq!(routed_a + routed_b, 24);
+    // 24 distinct keys all landing on one shard has probability 2^-23.
+    assert!(routed_a > 0 && routed_b > 0, "no spread: {routed_a} vs {routed_b}");
+    // Each shard computed exactly what was routed to it.
+    assert_eq!(a.counter("cache_misses"), routed_a);
+    assert_eq!(b.counter("cache_misses"), routed_b);
+    router.stop();
+    a.stop();
+    b.stop();
+}
+
+#[test]
+fn router_answers_introspection_locally() {
+    let a = start_shard();
+    let router = start_router(vec![a.addr().to_string()]);
+    let mut client = Client::connect(router.addr());
+    let info = client.roundtrip(r#"{"op":"info"}"#);
+    assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+    let result = info.get("result").unwrap();
+    assert_eq!(result.get("service").unwrap().as_str(), Some("goomd-router"));
+    assert_eq!(result.get("backends").unwrap().as_arr().unwrap().len(), 1);
+    // Shards saw nothing: introspection never leaves the router.
+    assert_eq!(a.counter("requests_total"), 0);
+    // Metrics carry the per-shard routing counters once traffic flows.
+    let _ = client.roundtrip(&protocol::encode_chain_request("goomc64", 4, 30, 7));
+    let metrics = client.roundtrip(r#"{"op":"metrics"}"#);
+    let counters = metrics.get("result").unwrap().get("counters").unwrap();
+    let routed = counters.get(&format!("routed[{}]", a.addr())).unwrap();
+    assert_eq!(routed.as_usize(), Some(1), "{metrics:?}");
+    router.stop();
+    a.stop();
+}
+
+#[test]
+fn dead_backend_fails_over_to_the_next_ranked_shard() {
+    let live = start_shard();
+    // A dead address: bind an ephemeral port, then drop the listener.
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let router = start_router(vec![live.addr().to_string(), dead_addr]);
+    let mut client = Client::connect(router.addr());
+    for seed in 0..20 {
+        let resp = client
+            .roundtrip(&protocol::encode_chain_request("goomc64", 4, 30, seed));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    }
+    // Every request succeeded on the live shard; the ~half that ranked the
+    // dead backend first (P[none] = 2^-20) were failovers.
+    assert_eq!(
+        router.counter(&format!("routed[{}]", live.addr())),
+        20
+    );
+    assert!(router.counter("route_failovers") >= 1);
+    assert_eq!(router.counter("route_errors"), 0);
+    router.stop();
+    live.stop();
+}
+
+#[test]
+fn malformed_lines_through_the_router_get_errors_and_the_session_survives() {
+    let a = start_shard();
+    let router = start_router(vec![a.addr().to_string()]);
+    let mut client = Client::connect(router.addr());
+    let resp = client.roundtrip("this is not json");
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    let resp = client.roundtrip(r#"{"op":"teleport"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    // Unknown-system errors relay back from the shard transparently.
+    let resp = client.roundtrip(r#"{"op":"lle","system":"narnia"}"#);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unknown system"));
+    // The same connection still serves valid requests afterwards.
+    let resp = client.roundtrip(&protocol::encode_chain_request("goomc64", 4, 16, 1));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    router.stop();
+    a.stop();
+}

@@ -1,13 +1,15 @@
 //! End-to-end tests against a live `goomd` daemon over real TCP: protocol
 //! round-trips, result correctness vs the in-process kernels, cache
-//! behaviour, and oversized-request rejection.
+//! behaviour, oversized-request rejection, in-flight dedup, and batched
+//! scans.
 
 use goomrs::goom::{lmme, scan_par_chunked, GoomMat};
 use goomrs::rng::rng_from_seed;
 use goomrs::server::{protocol, Server, ServeConfig};
 use goomrs::util::json::{self, Json};
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 fn start_server() -> Server {
     Server::start(ServeConfig {
@@ -163,6 +165,151 @@ fn malformed_lines_get_errors_and_the_session_survives() {
     let result = resp.get("result").unwrap();
     assert_eq!(result.get("steps_completed").unwrap().as_usize(), Some(16));
     assert_eq!(result.get("failed").unwrap().as_bool(), Some(false));
+    server.stop();
+}
+
+/// Occupy a single-worker server with a slow chain (hundreds of ms) so
+/// requests sent meanwhile pile up behind it deterministically. Returns
+/// once the occupant request is on the wire; join the handle to wait for
+/// its completion.
+fn occupy_worker(addr: SocketAddr) -> std::thread::JoinHandle<()> {
+    let (sent_tx, sent_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let req = protocol::encode_chain_request("goomc64", 8, 100_000, 987_654);
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        sent_tx.send(()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"ok\":true"), "occupant failed: {resp}");
+    });
+    sent_rx.recv().expect("occupant request sent");
+    // Give the loop a beat to hand the occupant to the worker.
+    std::thread::sleep(Duration::from_millis(50));
+    handle
+}
+
+fn one_shot(addr: SocketAddr, line: String) -> std::thread::JoinHandle<String> {
+    std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    })
+}
+
+#[test]
+fn concurrent_identical_requests_coalesce_onto_one_computation() {
+    // One worker, occupied: identical requests arriving meanwhile must
+    // coalesce onto one in-flight computation, and every waiter must see
+    // the byte-identical response line.
+    let server = Server::start(ServeConfig {
+        port: 0,
+        workers: 1,
+        queue_depth: 16,
+        batch_max: 1,
+        cache_capacity: 64,
+        retry_after_ms: 5,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let occupant = occupy_worker(server.addr());
+    let k = 5;
+    let clients: Vec<_> = (0..k)
+        .map(|_| {
+            one_shot(
+                server.addr(),
+                protocol::encode_chain_request("goomc64", 6, 120, 4242),
+            )
+        })
+        .collect();
+    let lines: Vec<String> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+    occupant.join().unwrap();
+    for line in &lines {
+        assert_eq!(line, &lines[0], "coalesced responses must be byte-identical");
+    }
+    let doc = json::parse(&lines[0]).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{}", lines[0]);
+    assert_eq!(doc.get("cached").unwrap().as_bool(), Some(false));
+    // One leader computed; the other k-1 waiters coalesced. (The occupant
+    // is the only other compute.)
+    assert_eq!(server.counter("inflight_coalesced"), (k - 1) as u64);
+    assert_eq!(server.counter("requests_ok"), 2);
+    assert_eq!(server.counter("cache_misses"), (k + 1) as u64);
+    // A repeat after completion is an ordinary cache hit.
+    let repeat = one_shot(
+        server.addr(),
+        protocol::encode_chain_request("goomc64", 6, 120, 4242),
+    )
+    .join()
+    .unwrap();
+    let doc = json::parse(&repeat).unwrap();
+    assert_eq!(doc.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        doc.get("result").unwrap(),
+        json::parse(&lines[0]).unwrap().get("result").unwrap()
+    );
+    server.stop();
+}
+
+#[test]
+fn queued_same_dimension_scans_batch_and_match_solo_results() {
+    // One worker, occupied: same-dimension scans queue up behind it and the
+    // worker drains them as one lockstep batch. Results must be exactly
+    // the solo chunked-scan results.
+    let server = Server::start(ServeConfig {
+        port: 0,
+        workers: 1,
+        queue_depth: 16,
+        batch_max: 8,
+        cache_capacity: 64,
+        retry_after_ms: 5,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let occupant = occupy_worker(server.addr());
+    let mut rng = rng_from_seed(321);
+    // Different lengths, same dimension: still one batch.
+    let payloads: Vec<Vec<GoomMat<f64>>> = (0..3)
+        .map(|i| (0..(3 + 2 * i)).map(|_| GoomMat::randn(3, 3, &mut rng)).collect())
+        .collect();
+    let clients: Vec<_> = payloads
+        .iter()
+        .map(|mats| one_shot(server.addr(), protocol::encode_scan_request(mats, 4)))
+        .collect();
+    let lines: Vec<String> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+    occupant.join().unwrap();
+    for (mats, line) in payloads.iter().zip(&lines) {
+        let doc = json::parse(line).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{line}");
+        let result = doc.get("result").unwrap();
+        assert_eq!(result.get("len").unwrap().as_usize(), Some(mats.len()));
+        let combine =
+            |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+        let local = scan_par_chunked(mats, combine, 4, 1);
+        let local = local.last().unwrap();
+        let logmag = result.get("logmag").unwrap().as_arr().unwrap();
+        let sign = result.get("sign").unwrap().as_arr().unwrap();
+        for i in 0..9 {
+            let got = logmag[i].as_f64().unwrap_or(f64::NEG_INFINITY);
+            assert_eq!(got, local.logmag[i], "logmag[{i}]");
+            assert_eq!(sign[i].as_f64().unwrap(), local.sign[i], "sign[{i}]");
+        }
+    }
+    assert!(
+        server.counter("scan_batches") >= 1,
+        "queued scans should have batched: {}",
+        server.metrics_summary()
+    );
     server.stop();
 }
 
