@@ -10,7 +10,7 @@
 //! through the compiled `chain_block_d*` artifact — proving the three-layer
 //! stack composes.
 
-use crate::goom::{lmme, lmme_batched, GoomMat};
+use crate::goom::{lmme, lmme_into, GoomMat, LmmeScratch};
 use crate::linalg::Mat;
 use crate::rng::{child_seed, rng_from_seed, Normal, Rng};
 use crate::runtime::{goommat_stack_to_literals, goommat_to_literals, Engine};
@@ -136,10 +136,18 @@ fn run_chain_f32(d: usize, max_steps: usize, seed: u64) -> ChainResult {
 fn run_chain_f64(d: usize, max_steps: usize, seed: u64) -> ChainResult {
     let mut rng = rng_from_seed(seed);
     let mut s = Mat::randn(d, d, &mut rng);
+    // Steady-state loop buffers: one transition, one output, one pack
+    // scratch — zero allocations per step after the first.
+    let mut a = Mat::zeros(d, d);
+    let mut next = Mat::zeros(d, d);
+    let mut scratch = crate::goom::kernel::MatmulScratch::new();
     let mut max_abs = 0.0f64;
     for t in 0..max_steps {
-        let a = Mat::randn(d, d, &mut rng);
-        s = a.matmul(&s);
+        // A fresh Normal per draw consumes the rng stream exactly like
+        // `Mat::randn`, so the reused buffers change nothing but the allocs.
+        Normal::standard().fill(&mut rng, &mut a.data);
+        a.matmul_into(&s, &mut next, &mut scratch, 1);
+        std::mem::swap(&mut s, &mut next);
         max_abs = s.max_abs();
         if s.has_non_finite() || max_abs == 0.0 {
             return ChainResult {
@@ -169,9 +177,16 @@ fn run_chain_goom<T: crate::goom::GoomFloat>(
         if std::mem::size_of::<T>() == 4 { Method::GoomC64 } else { Method::GoomC128 };
     let mut rng = rng_from_seed(seed);
     let mut s = GoomMat::<T>::randn(d, d, &mut rng);
+    // Zero-alloc steady state: the transition, the output, and the LMME
+    // scratch are allocated once and reused every step (`fill_randn`
+    // consumes the identical rng stream as a fresh `randn`).
+    let mut a = GoomMat::<T>::zeros(d, d);
+    let mut next = GoomMat::<T>::zeros(d, d);
+    let mut scratch = LmmeScratch::new();
     for t in 0..max_steps {
-        let a = GoomMat::<T>::randn(d, d, &mut rng);
-        s = lmme(&a, &s);
+        a.fill_randn(&mut rng);
+        lmme_into(&a, &s, &mut next, &mut scratch, 1);
+        std::mem::swap(&mut s, &mut next);
         if s.has_nan() || !s.max_logmag().is_finite() {
             return ChainResult {
                 method,
@@ -208,11 +223,31 @@ pub fn run_chain_goom_batched<T: crate::goom::GoomFloat>(
     d: usize,
     specs: &[ChainSpec],
 ) -> Vec<ChainResult> {
+    run_chain_goom_batched_with_scratch(d, specs, &mut LmmeScratch::new(), 1)
+}
+
+/// [`run_chain_goom_batched`] with caller-owned LMME scratch and a kernel
+/// thread count — the serving layer's pool workers thread a persistent
+/// per-worker scratch (and the daemon's `--threads` knob) through here, so
+/// a warmed worker advances every chain of a batch with zero allocations
+/// per step (per-chain state/transition buffers are allocated once per
+/// batch and ping-ponged thereafter). Results are bit-identical at every
+/// `threads` value.
+pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
+    d: usize,
+    specs: &[ChainSpec],
+    scratch: &mut LmmeScratch,
+    threads: usize,
+) -> Vec<ChainResult> {
     let method =
         if std::mem::size_of::<T>() == 4 { Method::GoomC64 } else { Method::GoomC128 };
     let mut rngs: Vec<Rng> = specs.iter().map(|s| rng_from_seed(s.seed)).collect();
     let mut states: Vec<GoomMat<T>> =
         rngs.iter_mut().map(|r| GoomMat::<T>::randn(d, d, r)).collect();
+    let mut trans: Vec<GoomMat<T>> =
+        specs.iter().map(|_| GoomMat::<T>::zeros(d, d)).collect();
+    let mut next: Vec<GoomMat<T>> =
+        specs.iter().map(|_| GoomMat::<T>::zeros(d, d)).collect();
     let mut results: Vec<Option<ChainResult>> = vec![None; specs.len()];
     for (i, spec) in specs.iter().enumerate() {
         if spec.steps == 0 {
@@ -226,24 +261,24 @@ pub fn run_chain_goom_batched<T: crate::goom::GoomFloat>(
         }
     }
     let max_steps = specs.iter().map(|s| s.steps).max().unwrap_or(0);
+    let mut active: Vec<usize> = Vec::with_capacity(specs.len());
     for t in 0..max_steps {
         // Draw this step's transition for every still-active chain.
-        let mut active: Vec<usize> = Vec::new();
-        let mut trans: Vec<GoomMat<T>> = Vec::new();
+        active.clear();
         for (i, spec) in specs.iter().enumerate() {
             if results[i].is_none() && t < spec.steps {
-                trans.push(GoomMat::<T>::randn(d, d, &mut rngs[i]));
+                trans[i].fill_randn(&mut rngs[i]);
                 active.push(i);
             }
         }
         if active.is_empty() {
             break;
         }
-        let pairs: Vec<(&GoomMat<T>, &GoomMat<T>)> =
-            active.iter().zip(trans.iter()).map(|(&i, a)| (a, &states[i])).collect();
-        let stepped = lmme_batched(&pairs);
-        for (new_state, &i) in stepped.into_iter().zip(active.iter()) {
-            states[i] = new_state;
+        // One stacked LMME pass: the same kernel path and op order as a
+        // solo run, so batched results are byte-identical to solo results.
+        for &i in &active {
+            lmme_into(&trans[i], &states[i], &mut next[i], scratch, threads);
+            std::mem::swap(&mut states[i], &mut next[i]);
             let failed = states[i].has_nan() || !states[i].max_logmag().is_finite();
             if failed {
                 results[i] = Some(ChainResult {

@@ -1,0 +1,367 @@
+//! Cache-blocked, register-tiled f64 matmul — the single real-matmul
+//! microkernel behind every matrix product in the repo.
+//!
+//! Structure (BLIS-style, sized for the shapes this repo serves):
+//!
+//! * **Packing.** Both operands are repacked once per multiply into
+//!   panel-major buffers: A into `MR = 4`-row panels laid out k-major
+//!   (`panel[k][r]`), B into `NR = 4`-column panels (`panel[k][c]`). The pack
+//!   step is generic over an element source, which is how LMME fuses its
+//!   `sign · exp(logmag − scale)` transform into packing — each element is
+//!   exponentiated exactly once, straight into the panel, with no separate
+//!   scaled-exponential pass or buffer.
+//! * **Microkernel.** An `MR×NR` register tile accumulates over the full
+//!   depth with `chunks_exact` loops sized for autovectorization. Plain
+//!   IEEE mul+add (no `mul_add`): on targets without guaranteed FMA,
+//!   `f64::mul_add` lowers to a libm call, and avoiding hardware FMA keeps
+//!   results bit-identical across machines as well as across paths.
+//! * **Blocking.** Output rows are processed in `MC`-row blocks — the unit
+//!   of thread parallelism ([`crate::util::par::par_chunks_mut`]). A depth
+//!   (`KC`) loop is deliberately omitted: full-depth panels fit comfortably
+//!   in cache for every shape this repo computes (serving caps `d` at 128;
+//!   a `KC` loop slots into the panel layout if that ever changes).
+//!
+//! Determinism contract: each output element is the pure k-ascending sum
+//! `Σ_k a[i,k]·b[k,j]` regardless of tile shape, block size, or thread
+//! count — the summation order matches the naive triple loop exactly, so
+//! the blocked kernel is *bit-identical* to [`matmul_reference`] (and to
+//! the seed's i-k-j loop on inputs without exact zeros or non-finite
+//! values). This is the property that keeps batched, cached, and solo LMME
+//! byte-identical under the serving layer (PR-1 invariant).
+
+use super::stats;
+use crate::util::par;
+use std::time::Instant;
+
+/// Register-tile rows (A panel width).
+pub const MR: usize = 4;
+/// Register-tile columns (B panel width). 4×4 keeps the f64 accumulator
+/// tile (8 two-lane vector registers) plus operands inside the baseline
+/// x86-64 register file (16 xmm) — a 4×8 tile would spill every iteration
+/// on targets without AVX.
+pub const NR: usize = 4;
+/// Output rows per parallel block (the thread work unit); multiple of `MR`.
+pub const MC: usize = 64;
+
+/// Reusable packing buffers. One instance serves any sequence of multiplies;
+/// buffers grow to the largest shape seen and are reused thereafter, so the
+/// steady-state hot path performs zero allocations.
+#[derive(Debug, Default, Clone)]
+pub struct MatmulScratch {
+    pa: Vec<f64>,
+    pb: Vec<f64>,
+}
+
+impl MatmulScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Wall-clock split of one multiply, for the per-op kernel metrics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MatmulTiming {
+    pub pack_ns: u64,
+    pub compute_ns: u64,
+}
+
+/// The packed-panel multiply, generic over element sources so callers fuse
+/// their input transform (LMME's scaled exp) into packing. `fa(r, k)` and
+/// `fb(k, c)` are absolute indices into the logical `n×d` / `d×m` operands.
+///
+/// When `reuse_packed_a` is set, the A-pack phase is skipped and
+/// `scratch.pa` is trusted to still hold the panels of the same logical
+/// operand at the same `(n, d)` — the batched-LMME driver uses this to pack
+/// a shared left operand once per batch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_src<FA, FB>(
+    n: usize,
+    d: usize,
+    m: usize,
+    fa: FA,
+    fb: FB,
+    reuse_packed_a: bool,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming
+where
+    FA: Fn(usize, usize) -> f64,
+    FB: Fn(usize, usize) -> f64,
+{
+    assert_eq!(out.len(), n * m, "matmul output length mismatch");
+    let mut timing = MatmulTiming::default();
+    if n == 0 || m == 0 {
+        return timing;
+    }
+    if d == 0 {
+        out.fill(0.0);
+        return timing;
+    }
+    let npa = n.div_ceil(MR);
+    let npb = m.div_ceil(NR);
+
+    let t0 = Instant::now();
+    if !reuse_packed_a {
+        scratch.pa.resize(npa * MR * d, 0.0);
+        for p in 0..npa {
+            let panel = &mut scratch.pa[p * MR * d..(p + 1) * MR * d];
+            let r0 = p * MR;
+            let vr = MR.min(n - r0);
+            for (k, krow) in panel.chunks_exact_mut(MR).enumerate() {
+                for (r, slot) in krow.iter_mut().enumerate() {
+                    *slot = if r < vr { fa(r0 + r, k) } else { 0.0 };
+                }
+            }
+        }
+    }
+    scratch.pb.resize(npb * NR * d, 0.0);
+    for q in 0..npb {
+        let panel = &mut scratch.pb[q * NR * d..(q + 1) * NR * d];
+        let c0 = q * NR;
+        let vc = NR.min(m - c0);
+        for (k, krow) in panel.chunks_exact_mut(NR).enumerate() {
+            for (c, slot) in krow.iter_mut().enumerate() {
+                *slot = if c < vc { fb(k, c0 + c) } else { 0.0 };
+            }
+        }
+    }
+    timing.pack_ns = t0.elapsed().as_nanos() as u64;
+
+    let t1 = Instant::now();
+    let pa = &scratch.pa;
+    let pb = &scratch.pb;
+    par::par_chunks_mut(out, MC * m, threads, |blk, out_rows| {
+        let row0 = blk * MC;
+        let rows_here = out_rows.len() / m;
+        for p_local in 0..rows_here.div_ceil(MR) {
+            let p = row0 / MR + p_local;
+            let r0_local = p_local * MR;
+            let vr = MR.min(rows_here - r0_local);
+            let pa_panel = &pa[p * MR * d..(p + 1) * MR * d];
+            for q in 0..npb {
+                let c0 = q * NR;
+                let vc = NR.min(m - c0);
+                let mut acc = [[0.0f64; NR]; MR];
+                microkernel(pa_panel, &pb[q * NR * d..(q + 1) * NR * d], &mut acc);
+                for (r, acc_row) in acc.iter().enumerate().take(vr) {
+                    let off = (r0_local + r) * m + c0;
+                    out_rows[off..off + vc].copy_from_slice(&acc_row[..vc]);
+                }
+            }
+        }
+    });
+    timing.compute_ns = t1.elapsed().as_nanos() as u64;
+    let flops = 2 * (n as u64) * (d as u64) * (m as u64);
+    stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
+    timing
+}
+
+/// The `MR×NR` register-tile inner loop: `acc[r][c] += Σ_k pa[k][r]·pb[k][c]`
+/// over the panels' full depth, k ascending.
+#[inline(always)]
+fn microkernel(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (a, b) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (r, acc_row) in acc.iter_mut().enumerate() {
+            let av = a[r];
+            for (o, &bv) in acc_row.iter_mut().zip(b) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked multiply of plain row-major f64 slices: `out = a · b` with
+/// `a: n×d`, `b: d×m`. The entry point for [`crate::linalg::Mat::matmul`]
+/// and the bench harness.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f64(
+    a: &[f64],
+    b: &[f64],
+    n: usize,
+    d: usize,
+    m: usize,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming {
+    assert_eq!(a.len(), n * d, "matmul lhs length mismatch");
+    assert_eq!(b.len(), d * m, "matmul rhs length mismatch");
+    matmul_src(
+        n,
+        d,
+        m,
+        |r, k| a[r * d + k],
+        |k, c| b[k * m + c],
+        false,
+        out,
+        scratch,
+        threads,
+    )
+}
+
+/// Reference triple loop (i-j-k, k-ascending dot products) — the oracle the
+/// kernel's property tests compare against bit-for-bit.
+pub fn matmul_reference(a: &[f64], b: &[f64], n: usize, d: usize, m: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * d);
+    assert_eq!(b.len(), d * m);
+    let mut out = vec![0.0f64; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut s = 0.0f64;
+            for k in 0..d {
+                s += a[i * d + k] * b[k * m + j];
+            }
+            out[i * m + j] = s;
+        }
+    }
+    out
+}
+
+/// The seed's i-k-j loop (zero-skip axpy inner loop) — kept verbatim as the
+/// bench harness's "before" baseline so `BENCH_lmme.json` records the
+/// blocked kernel's speedup against exactly what PR 0–2 shipped.
+pub fn matmul_naive(a: &[f64], b: &[f64], n: usize, d: usize, m: usize, out: &mut [f64]) {
+    assert_eq!(a.len(), n * d);
+    assert_eq!(b.len(), d * m);
+    assert_eq!(out.len(), n * m);
+    out.fill(0.0);
+    for i in 0..n {
+        let orow = &mut out[i * m..(i + 1) * m];
+        for kk in 0..d {
+            let av = a[i * d + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * m..(kk + 1) * m];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = rng_from_seed(seed);
+        crate::rng::randn(&mut rng, n)
+    }
+
+    fn kernel(a: &[f64], b: &[f64], n: usize, d: usize, m: usize, threads: usize) -> Vec<f64> {
+        let mut out = vec![f64::NAN; n * m]; // NaN sentinel: every slot must be written
+        let mut scratch = MatmulScratch::new();
+        matmul_f64(a, b, n, d, m, &mut out, &mut scratch, threads);
+        out
+    }
+
+    #[test]
+    fn blocked_matches_reference_bitwise_across_ragged_shapes() {
+        // Shapes straddling every boundary: register tile (MR=4, NR=8),
+        // parallel block (MC=64), empty, scalar, and skinny extremes.
+        let shapes: &[(usize, usize, usize)] = &[
+            (0, 0, 0),
+            (0, 3, 2),
+            (2, 0, 3),
+            (3, 2, 0),
+            (1, 1, 1),
+            (1, 7, 1),
+            (1, 1, 17),
+            (3, 4, 5),
+            (4, 4, 8),
+            (5, 9, 7),
+            (7, 3, 9),
+            (8, 8, 8),
+            (9, 5, 15),
+            (16, 11, 24),
+            (63, 2, 65),
+            (64, 64, 64),
+            (65, 33, 63),
+            (65, 129, 66),
+            (128, 128, 128),
+        ];
+        for (case, &(n, d, m)) in shapes.iter().enumerate() {
+            let a = randv(n * d, 100 + case as u64);
+            let b = randv(d * m, 200 + case as u64);
+            let want = matmul_reference(&a, &b, n, d, m);
+            let got = kernel(&a, &b, n, d, m, 1);
+            assert_eq!(got, want, "bitwise mismatch at {n}x{d}x{m}");
+        }
+    }
+
+    #[test]
+    fn results_bit_identical_across_thread_counts() {
+        let (n, d, m) = (130, 37, 70);
+        let a = randv(n * d, 7);
+        let b = randv(d * m, 8);
+        let solo = kernel(&a, &b, n, d, m, 1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(kernel(&a, &b, n, d, m, threads), solo, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn naive_and_reference_agree_on_dense_data() {
+        let (n, d, m) = (33, 29, 31);
+        let a = randv(n * d, 9);
+        let b = randv(d * m, 10);
+        let want = matmul_reference(&a, &b, n, d, m);
+        let mut got = vec![0.0; n * m];
+        matmul_naive(&a, &b, n, d, m, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_stays_correct() {
+        let mut scratch = MatmulScratch::new();
+        for (case, &(n, d, m)) in [(40usize, 12usize, 9usize), (3, 50, 3), (17, 17, 17)]
+            .iter()
+            .enumerate()
+        {
+            let a = randv(n * d, 300 + case as u64);
+            let b = randv(d * m, 400 + case as u64);
+            let mut out = vec![0.0; n * m];
+            matmul_f64(&a, &b, n, d, m, &mut out, &mut scratch, 2);
+            assert_eq!(out, matmul_reference(&a, &b, n, d, m), "case {case}");
+        }
+    }
+
+    #[test]
+    fn reuse_packed_a_skips_the_pack_but_not_the_answer() {
+        let (n, d) = (10usize, 14usize);
+        let a = randv(n * d, 11);
+        let b1 = randv(d * 6, 12);
+        let b2 = randv(d * 6, 13);
+        let mut scratch = MatmulScratch::new();
+        let mut out1 = vec![0.0; n * 6];
+        matmul_f64(&a, &b1, n, d, 6, &mut out1, &mut scratch, 1);
+        // Second multiply shares the packed A panels.
+        let mut out2 = vec![0.0; n * 6];
+        matmul_src(
+            n,
+            d,
+            6,
+            |_, _| unreachable!("A must not be repacked"),
+            |k, c| b2[k * 6 + c],
+            true,
+            &mut out2,
+            &mut scratch,
+            1,
+        );
+        assert_eq!(out2, matmul_reference(&a, &b2, n, d, 6));
+    }
+
+    #[test]
+    fn identity_and_known_product() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(kernel(&a, &b, 2, 2, 2, 1), vec![19.0, 22.0, 43.0, 50.0]);
+        let eye: Vec<f64> =
+            (0..9).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        let x = randv(9, 14);
+        assert_eq!(kernel(&eye, &x, 3, 3, 3, 1), x);
+    }
+}

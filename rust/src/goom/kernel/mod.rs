@@ -1,0 +1,29 @@
+//! The kernel layer: one blocked matmul microkernel for the whole repo,
+//! plus the process-global counters that make its cost observable.
+//!
+//! The paper's performance claim (eq. 10) is that an LMME costs *one*
+//! optimized real matmul. PR 0–2 delegated that product to two separate
+//! naive triple loops (`linalg::Mat::matmul` and the loop inside
+//! `lmme_with_scratch`); this module replaces both with a single
+//! cache-blocked, register-tiled kernel ([`matmul_f64`] /
+//! `matmul_src`) whose packing step is generic, so LMME fuses its
+//! `sign · exp(logmag − scale)` transform directly into panel packing.
+//!
+//! Everything that multiplies matrices routes here:
+//! * `linalg::Mat::matmul` (Lyapunov pipeline, QR tests, f64 chains),
+//! * `goom::lmme*` (solo, scratch, and batched — same blocking, same
+//!   summation order, hence byte-identical outputs),
+//! * the bench harness (`repro bench`), which also keeps the seed's i-k-j
+//!   loop ([`matmul_naive`]) as its recorded "before" baseline.
+//!
+//! See `docs/PERFORMANCE.md` for blocking parameters, the determinism
+//! contract, and how to read the exported counters.
+
+pub mod stats;
+
+mod matmul;
+
+pub(crate) use matmul::matmul_src;
+pub use matmul::{
+    matmul_f64, matmul_naive, matmul_reference, MatmulScratch, MatmulTiming, MC, MR, NR,
+};

@@ -1,0 +1,123 @@
+//! Process-global kernel counters: how much time the compute core spends
+//! packing panels vs multiplying, and at what FLOP rate.
+//!
+//! The counters are lock-free `AtomicU64`s bumped once per kernel/LMME
+//! invocation (a handful of relaxed adds — noise next to even a 4×4
+//! multiply), so the serving layer can export them through the coordinator
+//! `metrics` op: `loadgen` runs read the deltas to attribute end-to-end
+//! latency to compute vs queueing. The bench harness snapshots before and
+//! after each measured section ([`KernelStats::delta_since`]) to report
+//! per-op pack/matmul splits and GFLOP/s in `BENCH_*.json`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static MATMUL_OPS: AtomicU64 = AtomicU64::new(0);
+static PACK_NS: AtomicU64 = AtomicU64::new(0);
+static MATMUL_NS: AtomicU64 = AtomicU64::new(0);
+static MATMUL_FLOPS: AtomicU64 = AtomicU64::new(0);
+static LMME_OPS: AtomicU64 = AtomicU64::new(0);
+static LMME_NS: AtomicU64 = AtomicU64::new(0);
+
+/// One multiply through the blocked kernel (called by the kernel itself).
+pub(crate) fn record_matmul(pack_ns: u64, compute_ns: u64, flops: u64) {
+    MATMUL_OPS.fetch_add(1, Ordering::Relaxed);
+    PACK_NS.fetch_add(pack_ns, Ordering::Relaxed);
+    MATMUL_NS.fetch_add(compute_ns, Ordering::Relaxed);
+    MATMUL_FLOPS.fetch_add(flops, Ordering::Relaxed);
+}
+
+/// One full LMME (scales + fused pack + multiply + log/rescale).
+pub(crate) fn record_lmme(total_ns: u64) {
+    LMME_OPS.fetch_add(1, Ordering::Relaxed);
+    LMME_NS.fetch_add(total_ns, Ordering::Relaxed);
+}
+
+/// Monotonic snapshot of the kernel counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct KernelStats {
+    /// Multiplies executed by the blocked kernel (every path: LMME, `Mat`).
+    pub matmul_ops: u64,
+    /// Nanoseconds spent packing panels (includes LMME's fused exp/scale).
+    pub pack_ns: u64,
+    /// Nanoseconds spent in the register-tiled compute loops.
+    pub matmul_ns: u64,
+    /// Real FLOPs issued (2·n·d·m per multiply).
+    pub matmul_flops: u64,
+    /// Full LMME invocations.
+    pub lmme_ops: u64,
+    /// Nanoseconds spent in LMME end-to-end.
+    pub lmme_ns: u64,
+}
+
+impl KernelStats {
+    /// Compute-loop throughput in GFLOP/s (0 when nothing ran).
+    pub fn matmul_gflops(&self) -> f64 {
+        if self.matmul_ns == 0 {
+            0.0
+        } else {
+            self.matmul_flops as f64 / self.matmul_ns as f64
+        }
+    }
+
+    /// Mean nanoseconds per LMME (0 when nothing ran).
+    pub fn mean_lmme_ns(&self) -> f64 {
+        if self.lmme_ops == 0 {
+            0.0
+        } else {
+            self.lmme_ns as f64 / self.lmme_ops as f64
+        }
+    }
+
+    /// Counter deltas accumulated since an earlier snapshot.
+    pub fn delta_since(&self, earlier: &KernelStats) -> KernelStats {
+        KernelStats {
+            matmul_ops: self.matmul_ops.wrapping_sub(earlier.matmul_ops),
+            pack_ns: self.pack_ns.wrapping_sub(earlier.pack_ns),
+            matmul_ns: self.matmul_ns.wrapping_sub(earlier.matmul_ns),
+            matmul_flops: self.matmul_flops.wrapping_sub(earlier.matmul_flops),
+            lmme_ops: self.lmme_ops.wrapping_sub(earlier.lmme_ops),
+            lmme_ns: self.lmme_ns.wrapping_sub(earlier.lmme_ns),
+        }
+    }
+}
+
+/// Read the process-global counters.
+pub fn snapshot() -> KernelStats {
+    KernelStats {
+        matmul_ops: MATMUL_OPS.load(Ordering::Relaxed),
+        pack_ns: PACK_NS.load(Ordering::Relaxed),
+        matmul_ns: MATMUL_NS.load(Ordering::Relaxed),
+        matmul_flops: MATMUL_FLOPS.load(Ordering::Relaxed),
+        lmme_ops: LMME_OPS.load(Ordering::Relaxed),
+        lmme_ns: LMME_NS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_delta() {
+        let before = snapshot();
+        record_matmul(100, 400, 2_000_000);
+        record_lmme(700);
+        let d = snapshot().delta_since(&before);
+        // Other tests run concurrently and also bump the globals, so assert
+        // lower bounds, and exact arithmetic on a private delta.
+        assert!(d.matmul_ops >= 1 && d.pack_ns >= 100 && d.matmul_ns >= 400);
+        assert!(d.lmme_ops >= 1 && d.lmme_ns >= 700);
+        let solo = KernelStats {
+            matmul_ops: 1,
+            pack_ns: 100,
+            matmul_ns: 400,
+            matmul_flops: 2_000_000,
+            lmme_ops: 1,
+            lmme_ns: 700,
+        };
+        assert!((solo.matmul_gflops() - 5000.0).abs() < 1e-9);
+        assert!((solo.mean_lmme_ns() - 700.0).abs() < 1e-9);
+        assert_eq!(KernelStats::default().matmul_gflops(), 0.0);
+        assert_eq!(KernelStats::default().mean_lmme_ns(), 0.0);
+    }
+}

@@ -7,11 +7,14 @@
 //! Modules:
 //! * [`scalar`] — scalar GOOMs and signed log-sum-exp.
 //! * [`tensor`] — `GoomMat` with planar (logmag, sign) storage.
+//! * [`kernel`] — the blocked real-matmul microkernel every matrix product
+//!   in the repo routes through, plus its process-global perf counters.
 //! * [`lmme`] — log-matrix-multiplication-exp (paper §3.2).
 //! * [`scan`] — sequential + parallel prefix scans and the work/span model.
 //! * [`reset`] — the selective-resetting scan (paper §5).
 
 mod float;
+pub mod kernel;
 mod lmme;
 pub mod ops;
 mod reset;
@@ -20,7 +23,10 @@ mod scan;
 mod tensor;
 
 pub use float::GoomFloat;
-pub use lmme::{lmme, lmme_batched, lmme_exact, lmme_vec, lmme_with_scratch, LmmeScratch};
+pub use lmme::{
+    lmme, lmme_batched, lmme_batched_with_scratch, lmme_exact, lmme_into, lmme_vec,
+    lmme_with_scratch, LmmeScratch,
+};
 pub use reset::{
     reset_combine, reset_scan_par, reset_scan_par_chunked, reset_scan_seq, ResetElem, ResetPair,
 };

@@ -7,9 +7,9 @@
 //! * [`scan_seq`] — the sequential inclusive scan (the baseline).
 //! * [`scan_par`] — the classic three-phase chunked parallel scan (scan
 //!   chunks independently, scan the chunk totals, fix up). Work O(2n), span
-//!   O(n/P + P). Runs on `std::thread::scope` — on this 1-core container
-//!   the *structure* is exercised while wall-clock parallelism is modeled by
-//!   [`ScanCost`].
+//!   O(n/P + P). Runs on the shared scoped-thread substrate
+//!   ([`crate::util::par`]) — on this 1-core container the *structure* is
+//!   exercised while wall-clock parallelism is modeled by [`ScanCost`].
 //! * [`ScanCost`] — work/span accounting used by the Fig. 3 bench to report
 //!   Brent-style modeled times for a P-way device alongside measured
 //!   1-core times.
@@ -78,34 +78,17 @@ where
     if nchunks == 1 {
         return scan_seq(items, combine);
     }
-    // Share one borrow across the scoped worker threads (F: Sync).
-    let combine = &combine;
     let threads = threads.max(1).min(nchunks);
     let chunk = n.div_ceil(nchunks);
     let nchunks = n.div_ceil(chunk);
-    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(nchunks);
-    // Phase 1 — per-chunk scans, `threads` workers striding over chunks.
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..threads {
-            handles.push(scope.spawn(move || {
-                let mut out: Vec<(usize, Vec<T>)> = Vec::new();
-                let mut c = w;
-                while c * chunk < n {
-                    let lo = c * chunk;
-                    let hi = ((c + 1) * chunk).min(n);
-                    out.push((c, scan_seq(&items[lo..hi], combine)));
-                    c += threads;
-                }
-                out
-            }));
-        }
-        let mut collected: Vec<(usize, Vec<T>)> = Vec::new();
-        for h in handles {
-            collected.extend(h.join().expect("scan worker panicked"));
-        }
-        collected.sort_by_key(|(c, _)| *c);
-        chunks.extend(collected.into_iter().map(|(_, v)| v));
+    let mut chunks: Vec<Vec<T>> = (0..nchunks).map(|_| Vec::new()).collect();
+    // Phase 1 — per-chunk scans on the shared parallel substrate (chunk c
+    // is a pure function of the input slice, so the thread count never
+    // changes a result bit).
+    crate::util::par::par_chunks_mut(&mut chunks, 1, threads, |c, slot| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        slot[0] = scan_seq(&items[lo..hi], &combine);
     });
     // Phase 2 — sequential scan of chunk totals → per-chunk prefixes.
     let mut prefixes: Vec<Option<T>> = vec![None; chunks.len()];
@@ -118,30 +101,14 @@ where
             Some(a) => combine(a, total),
         });
     }
-    // Phase 3 — parallel fix-up (`threads` workers striding over chunks).
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        let work: Vec<(&mut Vec<T>, &Option<T>)> =
-            chunks.iter_mut().zip(prefixes.iter()).collect();
-        let mut per_worker: Vec<Vec<(&mut Vec<T>, &Option<T>)>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        for (i, item) in work.into_iter().enumerate() {
-            per_worker[i % threads].push(item);
-        }
-        for batch in per_worker {
-            handles.push(scope.spawn(move || {
-                for (ch, prefix) in batch {
-                    if let Some(p) = prefix {
-                        for x in ch.iter_mut() {
-                            // out = combine(prefix, local): prefix is earlier.
-                            *x = combine(p, x);
-                        }
-                    }
-                }
-            }));
-        }
-        for h in handles {
-            h.join().expect("fixup worker panicked");
+    // Phase 3 — parallel fix-up: combine each chunk's exclusive prefix into
+    // its outputs.
+    crate::util::par::par_chunks_mut(&mut chunks, 1, threads, |c, slot| {
+        if let Some(p) = &prefixes[c] {
+            for x in slot[0].iter_mut() {
+                // out = combine(prefix, local): prefix is earlier.
+                *x = combine(p, x);
+            }
         }
     });
     chunks.concat()

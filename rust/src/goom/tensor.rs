@@ -64,14 +64,47 @@ impl<T: GoomFloat> GoomMat<T> {
     /// Sample a matrix of GOOMs representing i.i.d. N(0,1) reals — the
     /// paper's `A'_t ~ log N(0,1)^{d×d}` (eq. 15): sample in ℝ, log-map.
     pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
-        let mut normal = Normal::standard();
         let mut out = Self::zeros(rows, cols);
-        for i in 0..rows * cols {
-            let g = Goom::<T>::from_f64(normal.sample(rng));
-            out.logmag[i] = g.logmag;
-            out.sign[i] = g.sign;
-        }
+        out.fill_randn(rng);
         out
+    }
+
+    /// Refill this matrix (shape unchanged) with fresh i.i.d. N(0,1) GOOMs,
+    /// drawing from `rng` in exactly the order [`GoomMat::randn`] does — a
+    /// chain loop that reuses one transition buffer consumes the identical
+    /// RNG stream as one that allocates per step, so results stay
+    /// bit-identical while the hot path stops allocating.
+    pub fn fill_randn(&mut self, rng: &mut Rng) {
+        let mut normal = Normal::standard();
+        for i in 0..self.logmag.len() {
+            let g = Goom::<T>::from_f64(normal.sample(rng));
+            self.logmag[i] = g.logmag;
+            self.sign[i] = g.sign;
+        }
+    }
+
+    /// Copy `src` into this matrix, reusing existing storage (no allocation
+    /// once capacity suffices) — the buffer-recycling alternative to
+    /// `*self = src.clone()` on hot paths.
+    pub fn copy_from(&mut self, src: &Self) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.logmag.clear();
+        self.logmag.extend_from_slice(&src.logmag);
+        self.sign.clear();
+        self.sign.extend_from_slice(&src.sign);
+    }
+
+    /// Resize to `rows × cols` without preserving contents — every element
+    /// is unspecified until the caller overwrites it (the zero-allocation
+    /// LMME resizes its caller-owned output this way before filling it).
+    /// Storage is reused when capacity allows; a warmed buffer never
+    /// reallocates for same-or-smaller shapes.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.logmag.resize(rows * cols, T::NEG_INFINITY);
+        self.sign.resize(rows * cols, T::ONE);
     }
 
     /// Exponentiate back to a real matrix (paper eq. 7). Overflows to ±inf
@@ -342,6 +375,45 @@ mod tests {
         assert!(i.get(0, 1).is_zero());
         let t = i.transpose();
         assert_eq!(t, i);
+    }
+
+    #[test]
+    fn fill_randn_consumes_the_same_stream_as_randn() {
+        let fresh = GoomMat::<f64>::randn(6, 5, &mut rng_from_seed(33));
+        let mut reused = GoomMat::<f64>::zeros(6, 5);
+        reused.logmag.fill(123.0); // stale contents must be fully overwritten
+        let mut rng = rng_from_seed(33);
+        reused.fill_randn(&mut rng);
+        assert_eq!(reused, fresh);
+        // And the rng positions agree afterwards: a second draw matches too.
+        let fresh2 = {
+            let mut r2 = rng_from_seed(33);
+            let _ = GoomMat::<f64>::randn(6, 5, &mut r2);
+            GoomMat::<f64>::randn(2, 2, &mut r2)
+        };
+        reused.resize_for_overwrite(2, 2);
+        reused.fill_randn(&mut rng);
+        assert_eq!(reused, fresh2);
+    }
+
+    #[test]
+    fn copy_from_matches_clone_and_reuses_storage() {
+        let src = GoomMat::<f64>::randn(4, 6, &mut rng_from_seed(34));
+        let mut dst = GoomMat::<f64>::zeros(10, 10);
+        let cap = dst.logmag.capacity();
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.logmag.capacity(), cap, "smaller copy must not reallocate");
+    }
+
+    #[test]
+    fn resize_for_overwrite_reuses_capacity() {
+        let mut g = GoomMat::<f64>::zeros(8, 8);
+        let cap = g.logmag.capacity();
+        g.resize_for_overwrite(4, 4);
+        assert_eq!((g.rows, g.cols, g.logmag.len(), g.sign.len()), (4, 4, 16, 16));
+        g.resize_for_overwrite(8, 8);
+        assert_eq!(g.logmag.capacity(), cap, "no reallocation growing back");
     }
 
     #[test]

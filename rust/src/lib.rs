@@ -8,8 +8,17 @@
 //! explicit form of the paper's complex-typed GOOMs — and provides:
 //!
 //! * [`goom`] — scalar and matrix GOOM arithmetic, LMME (log-matmul-exp),
-//!   prefix scans, and the selective-resetting scan.
-//! * [`linalg`], [`rng`], [`util`] — dependency-free substrates.
+//!   prefix scans, and the selective-resetting scan. Its [`goom::kernel`]
+//!   submodule holds the blocked, register-tiled real-matmul microkernel
+//!   every matrix product in the repo routes through (LMME fuses its
+//!   exp/scale transform into the kernel's panel packing), plus the
+//!   process-global counters that attribute time to pack vs multiply.
+//! * [`linalg`], [`rng`], [`util`] — externally-dependency-free
+//!   substrates ([`util::par`] is the shared scoped-thread parallel-for
+//!   the kernel, the scan, and the Lyapunov batches all fan out on).
+//!   Note one deliberate in-crate cycle: `linalg::Mat::matmul` routes
+//!   through [`goom::kernel`] so the repo has exactly one matmul — the
+//!   kernel itself depends only on `util`.
 //! * [`dynsys`] — a library of chaotic dynamical systems with analytic
 //!   Jacobians (the Gilpin-dataset substitute).
 //! * [`lyapunov`] — sequential baselines and the paper's parallel
@@ -28,6 +37,9 @@
 //!   the cache-aware router tier (`repro route`) that rendezvous-hashes
 //!   canonical keys across shards. See `docs/SERVING.md` for the wire
 //!   protocol.
+//! * [`perf`] — the `repro bench` harness: LMME/scan/serving microbenches
+//!   recorded to `BENCH_*.json` (ns/op, GFLOP/s, allocs/op), the perf
+//!   trajectory every PR is held to. See `docs/PERFORMANCE.md`.
 
 pub mod chain;
 pub mod coordinator;
@@ -35,6 +47,7 @@ pub mod dynsys;
 pub mod goom;
 pub mod linalg;
 pub mod lyapunov;
+pub mod perf;
 pub mod rng;
 pub mod rnn;
 pub mod runtime;

@@ -94,26 +94,42 @@ impl Mat {
         t
     }
 
-    /// Matrix product, blocked over the inner dimension for cache locality.
+    /// Matrix product through the repo's single blocked kernel
+    /// ([`crate::goom::kernel`]). Convenience form that allocates the
+    /// output and packing scratch; loops that multiply repeatedly should
+    /// use [`Mat::matmul_into`] with persistent buffers instead.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out, &mut crate::goom::kernel::MatmulScratch::new(), 1);
+        out
+    }
+
+    /// Zero-allocation matrix product: writes into a caller-owned output
+    /// (resized in place) reusing caller-owned packing buffers. `threads`
+    /// parallelizes over output row-blocks; results are bit-identical at
+    /// every thread count.
+    pub fn matmul_into(
+        &self,
+        other: &Mat,
+        out: &mut Mat,
+        scratch: &mut crate::goom::kernel::MatmulScratch,
+        threads: usize,
+    ) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(n, m);
-        // i-k-j loop order: streams `other` rows and `out` rows linearly.
-        for i in 0..n {
-            let orow = &mut out.data[i * m..(i + 1) * m];
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * m..(kk + 1) * m];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        out.rows = n;
+        out.cols = m;
+        out.data.resize(n * m, 0.0);
+        crate::goom::kernel::matmul_f64(
+            &self.data,
+            &other.data,
+            n,
+            k,
+            m,
+            &mut out.data,
+            scratch,
+            threads,
+        );
     }
 
     /// Matrix-vector product.
@@ -261,6 +277,19 @@ mod tests {
         let right = a.matmul(&b.matmul(&c));
         for (x, y) in left.data.iter().zip(&right.data) {
             assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffers_and_matches_allocating_path() {
+        let mut rng = rng_from_seed(9);
+        let mut out = Mat::zeros(0, 0);
+        let mut scratch = crate::goom::kernel::MatmulScratch::new();
+        for &(n, k, m) in &[(5usize, 4usize, 6usize), (1, 9, 1), (12, 3, 12)] {
+            let a = Mat::randn(n, k, &mut rng);
+            let b = Mat::randn(k, m, &mut rng);
+            a.matmul_into(&b, &mut out, &mut scratch, 2);
+            assert_eq!(out, a.matmul(&b), "{n}x{k}x{m}");
         }
     }
 

@@ -105,29 +105,27 @@ pub fn spectrum_from_states(
     let mut logdiags = vec![vec![0.0f64; d]; t_pairs];
     let threads = threads.max(1);
 
-    std::thread::scope(|scope| {
-        let chunk = t_pairs.div_ceil(threads);
-        let mut handles = Vec::new();
-        for (w, out_chunk) in logdiags.chunks_mut(chunk).enumerate() {
-            let lo = w * chunk;
-            handles.push(scope.spawn(move || {
-                for (k, out) in out_chunk.iter_mut().enumerate() {
-                    let t = lo + k;
-                    // Group (b): orthonormal basis of the input state.
-                    let (real, _) = states[t].normalize_cols_log().to_mat_scaled();
-                    let (q_prev, _) = qr_householder(&real);
-                    // Group (c): output state S*_{t+1} = J_{t+1} · Q_t.
-                    let s_out = jacs[t].matmul(&q_prev);
-                    // Group (d): log |diag R|.
-                    let (_, r) = qr_householder(&s_out);
-                    for i in 0..d {
-                        out[i] = r[(i, i)].abs().ln();
-                    }
-                }
-            }));
-        }
-        for h in handles {
-            h.join().expect("spectrum worker panicked");
+    // Each t is independent (groups (b)–(d) are embarrassingly parallel);
+    // the shared scoped-thread substrate fans the batch out. Each worker
+    // chunk reuses one kernel scratch and output matrix across its
+    // timesteps instead of allocating per multiply.
+    let chunk = t_pairs.div_ceil(threads);
+    crate::util::par::par_chunks_mut(&mut logdiags, chunk, threads, |w, out_chunk| {
+        let lo = w * chunk;
+        let mut scratch = crate::goom::kernel::MatmulScratch::new();
+        let mut s_out = Mat::zeros(0, 0);
+        for (k, out) in out_chunk.iter_mut().enumerate() {
+            let t = lo + k;
+            // Group (b): orthonormal basis of the input state.
+            let (real, _) = states[t].normalize_cols_log().to_mat_scaled();
+            let (q_prev, _) = qr_householder(&real);
+            // Group (c): output state S*_{t+1} = J_{t+1} · Q_t.
+            jacs[t].matmul_into(&q_prev, &mut s_out, &mut scratch, 1);
+            // Group (d): log |diag R|.
+            let (_, r) = qr_householder(&s_out);
+            for i in 0..d {
+                out[i] = r[(i, i)].abs().ln();
+            }
         }
     });
 

@@ -16,9 +16,16 @@
 use anyhow::Result;
 use goomrs::coordinator::{self, Config, Metrics, RunContext};
 use goomrs::dynsys;
+use goomrs::perf;
 use goomrs::server::{self, LoadgenConfig, RouterConfig, ServeConfig};
 use goomrs::util::cli::Args;
 use goomrs::util::json::{self, Json};
+
+/// Counting allocator (two relaxed atomics per alloc — noise next to any
+/// kernel call): `repro bench` uses the counters to report allocs/op and
+/// prove the warmed hot paths allocate nothing.
+#[global_allocator]
+static ALLOC: goomrs::util::alloc::CountingAllocator = goomrs::util::alloc::CountingAllocator;
 
 fn main() {
     let args = match Args::from_env() {
@@ -84,6 +91,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("route") => route(args),
         Some("req") => req(args),
         Some("loadgen") => loadgen(args),
+        Some("bench") => bench(args),
         Some("all") => {
             for e in coordinator::registry() {
                 println!("\n=== {} ===", e.name());
@@ -142,10 +150,12 @@ fn serve(args: &Args) -> Result<()> {
             "max-connections",
             cfg.usize("serve_max_connections", defaults.max_connections)?,
         )?,
+        threads: cfg.usize("threads", cfg.usize("serve_threads", defaults.threads)?)?,
     };
     println!(
-        "goomd: {} workers, queue depth {}, batch max {}, cache {} entries",
+        "goomd: {} workers, {} kernel thread(s)/job, queue depth {}, batch max {}, cache {} entries",
         serve_cfg.workers,
+        serve_cfg.threads,
         serve_cfg.queue_depth,
         serve_cfg.batch_max,
         serve_cfg.cache_capacity
@@ -233,6 +243,10 @@ fn loadgen(args: &Args) -> Result<()> {
         steps: args.get_usize("steps", defaults.steps)?,
         method: args.get_or("method", &defaults.method).to_string(),
         shared_seed,
+        threads: args.get_usize(
+            "threads",
+            goomrs::util::par::env_threads().unwrap_or(defaults.threads),
+        )?,
     };
     println!(
         "loadgen: {} clients x {} requests → {} (chain {} d={} steps={}{})",
@@ -272,6 +286,20 @@ fn loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro bench [--quick --threads=N --out-dir=DIR]`: run the LMME / scan /
+/// serving microbenches and write `BENCH_lmme.json`, `BENCH_scan.json`,
+/// `BENCH_serve.json` — the recorded perf trajectory every future PR is
+/// held accountable to (`--quick` is the CI smoke variant).
+fn bench(args: &Args) -> Result<()> {
+    let opts = perf::BenchOpts {
+        quick: args.flag("quick"),
+        threads: args
+            .get_usize("threads", goomrs::util::par::env_threads().unwrap_or(2))?,
+        out_dir: std::path::PathBuf::from(args.get_or("out-dir", ".")),
+    };
+    perf::run_all(&opts)
+}
+
 fn run_one(name: &str, args: &Args) -> Result<()> {
     let exp = coordinator::find(name)?;
     let cfg = resolve_config(exp.as_ref(), args)?;
@@ -295,8 +323,13 @@ USAGE:
   repro <name> [--key=val ...]      shorthand for `run`
   repro config <name>               show resolved config
   repro all                         run every experiment at default scale
-  repro serve [--port=7077 --workers=4 --queue-depth=64 --batch-max=16
-               --cache=1024 --max-request-bytes=1048576 --max-connections=256]
+  repro bench [--quick --threads=N --out-dir=DIR]
+                                    run the LMME/scan/serving microbenches and
+                                    write BENCH_lmme.json / BENCH_scan.json /
+                                    BENCH_serve.json (see docs/PERFORMANCE.md)
+  repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
+               --batch-max=16 --cache=1024 --max-request-bytes=1048576
+               --max-connections=256]
                                     run goomd, the GOOM compute daemon
                                     (newline-JSON over TCP; see docs/SERVING.md)
   repro route --backends=host:port[,host:port...] [--port=7070]
@@ -305,11 +338,13 @@ USAGE:
   repro req [--addr=127.0.0.1:7077] '<json-request>'
                                     send one request line, print the response
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
-                 --method=goomc64 --d=8 --steps=500 --seed=N --min-cached=N]
+                 --method=goomc64 --d=8 --steps=500 --seed=N --min-cached=N
+                 --threads=N]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
+Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).
 Artifacts: set GOOMRS_ARTIFACTS or run from the repo root (./artifacts)."
     );
 }

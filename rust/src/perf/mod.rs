@@ -1,0 +1,499 @@
+//! `repro bench` — the reproducible perf harness.
+//!
+//! Every future PR is held accountable to a *recorded* performance
+//! trajectory: this module runs the LMME / scan / serving microbenches and
+//! writes three JSON files next to the working directory (or `--out-dir`):
+//!
+//! * `BENCH_lmme.json` — the blocked kernel vs the seed's i-k-j loop
+//!   across shapes and thread counts: ns/op, GFLOP/s, allocs/op, and the
+//!   kernel-vs-naive speedup (the acceptance bar is ≥2× single-threaded at
+//!   128×128).
+//! * `BENCH_scan.json` — sequential vs chunked-parallel prefix scan over
+//!   GOOM matrices (measured per-combine cost) plus the Brent-model time a
+//!   P-lane device would take at the measured combine cost.
+//! * `BENCH_serve.json` — an in-process `goomd` hammered by loadgen:
+//!   throughput, latency percentiles, cache behaviour, and the kernel
+//!   counters delta that attributes wall time to compute vs queueing.
+//!
+//! Allocation counts are real: the `repro` binary installs the counting
+//! global allocator, so `allocs_per_op: 0` on the warmed kernel rows is a
+//! measured fact, not an aspiration. `--quick` shrinks shapes/iterations
+//! for the CI smoke job (`bench-smoke`); the schema is identical.
+
+use crate::goom::kernel::{self, stats as kernel_stats};
+use crate::goom::{lmme_into, scan_par_chunked, scan_seq, GoomMat, LmmeScratch, ScanCost};
+use crate::rng::rng_from_seed;
+use crate::server::{LoadgenConfig, ServeConfig, Server};
+use crate::util::json::{self, Json};
+use crate::util::timing::{self, Table};
+use crate::util::{alloc, par};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Harness knobs (`repro bench --quick --threads=N --out-dir=DIR`).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// CI smoke variant: smaller shapes and fewer iterations, same schema.
+    pub quick: bool,
+    /// Max kernel/scan thread count to sweep (1 is always measured too).
+    pub threads: usize,
+    /// Directory receiving the `BENCH_*.json` files.
+    pub out_dir: PathBuf,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { quick: false, threads: par::env_threads().unwrap_or(2), out_dir: PathBuf::from(".") }
+    }
+}
+
+/// Run all three bench suites and write their JSON files.
+pub fn run_all(opts: &BenchOpts) -> Result<()> {
+    println!(
+        "repro bench{} — threads up to {}, writing to {:?}",
+        if opts.quick { " --quick" } else { "" },
+        opts.threads,
+        opts.out_dir
+    );
+    let lmme = bench_lmme(opts);
+    write_doc(opts, "BENCH_lmme.json", &lmme)?;
+    let scan = bench_scan(opts);
+    write_doc(opts, "BENCH_scan.json", &scan)?;
+    let serve = bench_serve(opts)?;
+    write_doc(opts, "BENCH_serve.json", &serve)?;
+    Ok(())
+}
+
+fn write_doc(opts: &BenchOpts, name: &str, doc: &Json) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)
+        .with_context(|| format!("creating {:?}", opts.out_dir))?;
+    let path = opts.out_dir.join(name);
+    std::fs::write(&path, json::write(doc) + "\n")
+        .with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(if x.is_finite() { x } else { 0.0 })
+}
+
+fn doc_header(bench: &str, opts: &BenchOpts, results: Vec<Json>) -> Json {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    obj(vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("quick", Json::Bool(opts.quick)),
+        ("created_unix_s", num(unix_s as f64)),
+        ("max_threads", num(opts.threads as f64)),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Time `f` (warmup + iters) and count allocator round-trips during the
+/// measured window. Returns (ns/op, allocs/op).
+fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let (allocs, elapsed) = alloc::measure_allocs(|| {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        t0.elapsed()
+    });
+    (
+        elapsed.as_nanos() as f64 / iters as f64,
+        allocs as f64 / iters as f64,
+    )
+}
+
+// ------------------------------------------------------------------ lmme --
+
+/// The seed's LMME, reproduced verbatim as the recorded baseline: separate
+/// scaled-exponential passes, the i-k-j zero-skip matmul, fresh scale
+/// vectors and output per call (exactly what PR 0–2 shipped).
+struct NaiveScratch {
+    ea: Vec<f64>,
+    eb: Vec<f64>,
+    prod: Vec<f64>,
+}
+
+fn lmme_naive(a: &GoomMat<f64>, b: &GoomMat<f64>, s: &mut NaiveScratch) -> GoomMat<f64> {
+    let (n, d, m) = (a.rows, a.cols, b.cols);
+    let ascale: Vec<f64> = (0..n)
+        .map(|i| {
+            let mx = a.logmag[i * d..(i + 1) * d]
+                .iter()
+                .fold(f64::NEG_INFINITY, |acc, &x| acc.max(x));
+            if mx == f64::NEG_INFINITY {
+                0.0
+            } else {
+                mx
+            }
+        })
+        .collect();
+    let mut bscale = vec![f64::NEG_INFINITY; m];
+    for j in 0..d {
+        for k in 0..m {
+            bscale[k] = bscale[k].max(b.logmag[j * m + k]);
+        }
+    }
+    for sc in bscale.iter_mut() {
+        if *sc == f64::NEG_INFINITY {
+            *sc = 0.0;
+        }
+    }
+    s.ea.clear();
+    s.ea.resize(n * d, 0.0);
+    for i in 0..n {
+        for j in 0..d {
+            let idx = i * d + j;
+            s.ea[idx] = a.sign[idx] * (a.logmag[idx] - ascale[i]).exp();
+        }
+    }
+    s.eb.clear();
+    s.eb.resize(d * m, 0.0);
+    for j in 0..d {
+        for k in 0..m {
+            let idx = j * m + k;
+            s.eb[idx] = b.sign[idx] * (b.logmag[idx] - bscale[k]).exp();
+        }
+    }
+    s.prod.clear();
+    s.prod.resize(n * m, 0.0);
+    kernel::matmul_naive(&s.ea, &s.eb, n, d, m, &mut s.prod);
+    let mut out = GoomMat::<f64>::zeros(n, m);
+    for i in 0..n {
+        for k in 0..m {
+            let idx = i * m + k;
+            let p = s.prod[idx];
+            if p == 0.0 {
+                out.logmag[idx] = f64::NEG_INFINITY;
+                out.sign[idx] = 1.0;
+            } else {
+                out.logmag[idx] = p.abs().ln() + ascale[i] + bscale[k];
+                out.sign[idx] = if p < 0.0 { -1.0 } else { 1.0 };
+            }
+        }
+    }
+    out
+}
+
+fn bench_lmme(opts: &BenchOpts) -> Json {
+    let dims: &[usize] = if opts.quick { &[32, 128] } else { &[32, 64, 128] };
+    let mut results = Vec::new();
+    let mut table =
+        Table::new(&["d", "impl", "threads", "ns/op", "GFLOP/s", "allocs/op", "speedup"]);
+    for &d in dims {
+        let mut rng = rng_from_seed(0xBE9C0 + d as u64);
+        let a = GoomMat::<f64>::randn(d, d, &mut rng);
+        let b = GoomMat::<f64>::randn(d, d, &mut rng);
+        let flops = 2.0 * (d as f64).powi(3);
+        let (warmup, iters) = match (opts.quick, d) {
+            (true, _) => (1, 3),
+            (false, x) if x >= 128 => (2, 10),
+            (false, _) => (3, 30),
+        };
+
+        let mut naive_scratch =
+            NaiveScratch { ea: Vec::new(), eb: Vec::new(), prod: Vec::new() };
+        let (naive_ns, naive_allocs) =
+            measure(warmup, iters, || lmme_naive(&a, &b, &mut naive_scratch));
+        results.push(lmme_row(d, "naive_ikj", 1, naive_ns, flops, naive_allocs, 1.0));
+        table.row(&[
+            d.to_string(),
+            "naive_ikj".into(),
+            "1".into(),
+            format!("{naive_ns:.0}"),
+            format!("{:.2}", flops / naive_ns),
+            format!("{naive_allocs:.1}"),
+            "1.00x".into(),
+        ]);
+
+        let mut threads_sweep = vec![1usize];
+        if opts.threads > 1 {
+            threads_sweep.push(opts.threads);
+        }
+        for threads in threads_sweep {
+            let mut scratch = LmmeScratch::new();
+            let mut out = GoomMat::<f64>::zeros(0, 0);
+            let (ns, allocs) = measure(warmup, iters, || {
+                lmme_into(&a, &b, &mut out, &mut scratch, threads);
+            });
+            let speedup = naive_ns / ns;
+            results.push(lmme_row(d, "kernel", threads, ns, flops, allocs, speedup));
+            table.row(&[
+                d.to_string(),
+                "kernel".into(),
+                threads.to_string(),
+                format!("{ns:.0}"),
+                format!("{:.2}", flops / ns),
+                format!("{allocs:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+    println!("\n# LMME: blocked kernel vs seed i-k-j baseline\n");
+    table.print();
+    // Convenience field for the acceptance bar: kernel speedup at the
+    // largest measured shape, single-threaded.
+    let mut speedup_128 = 0.0;
+    for r in &results {
+        let Some(o) = r.as_obj() else { continue };
+        if o.get("impl").and_then(Json::as_str) == Some("kernel")
+            && o.get("threads").and_then(Json::as_usize) == Some(1)
+            && o.get("d").and_then(Json::as_usize) == Some(128)
+        {
+            speedup_128 =
+                o.get("speedup_vs_naive").and_then(Json::as_f64).unwrap_or(0.0);
+        }
+    }
+    let mut doc = doc_header("lmme", opts, results);
+    if let Json::Obj(map) = &mut doc {
+        map.insert("kernel_speedup_128_t1".to_string(), num(speedup_128));
+    }
+    doc
+}
+
+fn lmme_row(
+    d: usize,
+    impl_name: &str,
+    threads: usize,
+    ns: f64,
+    flops: f64,
+    allocs: f64,
+    speedup: f64,
+) -> Json {
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(d as f64)),
+        ("m", num(d as f64)),
+        ("impl", Json::Str(impl_name.to_string())),
+        ("threads", num(threads as f64)),
+        ("ns_per_op", num(ns)),
+        ("gflops", num(flops / ns)),
+        ("allocs_per_op", num(allocs)),
+        ("speedup_vs_naive", num(speedup)),
+    ])
+}
+
+// ------------------------------------------------------------------ scan --
+
+fn bench_scan(opts: &BenchOpts) -> Json {
+    let d = 8usize;
+    let len = if opts.quick { 192 } else { 768 };
+    let chunks = 16usize;
+    let mut rng = rng_from_seed(0x5CA9);
+    let items: Vec<GoomMat<f64>> =
+        (0..len).map(|_| GoomMat::<f64>::randn(d, d, &mut rng)).collect();
+    // The serving combine: S_t = A_t · S_{t-1} ⇒ combine(x, y) = lmme(y, x).
+    let combine =
+        |earlier: &GoomMat<f64>, later: &GoomMat<f64>| crate::goom::lmme(later, earlier);
+    let (warmup, iters) = if opts.quick { (0, 2) } else { (1, 5) };
+    let mut results = Vec::new();
+    let mut table = Table::new(&["impl", "threads", "len", "ns/combine", "total"]);
+
+    let (seq_ns, _) = measure(warmup, iters, || scan_seq(&items, combine));
+    let seq_per_combine = seq_ns / (len - 1) as f64;
+    results.push(scan_row("scan_seq", 1, len, d, seq_per_combine, seq_ns));
+    table.row(&[
+        "scan_seq".into(),
+        "1".into(),
+        len.to_string(),
+        format!("{seq_per_combine:.0}"),
+        timing::fmt_duration(seq_ns * 1e-9),
+    ]);
+
+    let par_work = ScanCost::parallel(len).work.max(1) as f64;
+    let mut threads_sweep = vec![1usize];
+    if opts.threads > 1 {
+        threads_sweep.push(opts.threads);
+    }
+    for threads in threads_sweep {
+        let (ns, _) =
+            measure(warmup, iters, || scan_par_chunked(&items, combine, chunks, threads));
+        results.push(scan_row("scan_par", threads, len, d, ns / par_work, ns));
+        table.row(&[
+            "scan_par".into(),
+            threads.to_string(),
+            len.to_string(),
+            format!("{:.0}", ns / par_work),
+            timing::fmt_duration(ns * 1e-9),
+        ]);
+    }
+    println!("\n# Prefix scan over GOOM matrices (d={d}, chunks={chunks})\n");
+    table.print();
+
+    // Brent-model device times at the measured per-combine cost: what the
+    // same scan costs on a P-lane device (the Fig. 3 scaling argument,
+    // anchored to this host's measured combine).
+    let sec_per_op = seq_per_combine * 1e-9;
+    let modeled: Vec<Json> = [64usize, 1024, 16384]
+        .iter()
+        .map(|&p| {
+            obj(vec![
+                ("lanes", num(p as f64)),
+                (
+                    "modeled_ms",
+                    num(ScanCost::parallel(len).brent_time(p, sec_per_op) * 1e3),
+                ),
+            ])
+        })
+        .collect();
+    let mut doc = doc_header("scan", opts, results);
+    if let Json::Obj(map) = &mut doc {
+        map.insert("sequential_ms".to_string(), num(seq_ns * 1e-6));
+        map.insert("modeled_device".to_string(), Json::Arr(modeled));
+    }
+    doc
+}
+
+fn scan_row(
+    impl_name: &str,
+    threads: usize,
+    len: usize,
+    d: usize,
+    ns_per_combine: f64,
+    total_ns: f64,
+) -> Json {
+    obj(vec![
+        ("impl", Json::Str(impl_name.to_string())),
+        ("threads", num(threads as f64)),
+        ("len", num(len as f64)),
+        ("d", num(d as f64)),
+        ("ns_per_combine", num(ns_per_combine)),
+        ("total_ns", num(total_ns)),
+    ])
+}
+
+// ----------------------------------------------------------------- serve --
+
+fn bench_serve(opts: &BenchOpts) -> Result<Json> {
+    let cfg = ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 64,
+        batch_max: 8,
+        cache_capacity: 256,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg).context("starting in-process goomd")?;
+    let (clients, requests, steps) =
+        if opts.quick { (4usize, 8usize, 100usize) } else { (8, 24, 300) };
+    let mut results = Vec::new();
+    for (label, shared_seed) in [("distinct_keys", None), ("shared_key", Some(7u64))] {
+        let lg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients,
+            requests,
+            d: 8,
+            steps,
+            method: "goomc64".to_string(),
+            shared_seed,
+            threads: 0,
+        };
+        let before = kernel_stats::snapshot();
+        let t0 = Instant::now();
+        let mut metrics = crate::coordinator::Metrics::new();
+        let report = crate::server::loadgen(&lg, &mut metrics)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let k = kernel_stats::snapshot().delta_since(&before);
+        let compute_ms = k.lmme_ns as f64 * 1e-6;
+        results.push(obj(vec![
+            ("scenario", Json::Str(label.to_string())),
+            ("clients", num(clients as f64)),
+            ("requests_total", num(report.total_requests as f64)),
+            ("ok", num(report.ok as f64)),
+            ("errors", num(report.errors as f64)),
+            ("cached", num(report.cached as f64)),
+            ("throughput_rps", num(report.throughput_rps)),
+            ("p50_ms", num(report.p50_ms)),
+            ("p95_ms", num(report.p95_ms)),
+            ("p99_ms", num(report.p99_ms)),
+            ("wall_ms", num(wall_ms)),
+            ("kernel_lmme_ops", num(k.lmme_ops as f64)),
+            ("kernel_compute_ms", num(compute_ms)),
+            ("kernel_gflops", num(k.matmul_gflops())),
+            // Fraction of wall time the kernel was actually multiplying —
+            // the compute-vs-queueing attribution loadgen runs read.
+            ("compute_fraction", num((compute_ms / wall_ms).min(1.0))),
+        ]));
+        println!(
+            "serve[{label}]: {:.1} req/s, p95 {:.2} ms, cached {}, compute {:.1} ms / wall {:.1} ms",
+            report.throughput_rps, report.p95_ms, report.cached, compute_ms, wall_ms
+        );
+        if report.errors > 0 {
+            anyhow::bail!("serve bench saw {} errors", report.errors);
+        }
+    }
+    let counters: BTreeMap<String, Json> = [
+        ("cache_hits", server.counter("cache_hits")),
+        ("batches", server.counter("batches")),
+        ("batched_jobs", server.counter("batched_jobs")),
+        ("inflight_coalesced", server.counter("inflight_coalesced")),
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), num(v as f64)))
+    .collect();
+    server.stop();
+    let mut doc = doc_header("serve", opts, results);
+    if let Json::Obj(map) = &mut doc {
+        map.insert("daemon_counters".to_string(), Json::Obj(counters));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> BenchOpts {
+        BenchOpts { quick: true, threads: 2, out_dir: PathBuf::from(".") }
+    }
+
+    fn rows(doc: &Json) -> &[Json] {
+        doc.get("results").and_then(Json::as_arr).expect("results array")
+    }
+
+    #[test]
+    fn lmme_doc_has_kernel_and_naive_rows_with_required_fields() {
+        let doc = bench_lmme(&quick_opts());
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("lmme"));
+        let rows = rows(&doc);
+        assert!(rows.len() >= 4, "{rows:?}");
+        for row in rows {
+            for field in
+                ["d", "impl", "threads", "ns_per_op", "gflops", "allocs_per_op", "speedup_vs_naive"]
+            {
+                assert!(row.get(field).is_some(), "missing {field} in {row:?}");
+            }
+            assert!(row.get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // The convenience acceptance field exists and is a number.
+        assert!(doc.get("kernel_speedup_128_t1").unwrap().as_f64().is_some());
+        // And the doc round-trips through the JSON writer/parser.
+        let text = json::write(&doc);
+        assert_eq!(json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn scan_doc_measures_seq_and_par() {
+        let doc = bench_scan(&quick_opts());
+        let rows = rows(&doc);
+        assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_seq")));
+        assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_par")));
+        assert!(doc.get("modeled_device").unwrap().as_arr().unwrap().len() == 3);
+        let text = json::write(&doc);
+        assert_eq!(json::parse(&text).unwrap(), doc);
+    }
+}

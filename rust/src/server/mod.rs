@@ -49,7 +49,7 @@ use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -76,6 +76,11 @@ pub struct ServeConfig {
     /// and a poll slot); connections past the cap are refused with an
     /// error line.
     pub max_connections: usize,
+    /// Kernel threads *inside* one job (`--threads`, env `GOOM_THREADS`).
+    /// Defaults to 1: the pool already parallelizes across requests, so
+    /// intra-request fan-out only pays when workers < cores. Results are
+    /// bit-identical at every setting (see `crate::util::par`).
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +95,7 @@ impl Default for ServeConfig {
             max_request_bytes: 1 << 20,
             retry_after_ms: 100,
             max_connections: 256,
+            threads: crate::util::par::default_threads(),
         }
     }
 }
@@ -239,6 +245,10 @@ pub struct LoadgenConfig {
     /// When set, every request uses this seed (all cache hits after the
     /// first); otherwise seeds are distinct per (client, request).
     pub shared_seed: Option<u64>,
+    /// OS threads driving the client connections (`--threads`, env
+    /// `GOOM_THREADS`); 0 = one thread per client (full concurrency).
+    /// Lower values run clients in waves on a bounded thread set.
+    pub threads: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -251,6 +261,7 @@ impl Default for LoadgenConfig {
             steps: 500,
             method: "goomc64".to_string(),
             shared_seed: None,
+            threads: 0,
         }
     }
 }
@@ -275,32 +286,27 @@ pub struct LoadgenReport {
 /// Hammer a live daemon with `clients` concurrent connections and report
 /// throughput + latency percentiles, recording everything into `metrics`.
 pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenReport> {
-    let (tx, rx) = mpsc::channel::<Result<ClientStats>>();
+    let clients = cfg.clients.max(1);
+    // threads == 0 keeps the historical behavior (every client concurrent);
+    // a bound runs the clients in waves on the shared parallel substrate.
+    let driver_threads = if cfg.threads == 0 { clients } else { cfg.threads };
+    let collected: std::sync::Mutex<Vec<Result<ClientStats>>> =
+        std::sync::Mutex::new(Vec::with_capacity(clients));
     let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for client in 0..cfg.clients.max(1) {
-        let tx = tx.clone();
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || {
-            let _ = tx.send(run_client(client as u64, &cfg));
-        }));
-    }
-    drop(tx);
+    crate::util::par::par_for(clients, driver_threads, |client| {
+        let stats = run_client(client as u64, cfg);
+        collected.lock().expect("loadgen results lock").push(stats);
+    });
     let mut latencies: Vec<f64> = Vec::new();
     let mut errors = 0usize;
     let mut cached = 0usize;
     let mut retries = 0usize;
-    for _ in &handles {
-        let stats = rx
-            .recv()
-            .map_err(|_| anyhow!("loadgen client thread vanished"))??;
+    for stats in collected.into_inner().expect("loadgen results lock") {
+        let stats = stats?;
         latencies.extend(stats.latencies);
         errors += stats.errors;
         cached += stats.cached;
         retries += stats.retries;
-    }
-    for h in handles {
-        let _ = h.join();
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
     let total = cfg.clients.max(1) * cfg.requests;
@@ -558,6 +564,7 @@ mod tests {
             steps: 40,
             method: "goomc64".to_string(),
             shared_seed: None,
+            threads: 0,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.total_requests, 24);
@@ -571,6 +578,11 @@ mod tests {
         let cfg = LoadgenConfig { shared_seed: Some(7), ..cfg };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert!(report.cached >= report.ok - cfg.clients, "cached {} of {}", report.cached, report.ok);
+        // Bounded driver threads: clients run in waves, same totals.
+        let cfg = LoadgenConfig { threads: 2, ..cfg };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.ok, 24);
+        assert_eq!(report.errors, 0);
         server.stop();
     }
 }

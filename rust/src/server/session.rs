@@ -26,11 +26,20 @@ use super::ServeConfig;
 use crate::chain::{self, ChainResult, ChainSpec, Method};
 use crate::coordinator::Metrics;
 use crate::dynsys;
-use crate::goom::{lmme_batched, GoomMat};
+use crate::goom::kernel::stats as kernel_stats;
+use crate::goom::{lmme_into, GoomMat, LmmeScratch};
 use crate::lyapunov;
 use crate::util::json::{self, Json};
+use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+thread_local! {
+    /// Per-worker LMME scratch: pool workers are persistent OS threads, so
+    /// each one warms its scales/panels/product buffers once and every
+    /// subsequent request it executes runs the kernel allocation-free.
+    static WORKER_SCRATCH: RefCell<LmmeScratch> = RefCell::new(LmmeScratch::new());
+}
 
 /// State shared by every session and worker: config, cache, in-flight
 /// request registry, metrics.
@@ -336,41 +345,40 @@ fn scan_result_json(d: usize, len: usize, fin: &GoomMat<f64>) -> Json {
     ])
 }
 
-/// Which slot of a [`ScanRun`] the in-flight LMME result lands in.
-enum Pending {
-    None,
-    Cur,
-    Acc,
-}
-
-/// One pending LMME for a scan, as `lmme(a, b)` operands. The left operand
-/// of a within-chunk fold is a *borrowed* input matrix — cloning it per
-/// step would put two heap copies on the compute hot path for nothing —
-/// while merge steps hand over the owned intermediates.
-enum StepPair<'a> {
-    /// `cur = lmme(mats[i], cur)`: (input matrix, running chunk total).
-    Fold(&'a GoomMat<f64>, GoomMat<f64>),
-    /// `acc = lmme(total, acc)`: (finished chunk total, running product).
-    Merge(GoomMat<f64>, GoomMat<f64>),
+/// One LMME a [`ScanRun`] needs next; operands are the run's own state
+/// buffers (plus a borrowed input matrix for folds), so executing an op
+/// never moves or clones a matrix.
+enum StepOp<'a> {
+    /// `cur = lmme(mats[i], cur)`: fold the next input into the chunk total.
+    Fold(&'a GoomMat<f64>),
+    /// `acc = lmme(cur, acc)`: merge the finished chunk total into the
+    /// running product (consumes `cur`).
+    Merge,
 }
 
 /// Final state of the chunked prefix scan as a resumable step machine:
 /// phases 1+2 of `goom::scan_par_chunked` (per-chunk folds, then a
 /// sequential combine of the chunk totals), skipping the O(n) phase-3
-/// fix-up whose outputs the scan op doesn't serve. [`ScanRun::next_pair`]
+/// fix-up whose outputs the scan op doesn't serve. [`ScanRun::next_op`]
 /// yields the next LMME the scan needs, so N same-dimension scans advance
-/// in lockstep through one stacked [`lmme_batched`] pass per step — and a
+/// in lockstep — one shared-scratch kernel pass per scan per round — and a
 /// solo scan is just a batch of one, so batched and solo results are
 /// identical by construction (same combines, same order; the e2e suite
 /// asserts the equivalence over the wire).
+///
+/// Allocation discipline: the run owns three state matrices (`cur`, `acc`,
+/// `spare`) that ping-pong through [`crate::goom::lmme_into`]; after they
+/// grow to `d×d` on the first steps, the whole scan runs allocation-free.
 struct ScanRun<'a> {
     mats: &'a [GoomMat<f64>],
     chunk: usize,
     idx: usize,
     chunk_end: usize,
-    cur: Option<GoomMat<f64>>,
-    acc: Option<GoomMat<f64>>,
-    pending: Pending,
+    cur: GoomMat<f64>,
+    acc: GoomMat<f64>,
+    spare: GoomMat<f64>,
+    has_cur: bool,
+    has_acc: bool,
 }
 
 impl<'a> ScanRun<'a> {
@@ -383,109 +391,135 @@ impl<'a> ScanRun<'a> {
             chunk,
             idx: 0,
             chunk_end: 0,
-            cur: None,
-            acc: None,
-            pending: Pending::None,
+            cur: GoomMat::zeros(0, 0),
+            acc: GoomMat::zeros(0, 0),
+            spare: GoomMat::zeros(0, 0),
+            has_cur: false,
+            has_acc: false,
         }
     }
 
-    /// Advance to the next LMME this scan needs: the returned pair asks the
-    /// driver to compute `lmme(a, b)` and hand the result to [`apply`];
-    /// `None` means the scan is complete. Combine order is exactly the
-    /// sequential chunked fold: `cur = lmme(m_t, cur)` within a chunk, then
-    /// `acc = lmme(chunk_total, acc)` between chunks.
-    fn next_pair(&mut self) -> Option<StepPair<'a>> {
-        // Copy the `'a` slice out so borrows of input matrices outlive
-        // this `&mut self` call (the driver holds them across runs).
-        let mats: &'a [GoomMat<f64>] = self.mats;
+    /// Advance to the next LMME this scan needs: the returned op asks the
+    /// driver to call [`ScanRun::exec`]; `None` means the scan is complete.
+    /// Combine order is exactly the sequential chunked fold:
+    /// `cur = lmme(m_t, cur)` within a chunk, then `acc = lmme(total, acc)`
+    /// between chunks.
+    fn next_op(&mut self) -> Option<StepOp<'a>> {
         loop {
-            if self.cur.is_none() {
-                if self.idx >= mats.len() {
+            if !self.has_cur {
+                if self.idx >= self.mats.len() {
                     return None;
                 }
-                self.chunk_end = (self.idx + self.chunk).min(mats.len());
-                self.cur = Some(mats[self.idx].clone());
+                self.chunk_end = (self.idx + self.chunk).min(self.mats.len());
+                self.cur.copy_from(&self.mats[self.idx]);
+                self.has_cur = true;
                 self.idx += 1;
             }
             if self.idx < self.chunk_end {
-                let a = &mats[self.idx];
+                let a = &self.mats[self.idx];
                 self.idx += 1;
-                let b = self.cur.take().expect("cur set above");
-                self.pending = Pending::Cur;
-                return Some(StepPair::Fold(a, b));
+                return Some(StepOp::Fold(a));
             }
-            let total = self.cur.take().expect("cur set above");
-            match self.acc.take() {
-                None => self.acc = Some(total), // first chunk: nothing to merge
-                Some(acc) => {
-                    self.pending = Pending::Acc;
-                    return Some(StepPair::Merge(total, acc));
-                }
+            if self.has_acc {
+                return Some(StepOp::Merge);
             }
+            // First chunk: its total becomes the running product outright.
+            std::mem::swap(&mut self.acc, &mut self.cur);
+            self.has_acc = true;
+            self.has_cur = false;
         }
     }
 
-    fn apply(&mut self, result: GoomMat<f64>) {
-        match std::mem::replace(&mut self.pending, Pending::None) {
-            Pending::Cur => self.cur = Some(result),
-            Pending::Acc => self.acc = Some(result),
-            Pending::None => unreachable!("apply without a pending LMME"),
+    /// Execute one op through the zero-allocation LMME, recycling the run's
+    /// own buffers. `threads` is the daemon's per-job kernel fan-out
+    /// (results are bit-identical at every value).
+    fn exec(&mut self, op: StepOp<'a>, scratch: &mut LmmeScratch, threads: usize) {
+        match op {
+            StepOp::Fold(a) => {
+                lmme_into(a, &self.cur, &mut self.spare, scratch, threads);
+                std::mem::swap(&mut self.cur, &mut self.spare);
+            }
+            StepOp::Merge => {
+                lmme_into(&self.cur, &self.acc, &mut self.spare, scratch, threads);
+                std::mem::swap(&mut self.acc, &mut self.spare);
+                self.has_cur = false;
+            }
         }
     }
 
     fn into_final(self) -> GoomMat<f64> {
-        self.acc.expect("scan payload validated non-empty")
+        assert!(self.has_acc, "scan payload validated non-empty");
+        self.acc
     }
 }
 
-/// Drive N scans in lockstep: each round gathers one pending LMME pair per
-/// still-active scan and executes them as one stacked [`lmme_batched`]
-/// pass. Scans of different lengths simply drop out of later rounds.
-fn drive_scans(runs: &mut [ScanRun]) {
+/// Drive N scans in lockstep: each round advances every still-active scan
+/// by one LMME through the shared worker scratch. Scans of different
+/// lengths simply drop out of later rounds.
+fn drive_scans(runs: &mut [ScanRun], scratch: &mut LmmeScratch, threads: usize) {
     loop {
-        let mut who: Vec<usize> = Vec::new();
-        let mut steps: Vec<StepPair> = Vec::new();
-        for (i, run) in runs.iter_mut().enumerate() {
-            if let Some(pair) = run.next_pair() {
-                who.push(i);
-                steps.push(pair);
+        let mut any = false;
+        for run in runs.iter_mut() {
+            if let Some(op) = run.next_op() {
+                run.exec(op, scratch, threads);
+                any = true;
             }
         }
-        if who.is_empty() {
+        if !any {
             break;
-        }
-        let pairs: Vec<(&GoomMat<f64>, &GoomMat<f64>)> = steps
-            .iter()
-            .map(|p| match p {
-                StepPair::Fold(a, b) => (*a, b),
-                StepPair::Merge(a, b) => (a, b),
-            })
-            .collect();
-        for (out, &i) in lmme_batched(&pairs).into_iter().zip(&who) {
-            runs[i].apply(out);
         }
     }
 }
 
-fn scan_final(mats: &[GoomMat<f64>], chunks: usize) -> GoomMat<f64> {
+fn scan_final(
+    mats: &[GoomMat<f64>],
+    chunks: usize,
+    scratch: &mut LmmeScratch,
+    threads: usize,
+) -> GoomMat<f64> {
     let mut runs = [ScanRun::new(mats, chunks)];
-    drive_scans(&mut runs);
+    drive_scans(&mut runs, scratch, threads);
     let [run] = runs;
     run.into_final()
 }
 
-/// Run one request to a result document. Serving runs single-threaded per
-/// job (`threads = 1` everywhere): parallelism comes from the worker pool
-/// across requests, not nested `thread::scope` fan-out inside one.
-fn execute_single(req: &Request) -> Result<Json, String> {
+/// Run one request to a result document. Serving defaults to one kernel
+/// thread per job (parallelism comes from the worker pool across requests);
+/// `threads` (the `--threads` knob / `GOOM_THREADS`) opts a deployment into
+/// intra-request kernel fan-out — results are bit-identical either way.
+fn execute_single(req: &Request, threads: usize) -> Result<Json, String> {
     match req {
         Request::Chain(c) => {
-            let res = chain::run_chain(c.method, c.d, c.steps, c.seed, None)
-                .map_err(|e| format!("{e:#}"))?;
+            // GOOM chains route through the batched executor as a batch of
+            // one — byte-identical to a solo run (the PR-1 invariant), and
+            // it picks up the worker's persistent scratch plus `--threads`.
+            let res = match c.method {
+                Method::GoomC64 => WORKER_SCRATCH.with(|sc| {
+                    chain::run_chain_goom_batched_with_scratch::<f32>(
+                        c.d,
+                        &[ChainSpec { steps: c.steps, seed: c.seed }],
+                        &mut sc.borrow_mut(),
+                        threads,
+                    )
+                    .remove(0)
+                }),
+                Method::GoomC128 => WORKER_SCRATCH.with(|sc| {
+                    chain::run_chain_goom_batched_with_scratch::<f64>(
+                        c.d,
+                        &[ChainSpec { steps: c.steps, seed: c.seed }],
+                        &mut sc.borrow_mut(),
+                        threads,
+                    )
+                    .remove(0)
+                }),
+                _ => chain::run_chain(c.method, c.d, c.steps, c.seed, None)
+                    .map_err(|e| format!("{e:#}"))?,
+            };
             Ok(chain_result_json(&res))
         }
         Request::Scan(s) => {
-            let fin = scan_final(&s.mats, s.chunks);
+            let fin = WORKER_SCRATCH
+                .with(|sc| scan_final(&s.mats, s.chunks, &mut sc.borrow_mut(), threads));
             Ok(scan_result_json(s.d, s.mats.len(), &fin))
         }
         Request::Lle(l) => {
@@ -497,7 +531,7 @@ fn execute_single(req: &Request) -> Result<Json, String> {
                 l.burn,
                 l.steps,
                 l.chunks,
-                1,
+                threads,
             );
             Ok(obj(vec![
                 ("system", Json::Str(sys.name().to_string())),
@@ -531,7 +565,7 @@ pub fn execute_batch(inner: &ServerInner, jobs: Vec<Job>) {
         jobs
     };
     for job in jobs {
-        let out = execute_single(&job.request);
+        let out = execute_single(&job.request, inner.cfg.threads);
         finish(inner, job, out);
     }
 }
@@ -559,10 +593,24 @@ fn try_execute_chain_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Jo
             _ => unreachable!("checked above"),
         })
         .collect();
-    let results = match method {
-        Method::GoomC64 => chain::run_chain_goom_batched::<f32>(d, &specs),
-        _ => chain::run_chain_goom_batched::<f64>(d, &specs),
-    };
+    let threads = inner.cfg.threads;
+    let results = WORKER_SCRATCH.with(|sc| {
+        let mut scratch = sc.borrow_mut();
+        match method {
+            Method::GoomC64 => chain::run_chain_goom_batched_with_scratch::<f32>(
+                d,
+                &specs,
+                &mut scratch,
+                threads,
+            ),
+            _ => chain::run_chain_goom_batched_with_scratch::<f64>(
+                d,
+                &specs,
+                &mut scratch,
+                threads,
+            ),
+        }
+    });
     {
         let mut m = inner.metrics.lock().expect("metrics lock");
         m.incr("batches", 1);
@@ -594,7 +642,8 @@ fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job
                 _ => unreachable!("checked above"),
             })
             .collect();
-        drive_scans(&mut runs);
+        WORKER_SCRATCH
+            .with(|sc| drive_scans(&mut runs, &mut sc.borrow_mut(), inner.cfg.threads));
         runs.into_iter().map(ScanRun::into_final).collect()
     };
     {
@@ -643,6 +692,7 @@ fn info_json(inner: &ServerInner) -> Json {
         ("service", Json::Str("goomd".to_string())),
         ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
         ("workers", num(inner.cfg.workers as f64)),
+        ("threads", num(inner.cfg.threads as f64)),
         ("queue_depth", num(inner.cfg.queue_depth as f64)),
         ("batch_max", num(inner.cfg.batch_max as f64)),
         ("cache_capacity", num(inner.cfg.cache_capacity as f64)),
@@ -712,9 +762,27 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
         ("counters", Json::Obj(counters)),
         ("gauges", Json::Obj(gauges)),
         ("timers", Json::Obj(timers)),
+        ("kernel", kernel_json()),
         ("queue_len", num(pool.queue_len() as f64)),
         ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
         ("inflight_keys", num(inner.inflight.len() as f64)),
+    ])
+}
+
+/// Process-global kernel counters, exported so `loadgen` runs can attribute
+/// end-to-end latency to compute (LMME/pack/matmul time) vs queueing: the
+/// difference between wall latency and `lmme_ns_total` deltas is time spent
+/// waiting, framing, or caching rather than multiplying.
+fn kernel_json() -> Json {
+    let k = kernel_stats::snapshot();
+    obj(vec![
+        ("lmme_ops", num(k.lmme_ops as f64)),
+        ("lmme_ns_total", num(k.lmme_ns as f64)),
+        ("lmme_ns_mean", num(k.mean_lmme_ns())),
+        ("matmul_ops", num(k.matmul_ops as f64)),
+        ("pack_ns_total", num(k.pack_ns as f64)),
+        ("matmul_ns_total", num(k.matmul_ns as f64)),
+        ("matmul_gflops", num(k.matmul_gflops())),
     ])
 }
 
@@ -865,11 +933,14 @@ mod tests {
             ((0..5).map(|_| GoomMat::randn(3, 3, &mut rng)).collect(), 2),
             ((0..7).map(|_| GoomMat::randn(3, 3, &mut rng)).collect(), 16),
         ];
-        let solo: Vec<GoomMat<f64>> =
-            payloads.iter().map(|(m, c)| scan_final(m, *c)).collect();
+        let solo: Vec<GoomMat<f64>> = payloads
+            .iter()
+            .map(|(m, c)| scan_final(m, *c, &mut LmmeScratch::new(), 1))
+            .collect();
         let mut runs: Vec<ScanRun> =
             payloads.iter().map(|(m, c)| ScanRun::new(m, *c)).collect();
-        drive_scans(&mut runs);
+        let mut scratch = LmmeScratch::new();
+        drive_scans(&mut runs, &mut scratch, 2);
         for (run, want) in runs.into_iter().zip(&solo) {
             assert_eq!(&run.into_final(), want, "batched scan diverged from solo");
         }

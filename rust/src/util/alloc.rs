@@ -9,16 +9,19 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Wraps the system allocator, tracking live and peak bytes.
+/// Wraps the system allocator, tracking live and peak bytes plus a running
+/// allocation count (the bench harness's allocs/op measurements).
 pub struct CountingAllocator;
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
 
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = System.alloc(layout);
         if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
             let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
             PEAK.fetch_max(live, Ordering::Relaxed);
         }
@@ -33,6 +36,7 @@ unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let p = System.realloc(ptr, layout, new_size);
         if !p.is_null() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
             if new_size >= layout.size() {
                 let live =
                     LIVE.fetch_add(new_size - layout.size(), Ordering::Relaxed) + new_size
@@ -61,6 +65,11 @@ pub fn reset_peak() {
     PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
+/// Allocator round-trips (alloc + realloc calls) since process start.
+pub fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
 /// Measure the peak additional allocation incurred by `f`, in bytes.
 /// Only meaningful when `CountingAllocator` is installed as the global
 /// allocator (the appendix-D memory bench does this).
@@ -70,6 +79,16 @@ pub fn measure_peak<T>(f: impl FnOnce() -> T) -> (usize, T) {
     let out = f();
     let peak = peak_bytes().saturating_sub(base);
     (peak, out)
+}
+
+/// Count the allocator round-trips incurred by `f`. Zero when the counting
+/// allocator is not installed (plain `cargo test`); the `repro` binary
+/// installs it, which is how `repro bench` proves the warmed LMME hot path
+/// allocates nothing.
+pub fn measure_allocs<T>(f: impl FnOnce() -> T) -> (usize, T) {
+    let base = alloc_count();
+    let out = f();
+    (alloc_count().saturating_sub(base), out)
 }
 
 #[cfg(test)]
@@ -86,5 +105,12 @@ mod tests {
         // Not installed => no counting happened.
         let _ = peak; // value is implementation-defined (0 here)
         assert!(live_bytes() == 0 || live_bytes() > 0); // smoke: no panic/overflow
+    }
+
+    #[test]
+    fn alloc_counting_without_installation() {
+        let (n, v) = measure_allocs(|| vec![1u8; 64]);
+        assert_eq!(v.len(), 64);
+        let _ = n; // 0 here (allocator not installed during tests)
     }
 }

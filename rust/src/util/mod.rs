@@ -1,9 +1,11 @@
 //! Dependency-free utility substrates: JSON, CLI parsing, bench timing,
-//! allocation counting, property testing, and CSV output.
+//! allocation counting, scoped parallel-for, property testing, and CSV
+//! output.
 
 pub mod alloc;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod timing;

@@ -1,0 +1,200 @@
+//! Scoped-thread parallel-for: the one parallel substrate the compute
+//! layers share.
+//!
+//! Before this module existed, the scan ([`crate::goom`]), the Lyapunov
+//! batch groups ([`crate::lyapunov`]), and ad-hoc experiment code each
+//! carried their own `std::thread::scope` block with its own striding and
+//! join logic. Those blocks are now all expressed through two primitives:
+//!
+//! * [`par_chunks_mut`] — split a mutable slice into fixed-size chunks and
+//!   process them on `threads` scoped workers. The blocked matmul kernel
+//!   parallelizes over output row-blocks this way; the scan's per-chunk
+//!   folds and fix-ups, and the Lyapunov spectrum's per-t batch, map onto
+//!   it directly.
+//! * [`par_for`] — run `f(0..n)` on `threads` scoped workers (striding),
+//!   for index-parallel work with no output slice (e.g. loadgen clients).
+//!
+//! Determinism contract: both helpers only change *which OS thread* runs a
+//! given index/chunk, never the work done for it, so any caller whose
+//! per-index work is a pure function of the index produces bit-identical
+//! results at every thread count. The kernel and scan rely on this — it is
+//! what lets `--threads` vary freely without breaking the serving layer's
+//! byte-identical batched/solo/cached invariant.
+//!
+//! Thread-count resolution: [`default_threads`] reads `GOOM_THREADS` (the
+//! env default behind every `--threads` flag) and falls back to 1 — served
+//! traffic gets its parallelism from the worker pool across requests, so
+//! nested fan-out inside one request stays opt-in.
+
+/// `GOOM_THREADS` when set to a positive integer, else `None` — for
+/// callers whose fallback is not 1 (loadgen defaults to one thread per
+/// client, bench to a 2-thread sweep).
+pub fn env_threads() -> Option<usize> {
+    std::env::var("GOOM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// Resolve the default worker-thread count: `GOOM_THREADS` if set to a
+/// positive integer, else 1.
+pub fn default_threads() -> usize {
+    env_threads().unwrap_or(1)
+}
+
+/// Process `data` in contiguous `chunk_len`-sized chunks (last one ragged)
+/// on up to `threads` scoped workers. `f(chunk_index, chunk)` receives the
+/// 0-based chunk index and the mutable chunk slice. Chunks are assigned to
+/// workers round-robin (`chunk_index % threads`), and `threads <= 1` (or a
+/// single chunk) runs inline with no thread spawned.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let nchunks = data.len().div_ceil(chunk_len);
+    let threads = threads.max(1).min(nchunks);
+    if threads == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            per_worker[i % threads].push((i, chunk));
+        }
+        for batch in per_worker {
+            scope.spawn(move || {
+                for (i, chunk) in batch {
+                    f(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i)` for every `i in 0..n` on up to `threads` scoped workers
+/// (worker `w` handles `w, w+threads, …`). `threads <= 1` runs inline.
+pub fn par_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    f(i);
+                    i += threads;
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_every_element_once() {
+        for threads in [1usize, 2, 3, 8] {
+            for chunk_len in [1usize, 3, 7, 100] {
+                let mut data = vec![0u32; 37];
+                par_chunks_mut(&mut data, chunk_len, threads, |_, chunk| {
+                    for x in chunk.iter_mut() {
+                        *x += 1;
+                    }
+                });
+                assert!(
+                    data.iter().all(|&x| x == 1),
+                    "threads={threads} chunk_len={chunk_len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_indices_match_positions() {
+        let mut data: Vec<usize> = vec![0; 25];
+        par_chunks_mut(&mut data, 4, 3, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = ci * 4 + j;
+            }
+        });
+        let want: Vec<usize> = (0..25).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        // The determinism contract: per-chunk work that is a pure function
+        // of the chunk index yields the same output at every thread count.
+        let reference: Vec<u64> = {
+            let mut d = vec![0u64; 101];
+            par_chunks_mut(&mut d, 5, 1, |ci, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (ci as u64 + 1) * 1000 + j as u64;
+                }
+            });
+            d
+        };
+        for threads in [2usize, 4, 16] {
+            let mut d = vec![0u64; 101];
+            par_chunks_mut(&mut d, 5, threads, |ci, c| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x = (ci as u64 + 1) * 1000 + j as u64;
+                }
+            });
+            assert_eq!(d, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        for threads in [1usize, 2, 5, 32] {
+            let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+            par_for(50, threads, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut empty, 4, 4, |_, _| panic!("no chunks expected"));
+        par_for(0, 4, |_| panic!("no indices expected"));
+    }
+
+    #[test]
+    fn default_threads_parses_env_or_falls_back() {
+        // The env var may or may not be set in the test environment; the
+        // contract is just "positive integer or 1".
+        assert!(default_threads() >= 1);
+    }
+}
