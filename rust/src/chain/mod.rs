@@ -440,6 +440,21 @@ mod tests {
     }
 
     #[test]
+    fn goom_chain_crosses_the_kc_depth_boundary() {
+        // d > KC exercises the kernel's depth loop inside the chain hot
+        // path — the serving layer's lifted d ≤ 128 cap, end-to-end. Two
+        // steps suffice to cross a state through multiple depth slabs.
+        let d = crate::goom::kernel::KC + 4;
+        let solo = run_chain(Method::GoomC64, d, 2, 21, None).unwrap();
+        assert!(!solo.failed);
+        assert_eq!(solo.steps_completed, 2);
+        // The batched executor agrees exactly at multi-slab depths too.
+        let batched =
+            run_chain_goom_batched::<f32>(d, &[ChainSpec { steps: 2, seed: 21 }]);
+        assert_eq!(batched[0].final_max_logmag, solo.final_max_logmag);
+    }
+
+    #[test]
     fn batched_goom_chains_match_solo_runs_exactly() {
         // Mixed horizons and seeds in one batch: every chain must land on
         // exactly the same state statistics as its solo run — this is the

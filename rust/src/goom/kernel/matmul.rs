@@ -3,31 +3,40 @@
 //!
 //! Structure (BLIS-style, sized for the shapes this repo serves):
 //!
-//! * **Packing.** Both operands are repacked once per multiply into
-//!   panel-major buffers: A into `MR = 4`-row panels laid out k-major
-//!   (`panel[k][r]`), B into `NR = 4`-column panels (`panel[k][c]`). The pack
-//!   step is generic over an element source, which is how LMME fuses its
-//!   `sign · exp(logmag − scale)` transform into packing — each element is
-//!   exponentiated exactly once, straight into the panel, with no separate
-//!   scaled-exponential pass or buffer.
-//! * **Microkernel.** An `MR×NR` register tile accumulates over the full
+//! * **Packing.** Both operands are repacked into **slab-major** panel
+//!   buffers: for each `KC`-deep slab of the shared dimension, A is laid
+//!   out as `MR = 4`-row panels (k-major, `panel[k][r]`) and B as `NR = 4`-
+//!   column panels (`panel[k][c]`). The pack step is generic over an
+//!   element source, which is how LMME fuses its `sign · exp(logmag −
+//!   scale)` transform into packing — each element is exponentiated exactly
+//!   once, straight into the panel. A packed right operand is a first-class
+//!   reusable artifact ([`PackedB`]): callers that multiply by the same B
+//!   repeatedly pack it once and reuse the panels across products.
+//! * **Microkernel.** An `MR×NR` register tile accumulates over one slab's
 //!   depth with `chunks_exact` loops sized for autovectorization. Plain
 //!   IEEE mul+add (no `mul_add`): on targets without guaranteed FMA,
 //!   `f64::mul_add` lowers to a libm call, and avoiding hardware FMA keeps
 //!   results bit-identical across machines as well as across paths.
 //! * **Blocking.** Output rows are processed in `MC`-row blocks — the unit
-//!   of thread parallelism ([`crate::util::par::par_chunks_mut`]). A depth
-//!   (`KC`) loop is deliberately omitted: full-depth panels fit comfortably
-//!   in cache for every shape this repo computes (serving caps `d` at 128;
-//!   a `KC` loop slots into the panel layout if that ever changes).
+//!   of thread parallelism ([`crate::util::par::par_chunks_mut`]) — and the
+//!   shared dimension in `KC`-deep slabs, outermost: each slab's packed B
+//!   panels (`m · KC` doubles) are swept across every row block while
+//!   L2-resident before the next slab is touched, so panels stay cache-hot
+//!   at **any** dimension (this is what lifted the serving layer's old
+//!   `d ≤ 128` cap). C accumulates across slabs *through the output
+//!   buffer*: the partial sum is reloaded into the register tile and each
+//!   slab's terms are added in ascending k, which keeps the summation
+//!   order exactly k-ascending end to end (an f64 memory round-trip is
+//!   exact, so spilling the partial changes no bits).
 //!
 //! Determinism contract: each output element is the pure k-ascending sum
-//! `Σ_k a[i,k]·b[k,j]` regardless of tile shape, block size, or thread
-//! count — the summation order matches the naive triple loop exactly, so
-//! the blocked kernel is *bit-identical* to [`matmul_reference`] (and to
-//! the seed's i-k-j loop on inputs without exact zeros or non-finite
-//! values). This is the property that keeps batched, cached, and solo LMME
-//! byte-identical under the serving layer (PR-1 invariant).
+//! `Σ_k a[i,k]·b[k,j]` regardless of tile shape, block size, slab count, or
+//! thread count — the summation order matches the naive triple loop
+//! exactly, so the blocked kernel is *bit-identical* to
+//! [`matmul_reference`] (and to the seed's i-k-j loop on inputs without
+//! exact zeros or non-finite values). This is the property that keeps
+//! batched, cached, and solo LMME byte-identical under the serving layer
+//! (PR-1 invariant), and it holds with or without a reused [`PackedB`].
 
 use super::stats;
 use crate::util::par;
@@ -42,14 +51,55 @@ pub const MR: usize = 4;
 pub const NR: usize = 4;
 /// Output rows per parallel block (the thread work unit); multiple of `MR`.
 pub const MC: usize = 64;
+/// Depth-slab length: one slab of packed B (`m · KC` doubles, 1 MiB at
+/// m = 1024) stays L2-resident while it is swept across every output row
+/// block. Dimensions ≤ `KC` take a single slab — the exact pre-KC path,
+/// so every shape the old full-depth kernel served is reproduced verbatim.
+pub const KC: usize = 128;
+
+/// A right operand packed once into slab-major `NR`-column panels — the
+/// first-class reusable artifact behind the panel cache. Packing costs one
+/// pass over B (plus the element transform, e.g. LMME's scaled exp);
+/// callers multiplying by the same logical B repeatedly (batched LMME
+/// pairs sharing a right matrix, the scan fix-up's per-chunk prefix) pay
+/// it once and reuse the panels for every product.
+///
+/// Validity is the *caller's* contract: panels describe the source values
+/// at pack time, keyed by whatever identity the caller tracks (pointer +
+/// shape within one borrow region, or a generation counter across
+/// mutations). [`PackedB::matches`] checks shape only.
+#[derive(Debug, Default, Clone)]
+pub struct PackedB {
+    data: Vec<f64>,
+    d: usize,
+    m: usize,
+}
+
+impl PackedB {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical shape `(d, m)` of the packed operand (0×0 when never packed).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.d, self.m)
+    }
+
+    /// True when this artifact holds panels for a `d×m` operand.
+    pub fn matches(&self, d: usize, m: usize) -> bool {
+        self.d == d && self.m == m && self.data.len() == m.div_ceil(NR) * NR * d
+    }
+}
 
 /// Reusable packing buffers. One instance serves any sequence of multiplies;
 /// buffers grow to the largest shape seen and are reused thereafter, so the
-/// steady-state hot path performs zero allocations.
+/// steady-state hot path performs zero allocations. `pb` doubles as the
+/// scratch-local panel cache slot for callers reusing a packed right
+/// operand across consecutive multiplies.
 #[derive(Debug, Default, Clone)]
 pub struct MatmulScratch {
     pa: Vec<f64>,
-    pb: Vec<f64>,
+    pb: PackedB,
 }
 
 impl MatmulScratch {
@@ -65,6 +115,119 @@ pub struct MatmulTiming {
     pub compute_ns: u64,
 }
 
+/// Pack the left operand into slab-major `MR`-row panels: for slab
+/// `[k0, k0+klen)`, panel `p` lives at `npa·MR·k0 + p·MR·klen`, k-major.
+fn pack_a_src<FA>(n: usize, d: usize, fa: FA, out: &mut Vec<f64>)
+where
+    FA: Fn(usize, usize) -> f64,
+{
+    let npa = n.div_ceil(MR);
+    out.resize(npa * MR * d, 0.0);
+    let mut k0 = 0;
+    while k0 < d {
+        let klen = KC.min(d - k0);
+        let base = npa * MR * k0;
+        for p in 0..npa {
+            let panel = &mut out[base + p * MR * klen..base + (p + 1) * MR * klen];
+            let r0 = p * MR;
+            let vr = MR.min(n - r0);
+            for (k, krow) in panel.chunks_exact_mut(MR).enumerate() {
+                for (r, slot) in krow.iter_mut().enumerate() {
+                    *slot = if r < vr { fa(r0 + r, k0 + k) } else { 0.0 };
+                }
+            }
+        }
+        k0 += klen;
+    }
+}
+
+/// Pack a right operand into a [`PackedB`]: slab-major `NR`-column panels,
+/// panel `q` of slab `[k0, k0+klen)` at `npb·NR·k0 + q·NR·klen`, k-major.
+/// `fb(k, c)` indexes the logical `d×m` operand. Storage is reused; a
+/// warmed artifact repacks without allocating.
+pub(crate) fn pack_b_src<FB>(d: usize, m: usize, fb: FB, out: &mut PackedB)
+where
+    FB: Fn(usize, usize) -> f64,
+{
+    let npb = m.div_ceil(NR);
+    out.data.resize(npb * NR * d, 0.0);
+    out.d = d;
+    out.m = m;
+    let mut k0 = 0;
+    while k0 < d {
+        let klen = KC.min(d - k0);
+        let base = npb * NR * k0;
+        for q in 0..npb {
+            let panel = &mut out.data[base + q * NR * klen..base + (q + 1) * NR * klen];
+            let c0 = q * NR;
+            let vc = NR.min(m - c0);
+            for (k, krow) in panel.chunks_exact_mut(NR).enumerate() {
+                for (c, slot) in krow.iter_mut().enumerate() {
+                    *slot = if c < vc { fb(k0 + k, c0 + c) } else { 0.0 };
+                }
+            }
+        }
+        k0 += klen;
+    }
+}
+
+/// The slab-blocked compute loops: KC outermost (each slab's packed B is
+/// swept while cache-hot), `MC`-row blocks in parallel inside each slab.
+/// The first slab stores register tiles outright; later slabs reload the
+/// partial sums and keep adding in ascending k — bit-identical to one
+/// full-depth accumulation.
+fn compute_blocked(
+    n: usize,
+    d: usize,
+    m: usize,
+    pa: &[f64],
+    pb: &PackedB,
+    out: &mut [f64],
+    threads: usize,
+) {
+    let npa = n.div_ceil(MR);
+    let npb = m.div_ceil(NR);
+    let mut k0 = 0;
+    while k0 < d {
+        let klen = KC.min(d - k0);
+        let pa_base = npa * MR * k0;
+        let pb_base = npb * NR * k0;
+        let first = k0 == 0;
+        par::par_chunks_mut(out, MC * m, threads, |blk, out_rows| {
+            let row0 = blk * MC;
+            let rows_here = out_rows.len() / m;
+            for p_local in 0..rows_here.div_ceil(MR) {
+                let p = row0 / MR + p_local;
+                let r0_local = p_local * MR;
+                let vr = MR.min(rows_here - r0_local);
+                let pa_panel =
+                    &pa[pa_base + p * MR * klen..pa_base + (p + 1) * MR * klen];
+                for q in 0..npb {
+                    let c0 = q * NR;
+                    let vc = NR.min(m - c0);
+                    let mut acc = [[0.0f64; NR]; MR];
+                    if !first {
+                        for (r, acc_row) in acc.iter_mut().enumerate().take(vr) {
+                            let off = (r0_local + r) * m + c0;
+                            acc_row[..vc].copy_from_slice(&out_rows[off..off + vc]);
+                        }
+                    }
+                    microkernel(
+                        pa_panel,
+                        &pb.data[pb_base + q * NR * klen..pb_base + (q + 1) * NR * klen],
+                        &mut acc,
+                    );
+                    for (r, acc_row) in acc.iter().enumerate().take(vr) {
+                        let off = (r0_local + r) * m + c0;
+                        out_rows[off..off + vc].copy_from_slice(&acc_row[..vc]);
+                    }
+                }
+            }
+        });
+        k0 += klen;
+    }
+}
+
 /// The packed-panel multiply, generic over element sources so callers fuse
 /// their input transform (LMME's scaled exp) into packing. `fa(r, k)` and
 /// `fb(k, c)` are absolute indices into the logical `n×d` / `d×m` operands.
@@ -72,7 +235,9 @@ pub struct MatmulTiming {
 /// When `reuse_packed_a` is set, the A-pack phase is skipped and
 /// `scratch.pa` is trusted to still hold the panels of the same logical
 /// operand at the same `(n, d)` — the batched-LMME driver uses this to pack
-/// a shared left operand once per batch.
+/// a shared left operand once per batch. (The mirror-image right-operand
+/// reuse goes through [`matmul_src_prepacked`] with an explicit
+/// [`PackedB`].)
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_src<FA, FB>(
     n: usize,
@@ -98,67 +263,120 @@ where
         out.fill(0.0);
         return timing;
     }
-    let npa = n.div_ceil(MR);
-    let npb = m.div_ceil(NR);
-
     let t0 = Instant::now();
     if !reuse_packed_a {
-        scratch.pa.resize(npa * MR * d, 0.0);
-        for p in 0..npa {
-            let panel = &mut scratch.pa[p * MR * d..(p + 1) * MR * d];
-            let r0 = p * MR;
-            let vr = MR.min(n - r0);
-            for (k, krow) in panel.chunks_exact_mut(MR).enumerate() {
-                for (r, slot) in krow.iter_mut().enumerate() {
-                    *slot = if r < vr { fa(r0 + r, k) } else { 0.0 };
-                }
-            }
-        }
+        pack_a_src(n, d, &fa, &mut scratch.pa);
     }
-    scratch.pb.resize(npb * NR * d, 0.0);
-    for q in 0..npb {
-        let panel = &mut scratch.pb[q * NR * d..(q + 1) * NR * d];
-        let c0 = q * NR;
-        let vc = NR.min(m - c0);
-        for (k, krow) in panel.chunks_exact_mut(NR).enumerate() {
-            for (c, slot) in krow.iter_mut().enumerate() {
-                *slot = if c < vc { fb(k, c0 + c) } else { 0.0 };
-            }
-        }
-    }
+    pack_b_src(d, m, &fb, &mut scratch.pb);
     timing.pack_ns = t0.elapsed().as_nanos() as u64;
 
     let t1 = Instant::now();
-    let pa = &scratch.pa;
-    let pb = &scratch.pb;
-    par::par_chunks_mut(out, MC * m, threads, |blk, out_rows| {
-        let row0 = blk * MC;
-        let rows_here = out_rows.len() / m;
-        for p_local in 0..rows_here.div_ceil(MR) {
-            let p = row0 / MR + p_local;
-            let r0_local = p_local * MR;
-            let vr = MR.min(rows_here - r0_local);
-            let pa_panel = &pa[p * MR * d..(p + 1) * MR * d];
-            for q in 0..npb {
-                let c0 = q * NR;
-                let vc = NR.min(m - c0);
-                let mut acc = [[0.0f64; NR]; MR];
-                microkernel(pa_panel, &pb[q * NR * d..(q + 1) * NR * d], &mut acc);
-                for (r, acc_row) in acc.iter().enumerate().take(vr) {
-                    let off = (r0_local + r) * m + c0;
-                    out_rows[off..off + vc].copy_from_slice(&acc_row[..vc]);
-                }
-            }
-        }
-    });
+    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads);
     timing.compute_ns = t1.elapsed().as_nanos() as u64;
     let flops = 2 * (n as u64) * (d as u64) * (m as u64);
     stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
     timing
 }
 
+/// [`matmul_src`] with the right operand supplied pre-packed — the panel
+/// cache's hit path. Skips the B pack (and its element transform) entirely;
+/// results are bit-identical to packing fresh, because the panels hold the
+/// same values and the compute loops are shared. Bumps the kernel's
+/// `pack_b_reused` counter so cache effectiveness is observable.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_src_prepacked<FA>(
+    n: usize,
+    d: usize,
+    m: usize,
+    fa: FA,
+    reuse_packed_a: bool,
+    pb: &PackedB,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming
+where
+    FA: Fn(usize, usize) -> f64,
+{
+    assert_eq!(out.len(), n * m, "matmul output length mismatch");
+    let mut timing = MatmulTiming::default();
+    if n == 0 || m == 0 {
+        return timing;
+    }
+    if d == 0 {
+        out.fill(0.0);
+        return timing;
+    }
+    assert!(
+        pb.matches(d, m),
+        "prepacked B shape mismatch: packed {:?}, need ({d}, {m})",
+        pb.shape()
+    );
+    let t0 = Instant::now();
+    if !reuse_packed_a {
+        pack_a_src(n, d, &fa, &mut scratch.pa);
+    }
+    timing.pack_ns = t0.elapsed().as_nanos() as u64;
+
+    let t1 = Instant::now();
+    compute_blocked(n, d, m, &scratch.pa, pb, out, threads);
+    timing.compute_ns = t1.elapsed().as_nanos() as u64;
+    let flops = 2 * (n as u64) * (d as u64) * (m as u64);
+    stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
+    stats::record_pack_b_reuse();
+    timing
+}
+
+/// [`matmul_src`] reusing the right-operand panels *already in
+/// `scratch.pb`* from the immediately preceding multiply of the same
+/// logical B at the same `(d, m)` — the batched-LMME driver's scratch-local
+/// panel-cache hit path (pointer identity within one batch guarantees
+/// validity). Bit-identical to repacking; counted as a `pack_b_reused` hit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_src_reuse_b<FA>(
+    n: usize,
+    d: usize,
+    m: usize,
+    fa: FA,
+    reuse_packed_a: bool,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming
+where
+    FA: Fn(usize, usize) -> f64,
+{
+    assert_eq!(out.len(), n * m, "matmul output length mismatch");
+    let mut timing = MatmulTiming::default();
+    if n == 0 || m == 0 {
+        return timing;
+    }
+    if d == 0 {
+        out.fill(0.0);
+        return timing;
+    }
+    assert!(
+        scratch.pb.matches(d, m),
+        "reuse_b without matching packed panels: packed {:?}, need ({d}, {m})",
+        scratch.pb.shape()
+    );
+    let t0 = Instant::now();
+    if !reuse_packed_a {
+        pack_a_src(n, d, &fa, &mut scratch.pa);
+    }
+    timing.pack_ns = t0.elapsed().as_nanos() as u64;
+
+    let t1 = Instant::now();
+    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads);
+    timing.compute_ns = t1.elapsed().as_nanos() as u64;
+    let flops = 2 * (n as u64) * (d as u64) * (m as u64);
+    stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
+    stats::record_pack_b_reuse();
+    timing
+}
+
 /// The `MR×NR` register-tile inner loop: `acc[r][c] += Σ_k pa[k][r]·pb[k][c]`
-/// over the panels' full depth, k ascending.
+/// over the panels' slab depth, k ascending.
 #[inline(always)]
 fn microkernel(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
     for (a, b) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
@@ -194,6 +412,38 @@ pub fn matmul_f64(
         |r, k| a[r * d + k],
         |k, c| b[k * m + c],
         false,
+        out,
+        scratch,
+        threads,
+    )
+}
+
+/// Pack a plain row-major `d×m` slice into a reusable [`PackedB`].
+pub fn pack_b_f64(b: &[f64], d: usize, m: usize, out: &mut PackedB) {
+    assert_eq!(b.len(), d * m, "pack rhs length mismatch");
+    pack_b_src(d, m, |k, c| b[k * m + c], out);
+}
+
+/// Blocked multiply against a pre-packed right operand: `out = a · B` where
+/// `B` was packed once by [`pack_b_f64`]. Bit-identical to [`matmul_f64`]
+/// on the same values.
+pub fn matmul_f64_prepacked(
+    a: &[f64],
+    pb: &PackedB,
+    n: usize,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming {
+    let (d, m) = pb.shape();
+    assert_eq!(a.len(), n * d, "matmul lhs length mismatch");
+    matmul_src_prepacked(
+        n,
+        d,
+        m,
+        |r, k| a[r * d + k],
+        false,
+        pb,
         out,
         scratch,
         threads,
@@ -260,7 +510,7 @@ mod tests {
 
     #[test]
     fn blocked_matches_reference_bitwise_across_ragged_shapes() {
-        // Shapes straddling every boundary: register tile (MR=4, NR=8),
+        // Shapes straddling every boundary: register tile (MR=4, NR=4),
         // parallel block (MC=64), empty, scalar, and skinny extremes.
         let shapes: &[(usize, usize, usize)] = &[
             (0, 0, 0),
@@ -289,6 +539,24 @@ mod tests {
             let want = matmul_reference(&a, &b, n, d, m);
             let got = kernel(&a, &b, n, d, m, 1);
             assert_eq!(got, want, "bitwise mismatch at {n}x{d}x{m}");
+        }
+    }
+
+    #[test]
+    fn kc_depth_blocking_is_bitwise_exact_across_slab_boundaries() {
+        // Depths straddling the KC slab boundary: one slab exactly, one
+        // element short, one over, and a ragged multi-slab tail. Skinny
+        // n/m keep the reference loop cheap while every slab path runs.
+        let depths = [KC - 1, KC, KC + 1, 2 * KC + 3];
+        for (case, &d) in depths.iter().enumerate() {
+            let (n, m) = (9, 11);
+            let a = randv(n * d, 500 + case as u64);
+            let b = randv(d * m, 600 + case as u64);
+            let want = matmul_reference(&a, &b, n, d, m);
+            for threads in [1usize, 2, 7] {
+                let got = kernel(&a, &b, n, d, m, threads);
+                assert_eq!(got, want, "d={d} threads={threads}");
+            }
         }
     }
 
@@ -352,6 +620,32 @@ mod tests {
             1,
         );
         assert_eq!(out2, matmul_reference(&a, &b2, n, d, 6));
+    }
+
+    #[test]
+    fn prepacked_b_hit_is_byte_identical_to_fresh_pack() {
+        // The panel cache's core contract: a multiply against a reused
+        // PackedB produces exactly the bytes a fresh per-product pack
+        // would — across shapes that straddle NR/KC boundaries, thread
+        // counts, and several left operands per packed artifact.
+        for &(n, d, m) in &[(5usize, 7usize, 3usize), (12, 64, 9), (6, KC + 5, 10)] {
+            let b = randv(d * m, 900 + d as u64);
+            let mut pb = PackedB::new();
+            pack_b_f64(&b, d, m, &mut pb);
+            assert!(pb.matches(d, m));
+            assert!(!pb.matches(d + 1, m));
+            let before = stats::snapshot();
+            for ai in 0..3u64 {
+                let a = randv(n * d, 1000 + ai);
+                let fresh = kernel(&a, &b, n, d, m, 1 + ai as usize);
+                let mut scratch = MatmulScratch::new();
+                let mut hit = vec![f64::NAN; n * m];
+                matmul_f64_prepacked(&a, &pb, n, &mut hit, &mut scratch, 1 + ai as usize);
+                assert_eq!(hit, fresh, "{n}x{d}x{m} ai={ai}");
+            }
+            let delta = stats::snapshot().delta_since(&before);
+            assert!(delta.pack_b_reused >= 3, "reuse counter: {delta:?}");
+        }
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! * the bench harness (`repro bench`), which also keeps the seed's i-k-j
 //!   loop ([`matmul_naive`]) as its recorded "before" baseline.
 //!
+//! The kernel blocks the shared dimension in [`KC`]-deep slabs (panels stay
+//! L2-resident at any dimension — this lifted the serving layer's old
+//! `d ≤ 128` cap) and exposes packed right operands as reusable
+//! [`PackedB`] artifacts so repeated-B workloads pack once per operand
+//! instead of once per product. Both preserve the bit-identity contract.
+//!
 //! See `docs/PERFORMANCE.md` for blocking parameters, the determinism
 //! contract, and how to read the exported counters.
 
@@ -23,7 +29,8 @@ pub mod stats;
 
 mod matmul;
 
-pub(crate) use matmul::matmul_src;
+pub(crate) use matmul::{matmul_src, matmul_src_prepacked, matmul_src_reuse_b, pack_b_src};
 pub use matmul::{
-    matmul_f64, matmul_naive, matmul_reference, MatmulScratch, MatmulTiming, MC, MR, NR,
+    matmul_f64, matmul_f64_prepacked, matmul_naive, matmul_reference, pack_b_f64,
+    MatmulScratch, MatmulTiming, PackedB, KC, MC, MR, NR,
 };

@@ -17,6 +17,7 @@ static MATMUL_NS: AtomicU64 = AtomicU64::new(0);
 static MATMUL_FLOPS: AtomicU64 = AtomicU64::new(0);
 static LMME_OPS: AtomicU64 = AtomicU64::new(0);
 static LMME_NS: AtomicU64 = AtomicU64::new(0);
+static PACK_B_REUSED: AtomicU64 = AtomicU64::new(0);
 
 /// One multiply through the blocked kernel (called by the kernel itself).
 pub(crate) fn record_matmul(pack_ns: u64, compute_ns: u64, flops: u64) {
@@ -30,6 +31,11 @@ pub(crate) fn record_matmul(pack_ns: u64, compute_ns: u64, flops: u64) {
 pub(crate) fn record_lmme(total_ns: u64) {
     LMME_OPS.fetch_add(1, Ordering::Relaxed);
     LMME_NS.fetch_add(total_ns, Ordering::Relaxed);
+}
+
+/// One multiply that reused a pre-packed right operand (panel-cache hit).
+pub(crate) fn record_pack_b_reuse() {
+    PACK_B_REUSED.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Monotonic snapshot of the kernel counters.
@@ -47,6 +53,8 @@ pub struct KernelStats {
     pub lmme_ops: u64,
     /// Nanoseconds spent in LMME end-to-end.
     pub lmme_ns: u64,
+    /// Multiplies that reused a pre-packed right operand (panel-cache hits).
+    pub pack_b_reused: u64,
 }
 
 impl KernelStats {
@@ -77,6 +85,7 @@ impl KernelStats {
             matmul_flops: self.matmul_flops.wrapping_sub(earlier.matmul_flops),
             lmme_ops: self.lmme_ops.wrapping_sub(earlier.lmme_ops),
             lmme_ns: self.lmme_ns.wrapping_sub(earlier.lmme_ns),
+            pack_b_reused: self.pack_b_reused.wrapping_sub(earlier.pack_b_reused),
         }
     }
 }
@@ -90,6 +99,7 @@ pub fn snapshot() -> KernelStats {
         matmul_flops: MATMUL_FLOPS.load(Ordering::Relaxed),
         lmme_ops: LMME_OPS.load(Ordering::Relaxed),
         lmme_ns: LMME_NS.load(Ordering::Relaxed),
+        pack_b_reused: PACK_B_REUSED.load(Ordering::Relaxed),
     }
 }
 
@@ -102,11 +112,13 @@ mod tests {
         let before = snapshot();
         record_matmul(100, 400, 2_000_000);
         record_lmme(700);
+        record_pack_b_reuse();
         let d = snapshot().delta_since(&before);
         // Other tests run concurrently and also bump the globals, so assert
         // lower bounds, and exact arithmetic on a private delta.
         assert!(d.matmul_ops >= 1 && d.pack_ns >= 100 && d.matmul_ns >= 400);
         assert!(d.lmme_ops >= 1 && d.lmme_ns >= 700);
+        assert!(d.pack_b_reused >= 1);
         let solo = KernelStats {
             matmul_ops: 1,
             pack_ns: 100,
@@ -114,6 +126,7 @@ mod tests {
             matmul_flops: 2_000_000,
             lmme_ops: 1,
             lmme_ns: 700,
+            pack_b_reused: 1,
         };
         assert!((solo.matmul_gflops() - 5000.0).abs() < 1e-9);
         assert!((solo.mean_lmme_ns() - 700.0).abs() < 1e-9);

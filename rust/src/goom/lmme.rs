@@ -25,7 +25,7 @@
 //! blocking, one summation order (see `docs/PERFORMANCE.md`).
 
 use super::float::GoomFloat;
-use super::kernel::{self, stats, MatmulScratch};
+use super::kernel::{self, stats, MatmulScratch, PackedB};
 use super::scalar::Goom;
 use super::tensor::GoomMat;
 use std::time::Instant;
@@ -127,19 +127,24 @@ pub fn lmme_into<T: GoomFloat>(
     scratch: &mut LmmeScratch,
     threads: usize,
 ) {
-    lmme_into_reusing(a, b, out, scratch, false, threads)
+    lmme_into_reusing(a, b, out, scratch, false, false, threads)
 }
 
-/// [`lmme_into`] with an optional packed-left-operand fast path: when
-/// `reuse_a` is set, `scratch` must still hold the scales and packed panels
-/// of the same left matrix `a` from the immediately preceding call (the
-/// batched driver guarantees this via pointer identity within one batch).
+/// [`lmme_into`] with optional packed-operand fast paths: when `reuse_a`
+/// (resp. `reuse_b`) is set, `scratch` must still hold the scales and
+/// packed panels of the same left (resp. right) matrix from the
+/// immediately preceding call — the batched driver guarantees this via
+/// pointer identity within one batch. Reuse skips the scale pass and the
+/// panel pack (including its exp transform) for that operand; the compute
+/// loops and summation order are shared, so all four flag combinations are
+/// byte-identical.
 fn lmme_into_reusing<T: GoomFloat>(
     a: &GoomMat<T>,
     b: &GoomMat<T>,
     out: &mut GoomMat<T>,
     scratch: &mut LmmeScratch,
     reuse_a: bool,
+    reuse_b: bool,
     threads: usize,
 ) {
     assert_eq!(
@@ -152,7 +157,9 @@ fn lmme_into_reusing<T: GoomFloat>(
     if !reuse_a {
         row_scales_into(a, &mut scratch.ascale);
     }
-    col_scales_into(b, &mut scratch.bscale);
+    if !reuse_b {
+        col_scales_into(b, &mut scratch.bscale);
+    }
 
     // One blocked real matmul with the scaled exponentials computed inside
     // panel packing (entries in [-1, 1]; each element exp'd exactly once).
@@ -161,7 +168,141 @@ fn lmme_into_reusing<T: GoomFloat>(
     }
     let ascale = &scratch.ascale;
     let bscale = &scratch.bscale;
-    kernel::matmul_src(
+    let fa = |r: usize, k: usize| {
+        let idx = r * d + k;
+        a.sign[idx].to_f64() * (a.logmag[idx].to_f64() - ascale[r]).exp()
+    };
+    if reuse_b {
+        kernel::matmul_src_reuse_b(
+            n,
+            d,
+            m,
+            fa,
+            reuse_a,
+            &mut scratch.prod,
+            &mut scratch.mm,
+            threads,
+        );
+    } else {
+        kernel::matmul_src(
+            n,
+            d,
+            m,
+            fa,
+            |k, c| {
+                let idx = k * m + c;
+                b.sign[idx].to_f64() * (b.logmag[idx].to_f64() - bscale[c]).exp()
+            },
+            reuse_a,
+            &mut scratch.prod,
+            &mut scratch.mm,
+            threads,
+        );
+    }
+
+    finish_into(n, m, &scratch.prod, &scratch.ascale, &scratch.bscale, out);
+    stats::record_lmme(t0.elapsed().as_nanos() as u64);
+}
+
+/// Shared output epilogue: log + undo scaling from the real product into
+/// the caller's matrix. The single copy that keeps every LMME path —
+/// fresh, operand-reusing, and packed-rhs — byte-identical by construction
+/// (they differ only in where the scales came from, never in how the
+/// product is mapped back to log space).
+fn finish_into<T: GoomFloat>(
+    n: usize,
+    m: usize,
+    prod: &[f64],
+    ascale: &[f64],
+    bscale: &[f64],
+    out: &mut GoomMat<T>,
+) {
+    out.resize_for_overwrite(n, m);
+    for i in 0..n {
+        for k in 0..m {
+            let idx = i * m + k;
+            let p = prod[idx];
+            if p == 0.0 {
+                out.logmag[idx] = T::NEG_INFINITY;
+                out.sign[idx] = T::ONE;
+            } else {
+                out.logmag[idx] = T::from_f64(p.abs().ln() + ascale[i] + bscale[k]);
+                out.sign[idx] = if p < 0.0 { -T::ONE } else { T::ONE };
+            }
+        }
+    }
+}
+
+/// A right operand packed once for repeated LMMEs — the panel cache's
+/// public artifact: the per-column scaling constants plus the kernel's
+/// packed panels of `sign · exp(logmag − scale)`. Pack with
+/// [`lmme_pack_rhs`], multiply with [`lmme_packed_into`]; results are
+/// byte-identical to [`lmme_into`] on the same operands. Buffers are
+/// reused across repacks, so a warmed artifact repacks allocation-free.
+///
+/// Validity is the caller's contract (mirror of the kernel's
+/// [`PackedB`]): the artifact describes `b`'s values at pack time, so
+/// repack after mutating the source matrix.
+#[derive(Debug, Default)]
+pub struct LmmePackedRhs {
+    rows: usize,
+    cols: usize,
+    bscale: Vec<f64>,
+    panels: PackedB,
+}
+
+impl LmmePackedRhs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical shape `(rows, cols)` of the packed operand.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+/// Pack `b` (scales + panels) into a reusable [`LmmePackedRhs`].
+pub fn lmme_pack_rhs<T: GoomFloat>(b: &GoomMat<T>, rhs: &mut LmmePackedRhs) {
+    let (d, m) = (b.rows, b.cols);
+    rhs.rows = d;
+    rhs.cols = m;
+    col_scales_into(b, &mut rhs.bscale);
+    let bscale = &rhs.bscale;
+    kernel::pack_b_src(
+        d,
+        m,
+        |k, c| {
+            let idx = k * m + c;
+            b.sign[idx].to_f64() * (b.logmag[idx].to_f64() - bscale[c]).exp()
+        },
+        &mut rhs.panels,
+    );
+}
+
+/// LMME against a pre-packed right operand (panel-cache hit path): skips
+/// the per-product column-scale pass and panel pack entirely. Byte-
+/// identical to [`lmme_into`] with the matrix `rhs` was packed from.
+pub fn lmme_packed_into<T: GoomFloat>(
+    a: &GoomMat<T>,
+    rhs: &LmmePackedRhs,
+    out: &mut GoomMat<T>,
+    scratch: &mut LmmeScratch,
+    threads: usize,
+) {
+    assert_eq!(
+        a.cols, rhs.rows,
+        "lmme shape mismatch: {}x{} · packed {}x{}",
+        a.rows, a.cols, rhs.rows, rhs.cols
+    );
+    let t0 = Instant::now();
+    let (n, d, m) = (a.rows, a.cols, rhs.cols);
+    row_scales_into(a, &mut scratch.ascale);
+    if scratch.prod.len() != n * m {
+        scratch.prod.resize(n * m, 0.0);
+    }
+    let ascale = &scratch.ascale;
+    kernel::matmul_src_prepacked(
         n,
         d,
         m,
@@ -169,32 +310,13 @@ fn lmme_into_reusing<T: GoomFloat>(
             let idx = r * d + k;
             a.sign[idx].to_f64() * (a.logmag[idx].to_f64() - ascale[r]).exp()
         },
-        |k, c| {
-            let idx = k * m + c;
-            b.sign[idx].to_f64() * (b.logmag[idx].to_f64() - bscale[c]).exp()
-        },
-        reuse_a,
+        false,
+        &rhs.panels,
         &mut scratch.prod,
         &mut scratch.mm,
         threads,
     );
-
-    // log + undo scaling, into the caller's buffers.
-    out.resize_for_overwrite(n, m);
-    for i in 0..n {
-        for k in 0..m {
-            let idx = i * m + k;
-            let p = scratch.prod[idx];
-            if p == 0.0 {
-                out.logmag[idx] = T::NEG_INFINITY;
-                out.sign[idx] = T::ONE;
-            } else {
-                out.logmag[idx] =
-                    T::from_f64(p.abs().ln() + scratch.ascale[i] + scratch.bscale[k]);
-                out.sign[idx] = if p < 0.0 { -T::ONE } else { T::ONE };
-            }
-        }
-    }
+    finish_into(n, m, &scratch.prod, &scratch.ascale, &rhs.bscale, out);
     stats::record_lmme(t0.elapsed().as_nanos() as u64);
 }
 
@@ -216,8 +338,10 @@ pub fn lmme_batched<T: GoomFloat>(
 
 /// [`lmme_batched`] with caller-owned scratch (the pool workers thread a
 /// persistent per-worker scratch through here). Consecutive pairs sharing
-/// the *same* left matrix (pointer identity) skip re-scaling and re-packing
-/// that operand — a shared operand is packed once per run of the batch.
+/// the *same* left or right matrix (pointer identity) skip re-scaling and
+/// re-packing that operand — a shared operand is packed once per run of
+/// the batch (the right-operand case is a scratch-local panel-cache hit,
+/// counted in the kernel's `pack_b_reused`).
 pub fn lmme_batched_with_scratch<T: GoomFloat>(
     pairs: &[(&GoomMat<T>, &GoomMat<T>)],
     scratch: &mut LmmeScratch,
@@ -234,11 +358,14 @@ pub fn lmme_batched_with_scratch<T: GoomFloat>(
     }
     let mut outs = Vec::with_capacity(pairs.len());
     let mut prev_a: Option<&GoomMat<T>> = None;
+    let mut prev_b: Option<&GoomMat<T>> = None;
     for &(a, b) in pairs {
-        let reuse = prev_a.is_some_and(|p| std::ptr::eq(p, a));
+        let reuse_a = prev_a.is_some_and(|p| std::ptr::eq(p, a));
+        let reuse_b = prev_b.is_some_and(|p| std::ptr::eq(p, b));
         let mut out = GoomMat::<T>::zeros(0, 0);
-        lmme_into_reusing(a, b, &mut out, scratch, reuse, 1);
+        lmme_into_reusing(a, b, &mut out, scratch, reuse_a, reuse_b, 1);
         prev_a = Some(a);
+        prev_b = Some(b);
         outs.push(out);
     }
     outs
@@ -281,6 +408,44 @@ pub fn lmme_exact<T: GoomFloat>(a: &GoomMat<T>, b: &GoomMat<T>) -> GoomMat<T> {
         }
     }
     out
+}
+
+/// The chunked parallel prefix scan of the matrix recurrence
+/// `S_t = A_t · S_{t-1}` — i.e. `scan_par_chunked` specialized to the
+/// combine `(earlier, later) ↦ lmme(later, earlier)` — with the panel
+/// cache engaged where the generic scan cannot reach it: the phase-3
+/// fix-up multiplies **every** element of a chunk by that chunk's one
+/// exclusive prefix, so the prefix is packed once per chunk
+/// ([`lmme_pack_rhs`]) instead of once per product.
+///
+/// Same three phases, same combine order, same per-combine arithmetic as
+/// the generic [`crate::goom::scan_par_chunked`] with an LMME closure —
+/// the results are bit-identical (asserted by tests), only the redundant
+/// per-product scale/pack passes are gone.
+pub fn scan_lmme_par_chunked<T: GoomFloat>(
+    items: &[GoomMat<T>],
+    chunks_wanted: usize,
+    threads: usize,
+) -> Vec<GoomMat<T>> {
+    let combine = |earlier: &GoomMat<T>, later: &GoomMat<T>| lmme(later, earlier);
+    super::scan::scan_par_chunked_with_fixup(
+        items,
+        combine,
+        chunks_wanted,
+        threads,
+        |prefix, outputs| {
+            // One pack of the chunk's prefix serves every product in it.
+            let mut rhs = LmmePackedRhs::new();
+            lmme_pack_rhs(prefix, &mut rhs);
+            let mut scratch = LmmeScratch::new();
+            let mut out = GoomMat::<T>::zeros(0, 0);
+            for x in outputs.iter_mut() {
+                // out = combine(prefix, x) = lmme(x, prefix).
+                lmme_packed_into(x, &rhs, &mut out, &mut scratch, 1);
+                std::mem::swap(x, &mut out);
+            }
+        },
+    )
 }
 
 /// LMME on a GOOM matrix-vector pair (convenience for the LLE pipeline).
@@ -494,6 +659,110 @@ mod tests {
                 let want = if mx == f64::NEG_INFINITY { 0.0 } else { mx };
                 assert_eq!(got[k], want, "col {k} of {r}x{c}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_rhs_hit_is_byte_identical_to_fresh_lmme() {
+        // The panel cache's end-to-end contract at the LMME layer: packing
+        // B once and multiplying many left operands against it produces
+        // exactly the bytes per-product packing would, across shapes that
+        // straddle NR and KC boundaries and across thread counts.
+        let mut rng = rng_from_seed(52);
+        for &(n, d, m) in
+            &[(6usize, 9usize, 5usize), (12, 64, 7), (5, kernel::KC + 3, 6)]
+        {
+            let b = GoomMat::<f64>::randn(d, m, &mut rng);
+            let mut rhs = LmmePackedRhs::new();
+            lmme_pack_rhs(&b, &mut rhs);
+            assert_eq!(rhs.shape(), (d, m));
+            let mut scratch = LmmeScratch::new();
+            let mut hit = GoomMat::<f64>::zeros(0, 0);
+            for t in 0..3 {
+                let a = GoomMat::<f64>::randn(n, d, &mut rng);
+                lmme_packed_into(&a, &rhs, &mut hit, &mut scratch, 1 + t);
+                let fresh = lmme(&a, &b);
+                assert_eq!(hit.logmag, fresh.logmag, "{n}x{d}x{m} t={t}");
+                assert_eq!(hit.sign, fresh.sign, "{n}x{d}x{m} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_shared_right_operand_reuses_panels_and_stays_byte_identical() {
+        // Pairs 0..3 share the literal same right matrix: the batched
+        // driver must take the scratch-local panel-cache hit path (visible
+        // through the kernel's pack_b_reused counter) without changing a
+        // byte vs fully independent solo calls.
+        let mut rng = rng_from_seed(53);
+        let shared = GoomMat::<f64>::randn(9, 9, &mut rng);
+        let lefts: Vec<GoomMat<f64>> =
+            (0..3).map(|_| GoomMat::randn(9, 9, &mut rng)).collect();
+        let pairs: Vec<(&GoomMat<f64>, &GoomMat<f64>)> =
+            lefts.iter().map(|a| (a, &shared)).collect();
+        let before = stats::snapshot();
+        let mut scratch = LmmeScratch::new();
+        let batched = lmme_batched_with_scratch(&pairs, &mut scratch);
+        let delta = stats::snapshot().delta_since(&before);
+        assert!(delta.pack_b_reused >= 2, "expected B-panel reuse: {delta:?}");
+        for (a, got) in lefts.iter().zip(&batched) {
+            let solo = lmme(a, &shared);
+            assert_eq!(solo.logmag, got.logmag);
+            assert_eq!(solo.sign, got.sign);
+        }
+    }
+
+    #[test]
+    fn lmme_across_the_kc_slab_boundary_matches_exact() {
+        // d > KC exercises the depth loop end-to-end through LMME; the
+        // exact signed-LSE path is the correctness oracle.
+        let mut rng = rng_from_seed(54);
+        let d = kernel::KC + 2;
+        let a = GoomMat::<f64>::randn(4, d, &mut rng);
+        let b = GoomMat::<f64>::randn(d, 3, &mut rng);
+        let c1 = lmme(&a, &b);
+        let c2 = lmme_exact(&a, &b);
+        assert_goommat_close(&c1, &c2, 1e-8, 1e-9);
+        // And threads do not change a bit at multi-slab depths either.
+        let mut scratch = LmmeScratch::new();
+        let mut solo = GoomMat::<f64>::zeros(0, 0);
+        lmme_into(&a, &b, &mut solo, &mut scratch, 1);
+        for threads in [2usize, 7] {
+            let mut par = GoomMat::<f64>::zeros(0, 0);
+            lmme_into(&a, &b, &mut par, &mut scratch, threads);
+            assert_eq!(par.logmag, solo.logmag, "threads={threads}");
+            assert_eq!(par.sign, solo.sign, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn specialized_lmme_scan_is_bit_identical_to_the_generic_scan() {
+        let mut rng = rng_from_seed(55);
+        let items: Vec<GoomMat<f64>> =
+            (0..29).map(|_| GoomMat::randn(4, 4, &mut rng)).collect();
+        let combine =
+            |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
+        for chunks in [1usize, 3, 5, 29] {
+            for threads in [1usize, 2, 7] {
+                let generic =
+                    crate::goom::scan_par_chunked(&items, combine, chunks, threads);
+                let packed = scan_lmme_par_chunked(&items, chunks, threads);
+                assert_eq!(generic.len(), packed.len());
+                for (t, (g, p)) in generic.iter().zip(&packed).enumerate() {
+                    assert_eq!(g.logmag, p.logmag, "chunks={chunks} threads={threads} t={t}");
+                    assert_eq!(g.sign, p.sign, "chunks={chunks} threads={threads} t={t}");
+                }
+            }
+        }
+        // Mixed shapes (the LLE scan's d×1 head): a d×1 u0 followed by d×d
+        // transitions, exactly how lle_parallel builds its items.
+        let mut items = vec![GoomMat::<f64>::randn(4, 1, &mut rng)];
+        items.extend((0..17).map(|_| GoomMat::<f64>::randn(4, 4, &mut rng)));
+        let generic = crate::goom::scan_par_chunked(&items, combine, 4, 2);
+        let packed = scan_lmme_par_chunked(&items, 4, 2);
+        for (g, p) in generic.iter().zip(&packed) {
+            assert_eq!(g.logmag, p.logmag);
+            assert_eq!(g.sign, p.sign);
         }
     }
 

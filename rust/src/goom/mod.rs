@@ -24,8 +24,9 @@ mod tensor;
 
 pub use float::GoomFloat;
 pub use lmme::{
-    lmme, lmme_batched, lmme_batched_with_scratch, lmme_exact, lmme_into, lmme_vec,
-    lmme_with_scratch, LmmeScratch,
+    lmme, lmme_batched, lmme_batched_with_scratch, lmme_exact, lmme_into, lmme_pack_rhs,
+    lmme_packed_into, lmme_vec, lmme_with_scratch, scan_lmme_par_chunked, LmmePackedRhs,
+    LmmeScratch,
 };
 pub use reset::{
     reset_combine, reset_scan_par, reset_scan_par_chunked, reset_scan_seq, ResetElem, ResetPair,

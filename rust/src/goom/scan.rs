@@ -70,6 +70,33 @@ where
     T: Clone + Send + Sync,
     F: Fn(&T, &T) -> T + Sync,
 {
+    let fixup = |prefix: &T, outputs: &mut [T]| {
+        for x in outputs.iter_mut() {
+            // out = combine(prefix, local): prefix is earlier.
+            *x = combine(prefix, x);
+        }
+    };
+    scan_par_chunked_with_fixup(items, &combine, chunks_wanted, threads, fixup)
+}
+
+/// The chunked scan with the phase-3 fix-up pluggable: `fixup(prefix,
+/// chunk_outputs)` must be observably equivalent to applying
+/// `combine(prefix, ·)` to every element — specialized callers use the
+/// hook to hoist per-chunk work out of the per-element loop (the LMME scan
+/// packs the prefix's panels once per chunk, `goom::scan_lmme_par_chunked`)
+/// while this single copy owns the chunking and prefix arithmetic.
+pub(crate) fn scan_par_chunked_with_fixup<T, F, X>(
+    items: &[T],
+    combine: F,
+    chunks_wanted: usize,
+    threads: usize,
+    fixup: X,
+) -> Vec<T>
+where
+    T: Clone + Send + Sync,
+    F: Fn(&T, &T) -> T + Sync,
+    X: Fn(&T, &mut [T]) + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -101,14 +128,11 @@ where
             Some(a) => combine(a, total),
         });
     }
-    // Phase 3 — parallel fix-up: combine each chunk's exclusive prefix into
+    // Phase 3 — parallel fix-up: fold each chunk's exclusive prefix into
     // its outputs.
     crate::util::par::par_chunks_mut(&mut chunks, 1, threads, |c, slot| {
         if let Some(p) = &prefixes[c] {
-            for x in slot[0].iter_mut() {
-                // out = combine(prefix, local): prefix is earlier.
-                *x = combine(p, x);
-            }
+            fixup(p, &mut slot[0]);
         }
     });
     chunks.concat()

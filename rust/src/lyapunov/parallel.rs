@@ -18,7 +18,7 @@
 
 use crate::dynsys::DynamicalSystem;
 use crate::goom::{
-    lmme, reset_scan_par_chunked, scan_par_chunked, GoomMat, ResetPair,
+    reset_scan_par_chunked, scan_lmme_par_chunked, GoomMat, ResetPair,
 };
 use crate::linalg::{qr_householder, Mat};
 
@@ -167,12 +167,13 @@ pub fn lle_parallel(jacs: &[Mat], dt: f64, chunks: usize, threads: usize) -> f64
         u_mat[(i, 0)] = v;
     }
     // Scan elements: [u0', J'_1, ..., J'_T]; combine = LMME(later, earlier).
+    // The LMME-specialized scan packs each chunk's phase-3 prefix once (the
+    // panel cache) — bit-identical to the generic scan_par_chunked with an
+    // LMME combine, which the goom tests assert.
     let mut items: Vec<GoomMat<f64>> = Vec::with_capacity(jacs.len() + 1);
     items.push(GoomMat::from_mat(&u_mat));
     items.extend(jacs.iter().map(GoomMat::from_mat));
-    let combine =
-        |earlier: &GoomMat<f64>, later: &GoomMat<f64>| lmme(later, earlier);
-    let scanned = scan_par_chunked(&items, &combine, chunks, threads);
+    let scanned = scan_lmme_par_chunked(&items, chunks, threads);
     let s_final = scanned.last().unwrap();
     // log‖s_T‖ = 0.5·LSE(2·logmag) — computed entirely in log space
     // (paper eq. 24's (1/2)·LSE(2·PSCAN(...)) term).

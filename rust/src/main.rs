@@ -229,9 +229,11 @@ fn req(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro loadgen [--addr --clients --requests --d --steps --method
+/// `repro loadgen [--addr --clients --requests --d --dims --steps --method
 /// --seed --min-cached]`: drive a live daemon and report throughput +
-/// latency percentiles through the standard metrics summary.
+/// latency percentiles through the standard metrics summary. `--dims`
+/// (comma-separated) spreads requests across mixed dimensions — the
+/// route-smoke job uses it to exercise dimensions above the old 128 cap.
 fn loadgen(args: &Args) -> Result<()> {
     let defaults = LoadgenConfig::default();
     let shared_seed = args.get_parsed::<u64>("seed")?;
@@ -241,6 +243,7 @@ fn loadgen(args: &Args) -> Result<()> {
         requests: args.get_usize("requests", defaults.requests)?,
         d: args.get_usize("d", defaults.d)?,
         steps: args.get_usize("steps", defaults.steps)?,
+        dims: args.get_usize_list("dims", &[])?,
         method: args.get_or("method", &defaults.method).to_string(),
         shared_seed,
         threads: args.get_usize(
@@ -248,13 +251,21 @@ fn loadgen(args: &Args) -> Result<()> {
             goomrs::util::par::env_threads().unwrap_or(defaults.threads),
         )?,
     };
+    let dims_desc = if cfg.dims.is_empty() {
+        format!("d={}", cfg.d)
+    } else {
+        format!(
+            "dims={}",
+            cfg.dims.iter().map(usize::to_string).collect::<Vec<_>>().join(",")
+        )
+    };
     println!(
-        "loadgen: {} clients x {} requests → {} (chain {} d={} steps={}{})",
+        "loadgen: {} clients x {} requests → {} (chain {} {} steps={}{})",
         cfg.clients,
         cfg.requests,
         cfg.addr,
         cfg.method,
-        cfg.d,
+        dims_desc,
         cfg.steps,
         cfg.shared_seed.map_or(String::new(), |s| format!(" seed={s}")),
     );
@@ -286,10 +297,14 @@ fn loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro bench [--quick --threads=N --out-dir=DIR]`: run the LMME / scan /
-/// serving microbenches and write `BENCH_lmme.json`, `BENCH_scan.json`,
-/// `BENCH_serve.json` — the recorded perf trajectory every future PR is
-/// held accountable to (`--quick` is the CI smoke variant).
+/// `repro bench [--quick --threads=N --out-dir=DIR --compare=OLD_DIR
+/// --compare-threshold=0.15]`: run the LMME / scan / serving microbenches
+/// and write `BENCH_lmme.json`, `BENCH_scan.json`, `BENCH_serve.json` —
+/// the recorded perf trajectory every future PR is held accountable to
+/// (`--quick` is the CI smoke variant). With `--compare`, the fresh
+/// results are matched row-by-row against a previous run's artifacts and
+/// the process exits non-zero when any gated row regressed past the
+/// threshold (the CI trend gate; verdict in `BENCH_compare.{json,md}`).
 fn bench(args: &Args) -> Result<()> {
     let opts = perf::BenchOpts {
         quick: args.flag("quick"),
@@ -297,7 +312,23 @@ fn bench(args: &Args) -> Result<()> {
             .get_usize("threads", goomrs::util::par::env_threads().unwrap_or(2))?,
         out_dir: std::path::PathBuf::from(args.get_or("out-dir", ".")),
     };
-    perf::run_all(&opts)
+    perf::run_all(&opts)?;
+    if let Some(old_dir) = args.get("compare") {
+        let threshold =
+            args.get_f64("compare-threshold", perf::compare::DEFAULT_THRESHOLD)?;
+        let regressed = perf::compare::run_compare(
+            std::path::Path::new(old_dir),
+            &opts.out_dir,
+            threshold,
+        )?;
+        if regressed {
+            anyhow::bail!(
+                "bench trend gate: regression beyond {:.0}% vs {old_dir} (see BENCH_compare.md)",
+                threshold * 100.0
+            );
+        }
+    }
+    Ok(())
 }
 
 fn run_one(name: &str, args: &Args) -> Result<()> {
@@ -323,10 +354,13 @@ USAGE:
   repro <name> [--key=val ...]      shorthand for `run`
   repro config <name>               show resolved config
   repro all                         run every experiment at default scale
-  repro bench [--quick --threads=N --out-dir=DIR]
+  repro bench [--quick --threads=N --out-dir=DIR --compare=OLD_DIR
+               --compare-threshold=0.15]
                                     run the LMME/scan/serving microbenches and
                                     write BENCH_lmme.json / BENCH_scan.json /
-                                    BENCH_serve.json (see docs/PERFORMANCE.md)
+                                    BENCH_serve.json; --compare gates ns/op
+                                    against a previous run's artifacts
+                                    (see docs/PERFORMANCE.md)
   repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
                --batch-max=16 --cache=1024 --max-request-bytes=1048576
                --max-connections=256]
@@ -338,8 +372,8 @@ USAGE:
   repro req [--addr=127.0.0.1:7077] '<json-request>'
                                     send one request line, print the response
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
-                 --method=goomc64 --d=8 --steps=500 --seed=N --min-cached=N
-                 --threads=N]
+                 --method=goomc64 --d=8 --dims=8,64,256 --steps=500
+                 --seed=N --min-cached=N --threads=N]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency
 

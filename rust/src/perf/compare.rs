@@ -1,0 +1,360 @@
+//! Bench trend gate: compare a fresh `BENCH_*.json` run against a previous
+//! run's artifacts and fail when ns/op regresses past a threshold.
+//!
+//! `repro bench --compare=OLD_DIR [--compare-threshold=0.15]` runs the
+//! suites as usual, then matches rows between the old and new documents by
+//! a stable identity key (shape + implementation + thread count) and flags
+//! any matched row whose time grew by more than the threshold. The verdict
+//! is written next to the fresh results as `BENCH_compare.json` (machine-
+//! readable) and `BENCH_compare.md` (a table CI appends to the job
+//! summary), and the process exits non-zero on regression so the
+//! `bench-smoke` job fails loudly.
+//!
+//! Ground rules, tuned for a noisy shared CI runner:
+//!
+//! * Only `BENCH_lmme.json` and `BENCH_scan.json` are gated. The serving
+//!   bench multiplexes sockets, worker pools, and a load generator — its
+//!   run-to-run variance swamps a 15% bar, so it stays recorded but
+//!   ungated.
+//! * Under-sampled rows never gate: anything with fewer than
+//!   [`MIN_GATING_ITERS`] measured iterations (the single-pass `*_sweep`
+//!   rows, the quick bench's 2-iteration d ≥ 256 rows) is matched and
+//!   reported info-only — one or two samples on a shared runner is noise,
+//!   not a measurement.
+//! * Rows present on only one side are ignored — schema growth must not
+//!   break the gate, or nobody could ever add a benchmark.
+//! * The comparison is only meaningful on the same runner class; the CI
+//!   job keys its baseline cache by OS/runner for exactly that reason.
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Default regression threshold: 15% slower on a matched row fails.
+pub const DEFAULT_THRESHOLD: f64 = 0.15;
+
+/// Rows measured with fewer iterations than this are reported info-only
+/// (rows without an `iters` field — older baselines — are assumed gated).
+pub const MIN_GATING_ITERS: usize = 3;
+
+/// One matched row's old-vs-new timing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowDelta {
+    /// Which suite the row came from (`lmme` / `scan`).
+    pub bench: String,
+    /// Stable row identity, e.g. `d=128 impl=kernel threads=1`.
+    pub key: String,
+    pub old_ns: f64,
+    pub new_ns: f64,
+    /// `new_ns / old_ns` (> 1 means slower).
+    pub ratio: f64,
+    /// True when the row both gates and exceeded the threshold.
+    pub regressed: bool,
+    /// False for rows that are reported but never fail the job.
+    pub gates: bool,
+}
+
+/// Identity key + measured nanoseconds for one result row, or `None` for
+/// rows that carry no comparable timing.
+fn row_key_ns(bench: &str, row: &Json) -> Option<(String, f64, bool)> {
+    let get_usize = |k: &str| row.get(k).and_then(Json::as_usize);
+    let impl_name = row.get("impl").and_then(Json::as_str)?.to_string();
+    let iters = get_usize("iters").unwrap_or(MIN_GATING_ITERS);
+    let gates = !impl_name.ends_with("_sweep") && iters >= MIN_GATING_ITERS;
+    match bench {
+        "lmme" => {
+            let key = format!(
+                "d={} impl={} threads={}",
+                get_usize("d")?,
+                impl_name,
+                get_usize("threads")?
+            );
+            let ns = row.get("ns_per_op").and_then(Json::as_f64)?;
+            Some((key, ns, gates))
+        }
+        "scan" => {
+            let key = format!(
+                "impl={} threads={} len={} d={}",
+                impl_name,
+                get_usize("threads")?,
+                get_usize("len")?,
+                get_usize("d")?
+            );
+            let ns = row.get("total_ns").and_then(Json::as_f64)?;
+            Some((key, ns, gates))
+        }
+        _ => None,
+    }
+}
+
+/// Match rows between two bench documents of the same suite and compute
+/// their deltas. Rows on only one side are skipped.
+pub fn compare_docs(bench: &str, old: &Json, new: &Json, threshold: f64) -> Vec<RowDelta> {
+    let rows = |doc: &Json| -> BTreeMap<String, (f64, bool)> {
+        doc.get("results")
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|r| row_key_ns(bench, r))
+                    .map(|(k, ns, gates)| (k, (ns, gates)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let old_rows = rows(old);
+    let new_rows = rows(new);
+    let mut deltas = Vec::new();
+    for (key, &(old_ns, _)) in &old_rows {
+        let Some(&(new_ns, gates)) = new_rows.get(key) else { continue };
+        if old_ns <= 0.0 || new_ns <= 0.0 {
+            continue;
+        }
+        let ratio = new_ns / old_ns;
+        deltas.push(RowDelta {
+            bench: bench.to_string(),
+            key: key.clone(),
+            old_ns,
+            new_ns,
+            ratio,
+            regressed: gates && ratio > 1.0 + threshold,
+            gates,
+        });
+    }
+    deltas
+}
+
+/// True when any gating row regressed.
+pub fn any_regression(deltas: &[RowDelta]) -> bool {
+    deltas.iter().any(|d| d.regressed)
+}
+
+/// Machine-readable verdict document (`BENCH_compare.json`).
+pub fn verdict_doc(deltas: &[RowDelta], threshold: f64) -> Json {
+    let rows: Vec<Json> = deltas
+        .iter()
+        .map(|d| {
+            Json::Obj(
+                [
+                    ("bench".to_string(), Json::Str(d.bench.clone())),
+                    ("key".to_string(), Json::Str(d.key.clone())),
+                    ("old_ns".to_string(), Json::Num(d.old_ns)),
+                    ("new_ns".to_string(), Json::Num(d.new_ns)),
+                    ("ratio".to_string(), Json::Num(d.ratio)),
+                    ("regressed".to_string(), Json::Bool(d.regressed)),
+                    ("gates".to_string(), Json::Bool(d.gates)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    Json::Obj(
+        [
+            ("bench".to_string(), Json::Str("compare".to_string())),
+            ("threshold".to_string(), Json::Num(threshold)),
+            ("matched_rows".to_string(), Json::Num(deltas.len() as f64)),
+            (
+                "regressions".to_string(),
+                Json::Num(deltas.iter().filter(|d| d.regressed).count() as f64),
+            ),
+            ("rows".to_string(), Json::Arr(rows)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Markdown verdict table (`BENCH_compare.md`, appended to the CI job
+/// summary). Regressions first, then the largest movements either way.
+pub fn verdict_markdown(deltas: &[RowDelta], threshold: f64) -> String {
+    let regressions = deltas.iter().filter(|d| d.regressed).count();
+    let mut out = String::new();
+    out.push_str("## Bench trend gate\n\n");
+    if deltas.is_empty() {
+        out.push_str(
+            "No comparable rows (first run on this runner class?). Gate passes vacuously.\n",
+        );
+        return out;
+    }
+    out.push_str(&format!(
+        "{} matched rows, threshold +{:.0}%: **{}**\n\n",
+        deltas.len(),
+        threshold * 100.0,
+        if regressions == 0 {
+            "PASS".to_string()
+        } else {
+            format!("FAIL ({regressions} regressed)")
+        }
+    ));
+    out.push_str("| bench | row | old ns | new ns | Δ | verdict |\n");
+    out.push_str("|---|---|---:|---:|---:|---|\n");
+    let mut sorted: Vec<&RowDelta> = deltas.iter().collect();
+    sorted.sort_by(|a, b| {
+        b.regressed
+            .cmp(&a.regressed)
+            .then(b.ratio.partial_cmp(&a.ratio).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    for d in sorted {
+        let verdict = if d.regressed {
+            "REGRESSED"
+        } else if !d.gates {
+            "info only"
+        } else {
+            "ok"
+        };
+        out.push_str(&format!(
+            "| {} | {} | {:.0} | {:.0} | {:+.1}% | {} |\n",
+            d.bench,
+            d.key,
+            d.old_ns,
+            d.new_ns,
+            (d.ratio - 1.0) * 100.0,
+            verdict
+        ));
+    }
+    out
+}
+
+/// Compare the gated suites between `old_dir` and `new_dir`, write the
+/// verdict files into `new_dir`, print a summary, and return whether any
+/// gating row regressed. Missing old files skip their suite (first run).
+pub fn run_compare(old_dir: &Path, new_dir: &Path, threshold: f64) -> Result<bool> {
+    let mut deltas = Vec::new();
+    for suite in ["lmme", "scan"] {
+        let name = format!("BENCH_{suite}.json");
+        let old_path = old_dir.join(&name);
+        if !old_path.exists() {
+            println!("compare: no previous {name} in {old_dir:?}; skipping suite");
+            continue;
+        }
+        let old_text = std::fs::read_to_string(&old_path)
+            .with_context(|| format!("reading {old_path:?}"))?;
+        let old = json::parse(old_text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing {old_path:?}: {e}"))?;
+        let new_path = new_dir.join(&name);
+        let new_text = std::fs::read_to_string(&new_path)
+            .with_context(|| format!("reading {new_path:?}"))?;
+        let new = json::parse(new_text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing {new_path:?}: {e}"))?;
+        deltas.extend(compare_docs(suite, &old, &new, threshold));
+    }
+    let doc = verdict_doc(&deltas, threshold);
+    let md = verdict_markdown(&deltas, threshold);
+    std::fs::write(new_dir.join("BENCH_compare.json"), json::write(&doc) + "\n")
+        .context("writing BENCH_compare.json")?;
+    std::fs::write(new_dir.join("BENCH_compare.md"), &md)
+        .context("writing BENCH_compare.md")?;
+    print!("\n{md}");
+    Ok(any_regression(&deltas))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(bench: &str, rows: Vec<Vec<(&str, Json)>>) -> Json {
+        let rows: Vec<Json> = rows
+            .into_iter()
+            .map(|pairs| {
+                Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("bench".to_string(), Json::Str(bench.to_string())),
+                ("results".to_string(), Json::Arr(rows)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    fn lmme_row(d: usize, impl_name: &str, threads: usize, ns: f64) -> Vec<(&'static str, Json)> {
+        vec![
+            ("d", Json::Num(d as f64)),
+            ("impl", Json::Str(impl_name.to_string())),
+            ("threads", Json::Num(threads as f64)),
+            ("ns_per_op", Json::Num(ns)),
+        ]
+    }
+
+    #[test]
+    fn flags_regressions_past_the_threshold_only() {
+        let old = doc(
+            "lmme",
+            vec![
+                lmme_row(32, "kernel", 1, 1000.0),
+                lmme_row(128, "kernel", 1, 10000.0),
+                lmme_row(128, "kernel_kc_sweep", 1, 5000.0),
+            ],
+        );
+        let new = doc(
+            "lmme",
+            vec![
+                lmme_row(32, "kernel", 1, 1100.0),          // +10%: ok
+                lmme_row(128, "kernel", 1, 13000.0),        // +30%: regressed
+                lmme_row(128, "kernel_kc_sweep", 1, 9000.0), // sweep: info only
+                lmme_row(256, "kernel", 1, 1.0),            // new row: ignored
+            ],
+        );
+        let deltas = compare_docs("lmme", &old, &new, 0.15);
+        assert_eq!(deltas.len(), 3);
+        let by_key = |k: &str| deltas.iter().find(|d| d.key.contains(k)).unwrap();
+        assert!(!by_key("d=32").regressed);
+        assert!(by_key("d=128 impl=kernel ").regressed);
+        let sweep = by_key("kc_sweep");
+        assert!(!sweep.regressed && !sweep.gates, "{sweep:?}");
+        assert!(any_regression(&deltas));
+        // An under-sampled row (iters < MIN_GATING_ITERS) is info-only even
+        // when it moved a lot.
+        let low_iters = |ns: f64| {
+            let mut row = lmme_row(64, "kernel", 1, ns);
+            row.push(("iters", Json::Num(2.0)));
+            row
+        };
+        let deltas = compare_docs(
+            "lmme",
+            &doc("lmme", vec![low_iters(1000.0)]),
+            &doc("lmme", vec![low_iters(2000.0)]),
+            0.15,
+        );
+        assert_eq!(deltas.len(), 1);
+        assert!(!deltas[0].gates && !deltas[0].regressed, "{:?}", deltas[0]);
+        assert!(!any_regression(&deltas));
+        // Verdict renders both formats without panicking and round-trips.
+        let vd = verdict_doc(&deltas, 0.15);
+        assert_eq!(crate::util::json::parse(&crate::util::json::write(&vd)).unwrap(), vd);
+        let md = verdict_markdown(&deltas, 0.15);
+        assert!(md.contains("FAIL (1 regressed)"), "{md}");
+        assert!(md.contains("REGRESSED"), "{md}");
+    }
+
+    #[test]
+    fn improvements_and_missing_rows_pass() {
+        let old = doc("scan", vec![vec![
+            ("impl", Json::Str("scan_seq".to_string())),
+            ("threads", Json::Num(1.0)),
+            ("len", Json::Num(768.0)),
+            ("d", Json::Num(8.0)),
+            ("total_ns", Json::Num(5_000_000.0)),
+        ]]);
+        let new = doc("scan", vec![vec![
+            ("impl", Json::Str("scan_seq".to_string())),
+            ("threads", Json::Num(1.0)),
+            ("len", Json::Num(768.0)),
+            ("d", Json::Num(8.0)),
+            ("total_ns", Json::Num(3_000_000.0)),
+        ]]);
+        let deltas = compare_docs("scan", &old, &new, 0.15);
+        assert_eq!(deltas.len(), 1);
+        assert!(!any_regression(&deltas));
+        assert!(deltas[0].ratio < 1.0);
+        // Disjoint docs match nothing — and pass (schema growth tolerated).
+        let deltas = compare_docs("scan", &old, &doc("scan", vec![]), 0.15);
+        assert!(deltas.is_empty());
+        assert!(!any_regression(&deltas));
+        let md = verdict_markdown(&deltas, 0.15);
+        assert!(md.contains("vacuously"), "{md}");
+    }
+}

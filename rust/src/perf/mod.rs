@@ -20,8 +20,14 @@
 //! measured fact, not an aspiration. `--quick` shrinks shapes/iterations
 //! for the CI smoke job (`bench-smoke`); the schema is identical.
 
+pub mod compare;
+
+use crate::chain::{self, ChainSpec};
 use crate::goom::kernel::{self, stats as kernel_stats};
-use crate::goom::{lmme_into, scan_par_chunked, scan_seq, GoomMat, LmmeScratch, ScanCost};
+use crate::goom::{
+    lmme, lmme_into, lmme_pack_rhs, lmme_packed_into, scan_par_chunked, scan_seq, GoomMat,
+    LmmePackedRhs, LmmeScratch, ScanCost,
+};
 use crate::rng::rng_from_seed;
 use crate::server::{LoadgenConfig, ServeConfig, Server};
 use crate::util::json::{self, Json};
@@ -190,7 +196,10 @@ fn lmme_naive(a: &GoomMat<f64>, b: &GoomMat<f64>, s: &mut NaiveScratch) -> GoomM
 }
 
 fn bench_lmme(opts: &BenchOpts) -> Json {
-    let dims: &[usize] = if opts.quick { &[32, 128] } else { &[32, 64, 128] };
+    // 256+ crosses the kernel's KC slab boundary; 512 is the acceptance
+    // dimension that was impossible under the old serving cap.
+    let dims: &[usize] =
+        if opts.quick { &[32, 128, 256] } else { &[32, 64, 128, 256, 512] };
     let mut results = Vec::new();
     let mut table =
         Table::new(&["d", "impl", "threads", "ns/op", "GFLOP/s", "allocs/op", "speedup"]);
@@ -200,7 +209,9 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
         let b = GoomMat::<f64>::randn(d, d, &mut rng);
         let flops = 2.0 * (d as f64).powi(3);
         let (warmup, iters) = match (opts.quick, d) {
+            (true, x) if x >= 256 => (1, 2),
             (true, _) => (1, 3),
+            (false, x) if x >= 256 => (1, 3),
             (false, x) if x >= 128 => (2, 10),
             (false, _) => (3, 30),
         };
@@ -209,7 +220,7 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
             NaiveScratch { ea: Vec::new(), eb: Vec::new(), prod: Vec::new() };
         let (naive_ns, naive_allocs) =
             measure(warmup, iters, || lmme_naive(&a, &b, &mut naive_scratch));
-        results.push(lmme_row(d, "naive_ikj", 1, naive_ns, flops, naive_allocs, 1.0));
+        results.push(lmme_row(d, "naive_ikj", 1, iters, naive_ns, flops, naive_allocs, 1.0));
         table.row(&[
             d.to_string(),
             "naive_ikj".into(),
@@ -231,7 +242,7 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
                 lmme_into(&a, &b, &mut out, &mut scratch, threads);
             });
             let speedup = naive_ns / ns;
-            results.push(lmme_row(d, "kernel", threads, ns, flops, allocs, speedup));
+            results.push(lmme_row(d, "kernel", threads, iters, ns, flops, allocs, speedup));
             table.row(&[
                 d.to_string(),
                 "kernel".into(),
@@ -242,33 +253,158 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
                 format!("{speedup:.2}x"),
             ]);
         }
+
+        // Panel-cache hit path: the right operand packed once up front,
+        // every measured product reusing it (vs the kernel rows above,
+        // which re-scale and re-pack B per product).
+        let mut rhs = LmmePackedRhs::new();
+        lmme_pack_rhs(&b, &mut rhs);
+        let mut scratch = LmmeScratch::new();
+        let mut out = GoomMat::<f64>::zeros(0, 0);
+        let (ns, allocs) = measure(warmup, iters, || {
+            lmme_packed_into(&a, &rhs, &mut out, &mut scratch, 1);
+        });
+        let speedup = naive_ns / ns;
+        results.push(lmme_row(d, "kernel_packed_rhs", 1, iters, ns, flops, allocs, speedup));
+        table.row(&[
+            d.to_string(),
+            "kernel_packed_rhs".into(),
+            "1".into(),
+            format!("{ns:.0}"),
+            format!("{:.2}", flops / ns),
+            format!("{allocs:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    // KC sweep: one pass per large dimension (info-only rows — single
+    // iterations never gate the trend comparator) proving the depth loop
+    // sustains throughput as packed B outgrows L2.
+    if !opts.quick {
+        for d in [256usize, 512, 1024] {
+            let mut rng = rng_from_seed(0x5CAB + d as u64);
+            let a = GoomMat::<f64>::randn(d, d, &mut rng);
+            let b = GoomMat::<f64>::randn(d, d, &mut rng);
+            let flops = 2.0 * (d as f64).powi(3);
+            let mut scratch = LmmeScratch::new();
+            let mut out = GoomMat::<f64>::zeros(0, 0);
+            let (ns, allocs) = measure(0, 1, || {
+                lmme_into(&a, &b, &mut out, &mut scratch, opts.threads.max(1));
+            });
+            let sweep_threads = opts.threads.max(1);
+            results.push(lmme_row(d, "kernel_kc_sweep", sweep_threads, 1, ns, flops, allocs, 0.0));
+            table.row(&[
+                d.to_string(),
+                "kernel_kc_sweep".into(),
+                opts.threads.max(1).to_string(),
+                format!("{ns:.0}"),
+                format!("{:.2}", flops / ns),
+                format!("{allocs:.1}"),
+                "-".into(),
+            ]);
+        }
     }
     println!("\n# LMME: blocked kernel vs seed i-k-j baseline\n");
     table.print();
     // Convenience field for the acceptance bar: kernel speedup at the
     // largest measured shape, single-threaded.
-    let mut speedup_128 = 0.0;
-    for r in &results {
-        let Some(o) = r.as_obj() else { continue };
-        if o.get("impl").and_then(Json::as_str) == Some("kernel")
-            && o.get("threads").and_then(Json::as_usize) == Some(1)
-            && o.get("d").and_then(Json::as_usize) == Some(128)
-        {
-            speedup_128 =
-                o.get("speedup_vs_naive").and_then(Json::as_f64).unwrap_or(0.0);
-        }
-    }
+    let row_ns = |impl_name: &str, d: usize, threads: usize| -> f64 {
+        results
+            .iter()
+            .filter_map(Json::as_obj)
+            .find(|o| {
+                o.get("impl").and_then(Json::as_str) == Some(impl_name)
+                    && o.get("threads").and_then(Json::as_usize) == Some(threads)
+                    && o.get("d").and_then(Json::as_usize) == Some(d)
+            })
+            .and_then(|o| o.get("ns_per_op").and_then(Json::as_f64))
+            .unwrap_or(0.0)
+    };
+    let naive_128 = row_ns("naive_ikj", 128, 1);
+    let kernel_128 = row_ns("kernel", 128, 1);
+    let packed_128 = row_ns("kernel_packed_rhs", 128, 1);
+    let speedup_128 = if kernel_128 > 0.0 { naive_128 / kernel_128 } else { 0.0 };
+    let panel_speedup_128 =
+        if packed_128 > 0.0 { kernel_128 / packed_128 } else { 0.0 };
+
+    // KC bitwise acceptance: the largest swept dimension (512 full / 256
+    // quick) through the KC-blocked kernel vs the seed's naive loop —
+    // required to be *bitwise* equal, not just close.
+    let kc_d = *dims.last().expect("non-empty dims");
+    let kc_ok = {
+        let mut rng = rng_from_seed(0xB17 + kc_d as u64);
+        let a = GoomMat::<f64>::randn(kc_d, kc_d, &mut rng);
+        let b = GoomMat::<f64>::randn(kc_d, kc_d, &mut rng);
+        let blocked = lmme(&a, &b);
+        let mut naive_scratch =
+            NaiveScratch { ea: Vec::new(), eb: Vec::new(), prod: Vec::new() };
+        let naive = lmme_naive(&a, &b, &mut naive_scratch);
+        blocked.logmag == naive.logmag && blocked.sign == naive.sign
+    };
+    println!(
+        "kc bitwise check (d={kc_d}): {}",
+        if kc_ok { "EXACT" } else { "MISMATCH" }
+    );
+
+    // Chain path, pooled vs per-call-spawn substrate on identical work:
+    // the PR-3 baseline spawned+joined OS threads for every parallel
+    // region; the persistent pool dispatches into parked workers.
+    let (chain_pooled_ns, chain_scoped_ns) = bench_chain_substrates(opts);
+    let chain_speedup =
+        if chain_pooled_ns > 0.0 { chain_scoped_ns / chain_pooled_ns } else { 0.0 };
+    println!(
+        "chain d=128 ({} threads): pooled {} vs per-call-spawn {} ({chain_speedup:.2}x)",
+        opts.threads.max(2),
+        timing::fmt_duration(chain_pooled_ns * 1e-9),
+        timing::fmt_duration(chain_scoped_ns * 1e-9),
+    );
+
     let mut doc = doc_header("lmme", opts, results);
     if let Json::Obj(map) = &mut doc {
         map.insert("kernel_speedup_128_t1".to_string(), num(speedup_128));
+        map.insert("panel_cache_speedup_128".to_string(), num(panel_speedup_128));
+        map.insert("kc_bitwise_d".to_string(), num(kc_d as f64));
+        map.insert("kc_bitwise_ok".to_string(), Json::Bool(kc_ok));
+        map.insert("chain_pooled_ns_128".to_string(), num(chain_pooled_ns));
+        map.insert("chain_scoped_ns_128".to_string(), num(chain_scoped_ns));
+        map.insert("chain_speedup_pooled_128".to_string(), num(chain_speedup));
     }
     doc
 }
 
+/// Advance the same 128×128 GOOM chain on the persistent pool and on the
+/// retained scoped-spawn baseline ([`par::with_scoped_baseline`]): same
+/// seeds, same scratch discipline, same kernel — only the parallel-region
+/// dispatch differs, so the ratio isolates what per-call spawning cost the
+/// PR-3 chain hot path. Returns `(pooled_ns, scoped_ns)` per chain run.
+fn bench_chain_substrates(opts: &BenchOpts) -> (f64, f64) {
+    let d = 128usize;
+    let steps = if opts.quick { 4 } else { 24 };
+    let threads = opts.threads.max(2); // substrate differences need fan-out
+    let specs = [ChainSpec { steps, seed: 0xC0FFEE }];
+    let iters = if opts.quick { 2 } else { 5 };
+    let mut scratch = LmmeScratch::new();
+    let (pooled_ns, _) = measure(1, iters, || {
+        chain::run_chain_goom_batched_with_scratch::<f32>(d, &specs, &mut scratch, threads)
+    });
+    let (scoped_ns, _) = measure(1, iters, || {
+        par::with_scoped_baseline(|| {
+            chain::run_chain_goom_batched_with_scratch::<f32>(
+                d,
+                &specs,
+                &mut scratch,
+                threads,
+            )
+        })
+    });
+    (pooled_ns, scoped_ns)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn lmme_row(
     d: usize,
     impl_name: &str,
     threads: usize,
+    iters: usize,
     ns: f64,
     flops: f64,
     allocs: f64,
@@ -280,6 +416,7 @@ fn lmme_row(
         ("m", num(d as f64)),
         ("impl", Json::Str(impl_name.to_string())),
         ("threads", num(threads as f64)),
+        ("iters", num(iters as f64)),
         ("ns_per_op", num(ns)),
         ("gflops", num(flops / ns)),
         ("allocs_per_op", num(allocs)),
@@ -299,13 +436,16 @@ fn bench_scan(opts: &BenchOpts) -> Json {
     // The serving combine: S_t = A_t · S_{t-1} ⇒ combine(x, y) = lmme(y, x).
     let combine =
         |earlier: &GoomMat<f64>, later: &GoomMat<f64>| crate::goom::lmme(later, earlier);
-    let (warmup, iters) = if opts.quick { (0, 2) } else { (1, 5) };
+    // ≥3 iterations even in quick mode: rows sampled fewer times than that
+    // are excluded from the CI trend gate (see `perf::compare`), and the
+    // scan rows are exactly what the gate should watch.
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (1, 5) };
     let mut results = Vec::new();
     let mut table = Table::new(&["impl", "threads", "len", "ns/combine", "total"]);
 
     let (seq_ns, _) = measure(warmup, iters, || scan_seq(&items, combine));
     let seq_per_combine = seq_ns / (len - 1) as f64;
-    results.push(scan_row("scan_seq", 1, len, d, seq_per_combine, seq_ns));
+    results.push(scan_row("scan_seq", 1, len, d, iters, seq_per_combine, seq_ns));
     table.row(&[
         "scan_seq".into(),
         "1".into(),
@@ -322,7 +462,7 @@ fn bench_scan(opts: &BenchOpts) -> Json {
     for threads in threads_sweep {
         let (ns, _) =
             measure(warmup, iters, || scan_par_chunked(&items, combine, chunks, threads));
-        results.push(scan_row("scan_par", threads, len, d, ns / par_work, ns));
+        results.push(scan_row("scan_par", threads, len, d, iters, ns / par_work, ns));
         table.row(&[
             "scan_par".into(),
             threads.to_string(),
@@ -350,10 +490,45 @@ fn bench_scan(opts: &BenchOpts) -> Json {
             ])
         })
         .collect();
+    // Pool dispatch vs per-call spawn on identical (trivial) regions: the
+    // pure region-overhead delta the persistent pool exists to remove —
+    // what every fine-grained kernel fan-out used to pay per call.
+    let pool_threads = opts.threads.max(2);
+    let (spawn_warmup, spawn_iters) = if opts.quick { (5, 30) } else { (10, 200) };
+    let (pooled_region_ns, _) = measure(spawn_warmup, spawn_iters, || {
+        par::par_for(pool_threads, pool_threads, |i| {
+            std::hint::black_box(i);
+        })
+    });
+    let (scoped_region_ns, _) = measure(spawn_warmup, spawn_iters, || {
+        par::with_scoped_baseline(|| {
+            par::par_for(pool_threads, pool_threads, |i| {
+                std::hint::black_box(i);
+            })
+        })
+    });
+    let spawn_speedup = if pooled_region_ns > 0.0 {
+        scoped_region_ns / pooled_region_ns
+    } else {
+        0.0
+    };
+    println!(
+        "pool region dispatch ({pool_threads} threads): {pooled_region_ns:.0} ns pooled vs {scoped_region_ns:.0} ns per-call spawn ({spawn_speedup:.1}x)"
+    );
+
     let mut doc = doc_header("scan", opts, results);
     if let Json::Obj(map) = &mut doc {
         map.insert("sequential_ms".to_string(), num(seq_ns * 1e-6));
         map.insert("modeled_device".to_string(), Json::Arr(modeled));
+        map.insert(
+            "pool".to_string(),
+            obj(vec![
+                ("threads", num(pool_threads as f64)),
+                ("pooled_region_ns", num(pooled_region_ns)),
+                ("scoped_region_ns", num(scoped_region_ns)),
+                ("pool_spawn_speedup", num(spawn_speedup)),
+            ]),
+        );
     }
     doc
 }
@@ -363,6 +538,7 @@ fn scan_row(
     threads: usize,
     len: usize,
     d: usize,
+    iters: usize,
     ns_per_combine: f64,
     total_ns: f64,
 ) -> Json {
@@ -371,6 +547,7 @@ fn scan_row(
         ("threads", num(threads as f64)),
         ("len", num(len as f64)),
         ("d", num(d as f64)),
+        ("iters", num(iters as f64)),
         ("ns_per_combine", num(ns_per_combine)),
         ("total_ns", num(total_ns)),
     ])
@@ -398,6 +575,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             requests,
             d: 8,
             steps,
+            dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed,
             threads: 0,
@@ -479,8 +657,17 @@ mod tests {
             }
             assert!(row.get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
         }
-        // The convenience acceptance field exists and is a number.
+        // The panel-cache rows are present alongside the kernel rows.
+        assert!(rows
+            .iter()
+            .any(|r| r.get("impl").unwrap().as_str() == Some("kernel_packed_rhs")));
+        // The acceptance fields exist; the KC check must have come back
+        // bitwise-exact (d=256 in quick mode crosses the slab boundary).
         assert!(doc.get("kernel_speedup_128_t1").unwrap().as_f64().is_some());
+        assert!(doc.get("panel_cache_speedup_128").unwrap().as_f64().is_some());
+        assert!(doc.get("chain_speedup_pooled_128").unwrap().as_f64().is_some());
+        assert_eq!(doc.get("kc_bitwise_ok").unwrap().as_bool(), Some(true));
+        assert!(doc.get("kc_bitwise_d").unwrap().as_usize().unwrap() > kernel::KC);
         // And the doc round-trips through the JSON writer/parser.
         let text = json::write(&doc);
         assert_eq!(json::parse(&text).unwrap(), doc);
@@ -493,6 +680,11 @@ mod tests {
         assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_seq")));
         assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_par")));
         assert!(doc.get("modeled_device").unwrap().as_arr().unwrap().len() == 3);
+        // The pool-dispatch section records both substrates.
+        let pool = doc.get("pool").unwrap();
+        assert!(pool.get("pooled_region_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(pool.get("scoped_region_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(pool.get("pool_spawn_speedup").unwrap().as_f64().is_some());
         let text = json::write(&doc);
         assert_eq!(json::parse(&text).unwrap(), doc);
     }

@@ -8,30 +8,54 @@
 //! The cache is LRU by *entry count*, not bytes: entries are small result
 //! documents (a chain result is ~5 numbers; a scan result is one `d×d`
 //! matrix), and the protocol bounds `d`, so count is a good-enough proxy.
-//! Eviction scans for the oldest stamp — O(n) on insert-at-capacity, which
-//! at the default capacity (1024) is noise next to the compute being cached.
+//!
+//! Recency is an intrusive doubly-linked list threaded through a slab of
+//! nodes (indices, not pointers — no unsafe): `get` and `insert` are O(1),
+//! including eviction, which pops the list tail. This replaced an
+//! oldest-stamp scan that made insert-at-capacity O(n) — noise at the
+//! default capacity, but the serving layer lets operators raise capacity
+//! arbitrarily, and eviction sits on the response path of every cache
+//! miss, so it must not scale with the cache size.
 
 use crate::util::json::Json;
 use std::collections::HashMap;
 
+const NIL: usize = usize::MAX;
+
 #[derive(Debug, Clone)]
-struct Entry {
+struct Node {
+    key: String,
     value: Json,
-    last_used: u64,
+    /// Toward more-recent (NIL at the head).
+    prev: usize,
+    /// Toward less-recent (NIL at the tail).
+    next: usize,
 }
 
 /// An LRU map from canonical request key to result document.
 #[derive(Debug)]
 pub struct LruCache {
     capacity: usize,
-    tick: u64,
-    map: HashMap<String, Entry>,
+    map: HashMap<String, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Most recently used node (NIL when empty).
+    head: usize,
+    /// Least recently used node (NIL when empty) — the eviction victim.
+    tail: usize,
 }
 
 impl LruCache {
     /// `capacity` = max entries; 0 disables caching entirely.
     pub fn new(capacity: usize) -> Self {
-        Self { capacity, tick: 0, map: HashMap::new() }
+        Self {
+            capacity,
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -46,13 +70,42 @@ impl LruCache {
         self.map.is_empty()
     }
 
+    /// Detach node `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.nodes[i].prev, self.nodes[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next].prev = prev;
+        }
+    }
+
+    /// Attach node `i` at the head (most recent).
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
     /// Fetch a clone of the cached result, bumping its recency.
     pub fn get(&mut self, key: &str) -> Option<Json> {
-        self.tick += 1;
-        let tick = self.tick;
-        let e = self.map.get_mut(key)?;
-        e.last_used = tick;
-        Some(e.value.clone())
+        let i = *self.map.get(key)?;
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+        Some(self.nodes[i].value.clone())
     }
 
     /// Insert (or refresh) an entry, evicting the least-recently-used one
@@ -62,20 +115,40 @@ impl LruCache {
         if self.capacity == 0 {
             return None;
         }
-        self.tick += 1;
-        let mut evicted = None;
-        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
-            if let Some(oldest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-            {
-                self.map.remove(&oldest);
-                evicted = Some(oldest);
+        if let Some(&i) = self.map.get(&key) {
+            // Refresh: new value, bumped recency, nothing evicted.
+            self.nodes[i].value = value;
+            if self.head != i {
+                self.unlink(i);
+                self.push_front(i);
             }
+            return None;
         }
-        self.map.insert(key, Entry { value, last_used: self.tick });
+        let evicted = if self.map.len() >= self.capacity {
+            // O(1): the victim is the list tail.
+            let victim = self.tail;
+            self.unlink(victim);
+            let old_key = std::mem::take(&mut self.nodes[victim].key);
+            self.nodes[victim].value = Json::Null;
+            self.map.remove(&old_key);
+            self.free.push(victim);
+            Some(old_key)
+        } else {
+            None
+        };
+        let i = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot] =
+                    Node { key: key.clone(), value, prev: NIL, next: NIL };
+                slot
+            }
+            None => {
+                self.nodes.push(Node { key: key.clone(), value, prev: NIL, next: NIL });
+                self.nodes.len() - 1
+            }
+        };
+        self.push_front(i);
+        self.map.insert(key, i);
         evicted
     }
 }
@@ -126,6 +199,9 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert!(c.get("b").is_some());
         assert_eq!(c.get("a"), Some(v(3.0)));
+        // The refresh also bumped recency: inserting past capacity evicts
+        // "b", not the refreshed "a".
+        assert_eq!(c.insert("c".into(), v(4.0)), Some("b".to_string()));
     }
 
     #[test]
@@ -134,5 +210,71 @@ mod tests {
         c.insert("a".into(), v(1.0));
         assert!(c.is_empty());
         assert_eq!(c.get("a"), None);
+    }
+
+    #[test]
+    fn capacity_one_churns_correctly() {
+        let mut c = LruCache::new(1);
+        assert_eq!(c.insert("a".into(), v(1.0)), None);
+        assert_eq!(c.insert("b".into(), v(2.0)), Some("a".to_string()));
+        assert_eq!(c.insert("c".into(), v(3.0)), Some("b".to_string()));
+        assert_eq!(c.get("c"), Some(v(3.0)));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn matches_a_reference_model_over_a_long_interleaved_sequence() {
+        // Oracle: a stamp-based model (the pre-list implementation's exact
+        // semantics). Deterministic pseudo-random get/insert interleaving
+        // over a small key space forces constant eviction and reordering.
+        struct Model {
+            capacity: usize,
+            tick: u64,
+            map: std::collections::HashMap<String, (Json, u64)>,
+        }
+        impl Model {
+            fn get(&mut self, key: &str) -> Option<Json> {
+                self.tick += 1;
+                let tick = self.tick;
+                let e = self.map.get_mut(key)?;
+                e.1 = tick;
+                Some(e.0.clone())
+            }
+            fn insert(&mut self, key: String, value: Json) -> Option<String> {
+                self.tick += 1;
+                let mut evicted = None;
+                if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+                    let oldest = self
+                        .map
+                        .iter()
+                        .min_by_key(|(_, e)| e.1)
+                        .map(|(k, _)| k.clone())
+                        .unwrap();
+                    self.map.remove(&oldest);
+                    evicted = Some(oldest);
+                }
+                self.map.insert(key, (value, self.tick));
+                evicted
+            }
+        }
+        let mut model =
+            Model { capacity: 5, tick: 0, map: std::collections::HashMap::new() };
+        let mut cache = LruCache::new(5);
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for step in 0..2000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let key = format!("k{}", (state >> 33) % 9);
+            if (state >> 7) % 3 == 0 {
+                assert_eq!(cache.get(&key), model.get(&key), "step {step} get {key}");
+            } else {
+                let val = v(step as f64);
+                assert_eq!(
+                    cache.insert(key.clone(), val.clone()),
+                    model.insert(key.clone(), val),
+                    "step {step} insert {key}"
+                );
+            }
+            assert_eq!(cache.len(), model.map.len(), "step {step}");
+        }
     }
 }

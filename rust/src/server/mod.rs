@@ -240,6 +240,12 @@ pub struct LoadgenConfig {
     /// Chain dimension / horizon the generated requests use.
     pub d: usize,
     pub steps: usize,
+    /// When non-empty, overrides `d` with mixed-dimension traffic: request
+    /// `r` of client `c` uses `dims[(c + r) % dims.len()]`, so every listed
+    /// dimension is exercised deterministically (`--dims=8,64,256`). The
+    /// route-smoke CI job drives dimensions above the old 128 cap through
+    /// this — the end-to-end regression guard for the lifted limit.
+    pub dims: Vec<usize>,
     /// Method slug for the generated chain requests.
     pub method: String,
     /// When set, every request uses this seed (all cache hits after the
@@ -259,6 +265,7 @@ impl Default for LoadgenConfig {
             requests: 32,
             d: 8,
             steps: 500,
+            dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed: None,
             threads: 0,
@@ -365,8 +372,12 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
     let mut retries = 0usize;
     for r in 0..cfg.requests {
         let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
-        let line =
-            protocol::encode_chain_request(&cfg.method, cfg.d, cfg.steps, seed);
+        let d = if cfg.dims.is_empty() {
+            cfg.d
+        } else {
+            cfg.dims[(client as usize + r) % cfg.dims.len()]
+        };
+        let line = protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed);
         let mut attempts = 0usize;
         // Latency is client-observed end-to-end: the clock starts once per
         // request and keeps running across retry_after_ms backoffs, so an
@@ -562,6 +573,7 @@ mod tests {
             requests: 6,
             d: 4,
             steps: 40,
+            dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed: None,
             threads: 0,
@@ -583,6 +595,31 @@ mod tests {
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.ok, 24);
         assert_eq!(report.errors, 0);
+        server.stop();
+    }
+
+    #[test]
+    fn loadgen_mixed_dims_exercise_every_listed_dimension() {
+        let server = Server::start(test_config()).unwrap();
+        let mut metrics = Metrics::new();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 3,
+            requests: 4,
+            d: 4,
+            steps: 12,
+            dims: vec![3, 5, 7],
+            method: "goomc64".to_string(),
+            shared_seed: None,
+            threads: 0,
+        };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.ok, 12);
+        assert_eq!(report.errors, 0);
+        // (client + request) mod 3 covers all residues across 3 clients ×
+        // 4 requests, so all three dimensions produced distinct cache
+        // entries (12 distinct seeds ⇒ 12 distinct canonical keys).
+        assert_eq!(server.counter("cache_misses"), 12);
         server.stop();
     }
 }

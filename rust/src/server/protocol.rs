@@ -29,7 +29,20 @@ use std::collections::BTreeMap;
 
 /// Hard per-request bounds: a single request must never be able to pin a
 /// worker for unbounded time or memory.
-pub const MAX_CHAIN_D: usize = 128;
+///
+/// `MAX_CHAIN_D` was 128 while the kernel packed full-depth panels (they
+/// had to fit L2); the `KC` depth loop (`goom::kernel`) keeps panels
+/// cache-resident at any dimension, so the cap is now a memory/time bound
+/// only. Raising it must not raise the worst-case *time* one request can
+/// pin a worker, so `d` and `steps` are additionally bound jointly by
+/// [`MAX_CHAIN_WORK`] (one chain step costs ~2·d³ FLOPs). `MAX_SCAN_D`
+/// stays payload-bound: scan operands travel in the request body as JSON,
+/// so the line-size cap is the real limit there.
+pub const MAX_CHAIN_D: usize = 1024;
+/// Joint chain budget: `d³ · steps` may not exceed what the pre-KC caps
+/// allowed at their combined worst case (128³ · 200 000) — e.g. `d = 1024`
+/// is served up to ~390 steps, `d = 512` up to ~3 100.
+pub const MAX_CHAIN_WORK: u128 = 128u128.pow(3) * 200_000;
 pub const MAX_CHAIN_STEPS: usize = 200_000;
 pub const MAX_SCAN_D: usize = 64;
 pub const MAX_SCAN_LEN: usize = 4096;
@@ -154,12 +167,16 @@ impl Request {
                     .to_string(),
             );
         }
-        Ok(Request::Chain(ChainReq {
-            method,
-            d: bounded_usize(doc, "d", 8, 1, MAX_CHAIN_D)?,
-            steps: bounded_usize(doc, "steps", 1000, 0, MAX_CHAIN_STEPS)?,
-            seed: seed_field(doc, 42)?,
-        }))
+        let d = bounded_usize(doc, "d", 8, 1, MAX_CHAIN_D)?;
+        let steps = bounded_usize(doc, "steps", 1000, 0, MAX_CHAIN_STEPS)?;
+        let work = (d as u128).pow(3) * steps as u128;
+        if work > MAX_CHAIN_WORK {
+            return Err(format!(
+                "chain work d^3*steps = {work} exceeds the budget {MAX_CHAIN_WORK}; \
+                 reduce 'steps' at large 'd'"
+            ));
+        }
+        Ok(Request::Chain(ChainReq { method, d, steps, seed: seed_field(doc, 42)? }))
     }
 
     fn parse_scan(doc: &Json) -> Result<Request, String> {
@@ -505,6 +522,25 @@ mod tests {
         assert!(parse_line(r#"{"op":"chain","method":"hlo"}"#).is_err());
         assert!(parse_line(r#"{"op":"chain","d":0}"#).is_err());
         assert!(parse_line(r#"{"op":"chain","d":10000}"#).is_err());
+        // The KC kernel lifted the old d ≤ 128 serving cap: dimensions up
+        // to MAX_CHAIN_D now decode, but d and steps are jointly bounded
+        // by the work budget so one request still cannot pin a worker for
+        // longer than the pre-KC worst case.
+        assert!(parse_line(r#"{"op":"chain","d":512}"#).is_ok());
+        assert!(parse_line(
+            &format!(r#"{{"op":"chain","d":{MAX_CHAIN_D},"steps":200}}"#)
+        )
+        .is_ok());
+        assert!(parse_line(
+            &format!(r#"{{"op":"chain","d":{},"steps":200}}"#, MAX_CHAIN_D + 1)
+        )
+        .is_err());
+        assert!(
+            parse_line(r#"{"op":"chain","d":1024,"steps":5000}"#).is_err(),
+            "over the d^3*steps budget"
+        );
+        // At d = 128 the full historical step range still decodes.
+        assert!(parse_line(r#"{"op":"chain","d":128,"steps":200000}"#).is_ok());
         assert!(parse_line(r#"{"op":"chain","steps":99999999}"#).is_err());
         assert!(parse_line(r#"{"op":"chain","seed":-1}"#).is_err());
         assert!(parse_line(r#"{"op":"chain","seed":1.5}"#).is_err());

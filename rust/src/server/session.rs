@@ -763,9 +763,26 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
         ("gauges", Json::Obj(gauges)),
         ("timers", Json::Obj(timers)),
         ("kernel", kernel_json()),
+        ("pool", pool_json()),
         ("queue_len", num(pool.queue_len() as f64)),
         ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
         ("inflight_keys", num(inner.inflight.len() as f64)),
+    ])
+}
+
+/// Process-global persistent-pool counters (`util::par`): how many parallel
+/// regions the kernel fan-out opened, how work moved (tasks vs steals), and
+/// how often workers parked — the observability the ROADMAP asked for when
+/// per-call spawning was replaced by the pool.
+fn pool_json() -> Json {
+    let p = crate::util::par::pool_stats();
+    obj(vec![
+        ("workers", num(p.workers as f64)),
+        ("regions", num(p.regions as f64)),
+        ("tasks", num(p.tasks as f64)),
+        ("steals", num(p.steals as f64)),
+        ("parks", num(p.parks as f64)),
+        ("unparks", num(p.unparks as f64)),
     ])
 }
 
@@ -783,6 +800,7 @@ fn kernel_json() -> Json {
         ("pack_ns_total", num(k.pack_ns as f64)),
         ("matmul_ns_total", num(k.matmul_ns as f64)),
         ("matmul_gflops", num(k.matmul_gflops())),
+        ("pack_b_reused", num(k.pack_b_reused as f64)),
     ])
 }
 

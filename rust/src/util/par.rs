@@ -1,30 +1,70 @@
-//! Scoped-thread parallel-for: the one parallel substrate the compute
-//! layers share.
+//! The one parallel substrate the compute layers share — now backed by a
+//! **persistent work-stealing pool** instead of per-call scoped spawning.
 //!
 //! Before this module existed, the scan ([`crate::goom`]), the Lyapunov
 //! batch groups ([`crate::lyapunov`]), and ad-hoc experiment code each
-//! carried their own `std::thread::scope` block with its own striding and
-//! join logic. Those blocks are now all expressed through two primitives:
+//! carried their own `std::thread::scope` block. PR 3 unified them behind
+//! two primitives; this revision keeps those primitives' signatures and
+//! semantics **unchanged** while replacing what runs underneath:
 //!
 //! * [`par_chunks_mut`] — split a mutable slice into fixed-size chunks and
-//!   process them on `threads` scoped workers. The blocked matmul kernel
+//!   process them on up to `threads` workers. The blocked matmul kernel
 //!   parallelizes over output row-blocks this way; the scan's per-chunk
 //!   folds and fix-ups, and the Lyapunov spectrum's per-t batch, map onto
 //!   it directly.
-//! * [`par_for`] — run `f(0..n)` on `threads` scoped workers (striding),
+//! * [`par_for`] — run `f(0..n)` on up to `threads` workers (striding),
 //!   for index-parallel work with no output slice (e.g. loadgen clients).
 //!
-//! Determinism contract: both helpers only change *which OS thread* runs a
-//! given index/chunk, never the work done for it, so any caller whose
-//! per-index work is a pure function of the index produces bit-identical
-//! results at every thread count. The kernel and scan rely on this — it is
-//! what lets `--threads` vary freely without breaking the serving layer's
+//! ## The persistent pool
+//!
+//! Scoped spawning costs one OS thread create + join per worker per call —
+//! fine at coarse grain, ruinous for fine-grained kernel fan-out where a
+//! parallel region lasts tens of microseconds (one `KC` slab of a small
+//! matmul). The pool amortizes that: worker threads are spawned once,
+//! lazily, on first parallel use, and parked on a condvar when idle.
+//!
+//! * **Sizing.** The pool is seeded from `GOOM_THREADS` and grows to the
+//!   high-water mark of requested `threads` (a region asking for `t`-way
+//!   parallelism needs `t - 1` workers — the caller is the t-th executor).
+//!   Workers are never reclaimed; an idle worker costs one parked thread.
+//! * **Work-stealing deques.** Each worker owns a deque; a region's jobs
+//!   are dealt round-robin across the deques. Workers pop their own deque
+//!   from the front and, when empty, steal from the back of a sibling's
+//!   (scanning from their own index, so contention spreads). The caller
+//!   that opened a region *helps*: while waiting for its jobs to finish it
+//!   steals and runs pool work too, which both removes the idle-wait and
+//!   makes nested regions deadlock-free (every waiter is an executor).
+//! * **Counters.** [`pool_stats`] snapshots process-global counters —
+//!   workers, executed tasks, steals, parks/unparks — which the serving
+//!   layer exports through its `metrics` op (key `"pool"`) and the bench
+//!   harness records.
+//! * **Panics.** A panicking closure does not poison the pool: the payload
+//!   is captured, every job of the region still completes or unwinds
+//!   locally, and the panic resumes on the *calling* thread once the
+//!   region has fully quiesced (so no borrow outlives its data).
+//!
+//! Determinism contract (unchanged): both helpers only change *which OS
+//! thread* runs a given index/chunk, never the work done for it, so any
+//! caller whose per-index work is a pure function of the index produces
+//! bit-identical results at every thread count — and on the pooled vs the
+//! scoped substrate. The kernel and scan rely on this; it is what lets
+//! `--threads` vary freely without breaking the serving layer's
 //! byte-identical batched/solo/cached invariant.
+//!
+//! The pre-pool scoped implementation is retained in [`scoped`] as the
+//! recorded per-call-spawn baseline (`repro bench` measures the pool
+//! against it on identical work) and as a determinism oracle in tests;
+//! [`with_scoped_baseline`] routes a closure's parallel regions through it.
 //!
 //! Thread-count resolution: [`default_threads`] reads `GOOM_THREADS` (the
 //! env default behind every `--threads` flag) and falls back to 1 — served
 //! traffic gets its parallelism from the worker pool across requests, so
 //! nested fan-out inside one request stays opt-in.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
 /// `GOOM_THREADS` when set to a positive integer, else `None` — for
 /// callers whose fallback is not 1 (loadgen defaults to one thread per
@@ -42,11 +82,398 @@ pub fn default_threads() -> usize {
     env_threads().unwrap_or(1)
 }
 
+// ------------------------------------------------------------ pool core --
+
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+static POOL_STEALS: AtomicU64 = AtomicU64::new(0);
+static POOL_PARKS: AtomicU64 = AtomicU64::new(0);
+static POOL_UNPARKS: AtomicU64 = AtomicU64::new(0);
+static POOL_REGIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic snapshot of the persistent pool's counters (exported by the
+/// serving layer's `metrics` op under `"pool"`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads currently alive (the high-water mark of requests).
+    pub workers: usize,
+    /// Parallel regions opened (one per pooled `par_chunks_mut`/`par_for`).
+    pub regions: u64,
+    /// Jobs executed by pool workers or helping callers.
+    pub tasks: u64,
+    /// Jobs taken from a *sibling's* deque rather than the taker's own.
+    pub steals: u64,
+    /// Times a worker went to sleep on the idle condvar.
+    pub parks: u64,
+    /// Times a parked worker was woken by new work.
+    pub unparks: u64,
+}
+
+/// Read the process-global pool counters.
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        workers: pool().worker_count(),
+        regions: POOL_REGIONS.load(Ordering::Relaxed),
+        tasks: POOL_TASKS.load(Ordering::Relaxed),
+        steals: POOL_STEALS.load(Ordering::Relaxed),
+        parks: POOL_PARKS.load(Ordering::Relaxed),
+        unparks: POOL_UNPARKS.load(Ordering::Relaxed),
+    }
+}
+
+/// One queued unit of work: a lifetime-erased closure plus the region it
+/// belongs to (completion bookkeeping + panic capture).
+struct Task {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    region: Arc<Region>,
+}
+
+impl Task {
+    fn execute(self) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(self.run));
+        POOL_TASKS.fetch_add(1, Ordering::Relaxed);
+        if let Err(payload) = result {
+            *self.region.panic.lock().expect("region panic slot") = Some(payload);
+        }
+        self.region.finish_one();
+    }
+}
+
+/// Completion state of one parallel region.
+struct Region {
+    remaining: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Region {
+    fn new(jobs: usize) -> Arc<Region> {
+        POOL_REGIONS.fetch_add(1, Ordering::Relaxed);
+        Arc::new(Region {
+            remaining: AtomicUsize::new(jobs),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        })
+    }
+
+    fn finish_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().expect("region done lock");
+            *done = true;
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+}
+
+type TaskDeque = Arc<Mutex<VecDeque<Task>>>;
+
+/// The process-global persistent pool.
+struct Pool {
+    /// Per-worker deques. Guarded by an `RwLock` only so the worker set can
+    /// grow; steady-state access is read-locked (uncontended).
+    deques: RwLock<Vec<TaskDeque>>,
+    /// Tasks pushed but not yet taken (parking gate).
+    pending: AtomicUsize,
+    /// Round-robin rotation so successive regions start on different deques.
+    rotate: AtomicUsize,
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        deques: RwLock::new(Vec::new()),
+        pending: AtomicUsize::new(0),
+        rotate: AtomicUsize::new(0),
+        idle: Mutex::new(()),
+        idle_cv: Condvar::new(),
+    })
+}
+
+impl Pool {
+    fn worker_count(&self) -> usize {
+        self.deques.read().expect("pool deques").len()
+    }
+
+    /// Grow the worker set to at least `want` threads (never shrinks).
+    /// Seeded by `GOOM_THREADS` so a configured deployment starts its full
+    /// complement on first use instead of growing call by call.
+    fn ensure_workers(&'static self, want: usize) {
+        let want = want.max(env_threads().unwrap_or(1).saturating_sub(1));
+        if self.worker_count() >= want {
+            return;
+        }
+        let mut deques = self.deques.write().expect("pool deques");
+        while deques.len() < want {
+            let w = deques.len();
+            deques.push(Arc::new(Mutex::new(VecDeque::new())));
+            std::thread::Builder::new()
+                .name(format!("goom-pool-{w}"))
+                .spawn(move || worker_loop(w))
+                .expect("spawning pool worker");
+        }
+    }
+
+    /// Push a region's jobs round-robin across the worker deques and wake
+    /// parked workers (one per job; everyone only when the region saturates
+    /// the pool — waking the whole herd for a 2-task region would spend
+    /// more futex traffic than the region itself).
+    fn submit(&self, tasks: Vec<Task>) {
+        let n = tasks.len();
+        // Credit `pending` BEFORE the tasks become visible in the deques:
+        // a concurrent take() may pop a task the instant it is pushed, and
+        // its decrement must never land before our increment (the counter
+        // would wrap and defeat the parking gate). The converse staleness —
+        // `pending > 0` while the push is still in flight — only costs a
+        // taker one empty scan.
+        self.pending.fetch_add(n, Ordering::Release);
+        let workers = {
+            let deques = self.deques.read().expect("pool deques");
+            debug_assert!(!deques.is_empty(), "submit before ensure_workers");
+            let start = self.rotate.fetch_add(1, Ordering::Relaxed);
+            for (j, task) in tasks.into_iter().enumerate() {
+                let q = &deques[(start + j) % deques.len()];
+                q.lock().expect("pool deque").push_back(task);
+            }
+            deques.len()
+        };
+        let _g = self.idle.lock().expect("pool idle lock");
+        if n >= workers {
+            self.idle_cv.notify_all();
+        } else {
+            for _ in 0..n {
+                self.idle_cv.notify_one();
+            }
+        }
+    }
+
+    /// Take one task: worker `home` pops its own deque front, else steals
+    /// from a sibling's back. `home = None` is a helping caller (always a
+    /// steal). Returns `None` when every deque is empty.
+    fn take(&self, home: Option<usize>) -> Option<Task> {
+        if self.pending.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let deques = self.deques.read().expect("pool deques");
+        let n = deques.len();
+        if n == 0 {
+            return None;
+        }
+        let start = home.unwrap_or(0);
+        for i in 0..n {
+            let v = (start + i) % n;
+            let own = home == Some(v);
+            let task = {
+                let mut q = deques[v].lock().expect("pool deque");
+                if own {
+                    q.pop_front()
+                } else {
+                    q.pop_back()
+                }
+            };
+            if let Some(task) = task {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                if !own {
+                    POOL_STEALS.fetch_add(1, Ordering::Relaxed);
+                }
+                return Some(task);
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(w: usize) {
+    let pool = pool();
+    loop {
+        if let Some(task) = pool.take(Some(w)) {
+            task.execute();
+            continue;
+        }
+        // Nothing anywhere: park until a submit wakes us. The pending
+        // re-check under the idle lock closes the lost-wakeup window
+        // (submit bumps `pending` before taking the same lock to notify).
+        let g = pool.idle.lock().expect("pool idle lock");
+        if pool.pending.load(Ordering::Acquire) == 0 {
+            POOL_PARKS.fetch_add(1, Ordering::Relaxed);
+            let _g = pool.idle_cv.wait(g).expect("pool idle wait");
+            POOL_UNPARKS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Waits for a region to quiesce even if the caller's own inline job
+/// panicked — submitted jobs borrow the caller's stack, so unwinding past
+/// them before they finish would dangle. Passive wait only (no helping):
+/// running arbitrary jobs during an unwind risks a double panic.
+struct RegionGuard<'a>(&'a Arc<Region>);
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        let mut done = self.0.done.lock().expect("region done lock");
+        while !*done {
+            done = self.0.done_cv.wait(done).expect("region done wait");
+        }
+    }
+}
+
+thread_local! {
+    /// When set, parallel regions opened by *this thread* run on the
+    /// retained scoped-spawn baseline instead of the pool (bench only).
+    static FORCE_SCOPED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Bench-only escape hatch: run `f` with this thread's parallel regions
+/// routed through the per-call scoped-spawn baseline ([`scoped`]) instead
+/// of the persistent pool — `repro bench` records the pooled-vs-spawn
+/// delta on otherwise identical work, and the par tests use it as a
+/// determinism oracle. Only affects regions opened by the calling thread.
+pub fn with_scoped_baseline<R>(f: impl FnOnce() -> R) -> R {
+    FORCE_SCOPED.with(|flag| {
+        let prev = flag.replace(true);
+        let out = f();
+        flag.set(prev);
+        out
+    })
+}
+
+/// Run `jobs` as one parallel region on the pool: jobs `1..` are dealt to
+/// the worker deques, job `0` runs inline on the caller, and the caller
+/// then helps (steals pool work) until the region completes. Panics from
+/// any job resume on the caller once the region has quiesced.
+fn run_region<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    debug_assert!(jobs.len() >= 2, "regions need at least a caller + one job");
+    let pool = pool();
+    pool.ensure_workers(jobs.len() - 1);
+    let region = Region::new(jobs.len());
+    let mut jobs = jobs.into_iter();
+    let inline = jobs.next().expect("non-empty region");
+    let tasks: Vec<Task> = jobs
+        .map(|job| Task {
+            // SAFETY: every job completes before this function returns —
+            // the caller waits on the region (helping, then condvar), and
+            // `RegionGuard` enforces the wait even while unwinding — so no
+            // borrow inside the closure outlives its referent.
+            run: unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            },
+            region: Arc::clone(&region),
+        })
+        .collect();
+    let guard = RegionGuard(&region);
+    pool.submit(tasks);
+    // The caller is the region's first executor (run directly — the inline
+    // job keeps its scoped lifetime, no erasure needed)...
+    let inline_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(inline));
+    POOL_TASKS.fetch_add(1, Ordering::Relaxed);
+    if let Err(payload) = inline_result {
+        *region.panic.lock().expect("region panic slot") = Some(payload);
+    }
+    region.finish_one();
+    // ...then a helper: steal pool work (this region's jobs or any other
+    // region's — every waiter executing is what makes nesting safe) until
+    // this region quiesces, then wait out any job still running elsewhere.
+    while !region.is_done() {
+        match pool.take(None) {
+            Some(task) => task.execute(),
+            None => break,
+        }
+    }
+    drop(guard); // passive wait for stragglers
+    if let Some(payload) = region.panic.lock().expect("region panic slot").take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+// ------------------------------------------------------- scoped baseline --
+
+/// The pre-pool implementation, verbatim: one `std::thread::scope` — i.e.
+/// one OS thread spawn + join per worker — per call. Retained as the
+/// recorded per-call-spawn baseline for `repro bench` (the pool is
+/// measured against it on identical work) and as the determinism oracle
+/// in tests. Not used by any hot path.
+pub mod scoped {
+    /// Per-call-spawn twin of [`super::par_chunks_mut`] (same contract).
+    pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        let chunk_len = chunk_len.max(1);
+        let nchunks = data.len().div_ceil(chunk_len);
+        let threads = threads.max(1).min(nchunks);
+        if threads == 1 {
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                per_worker[i % threads].push((i, chunk));
+            }
+            for batch in per_worker {
+                scope.spawn(move || {
+                    for (i, chunk) in batch {
+                        f(i, chunk);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Per-call-spawn twin of [`super::par_for`] (same contract).
+    pub fn par_for<F>(n: usize, threads: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let threads = threads.max(1).min(n);
+        if threads == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            for w in 0..threads {
+                scope.spawn(move || {
+                    let mut i = w;
+                    while i < n {
+                        f(i);
+                        i += threads;
+                    }
+                });
+            }
+        });
+    }
+}
+
+// ------------------------------------------------------------ public API --
+
 /// Process `data` in contiguous `chunk_len`-sized chunks (last one ragged)
-/// on up to `threads` scoped workers. `f(chunk_index, chunk)` receives the
-/// 0-based chunk index and the mutable chunk slice. Chunks are assigned to
-/// workers round-robin (`chunk_index % threads`), and `threads <= 1` (or a
-/// single chunk) runs inline with no thread spawned.
+/// on up to `threads` workers from the persistent pool. `f(chunk_index,
+/// chunk)` receives the 0-based chunk index and the mutable chunk slice.
+/// Chunks are assigned to workers round-robin (`chunk_index % threads`),
+/// and `threads <= 1` (or a single chunk) runs inline with no pool use.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
 where
     T: Send,
@@ -64,24 +491,29 @@ where
         }
         return;
     }
+    if FORCE_SCOPED.with(|flag| flag.get()) {
+        return scoped::par_chunks_mut(data, chunk_len, threads, f);
+    }
     let f = &f;
-    std::thread::scope(|scope| {
-        let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            per_worker[i % threads].push((i, chunk));
-        }
-        for batch in per_worker {
-            scope.spawn(move || {
+    let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+        per_worker[i % threads].push((i, chunk));
+    }
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = per_worker
+        .into_iter()
+        .map(|batch| {
+            Box::new(move || {
                 for (i, chunk) in batch {
                     f(i, chunk);
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_region(jobs);
 }
 
-/// Run `f(i)` for every `i in 0..n` on up to `threads` scoped workers
+/// Run `f(i)` for every `i in 0..n` on up to `threads` pool workers
 /// (worker `w` handles `w, w+threads, …`). `threads <= 1` runs inline.
 pub fn par_for<F>(n: usize, threads: usize, f: F)
 where
@@ -97,18 +529,22 @@ where
         }
         return;
     }
+    if FORCE_SCOPED.with(|flag| flag.get()) {
+        return scoped::par_for(n, threads, f);
+    }
     let f = &f;
-    std::thread::scope(|scope| {
-        for w in 0..threads {
-            scope.spawn(move || {
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..threads)
+        .map(|w| {
+            Box::new(move || {
                 let mut i = w;
                 while i < n {
                     f(i);
                     i += threads;
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_region(jobs);
 }
 
 #[cfg(test)]
@@ -147,26 +583,29 @@ mod tests {
     }
 
     #[test]
-    fn results_identical_across_thread_counts() {
+    fn results_identical_across_thread_counts_and_substrates() {
         // The determinism contract: per-chunk work that is a pure function
-        // of the chunk index yields the same output at every thread count.
+        // of the chunk index yields the same output at every thread count,
+        // on the pool AND on the scoped per-call-spawn baseline.
+        let fill = |ci: usize, c: &mut [u64]| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = (ci as u64 + 1) * 1000 + j as u64;
+            }
+        };
         let reference: Vec<u64> = {
             let mut d = vec![0u64; 101];
-            par_chunks_mut(&mut d, 5, 1, |ci, c| {
-                for (j, x) in c.iter_mut().enumerate() {
-                    *x = (ci as u64 + 1) * 1000 + j as u64;
-                }
-            });
+            par_chunks_mut(&mut d, 5, 1, fill);
             d
         };
-        for threads in [2usize, 4, 16] {
+        // GOOM_THREADS ∈ {1, 2, 7} is the deployment sweep the serving
+        // docs promise bit-identity across; 16 exceeds the chunk count.
+        for threads in [1usize, 2, 7, 16] {
             let mut d = vec![0u64; 101];
-            par_chunks_mut(&mut d, 5, threads, |ci, c| {
-                for (j, x) in c.iter_mut().enumerate() {
-                    *x = (ci as u64 + 1) * 1000 + j as u64;
-                }
-            });
-            assert_eq!(d, reference, "threads={threads}");
+            par_chunks_mut(&mut d, 5, threads, fill);
+            assert_eq!(d, reference, "pooled threads={threads}");
+            let mut d = vec![0u64; 101];
+            with_scoped_baseline(|| par_chunks_mut(&mut d, 5, threads, fill));
+            assert_eq!(d, reference, "scoped threads={threads}");
         }
     }
 
@@ -196,5 +635,80 @@ mod tests {
         // The env var may or may not be set in the test environment; the
         // contract is just "positive integer or 1".
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn pool_counters_advance_and_workers_persist() {
+        let before = pool_stats();
+        let mut data = vec![0u8; 64];
+        par_chunks_mut(&mut data, 8, 4, |_, c| c.fill(1));
+        par_for(16, 3, |_| {});
+        let after = pool_stats();
+        assert!(after.regions >= before.regions + 2, "{before:?} -> {after:?}");
+        assert!(after.tasks >= before.tasks + 4 + 3, "{before:?} -> {after:?}");
+        // A 4-way region needs at least 3 live workers afterwards.
+        assert!(after.workers >= 3, "workers = {}", after.workers);
+        // The worker set is monotonic (grown, never reclaimed); a smaller
+        // region never shrinks it. (Other tests may grow the pool
+        // concurrently, so only the lower bound is assertable.)
+        let w = pool_stats().workers;
+        par_for(8, 3, |_| {});
+        assert!(pool_stats().workers >= w);
+    }
+
+    #[test]
+    fn nested_regions_complete_without_deadlock() {
+        // A pooled job that itself opens a pooled region: the helping
+        // caller discipline must keep everyone making progress even when
+        // jobs outnumber workers.
+        let hits: Vec<AtomicUsize> = (0..24).map(|_| AtomicUsize::new(0)).collect();
+        par_for(4, 4, |outer| {
+            par_for(6, 3, |inner| {
+                hits[outer * 6 + inner].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller_and_spare_the_pool() {
+        let result = std::panic::catch_unwind(|| {
+            par_for(8, 4, |i| {
+                if i == 5 {
+                    panic!("job 5 exploded");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic must reach the caller");
+        // The pool survives and keeps executing work.
+        let count = AtomicUsize::new(0);
+        par_for(10, 4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn concurrent_regions_from_many_threads_all_complete() {
+        // The server's pool workers call into par concurrently; regions
+        // must not corrupt each other's bookkeeping.
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for round in 0..8 {
+                        let mut data = vec![0u32; 40];
+                        par_chunks_mut(&mut data, 5, 3, |ci, c| {
+                            for x in c.iter_mut() {
+                                *x = (t * 1000 + round * 10 + ci) as u32;
+                            }
+                        });
+                        for (i, &x) in data.iter().enumerate() {
+                            let ci = i / 5;
+                            assert_eq!(x, (t * 1000 + round * 10 + ci) as u32);
+                        }
+                    }
+                });
+            }
+        });
     }
 }
