@@ -29,13 +29,16 @@
 //! * [`rnn`] — the training driver for the paper's §4.3 GOOM-SSM RNN.
 //! * [`coordinator`] — experiment registry, config, metrics, launcher.
 //! * [`server`] — `goomd`, the batched GOOM compute service: a TCP daemon
-//!   (newline-delimited JSON) whose readiness event loop drives sans-IO
-//!   session machines over non-blocking sockets, serving chain/scan/LLE
-//!   requests through a persistent worker pool with backpressure,
-//!   same-shape request batching (one stacked LMME pass), in-flight dedup
-//!   of identical requests, and an LRU cache over seeded requests — plus
-//!   the cache-aware router tier (`repro route`) that rendezvous-hashes
-//!   canonical keys across shards. See `docs/SERVING.md` for the wire
+//!   (newline-delimited JSON) built on one reusable readiness reactor
+//!   (`server/event_loop.rs`) that drives sans-IO session machines over
+//!   non-blocking sockets — inbound clients and outbound backend
+//!   connections alike — serving chain/scan/LLE requests through a
+//!   persistent worker pool with backpressure, same-shape request
+//!   batching (one stacked LMME pass), in-flight dedup of identical
+//!   requests, and an LRU cache over seeded requests. The cache-aware
+//!   router tier (`repro route`, rendezvous-hashing canonical keys across
+//!   shards) is a second instantiation of the same reactor, so both
+//!   fronts run O(1) threads. See `docs/SERVING.md` for the wire
 //!   protocol.
 //! * [`perf`] — the `repro bench` harness: LMME/scan/serving microbenches
 //!   recorded to `BENCH_*.json` (ns/op, GFLOP/s, allocs/op), the perf

@@ -246,6 +246,7 @@ fn loadgen(args: &Args) -> Result<()> {
         dims: args.get_usize_list("dims", &[])?,
         method: args.get_or("method", &defaults.method).to_string(),
         shared_seed,
+        pipeline: args.get_usize("pipeline", defaults.pipeline)?,
         threads: args.get_usize(
             "threads",
             goomrs::util::par::env_threads().unwrap_or(defaults.threads),
@@ -260,7 +261,7 @@ fn loadgen(args: &Args) -> Result<()> {
         )
     };
     println!(
-        "loadgen: {} clients x {} requests → {} (chain {} {} steps={}{})",
+        "loadgen: {} clients x {} requests → {} (chain {} {} steps={}{}{})",
         cfg.clients,
         cfg.requests,
         cfg.addr,
@@ -268,6 +269,7 @@ fn loadgen(args: &Args) -> Result<()> {
         dims_desc,
         cfg.steps,
         cfg.shared_seed.map_or(String::new(), |s| format!(" seed={s}")),
+        if cfg.pipeline > 1 { format!(" pipeline={}", cfg.pipeline) } else { String::new() },
     );
     let mut metrics = Metrics::new();
     let report = server::loadgen(&cfg, &mut metrics)?;
@@ -298,8 +300,9 @@ fn loadgen(args: &Args) -> Result<()> {
 }
 
 /// `repro bench [--quick --threads=N --out-dir=DIR --compare=OLD_DIR
-/// --compare-threshold=0.15]`: run the LMME / scan / serving microbenches
-/// and write `BENCH_lmme.json`, `BENCH_scan.json`, `BENCH_serve.json` —
+/// --compare-threshold=0.15]`: run the LMME / scan / serving / routing
+/// microbenches and write `BENCH_lmme.json`, `BENCH_scan.json`,
+/// `BENCH_serve.json`, `BENCH_route.json` —
 /// the recorded perf trajectory every future PR is held accountable to
 /// (`--quick` is the CI smoke variant). With `--compare`, the fresh
 /// results are matched row-by-row against a previous run's artifacts and
@@ -356,9 +359,10 @@ USAGE:
   repro all                         run every experiment at default scale
   repro bench [--quick --threads=N --out-dir=DIR --compare=OLD_DIR
                --compare-threshold=0.15]
-                                    run the LMME/scan/serving microbenches and
+                                    run the LMME/scan/serving/routing benches;
                                     write BENCH_lmme.json / BENCH_scan.json /
-                                    BENCH_serve.json; --compare gates ns/op
+                                    BENCH_serve.json / BENCH_route.json;
+                                    --compare gates ns/op
                                     against a previous run's artifacts
                                     (see docs/PERFORMANCE.md)
   repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
@@ -373,9 +377,11 @@ USAGE:
                                     send one request line, print the response
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
-                 --seed=N --min-cached=N --threads=N]
+                 --seed=N --min-cached=N --pipeline=N --threads=N]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency
+                                    (--pipeline=N sends N requests per
+                                    burst, stressing the reorder buffers)
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).

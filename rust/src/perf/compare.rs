@@ -13,9 +13,9 @@
 //! Ground rules, tuned for a noisy shared CI runner:
 //!
 //! * Only `BENCH_lmme.json` and `BENCH_scan.json` are gated. The serving
-//!   bench multiplexes sockets, worker pools, and a load generator — its
-//!   run-to-run variance swamps a 15% bar, so it stays recorded but
-//!   ungated.
+//!   and routing benches multiplex sockets, worker pools, and a load
+//!   generator — their run-to-run variance swamps a 15% bar, so both stay
+//!   recorded (and uploaded) but info-only in the gate.
 //! * Under-sampled rows never gate: anything with fewer than
 //!   [`MIN_GATING_ITERS`] measured iterations (the single-pass `*_sweep`
 //!   rows, the quick bench's 2-iteration d ≥ 256 rows) is matched and

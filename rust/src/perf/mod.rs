@@ -14,6 +14,11 @@
 //! * `BENCH_serve.json` — an in-process `goomd` hammered by loadgen:
 //!   throughput, latency percentiles, cache behaviour, and the kernel
 //!   counters delta that attributes wall time to compute vs queueing.
+//! * `BENCH_route.json` — router relay overhead: the same cache-served
+//!   traffic driven direct-to-shard and through the reactor router
+//!   (coalesced and pipelined rows), with the added ns/request at p50/p99
+//!   the relay hop costs. Recorded info-only in the trend gate — socketed
+//!   latencies on a shared runner are too noisy for the 15% bar.
 //!
 //! Allocation counts are real: the `repro` binary installs the counting
 //! global allocator, so `allocs_per_op: 0` on the warmed kernel rows is a
@@ -69,6 +74,8 @@ pub fn run_all(opts: &BenchOpts) -> Result<()> {
     write_doc(opts, "BENCH_scan.json", &scan)?;
     let serve = bench_serve(opts)?;
     write_doc(opts, "BENCH_serve.json", &serve)?;
+    let route = bench_route(opts)?;
+    write_doc(opts, "BENCH_route.json", &route)?;
     Ok(())
 }
 
@@ -578,6 +585,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed,
+            pipeline: 1,
             threads: 0,
         };
         let before = kernel_stats::snapshot();
@@ -631,6 +639,101 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
     Ok(doc)
 }
 
+// ----------------------------------------------------------------- route --
+
+/// Measure what the router's relay hop adds per request: identical
+/// shared-seed traffic (one compute, then pure cache hits — so the RTT is
+/// framing + relay, not kernels) is driven directly at a shard and through
+/// a two-shard reactor router, coalesced (lockstep request/response) and
+/// pipelined (8-deep bursts through the reorder buffers). The headline
+/// fields are the added ns/request at p50 and p99 for both modes.
+fn bench_route(opts: &BenchOpts) -> Result<Json> {
+    let shard_cfg = ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 64,
+        batch_max: 8,
+        cache_capacity: 256,
+        ..ServeConfig::default()
+    };
+    let a = Server::start(shard_cfg.clone()).context("starting shard a")?;
+    let b = Server::start(shard_cfg).context("starting shard b")?;
+    let router = crate::server::Router::start(crate::server::RouterConfig {
+        port: 0,
+        backends: vec![a.addr().to_string(), b.addr().to_string()],
+        ..crate::server::RouterConfig::default()
+    })
+    .context("starting in-process router")?;
+    let (clients, requests) = if opts.quick { (2usize, 24usize) } else { (4, 96) };
+    let mut results = Vec::new();
+    let mut measured: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    let paths = [("direct", a.addr().to_string()), ("routed", router.addr().to_string())];
+    for (path, addr) in paths {
+        for (mode, pipeline) in [("coalesced", 1usize), ("pipelined", 8)] {
+            let lg = LoadgenConfig {
+                addr: addr.clone(),
+                clients,
+                requests,
+                d: 6,
+                steps: 40,
+                dims: Vec::new(),
+                method: "goomc64".to_string(),
+                // One key total: everything after the first compute is a
+                // cache hit, so percentiles measure the serving path.
+                shared_seed: Some(7),
+                pipeline,
+                threads: 0,
+            };
+            let mut metrics = crate::coordinator::Metrics::new();
+            let report = crate::server::loadgen(&lg, &mut metrics)?;
+            if report.errors > 0 {
+                anyhow::bail!("route bench saw {} errors on {path}/{mode}", report.errors);
+            }
+            let p50_ns = report.p50_ms * 1e6;
+            let p99_ns = report.p99_ms * 1e6;
+            measured.insert(format!("{path}:{mode}"), (p50_ns, p99_ns));
+            results.push(obj(vec![
+                ("path", Json::Str(path.to_string())),
+                ("mode", Json::Str(mode.to_string())),
+                ("pipeline", num(pipeline as f64)),
+                ("clients", num(clients as f64)),
+                ("requests_total", num(report.total_requests as f64)),
+                ("ok", num(report.ok as f64)),
+                ("cached", num(report.cached as f64)),
+                ("throughput_rps", num(report.throughput_rps)),
+                ("p50_ns", num(p50_ns)),
+                ("p99_ns", num(p99_ns)),
+            ]));
+            println!(
+                "route[{path}/{mode}]: {:.1} req/s, p50 {:.0} ns, p99 {:.0} ns",
+                report.throughput_rps, p50_ns, p99_ns
+            );
+        }
+    }
+    let routed_total: u64 = [a.addr(), b.addr()]
+        .iter()
+        .map(|addr| router.counter(&format!("routed[{addr}]")))
+        .sum();
+    router.stop();
+    a.stop();
+    b.stop();
+    let delta = |mode: &str, pick: fn(&(f64, f64)) -> f64| -> f64 {
+        match (measured.get(&format!("routed:{mode}")), measured.get(&format!("direct:{mode}"))) {
+            (Some(r), Some(d)) => pick(r) - pick(d),
+            _ => 0.0,
+        }
+    };
+    let mut doc = doc_header("route", opts, results);
+    if let Json::Obj(map) = &mut doc {
+        map.insert("added_ns_p50_coalesced".to_string(), Json::Num(delta("coalesced", |m| m.0)));
+        map.insert("added_ns_p99_coalesced".to_string(), Json::Num(delta("coalesced", |m| m.1)));
+        map.insert("added_ns_p50_pipelined".to_string(), Json::Num(delta("pipelined", |m| m.0)));
+        map.insert("added_ns_p99_pipelined".to_string(), Json::Num(delta("pipelined", |m| m.1)));
+        map.insert("routed_requests".to_string(), num(routed_total as f64));
+    }
+    Ok(doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -669,6 +772,45 @@ mod tests {
         assert_eq!(doc.get("kc_bitwise_ok").unwrap().as_bool(), Some(true));
         assert!(doc.get("kc_bitwise_d").unwrap().as_usize().unwrap() > kernel::KC);
         // And the doc round-trips through the JSON writer/parser.
+        let text = json::write(&doc);
+        assert_eq!(json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn route_doc_reports_relay_overhead_rows_and_deltas() {
+        let doc = bench_route(&quick_opts()).expect("route bench");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("route"));
+        let rows = rows(&doc);
+        assert_eq!(rows.len(), 4, "{rows:?}");
+        for (path, mode) in [
+            ("direct", "coalesced"),
+            ("direct", "pipelined"),
+            ("routed", "coalesced"),
+            ("routed", "pipelined"),
+        ] {
+            let row = rows
+                .iter()
+                .find(|r| {
+                    r.get("path").unwrap().as_str() == Some(path)
+                        && r.get("mode").unwrap().as_str() == Some(mode)
+                })
+                .unwrap_or_else(|| panic!("missing {path}/{mode} row"));
+            assert!(row.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+            assert!(row.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+            // Shared seed: everything after the first compute was cached.
+            let ok = row.get("ok").unwrap().as_usize().unwrap();
+            let cached = row.get("cached").unwrap().as_usize().unwrap();
+            assert!(cached > ok / 2, "{path}/{mode}: {cached} cached of {ok}");
+        }
+        for field in [
+            "added_ns_p50_coalesced",
+            "added_ns_p99_coalesced",
+            "added_ns_p50_pipelined",
+            "added_ns_p99_pipelined",
+        ] {
+            assert!(doc.get(field).unwrap().as_f64().is_some(), "missing {field}");
+        }
+        assert!(doc.get("routed_requests").unwrap().as_usize().unwrap() > 0);
         let text = json::write(&doc);
         assert_eq!(json::parse(&text).unwrap(), doc);
     }

@@ -1,50 +1,154 @@
-//! Readiness event loop: N connections, O(1) threads.
+//! The shared serving reactor: N connections — inbound *and* outbound —
+//! O(1) threads.
 //!
-//! The pre-refactor daemon spent one OS thread (and stack) per live
-//! connection. This module replaces that with a single loop thread driving
-//! every connection's [`SessionState`] over non-blocking sockets: `poll(2)`
-//! (declared directly against the C library std already links — no new
-//! dependencies) reports which sockets are readable/writable, the loop
-//! feeds bytes through the sans-IO machines, and compute responses arrive
-//! asynchronously from pool workers over a completion channel paired with
-//! a self-pipe waker. 1k idle connections now cost 1k file descriptors,
-//! not 1k stacks; the thread set is fixed (loop + workers) regardless of
-//! connection count.
+//! PR 2 replaced the daemon's thread-per-connection accept loop with a
+//! readiness loop, but the loop only knew about one kind of socket:
+//! accepted clients feeding [`SessionState`] machines. The router tier
+//! kept a blocking thread per client session because its sockets came in
+//! two roles — clients in front, backend shards behind — and the loop
+//! couldn't drive the second kind. This module closes that gap: the loop
+//! is now a reusable **reactor** that multiplexes
 //!
-//! Response ordering: the protocol is strictly request-order per
-//! connection, but the loop pipelines — a connection's later requests can
-//! decode (and even complete) while an earlier compute is still in the
-//! pool. Each request takes a sequence number; finished lines park in a
-//! per-connection reorder buffer and flush only in sequence.
+//! * the listener (accept, connection-cap enforcement),
+//! * inbound client connections (sans-IO session framing, per-connection
+//!   reorder buffers so pipelined responses flush in request order),
+//! * outbound backend connections (non-blocking connect, pending-write
+//!   queues, newline-framed response reads, connect/IO deadlines,
+//!   reconnect-on-failure via the owning [`App`]),
+//! * a self-pipe waker plus an mpsc completion channel for responses
+//!   finished on other threads (pool workers).
 //!
-//! On non-unix hosts a portable fallback ticks every couple of
-//! milliseconds and treats every socket as ready — spurious readiness
-//! costs one `WouldBlock` per socket, correctness is unchanged.
+//! What the bytes *mean* is delegated to an [`App`]: `goomd` instantiates
+//! the reactor with [`ServeApp`] (decoded requests dispatch into the
+//! worker pool) and the router instantiates it with `router::RelayApp`
+//! (decoded requests relay to rendezvous-ranked shards). Framing, decode
+//! errors, connection accounting, ordering, and flow control live here,
+//! once — `serve` and `route` are two instantiations of the same front.
+//!
+//! `poll(2)` is declared directly against the C library std already links
+//! (no new dependencies); on Linux the outbound connect path declares
+//! `socket(2)`/`connect(2)` the same way so backend connections are truly
+//! non-blocking (`EINPROGRESS` + `POLLOUT` + `take_error`). Elsewhere a
+//! bounded `connect_timeout` stands in, and on non-unix hosts a portable
+//! fallback ticks every couple of milliseconds treating every socket as
+//! ready — spurious readiness costs one `WouldBlock` per socket,
+//! correctness is unchanged.
 
 use super::inflight::Reply;
 use super::pool::Pool;
-use super::protocol::err_line;
+use super::protocol::{err_line, num, obj, Request};
 use super::session::{dispatch, Job, ServerInner, SessionEvent, SessionState};
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io::{self, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Bytes read per `read(2)` call.
 const READ_CHUNK: usize = 64 * 1024;
-/// Stop reading from a connection whose un-flushed output exceeds this
+/// Stop reading from a client whose un-flushed output exceeds this
 /// (the client isn't draining responses; don't buffer for it unboundedly).
 const MAX_OUTBUF: usize = 4 << 20;
-/// Poll timeout: an upper bound on shutdown latency, not a serving rate —
-/// I/O and completions wake the loop immediately.
+/// Poll timeout: an upper bound on shutdown latency and deadline-sweep
+/// granularity, not a serving rate — I/O and completions wake the loop
+/// immediately.
 const POLL_TIMEOUT_MS: i32 = 500;
+/// Cap on one framed backend response line (scan results can run large,
+/// but a runaway backend must not buffer unboundedly into the reactor).
+pub const MAX_RESPONSE_BYTES: usize = 32 << 20;
+/// Cap on a backend connection's pending-write queue. A backend that
+/// stops draining its socket must not let the router buffer request
+/// bytes without limit; past this it is declared down and its requests
+/// fail over. Far above any legitimate transient (it is ~64 max-size
+/// request lines), so it only trips on a genuinely stuck peer.
+const MAX_BACKEND_OUTBUF: usize = 64 << 20;
+/// Bound on establishing a backend connection: a blackholed shard must
+/// become a down event (and a failover), not a hung relay.
+pub const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// Bound on one backend answer while requests are outstanding. Generous —
+/// requests at the protocol's compute bounds legitimately take a while —
+/// but finite, so a shard that accepts and then never answers still trips
+/// the failover path.
+pub const BACKEND_IO_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// A finished response line for connection `.0`, request slot `.1`.
 type Completion = (u64, u64, String);
 
-/// Wakes the loop out of `poll` from worker threads (self-pipe trick).
+/// Front-of-house knobs every reactor instantiation shares.
+#[derive(Debug, Clone)]
+pub struct FrontConfig {
+    /// Busy-line prefix: "server" for goomd, "router" for the relay tier
+    /// (keeps rejection lines byte-identical to the pre-reactor fronts).
+    pub service: &'static str,
+    pub max_request_bytes: usize,
+    pub max_connections: usize,
+    pub retry_after_ms: u64,
+}
+
+/// Reactor observability: exported through the `metrics` op (router and
+/// daemon alike) under `"reactor"`. All monotonic except the high-water
+/// reorder depth.
+#[derive(Default)]
+pub struct ReactorStats {
+    /// Loop iterations (each: poll + accept + I/O + flush).
+    pub loop_iterations: AtomicU64,
+    /// Times the self-pipe waker pulled the loop out of `poll`.
+    pub wakeups: AtomicU64,
+    /// Inbound client connections accepted.
+    pub fds_accepted: AtomicU64,
+    /// Outbound backend connections that completed their connect.
+    pub fds_connected: AtomicU64,
+    /// High-water mark of any connection's reorder buffer: how far ahead
+    /// pipelined completions ran of the response they waited behind.
+    pub max_reorder_depth: AtomicU64,
+}
+
+impl ReactorStats {
+    fn raise_reorder_depth(&self, depth: u64) {
+        self.max_reorder_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// JSON form for the `metrics` op (`"reactor"` sub-object).
+    pub fn to_json(&self) -> Json {
+        let g = |a: &AtomicU64| num(a.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("loop_iterations", g(&self.loop_iterations)),
+            ("wakeups", g(&self.wakeups)),
+            ("fds_accepted", g(&self.fds_accepted)),
+            ("fds_connected", g(&self.fds_connected)),
+            ("max_reorder_depth", g(&self.max_reorder_depth)),
+        ])
+    }
+}
+
+/// Protocol brain of one reactor instantiation. The reactor owns sockets,
+/// framing, ordering, and accounting; the app decides what a decoded
+/// request *does* and what framed backend lines *mean*.
+pub trait App: Send + 'static {
+    /// Front-of-house limits (read once at spawn).
+    fn front(&self) -> FrontConfig;
+    /// The metrics registry shared connection accounting increments.
+    fn metrics(&self) -> &Mutex<Metrics>;
+    /// The stats block this reactor publishes (read once at spawn).
+    fn stats(&self) -> Arc<ReactorStats>;
+    /// One decoded client request on `(conn, seq)`. Answer now via
+    /// [`Core::complete`], later via [`Core::reply_to`], or by relaying
+    /// through a backend connection.
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request);
+    /// One complete newline-framed line arrived from backend `backend`
+    /// (terminator stripped, trailing whitespace trimmed).
+    fn on_backend_line(&mut self, _core: &mut Core, _backend: u64, _line: String) {}
+    /// Backend connection `backend` is gone: connect failed, EOF, I/O
+    /// error, oversized frame, or deadline. Already deregistered — every
+    /// line it still owed is lost and must be failed over or failed out.
+    fn on_backend_down(&mut self, _core: &mut Core, _backend: u64) {}
+}
+
+/// Wakes the loop out of `poll` from other threads (self-pipe trick).
 pub struct Waker {
     #[cfg(unix)]
     tx: std::os::unix::net::UnixStream,
@@ -70,8 +174,8 @@ fn waker_pair() -> io::Result<(Waker, std::os::unix::net::UnixStream)> {
 
 #[cfg(unix)]
 mod sys {
-    //! The one C declaration the loop needs. std links libc on every unix
-    //! target, so this adds no dependency — just a prototype.
+    //! The C declarations the reactor needs. std links libc on every unix
+    //! target, so this adds no dependency — just prototypes.
     use std::os::unix::io::RawFd;
 
     #[repr(C)]
@@ -96,10 +200,151 @@ mod sys {
     extern "C" {
         pub fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
     }
+
+    // Outbound non-blocking connect — Linux on the common arches only:
+    // SOCK_NONBLOCK and EINPROGRESS are generic across these, but mips /
+    // sparc / alpha renumber them, so exotic arches (and other unixes)
+    // fall back to a bounded blocking connect instead of silently
+    // misclassifying every in-progress connect as a hard error.
+    #[cfg(all(
+        target_os = "linux",
+        any(
+            target_arch = "x86_64",
+            target_arch = "x86",
+            target_arch = "aarch64",
+            target_arch = "arm",
+            target_arch = "riscv64"
+        )
+    ))]
+    pub mod connect {
+        pub const AF_INET: i32 = 2;
+        pub const AF_INET6: i32 = 10;
+        pub const SOCK_STREAM: i32 = 1;
+        pub const SOCK_NONBLOCK: i32 = 0o4000;
+        pub const SOCK_CLOEXEC: i32 = 0o2000000;
+        pub const EINPROGRESS: i32 = 115;
+
+        #[repr(C)]
+        pub struct SockAddrIn {
+            pub family: u16,
+            /// Big-endian on the wire.
+            pub port: u16,
+            /// Network-order octets.
+            pub addr: [u8; 4],
+            pub zero: [u8; 8],
+        }
+
+        #[repr(C)]
+        pub struct SockAddrIn6 {
+            pub family: u16,
+            pub port: u16,
+            pub flowinfo: u32,
+            pub addr: [u8; 16],
+            pub scope_id: u32,
+        }
+
+        extern "C" {
+            pub fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+            pub fn connect(fd: i32, addr: *const u8, len: u32) -> i32;
+        }
+    }
 }
 
-/// One live connection: its socket, protocol state, and the reorder buffer
-/// that keeps pipelined responses in request order.
+/// Begin a TCP connect without blocking the loop. Returns the stream and
+/// whether the connect is still in progress (completion — success or
+/// refusal — arrives as `POLLOUT` and is resolved via `take_error`).
+#[cfg(all(
+    target_os = "linux",
+    any(
+        target_arch = "x86_64",
+        target_arch = "x86",
+        target_arch = "aarch64",
+        target_arch = "arm",
+        target_arch = "riscv64"
+    )
+))]
+fn connect_nonblocking(sa: &SocketAddr) -> io::Result<(TcpStream, bool)> {
+    use std::os::unix::io::FromRawFd;
+    use sys::connect as c;
+
+    let ty = c::SOCK_STREAM | c::SOCK_NONBLOCK | c::SOCK_CLOEXEC;
+    let (fd, rc) = unsafe {
+        match sa {
+            SocketAddr::V4(v4) => {
+                let sin = c::SockAddrIn {
+                    family: c::AF_INET as u16,
+                    port: v4.port().to_be(),
+                    addr: v4.ip().octets(),
+                    zero: [0; 8],
+                };
+                let fd = c::socket(c::AF_INET, ty, 0);
+                if fd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                let rc = c::connect(
+                    fd,
+                    std::ptr::addr_of!(sin).cast(),
+                    std::mem::size_of::<c::SockAddrIn>() as u32,
+                );
+                (fd, rc)
+            }
+            SocketAddr::V6(v6) => {
+                let sin6 = c::SockAddrIn6 {
+                    family: c::AF_INET6 as u16,
+                    port: v6.port().to_be(),
+                    flowinfo: v6.flowinfo(),
+                    addr: v6.ip().octets(),
+                    scope_id: v6.scope_id(),
+                };
+                let fd = c::socket(c::AF_INET6, ty, 0);
+                if fd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                let rc = c::connect(
+                    fd,
+                    std::ptr::addr_of!(sin6).cast(),
+                    std::mem::size_of::<c::SockAddrIn6>() as u32,
+                );
+                (fd, rc)
+            }
+        }
+    };
+    // Wrap immediately (no intervening syscall, so errno from `connect`
+    // is still intact below): every exit path closes the fd on drop.
+    let stream = unsafe { TcpStream::from_raw_fd(fd) };
+    if rc == 0 {
+        return Ok((stream, false));
+    }
+    let err = io::Error::last_os_error();
+    if err.raw_os_error() == Some(c::EINPROGRESS) {
+        return Ok((stream, true));
+    }
+    Err(err)
+}
+
+/// Portable stand-in: a bounded blocking connect, then non-blocking I/O
+/// as usual. Known degradation on these hosts: the relay's retry ladder
+/// can walk several blackholed backends synchronously, stalling the loop
+/// up to 2 s × 2 tries × N backends for one doomed request — bounded,
+/// but real; the Linux fast path exists precisely to avoid it.
+#[cfg(not(all(
+    target_os = "linux",
+    any(
+        target_arch = "x86_64",
+        target_arch = "x86",
+        target_arch = "aarch64",
+        target_arch = "arm",
+        target_arch = "riscv64"
+    )
+)))]
+fn connect_nonblocking(sa: &SocketAddr) -> io::Result<(TcpStream, bool)> {
+    let stream = TcpStream::connect_timeout(sa, BACKEND_CONNECT_TIMEOUT)?;
+    stream.set_nonblocking(true)?;
+    Ok((stream, false))
+}
+
+/// One live inbound connection: its socket, protocol state, and the
+/// reorder buffer that keeps pipelined responses in request order.
 struct Conn {
     stream: TcpStream,
     session: SessionState,
@@ -122,12 +367,37 @@ impl Conn {
     }
 }
 
-/// Start the loop thread. The returned [`Waker`] interrupts `poll` — used
-/// by job completions and by [`super::Server::stop`].
-pub fn spawn(
+/// One loop-managed outbound connection to a backend.
+struct BackendConn {
+    stream: TcpStream,
+    /// Non-blocking connect still in progress (resolved on `POLLOUT`).
+    connecting: bool,
+    opened: Instant,
+    /// IO-deadline clock: re-armed when a response arrives and when the
+    /// connection goes from idle to owing one. Deliberately NOT refreshed
+    /// by writes — a shard that keeps accepting requests but never
+    /// answers must still trip the deadline.
+    last_activity: Instant,
+    /// Request bytes queued behind the socket's send buffer.
+    out: Vec<u8>,
+    /// Partial response line awaiting its terminator.
+    inbuf: Vec<u8>,
+    /// Bytes of `inbuf` already scanned for a terminator — framing must
+    /// stay linear while a multi-MiB response dribbles in across reads.
+    scanned: usize,
+    /// Newline-framed lines owed to the app (one per line sent).
+    awaiting: usize,
+    readable: bool,
+    writable: bool,
+}
+
+/// Start a reactor thread named `name` driving `app` over `listener`.
+/// The returned [`Waker`] interrupts `poll` — used by job completions and
+/// by `stop()` paths.
+pub fn spawn<A: App>(
+    name: &str,
     listener: TcpListener,
-    inner: Arc<ServerInner>,
-    pool: Arc<Pool<Job>>,
+    app: A,
     shutdown: Arc<AtomicBool>,
 ) -> io::Result<(JoinHandle<()>, Arc<Waker>)> {
     #[cfg(unix)]
@@ -136,34 +406,43 @@ pub fn spawn(
     let waker = Waker {};
     let waker = Arc::new(waker);
     let loop_waker = Arc::clone(&waker);
+    let front = app.front();
+    let stats = app.stats();
     let handle = std::thread::Builder::new()
-        .name("goomd-eventloop".to_string())
+        .name(name.to_string())
         .spawn(move || {
             let (tx, rx) = mpsc::channel::<Completion>();
-            EventLoop {
-                listener,
-                inner,
-                pool,
+            Reactor {
+                core: Core {
+                    listener,
+                    front,
+                    stats,
+                    waker: loop_waker,
+                    #[cfg(unix)]
+                    wake_rx,
+                    completions_tx: tx,
+                    completions_rx: rx,
+                    conns: HashMap::new(),
+                    next_conn_id: 0,
+                    backends: HashMap::new(),
+                    next_backend_id: 0,
+                    listener_ready: false,
+                },
+                app,
                 shutdown,
-                waker: loop_waker,
-                #[cfg(unix)]
-                wake_rx,
-                completions_tx: tx,
-                completions_rx: rx,
-                conns: HashMap::new(),
-                next_conn_id: 0,
-                listener_ready: false,
             }
             .run();
         })?;
     Ok((handle, waker))
 }
 
-struct EventLoop {
+/// Socket-facing reactor state, handed to [`App`] hooks so the protocol
+/// brain can complete responses and drive backend connections without
+/// owning any I/O itself.
+pub struct Core {
     listener: TcpListener,
-    inner: Arc<ServerInner>,
-    pool: Arc<Pool<Job>>,
-    shutdown: Arc<AtomicBool>,
+    front: FrontConfig,
+    stats: Arc<ReactorStats>,
     waker: Arc<Waker>,
     #[cfg(unix)]
     wake_rx: std::os::unix::net::UnixStream,
@@ -171,27 +450,104 @@ struct EventLoop {
     completions_rx: mpsc::Receiver<Completion>,
     conns: HashMap<u64, Conn>,
     next_conn_id: u64,
+    backends: HashMap<u64, BackendConn>,
+    next_backend_id: u64,
     listener_ready: bool,
 }
 
-impl EventLoop {
-    fn run(mut self) {
-        loop {
-            self.wait_ready();
-            if self.shutdown.load(Ordering::SeqCst) {
-                // Best-effort final pass: pool teardown has just resolved
-                // queued jobs with shutdown-error lines — deliver what the
-                // sockets will take before closing them.
-                self.drain_completions();
-                self.flush_conns();
-                return;
-            }
-            self.accept_ready();
-            self.read_ready();
-            self.drain_completions();
-            self.flush_conns();
-            self.conns.retain(|_, c| !c.dead && !c.finished());
+impl Core {
+    /// Park the finished response for request slot (`conn`, `seq`); it
+    /// flushes once every earlier slot has answered. A completion for a
+    /// since-closed connection is dropped.
+    pub fn complete(&mut self, conn: u64, seq: u64, line: String) {
+        if let Some(c) = self.conns.get_mut(&conn) {
+            c.ready.insert(seq, line);
+            self.stats.raise_reorder_depth(c.ready.len() as u64);
         }
+    }
+
+    /// A [`Reply`] for request slot (`conn`, `seq`): routes the finished
+    /// line back through the completion channel and wakes the loop. Works
+    /// from any thread.
+    pub fn reply_to(&self, conn: u64, seq: u64) -> Reply {
+        let tx = self.completions_tx.clone();
+        let waker = Arc::clone(&self.waker);
+        Box::new(move |line| {
+            let _ = tx.send((conn, seq, line));
+            waker.wake();
+        })
+    }
+
+    /// Open a loop-managed connection toward `addr` (non-blocking on
+    /// Linux). Immediate resolution/refusal errors return `Err`; an
+    /// in-progress connect returns its id and fails asynchronously through
+    /// [`App::on_backend_down`] if the backend is unreachable.
+    pub fn backend_open(&mut self, addr: &str) -> io::Result<u64> {
+        let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "backend address resolves to nothing")
+        })?;
+        let (stream, connecting) = connect_nonblocking(&sockaddr)?;
+        if !connecting {
+            self.stats.fds_connected.fetch_add(1, Ordering::Relaxed);
+        }
+        let id = self.next_backend_id;
+        self.next_backend_id += 1;
+        let now = Instant::now();
+        self.backends.insert(
+            id,
+            BackendConn {
+                stream,
+                connecting,
+                opened: now,
+                last_activity: now,
+                out: Vec::new(),
+                inbuf: Vec::new(),
+                scanned: 0,
+                awaiting: 0,
+                // An in-progress connect must wait for poll's POLLOUT
+                // before the first write (or `take_error` check) — writing
+                // earlier would misread the socket's state. An
+                // already-connected socket serves immediately.
+                readable: !connecting,
+                writable: !connecting,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Queue one newline-terminated request line on backend `backend`
+    /// (the terminator is appended here). Returns `false` when the
+    /// connection is already gone.
+    pub fn backend_send(&mut self, backend: u64, line: &str) -> bool {
+        match self.backends.get_mut(&backend) {
+            Some(b) => {
+                if b.awaiting == 0 {
+                    // Idle → owing: (re)arm the IO deadline. It measures
+                    // silence since the oldest outstanding request, so a
+                    // long-idle pooled connection is not reaped the moment
+                    // a new request lands on it.
+                    b.last_activity = Instant::now();
+                }
+                b.out.extend_from_slice(line.as_bytes());
+                b.out.push(b'\n');
+                b.awaiting += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether backend connection `backend` is still registered.
+    pub fn backend_alive(&self, backend: u64) -> bool {
+        self.backends.contains_key(&backend)
+    }
+
+    /// Deregister (and close) backend connection `backend` without a down
+    /// event — for abandoning a protocol-desynced connection that owes
+    /// nothing. Dropping the entry closes the socket; without this the fd
+    /// would stay registered (and polled) until the remote side closed.
+    pub fn backend_close(&mut self, backend: u64) {
+        self.backends.remove(&backend);
     }
 
     /// Block until something needs service (or the poll timeout elapses):
@@ -201,8 +557,15 @@ impl EventLoop {
     fn wait_ready(&mut self) {
         use std::os::unix::io::AsRawFd;
 
-        let mut fds: Vec<sys::PollFd> = Vec::with_capacity(self.conns.len() + 2);
-        let mut tokens: Vec<Option<u64>> = Vec::with_capacity(self.conns.len() + 2);
+        #[derive(Clone, Copy)]
+        enum Token {
+            Client(u64),
+            Backend(u64),
+        }
+
+        let cap = self.conns.len() + self.backends.len() + 2;
+        let mut fds: Vec<sys::PollFd> = Vec::with_capacity(cap);
+        let mut tokens: Vec<Option<Token>> = Vec::with_capacity(cap);
         fds.push(sys::PollFd {
             fd: self.listener.as_raw_fd(),
             events: sys::POLLIN,
@@ -228,7 +591,17 @@ impl EventLoop {
                 continue;
             }
             fds.push(sys::PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
-            tokens.push(Some(id));
+            tokens.push(Some(Token::Client(id)));
+        }
+        for (&id, b) in &mut self.backends {
+            b.readable = false;
+            b.writable = false;
+            let mut events = sys::POLLIN;
+            if b.connecting || !b.out.is_empty() {
+                events |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd { fd: b.stream.as_raw_fd(), events, revents: 0 });
+            tokens.push(Some(Token::Backend(id)));
         }
         let n = unsafe {
             sys::poll(fds.as_mut_ptr(), fds.len() as sys::Nfds, POLL_TIMEOUT_MS)
@@ -237,26 +610,38 @@ impl EventLoop {
         if n < 0 {
             if io::Error::last_os_error().kind() != io::ErrorKind::Interrupted {
                 // Not expected; avoid a hot error spin.
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::sleep(Duration::from_millis(5));
             }
             return;
         }
         self.listener_ready = fds[0].revents != 0;
         if fds[1].revents != 0 {
+            self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
             // Swallow queued wake bytes; completions drain separately.
             let mut sink = [0u8; 256];
             while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
         }
         for (fd, token) in fds.iter().zip(&tokens).skip(2) {
             let hang = fd.revents & (sys::POLLERR | sys::POLLHUP) != 0;
-            if fd.revents & sys::POLLIN != 0 || hang {
-                if let Some(conn) =
-                    token.as_ref().and_then(|id| self.conns.get_mut(id))
-                {
-                    // A hangup on a read-closed conn is surfaced by the
-                    // flush path instead.
-                    conn.readable = !conn.read_closed;
+            match token {
+                Some(Token::Client(id)) => {
+                    if fd.revents & sys::POLLIN != 0 || hang {
+                        if let Some(conn) = self.conns.get_mut(id) {
+                            // A hangup on a read-closed conn is surfaced by
+                            // the flush path instead.
+                            conn.readable = !conn.read_closed;
+                        }
+                    }
                 }
+                Some(Token::Backend(id)) => {
+                    if let Some(b) = self.backends.get_mut(id) {
+                        // A hangup or error must reach the read/connect
+                        // path so the death is observed and failed over.
+                        b.readable = fd.revents & sys::POLLIN != 0 || hang;
+                        b.writable = fd.revents & sys::POLLOUT != 0 || hang;
+                    }
+                }
+                None => {}
             }
         }
     }
@@ -265,19 +650,53 @@ impl EventLoop {
     /// sockets make spurious readiness harmless (one `WouldBlock` each).
     #[cfg(not(unix))]
     fn wait_ready(&mut self) {
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        std::thread::sleep(Duration::from_millis(2));
         self.listener_ready = true;
         for conn in self.conns.values_mut() {
             conn.readable = !conn.read_closed && conn.out.len() <= MAX_OUTBUF;
         }
+        for b in self.backends.values_mut() {
+            b.readable = true;
+            b.writable = true;
+        }
+    }
+}
+
+struct Reactor<A: App> {
+    core: Core,
+    app: A,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl<A: App> Reactor<A> {
+    fn run(mut self) {
+        loop {
+            self.core.wait_ready();
+            self.core.stats.loop_iterations.fetch_add(1, Ordering::Relaxed);
+            if self.shutdown.load(Ordering::SeqCst) {
+                // Best-effort final pass: pending completions (e.g. pool
+                // teardown's shutdown-error lines) are delivered as far as
+                // the sockets will take them before closing.
+                self.drain_completions();
+                self.flush_conns();
+                return;
+            }
+            self.accept_ready();
+            self.read_ready();
+            self.backend_io();
+            self.sweep_backend_deadlines();
+            self.drain_completions();
+            self.flush_conns();
+            self.core.conns.retain(|_, c| !c.dead && !c.finished());
+        }
     }
 
     fn accept_ready(&mut self) {
-        if !self.listener_ready {
+        if !self.core.listener_ready {
             return;
         }
         loop {
-            match self.listener.accept() {
+            match self.core.listener.accept() {
                 Ok((stream, _peer)) => self.on_accept(stream),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(_) => {
@@ -285,7 +704,7 @@ impl EventLoop {
                     // backlog, so poll would report the listener readable
                     // again immediately — back off briefly instead of
                     // spinning the loop at 100% CPU.
-                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    std::thread::sleep(Duration::from_millis(10));
                     break;
                 }
             }
@@ -296,18 +715,19 @@ impl EventLoop {
         if stream.set_nonblocking(true).is_err() {
             return; // drops (closes) the stream
         }
-        let max_connections = self.inner.cfg.max_connections.max(1);
-        if self.conns.len() >= max_connections {
-            self.inner
-                .metrics
+        let max_connections = self.core.front.max_connections.max(1);
+        if self.core.conns.len() >= max_connections {
+            self.app
+                .metrics()
                 .lock()
                 .expect("metrics lock")
                 .incr("connections_rejected", 1);
             let mut line = err_line(
                 &format!(
-                    "server busy: connection limit ({max_connections}) reached"
+                    "{} busy: connection limit ({max_connections}) reached",
+                    self.core.front.service
                 ),
-                Some(self.inner.cfg.retry_after_ms),
+                Some(self.core.front.retry_after_ms),
             );
             line.push('\n');
             // Best-effort: a fresh socket's send buffer is empty, so this
@@ -315,14 +735,15 @@ impl EventLoop {
             let _ = (&stream).write(line.as_bytes());
             return; // drops (closes) the stream
         }
-        self.inner.metrics.lock().expect("metrics lock").incr("connections", 1);
-        let id = self.next_conn_id;
-        self.next_conn_id += 1;
-        self.conns.insert(
+        self.app.metrics().lock().expect("metrics lock").incr("connections", 1);
+        self.core.stats.fds_accepted.fetch_add(1, Ordering::Relaxed);
+        let id = self.core.next_conn_id;
+        self.core.next_conn_id += 1;
+        self.core.conns.insert(
             id,
             Conn {
                 stream,
-                session: SessionState::new(self.inner.cfg.max_request_bytes),
+                session: SessionState::new(self.core.front.max_request_bytes),
                 out: Vec::new(),
                 next_seq: 0,
                 emit_seq: 0,
@@ -337,6 +758,7 @@ impl EventLoop {
 
     fn read_ready(&mut self) {
         let ids: Vec<u64> = self
+            .core
             .conns
             .iter()
             .filter(|(_, c)| c.readable && !c.dead && !c.read_closed)
@@ -345,7 +767,7 @@ impl EventLoop {
         let mut buf = vec![0u8; READ_CHUNK];
         for id in ids {
             let mut events = Vec::new();
-            let conn = self.conns.get_mut(&id).expect("conn exists");
+            let conn = self.core.conns.get_mut(&id).expect("conn exists");
             // Fairness budget: one firehosing client must not pin the loop;
             // leftover bytes stay in the kernel buffer and poll reports the
             // socket readable again next iteration.
@@ -369,8 +791,8 @@ impl EventLoop {
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                     Err(_) => {
-                        self.inner
-                            .metrics
+                        self.app
+                            .metrics()
                             .lock()
                             .expect("metrics lock")
                             .incr("connection_errors", 1);
@@ -387,35 +809,34 @@ impl EventLoop {
         for ev in events {
             match ev {
                 SessionEvent::Request(req) => {
-                    self.inner
-                        .metrics
+                    self.app
+                        .metrics()
                         .lock()
                         .expect("metrics lock")
                         .incr("requests_total", 1);
                     let seq = self.assign_seq(id);
-                    let reply = self.reply_to(id, seq);
-                    dispatch(req, &self.inner, &self.pool, reply);
+                    self.app.on_request(&mut self.core, id, seq, req);
                 }
                 SessionEvent::BadLine(line) => {
-                    self.inner
-                        .metrics
+                    self.app
+                        .metrics()
                         .lock()
                         .expect("metrics lock")
                         .incr("requests_total", 1);
                     let seq = self.assign_seq(id);
-                    self.complete(id, seq, line);
+                    self.core.complete(id, seq, line);
                 }
                 SessionEvent::Oversized(line) => {
-                    self.inner
-                        .metrics
+                    self.app
+                        .metrics()
                         .lock()
                         .expect("metrics lock")
                         .incr("oversized_rejects", 1);
                     let seq = self.assign_seq(id);
-                    self.complete(id, seq, line);
+                    self.core.complete(id, seq, line);
                 }
                 SessionEvent::Close => {
-                    if let Some(c) = self.conns.get_mut(&id) {
+                    if let Some(c) = self.core.conns.get_mut(&id) {
                         c.read_closed = true;
                     }
                 }
@@ -424,38 +845,145 @@ impl EventLoop {
     }
 
     fn assign_seq(&mut self, id: u64) -> u64 {
-        let c = self.conns.get_mut(&id).expect("conn exists");
+        let c = self.core.conns.get_mut(&id).expect("conn exists");
         let seq = c.next_seq;
         c.next_seq += 1;
         seq
     }
 
-    /// The [`Reply`] for request slot (`id`, `seq`): routes the finished
-    /// line back through the completion channel and wakes the loop. Works
-    /// from any thread; a reply for a since-closed connection is dropped.
-    fn reply_to(&self, id: u64, seq: u64) -> Reply {
-        let tx = self.completions_tx.clone();
-        let waker = Arc::clone(&self.waker);
-        Box::new(move |line| {
-            let _ = tx.send((id, seq, line));
-            waker.wake();
-        })
+    /// Drive every ready backend connection: resolve in-progress connects,
+    /// flush pending writes, frame inbound lines for the app, and surface
+    /// deaths (EOF, errors, refused connects) as down events.
+    fn backend_io(&mut self) {
+        let ids: Vec<u64> = self
+            .core
+            .backends
+            .iter()
+            .filter(|(_, b)| b.readable || b.writable)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut buf = vec![0u8; READ_CHUNK];
+        for id in ids {
+            let Some(b) = self.core.backends.get_mut(&id) else { continue };
+            let mut down = false;
+            if b.writable {
+                if b.connecting {
+                    match b.stream.take_error() {
+                        Ok(None) => {
+                            b.connecting = false;
+                            b.last_activity = Instant::now();
+                            self.core.stats.fds_connected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Some(_)) | Err(_) => down = true,
+                    }
+                }
+                if !down && !b.connecting && !b.out.is_empty() {
+                    // Note: a successful flush does NOT refresh the IO
+                    // deadline — only responses (reads) do.
+                    down = !flush_bytes(&b.stream, &mut b.out);
+                }
+            }
+            let mut lines = Vec::new();
+            if !down && b.readable && !b.connecting {
+                let mut budget = 16;
+                loop {
+                    if budget == 0 {
+                        break;
+                    }
+                    budget -= 1;
+                    match (&b.stream).read(&mut buf) {
+                        Ok(0) => {
+                            down = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            b.last_activity = Instant::now();
+                            b.inbuf.extend_from_slice(&buf[..n]);
+                            // Scan only bytes not already searched — the
+                            // cursor survives partial reads, so framing a
+                            // response that arrives in many chunks stays
+                            // linear instead of rescanning from byte 0.
+                            while let Some(rel) =
+                                b.inbuf[b.scanned..].iter().position(|&x| x == b'\n')
+                            {
+                                let pos = b.scanned + rel;
+                                let frame: Vec<u8> = b.inbuf.drain(..=pos).collect();
+                                let line = String::from_utf8_lossy(&frame[..pos])
+                                    .trim_end()
+                                    .to_string();
+                                b.scanned = 0;
+                                b.awaiting = b.awaiting.saturating_sub(1);
+                                lines.push(line);
+                            }
+                            b.scanned = b.inbuf.len();
+                            if b.inbuf.len() > MAX_RESPONSE_BYTES {
+                                // A response outgrew the relay cap; its
+                                // remainder would desync every later line
+                                // on this connection.
+                                down = true;
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            down = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            for line in lines {
+                self.app.on_backend_line(&mut self.core, id, line);
+            }
+            if down {
+                self.backend_down(id);
+            }
+        }
     }
 
-    fn complete(&mut self, id: u64, seq: u64, line: String) {
-        if let Some(c) = self.conns.get_mut(&id) {
-            c.ready.insert(seq, line);
+    /// Enforce the connect and IO deadlines the blocking relay enforced
+    /// with socket timeouts: a backend stuck connecting, or silent while
+    /// it owes responses, is declared down (and its requests fail over).
+    /// A backend that stops *draining* is bounded the same way: a
+    /// pending-write queue past [`MAX_BACKEND_OUTBUF`] means it is not
+    /// keeping up, and waiting the full IO deadline would let the queue
+    /// grow at ingest rate — fail it over instead.
+    fn sweep_backend_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .core
+            .backends
+            .iter()
+            .filter(|(_, b)| {
+                (b.connecting && now.duration_since(b.opened) > BACKEND_CONNECT_TIMEOUT)
+                    || (!b.connecting
+                        && b.awaiting > 0
+                        && now.duration_since(b.last_activity) > BACKEND_IO_TIMEOUT)
+                    || (!b.connecting && b.out.len() > MAX_BACKEND_OUTBUF)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.backend_down(id);
+        }
+    }
+
+    fn backend_down(&mut self, id: u64) {
+        if self.core.backends.remove(&id).is_some() {
+            self.app.on_backend_down(&mut self.core, id);
         }
     }
 
     fn drain_completions(&mut self) {
-        while let Ok((id, seq, line)) = self.completions_rx.try_recv() {
-            self.complete(id, seq, line);
+        while let Ok((id, seq, line)) = self.core.completions_rx.try_recv() {
+            self.core.complete(id, seq, line);
         }
     }
 
     fn flush_conns(&mut self) {
-        for conn in self.conns.values_mut() {
+        let mut errors = 0u64;
+        for conn in self.core.conns.values_mut() {
             if conn.dead {
                 continue;
             }
@@ -468,28 +996,132 @@ impl EventLoop {
             if conn.out.is_empty() {
                 continue;
             }
-            let mut written = 0usize;
-            while written < conn.out.len() {
-                match (&conn.stream).write(&conn.out[written..]) {
-                    Ok(0) => {
-                        conn.dead = true;
-                        break;
+            if !flush_bytes(&conn.stream, &mut conn.out) {
+                errors += 1;
+                conn.dead = true;
+            }
+        }
+        if errors > 0 {
+            self.app
+                .metrics()
+                .lock()
+                .expect("metrics lock")
+                .incr("connection_errors", errors);
+        }
+    }
+}
+
+/// Write as much of `out` as the socket takes, draining written bytes.
+/// Returns `false` when the connection is dead (hard error or EOF-write).
+fn flush_bytes(stream: &TcpStream, out: &mut Vec<u8>) -> bool {
+    let mut written = 0usize;
+    let mut alive = true;
+    while written < out.len() {
+        match (&*stream).write(&out[written..]) {
+            Ok(0) => {
+                alive = false;
+                break;
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                alive = false;
+                break;
+            }
+        }
+    }
+    out.drain(..written);
+    alive
+}
+
+// --------------------------------------------------------------- serve app --
+
+/// The `goomd` instantiation: decoded requests dispatch into the worker
+/// pool (introspection and cache hits answer inline); completions return
+/// through the reactor's reply channel. No backend connections.
+pub struct ServeApp {
+    pub inner: Arc<ServerInner>,
+    pub pool: Arc<Pool<Job>>,
+}
+
+impl App for ServeApp {
+    fn front(&self) -> FrontConfig {
+        FrontConfig {
+            service: "server",
+            max_request_bytes: self.inner.cfg.max_request_bytes,
+            max_connections: self.inner.cfg.max_connections,
+            retry_after_ms: self.inner.cfg.retry_after_ms,
+        }
+    }
+
+    fn metrics(&self) -> &Mutex<Metrics> {
+        &self.inner.metrics
+    }
+
+    fn stats(&self) -> Arc<ReactorStats> {
+        Arc::clone(&self.inner.reactor)
+    }
+
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request) {
+        let reply = core.reply_to(conn, seq);
+        dispatch(req, &self.inner, &self.pool, reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reactor_stats_export_and_high_water_reorder_depth() {
+        let stats = ReactorStats::default();
+        stats.loop_iterations.fetch_add(3, Ordering::Relaxed);
+        stats.raise_reorder_depth(4);
+        stats.raise_reorder_depth(2); // lower: must not regress the mark
+        let doc = stats.to_json();
+        let keys =
+            ["loop_iterations", "wakeups", "fds_accepted", "fds_connected", "max_reorder_depth"];
+        for key in keys {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(doc.get("loop_iterations").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("max_reorder_depth").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn nonblocking_connect_reports_refusal_not_hang() {
+        // A bound-then-dropped port refuses connections: the non-blocking
+        // connect must either fail immediately or resolve the refusal via
+        // take_error after the in-progress phase — never block the caller.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let t0 = Instant::now();
+        match connect_nonblocking(&port) {
+            Err(_) => {}
+            Ok((stream, connecting)) => {
+                if connecting {
+                    // Refusal arrives asynchronously; poll-free check with
+                    // a short grace period.
+                    let mut refused = false;
+                    for _ in 0..200 {
+                        match stream.take_error() {
+                            Ok(Some(_)) | Err(_) => {
+                                refused = true;
+                                break;
+                            }
+                            Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+                        }
                     }
-                    Ok(n) => written += n,
-                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                    Err(_) => {
-                        self.inner
-                            .metrics
-                            .lock()
-                            .expect("metrics lock")
-                            .incr("connection_errors", 1);
-                        conn.dead = true;
-                        break;
-                    }
+                    assert!(refused, "refused connect never surfaced an error");
                 }
             }
-            conn.out.drain(..written);
         }
+        assert!(
+            t0.elapsed() < BACKEND_CONNECT_TIMEOUT + Duration::from_secs(2),
+            "connect path blocked too long"
+        );
     }
 }

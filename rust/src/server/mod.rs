@@ -21,7 +21,11 @@
 //!
 //! Horizontally, N daemons become shards behind the cache-aware
 //! [`router`] tier (`repro route`), which rendezvous-hashes canonical
-//! request keys so repeats land on the shard owning the cache entry.
+//! request keys so repeats land on the shard owning the cache entry. The
+//! router is a second instantiation of the same reactor ([`event_loop`]):
+//! the daemon plugs in a worker-pool app, the router a relay app whose
+//! backend connections the loop manages too, so both fronts run O(1)
+//! threads regardless of client (or shard) count.
 //!
 //! Entry points: `repro serve` ([`serve_blocking`]), `repro route`
 //! ([`router::route_blocking`]), `repro loadgen` ([`loadgen`]) and
@@ -100,7 +104,20 @@ impl Default for ServeConfig {
     }
 }
 
-/// A running daemon: event-loop thread + worker pool, stoppable for tests.
+/// Bind the TCP front shared by `serve` and `route`: both tiers are
+/// instantiations of the same reactor, so the listener plumbing —
+/// bind, read back the OS-assigned address, go non-blocking so the loop
+/// multiplexes accepts and observes shutdown on its poll timeout — lives
+/// in exactly one place.
+pub(crate) fn bind_front(host: &str, port: u16) -> Result<(TcpListener, SocketAddr)> {
+    let listener = TcpListener::bind((host, port))
+        .with_context(|| format!("binding {host}:{port}"))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    listener.set_nonblocking(true).context("set_nonblocking")?;
+    Ok((listener, addr))
+}
+
+/// A running daemon: reactor thread + worker pool, stoppable for tests.
 /// The thread set is fixed at start (1 loop + `workers`) no matter how
 /// many connections arrive.
 pub struct Server {
@@ -113,14 +130,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind, start workers, and begin serving on the event-loop thread.
+    /// Bind, start workers, and begin serving on the reactor thread.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
-        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
-            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
-        let addr = listener.local_addr().context("reading bound address")?;
-        // Non-blocking: the event loop multiplexes accepts with everything
-        // else and observes the shutdown flag on its poll timeout.
-        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let (listener, addr) = bind_front(&cfg.host, cfg.port)?;
         let inner = Arc::new(ServerInner::new(cfg.clone()));
         let pool = {
             let inner = Arc::clone(&inner);
@@ -133,13 +145,13 @@ impl Server {
             ))
         };
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (loop_handle, waker) = event_loop::spawn(
-            listener,
-            Arc::clone(&inner),
-            Arc::clone(&pool),
-            Arc::clone(&shutdown),
-        )
-        .context("spawning event loop")?;
+        let app = event_loop::ServeApp {
+            inner: Arc::clone(&inner),
+            pool: Arc::clone(&pool),
+        };
+        let (loop_handle, waker) =
+            event_loop::spawn("goomd-eventloop", listener, app, Arc::clone(&shutdown))
+                .context("spawning event loop")?;
         Ok(Server {
             addr,
             inner,
@@ -251,6 +263,12 @@ pub struct LoadgenConfig {
     /// When set, every request uses this seed (all cache hits after the
     /// first); otherwise seeds are distinct per (client, request).
     pub shared_seed: Option<u64>,
+    /// Requests issued per write before reading responses (1 = strict
+    /// request/response lockstep, the historical behavior). Higher values
+    /// pipeline: N request lines go out in one burst and the N responses
+    /// are read back in request order, exercising the serving tiers'
+    /// reorder-buffer path under load.
+    pub pipeline: usize,
     /// OS threads driving the client connections (`--threads`, env
     /// `GOOM_THREADS`); 0 = one thread per client (full concurrency).
     /// Lower values run clients in waves on a bounded thread set.
@@ -268,6 +286,7 @@ impl Default for LoadgenConfig {
             dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed: None,
+            pipeline: 1,
             threads: 0,
         }
     }
@@ -359,67 +378,116 @@ struct ClientStats {
     retries: usize,
 }
 
+/// How one response settles a request on the client side.
+enum Settle {
+    Ok { cached: bool },
+    /// Load was shed: back off this long and resend.
+    Retry(u64),
+    Fail,
+}
+
+fn read_settle(reader: &mut BufReader<TcpStream>) -> Result<Settle> {
+    let mut resp = String::new();
+    if reader.read_line(&mut resp)? == 0 {
+        return Err(anyhow!("server closed the connection"));
+    }
+    let doc = json::parse(resp.trim())
+        .map_err(|e| anyhow!("unparseable response: {e}"))?;
+    if doc.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+        let cached = doc.get("cached").and_then(Json::as_bool) == Some(true);
+        return Ok(Settle::Ok { cached });
+    }
+    match doc.get("retry_after_ms").and_then(Json::as_f64) {
+        Some(ms) => Ok(Settle::Retry((ms as u64).clamp(1, 1000))),
+        None => Ok(Settle::Fail),
+    }
+}
+
 /// One loadgen connection: send `requests` chain requests, measure each.
 /// Queue-full rejections honor `retry_after_ms` and retry (bounded).
+/// `pipeline > 1` sends requests in windows of that size before reading
+/// the responses back — the reorder-buffer stress mode.
 fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
     let stream = TcpStream::connect(&cfg.addr)
         .with_context(|| format!("connecting to {}", cfg.addr))?;
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
-    let mut latencies = Vec::with_capacity(cfg.requests);
-    let mut errors = 0usize;
-    let mut cached = 0usize;
-    let mut retries = 0usize;
-    for r in 0..cfg.requests {
+    let mut stats = ClientStats {
+        latencies: Vec::with_capacity(cfg.requests),
+        errors: 0,
+        cached: 0,
+        retries: 0,
+    };
+    let line_for = |r: usize| {
         let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
         let d = if cfg.dims.is_empty() {
             cfg.d
         } else {
             cfg.dims[(client as usize + r) % cfg.dims.len()]
         };
-        let line = protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed);
-        let mut attempts = 0usize;
-        // Latency is client-observed end-to-end: the clock starts once per
-        // request and keeps running across retry_after_ms backoffs, so an
-        // overloaded daemon shows up in the percentiles instead of hiding
-        // behind restarted timers.
+        protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed)
+    };
+    let window = cfg.pipeline.max(1);
+    let mut r = 0usize;
+    while r < cfg.requests {
+        let burst: Vec<String> = (r..(r + window).min(cfg.requests)).map(line_for).collect();
+        r += burst.len();
+        // Latency is client-observed end-to-end: the clock starts when the
+        // burst goes out and keeps running across retry_after_ms backoffs,
+        // so an overloaded daemon shows up in the percentiles instead of
+        // hiding behind restarted timers. Pipelined requests share the
+        // burst's start, so a response's latency includes the queueing the
+        // pipelining itself created — that head-of-line wait is real.
         let t = Instant::now();
-        loop {
-            attempts += 1;
+        for line in &burst {
             writer.write_all(line.as_bytes())?;
             writer.write_all(b"\n")?;
-            writer.flush()?;
-            let mut resp = String::new();
-            if reader.read_line(&mut resp)? == 0 {
-                return Err(anyhow!("server closed the connection"));
-            }
-            let doc = json::parse(resp.trim())
-                .map_err(|e| anyhow!("unparseable response: {e}"))?;
-            let ok = doc.get("ok").and_then(Json::as_bool).unwrap_or(false);
-            if ok {
-                latencies.push(t.elapsed().as_secs_f64());
-                if doc.get("cached").and_then(Json::as_bool) == Some(true) {
-                    cached += 1;
+        }
+        writer.flush()?;
+        // Responses come back strictly in request order (the serving
+        // tiers' reorder buffers guarantee it); shed requests are retried
+        // sequentially after the burst settles.
+        let mut resend: Vec<(String, u64)> = Vec::new();
+        for line in &burst {
+            match read_settle(&mut reader)? {
+                Settle::Ok { cached } => {
+                    stats.latencies.push(t.elapsed().as_secs_f64());
+                    stats.cached += usize::from(cached);
                 }
-                break;
+                Settle::Retry(ms) => resend.push((line.clone(), ms)),
+                Settle::Fail => stats.errors += 1,
             }
-            let retry = doc
-                .get("retry_after_ms")
-                .and_then(Json::as_f64)
-                .map(|ms| ms as u64);
-            match retry {
-                Some(ms) if attempts < 50 => {
-                    retries += 1;
-                    std::thread::sleep(Duration::from_millis(ms.clamp(1, 1000)));
-                }
-                _ => {
-                    errors += 1;
+        }
+        for (line, first_backoff) in resend {
+            let mut backoff = first_backoff;
+            let mut attempts = 1usize;
+            loop {
+                if attempts >= 50 {
+                    stats.errors += 1;
                     break;
+                }
+                stats.retries += 1;
+                std::thread::sleep(Duration::from_millis(backoff));
+                attempts += 1;
+                writer.write_all(line.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                match read_settle(&mut reader)? {
+                    Settle::Ok { cached } => {
+                        stats.latencies.push(t.elapsed().as_secs_f64());
+                        stats.cached += usize::from(cached);
+                        break;
+                    }
+                    Settle::Retry(ms) => backoff = ms,
+                    Settle::Fail => {
+                        stats.errors += 1;
+                        break;
+                    }
                 }
             }
         }
     }
-    Ok(ClientStats { latencies, errors, cached, retries })
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -576,6 +644,7 @@ mod tests {
             dims: Vec::new(),
             method: "goomc64".to_string(),
             shared_seed: None,
+            pipeline: 1,
             threads: 0,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
@@ -595,6 +664,12 @@ mod tests {
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.ok, 24);
         assert_eq!(report.errors, 0);
+        // Pipelined windows (including a window that overhangs the request
+        // count): same totals, responses consumed in request order.
+        let cfg = LoadgenConfig { pipeline: 4, shared_seed: None, ..cfg };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.ok, 24);
+        assert_eq!(report.errors, 0);
         server.stop();
     }
 
@@ -611,6 +686,7 @@ mod tests {
             dims: vec![3, 5, 7],
             method: "goomc64".to_string(),
             shared_seed: None,
+            pipeline: 1,
             threads: 0,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();

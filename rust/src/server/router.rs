@@ -13,41 +13,36 @@
 //! Requests are re-encoded in canonical form before forwarding, so shards
 //! see normalized traffic regardless of client spelling. Introspection ops
 //! (`info`/`metrics`) are answered by the router itself — its metrics
-//! carry per-shard routing counters (`routed[host:port]`), failovers, and
-//! errors. On a backend failure the router retries the request once on a
-//! fresh connection, then fails over down the rendezvous ranking (which
-//! costs cache affinity but preserves availability).
+//! carry per-shard routing counters (`routed[host:port]`), failovers,
+//! errors, and the reactor's own counters under `"reactor"`.
 //!
-//! Relay sessions block on the backend round-trip, so the router keeps the
-//! simple thread-per-connection accept loop; the compute daemon behind it
-//! is where concurrency lives ([`super::event_loop`]). Framing and decode
-//! reuse the same sans-IO [`SessionState`] machine as the daemon.
+//! The router runs on the shared serving reactor
+//! ([`super::event_loop`]): one loop thread multiplexes every client
+//! connection *and* every backend connection, so the front is O(1)
+//! threads regardless of client or shard count (the pre-reactor router
+//! burned one blocking thread per client session). [`RelayApp`] is the
+//! sans-IO brain: client bytes frame into canonical requests, each
+//! request pipelines onto the loop-managed connection of its top-ranked
+//! backend, and because `goomd` answers strictly in request order per
+//! connection, a per-backend FIFO matches response lines back to their
+//! requests while the reactor's per-client reorder buffers restore client
+//! order. On a backend failure every in-flight request on that connection
+//! retries once on a fresh connection, then fails over down its
+//! rendezvous ranking (which costs cache affinity but preserves
+//! availability) — the same one-retry ladder the blocking relay walked,
+//! so responses stay byte-identical to it.
 
+use super::event_loop::{self, App, Core, FrontConfig, ReactorStats};
 use super::protocol::{err_line, num, num_or_null, obj, ok_line, Request};
-use super::session::{SessionEvent, SessionState};
 use crate::coordinator::Metrics;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::collections::{BTreeMap, HashMap};
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// Cap on one relayed backend response line (scan results can run large,
-/// but a runaway backend must not buffer unboundedly into the router).
-const MAX_RESPONSE_BYTES: u64 = 32 << 20;
-
-/// Bound on establishing a backend connection: a blackholed shard must
-/// become an error (and a failover) quickly, not a hung relay session.
-const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
-
-/// Bound on one backend round-trip. Generous — requests at the protocol's
-/// compute bounds legitimately take a while — but finite, so a shard that
-/// accepts and then never answers still trips the failover path.
-const BACKEND_IO_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// `repro route` tuning knobs.
 #[derive(Debug, Clone)]
@@ -117,107 +112,40 @@ pub fn rendezvous_rank(key: &str, backends: &[String]) -> Vec<usize> {
 struct RouterInner {
     cfg: RouterConfig,
     metrics: Mutex<Metrics>,
+    reactor: Arc<ReactorStats>,
     started: Instant,
 }
 
-/// A running router: accept loop + relay sessions, stoppable for tests.
+/// A running router: one reactor thread relaying clients to shards,
+/// stoppable for tests.
 pub struct Router {
     addr: SocketAddr,
     inner: Arc<RouterInner>,
     shutdown: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
+    waker: Arc<event_loop::Waker>,
+    loop_handle: Option<JoinHandle<()>>,
 }
 
 impl Router {
-    /// Bind and begin accepting in a background thread.
+    /// Bind and begin relaying on a reactor thread.
     pub fn start(cfg: RouterConfig) -> Result<Router> {
         anyhow::ensure!(
             !cfg.backends.is_empty(),
             "router needs at least one backend (--backends=host:port[,host:port...])"
         );
-        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
-            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
-        let addr = listener.local_addr().context("reading bound address")?;
-        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let (listener, addr) = super::bind_front(&cfg.host, cfg.port)?;
         let inner = Arc::new(RouterInner {
-            cfg: cfg.clone(),
+            cfg,
             metrics: Mutex::new(Metrics::new()),
+            reactor: Arc::new(ReactorStats::default()),
             started: Instant::now(),
         });
         let shutdown = Arc::new(AtomicBool::new(false));
-        let max_connections = cfg.max_connections.max(1);
-        let accept_handle = {
-            let inner = Arc::clone(&inner);
-            let shutdown = Arc::clone(&shutdown);
-            let active = Arc::new(AtomicUsize::new(0));
-            std::thread::Builder::new()
-                .name("goomd-router-accept".to_string())
-                .spawn(move || {
-                    while !shutdown.load(Ordering::SeqCst) {
-                        match listener.accept() {
-                            Ok((mut stream, _peer)) => {
-                                // Sessions use blocking reads; undo the
-                                // inherited non-blocking accept flag.
-                                if stream.set_nonblocking(false).is_err() {
-                                    continue; // drops (closes) the stream
-                                }
-                                if active.load(Ordering::SeqCst) >= max_connections {
-                                    let mut m =
-                                        inner.metrics.lock().expect("metrics lock");
-                                    m.incr("connections_rejected", 1);
-                                    drop(m);
-                                    let line = err_line(
-                                        &format!(
-                                            "router busy: connection limit \
-                                             ({max_connections}) reached"
-                                        ),
-                                        Some(inner.cfg.retry_after_ms),
-                                    );
-                                    let _ = stream.write_all(line.as_bytes());
-                                    let _ = stream.write_all(b"\n");
-                                    continue; // drops (closes) the stream
-                                }
-                                inner
-                                    .metrics
-                                    .lock()
-                                    .expect("metrics lock")
-                                    .incr("connections", 1);
-                                active.fetch_add(1, Ordering::SeqCst);
-                                let session_inner = Arc::clone(&inner);
-                                let session_active = Arc::clone(&active);
-                                let spawned = std::thread::Builder::new()
-                                    .name("goomd-router-session".to_string())
-                                    .spawn(move || {
-                                        if serve_session(stream, &session_inner)
-                                            .is_err()
-                                        {
-                                            session_inner
-                                                .metrics
-                                                .lock()
-                                                .expect("metrics lock")
-                                                .incr("connection_errors", 1);
-                                        }
-                                        session_active
-                                            .fetch_sub(1, Ordering::SeqCst);
-                                    });
-                                if spawned.is_err() {
-                                    active.fetch_sub(1, Ordering::SeqCst);
-                                }
-                            }
-                            Err(e)
-                                if e.kind() == std::io::ErrorKind::WouldBlock =>
-                            {
-                                std::thread::sleep(Duration::from_millis(5));
-                            }
-                            Err(_) => {
-                                std::thread::sleep(Duration::from_millis(50));
-                            }
-                        }
-                    }
-                })
-                .expect("spawning router accept thread")
-        };
-        Ok(Router { addr, inner, shutdown, accept_handle: Some(accept_handle) })
+        let app = RelayApp::new(Arc::clone(&inner));
+        let (loop_handle, waker) =
+            event_loop::spawn("goomd-router-reactor", listener, app, Arc::clone(&shutdown))
+                .context("spawning router reactor")?;
+        Ok(Router { addr, inner, shutdown, waker, loop_handle: Some(loop_handle) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -233,15 +161,16 @@ impl Router {
         self.inner.metrics.lock().expect("metrics lock").summary()
     }
 
-    /// Stop accepting and join the accept thread (live relay sessions end
-    /// when their clients disconnect).
+    /// Stop relaying: wake the reactor out of `poll` and join it (live
+    /// client and backend connections close with the loop).
     pub fn stop(mut self) {
         self.stop_impl();
     }
 
     fn stop_impl(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        self.waker.wake();
+        if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
     }
@@ -274,206 +203,220 @@ pub fn route_blocking(cfg: RouterConfig) -> Result<()> {
     }
 }
 
-// --------------------------------------------------------------- sessions --
+// -------------------------------------------------------------- relay app --
 
-/// Pooled connections to backends, one per (session, backend).
-struct BackendConn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+/// One relayed request awaiting its backend's response line.
+struct RelayEntry {
+    /// Reactor client connection and request slot the answer belongs to.
+    conn: u64,
+    seq: u64,
+    /// Canonical request line (what gets (re)sent on every attempt).
+    line: String,
+    /// Rendezvous ranking for this request's key, best first.
+    ranked: Vec<usize>,
+    /// Position in `ranked` currently being tried.
+    rank_pos: usize,
+    /// Failed connection attempts on the current backend (2 exhausts it:
+    /// the possibly-stale pooled connection, then one fresh retry — the
+    /// blocking relay's ladder).
+    tries: u8,
 }
 
-#[derive(Default)]
-struct BackendConns {
-    conns: HashMap<usize, BackendConn>,
+/// Sans-IO relay brain: requests in, backend sends + completions out. All
+/// socket work happens in the reactor core.
+pub struct RelayApp {
+    inner: Arc<RouterInner>,
+    /// Backend index → the live loop-managed connection toward it.
+    live: HashMap<usize, u64>,
+    /// Reactor backend-conn id → (backend index, FIFO of in-flight
+    /// relays). `goomd` answers strictly in request order per connection,
+    /// so the front of the queue always owns the next response line.
+    pending: HashMap<u64, (usize, VecDeque<RelayEntry>)>,
 }
 
-impl BackendConns {
-    /// Send `line` to backend `idx` and read one response line. Retries
-    /// once on a fresh connection (the pooled one may have died with a
-    /// backend restart) before reporting the error.
-    fn forward(&mut self, idx: usize, addr: &str, line: &str) -> std::io::Result<String> {
-        for fresh in [false, true] {
-            if !self.conns.contains_key(&idx) {
-                let stream = connect_backend(addr)?;
-                let reader = BufReader::new(stream.try_clone()?);
-                self.conns.insert(idx, BackendConn { reader, writer: stream });
-            }
-            let conn = self.conns.get_mut(&idx).expect("inserted above");
-            match round_trip(conn, line) {
-                Ok(resp) => return Ok(resp),
-                Err(e) => {
-                    self.conns.remove(&idx);
-                    if fresh {
-                        return Err(e);
+impl RelayApp {
+    fn new(inner: Arc<RouterInner>) -> Self {
+        Self { inner, live: HashMap::new(), pending: HashMap::new() }
+    }
+
+    /// Send `entry` to the best backend it has not yet exhausted, opening
+    /// a loop-managed connection when none is live. Immediate connect
+    /// errors consume attempts synchronously; asynchronous failures
+    /// (refused/blackholed connects, mid-flight deaths) consume them via
+    /// [`RelayApp::on_backend_down`]. Exhausting the ranking answers the
+    /// client with the same no-backend error line the blocking relay sent.
+    fn forward(&mut self, core: &mut Core, mut entry: RelayEntry) {
+        loop {
+            let Some(&idx) = entry.ranked.get(entry.rank_pos) else {
+                self.inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
+                core.complete(
+                    entry.conn,
+                    entry.seq,
+                    err_line(
+                        &format!(
+                            "no backend available for request (tried {})",
+                            entry.ranked.len()
+                        ),
+                        Some(self.inner.cfg.retry_after_ms),
+                    ),
+                );
+                return;
+            };
+            let pooled = self.live.get(&idx).copied().filter(|b| core.backend_alive(*b));
+            let bid = match pooled {
+                Some(b) => b,
+                None => match core.backend_open(&self.inner.cfg.backends[idx]) {
+                    Ok(b) => {
+                        self.live.insert(idx, b);
+                        self.pending.insert(b, (idx, VecDeque::new()));
+                        b
                     }
-                }
+                    Err(_) => {
+                        entry.tries += 1;
+                        if entry.tries >= 2 {
+                            entry.rank_pos += 1;
+                            entry.tries = 0;
+                        }
+                        continue;
+                    }
+                },
+            };
+            core.backend_send(bid, &entry.line);
+            let pending = self.pending.get_mut(&bid);
+            pending.expect("pending queue exists for this conn").1.push_back(entry);
+            return;
+        }
+    }
+}
+
+impl App for RelayApp {
+    fn front(&self) -> FrontConfig {
+        FrontConfig {
+            service: "router",
+            max_request_bytes: self.inner.cfg.max_request_bytes,
+            max_connections: self.inner.cfg.max_connections,
+            retry_after_ms: self.inner.cfg.retry_after_ms,
+        }
+    }
+
+    fn metrics(&self) -> &Mutex<Metrics> {
+        &self.inner.metrics
+    }
+
+    fn stats(&self) -> Arc<ReactorStats> {
+        Arc::clone(&self.inner.reactor)
+    }
+
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request) {
+        match req {
+            Request::Info => core.complete(conn, seq, ok_line(info_json(&self.inner), false)),
+            Request::Metrics => {
+                core.complete(conn, seq, ok_line(metrics_json(&self.inner), false))
             }
-        }
-        unreachable!("the fresh attempt returns")
-    }
-}
-
-/// Connect with bounded timeouts: an unreachable or unresponsive shard
-/// must become an `Err` (feeding the failover path), never a hung session.
-fn connect_backend(addr: &str) -> std::io::Result<TcpStream> {
-    let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
-        std::io::Error::new(
-            std::io::ErrorKind::InvalidInput,
-            "backend address resolves to nothing",
-        )
-    })?;
-    let stream = TcpStream::connect_timeout(&sockaddr, BACKEND_CONNECT_TIMEOUT)?;
-    stream.set_read_timeout(Some(BACKEND_IO_TIMEOUT))?;
-    stream.set_write_timeout(Some(BACKEND_IO_TIMEOUT))?;
-    Ok(stream)
-}
-
-fn round_trip(conn: &mut BackendConn, line: &str) -> std::io::Result<String> {
-    conn.writer.write_all(line.as_bytes())?;
-    conn.writer.write_all(b"\n")?;
-    let mut resp = String::new();
-    let n = (&mut conn.reader).take(MAX_RESPONSE_BYTES).read_line(&mut resp)?;
-    if n == 0 {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::UnexpectedEof,
-            "backend closed the connection",
-        ));
-    }
-    if !resp.ends_with('\n') {
-        // Either the response outgrew MAX_RESPONSE_BYTES (its remainder
-        // would desync every later request on this pooled stream) or the
-        // backend died mid-line; both invalidate the connection.
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "backend response truncated or exceeded the relay size cap",
-        ));
-    }
-    Ok(resp.trim_end().to_string())
-}
-
-/// Serve one client connection: frame/decode through the sans-IO session
-/// machine, answer introspection locally, relay compute ops to the shard
-/// the rendezvous ranking picks.
-fn serve_session(stream: TcpStream, inner: &Arc<RouterInner>) -> std::io::Result<()> {
-    let mut session = SessionState::new(inner.cfg.max_request_bytes);
-    let mut backends = BackendConns::default();
-    let mut reader = stream.try_clone()?;
-    let mut writer = stream;
-    let mut buf = [0u8; 8192];
-    let mut events = Vec::new();
-    loop {
-        let n = match reader.read(&mut buf) {
-            Ok(n) => n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
-        };
-        if n == 0 {
-            session.on_eof(&mut events);
-        } else {
-            session.on_bytes(&buf[..n], &mut events);
-        }
-        for ev in events.drain(..) {
-            match ev {
-                SessionEvent::Request(req) => {
-                    inner
-                        .metrics
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("requests_total", 1);
-                    let line = handle_request(req, inner, &mut backends);
-                    respond(&mut writer, &line)?;
-                }
-                SessionEvent::BadLine(line) => {
-                    inner
-                        .metrics
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("requests_total", 1);
-                    respond(&mut writer, &line)?;
-                }
-                SessionEvent::Oversized(line) => {
-                    inner
+            compute => {
+                let key = compute
+                    .canonical_key()
+                    .expect("compute requests always have a canonical key");
+                let line = compute
+                    .canonical_line()
+                    .expect("compute requests always encode");
+                // Canonicalizing spells out defaults, so a request that
+                // just fit the inbound cap can exceed it (by ~tens of
+                // bytes). Reject here with a clear error rather than
+                // letting the shard's identical cap produce a confusing
+                // rejection.
+                if line.len() > self.inner.cfg.max_request_bytes {
+                    self.inner
                         .metrics
                         .lock()
                         .expect("metrics lock")
                         .incr("oversized_rejects", 1);
-                    respond(&mut writer, &line)?;
+                    core.complete(
+                        conn,
+                        seq,
+                        err_line(
+                            &format!(
+                                "canonical request form is {} bytes, exceeding {} \
+                                 (raise --max-request-bytes on router and shards)",
+                                line.len(),
+                                self.inner.cfg.max_request_bytes
+                            ),
+                            None,
+                        ),
+                    );
+                    return;
                 }
-                SessionEvent::Close => return Ok(()),
-            }
-        }
-        if n == 0 {
-            return Ok(());
-        }
-    }
-}
-
-fn handle_request(
-    req: Request,
-    inner: &Arc<RouterInner>,
-    backends: &mut BackendConns,
-) -> String {
-    match req {
-        Request::Info => ok_line(info_json(inner), false),
-        Request::Metrics => ok_line(metrics_json(inner), false),
-        compute => {
-            let key = compute
-                .canonical_key()
-                .expect("compute requests always have a canonical key");
-            let line = compute
-                .canonical_line()
-                .expect("compute requests always encode");
-            // Canonicalizing spells out defaults, so a request that just
-            // fit the inbound cap can exceed it (by ~tens of bytes).
-            // Reject here with a clear error rather than letting the
-            // shard's identical cap produce a confusing rejection.
-            if line.len() > inner.cfg.max_request_bytes {
-                inner
-                    .metrics
-                    .lock()
-                    .expect("metrics lock")
-                    .incr("oversized_rejects", 1);
-                return err_line(
-                    &format!(
-                        "canonical request form is {} bytes, exceeding {} \
-                         (raise --max-request-bytes on router and shards)",
-                        line.len(),
-                        inner.cfg.max_request_bytes
-                    ),
-                    None,
+                let ranked = rendezvous_rank(&key, &self.inner.cfg.backends);
+                self.forward(
+                    core,
+                    RelayEntry { conn, seq, line, ranked, rank_pos: 0, tries: 0 },
                 );
             }
-            let ranked = rendezvous_rank(&key, &inner.cfg.backends);
-            for (attempt, &idx) in ranked.iter().enumerate() {
-                let addr = &inner.cfg.backends[idx];
-                match backends.forward(idx, addr, &line) {
-                    Ok(resp) => {
-                        let mut m = inner.metrics.lock().expect("metrics lock");
-                        m.incr_labeled("routed", addr, 1);
-                        if attempt > 0 {
-                            m.incr("route_failovers", 1);
-                        }
-                        return resp;
-                    }
-                    Err(_) => continue, // next-ranked backend
-                }
+        }
+    }
+
+    fn on_backend_line(&mut self, core: &mut Core, backend: u64, line: String) {
+        let (idx, entry) = match self.pending.get_mut(&backend) {
+            None => return, // line from a connection already failed over
+            Some((idx, queue)) => (*idx, queue.pop_front()),
+        };
+        let Some(entry) = entry else {
+            // A response nobody asked for: the framing is desynced, and
+            // every later line on this connection would mis-match. Nothing
+            // is in flight, so the connection is safe to drop — closed in
+            // the core too, or its fd would stay polled until the remote
+            // side closed. The next request toward this backend opens a
+            // fresh one.
+            self.pending.remove(&backend);
+            if self.live.get(&idx) == Some(&backend) {
+                self.live.remove(&idx);
             }
-            inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
-            err_line(
-                &format!(
-                    "no backend available for request (tried {})",
-                    ranked.len()
-                ),
-                Some(inner.cfg.retry_after_ms),
-            )
+            core.backend_close(backend);
+            self.inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("backend_protocol_errors", 1);
+            return;
+        };
+        let addr = &self.inner.cfg.backends[idx];
+        {
+            let mut m = self.inner.metrics.lock().expect("metrics lock");
+            m.incr_labeled("routed", addr, 1);
+            if entry.rank_pos > 0 {
+                m.incr("route_failovers", 1);
+            }
+        }
+        core.complete(entry.conn, entry.seq, line);
+    }
+
+    fn on_backend_down(&mut self, core: &mut Core, backend: u64) {
+        let Some((idx, queue)) = self.pending.remove(&backend) else { return };
+        if self.live.get(&idx) == Some(&backend) {
+            self.live.remove(&idx);
+        }
+        if !queue.is_empty() {
+            self.inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("backend_disconnects", 1);
+        }
+        // Walk the one-retry ladder for everything the dead connection
+        // owed, preserving request order (retries of a batch share the
+        // fresh connection `forward` opens for the first of them).
+        for mut entry in queue {
+            entry.tries += 1;
+            if entry.tries >= 2 {
+                entry.rank_pos += 1;
+                entry.tries = 0;
+            }
+            self.forward(core, entry);
         }
     }
 }
 
-fn respond(writer: &mut TcpStream, line: &str) -> std::io::Result<()> {
-    writer.write_all(line.as_bytes())?;
-    writer.write_all(b"\n")
-}
+// ----------------------------------------------------------- introspection --
 
 fn info_json(inner: &Arc<RouterInner>) -> Json {
     obj(vec![
@@ -518,6 +461,7 @@ fn metrics_json(inner: &Arc<RouterInner>) -> Json {
     obj(vec![
         ("counters", Json::Obj(counters)),
         ("gauges", Json::Obj(gauges)),
+        ("reactor", inner.reactor.to_json()),
     ])
 }
 

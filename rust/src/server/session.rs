@@ -6,8 +6,9 @@
 //! and close signals. It owns framing (newline splitting, the
 //! `max_request_bytes` slow-loris guard with bounded discard/resync) and
 //! decoding, but touches no sockets, so the same protocol code is driven by
-//! the readiness event loop ([`super::event_loop`]), the blocking router
-//! sessions ([`super::router`]), and plain unit tests.
+//! both instantiations of the serving reactor ([`super::event_loop`]) —
+//! the compute daemon and the router's relay app ([`super::router`]) —
+//! and by plain unit tests.
 //!
 //! [`dispatch`] turns a decoded request into a response: introspection ops
 //! answer inline, cache hits are served from memory, and compute ops are
@@ -48,6 +49,9 @@ pub struct ServerInner {
     pub cache: Mutex<LruCache>,
     pub inflight: Inflight,
     pub metrics: Mutex<Metrics>,
+    /// The reactor's own counters (iterations, wakeups, accepted fds,
+    /// reorder high-water), exported through `metrics` under `"reactor"`.
+    pub reactor: Arc<super::event_loop::ReactorStats>,
     pub started: Instant,
 }
 
@@ -59,6 +63,7 @@ impl ServerInner {
             cache,
             inflight: Inflight::new(),
             metrics: Mutex::new(Metrics::new()),
+            reactor: Arc::new(super::event_loop::ReactorStats::default()),
             started: Instant::now(),
         }
     }
@@ -764,6 +769,7 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
         ("timers", Json::Obj(timers)),
         ("kernel", kernel_json()),
         ("pool", pool_json()),
+        ("reactor", inner.reactor.to_json()),
         ("queue_len", num(pool.queue_len() as f64)),
         ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
         ("inflight_keys", num(inner.inflight.len() as f64)),
