@@ -60,6 +60,81 @@ pub struct ChainResult {
     /// max log-magnitude (natural log) reached by any element, as far as
     /// trackable by the method.
     pub final_max_logmag: f64,
+    /// Largest finite log-magnitude (natural log) observed in any state the
+    /// run passed through. NaN when the method doesn't track it (floats).
+    pub max_logmag_seen: f64,
+    /// Smallest finite log-magnitude observed in any state. GOOM zeros
+    /// (logmag = −inf) are excluded — they are exact, not small. NaN when
+    /// untracked.
+    pub min_logmag_seen: f64,
+    /// Steps whose post-multiply state contained a NaN or +inf logmag.
+    pub nonfinite_steps: u64,
+}
+
+impl ChainResult {
+    /// Decades of dynamic range the run swept: the finite logmag spread
+    /// converted from natural log to log10. NaN when the method didn't
+    /// track the range or no finite magnitude was ever seen.
+    pub fn dynamic_range_decades(&self) -> f64 {
+        if self.max_logmag_seen.is_finite() && self.min_logmag_seen.is_finite() {
+            (self.max_logmag_seen - self.min_logmag_seen) / std::f64::consts::LN_10
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Running dynamic-range observation folded alongside the failure check in
+/// the GOOM chain loops: largest/smallest finite logmag seen and how many
+/// states carried a NaN/+inf logmag. Pure reads — the chain values are
+/// untouched, so results stay bit-identical with or without the telemetry.
+#[derive(Clone, Copy)]
+struct RangeObs {
+    max: f64,
+    min: f64,
+    nonfinite_steps: u64,
+}
+
+impl RangeObs {
+    fn new() -> Self {
+        Self { max: f64::NEG_INFINITY, min: f64::INFINITY, nonfinite_steps: 0 }
+    }
+
+    fn observe<T: crate::goom::GoomFloat>(&mut self, logmag: &[T]) {
+        let mut bad = false;
+        for &l in logmag {
+            if l.is_finite() {
+                let l = l.to_f64();
+                if l > self.max {
+                    self.max = l;
+                }
+                if l < self.min {
+                    self.min = l;
+                }
+            } else if l.is_nan() || l == T::INFINITY {
+                bad = true;
+            }
+        }
+        if bad {
+            self.nonfinite_steps += 1;
+        }
+    }
+
+    fn max_seen(&self) -> f64 {
+        if self.max.is_finite() {
+            self.max
+        } else {
+            f64::NAN
+        }
+    }
+
+    fn min_seen(&self) -> f64 {
+        if self.min.is_finite() {
+            self.min
+        } else {
+            f64::NAN
+        }
+    }
 }
 
 fn randn_mat_f32(d: usize, rng: &mut Rng) -> Vec<f32> {
@@ -121,6 +196,9 @@ fn run_chain_f32(d: usize, max_steps: usize, seed: u64) -> ChainResult {
                 steps_completed: t,
                 failed: true,
                 final_max_logmag: max_abs.max(f32::MIN_POSITIVE).ln() as f64,
+                max_logmag_seen: f64::NAN,
+                min_logmag_seen: f64::NAN,
+                nonfinite_steps: 0,
             };
         }
     }
@@ -130,6 +208,9 @@ fn run_chain_f32(d: usize, max_steps: usize, seed: u64) -> ChainResult {
         steps_completed: max_steps,
         failed: false,
         final_max_logmag: max_abs.ln() as f64,
+        max_logmag_seen: f64::NAN,
+        min_logmag_seen: f64::NAN,
+        nonfinite_steps: 0,
     }
 }
 
@@ -156,6 +237,9 @@ fn run_chain_f64(d: usize, max_steps: usize, seed: u64) -> ChainResult {
                 steps_completed: t,
                 failed: true,
                 final_max_logmag: max_abs.max(f64::MIN_POSITIVE).ln(),
+                max_logmag_seen: f64::NAN,
+                min_logmag_seen: f64::NAN,
+                nonfinite_steps: 0,
             };
         }
     }
@@ -165,6 +249,9 @@ fn run_chain_f64(d: usize, max_steps: usize, seed: u64) -> ChainResult {
         steps_completed: max_steps,
         failed: false,
         final_max_logmag: max_abs.ln(),
+        max_logmag_seen: f64::NAN,
+        min_logmag_seen: f64::NAN,
+        nonfinite_steps: 0,
     }
 }
 
@@ -183,10 +270,13 @@ fn run_chain_goom<T: crate::goom::GoomFloat>(
     let mut a = GoomMat::<T>::zeros(d, d);
     let mut next = GoomMat::<T>::zeros(d, d);
     let mut scratch = LmmeScratch::new();
+    let mut obs = RangeObs::new();
+    obs.observe(&s.logmag);
     for t in 0..max_steps {
         a.fill_randn(&mut rng);
         lmme_into(&a, &s, &mut next, &mut scratch, 1);
         std::mem::swap(&mut s, &mut next);
+        obs.observe(&s.logmag);
         if s.has_nan() || !s.max_logmag().is_finite() {
             return ChainResult {
                 method,
@@ -194,6 +284,9 @@ fn run_chain_goom<T: crate::goom::GoomFloat>(
                 steps_completed: t,
                 failed: true,
                 final_max_logmag: s.max_logmag().to_f64(),
+                max_logmag_seen: obs.max_seen(),
+                min_logmag_seen: obs.min_seen(),
+                nonfinite_steps: obs.nonfinite_steps,
             };
         }
     }
@@ -203,6 +296,9 @@ fn run_chain_goom<T: crate::goom::GoomFloat>(
         steps_completed: max_steps,
         failed: false,
         final_max_logmag: s.max_logmag().to_f64(),
+        max_logmag_seen: obs.max_seen(),
+        min_logmag_seen: obs.min_seen(),
+        nonfinite_steps: obs.nonfinite_steps,
     }
 }
 
@@ -249,6 +345,10 @@ pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
     let mut next: Vec<GoomMat<T>> =
         specs.iter().map(|_| GoomMat::<T>::zeros(d, d)).collect();
     let mut results: Vec<Option<ChainResult>> = vec![None; specs.len()];
+    let mut obs: Vec<RangeObs> = vec![RangeObs::new(); specs.len()];
+    for (i, state) in states.iter().enumerate() {
+        obs[i].observe(&state.logmag);
+    }
     for (i, spec) in specs.iter().enumerate() {
         if spec.steps == 0 {
             results[i] = Some(ChainResult {
@@ -257,6 +357,9 @@ pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
                 steps_completed: 0,
                 failed: false,
                 final_max_logmag: states[i].max_logmag().to_f64(),
+                max_logmag_seen: obs[i].max_seen(),
+                min_logmag_seen: obs[i].min_seen(),
+                nonfinite_steps: obs[i].nonfinite_steps,
             });
         }
     }
@@ -279,6 +382,7 @@ pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
         for &i in &active {
             lmme_into(&trans[i], &states[i], &mut next[i], scratch, threads);
             std::mem::swap(&mut states[i], &mut next[i]);
+            obs[i].observe(&states[i].logmag);
             let failed = states[i].has_nan() || !states[i].max_logmag().is_finite();
             if failed {
                 results[i] = Some(ChainResult {
@@ -287,6 +391,9 @@ pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
                     steps_completed: t,
                     failed: true,
                     final_max_logmag: states[i].max_logmag().to_f64(),
+                    max_logmag_seen: obs[i].max_seen(),
+                    min_logmag_seen: obs[i].min_seen(),
+                    nonfinite_steps: obs[i].nonfinite_steps,
                 });
             } else if t + 1 == specs[i].steps {
                 results[i] = Some(ChainResult {
@@ -295,6 +402,9 @@ pub fn run_chain_goom_batched_with_scratch<T: crate::goom::GoomFloat>(
                     steps_completed: specs[i].steps,
                     failed: false,
                     final_max_logmag: states[i].max_logmag().to_f64(),
+                    max_logmag_seen: obs[i].max_seen(),
+                    min_logmag_seen: obs[i].min_seen(),
+                    nonfinite_steps: obs[i].nonfinite_steps,
                 });
             }
         }
@@ -322,6 +432,9 @@ fn run_chain_hlo(
     let mut state = GoomMat::<f32>::randn(d, d, &mut rng);
     let mut done = 0usize;
     let mut last_max = f64::NEG_INFINITY;
+    // The artifact only returns the per-step max-logmag trace, so the AOT
+    // path tracks max-side range only (min stays NaN).
+    let mut max_seen = f64::NAN;
     while done < max_steps {
         let k = block_k.min(max_steps - done);
         // The artifact's block length is fixed; pad short tails with
@@ -345,7 +458,15 @@ fn run_chain_hlo(
                 steps_completed: done,
                 failed: true,
                 final_max_logmag: last_max,
+                max_logmag_seen: max_seen,
+                min_logmag_seen: f64::NAN,
+                nonfinite_steps: 1,
             });
+        }
+        for &m in &trace[..k] {
+            if m.is_finite() && (max_seen.is_nan() || m as f64 > max_seen) {
+                max_seen = m as f64;
+            }
         }
         last_max = trace[k - 1] as f64;
         done += k;
@@ -356,6 +477,9 @@ fn run_chain_hlo(
         steps_completed: max_steps,
         failed: false,
         final_max_logmag: last_max,
+        max_logmag_seen: max_seen,
+        min_logmag_seen: f64::NAN,
+        nonfinite_steps: 0,
     })
 }
 
@@ -430,6 +554,19 @@ mod tests {
         assert!(!res.failed, "GOOM chain must complete");
         assert_eq!(res.steps_completed, steps);
         assert!(res.final_max_logmag > 1000.0, "{}", res.final_max_logmag);
+        // The run's dynamic-range telemetry spans from the initial N(0,1)
+        // magnitudes up past the final state's growth.
+        assert!(res.max_logmag_seen >= res.final_max_logmag);
+        assert!(res.min_logmag_seen < 0.0, "{}", res.min_logmag_seen);
+        assert_eq!(res.nonfinite_steps, 0);
+        assert!(res.dynamic_range_decades() > 100.0, "{}", res.dynamic_range_decades());
+    }
+
+    #[test]
+    fn float_methods_report_no_dynamic_range() {
+        let res = run_chain(Method::F32, 8, 10, 5, None).unwrap();
+        assert!(res.max_logmag_seen.is_nan() && res.min_logmag_seen.is_nan());
+        assert!(res.dynamic_range_decades().is_nan());
     }
 
     #[test]
@@ -472,6 +609,11 @@ mod tests {
             assert_eq!(got.steps_completed, solo.steps_completed);
             assert_eq!(got.failed, solo.failed);
             assert_eq!(got.final_max_logmag, solo.final_max_logmag, "seed {}", spec.seed);
+            // The dynamic-range telemetry is part of the cacheable result,
+            // so it must agree bit-for-bit too (bits, so NaN == NaN).
+            assert_eq!(got.max_logmag_seen.to_bits(), solo.max_logmag_seen.to_bits());
+            assert_eq!(got.min_logmag_seen.to_bits(), solo.min_logmag_seen.to_bits());
+            assert_eq!(got.nonfinite_steps, solo.nonfinite_steps);
         }
         // Identical requests produce identical results within the batch too.
         assert_eq!(batched[0].final_max_logmag, batched[3].final_max_logmag);

@@ -1,37 +1,139 @@
-//! Lightweight metrics registry: named counters and timers with a text
-//! summary. Experiments report through this so the launcher can persist a
-//! uniform run summary.
+//! Lightweight metrics registry: named counters, gauges, and log-bucketed
+//! latency histograms with a text summary. Experiments report through this
+//! so the launcher can persist a uniform run summary, and the serving
+//! layer's `metrics` op exports it on the wire.
+//!
+//! Timers are [`Histogram`]s rather than sample windows: a long-lived
+//! daemon holds a fixed ~3 KB per timer no matter how many requests it
+//! records, every sample ever recorded still contributes to the
+//! percentiles (a ring window forgets everything older than its capacity),
+//! and two histograms merge losslessly by adding bucket counts — which is
+//! what lets per-shard stage timings aggregate across a fleet.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Samples kept per timer for percentile estimates. Totals (count/sum) stay
-/// exact and all-time; the sample window is a ring so a long-lived daemon
-/// recording per-request latencies holds bounded memory.
-const TIMER_WINDOW: usize = 4096;
+/// Smallest resolvable sample: 1 ns. Everything below (including 0) lands
+/// in the underflow bucket and reports as the observed minimum.
+const HIST_MIN: f64 = 1e-9;
+/// Sub-buckets per octave (factor 2^(1/8) ≈ 1.0905 between bucket
+/// boundaries), bounding quantile relative error by 2^(1/8) − 1 ≈ 9.05%.
+const HIST_SUBBUCKETS: usize = 8;
+/// Octaves covered above [`HIST_MIN`]: 2^48 ns ≈ 78 hours, past which the
+/// overflow bucket reports the observed maximum.
+const HIST_OCTAVES: usize = 48;
+/// Bucket count: underflow + octaves × sub-buckets + overflow.
+const HIST_BUCKETS: usize = HIST_OCTAVES * HIST_SUBBUCKETS + 2;
 
-#[derive(Debug, Default, Clone)]
-struct Timer {
-    /// Ring buffer of the most recent samples (percentiles).
-    window: Vec<f64>,
-    /// Next overwrite position once the window is full.
-    next: usize,
-    /// All-time sample count.
+/// Log-bucketed histogram over positive samples (seconds): geometric
+/// buckets at factor 2^(1/8), exact all-time count/sum/min/max, and
+/// nearest-rank quantiles with bounded relative error.
+///
+/// Mergeable: bucket counts (and the exact aggregates) add, so
+/// `merge(h(a), h(b)) == h(a ++ b)` — associative and commutative, the
+/// property that makes per-thread or per-shard recording aggregate
+/// without loss.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
     count: u64,
-    /// All-time sum of samples.
     sum: f64,
+    min: f64,
+    max: f64,
 }
 
-impl Timer {
-    fn record(&mut self, secs: f64) {
-        self.count += 1;
-        self.sum += secs;
-        if self.window.len() < TIMER_WINDOW {
-            self.window.push(secs);
-        } else {
-            self.window[self.next] = secs;
-            self.next = (self.next + 1) % TIMER_WINDOW;
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
         }
+    }
+}
+
+/// Bucket for sample `v`: 0 is underflow, `HIST_BUCKETS - 1` overflow,
+/// bucket `i` in between covers `[HIST_MIN·2^((i−1)/8), HIST_MIN·2^(i/8))`.
+fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v < HIST_MIN {
+        return 0;
+    }
+    let pos = (v / HIST_MIN).log2() * HIST_SUBBUCKETS as f64;
+    (pos.floor() as usize + 1).min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in: counts add, aggregates combine. The
+    /// result is identical to having recorded both sample streams into one
+    /// histogram (up to float-addition order in `sum`).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+
+    /// Nearest-rank quantile (q in [0, 1]) over every sample ever
+    /// recorded: the bucket holding the rank-⌈q·n⌉ sample, reported as the
+    /// bucket's geometric midpoint clamped to the observed [min, max].
+    /// Relative error vs the exact nearest-rank value is bounded by the
+    /// bucket width, 2^(1/8) − 1 ≈ 9.05% (for samples ≥ 1 ns).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                let rep = if i == 0 {
+                    self.min
+                } else if i == HIST_BUCKETS - 1 {
+                    self.max
+                } else {
+                    HIST_MIN * ((i as f64 - 0.5) / HIST_SUBBUCKETS as f64).exp2()
+                };
+                return Some(rep.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
     }
 }
 
@@ -39,7 +141,7 @@ impl Timer {
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
-    timers: BTreeMap<String, Timer>,
+    timers: BTreeMap<String, Histogram>,
 }
 
 impl Metrics {
@@ -88,30 +190,19 @@ impl Metrics {
     }
 
     pub fn timer_mean(&self, name: &str) -> Option<f64> {
-        let t = self.timers.get(name)?;
-        if t.count == 0 {
-            return None;
-        }
-        Some(t.sum / t.count as f64)
+        self.timers.get(name)?.mean()
     }
 
-    /// All-time sample count (exact even after the window wraps).
+    /// All-time sample count (exact).
     pub fn timer_count(&self, name: &str) -> usize {
         self.timers.get(name).map_or(0, |t| t.count as usize)
     }
 
-    /// Nearest-rank percentile (q in [0, 1]) over the timer's recent-sample
-    /// window (last [`TIMER_WINDOW`] samples). The serving layer reports
-    /// p50/p95/p99 latency through this.
+    /// Nearest-rank percentile (q in [0, 1]) over *all* samples the timer
+    /// ever recorded, within the histogram's ≈9% relative-error bound. The
+    /// serving layer reports p50/p95/p99 latency through this.
     pub fn timer_percentile(&self, name: &str, q: f64) -> Option<f64> {
-        let t = self.timers.get(name)?;
-        if t.window.is_empty() {
-            return None;
-        }
-        let mut sorted = t.window.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite timer samples"));
-        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        Some(sorted[idx])
+        self.timers.get(name)?.quantile(q)
     }
 
     /// Iterate counters (name, value) — the serving layer's `metrics` op
@@ -124,9 +215,9 @@ impl Metrics {
         self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
     }
 
-    /// Iterate timer names and their recent-sample windows.
-    pub fn timers_iter(&self) -> impl Iterator<Item = (&str, &[f64])> {
-        self.timers.iter().map(|(k, t)| (k.as_str(), t.window.as_slice()))
+    /// Iterate timer names and their histograms.
+    pub fn timers_iter(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.timers.iter().map(|(k, t)| (k.as_str(), t))
     }
 
     /// Human-readable summary block.
@@ -163,6 +254,13 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    /// The histogram's advertised quantile bound.
+    const REL_ERR: f64 = 0.0905;
+
+    fn close_rel(got: f64, want: f64) -> bool {
+        (got - want).abs() <= REL_ERR * want.abs()
+    }
+
     #[test]
     fn counters_and_gauges() {
         let mut m = Metrics::new();
@@ -197,22 +295,23 @@ mod tests {
     }
 
     #[test]
-    fn timer_window_is_bounded_but_totals_stay_exact() {
+    fn histogram_holds_every_sample_with_exact_totals() {
+        // The old sample-window design forgot everything past 4096 samples;
+        // the histogram keeps fixed memory AND full-history percentiles.
         let mut m = Metrics::new();
-        let n = TIMER_WINDOW + 500;
+        let n = 10_000usize;
         for i in 0..n {
             m.record_secs("lat", i as f64);
         }
-        // All-time stats are exact...
         assert_eq!(m.timer_count("lat"), n);
         let want_sum = (n * (n - 1) / 2) as f64;
         assert!((m.timer_total("lat") - want_sum).abs() < 1e-6 * want_sum);
-        // ...while the percentile window holds only the most recent samples
-        // (the 500 oldest were overwritten), keeping memory bounded.
-        let (_, window) = m.timers_iter().next().unwrap();
-        assert_eq!(window.len(), TIMER_WINDOW);
-        assert!(m.timer_percentile("lat", 0.0).unwrap() >= 0.0);
-        assert!(m.timer_percentile("lat", 1.0).unwrap() >= (n - 1) as f64 - 0.5);
+        // Percentiles cover the whole history within the error bound.
+        assert_eq!(m.timer_percentile("lat", 0.0), Some(0.0), "clamped to min");
+        let p100 = m.timer_percentile("lat", 1.0).unwrap();
+        assert!(close_rel(p100, (n - 1) as f64), "p100 = {p100}");
+        let p50 = m.timer_percentile("lat", 0.5).unwrap();
+        assert!(close_rel(p50, (n / 2) as f64), "p50 = {p50}");
     }
 
     #[test]
@@ -222,18 +321,126 @@ mod tests {
             m.record_secs("lat", i as f64);
         }
         assert_eq!(m.timer_count("lat"), 100);
-        assert_eq!(m.timer_percentile("lat", 0.0), Some(1.0));
-        assert_eq!(m.timer_percentile("lat", 1.0), Some(100.0));
-        let p50 = m.timer_percentile("lat", 0.5).unwrap();
-        assert!((50.0..=51.0).contains(&p50), "p50 = {p50}");
-        let p99 = m.timer_percentile("lat", 0.99).unwrap();
-        assert!((98.0..=100.0).contains(&p99), "p99 = {p99}");
+        for (q, exact) in [(0.0, 1.0), (0.5, 50.0), (0.99, 99.0), (1.0, 100.0)] {
+            let got = m.timer_percentile("lat", q).unwrap();
+            assert!(close_rel(got, exact), "q={q}: got {got}, exact {exact}");
+        }
         assert_eq!(m.timer_percentile("missing", 0.5), None);
         m.incr("a", 2);
         m.gauge("g", 1.5);
         assert_eq!(m.counters_iter().collect::<Vec<_>>(), vec![("a", 2)]);
         assert_eq!(m.gauges_iter().collect::<Vec<_>>(), vec![("g", 1.5)]);
         assert_eq!(m.timers_iter().count(), 1);
+    }
+
+    /// Exact nearest-rank percentile — the oracle the histogram quantile
+    /// is held to.
+    fn exact_nearest_rank(samples: &[f64], q: f64) -> f64 {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn quantiles_stay_within_the_advertised_error_bound() {
+        // Deterministic pseudo-random samples across 9 decades of latency
+        // (100 ns .. 100 s) — way beyond any single window's resolution.
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let samples: Vec<f64> = (0..5000)
+            .map(|_| {
+                let u = (next() >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+                1e-7 * 1e9f64.powf(u)
+            })
+            .collect();
+        let mut h = Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+            let got = h.quantile(q).unwrap();
+            let exact = exact_nearest_rank(&samples, q);
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= REL_ERR, "q={q}: got {got}, exact {exact}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_equals_recording_the_concatenation() {
+        // Dyadic sample values make float sums exact, so equality is exact
+        // (not approximate) — the merge really is lossless.
+        let shard = |seed: u64, n: usize| {
+            let mut h = Histogram::new();
+            let mut vals = Vec::new();
+            for i in 0..n {
+                let v = ((seed * 37 + i as u64 * 13) % 4096 + 1) as f64 * 0.001953125;
+                h.record(v);
+                vals.push(v);
+            }
+            (h, vals)
+        };
+        let (a, va) = shard(1, 300);
+        let (b, vb) = shard(2, 500);
+        let (c, vc) = shard(3, 200);
+
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut right_tail = b.clone();
+        right_tail.merge(&c);
+        let mut right = a.clone();
+        right.merge(&right_tail);
+        assert_eq!(left, right, "merge associates");
+
+        // Equal to one histogram over the concatenated stream.
+        let mut whole = Histogram::new();
+        for v in va.iter().chain(&vb).chain(&vc) {
+            whole.record(*v);
+        }
+        assert_eq!(left, whole, "merge == concatenation");
+        assert_eq!(whole.count(), 1000);
+        // And quantiles on the merged histogram match the concatenation's
+        // exact nearest-rank within the bound.
+        let all: Vec<f64> = va.into_iter().chain(vb).chain(vc).collect();
+        for q in [0.1, 0.5, 0.95] {
+            let got = left.quantile(q).unwrap();
+            let exact = exact_nearest_rank(&all, q);
+            assert!(close_rel(got, exact), "q={q}: got {got}, exact {exact}");
+        }
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None, "empty");
+        assert_eq!(h.mean(), None);
+
+        // Sub-nanosecond and enormous samples hit the under/overflow
+        // buckets and clamp to observed extremes.
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(1e12);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.0), Some(0.0));
+        assert_eq!(h.quantile(1.0), Some(1e12));
+
+        // A single sample answers every quantile with (about) itself.
+        let mut h = Histogram::new();
+        h.record(0.125);
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), Some(0.125), "single sample clamps to min==max");
+        }
+        // NaN is dropped, not recorded.
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 1);
     }
 
     #[test]

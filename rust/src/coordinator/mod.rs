@@ -7,6 +7,6 @@ pub mod registry;
 pub mod runs;
 
 pub use config::Config;
-pub use metrics::Metrics;
+pub use metrics::{Histogram, Metrics};
 pub use registry::{find, registry, Experiment};
 pub use runs::RunContext;

@@ -18,6 +18,9 @@ static MATMUL_FLOPS: AtomicU64 = AtomicU64::new(0);
 static LMME_OPS: AtomicU64 = AtomicU64::new(0);
 static LMME_NS: AtomicU64 = AtomicU64::new(0);
 static PACK_B_REUSED: AtomicU64 = AtomicU64::new(0);
+static LMME_RESCALES: AtomicU64 = AtomicU64::new(0);
+static LMME_NONFINITE: AtomicU64 = AtomicU64::new(0);
+static SCAN_CHUNKS: AtomicU64 = AtomicU64::new(0);
 
 /// One multiply through the blocked kernel (called by the kernel itself).
 pub(crate) fn record_matmul(pack_ns: u64, compute_ns: u64, flops: u64) {
@@ -38,6 +41,25 @@ pub(crate) fn record_pack_b_reuse() {
     PACK_B_REUSED.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One row/column scale-extraction pass — the LMME "rescale" that pulls a
+/// per-row/per-col magnitude out before exponentiation. Its frequency is
+/// the dynamic-range telemetry counterpart to the per-request logmag range
+/// reported on chain responses.
+pub(crate) fn record_lmme_rescale() {
+    LMME_RESCALES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `n` non-finite (NaN/+inf) log-magnitudes observed in an LMME epilogue
+/// (GOOM zeros, -inf, are *not* counted — they are legal values).
+pub(crate) fn record_lmme_nonfinite(n: u64) {
+    LMME_NONFINITE.fetch_add(n, Ordering::Relaxed);
+}
+
+/// `n` parallel chunks launched by one chunked-scan invocation.
+pub(crate) fn record_scan_chunks(n: u64) {
+    SCAN_CHUNKS.fetch_add(n, Ordering::Relaxed);
+}
+
 /// Monotonic snapshot of the kernel counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct KernelStats {
@@ -55,6 +77,12 @@ pub struct KernelStats {
     pub lmme_ns: u64,
     /// Multiplies that reused a pre-packed right operand (panel-cache hits).
     pub pack_b_reused: u64,
+    /// Row/col scale-extraction (rescale) passes run ahead of the kernel.
+    pub lmme_rescales: u64,
+    /// Non-finite (NaN/+inf) log-magnitudes seen in LMME epilogues.
+    pub lmme_nonfinite: u64,
+    /// Parallel chunks launched by chunked scans.
+    pub scan_chunks: u64,
 }
 
 impl KernelStats {
@@ -86,6 +114,9 @@ impl KernelStats {
             lmme_ops: self.lmme_ops.wrapping_sub(earlier.lmme_ops),
             lmme_ns: self.lmme_ns.wrapping_sub(earlier.lmme_ns),
             pack_b_reused: self.pack_b_reused.wrapping_sub(earlier.pack_b_reused),
+            lmme_rescales: self.lmme_rescales.wrapping_sub(earlier.lmme_rescales),
+            lmme_nonfinite: self.lmme_nonfinite.wrapping_sub(earlier.lmme_nonfinite),
+            scan_chunks: self.scan_chunks.wrapping_sub(earlier.scan_chunks),
         }
     }
 }
@@ -100,6 +131,9 @@ pub fn snapshot() -> KernelStats {
         lmme_ops: LMME_OPS.load(Ordering::Relaxed),
         lmme_ns: LMME_NS.load(Ordering::Relaxed),
         pack_b_reused: PACK_B_REUSED.load(Ordering::Relaxed),
+        lmme_rescales: LMME_RESCALES.load(Ordering::Relaxed),
+        lmme_nonfinite: LMME_NONFINITE.load(Ordering::Relaxed),
+        scan_chunks: SCAN_CHUNKS.load(Ordering::Relaxed),
     }
 }
 
@@ -113,12 +147,16 @@ mod tests {
         record_matmul(100, 400, 2_000_000);
         record_lmme(700);
         record_pack_b_reuse();
+        record_lmme_rescale();
+        record_lmme_nonfinite(2);
+        record_scan_chunks(4);
         let d = snapshot().delta_since(&before);
         // Other tests run concurrently and also bump the globals, so assert
         // lower bounds, and exact arithmetic on a private delta.
         assert!(d.matmul_ops >= 1 && d.pack_ns >= 100 && d.matmul_ns >= 400);
         assert!(d.lmme_ops >= 1 && d.lmme_ns >= 700);
         assert!(d.pack_b_reused >= 1);
+        assert!(d.lmme_rescales >= 1 && d.lmme_nonfinite >= 2 && d.scan_chunks >= 4);
         let solo = KernelStats {
             matmul_ops: 1,
             pack_ns: 100,
@@ -127,6 +165,9 @@ mod tests {
             lmme_ops: 1,
             lmme_ns: 700,
             pack_b_reused: 1,
+            lmme_rescales: 1,
+            lmme_nonfinite: 2,
+            scan_chunks: 4,
         };
         assert!((solo.matmul_gflops() - 5000.0).abs() < 1e-9);
         assert!((solo.mean_lmme_ns() - 700.0).abs() < 1e-9);

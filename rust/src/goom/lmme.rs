@@ -156,9 +156,11 @@ fn lmme_into_reusing<T: GoomFloat>(
     let (n, d, m) = (a.rows, a.cols, b.cols);
     if !reuse_a {
         row_scales_into(a, &mut scratch.ascale);
+        stats::record_lmme_rescale();
     }
     if !reuse_b {
         col_scales_into(b, &mut scratch.bscale);
+        stats::record_lmme_rescale();
     }
 
     // One blocked real matmul with the scaled exponentials computed inside
@@ -218,6 +220,7 @@ fn finish_into<T: GoomFloat>(
     out: &mut GoomMat<T>,
 ) {
     out.resize_for_overwrite(n, m);
+    let mut nonfinite = 0u64;
     for i in 0..n {
         for k in 0..m {
             let idx = i * m + k;
@@ -226,10 +229,19 @@ fn finish_into<T: GoomFloat>(
                 out.logmag[idx] = T::NEG_INFINITY;
                 out.sign[idx] = T::ONE;
             } else {
-                out.logmag[idx] = T::from_f64(p.abs().ln() + ascale[i] + bscale[k]);
+                let l = T::from_f64(p.abs().ln() + ascale[i] + bscale[k]);
+                // GOOM zeros (−inf) are legal; NaN/+inf are the dynamic-range
+                // overflows the kernel counter tracks.
+                if l.is_nan() || l == T::INFINITY {
+                    nonfinite += 1;
+                }
+                out.logmag[idx] = l;
                 out.sign[idx] = if p < 0.0 { -T::ONE } else { T::ONE };
             }
         }
+    }
+    if nonfinite > 0 {
+        stats::record_lmme_nonfinite(nonfinite);
     }
 }
 
@@ -268,6 +280,7 @@ pub fn lmme_pack_rhs<T: GoomFloat>(b: &GoomMat<T>, rhs: &mut LmmePackedRhs) {
     rhs.rows = d;
     rhs.cols = m;
     col_scales_into(b, &mut rhs.bscale);
+    stats::record_lmme_rescale();
     let bscale = &rhs.bscale;
     kernel::pack_b_src(
         d,
@@ -298,6 +311,7 @@ pub fn lmme_packed_into<T: GoomFloat>(
     let t0 = Instant::now();
     let (n, d, m) = (a.rows, a.cols, rhs.cols);
     row_scales_into(a, &mut scratch.ascale);
+    stats::record_lmme_rescale();
     if scratch.prod.len() != n * m {
         scratch.prod.resize(n * m, 0.0);
     }
@@ -764,6 +778,30 @@ mod tests {
             assert_eq!(g.logmag, p.logmag);
             assert_eq!(g.sign, p.sign);
         }
+    }
+
+    #[test]
+    fn rescale_and_nonfinite_counters_track_the_telemetry() {
+        let mut rng = rng_from_seed(56);
+        let a = GoomMat::<f64>::randn(4, 4, &mut rng);
+        let b = GoomMat::<f64>::randn(4, 4, &mut rng);
+        let before = stats::snapshot();
+        let _ = lmme(&a, &b);
+        let d = stats::snapshot().delta_since(&before);
+        // One row-scale pass + one col-scale pass per fresh LMME.
+        assert!(d.lmme_rescales >= 2, "{d:?}");
+        // Logmags near the top of f32's range: the rescaled product maps
+        // back above LN_MAX, so the epilogue emits +inf logmags and the
+        // nonfinite counter must see them.
+        let mut big = GoomMat::<f32>::zeros(2, 2);
+        for l in big.logmag.iter_mut() {
+            *l = f32::MAX * 0.75;
+        }
+        let before = stats::snapshot();
+        let out = lmme(&big, &big);
+        let d = stats::snapshot().delta_since(&before);
+        assert!(out.logmag.iter().any(|&l| l == f32::INFINITY));
+        assert!(d.lmme_nonfinite >= 1, "{d:?}");
     }
 
     #[test]

@@ -108,6 +108,7 @@ where
     let threads = threads.max(1).min(nchunks);
     let chunk = n.div_ceil(nchunks);
     let nchunks = n.div_ceil(chunk);
+    super::kernel::stats::record_scan_chunks(nchunks as u64);
     let mut chunks: Vec<Vec<T>> = (0..nchunks).map(|_| Vec::new()).collect();
     // Phase 1 — per-chunk scans on the shared parallel substrate (chunk c
     // is a pure function of the input slice, so the thread count never

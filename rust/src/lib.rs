@@ -40,6 +40,11 @@
 //!   shards) is a second instantiation of the same reactor, so both
 //!   fronts run O(1) threads. See `docs/SERVING.md` for the wire
 //!   protocol.
+//! * [`obs`] — always-compiled, atomically-gated request tracing:
+//!   per-thread rings of typed span events keyed by a request id that
+//!   travels the wire (`id` field, forwarded router → shard), surfaced
+//!   through the `trace` protocol op and `repro trace` (Chrome
+//!   trace-event JSON). See `docs/OBSERVABILITY.md`.
 //! * [`perf`] — the `repro bench` harness: LMME/scan/serving microbenches
 //!   recorded to `BENCH_*.json` (ns/op, GFLOP/s, allocs/op), the perf
 //!   trajectory every PR is held to. See `docs/PERFORMANCE.md`.
@@ -50,6 +55,7 @@ pub mod dynsys;
 pub mod goom;
 pub mod linalg;
 pub mod lyapunov;
+pub mod obs;
 pub mod perf;
 pub mod rng;
 pub mod rnn;

@@ -90,6 +90,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("route") => route(args),
         Some("req") => req(args),
+        Some("trace") => trace(args),
         Some("loadgen") => loadgen(args),
         Some("bench") => bench(args),
         Some("all") => {
@@ -151,6 +152,8 @@ fn serve(args: &Args) -> Result<()> {
             cfg.usize("serve_max_connections", defaults.max_connections)?,
         )?,
         threads: cfg.usize("threads", cfg.usize("serve_threads", defaults.threads)?)?,
+        trace_sample: cfg
+            .u64("trace-sample", cfg.u64("serve_trace_sample", defaults.trace_sample)?)?,
     };
     println!(
         "goomd: {} workers, {} kernel thread(s)/job, queue depth {}, batch max {}, cache {} entries",
@@ -202,6 +205,8 @@ fn route(args: &Args) -> Result<()> {
         )?,
         retry_after_ms: cfg
             .u64("retry-after-ms", cfg.u64("route_retry_after_ms", defaults.retry_after_ms)?)?,
+        trace_sample: cfg
+            .u64("trace-sample", cfg.u64("route_trace_sample", defaults.trace_sample)?)?,
     };
     println!(
         "goomd-router: {} backends, rendezvous-hashed on canonical request keys",
@@ -225,6 +230,75 @@ fn req(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("unparseable response: {e}"))?;
     if doc.get("ok").and_then(Json::as_bool) != Some(true) {
         anyhow::bail!("request failed");
+    }
+    Ok(())
+}
+
+/// `repro trace [--addr=A[,B,...]] [--limit=N] [--out=FILE]`: pull recent
+/// span events from one or more live tiers (router and its shards, say),
+/// stitch them into one Chrome trace-event JSON document — each address
+/// becomes a `pid`, each recording thread a `tid`, and spans for the same
+/// request id line up across processes — and write it to `--out` (or
+/// stdout). Load the file at `chrome://tracing` or https://ui.perfetto.dev.
+/// Tiers only record spans when tracing is enabled (`--trace-sample=N`).
+fn trace(args: &Args) -> Result<()> {
+    let addrs_raw = args.get_or("addr", "127.0.0.1:7077").to_string();
+    let addrs: Vec<&str> = addrs_raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    let limit = args.get_usize("limit", goomrs::obs::DEFAULT_TRACE_LIMIT)?;
+    let mut events: Vec<Json> = Vec::new();
+    let mut total_spans = 0usize;
+    for (pid, addr) in addrs.iter().enumerate() {
+        let line = format!("{{\"op\":\"trace\",\"limit\":{limit}}}");
+        let resp = server::request_once(addr, &line)?;
+        let doc = json::parse(resp.trim())
+            .map_err(|e| anyhow::anyhow!("unparseable response from {addr}: {e}"))?;
+        if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+            anyhow::bail!("trace request to {addr} failed: {resp}");
+        }
+        let spans = doc
+            .get("result")
+            .and_then(|r| r.get("spans"))
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("malformed trace result from {addr}"))?;
+        // Name the process after the address so the viewer's process rows
+        // read as tiers rather than bare pids.
+        let mut meta_args = std::collections::BTreeMap::new();
+        meta_args.insert("name".to_string(), Json::Str((*addr).to_string()));
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("name".to_string(), Json::Str("process_name".to_string()));
+        meta.insert("ph".to_string(), Json::Str("M".to_string()));
+        meta.insert("pid".to_string(), Json::Num(pid as f64));
+        meta.insert("args".to_string(), Json::Obj(meta_args));
+        events.push(Json::Obj(meta));
+        for span in spans {
+            if let Some(ev) = goomrs::obs::span_to_chrome(span, pid) {
+                events.push(ev);
+                total_spans += 1;
+            }
+        }
+    }
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    let text = json::write(&Json::Obj(doc));
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!(
+                "wrote {total_spans} spans from {} tier(s) to {path}",
+                addrs.len()
+            );
+        }
+        None => println!("{text}"),
+    }
+    if total_spans == 0 {
+        eprintln!(
+            "note: no spans recorded — start the tiers with --trace-sample=N \
+             (or send requests carrying an \"id\") and replay some traffic first"
+        );
     }
     Ok(())
 }
@@ -283,6 +357,15 @@ fn loadgen(args: &Args) -> Result<()> {
         "  latency:  p50 {:.2} ms   p95 {:.2} ms   p99 {:.2} ms",
         report.p50_ms, report.p95_ms, report.p99_ms
     );
+    if report.per_dim.len() > 1 {
+        println!("  per-dimension:");
+        for p in &report.per_dim {
+            println!(
+                "    d={:<5} n={:<5} p50 {:.2} ms   p99 {:.2} ms",
+                p.d, p.n, p.p50_ms, p.p99_ms
+            );
+        }
+    }
     println!("\n{}", metrics.summary());
     if report.errors > 0 {
         anyhow::bail!("{} requests failed", report.errors);
@@ -367,21 +450,29 @@ USAGE:
                                     (see docs/PERFORMANCE.md)
   repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
                --batch-max=16 --cache=1024 --max-request-bytes=1048576
-               --max-connections=256]
+               --max-connections=256 --trace-sample=0]
                                     run goomd, the GOOM compute daemon
                                     (newline-JSON over TCP; see docs/SERVING.md)
-  repro route --backends=host:port[,host:port...] [--port=7070]
+  repro route --backends=host:port[,host:port...] [--port=7070
+               --trace-sample=0]
                                     run the cache-aware router tier: rendezvous-
                                     hashes canonical request keys across shards
   repro req [--addr=127.0.0.1:7077] '<json-request>'
                                     send one request line, print the response
+  repro trace [--addr=A[,B,...] --limit=512 --out=trace.json]
+                                    pull span events from live tiers (router +
+                                    shards) and stitch one Chrome trace-event
+                                    JSON for chrome://tracing / Perfetto
+                                    (see docs/OBSERVABILITY.md)
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
                  --seed=N --min-cached=N --pipeline=N --threads=N]
                                     drive a live daemon or router; print
-                                    throughput and p50/p95/p99 latency
-                                    (--pipeline=N sends N requests per
-                                    burst, stressing the reorder buffers)
+                                    throughput and p50/p95/p99 latency,
+                                    plus a per-dimension breakdown on
+                                    --dims runs (--pipeline=N sends N
+                                    requests per burst, stressing the
+                                    reorder buffers)
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).

@@ -1,0 +1,396 @@
+//! Request tracing: typed span events in per-thread rings, gated by one
+//! atomic load.
+//!
+//! The serving stack (PRs 2–5) reports aggregate counters and end-to-end
+//! latency, but a slow request cannot say *where* it was slow — reactor,
+//! queue, batch-wait, pack, kernel, or serialize — and a cross-tier hop
+//! (router → shard) loses identity entirely. This module adds the missing
+//! attribution without taxing the fast path:
+//!
+//! * **Always compiled, atomically gated.** The only cost when tracing is
+//!   off (the default) is one relaxed atomic load per decoded request.
+//!   There is no feature flag to recompile for; `--trace-sample=N` on a
+//!   live daemon turns it on.
+//! * **Sampling.** With the gate at `N`, one in `N` id-less requests is
+//!   traced under a minted id (`req-<n>`). A request carrying an explicit
+//!   wire `id` is *always* traced while the gate is nonzero — that is what
+//!   makes cross-tier stitching deterministic: tag the request once at the
+//!   client, and every tier's spans carry the same id.
+//! * **Per-thread rings.** Recording a span locks only the calling
+//!   thread's own ring (uncontended in steady state); readers snapshot all
+//!   rings through a registry. Rings are bounded ([`RING_CAPACITY`]
+//!   events), so tracing never grows memory with traffic.
+//!
+//! Spans surface three ways: the `trace` protocol op (recent spans as
+//! JSON), `repro trace` (merges spans from several daemons into Chrome
+//! trace-event JSON, loadable in `chrome://tracing` / Perfetto), and the
+//! per-stage latency histograms in [`crate::coordinator::metrics`] (always
+//! on; not gated here).
+//!
+//! Tracing records *observations only*: no fast-path value is computed
+//! differently when the gate is open, so every bit-identity guarantee in
+//! the kernel and serving layers holds with tracing on or off.
+
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Bounded span count per thread ring (oldest overwritten first).
+pub const RING_CAPACITY: usize = 1024;
+
+/// Default span count returned by the `trace` op when no limit is given.
+pub const DEFAULT_TRACE_LIMIT: usize = 512;
+
+// ------------------------------------------------------------------ stages --
+
+/// Where in the request's life a span was measured. One request produces
+/// several spans, stitched by id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Connection accepted by the reactor (id is `conn-<n>`).
+    Accept,
+    /// Request line framed and decoded into a typed request.
+    Decode,
+    /// Answered from the LRU result cache.
+    CacheHit,
+    /// Coalesced onto an identical in-flight computation.
+    DedupHit,
+    /// Handed to the worker pool queue.
+    Enqueue,
+    /// Worker drained the queue and formed a batch.
+    BatchForm,
+    /// Operand packing ahead of the kernel.
+    Pack,
+    /// The compute itself (chain / scan / LLE execution).
+    Kernel,
+    /// Result encoded to its response line.
+    Serialize,
+    /// Response bytes flushed to the client socket (id is `conn-<n>`).
+    Write,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Decode => "decode",
+            Stage::CacheHit => "cache_hit",
+            Stage::DedupHit => "dedup_hit",
+            Stage::Enqueue => "enqueue",
+            Stage::BatchForm => "batch_form",
+            Stage::Pack => "pack",
+            Stage::Kernel => "kernel",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+}
+
+/// One recorded span: a stage of one request on one tier.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Request id: the wire `id` when the client sent one, else minted.
+    pub id: Arc<str>,
+    pub stage: Stage,
+    /// Which tier recorded it: `"server"` (a goomd shard) or `"router"`.
+    pub tier: &'static str,
+    /// Microseconds since the process-wide trace epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds (0 for instant markers).
+    pub dur_us: f64,
+    /// Recording thread (small dense ids, first-use order).
+    pub thread: u64,
+}
+
+// ------------------------------------------------------------ gate + clock --
+
+/// Sampling gate: 0 = tracing off; N = trace 1-in-N id-less requests
+/// (explicit-id requests are always traced while nonzero).
+static TRACE_SAMPLE: AtomicU64 = AtomicU64::new(0);
+/// Round-robin counter behind 1-in-N sampling.
+static SAMPLE_SEQ: AtomicU64 = AtomicU64::new(0);
+/// Minted-id counter (`req-<n>`).
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+/// Dense thread-id counter (poll loop, workers, test threads).
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(0);
+
+/// Set the sampling gate: 0 disables tracing, N samples 1-in-N.
+pub fn set_sample(n: u64) {
+    TRACE_SAMPLE.store(n, Ordering::Relaxed);
+}
+
+/// Current gate value (0 = off).
+pub fn sample_rate() -> u64 {
+    TRACE_SAMPLE.load(Ordering::Relaxed)
+}
+
+/// The whole fast-path cost when tracing is off: one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_SAMPLE.load(Ordering::Relaxed) != 0
+}
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic microseconds since the trace epoch (first call wins).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Mint a process-unique request id for a sampled id-less request.
+pub fn mint_id() -> Arc<str> {
+    Arc::from(format!("req-{}", NEXT_ID.fetch_add(1, Ordering::Relaxed)).as_str())
+}
+
+// -------------------------------------------------------- request context --
+
+/// Per-request observability context, decided once at decode and carried
+/// through dispatch: the client's wire `id` (echoed on the response) and
+/// the trace id (present iff this request's spans are recorded).
+#[derive(Debug, Clone, Default)]
+pub struct ReqCtx {
+    /// Client-supplied `id` field (string or integer), echoed verbatim.
+    pub id: Option<Json>,
+    /// Trace identity when sampled: the wire id's text, or a minted id.
+    pub trace: Option<Arc<str>>,
+}
+
+impl ReqCtx {
+    /// Apply the sampling rule to a decoded request's optional wire id:
+    /// gate closed → never traced; gate open → explicit-id requests always
+    /// traced (deterministic stitching), id-less requests 1-in-N.
+    pub fn admit(id: Option<Json>) -> ReqCtx {
+        let n = sample_rate();
+        if n == 0 {
+            return ReqCtx { id, trace: None };
+        }
+        let trace = match &id {
+            Some(j) => Some(id_text(j)),
+            None => {
+                if SAMPLE_SEQ.fetch_add(1, Ordering::Relaxed) % n == 0 {
+                    Some(mint_id())
+                } else {
+                    None
+                }
+            }
+        };
+        ReqCtx { id, trace }
+    }
+}
+
+/// Trace-id text of a wire id: the raw string for `"abc"`, the JSON
+/// rendering for numbers (`7` → `"7"`).
+pub fn id_text(id: &Json) -> Arc<str> {
+    match id {
+        Json::Str(s) => Arc::from(s.as_str()),
+        other => Arc::from(json::write(other).as_str()),
+    }
+}
+
+// ------------------------------------------------------------------- rings --
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+}
+
+impl Ring {
+    const fn new() -> Ring {
+        Ring { buf: Vec::new(), next: 0 }
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % RING_CAPACITY;
+        }
+    }
+}
+
+/// Every thread's ring, for readers. Threads register lazily on first
+/// record; rings outlive their threads (spans from finished workers stay
+/// readable until overwritten — they never are, the ring is per-thread).
+static REGISTRY: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL_RING: Arc<Mutex<Ring>> = {
+        let ring = Arc::new(Mutex::new(Ring::new()));
+        REGISTRY.lock().expect("obs registry lock").push(Arc::clone(&ring));
+        ring
+    };
+    static THREAD_ID: u64 = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one span into the calling thread's ring. Callers gate on a
+/// per-request trace id (see [`ReqCtx::admit`]); this does not re-check
+/// the sampling gate, so a request sampled at decode records every stage
+/// even if the gate closes mid-flight.
+pub fn record(id: &Arc<str>, tier: &'static str, stage: Stage, start_us: u64, dur_us: f64) {
+    let thread = THREAD_ID.with(|t| *t);
+    let ev = SpanEvent { id: Arc::clone(id), stage, tier, start_us, dur_us, thread };
+    LOCAL_RING.with(|ring| ring.lock().expect("obs ring lock").push(ev));
+}
+
+/// Convenience for connection-scoped stages (accept/write) that predate or
+/// outlive any single request id.
+pub fn record_conn(conn: u64, tier: &'static str, stage: Stage, start_us: u64, dur_us: f64) {
+    let id: Arc<str> = Arc::from(format!("conn-{conn}").as_str());
+    record(&id, tier, stage, start_us, dur_us);
+}
+
+/// Snapshot the most recent `limit` spans across every thread ring,
+/// ordered by start time.
+pub fn recent_spans(limit: usize) -> Vec<SpanEvent> {
+    let rings: Vec<Arc<Mutex<Ring>>> =
+        REGISTRY.lock().expect("obs registry lock").iter().map(Arc::clone).collect();
+    let mut spans: Vec<SpanEvent> = Vec::new();
+    for ring in rings {
+        spans.extend(ring.lock().expect("obs ring lock").buf.iter().cloned());
+    }
+    spans.sort_by(|a, b| {
+        a.start_us.cmp(&b.start_us).then_with(|| a.thread.cmp(&b.thread))
+    });
+    if spans.len() > limit {
+        spans.drain(..spans.len() - limit);
+    }
+    spans
+}
+
+/// Local object builder (identical shape to `server::protocol::obj`, kept
+/// here so `obs` has no dependency on the serving layer).
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// JSON form of one span (the `trace` op's array element).
+pub fn span_json(ev: &SpanEvent) -> Json {
+    jobj(vec![
+        ("id", Json::Str(ev.id.to_string())),
+        ("stage", Json::Str(ev.stage.name().to_string())),
+        ("tier", Json::Str(ev.tier.to_string())),
+        ("ts_us", Json::Num(ev.start_us as f64)),
+        ("dur_us", Json::Num(ev.dur_us)),
+        ("thread", Json::Num(ev.thread as f64)),
+    ])
+}
+
+/// The `trace` op's payload: `{"spans": [...], "sample": N}`.
+pub fn spans_json(limit: usize) -> Json {
+    let spans = recent_spans(limit);
+    jobj(vec![
+        ("sample", Json::Num(sample_rate() as f64)),
+        ("spans", Json::Arr(spans.iter().map(span_json).collect())),
+    ])
+}
+
+/// Convert one `trace`-op span object into a Chrome trace-event (complete
+/// event, `ph:"X"`; times in microseconds). `pid` distinguishes source
+/// daemons when `repro trace` merges several. Returns `None` for objects
+/// missing the span fields (foreign JSON stays out of the trace file).
+pub fn span_to_chrome(span: &Json, pid: usize) -> Option<Json> {
+    let stage = span.get("stage")?.as_str()?.to_string();
+    let tier = span.get("tier")?.as_str()?.to_string();
+    let ts = span.get("ts_us")?.as_f64()?;
+    let dur = span.get("dur_us")?.as_f64()?;
+    let tid = span.get("thread")?.as_f64()?;
+    let id = span.get("id")?.clone();
+    Some(jobj(vec![
+        ("name", Json::Str(stage)),
+        ("cat", Json::Str(tier.clone())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(ts)),
+        ("dur", Json::Num(dur)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid)),
+        ("args", jobj(vec![("id", id), ("tier", Json::Str(tier))])),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_defaults_off_and_admit_respects_it() {
+        // Note: the gate is process-global; this test restores it.
+        set_sample(0);
+        assert!(!enabled());
+        let ctx = ReqCtx::admit(Some(Json::Str("abc".into())));
+        assert!(ctx.trace.is_none(), "gate closed: never traced");
+        assert!(matches!(ctx.id, Some(Json::Str(_))), "wire id still carried");
+
+        // sample=1 is the only rate with a deterministic outcome under
+        // concurrent admits (the round-robin counter is process-shared, so
+        // a 1-in-3 count could be perturbed by a parallel test): explicit
+        // ids and every id-less request both trace.
+        set_sample(1);
+        let ctx = ReqCtx::admit(Some(Json::Str("abc".into())));
+        assert_eq!(ctx.trace.as_deref(), Some("abc"), "explicit id always sampled");
+        assert!(
+            (0..9).all(|_| ReqCtx::admit(None).trace.is_some()),
+            "sample=1 traces every id-less request"
+        );
+        set_sample(0);
+    }
+
+    #[test]
+    fn id_text_renders_strings_raw_and_numbers_as_json() {
+        assert_eq!(&*id_text(&Json::Str("req-a".into())), "req-a");
+        assert_eq!(&*id_text(&Json::Num(42.0)), "42");
+    }
+
+    #[test]
+    fn rings_bound_and_recent_spans_orders_by_time() {
+        let id: Arc<str> = Arc::from("ring-test");
+        for i in 0..(RING_CAPACITY + 10) {
+            record(&id, "server", Stage::Kernel, i as u64, 1.0);
+        }
+        let spans: Vec<SpanEvent> = recent_spans(usize::MAX)
+            .into_iter()
+            .filter(|s| &*s.id == "ring-test")
+            .collect();
+        assert_eq!(spans.len(), RING_CAPACITY, "ring bounded");
+        for w in spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us, "sorted by start");
+        }
+        // Oldest 10 were overwritten.
+        assert_eq!(spans[0].start_us, 10);
+    }
+
+    #[test]
+    fn span_json_round_trips_to_chrome_event() {
+        let ev = SpanEvent {
+            id: Arc::from("req-7"),
+            stage: Stage::Kernel,
+            tier: "server",
+            start_us: 1234,
+            dur_us: 56.5,
+            thread: 2,
+        };
+        let doc = span_json(&ev);
+        assert_eq!(doc.get("stage").unwrap().as_str(), Some("kernel"));
+        let chrome = span_to_chrome(&doc, 3).expect("converts");
+        assert_eq!(chrome.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(chrome.get("pid").unwrap().as_usize(), Some(3));
+        assert_eq!(chrome.get("ts").unwrap().as_usize(), Some(1234));
+        assert_eq!(
+            chrome.get("args").unwrap().get("id").unwrap().as_str(),
+            Some("req-7")
+        );
+        assert!(span_to_chrome(&Json::Null, 0).is_none(), "foreign JSON rejected");
+    }
+
+    #[test]
+    fn minted_ids_are_unique() {
+        let a = mint_id();
+        let b = mint_id();
+        assert_ne!(&*a, &*b);
+    }
+}

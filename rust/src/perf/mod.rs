@@ -13,7 +13,10 @@
 //!   P-lane device would take at the measured combine cost.
 //! * `BENCH_serve.json` — an in-process `goomd` hammered by loadgen:
 //!   throughput, latency percentiles, cache behaviour, and the kernel
-//!   counters delta that attributes wall time to compute vs queueing.
+//!   counters delta that attributes wall time to compute vs queueing;
+//!   plus a `trace_overhead` row measuring what request tracing adds at
+//!   sample=1 vs the gate shut (the <2% acceptance bar for the
+//!   observability layer, recorded info-only like the route rows).
 //! * `BENCH_route.json` — router relay overhead: the same cache-served
 //!   traffic driven direct-to-shard and through the reactor router
 //!   (coalesced and pipelined rows), with the added ns/request at p50/p99
@@ -620,6 +623,54 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
         );
         if report.errors > 0 {
             anyhow::bail!("serve bench saw {} errors", report.errors);
+        }
+    }
+    // Tracing overhead: the same warmed shared-key workload (pure
+    // cache-served RTT — no kernel noise) with the span gate shut vs
+    // sampling every request. This is the acceptance row for the tracing
+    // layer: the disabled path must stay within noise of the seed, and
+    // even sample=1 only pays a few ring writes per request.
+    {
+        let lg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients,
+            requests,
+            d: 8,
+            steps,
+            dims: Vec::new(),
+            method: "goomc64".to_string(),
+            shared_seed: Some(7),
+            pipeline: 1,
+            threads: 0,
+        };
+        crate::obs::set_sample(0);
+        let mut metrics = crate::coordinator::Metrics::new();
+        let off = crate::server::loadgen(&lg, &mut metrics)?;
+        crate::obs::set_sample(1);
+        let mut metrics = crate::coordinator::Metrics::new();
+        let on = crate::server::loadgen(&lg, &mut metrics)?;
+        crate::obs::set_sample(0);
+        let overhead_pct = if off.p50_ms > 0.0 {
+            (on.p50_ms - off.p50_ms) / off.p50_ms * 100.0
+        } else {
+            0.0
+        };
+        results.push(obj(vec![
+            ("scenario", Json::Str("trace_overhead".to_string())),
+            ("clients", num(clients as f64)),
+            ("requests_total", num(off.total_requests as f64)),
+            ("p50_off_ms", num(off.p50_ms)),
+            ("p50_sampled_ms", num(on.p50_ms)),
+            ("p99_off_ms", num(off.p99_ms)),
+            ("p99_sampled_ms", num(on.p99_ms)),
+            ("overhead_pct", num(overhead_pct)),
+        ]));
+        println!(
+            "serve[trace_overhead]: p50 {:.3} ms off → {:.3} ms at sample=1 ({overhead_pct:+.1}%)",
+            off.p50_ms, on.p50_ms
+        );
+        if off.errors + on.errors > 0 {
+            anyhow::bail!("trace overhead bench saw {} errors", off.errors + on.errors);
         }
     }
     let counters: BTreeMap<String, Json> = [

@@ -39,6 +39,7 @@ use super::pool::Pool;
 use super::protocol::{err_line, num, obj, Request};
 use super::session::{dispatch, Job, ServerInner, SessionEvent, SessionState};
 use crate::coordinator::Metrics;
+use crate::obs::{self, ReqCtx, Stage};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io::{self, Read, Write};
@@ -135,10 +136,11 @@ pub trait App: Send + 'static {
     fn metrics(&self) -> &Mutex<Metrics>;
     /// The stats block this reactor publishes (read once at spawn).
     fn stats(&self) -> Arc<ReactorStats>;
-    /// One decoded client request on `(conn, seq)`. Answer now via
+    /// One decoded client request on `(conn, seq)` with its observability
+    /// context (wire id to echo, trace id when sampled). Answer now via
     /// [`Core::complete`], later via [`Core::reply_to`], or by relaying
     /// through a backend connection.
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request);
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx);
     /// One complete newline-framed line arrived from backend `backend`
     /// (terminator stripped, trailing whitespace trimmed).
     fn on_backend_line(&mut self, _core: &mut Core, _backend: u64, _line: String) {}
@@ -739,6 +741,9 @@ impl<A: App> Reactor<A> {
         self.core.stats.fds_accepted.fetch_add(1, Ordering::Relaxed);
         let id = self.core.next_conn_id;
         self.core.next_conn_id += 1;
+        if obs::enabled() {
+            obs::record_conn(id, self.core.front.service, Stage::Accept, obs::now_us(), 0.0);
+        }
         self.core.conns.insert(
             id,
             Conn {
@@ -806,32 +811,35 @@ impl<A: App> Reactor<A> {
     }
 
     fn handle_events(&mut self, id: u64, events: Vec<SessionEvent>) {
+        // Counters accumulate across the whole read burst and land in ONE
+        // metrics-lock acquisition below — a pipelining client used to cost
+        // one lock round-trip per event on the reactor thread.
+        let mut requests = 0u64;
+        let mut oversized = 0u64;
         for ev in events {
             match ev {
-                SessionEvent::Request(req) => {
-                    self.app
-                        .metrics()
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("requests_total", 1);
+                SessionEvent::Request(req, wire_id) => {
+                    requests += 1;
+                    let ctx = ReqCtx::admit(wire_id);
+                    if let Some(trace) = &ctx.trace {
+                        obs::record(
+                            trace,
+                            self.core.front.service,
+                            Stage::Decode,
+                            obs::now_us(),
+                            0.0,
+                        );
+                    }
                     let seq = self.assign_seq(id);
-                    self.app.on_request(&mut self.core, id, seq, req);
+                    self.app.on_request(&mut self.core, id, seq, req, ctx);
                 }
                 SessionEvent::BadLine(line) => {
-                    self.app
-                        .metrics()
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("requests_total", 1);
+                    requests += 1;
                     let seq = self.assign_seq(id);
                     self.core.complete(id, seq, line);
                 }
                 SessionEvent::Oversized(line) => {
-                    self.app
-                        .metrics()
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("oversized_rejects", 1);
+                    oversized += 1;
                     let seq = self.assign_seq(id);
                     self.core.complete(id, seq, line);
                 }
@@ -840,6 +848,15 @@ impl<A: App> Reactor<A> {
                         c.read_closed = true;
                     }
                 }
+            }
+        }
+        if requests > 0 || oversized > 0 {
+            let mut m = self.app.metrics().lock().expect("metrics lock");
+            if requests > 0 {
+                m.incr("requests_total", requests);
+            }
+            if oversized > 0 {
+                m.incr("oversized_rejects", oversized);
             }
         }
     }
@@ -983,7 +1000,7 @@ impl<A: App> Reactor<A> {
 
     fn flush_conns(&mut self) {
         let mut errors = 0u64;
-        for conn in self.core.conns.values_mut() {
+        for (&id, conn) in self.core.conns.iter_mut() {
             if conn.dead {
                 continue;
             }
@@ -996,9 +1013,15 @@ impl<A: App> Reactor<A> {
             if conn.out.is_empty() {
                 continue;
             }
+            let traced = obs::enabled();
+            let t0 = if traced { obs::now_us() } else { 0 };
             if !flush_bytes(&conn.stream, &mut conn.out) {
                 errors += 1;
                 conn.dead = true;
+            }
+            if traced {
+                let dur = obs::now_us().saturating_sub(t0) as f64;
+                obs::record_conn(id, self.core.front.service, Stage::Write, t0, dur);
             }
         }
         if errors > 0 {
@@ -1063,9 +1086,9 @@ impl App for ServeApp {
         Arc::clone(&self.inner.reactor)
     }
 
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request) {
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
         let reply = core.reply_to(conn, seq);
-        dispatch(req, &self.inner, &self.pool, reply);
+        dispatch(req, ctx, &self.inner, &self.pool, reply);
     }
 }
 

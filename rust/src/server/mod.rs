@@ -85,6 +85,13 @@ pub struct ServeConfig {
     /// intra-request fan-out only pays when workers < cores. Results are
     /// bit-identical at every setting (see `crate::util::par`).
     pub threads: usize,
+    /// Trace-sampling rate (`--trace-sample=N`): 1-in-N of id-less
+    /// requests record span events; requests carrying a wire `id` are
+    /// always traced while the gate is open. 0 (the default) leaves the
+    /// process-wide gate untouched — it never *disables* tracing another
+    /// component enabled, so a router and its shards can each opt in
+    /// independently inside one test process.
+    pub trace_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +107,7 @@ impl Default for ServeConfig {
             retry_after_ms: 100,
             max_connections: 256,
             threads: crate::util::par::default_threads(),
+            trace_sample: 0,
         }
     }
 }
@@ -132,6 +140,9 @@ pub struct Server {
 impl Server {
     /// Bind, start workers, and begin serving on the reactor thread.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
+        if cfg.trace_sample != 0 {
+            crate::obs::set_sample(cfg.trace_sample);
+        }
         let (listener, addr) = bind_front(&cfg.host, cfg.port)?;
         let inner = Arc::new(ServerInner::new(cfg.clone()));
         let pool = {
@@ -307,6 +318,22 @@ pub struct LoadgenReport {
     /// Extra attempts spent on retry_after_ms backoffs (0 when the daemon
     /// never shed load); the backoff time itself is inside the latencies.
     pub retries: usize,
+    /// Latency breakdown per chain dimension, ascending by dimension
+    /// (`--dims` runs mix dimensions in one stream — the aggregate
+    /// percentiles hide which dimension pays; this doesn't). Single-`d`
+    /// runs report one row.
+    pub per_dim: Vec<DimLatency>,
+}
+
+/// One dimension's slice of a loadgen run.
+#[derive(Debug, Clone)]
+pub struct DimLatency {
+    /// Chain dimension the requests used.
+    pub d: usize,
+    /// Successful requests at this dimension.
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Hammer a live daemon with `clients` concurrent connections and report
@@ -323,7 +350,7 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         let stats = run_client(client as u64, cfg);
         collected.lock().expect("loadgen results lock").push(stats);
     });
-    let mut latencies: Vec<f64> = Vec::new();
+    let mut latencies: Vec<(usize, f64)> = Vec::new();
     let mut errors = 0usize;
     let mut cached = 0usize;
     let mut retries = 0usize;
@@ -338,14 +365,27 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
     let total = cfg.clients.max(1) * cfg.requests;
     let ok = latencies.len();
     // Percentiles come from THIS run's samples only (a caller may reuse one
-    // Metrics across runs, whose timer window would blend them), but through
-    // the same `Metrics::timer_percentile` definition the daemon reports.
-    let mut this_run = Metrics::new();
-    for &l in &latencies {
+    // Metrics across runs, whose timers would blend them), but through the
+    // same histogram quantile definition the daemon reports. Dimensions get
+    // their own histograms so mixed-dims runs can attribute latency.
+    let mut this_run = crate::coordinator::Histogram::new();
+    let mut by_dim: std::collections::BTreeMap<usize, crate::coordinator::Histogram> =
+        std::collections::BTreeMap::new();
+    for &(d, l) in &latencies {
         metrics.record_secs("loadgen_latency", l);
-        this_run.record_secs("latency", l);
+        this_run.record(l);
+        by_dim.entry(d).or_default().record(l);
     }
-    let pct = |q: f64| this_run.timer_percentile("latency", q).unwrap_or(0.0) * 1e3;
+    let per_dim = by_dim
+        .iter()
+        .map(|(&d, h)| DimLatency {
+            d,
+            n: h.count() as usize,
+            p50_ms: h.quantile(0.50).unwrap_or(0.0) * 1e3,
+            p99_ms: h.quantile(0.99).unwrap_or(0.0) * 1e3,
+        })
+        .collect();
+    let pct = |q: f64| this_run.quantile(q).unwrap_or(0.0) * 1e3;
     let report = LoadgenReport {
         total_requests: total,
         ok,
@@ -357,6 +397,7 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         p95_ms: pct(0.95),
         p99_ms: pct(0.99),
         retries,
+        per_dim,
     };
     metrics.incr("loadgen_requests", total as u64);
     metrics.incr("loadgen_ok", ok as u64);
@@ -371,8 +412,10 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
 }
 
 /// Per-connection tallies a loadgen client thread reports back.
+/// Latencies are (chain dimension, seconds) so the report can break the
+/// percentiles down per dimension.
 struct ClientStats {
-    latencies: Vec<f64>,
+    latencies: Vec<(usize, f64)>,
     errors: usize,
     cached: usize,
     retries: usize,
@@ -425,12 +468,13 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         } else {
             cfg.dims[(client as usize + r) % cfg.dims.len()]
         };
-        protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed)
+        (protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed), d)
     };
     let window = cfg.pipeline.max(1);
     let mut r = 0usize;
     while r < cfg.requests {
-        let burst: Vec<String> = (r..(r + window).min(cfg.requests)).map(line_for).collect();
+        let burst: Vec<(String, usize)> =
+            (r..(r + window).min(cfg.requests)).map(line_for).collect();
         r += burst.len();
         // Latency is client-observed end-to-end: the clock starts when the
         // burst goes out and keeps running across retry_after_ms backoffs,
@@ -439,7 +483,7 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         // burst's start, so a response's latency includes the queueing the
         // pipelining itself created — that head-of-line wait is real.
         let t = Instant::now();
-        for line in &burst {
+        for (line, _) in &burst {
             writer.write_all(line.as_bytes())?;
             writer.write_all(b"\n")?;
         }
@@ -447,18 +491,18 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         // Responses come back strictly in request order (the serving
         // tiers' reorder buffers guarantee it); shed requests are retried
         // sequentially after the burst settles.
-        let mut resend: Vec<(String, u64)> = Vec::new();
-        for line in &burst {
+        let mut resend: Vec<(String, usize, u64)> = Vec::new();
+        for (line, d) in &burst {
             match read_settle(&mut reader)? {
                 Settle::Ok { cached } => {
-                    stats.latencies.push(t.elapsed().as_secs_f64());
+                    stats.latencies.push((*d, t.elapsed().as_secs_f64()));
                     stats.cached += usize::from(cached);
                 }
-                Settle::Retry(ms) => resend.push((line.clone(), ms)),
+                Settle::Retry(ms) => resend.push((line.clone(), *d, ms)),
                 Settle::Fail => stats.errors += 1,
             }
         }
-        for (line, first_backoff) in resend {
+        for (line, d, first_backoff) in resend {
             let mut backoff = first_backoff;
             let mut attempts = 1usize;
             loop {
@@ -474,7 +518,7 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
                 writer.flush()?;
                 match read_settle(&mut reader)? {
                     Settle::Ok { cached } => {
-                        stats.latencies.push(t.elapsed().as_secs_f64());
+                        stats.latencies.push((d, t.elapsed().as_secs_f64()));
                         stats.cached += usize::from(cached);
                         break;
                     }
@@ -653,6 +697,11 @@ mod tests {
         assert_eq!(report.errors, 0);
         assert!(report.throughput_rps > 0.0);
         assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        // Single-dimension run: the breakdown is one row covering everything.
+        assert_eq!(report.per_dim.len(), 1);
+        assert_eq!(report.per_dim[0].d, 4);
+        assert_eq!(report.per_dim[0].n, 24);
+        assert!(report.per_dim[0].p50_ms <= report.per_dim[0].p99_ms);
         assert_eq!(metrics.counter("loadgen_ok"), 24);
         assert!(metrics.gauge_value("loadgen_p99_ms").is_some());
         // Shared-seed run: everything after the very first compute is cached.
@@ -696,6 +745,14 @@ mod tests {
         // 4 requests, so all three dimensions produced distinct cache
         // entries (12 distinct seeds ⇒ 12 distinct canonical keys).
         assert_eq!(server.counter("cache_misses"), 12);
+        // Per-dimension breakdown: each listed dimension got exactly its
+        // share (every residue of (client + request) mod 3 appears 4×).
+        let dims: Vec<usize> = report.per_dim.iter().map(|p| p.d).collect();
+        assert_eq!(dims, vec![3, 5, 7]);
+        for p in &report.per_dim {
+            assert_eq!(p.n, 4, "dimension {} request share", p.d);
+            assert!(p.p50_ms > 0.0 && p.p50_ms <= p.p99_ms);
+        }
         server.stop();
     }
 }

@@ -9,11 +9,19 @@
 //! {"op":"lle","system":"lorenz","steps":4000,"burn":1000,"chunks":64}
 //! {"op":"info"}
 //! {"op":"metrics"}
+//! {"op":"trace","limit":256}
 //! ```
 //!
 //! Responses are `{"ok":true,"cached":…,"result":{…}}` or
 //! `{"ok":false,"error":"…"}` (with `"retry_after_ms"` when the server is
 //! shedding load and the client should back off and retry).
+//!
+//! Any request may carry an optional `"id"` (string or integer): it is
+//! echoed verbatim as the first key of the response line, forwarded
+//! router → shard so cross-tier traces stitch on it, and — while tracing
+//! is sampled on (`--trace-sample`) — it forces the request to be traced
+//! (see [`crate::obs`]). The `id` is *not* part of the canonical form:
+//! cache identity and rendezvous routing ignore it.
 //!
 //! GOOM zeros (logmag = -inf) have no JSON literal; the protocol encodes
 //! them as `null` in `logmag` arrays, both directions.
@@ -49,6 +57,8 @@ pub const MAX_SCAN_LEN: usize = 4096;
 pub const MAX_LLE_STEPS: usize = 200_000;
 pub const MAX_LLE_BURN: usize = 1_000_000;
 pub const MAX_CHUNKS: usize = 4096;
+/// Bound on the `trace` op's span count (well past every ring's capacity).
+pub const MAX_TRACE_LIMIT: usize = 100_000;
 
 /// A decoded, bounds-checked request.
 #[derive(Debug, Clone, PartialEq)]
@@ -58,6 +68,8 @@ pub enum Request {
     Lle(LleReq),
     Info,
     Metrics,
+    /// Recent trace spans (most recent `limit`), newest last.
+    Trace { limit: usize },
 }
 
 /// Fig.-1 matrix-product chain over any served [`Method`].
@@ -143,11 +155,20 @@ impl Request {
         match op {
             "info" => Ok(Request::Info),
             "metrics" => Ok(Request::Metrics),
+            "trace" => Ok(Request::Trace {
+                limit: bounded_usize(
+                    doc,
+                    "limit",
+                    crate::obs::DEFAULT_TRACE_LIMIT,
+                    1,
+                    MAX_TRACE_LIMIT,
+                )?,
+            }),
             "chain" => Self::parse_chain(doc),
             "scan" => Self::parse_scan(doc),
             "lle" => Self::parse_lle(doc),
             other => Err(format!(
-                "unknown op '{other}' (expected chain|scan|lle|info|metrics)"
+                "unknown op '{other}' (expected chain|scan|lle|info|metrics|trace)"
             )),
         }
     }
@@ -270,7 +291,7 @@ impl Request {
     /// for the introspection ops.
     pub fn canonical_line(&self) -> Option<String> {
         let doc = match self {
-            Request::Info | Request::Metrics => return None,
+            Request::Info | Request::Metrics | Request::Trace { .. } => return None,
             Request::Chain(c) => obj(vec![
                 ("op", Json::Str("chain".into())),
                 ("method", Json::Str(method_slug(c.method).into())),
@@ -414,6 +435,50 @@ pub fn err_line(msg: &str, retry_after_ms: Option<u64>) -> String {
         pairs.push(("retry_after_ms", num(ms as f64)));
     }
     json::write(&obj(pairs))
+}
+
+/// Cap on a client-supplied `id`'s serialized form: ids are echoed on
+/// every response and copied into trace spans, so they must stay small.
+pub const MAX_ID_BYTES: usize = 256;
+
+/// Validate the optional request `id`: absent, a string, or an integer in
+/// `[0, 2^53)` (the range the JSON writer reproduces exactly). Anything
+/// else is a protocol error — silently dropping a malformed id would break
+/// the client's response matching.
+pub fn parse_id(doc: &Json) -> Result<Option<Json>, String> {
+    match doc.get("id") {
+        None => Ok(None),
+        Some(Json::Str(s)) => {
+            if s.len() > MAX_ID_BYTES {
+                return Err(format!("'id' exceeds {MAX_ID_BYTES} bytes"));
+            }
+            Ok(Some(Json::Str(s.clone())))
+        }
+        Some(Json::Num(x)) => {
+            if *x < 0.0 || x.fract() != 0.0 || *x >= 9_007_199_254_740_992.0 {
+                return Err("'id' must be a string or an integer in [0, 2^53)".to_string());
+            }
+            Ok(Some(Json::Num(*x)))
+        }
+        Some(_) => Err("'id' must be a string or an integer".to_string()),
+    }
+}
+
+/// Splice the echoed `id` onto a finished response line as its first key.
+/// Response lines are single JSON objects, so prefix insertion keeps the
+/// body byte-identical — crucially, a shard-computed line fanned to many
+/// coalesced waiters gets each waiter's own id without re-serializing the
+/// result. Non-object lines (impossible today) pass through unchanged.
+pub fn attach_id(line: &str, id: &Json) -> String {
+    let Some(rest) = line.strip_prefix('{') else {
+        return line.to_string();
+    };
+    let id_txt = json::write(id);
+    if rest.starts_with('}') {
+        format!("{{\"id\":{id_txt}{rest}")
+    } else {
+        format!("{{\"id\":{id_txt},{rest}")
+    }
 }
 
 /// Client-side encoder for a chain request (used by `repro loadgen` and the
@@ -654,5 +719,66 @@ mod tests {
         assert_eq!(Request::Info.canonical_key(), None);
         assert_eq!(Request::Metrics.canonical_key(), None);
         assert_eq!(Request::Info.batch_key(), None);
+    }
+
+    #[test]
+    fn trace_op_parses_with_bounded_limit_and_is_uncached() {
+        assert_eq!(
+            parse_line(r#"{"op":"trace"}"#).unwrap(),
+            Request::Trace { limit: crate::obs::DEFAULT_TRACE_LIMIT }
+        );
+        assert_eq!(
+            parse_line(r#"{"op":"trace","limit":32}"#).unwrap(),
+            Request::Trace { limit: 32 }
+        );
+        assert!(parse_line(r#"{"op":"trace","limit":0}"#).is_err());
+        assert!(parse_line(r#"{"op":"trace","limit":99999999}"#).is_err());
+        let t = Request::Trace { limit: 8 };
+        assert_eq!(t.canonical_key(), None, "trace answers are never cached");
+        assert_eq!(t.canonical_line(), None);
+        assert_eq!(t.batch_key(), None);
+    }
+
+    #[test]
+    fn id_field_validates_and_canonical_forms_ignore_it() {
+        let doc = json::parse(r#"{"op":"chain","id":"req-9"}"#).unwrap();
+        assert_eq!(parse_id(&doc).unwrap(), Some(Json::Str("req-9".into())));
+        let doc = json::parse(r#"{"op":"chain","id":42}"#).unwrap();
+        assert_eq!(parse_id(&doc).unwrap(), Some(Json::Num(42.0)));
+        let doc = json::parse(r#"{"op":"chain"}"#).unwrap();
+        assert_eq!(parse_id(&doc).unwrap(), None);
+        for bad in [
+            r#"{"id":true}"#,
+            r#"{"id":[1]}"#,
+            r#"{"id":1.5}"#,
+            r#"{"id":-3}"#,
+        ] {
+            let doc = json::parse(bad).unwrap();
+            assert!(parse_id(&doc).is_err(), "{bad} must be rejected");
+        }
+        // The id never reaches cache identity or routing: the canonical
+        // forms of an id'd request and its id-less twin are identical.
+        let with = parse_line(r#"{"op":"chain","d":8,"id":"x"}"#).unwrap();
+        let without = parse_line(r#"{"op":"chain","d":8}"#).unwrap();
+        assert_eq!(with.canonical_line(), without.canonical_line());
+        assert_eq!(with.canonical_key(), without.canonical_key());
+    }
+
+    #[test]
+    fn attach_id_prefixes_without_touching_the_body() {
+        let body = ok_line(obj(vec![("x", num(1.0))]), false);
+        let tagged = attach_id(&body, &Json::Str("req-1".into()));
+        assert!(tagged.starts_with(r#"{"id":"req-1","#), "got {tagged}");
+        assert_eq!(&tagged[r#"{"id":"req-1","#.len()..], &body[1..]);
+        let doc = json::parse(&tagged).unwrap();
+        assert_eq!(doc.get("id").unwrap().as_str(), Some("req-1"));
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+        // Numeric ids and the empty-object edge stay valid JSON too.
+        let n = attach_id("{}", &Json::Num(7.0));
+        assert_eq!(json::parse(&n).unwrap().get("id").unwrap().as_usize(), Some(7));
+        let err = attach_id(&err_line("nope", None), &Json::Num(3.0));
+        let doc = json::parse(&err).unwrap();
+        assert_eq!(doc.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
     }
 }

@@ -33,8 +33,9 @@
 //! so responses stay byte-identical to it.
 
 use super::event_loop::{self, App, Core, FrontConfig, ReactorStats};
-use super::protocol::{err_line, num, num_or_null, obj, ok_line, Request};
+use super::protocol::{attach_id, err_line, num, num_or_null, obj, ok_line, Request};
 use crate::coordinator::Metrics;
+use crate::obs::{self, ReqCtx};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -59,6 +60,10 @@ pub struct RouterConfig {
     pub max_connections: usize,
     /// Backoff hint attached to no-backend-available rejections.
     pub retry_after_ms: u64,
+    /// Trace sampling gate (`--trace-sample=N`): 0 leaves the process-wide
+    /// gate untouched (tracing stays off unless something else opened it);
+    /// N opens it to 1-in-N.
+    pub trace_sample: u64,
 }
 
 impl Default for RouterConfig {
@@ -70,6 +75,7 @@ impl Default for RouterConfig {
             max_request_bytes: 1 << 20,
             max_connections: 256,
             retry_after_ms: 100,
+            trace_sample: 0,
         }
     }
 }
@@ -134,6 +140,9 @@ impl Router {
             "router needs at least one backend (--backends=host:port[,host:port...])"
         );
         let (listener, addr) = super::bind_front(&cfg.host, cfg.port)?;
+        if cfg.trace_sample != 0 {
+            obs::set_sample(cfg.trace_sample);
+        }
         let inner = Arc::new(RouterInner {
             cfg,
             metrics: Mutex::new(Metrics::new()),
@@ -210,7 +219,10 @@ struct RelayEntry {
     /// Reactor client connection and request slot the answer belongs to.
     conn: u64,
     seq: u64,
-    /// Canonical request line (what gets (re)sent on every attempt).
+    /// Canonical request line — with the client's `id` spliced back on when
+    /// one was sent, so the shard traces under the same id and echoes it
+    /// (the echoed response relays to the client verbatim). (Re)sent as-is
+    /// on every attempt.
     line: String,
     /// Rendezvous ranking for this request's key, best first.
     ranked: Vec<usize>,
@@ -220,6 +232,17 @@ struct RelayEntry {
     /// the possibly-stale pooled connection, then one fresh retry — the
     /// blocking relay's ladder).
     tries: u8,
+    /// The client's wire `id`, for error lines the router itself mints
+    /// (shard responses already carry the echo).
+    id: Option<Json>,
+}
+
+/// Echo helper: splice the wire `id` onto a router-minted response line.
+fn with_id(line: String, id: &Option<Json>) -> String {
+    match id {
+        Some(id) => attach_id(&line, id),
+        None => line,
+    }
 }
 
 /// Sans-IO relay brain: requests in, backend sends + completions out. All
@@ -249,17 +272,14 @@ impl RelayApp {
         loop {
             let Some(&idx) = entry.ranked.get(entry.rank_pos) else {
                 self.inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
-                core.complete(
-                    entry.conn,
-                    entry.seq,
-                    err_line(
-                        &format!(
-                            "no backend available for request (tried {})",
-                            entry.ranked.len()
-                        ),
-                        Some(self.inner.cfg.retry_after_ms),
+                let line = err_line(
+                    &format!(
+                        "no backend available for request (tried {})",
+                        entry.ranked.len()
                     ),
+                    Some(self.inner.cfg.retry_after_ms),
                 );
+                core.complete(entry.conn, entry.seq, with_id(line, &entry.id));
                 return;
             };
             let pooled = self.live.get(&idx).copied().filter(|b| core.backend_alive(*b));
@@ -307,11 +327,21 @@ impl App for RelayApp {
         Arc::clone(&self.inner.reactor)
     }
 
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request) {
+    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
         match req {
-            Request::Info => core.complete(conn, seq, ok_line(info_json(&self.inner), false)),
+            Request::Info => {
+                let line = ok_line(info_json(&self.inner), false);
+                core.complete(conn, seq, with_id(line, &ctx.id));
+            }
             Request::Metrics => {
-                core.complete(conn, seq, ok_line(metrics_json(&self.inner), false))
+                let line = ok_line(metrics_json(&self.inner), false);
+                core.complete(conn, seq, with_id(line, &ctx.id));
+            }
+            Request::Trace { limit } => {
+                // The router's own spans; clients stitch cross-tier traces
+                // by also asking each shard and merging (`repro trace`).
+                let line = ok_line(obs::spans_json(limit), false);
+                core.complete(conn, seq, with_id(line, &ctx.id));
             }
             compute => {
                 let key = compute
@@ -320,36 +350,47 @@ impl App for RelayApp {
                 let line = compute
                     .canonical_line()
                     .expect("compute requests always encode");
-                // Canonicalizing spells out defaults, so a request that
-                // just fit the inbound cap can exceed it (by ~tens of
-                // bytes). Reject here with a clear error rather than
-                // letting the shard's identical cap produce a confusing
-                // rejection.
+                // Forward the wire id with the canonical line: the shard
+                // traces the relayed request under the client's id (the
+                // cross-tier stitch) and its echoed response relays back
+                // verbatim. The id is NOT part of the canonical key, so
+                // routing and shard caching are unaffected.
+                let line = with_id(line, &ctx.id);
+                // Canonicalizing spells out defaults (and re-attaches the
+                // id), so a request that just fit the inbound cap can
+                // exceed it (by ~tens of bytes). Reject here with a clear
+                // error rather than letting the shard's identical cap
+                // produce a confusing rejection.
                 if line.len() > self.inner.cfg.max_request_bytes {
                     self.inner
                         .metrics
                         .lock()
                         .expect("metrics lock")
                         .incr("oversized_rejects", 1);
-                    core.complete(
-                        conn,
-                        seq,
-                        err_line(
-                            &format!(
-                                "canonical request form is {} bytes, exceeding {} \
-                                 (raise --max-request-bytes on router and shards)",
-                                line.len(),
-                                self.inner.cfg.max_request_bytes
-                            ),
-                            None,
+                    let err = err_line(
+                        &format!(
+                            "canonical request form is {} bytes, exceeding {} \
+                             (raise --max-request-bytes on router and shards)",
+                            line.len(),
+                            self.inner.cfg.max_request_bytes
                         ),
+                        None,
                     );
+                    core.complete(conn, seq, with_id(err, &ctx.id));
                     return;
                 }
                 let ranked = rendezvous_rank(&key, &self.inner.cfg.backends);
                 self.forward(
                     core,
-                    RelayEntry { conn, seq, line, ranked, rank_pos: 0, tries: 0 },
+                    RelayEntry {
+                        conn,
+                        seq,
+                        line,
+                        ranked,
+                        rank_pos: 0,
+                        tries: 0,
+                        id: ctx.id,
+                    },
                 );
             }
         }
@@ -439,7 +480,7 @@ fn info_json(inner: &Arc<RouterInner>) -> Json {
         (
             "ops",
             Json::Arr(
-                ["chain", "scan", "lle", "info", "metrics"]
+                ["chain", "scan", "lle", "info", "metrics", "trace"]
                     .iter()
                     .map(|s| Json::Str(s.to_string()))
                     .collect(),

@@ -21,7 +21,7 @@ use super::cache::LruCache;
 use super::inflight::{Inflight, Reply};
 use super::pool::{Pool, SubmitError};
 use super::protocol::{
-    err_line, method_slug, num, num_or_null, obj, ok_line, Request,
+    attach_id, err_line, method_slug, num, num_or_null, obj, ok_line, parse_id, Request,
 };
 use super::ServeConfig;
 use crate::chain::{self, ChainResult, ChainSpec, Method};
@@ -30,10 +30,14 @@ use crate::dynsys;
 use crate::goom::kernel::stats as kernel_stats;
 use crate::goom::{lmme_into, GoomMat, LmmeScratch};
 use crate::lyapunov;
+use crate::obs::{self, ReqCtx, Stage};
 use crate::util::json::{self, Json};
 use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Tier label on every span this module records.
+const TIER: &str = "server";
 
 thread_local! {
     /// Per-worker LMME scratch: pool workers are persistent OS threads, so
@@ -74,8 +78,9 @@ impl ServerInner {
 /// What the protocol wants the transport driver to do next.
 #[derive(Debug)]
 pub enum SessionEvent {
-    /// A fully-decoded request: hand it to [`dispatch`].
-    Request(Request),
+    /// A fully-decoded request plus its optional wire `id` (echoed on the
+    /// response and carried into trace spans): hand both to [`dispatch`].
+    Request(Request, Option<Json>),
     /// A line that failed to decode; the payload is the complete response
     /// line to send (counted as a request by the driver).
     BadLine(String),
@@ -216,7 +221,10 @@ fn decode_line(line: &[u8]) -> Option<SessionEvent> {
         Err(e) => SessionEvent::BadLine(err_line(&format!("bad json: {e}"), None)),
         Ok(doc) => match Request::parse(&doc) {
             Err(e) => SessionEvent::BadLine(err_line(&e, None)),
-            Ok(req) => SessionEvent::Request(req),
+            Ok(req) => match parse_id(&doc) {
+                Err(e) => SessionEvent::BadLine(err_line(&e, None)),
+                Ok(id) => SessionEvent::Request(req, id),
+            },
         },
     })
 }
@@ -232,13 +240,32 @@ pub struct Job {
     pub request: Request,
     pub cache_key: String,
     pub enqueued: Instant,
+    /// Trace identity when this request was sampled (spans for enqueue,
+    /// batch-form, kernel, serialize stages record under it).
+    pub trace: Option<std::sync::Arc<str>>,
+    /// Trace-epoch timestamp of submission (0 when untraced).
+    pub enqueued_us: u64,
     inner: Arc<ServerInner>,
     resolved: bool,
 }
 
 impl Job {
-    pub fn new(request: Request, cache_key: String, inner: Arc<ServerInner>) -> Self {
-        Self { request, cache_key, enqueued: Instant::now(), inner, resolved: false }
+    pub fn new(
+        request: Request,
+        cache_key: String,
+        inner: Arc<ServerInner>,
+        trace: Option<std::sync::Arc<str>>,
+    ) -> Self {
+        let enqueued_us = if trace.is_some() { obs::now_us() } else { 0 };
+        Self {
+            request,
+            cache_key,
+            enqueued: Instant::now(),
+            trace,
+            enqueued_us,
+            inner,
+            resolved: false,
+        }
     }
 
     /// Deliver the finished response line to every coalesced waiter.
@@ -271,44 +298,67 @@ impl Drop for Job {
 /// in-flight registry and return immediately (the pool calls it later).
 /// Concurrent identical requests coalesce: one computation, one response
 /// line fanned out to every waiter.
-pub fn dispatch(req: Request, inner: &Arc<ServerInner>, pool: &Pool<Job>, reply: Reply) {
+///
+/// The request's [`ReqCtx`] carries its wire `id` (spliced onto whatever
+/// line eventually answers — computed results, cache hits, coalesced
+/// fan-outs, rejections, even shutdown errors — by wrapping the reply
+/// itself) and its trace identity when sampled. The shard hot path takes
+/// the metrics lock exactly once per dispatch, on every outcome.
+pub fn dispatch(
+    req: Request,
+    ctx: ReqCtx,
+    inner: &Arc<ServerInner>,
+    pool: &Pool<Job>,
+    reply: Reply,
+) {
+    // Echo the wire id on whatever line answers this request. Wrapping the
+    // reply (rather than editing the job's result line) keeps the computed
+    // body byte-identical across coalesced waiters with different ids.
+    let reply: Reply = match ctx.id {
+        None => reply,
+        Some(id) => Box::new(move |line: String| reply(attach_id(&line, &id))),
+    };
     match req {
         Request::Info => reply(ok_line(info_json(inner), false)),
         Request::Metrics => reply(ok_line(metrics_json(inner, pool), false)),
+        Request::Trace { limit } => reply(ok_line(obs::spans_json(limit), false)),
         compute => {
+            let trace = ctx.trace;
+            let t0 = trace.as_ref().map(|_| obs::now_us()).unwrap_or(0);
             let key = compute
                 .canonical_key()
                 .expect("compute requests always have a canonical key");
-            {
-                let hit = inner.cache.lock().expect("cache lock").get(&key);
-                let mut m = inner.metrics.lock().expect("metrics lock");
-                if let Some(result) = hit {
-                    m.incr("cache_hits", 1);
-                    drop(m);
-                    reply(ok_line(result, true));
-                    return;
+            let hit = inner.cache.lock().expect("cache lock").get(&key);
+            if let Some(result) = hit {
+                if let Some(tr) = &trace {
+                    obs::record(tr, TIER, Stage::CacheHit, t0, (obs::now_us() - t0) as f64);
                 }
-                m.incr("cache_misses", 1);
+                inner.metrics.lock().expect("metrics lock").incr("cache_hits", 1);
+                reply(ok_line(result, true));
+                return;
             }
             if !inner.inflight.join(&key, reply) {
                 // An identical request is already computing; its resolution
                 // will answer us too.
-                inner
-                    .metrics
-                    .lock()
-                    .expect("metrics lock")
-                    .incr("inflight_coalesced", 1);
+                if let Some(tr) = &trace {
+                    obs::record(tr, TIER, Stage::DedupHit, t0, 0.0);
+                }
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                m.incr("cache_misses", 1);
+                m.incr("inflight_coalesced", 1);
                 return;
             }
-            let job = Job::new(compute, key, Arc::clone(inner));
+            let job = Job::new(compute, key, Arc::clone(inner), trace);
             match pool.try_submit(job) {
-                Ok(()) => {}
+                Ok(()) => {
+                    inner.metrics.lock().expect("metrics lock").incr("cache_misses", 1);
+                }
                 Err(SubmitError::Full(job)) => {
-                    inner
-                        .metrics
-                        .lock()
-                        .expect("metrics lock")
-                        .incr("queue_rejects", 1);
+                    {
+                        let mut m = inner.metrics.lock().expect("metrics lock");
+                        m.incr("cache_misses", 1);
+                        m.incr("queue_rejects", 1);
+                    }
                     job.resolve(&err_line(
                         &format!(
                             "server busy: job queue is full ({} waiting)",
@@ -318,6 +368,7 @@ pub fn dispatch(req: Request, inner: &Arc<ServerInner>, pool: &Pool<Job>, reply:
                     ));
                 }
                 Err(SubmitError::Shutdown(job)) => {
+                    inner.metrics.lock().expect("metrics lock").incr("cache_misses", 1);
                     job.resolve(&err_line("server is shutting down", None));
                 }
             }
@@ -334,6 +385,14 @@ fn chain_result_json(res: &ChainResult) -> Json {
         ("steps_completed", num(res.steps_completed as f64)),
         ("failed", Json::Bool(res.failed)),
         ("final_max_logmag", num_or_null(res.final_max_logmag)),
+        // Dynamic-range telemetry (GOOM methods; null elsewhere): the
+        // extreme finite log-magnitudes the running product visited, and
+        // the base-10 decades between them — the range a float64 pipeline
+        // would have had to survive (it saturates near ±308 decades).
+        ("max_logmag_seen", num_or_null(res.max_logmag_seen)),
+        ("min_logmag_seen", num_or_null(res.min_logmag_seen)),
+        ("dynamic_range_decades", num_or_null(res.dynamic_range_decades())),
+        ("nonfinite_steps", num(res.nonfinite_steps as f64)),
     ])
 }
 
@@ -550,7 +609,7 @@ fn execute_single(req: &Request, threads: usize) -> Result<Json, String> {
                 ),
             ]))
         }
-        Request::Info | Request::Metrics => {
+        Request::Info | Request::Metrics | Request::Trace { .. } => {
             Err("internal: introspection ops are answered inline".to_string())
         }
     }
@@ -562,6 +621,14 @@ fn execute_single(req: &Request, threads: usize) -> Result<Json, String> {
 /// requests with the same dimension, advanced in lockstep by
 /// [`drive_scans`]. Both batched paths are bit-identical to solo runs.
 pub fn execute_batch(inner: &ServerInner, jobs: Vec<Job>) {
+    record_queue_spans(&jobs);
+    {
+        // Stage histogram: time spent queued, one lock for the whole drain.
+        let mut m = inner.metrics.lock().expect("metrics lock");
+        for job in &jobs {
+            m.record_secs("stage_queue_wait", job.enqueued.elapsed().as_secs_f64());
+        }
+    }
     let jobs = if jobs.len() > 1 {
         let Some(jobs) = try_execute_chain_batch(inner, jobs) else { return };
         let Some(jobs) = try_execute_scan_batch(inner, jobs) else { return };
@@ -570,8 +637,33 @@ pub fn execute_batch(inner: &ServerInner, jobs: Vec<Job>) {
         jobs
     };
     for job in jobs {
+        let t_exec = Instant::now();
+        let t0 = job.trace.as_ref().map(|_| obs::now_us()).unwrap_or(0);
         let out = execute_single(&job.request, inner.cfg.threads);
-        finish(inner, job, out);
+        let exec_s = t_exec.elapsed().as_secs_f64();
+        if let Some(tr) = &job.trace {
+            obs::record(tr, TIER, Stage::Kernel, t0, exec_s * 1e6);
+        }
+        finish(inner, job, out, exec_s);
+    }
+}
+
+/// Record the queue-wait (enqueue → worker pickup) span for every traced
+/// job in a drained batch, plus a batch-formation marker when the drain
+/// actually grouped requests.
+fn record_queue_spans(jobs: &[Job]) {
+    if jobs.iter().all(|j| j.trace.is_none()) {
+        return;
+    }
+    let now = obs::now_us();
+    for job in jobs {
+        if let Some(tr) = &job.trace {
+            let wait = now.saturating_sub(job.enqueued_us) as f64;
+            obs::record(tr, TIER, Stage::Enqueue, job.enqueued_us, wait);
+            if jobs.len() > 1 {
+                obs::record(tr, TIER, Stage::BatchForm, now, 0.0);
+            }
+        }
     }
 }
 
@@ -599,6 +691,10 @@ fn try_execute_chain_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Jo
         })
         .collect();
     let threads = inner.cfg.threads;
+    let traced = jobs.iter().any(|j| j.trace.is_some());
+    let t0 = if traced { obs::now_us() } else { 0 };
+    let k0 = if traced { Some(kernel_stats::snapshot()) } else { None };
+    let t_exec = Instant::now();
     let results = WORKER_SCRATCH.with(|sc| {
         let mut scratch = sc.borrow_mut();
         match method {
@@ -616,13 +712,30 @@ fn try_execute_chain_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Jo
             ),
         }
     });
+    let exec_s = t_exec.elapsed().as_secs_f64();
+    if let Some(k0) = k0 {
+        // Pack time comes from the process-global kernel counters, so it is
+        // approximate when other workers multiply concurrently — close
+        // enough to show the pack/compute split inside the kernel bar.
+        let pack_us = kernel_stats::snapshot().delta_since(&k0).pack_ns as f64 / 1000.0;
+        let mut packed = false;
+        for job in &jobs {
+            if let Some(tr) = &job.trace {
+                obs::record(tr, TIER, Stage::Kernel, t0, exec_s * 1e6);
+                if !packed {
+                    obs::record(tr, TIER, Stage::Pack, t0, pack_us);
+                    packed = true;
+                }
+            }
+        }
+    }
     {
         let mut m = inner.metrics.lock().expect("metrics lock");
         m.incr("batches", 1);
         m.incr("batched_jobs", jobs.len() as u64);
     }
     for (job, res) in jobs.into_iter().zip(results) {
-        finish(inner, job, Ok(chain_result_json(&res)));
+        finish(inner, job, Ok(chain_result_json(&res)), exec_s);
     }
     None
 }
@@ -639,6 +752,9 @@ fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job
     if !uniform {
         return Some(jobs);
     }
+    let traced = jobs.iter().any(|j| j.trace.is_some());
+    let t0 = if traced { obs::now_us() } else { 0 };
+    let t_exec = Instant::now();
     let finals: Vec<GoomMat<f64>> = {
         let mut runs: Vec<ScanRun> = jobs
             .iter()
@@ -651,6 +767,14 @@ fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job
             .with(|sc| drive_scans(&mut runs, &mut sc.borrow_mut(), inner.cfg.threads));
         runs.into_iter().map(ScanRun::into_final).collect()
     };
+    let exec_s = t_exec.elapsed().as_secs_f64();
+    if traced {
+        for job in &jobs {
+            if let Some(tr) = &job.trace {
+                obs::record(tr, TIER, Stage::Kernel, t0, exec_s * 1e6);
+            }
+        }
+    }
     {
         let mut m = inner.metrics.lock().expect("metrics lock");
         m.incr("scan_batches", 1);
@@ -661,26 +785,38 @@ fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job
             Request::Scan(s) => Ok(scan_result_json(s.d, s.mats.len(), &fin)),
             _ => unreachable!("checked above"),
         };
-        finish(inner, job, out);
+        finish(inner, job, out, exec_s);
     }
     None
 }
 
-fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>) {
+fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>, exec_s: f64) {
     let line = match out {
         Ok(result) => {
+            let ser_start = job.trace.as_ref().map(|_| obs::now_us()).unwrap_or(0);
+            let t_ser = Instant::now();
+            let line = ok_line(result.clone(), false);
+            let ser_s = t_ser.elapsed().as_secs_f64();
+            if let Some(tr) = &job.trace {
+                obs::record(tr, TIER, Stage::Serialize, ser_start, ser_s * 1e6);
+            }
             let evicted = inner
                 .cache
                 .lock()
                 .expect("cache lock")
-                .insert(job.cache_key.clone(), result.clone());
+                .insert(job.cache_key.clone(), result);
+            // One metrics acquisition per finished job, stage timers
+            // included (the per-stage histograms are always on — they cost
+            // a bucket increment, not a span).
             let mut m = inner.metrics.lock().expect("metrics lock");
             if evicted.is_some() {
                 m.incr("cache_evictions", 1);
             }
             m.incr("requests_ok", 1);
             m.record_secs("job_latency", job.enqueued.elapsed().as_secs_f64());
-            ok_line(result, false)
+            m.record_secs("stage_exec", exec_s);
+            m.record_secs("stage_serialize", ser_s);
+            line
         }
         Err(msg) => {
             inner.metrics.lock().expect("metrics lock").incr("requests_err", 1);
@@ -707,7 +843,7 @@ fn info_json(inner: &ServerInner) -> Json {
         (
             "ops",
             Json::Arr(
-                ["chain", "scan", "lle", "info", "metrics"]
+                ["chain", "scan", "lle", "info", "metrics", "trace"]
                     .iter()
                     .map(|s| Json::Str(s.to_string()))
                     .collect(),
@@ -756,8 +892,16 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
                         m.timer_mean(k).map_or(Json::Null, Json::Num),
                     ),
                     (
+                        "p50_s",
+                        m.timer_percentile(k, 0.50).map_or(Json::Null, Json::Num),
+                    ),
+                    (
                         "p95_s",
                         m.timer_percentile(k, 0.95).map_or(Json::Null, Json::Num),
+                    ),
+                    (
+                        "p99_s",
+                        m.timer_percentile(k, 0.99).map_or(Json::Null, Json::Num),
                     ),
                 ]),
             )
@@ -807,6 +951,9 @@ fn kernel_json() -> Json {
         ("matmul_ns_total", num(k.matmul_ns as f64)),
         ("matmul_gflops", num(k.matmul_gflops())),
         ("pack_b_reused", num(k.pack_b_reused as f64)),
+        ("lmme_rescales", num(k.lmme_rescales as f64)),
+        ("lmme_nonfinite", num(k.lmme_nonfinite as f64)),
+        ("scan_chunks", num(k.scan_chunks as f64)),
     ])
 }
 
@@ -834,7 +981,7 @@ mod tests {
         }
         events.extend(feed(&mut s, &[b'\n']));
         assert_eq!(events.len(), 1);
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
     }
 
     #[test]
@@ -843,7 +990,7 @@ mod tests {
         let burst = b"{\"op\":\"info\"}\nnot json\n\n{\"op\":\"metrics\"}\n";
         let events = feed(&mut s, burst);
         assert_eq!(events.len(), 3, "{events:?}");
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
         match &events[1] {
             SessionEvent::BadLine(line) => {
                 assert!(line.contains("bad json"), "{line}");
@@ -852,7 +999,7 @@ mod tests {
             }
             other => panic!("expected BadLine, got {other:?}"),
         }
-        assert!(matches!(events[2], SessionEvent::Request(Request::Metrics)));
+        assert!(matches!(events[2], SessionEvent::Request(Request::Metrics, _)));
     }
 
     #[test]
@@ -863,7 +1010,7 @@ mod tests {
         assert!(events.is_empty());
         s.on_eof(&mut events);
         assert_eq!(events.len(), 2, "{events:?}");
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
         assert!(matches!(events[1], SessionEvent::Close));
         assert!(s.is_closed());
         // Garbage tails still get their error before the close.
@@ -896,7 +1043,7 @@ mod tests {
             }
             other => panic!("expected Oversized, got {other:?}"),
         }
-        assert!(matches!(events[1], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[1], SessionEvent::Request(Request::Info, _)));
         // Oversized line dribbling in across chunks: the rejection arrives
         // when the terminator does, and the session keeps serving.
         let mut s = SessionState::new(max);
@@ -905,7 +1052,7 @@ mod tests {
         let events = feed(&mut s, b"tail\n{\"op\":\"metrics\"}\n");
         assert_eq!(events.len(), 2, "{events:?}");
         assert!(matches!(events[0], SessionEvent::Oversized(_)));
-        assert!(matches!(events[1], SessionEvent::Request(Request::Metrics)));
+        assert!(matches!(events[1], SessionEvent::Request(Request::Metrics, _)));
     }
 
     #[test]
@@ -945,7 +1092,7 @@ mod tests {
         assert!(feed(&mut s, b"\n   \n\r\n\t\n").is_empty());
         let events = feed(&mut s, b"  {\"op\":\"info\"}  \r\n");
         assert_eq!(events.len(), 1);
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
     }
 
     #[test]

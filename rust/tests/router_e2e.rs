@@ -372,6 +372,119 @@ fn many_pipelined_clients_cost_the_router_no_extra_threads() {
 }
 
 #[test]
+fn client_id_survives_the_relay_and_traces_stitch_across_tiers() {
+    // Both tiers opt into tracing (enable-only: neither start can shut the
+    // gate another test opened). Explicit-id requests are always traced
+    // while the gate is open, so this test doesn't depend on sampling luck.
+    let traced_shard = || {
+        Server::start(ServeConfig {
+            port: 0,
+            workers: 2,
+            queue_depth: 16,
+            batch_max: 4,
+            cache_capacity: 64,
+            max_request_bytes: 64 * 1024,
+            retry_after_ms: 5,
+            trace_sample: 1,
+            ..ServeConfig::default()
+        })
+        .expect("shard start")
+    };
+    let a = traced_shard();
+    let b = traced_shard();
+    let router = Router::start(RouterConfig {
+        port: 0,
+        backends: vec![a.addr().to_string(), b.addr().to_string()],
+        trace_sample: 1,
+        ..RouterConfig::default()
+    })
+    .expect("router start");
+
+    // Raw-line client: the byte-exact echo is the point, so don't parse
+    // before asserting on the bytes.
+    let stream = TcpStream::connect(router.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = BufWriter::new(stream);
+    let mut raw_roundtrip = move |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "router closed unexpectedly");
+        resp.trim_end().to_string()
+    };
+
+    // A string id on a compute request: relayed router → shard → response,
+    // echoed byte-exactly as the FIRST response key.
+    let resp = raw_roundtrip(
+        r#"{"op":"chain","method":"goomc64","d":4,"steps":30,"seed":4242,"id":"trace-probe-1"}"#,
+    );
+    assert!(
+        resp.starts_with(r#"{"id":"trace-probe-1","#),
+        "id must lead the response bytes: {resp}"
+    );
+    let doc = json::parse(&resp).expect("valid JSON");
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{doc:?}");
+    // The chain result carries the GOOM dynamic-range telemetry.
+    let result = doc.get("result").unwrap();
+    assert!(
+        result.get("dynamic_range_decades").unwrap().as_f64().unwrap() > 0.0,
+        "{result:?}"
+    );
+
+    // Integer ids round-trip as numbers, not strings.
+    let resp = raw_roundtrip(r#"{"op":"chain","d":4,"steps":30,"seed":4243,"id":77}"#);
+    assert!(resp.starts_with(r#"{"id":77,"#), "integer id echo: {resp}");
+
+    // Router-local introspection echoes the id too (never reaches a shard).
+    let resp = raw_roundtrip(r#"{"op":"info","id":"meta-1"}"#);
+    assert!(resp.starts_with(r#"{"id":"meta-1","#), "info id echo: {resp}");
+
+    // The trace op returns recent spans; the relayed request's id shows up
+    // under BOTH tier labels (the relayed canonical line carries the id, so
+    // the shard's spans join the router's under one request id — exactly
+    // what `repro trace` stitches into one Chrome timeline).
+    let resp = raw_roundtrip(r#"{"op":"trace","limit":100000}"#);
+    let doc = json::parse(&resp).expect("valid JSON");
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{doc:?}");
+    let spans = doc
+        .get("result")
+        .unwrap()
+        .get("spans")
+        .unwrap()
+        .as_arr()
+        .expect("spans array");
+    let tiers_for = |id: &str| -> Vec<&str> {
+        spans
+            .iter()
+            .filter(|s| s.get("id").and_then(Json::as_str) == Some(id))
+            .map(|s| s.get("tier").unwrap().as_str().unwrap())
+            .collect()
+    };
+    let probe_tiers = tiers_for("trace-probe-1");
+    assert!(
+        probe_tiers.contains(&"router") && probe_tiers.contains(&"server"),
+        "spans must stitch across tiers, saw {probe_tiers:?}"
+    );
+    // The shard side attributed real stages to the request, not just decode.
+    let probe_stages: Vec<&str> = spans
+        .iter()
+        .filter(|s| {
+            s.get("id").and_then(Json::as_str) == Some("trace-probe-1")
+                && s.get("tier").and_then(Json::as_str) == Some("server")
+        })
+        .map(|s| s.get("stage").unwrap().as_str().unwrap())
+        .collect();
+    assert!(probe_stages.contains(&"kernel"), "shard stages: {probe_stages:?}");
+    assert!(probe_stages.contains(&"serialize"), "shard stages: {probe_stages:?}");
+
+    router.stop();
+    a.stop();
+    b.stop();
+}
+
+#[test]
 fn malformed_lines_through_the_router_get_errors_and_the_session_survives() {
     let a = start_shard();
     let router = start_router(vec![a.addr().to_string()]);

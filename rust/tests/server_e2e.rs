@@ -360,3 +360,97 @@ fn concurrent_same_shape_requests_agree_with_solo_results() {
     }
     server.stop();
 }
+
+#[test]
+fn wire_id_echoes_byte_exactly_and_tracing_leaves_results_bit_identical() {
+    let server = start_server();
+    let stream = TcpStream::connect(server.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = BufWriter::new(stream);
+    let mut raw = move |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "server closed unexpectedly");
+        resp.trim_end().to_string()
+    };
+
+    // id echo leads the response bytes on introspection, compute, and
+    // request-level error paths alike.
+    let resp = raw(r#"{"op":"info","id":"shard-info"}"#);
+    assert!(resp.starts_with(r#"{"id":"shard-info","#), "{resp}");
+    let resp = raw(r#"{"op":"chain","d":4,"steps":20,"seed":31,"id":9007}"#);
+    assert!(resp.starts_with(r#"{"id":9007,"#), "{resp}");
+    let resp = raw(r#"{"op":"lle","system":"narnia","id":"err-1"}"#);
+    assert!(resp.starts_with(r#"{"id":"err-1","#), "errors echo too: {resp}");
+    assert_eq!(
+        json::parse(&resp).unwrap().get("ok").unwrap().as_bool(),
+        Some(false)
+    );
+    // Lines that never decode into a request answer id-less (the decoder
+    // can't trust any field of a line it rejected).
+    let resp = raw(r#"{"op":"teleport","id":"lost"}"#);
+    let doc = json::parse(&resp).unwrap();
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
+    assert!(doc.get("id").is_none(), "rejected line must stay id-less: {resp}");
+    // Invalid ids (wrong type) are rejected, not silently dropped.
+    let resp = raw(r#"{"op":"info","id":true}"#);
+    assert_eq!(
+        json::parse(&resp).unwrap().get("ok").unwrap().as_bool(),
+        Some(false)
+    );
+
+    // Bit-identity: the same cold request on an identically-configured
+    // server, computed with the trace gate wide open (sample=1, which also
+    // records span events for the minted id), must produce the exact same
+    // result document as the gate-closed run.
+    let cold = raw(&protocol::encode_chain_request("goomc64", 6, 120, 424242));
+    let cold = json::parse(&cold).unwrap();
+    assert_eq!(cold.get("cached").unwrap().as_bool(), Some(false));
+    goomrs::obs::set_sample(1);
+    let traced_server = start_server();
+    let stream = TcpStream::connect(traced_server.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = BufWriter::new(stream);
+    let req = protocol::encode_chain_request("goomc64", 6, 120, 424242);
+    writer.write_all(req.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let traced = json::parse(resp.trim()).unwrap();
+    assert_eq!(traced.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        cold.get("result").unwrap(),
+        traced.get("result").unwrap(),
+        "tracing must not perturb results"
+    );
+    // The traced run actually recorded spans, reachable via the trace op.
+    let trace = json::parse(&{
+        let stream = TcpStream::connect(traced_server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writer.write_all(b"{\"op\":\"trace\",\"limit\":100000}\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    })
+    .unwrap();
+    goomrs::obs::set_sample(0);
+    assert_eq!(trace.get("ok").unwrap().as_bool(), Some(true));
+    let result = trace.get("result").unwrap();
+    assert!(result.get("sample").unwrap().as_f64().is_some());
+    let spans = result.get("spans").unwrap().as_arr().unwrap();
+    assert!(
+        spans.iter().any(|s| {
+            s.get("stage").and_then(Json::as_str) == Some("kernel")
+                && s.get("tier").and_then(Json::as_str) == Some("server")
+        }),
+        "sampled compute must have recorded a kernel span"
+    );
+    traced_server.stop();
+    server.stop();
+}
