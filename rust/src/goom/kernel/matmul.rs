@@ -38,6 +38,7 @@
 //! batched, cached, and solo LMME byte-identical under the serving layer
 //! (PR-1 invariant), and it holds with or without a reused [`PackedB`].
 
+use super::simd;
 use super::stats;
 use crate::util::par;
 use std::time::Instant;
@@ -175,7 +176,9 @@ where
 /// swept while cache-hot), `MC`-row blocks in parallel inside each slab.
 /// The first slab stores register tiles outright; later slabs reload the
 /// partial sums and keep adding in ascending k — bit-identical to one
-/// full-depth accumulation.
+/// full-depth accumulation (for the portable flavor; the SIMD flavors
+/// accumulate through the same buffer with their own fixed summation
+/// shape, see [`super::simd`]).
 fn compute_blocked(
     n: usize,
     d: usize,
@@ -184,6 +187,7 @@ fn compute_blocked(
     pb: &PackedB,
     out: &mut [f64],
     threads: usize,
+    variant: simd::Variant,
 ) {
     let npa = n.div_ceil(MR);
     let npb = m.div_ceil(NR);
@@ -196,35 +200,143 @@ fn compute_blocked(
         par::par_chunks_mut(out, MC * m, threads, |blk, out_rows| {
             let row0 = blk * MC;
             let rows_here = out_rows.len() / m;
-            for p_local in 0..rows_here.div_ceil(MR) {
-                let p = row0 / MR + p_local;
-                let r0_local = p_local * MR;
-                let vr = MR.min(rows_here - r0_local);
-                let pa_panel =
-                    &pa[pa_base + p * MR * klen..pa_base + (p + 1) * MR * klen];
-                for q in 0..npb {
-                    let c0 = q * NR;
-                    let vc = NR.min(m - c0);
-                    let mut acc = [[0.0f64; NR]; MR];
-                    if !first {
-                        for (r, acc_row) in acc.iter_mut().enumerate().take(vr) {
-                            let off = (r0_local + r) * m + c0;
-                            acc_row[..vc].copy_from_slice(&out_rows[off..off + vc]);
-                        }
-                    }
-                    microkernel(
-                        pa_panel,
-                        &pb.data[pb_base + q * NR * klen..pb_base + (q + 1) * NR * klen],
-                        &mut acc,
-                    );
-                    for (r, acc_row) in acc.iter().enumerate().take(vr) {
-                        let off = (r0_local + r) * m + c0;
-                        out_rows[off..off + vc].copy_from_slice(&acc_row[..vc]);
-                    }
-                }
-            }
+            dispatch_row_block(
+                variant,
+                rows_here,
+                m,
+                klen,
+                npb,
+                row0 / MR,
+                pa,
+                pa_base,
+                pb,
+                pb_base,
+                first,
+                out_rows,
+            );
         });
         k0 += klen;
+    }
+}
+
+/// Select the microkernel for one row block. The match monomorphizes
+/// [`panel_row_block`] per flavor, so each variant gets the shared
+/// copy-in/copy-out edge handling wrapped around its own inner kernel;
+/// flavors whose ISA isn't compiled into this binary can't be produced by
+/// `simd::resolve_with`, and the catch-all arm keeps the match total.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_row_block(
+    variant: simd::Variant,
+    rows_here: usize,
+    m: usize,
+    klen: usize,
+    npb: usize,
+    row0_panel: usize,
+    pa: &[f64],
+    pa_base: usize,
+    pb: &PackedB,
+    pb_base: usize,
+    first: bool,
+    out_rows: &mut [f64],
+) {
+    macro_rules! run {
+        ($micro:expr) => {
+            panel_row_block(
+                rows_here, m, klen, npb, row0_panel, pa, pa_base, pb, pb_base, first, out_rows,
+                &$micro,
+            )
+        };
+    }
+    match variant {
+        simd::Variant::Portable => {
+            run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| microkernel(a, b, acc))
+        }
+        #[cfg(target_arch = "x86_64")]
+        simd::Variant::Avx2 => {
+            run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| unsafe {
+                simd::x86::microkernel_avx2(a, b, acc)
+            })
+        }
+        #[cfg(target_arch = "x86_64")]
+        simd::Variant::Avx512 => {
+            run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| unsafe {
+                simd::x86::microkernel_avx512(a, b, acc)
+            })
+        }
+        #[cfg(target_arch = "aarch64")]
+        simd::Variant::Neon => {
+            run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| unsafe {
+                simd::neon::microkernel_neon(a, b, acc)
+            })
+        }
+        simd::Variant::Comp => {
+            #[cfg(target_arch = "x86_64")]
+            if simd::comp_vectorized() {
+                return run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| unsafe {
+                    simd::x86::microkernel_comp_avx2(a, b, acc)
+                });
+            }
+            #[cfg(target_arch = "aarch64")]
+            if simd::comp_vectorized() {
+                return run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| unsafe {
+                    simd::neon::microkernel_comp_neon(a, b, acc)
+                });
+            }
+            run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| {
+                simd::comp::microkernel_comp(a, b, acc)
+            })
+        }
+        _ => run!(|a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]| microkernel(a, b, acc)),
+    }
+}
+
+/// One row block × one KC slab: sweep every B panel across the block's A
+/// panels, with partial-sum copy-in (after the first slab), the ragged
+/// right/bottom edge handling, and copy-out — shared verbatim by every
+/// flavor; only `micro` differs.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn panel_row_block<K>(
+    rows_here: usize,
+    m: usize,
+    klen: usize,
+    npb: usize,
+    row0_panel: usize,
+    pa: &[f64],
+    pa_base: usize,
+    pb: &PackedB,
+    pb_base: usize,
+    first: bool,
+    out_rows: &mut [f64],
+    micro: &K,
+) where
+    K: Fn(&[f64], &[f64], &mut [[f64; NR]; MR]),
+{
+    for p_local in 0..rows_here.div_ceil(MR) {
+        let p = row0_panel + p_local;
+        let r0_local = p_local * MR;
+        let vr = MR.min(rows_here - r0_local);
+        let pa_panel = &pa[pa_base + p * MR * klen..pa_base + (p + 1) * MR * klen];
+        for q in 0..npb {
+            let c0 = q * NR;
+            let vc = NR.min(m - c0);
+            let mut acc = [[0.0f64; NR]; MR];
+            if !first {
+                for (r, acc_row) in acc.iter_mut().enumerate().take(vr) {
+                    let off = (r0_local + r) * m + c0;
+                    acc_row[..vc].copy_from_slice(&out_rows[off..off + vc]);
+                }
+            }
+            micro(
+                pa_panel,
+                &pb.data[pb_base + q * NR * klen..pb_base + (q + 1) * NR * klen],
+                &mut acc,
+            );
+            for (r, acc_row) in acc.iter().enumerate().take(vr) {
+                let off = (r0_local + r) * m + c0;
+                out_rows[off..off + vc].copy_from_slice(&acc_row[..vc]);
+            }
+        }
     }
 }
 
@@ -238,8 +350,13 @@ fn compute_blocked(
 /// a shared left operand once per batch. (The mirror-image right-operand
 /// reuse goes through [`matmul_src_prepacked`] with an explicit
 /// [`PackedB`].)
+///
+/// `variant` picks the microkernel flavor; callers on the public entry
+/// points get the process-wide dispatch ([`simd::active`]), tests and the
+/// bench harness pin flavors explicitly.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_src<FA, FB>(
+    variant: simd::Variant,
     n: usize,
     d: usize,
     m: usize,
@@ -271,7 +388,7 @@ where
     timing.pack_ns = t0.elapsed().as_nanos() as u64;
 
     let t1 = Instant::now();
-    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads);
+    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads, variant);
     timing.compute_ns = t1.elapsed().as_nanos() as u64;
     let flops = 2 * (n as u64) * (d as u64) * (m as u64);
     stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
@@ -285,6 +402,7 @@ where
 /// `pack_b_reused` counter so cache effectiveness is observable.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_src_prepacked<FA>(
+    variant: simd::Variant,
     n: usize,
     d: usize,
     m: usize,
@@ -319,7 +437,7 @@ where
     timing.pack_ns = t0.elapsed().as_nanos() as u64;
 
     let t1 = Instant::now();
-    compute_blocked(n, d, m, &scratch.pa, pb, out, threads);
+    compute_blocked(n, d, m, &scratch.pa, pb, out, threads, variant);
     timing.compute_ns = t1.elapsed().as_nanos() as u64;
     let flops = 2 * (n as u64) * (d as u64) * (m as u64);
     stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
@@ -334,6 +452,7 @@ where
 /// validity). Bit-identical to repacking; counted as a `pack_b_reused` hit.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_src_reuse_b<FA>(
+    variant: simd::Variant,
     n: usize,
     d: usize,
     m: usize,
@@ -367,7 +486,7 @@ where
     timing.pack_ns = t0.elapsed().as_nanos() as u64;
 
     let t1 = Instant::now();
-    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads);
+    compute_blocked(n, d, m, &scratch.pa, &scratch.pb, out, threads, variant);
     timing.compute_ns = t1.elapsed().as_nanos() as u64;
     let flops = 2 * (n as u64) * (d as u64) * (m as u64);
     stats::record_matmul(timing.pack_ns, timing.compute_ns, flops);
@@ -375,8 +494,10 @@ where
     timing
 }
 
-/// The `MR×NR` register-tile inner loop: `acc[r][c] += Σ_k pa[k][r]·pb[k][c]`
-/// over the panels' slab depth, k ascending.
+/// The portable `MR×NR` register-tile inner loop:
+/// `acc[r][c] += Σ_k pa[k][r]·pb[k][c]` over the panels' slab depth, k
+/// ascending, plain IEEE mul+add — the determinism reference every SIMD
+/// flavor is tested against.
 #[inline(always)]
 fn microkernel(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
     for (a, b) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
@@ -391,9 +512,28 @@ fn microkernel(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
 
 /// Blocked multiply of plain row-major f64 slices: `out = a · b` with
 /// `a: n×d`, `b: d×m`. The entry point for [`crate::linalg::Mat::matmul`]
-/// and the bench harness.
+/// and the bench harness. Runs the process-wide dispatched flavor
+/// ([`simd::active`]; portable unless `GOOM_SIMD`/`--simd` opted in).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_f64(
+    a: &[f64],
+    b: &[f64],
+    n: usize,
+    d: usize,
+    m: usize,
+    out: &mut [f64],
+    scratch: &mut MatmulScratch,
+    threads: usize,
+) -> MatmulTiming {
+    matmul_f64_v(simd::active(), a, b, n, d, m, out, scratch, threads)
+}
+
+/// [`matmul_f64`] with an explicit microkernel flavor — the equality-bound
+/// tests and the bench harness pin flavors through this instead of
+/// mutating the process-wide dispatch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_f64_v(
+    variant: simd::Variant,
     a: &[f64],
     b: &[f64],
     n: usize,
@@ -406,6 +546,7 @@ pub fn matmul_f64(
     assert_eq!(a.len(), n * d, "matmul lhs length mismatch");
     assert_eq!(b.len(), d * m, "matmul rhs length mismatch");
     matmul_src(
+        variant,
         n,
         d,
         m,
@@ -438,6 +579,7 @@ pub fn matmul_f64_prepacked(
     let (d, m) = pb.shape();
     assert_eq!(a.len(), n * d, "matmul lhs length mismatch");
     matmul_src_prepacked(
+        simd::active(),
         n,
         d,
         m,
@@ -508,6 +650,27 @@ mod tests {
         out
     }
 
+    // Explicit-flavor twin of `kernel`. The bitwise-vs-reference oracle
+    // tests pin the portable flavor through this (never by mutating the
+    // process-wide dispatch, which would race under parallel test runs),
+    // so they keep passing when the whole suite runs under
+    // GOOM_SIMD=auto; the self-consistency tests stay on `kernel` and
+    // exercise whatever flavor the process dispatched.
+    fn kernel_v(
+        variant: simd::Variant,
+        a: &[f64],
+        b: &[f64],
+        n: usize,
+        d: usize,
+        m: usize,
+        threads: usize,
+    ) -> Vec<f64> {
+        let mut out = vec![f64::NAN; n * m];
+        let mut scratch = MatmulScratch::new();
+        matmul_f64_v(variant, a, b, n, d, m, &mut out, &mut scratch, threads);
+        out
+    }
+
     #[test]
     fn blocked_matches_reference_bitwise_across_ragged_shapes() {
         // Shapes straddling every boundary: register tile (MR=4, NR=4),
@@ -537,7 +700,7 @@ mod tests {
             let a = randv(n * d, 100 + case as u64);
             let b = randv(d * m, 200 + case as u64);
             let want = matmul_reference(&a, &b, n, d, m);
-            let got = kernel(&a, &b, n, d, m, 1);
+            let got = kernel_v(simd::Variant::Portable, &a, &b, n, d, m, 1);
             assert_eq!(got, want, "bitwise mismatch at {n}x{d}x{m}");
         }
     }
@@ -554,7 +717,7 @@ mod tests {
             let b = randv(d * m, 600 + case as u64);
             let want = matmul_reference(&a, &b, n, d, m);
             for threads in [1usize, 2, 7] {
-                let got = kernel(&a, &b, n, d, m, threads);
+                let got = kernel_v(simd::Variant::Portable, &a, &b, n, d, m, threads);
                 assert_eq!(got, want, "d={d} threads={threads}");
             }
         }
@@ -592,7 +755,7 @@ mod tests {
             let a = randv(n * d, 300 + case as u64);
             let b = randv(d * m, 400 + case as u64);
             let mut out = vec![0.0; n * m];
-            matmul_f64(&a, &b, n, d, m, &mut out, &mut scratch, 2);
+            matmul_f64_v(simd::Variant::Portable, &a, &b, n, d, m, &mut out, &mut scratch, 2);
             assert_eq!(out, matmul_reference(&a, &b, n, d, m), "case {case}");
         }
     }
@@ -605,10 +768,11 @@ mod tests {
         let b2 = randv(d * 6, 13);
         let mut scratch = MatmulScratch::new();
         let mut out1 = vec![0.0; n * 6];
-        matmul_f64(&a, &b1, n, d, 6, &mut out1, &mut scratch, 1);
+        matmul_f64_v(simd::Variant::Portable, &a, &b1, n, d, 6, &mut out1, &mut scratch, 1);
         // Second multiply shares the packed A panels.
         let mut out2 = vec![0.0; n * 6];
         matmul_src(
+            simd::Variant::Portable,
             n,
             d,
             6,
@@ -657,5 +821,163 @@ mod tests {
             (0..9).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
         let x = randv(9, 14);
         assert_eq!(kernel(&eye, &x, 3, 3, 3, 1), x);
+    }
+
+    // ---- SIMD flavor equality bounds ----------------------------------
+
+    /// Worst element-wise divergence from `want`, measured in ulps *of the
+    /// absolute-value dot product* `Σ_k |a[i,k]·b[k,j]|` — the
+    /// condition-aware yardstick: a signed sum can cancel to any
+    /// magnitude, but both summation orders carry forward error bounded
+    /// by `O(d)·eps·Σ|products|`, so their distance in these scaled ulps
+    /// is deterministically ≤ O(d) regardless of cancellation.
+    fn max_scaled_ulp_err(
+        a: &[f64],
+        b: &[f64],
+        n: usize,
+        d: usize,
+        m: usize,
+        got: &[f64],
+        want: &[f64],
+    ) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            for j in 0..m {
+                let mut abs_dot = 0.0f64;
+                for k in 0..d {
+                    abs_dot += (a[i * d + k] * b[k * m + j]).abs();
+                }
+                let diff = (got[i * m + j] - want[i * m + j]).abs();
+                if diff == 0.0 {
+                    continue;
+                }
+                let ulp = abs_dot * f64::EPSILON;
+                worst = worst.max(if ulp == 0.0 { f64::INFINITY } else { diff / ulp });
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn simd_flavors_stay_within_ulp_bound_of_portable_across_kc_boundaries() {
+        // Every flavor this host can run, at depths straddling the KC
+        // slab boundary, per thread count: thread-invariant bit-for-bit,
+        // and within 4·d scaled ulps of the portable reference.
+        let depths = [KC - 1, KC, KC + 1, 2 * KC + 3];
+        for v in simd::available() {
+            if v == simd::Variant::Portable {
+                continue;
+            }
+            for (case, &d) in depths.iter().enumerate() {
+                let (n, m) = (9, 11);
+                let a = randv(n * d, 700 + case as u64);
+                let b = randv(d * m, 800 + case as u64);
+                let want = kernel_v(simd::Variant::Portable, &a, &b, n, d, m, 1);
+                let solo = kernel_v(v, &a, &b, n, d, m, 1);
+                for threads in [2usize, 7] {
+                    let got = kernel_v(v, &a, &b, n, d, m, threads);
+                    assert_eq!(got, solo, "{} d={d} threads={threads}", v.name());
+                }
+                let worst = max_scaled_ulp_err(&a, &b, n, d, m, &solo, &want);
+                assert!(
+                    worst <= (4 * d) as f64,
+                    "{} d={d}: {worst} scaled ulps vs portable",
+                    v.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_flavors_stay_within_ulp_bound_on_ragged_shapes() {
+        // Shapes straddling the register tile and MC block boundaries,
+        // including the padded right/bottom edges every vector kernel
+        // touches with its full-width lanes.
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (3, 4, 5),
+            (5, 9, 7),
+            (16, 11, 24),
+            (63, 2, 65),
+            (65, 129, 66),
+        ];
+        for v in simd::available() {
+            if v == simd::Variant::Portable {
+                continue;
+            }
+            for (case, &(n, d, m)) in shapes.iter().enumerate() {
+                let a = randv(n * d, 1100 + case as u64);
+                let b = randv(d * m, 1200 + case as u64);
+                let want = kernel_v(simd::Variant::Portable, &a, &b, n, d, m, 1);
+                let got = kernel_v(v, &a, &b, n, d, m, 3);
+                let worst = max_scaled_ulp_err(&a, &b, n, d, m, &got, &want);
+                let bound = (4 * d).max(16) as f64;
+                assert!(
+                    worst <= bound,
+                    "{} {n}x{d}x{m}: {worst} scaled ulps vs portable",
+                    v.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compensated_flavor_is_bitwise_reproducible_across_lane_widths() {
+        // The comp dispatch (vectorized where the host allows, scalar
+        // otherwise) must reproduce the scalar compensated reference loop
+        // bit-for-bit — lane width and thread count never show. This is
+        // the reproducible-by-construction vector path.
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (3, 4, 5),
+            (9, KC - 1, 11),
+            (9, KC + 1, 11),
+            (6, 2 * KC + 3, 10),
+            (16, 40, 24),
+        ];
+        for (case, &(n, d, m)) in shapes.iter().enumerate() {
+            let a = randv(n * d, 1500 + case as u64);
+            let b = randv(d * m, 1600 + case as u64);
+            let want = simd::comp::matmul_comp_reference(&a, &b, n, d, m);
+            for threads in [1usize, 2, 7] {
+                let got = kernel_v(simd::Variant::Comp, &a, &b, n, d, m, threads);
+                assert_eq!(got, want, "{n}x{d}x{m} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_and_avx512_flavors_are_bitwise_identical_when_both_present() {
+        // The even/odd chain design makes lane width invisible across the
+        // fast flavors too; only checkable on an AVX-512 host.
+        if !simd::detected().avx512 {
+            return;
+        }
+        for &(n, d, m) in &[(9usize, KC + 1, 11usize), (16, 77, 24)] {
+            let a = randv(n * d, 1700 + d as u64);
+            let b = randv(d * m, 1800 + d as u64);
+            assert_eq!(
+                kernel_v(simd::Variant::Avx2, &a, &b, n, d, m, 2),
+                kernel_v(simd::Variant::Avx512, &a, &b, n, d, m, 2),
+                "{n}x{d}x{m}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_flavor_is_exact_on_exactly_representable_products() {
+        for v in simd::available() {
+            let a = vec![1.0, 2.0, 3.0, 4.0];
+            let b = vec![5.0, 6.0, 7.0, 8.0];
+            assert_eq!(
+                kernel_v(v, &a, &b, 2, 2, 2, 1),
+                vec![19.0, 22.0, 43.0, 50.0],
+                "{}",
+                v.name()
+            );
+            let eye: Vec<f64> = (0..9).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+            let x = randv(9, 14);
+            assert_eq!(kernel_v(v, &eye, &x, 3, 3, 3, 1), x, "{}", v.name());
+        }
     }
 }

@@ -22,14 +22,25 @@
 //! [`PackedB`] artifacts so repeated-B workloads pack once per operand
 //! instead of once per product. Both preserve the bit-identity contract.
 //!
+//! The microkernel itself comes in runtime-dispatched flavors
+//! ([`simd`]): the portable 4×4 tile stays the default and the
+//! determinism reference, with opt-in AVX2+FMA / AVX-512 / NEON paths
+//! and a compensated (two-product/two-sum) flavor that is bitwise
+//! reproducible across lane widths — selected once per process via
+//! `GOOM_SIMD` or the `--simd` CLI flags.
+//!
 //! See `docs/PERFORMANCE.md` for blocking parameters, the determinism
-//! contract, and how to read the exported counters.
+//! contract, the SIMD dispatch table, and how to read the exported
+//! counters.
 
+pub mod simd;
 pub mod stats;
 
 mod matmul;
 
-pub(crate) use matmul::{matmul_src, matmul_src_prepacked, matmul_src_reuse_b, pack_b_src};
+pub(crate) use matmul::{
+    matmul_f64_v, matmul_src, matmul_src_prepacked, matmul_src_reuse_b, pack_b_src,
+};
 pub use matmul::{
     matmul_f64, matmul_f64_prepacked, matmul_naive, matmul_reference, pack_b_f64,
     MatmulScratch, MatmulTiming, PackedB, KC, MC, MR, NR,

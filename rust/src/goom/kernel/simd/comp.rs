@@ -1,0 +1,128 @@
+//! The scalar compensated microkernel — the arch-independent fallback of
+//! the `comp` variant, and the definition of its reproducibility claim.
+//!
+//! Per k-step the kernel recovers the exact product error with an FMA
+//! two-product (`fma(a, b, −a·b)`) and the exact running-sum error with a
+//! branch-free TwoSum (Knuth), accumulating both into a separate error
+//! term that is folded into the sum once per KC slab (the dispatch layer
+//! round-trips only the folded sum through the output buffer between
+//! slabs). Every operation rounds as a function of operand *values*
+//! alone, so the vectorized comp kernels (`x86::microkernel_comp_avx2`,
+//! `neon::microkernel_comp_neon`) produce bitwise-identical output to
+//! this loop — lane width never shows. The only machine dependence left
+//! is that `f64::mul_add` be a correctly-rounded fused multiply-add,
+//! which IEEE 754 requires of `fma` and which holds both for hardware FMA
+//! and for libm's software fallback.
+//!
+//! The compensation also makes `comp` the *most accurate* flavor: each
+//! element is a Kahan–Neumaier-style compensated dot product, with error
+//! independent of the summation length in practice.
+
+use super::super::{KC, MR, NR};
+
+/// Branch-free TwoSum (Knuth): returns `(fl(a+b), err)` with
+/// `a + b = fl(a+b) + err` exactly, for any finite a, b.
+#[inline(always)]
+pub(crate) fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bb = s - a;
+    let err = (a - (s - bb)) + (b - bb);
+    (s, err)
+}
+
+/// Scalar compensated 4×4 tile over one slab's depth. `acc` holds the
+/// folded partial sums from earlier slabs; the error term is local to the
+/// slab and folded on exit.
+pub(crate) fn microkernel_comp(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let mut err = [[0.0f64; NR]; MR];
+    for (a, b) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (r, (acc_row, err_row)) in acc.iter_mut().zip(err.iter_mut()).enumerate() {
+            let av = a[r];
+            for ((o, e), &bv) in acc_row.iter_mut().zip(err_row.iter_mut()).zip(b) {
+                let p = av * bv;
+                let ep = av.mul_add(bv, -p);
+                let (s, es) = two_sum(*o, p);
+                *o = s;
+                *e += ep + es;
+            }
+        }
+    }
+    for (acc_row, err_row) in acc.iter_mut().zip(err.iter()) {
+        for (o, e) in acc_row.iter_mut().zip(err_row) {
+            *o += *e;
+        }
+    }
+}
+
+/// Reference triple loop for the `comp` variant: the same compensated
+/// accumulation with the same per-KC-slab error folding, element by
+/// element — what any comp dispatch (scalar or vector, any thread count
+/// or blocking) must reproduce bit-for-bit.
+pub(crate) fn matmul_comp_reference(
+    a: &[f64],
+    b: &[f64],
+    n: usize,
+    d: usize,
+    m: usize,
+) -> Vec<f64> {
+    assert_eq!(a.len(), n * d);
+    assert_eq!(b.len(), d * m);
+    let mut out = vec![0.0f64; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut s = 0.0f64;
+            let mut k0 = 0;
+            while k0 < d {
+                let klen = KC.min(d - k0);
+                let mut e = 0.0f64;
+                for k in k0..k0 + klen {
+                    let (av, bv) = (a[i * d + k], b[k * m + j]);
+                    let p = av * bv;
+                    let ep = av.mul_add(bv, -p);
+                    let (t, es) = two_sum(s, p);
+                    s = t;
+                    e += ep + es;
+                }
+                s += e;
+                k0 += klen;
+            }
+            out[i * m + j] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_sum_is_exact() {
+        // The classic case plain addition gets wrong: the error term
+        // recovers the bits the rounded sum dropped.
+        let (s, e) = two_sum(1.0, 1e-20);
+        assert_eq!(s, 1.0);
+        assert_eq!(e, 1e-20);
+        let (s, e) = two_sum(0.1, 0.2);
+        assert_eq!(s, 0.1 + 0.2);
+        assert!(e < 0.0); // fl(0.1)+fl(0.2) rounds up; the residual is negative
+        let (s, e) = two_sum(-3.5, 3.5);
+        assert_eq!((s, e), (0.0, 0.0));
+    }
+
+    #[test]
+    fn compensated_reference_beats_plain_summation_on_ill_conditioned_dots() {
+        // A dot product built to cancel catastrophically: big ± pairs
+        // plus a tiny signal. Plain k-ascending summation loses the
+        // signal entirely; the compensated loop keeps it exactly.
+        let big = 1e16;
+        let tiny = 0.5;
+        let a = vec![big, 1.0, -big, 1.0];
+        let b = vec![1.0, tiny, 1.0, tiny];
+        let plain: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let comp = matmul_comp_reference(&a, &b, 1, 4, 1)[0];
+        assert_eq!(comp, 2.0 * tiny);
+        assert_ne!(plain, comp);
+    }
+}

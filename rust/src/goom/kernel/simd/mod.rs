@@ -1,0 +1,431 @@
+//! Runtime-dispatched SIMD microkernel selection.
+//!
+//! The portable 4×4 tile in `matmul.rs` stays the default and the
+//! determinism reference. This module adds opt-in vector flavors that
+//! consume the exact same packed panel formats (MR=4 / NR=4, KC slab
+//! layout unchanged), so LMME's fused `sign · exp(logmag − scale)`
+//! packing feeds every flavor unmodified:
+//!
+//! | variant    | arch    | requires           | summation order                  |
+//! |------------|---------|--------------------|----------------------------------|
+//! | `portable` | any     | —                  | pure k-ascending mul+add         |
+//! | `avx2`     | x86_64  | AVX2 + FMA         | even/odd dual FMA chains         |
+//! | `avx512`   | x86_64  | AVX-512F (+ AVX2)  | same chains — bitwise == `avx2`  |
+//! | `neon`     | aarch64 | NEON               | same chains — bitwise == `avx2`  |
+//! | `comp`     | any     | — (vector if able) | compensated (TwoProd/TwoSum)     |
+//!
+//! The fast flavors (`avx2`/`avx512`/`neon`) all split the k-loop into an
+//! even and an odd FMA accumulator chain per output element and combine
+//! them once at the end, so they are **bitwise identical to each other**
+//! (FMA is correctly rounded everywhere) while drifting from the portable
+//! reference only by fusion plus that one fixed reassociation — bounded
+//! and tested (see `matmul.rs` tests). The `comp` flavor carries a
+//! two-product/two-sum compensation term through the k-loop and folds it
+//! at every KC slab boundary, which makes its output **independent of
+//! lane width**: the vectorized and scalar compensated loops agree
+//! bit-for-bit, so `comp` is reproducible across dispatch on the same
+//! machine (correctly-rounded `fma` assumed, which IEEE 754 requires).
+//!
+//! Selection is resolved once per process from `GOOM_SIMD`
+//! (`auto|off|avx2|avx512|neon|comp`, default `off` → portable) or forced
+//! by the `--simd` CLI flags, and consulted by every matmul entry point.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+pub(crate) mod comp;
+
+/// What the user asked for (`GOOM_SIMD` / `--simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Widest flavor the host supports, else portable.
+    Auto,
+    /// The portable determinism reference (the default).
+    Off,
+    /// AVX2+FMA, or portable if the host lacks it.
+    Avx2,
+    /// AVX-512F, or portable if the host lacks it.
+    Avx512,
+    /// NEON, or portable if the host lacks it.
+    Neon,
+    /// Compensated flavor — always available (scalar fallback).
+    Comp,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<SimdMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(SimdMode::Auto),
+            "off" | "portable" => Ok(SimdMode::Off),
+            "avx2" => Ok(SimdMode::Avx2),
+            "avx512" => Ok(SimdMode::Avx512),
+            "neon" => Ok(SimdMode::Neon),
+            "comp" => Ok(SimdMode::Comp),
+            other => Err(format!(
+                "unknown SIMD mode {other:?} (expected auto|off|avx2|avx512|neon|comp)"
+            )),
+        }
+    }
+}
+
+/// What actually dispatches: one concrete microkernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Variant {
+    Portable = 0,
+    Avx2 = 1,
+    Avx512 = 2,
+    Neon = 3,
+    Comp = 4,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Portable => "portable",
+            Variant::Avx2 => "avx2",
+            Variant::Avx512 => "avx512",
+            Variant::Neon => "neon",
+            Variant::Comp => "comp",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Variant> {
+        match v {
+            0 => Some(Variant::Portable),
+            1 => Some(Variant::Avx2),
+            2 => Some(Variant::Avx512),
+            3 => Some(Variant::Neon),
+            4 => Some(Variant::Comp),
+            _ => None,
+        }
+    }
+}
+
+/// The vector features the running host advertises.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Detected {
+    /// AVX2 **and** FMA (the avx2 kernel needs both).
+    pub avx2: bool,
+    /// AVX-512F (only reported together with avx2+fma).
+    pub avx512: bool,
+    /// aarch64 Advanced SIMD.
+    pub neon: bool,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe_impl() -> Detected {
+    let avx2 = std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma");
+    Detected {
+        avx2,
+        avx512: avx2 && std::arch::is_x86_feature_detected!("avx512f"),
+        neon: false,
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn probe_impl() -> Detected {
+    Detected {
+        avx2: false,
+        avx512: false,
+        neon: std::arch::is_aarch64_feature_detected!("neon"),
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn probe_impl() -> Detected {
+    Detected::default()
+}
+
+impl Detected {
+    /// Probe the running host (cached process-wide by [`detected`]).
+    pub fn probe() -> Detected {
+        probe_impl()
+    }
+}
+
+/// The host's detected features, probed once.
+pub fn detected() -> Detected {
+    static DETECTED: OnceLock<Detected> = OnceLock::new();
+    *DETECTED.get_or_init(Detected::probe)
+}
+
+/// Pure resolution: what `mode` dispatches to given `det`. An explicitly
+/// requested flavor the host (or this binary's target arch) can't run
+/// falls back to **portable**, not to the next-best vector path —
+/// predictable beats clever for a reproducibility knob. Features for the
+/// wrong target arch are masked off, so e.g. `neon` on x86_64 is always
+/// portable no matter what `det` claims.
+pub fn resolve_with(mode: SimdMode, det: Detected) -> Variant {
+    let det = Detected {
+        avx2: det.avx2 && cfg!(target_arch = "x86_64"),
+        avx512: det.avx512 && cfg!(target_arch = "x86_64"),
+        neon: det.neon && cfg!(target_arch = "aarch64"),
+    };
+    match mode {
+        SimdMode::Off => Variant::Portable,
+        SimdMode::Comp => Variant::Comp,
+        SimdMode::Avx2 => {
+            if det.avx2 {
+                Variant::Avx2
+            } else {
+                Variant::Portable
+            }
+        }
+        SimdMode::Avx512 => {
+            if det.avx512 {
+                Variant::Avx512
+            } else {
+                Variant::Portable
+            }
+        }
+        SimdMode::Neon => {
+            if det.neon {
+                Variant::Neon
+            } else {
+                Variant::Portable
+            }
+        }
+        SimdMode::Auto => {
+            if det.avx512 {
+                Variant::Avx512
+            } else if det.avx2 {
+                Variant::Avx2
+            } else if det.neon {
+                Variant::Neon
+            } else {
+                Variant::Portable
+            }
+        }
+    }
+}
+
+const UNRESOLVED: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// The process-wide dispatched variant, resolved once from `GOOM_SIMD`
+/// (unset/empty → `off` → portable) on first use. Every public matmul
+/// entry point consults this.
+pub fn active() -> Variant {
+    match Variant::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(v) => v,
+        None => {
+            let mode = std::env::var("GOOM_SIMD")
+                .ok()
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    SimdMode::parse(&s).unwrap_or_else(|e| {
+                        eprintln!("GOOM_SIMD: {e}; using off");
+                        SimdMode::Off
+                    })
+                })
+                .unwrap_or(SimdMode::Off);
+            let v = resolve_with(mode, detected());
+            ACTIVE.store(v as u8, Ordering::Relaxed);
+            v
+        }
+    }
+}
+
+/// Name of the active variant (`metrics` op, bench headers).
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Force the process-wide dispatch (the CLI `--simd` flags). Returns the
+/// variant that actually resolved — a request the host can't satisfy
+/// falls back to portable.
+pub fn force(mode: SimdMode) -> Variant {
+    let v = resolve_with(mode, detected());
+    ACTIVE.store(v as u8, Ordering::Relaxed);
+    v
+}
+
+/// [`force`] from a CLI string, erroring on unknown mode names.
+pub fn force_str(s: &str) -> Result<Variant, String> {
+    Ok(force(SimdMode::parse(s)?))
+}
+
+/// Names of the vector features detected on this host (empty on plain
+/// portable hardware) — recorded in bench headers and the `metrics` op.
+pub fn cpu_features() -> Vec<&'static str> {
+    let det = detected();
+    let mut out = Vec::new();
+    if det.avx2 {
+        out.push("avx2");
+        out.push("fma");
+    }
+    if det.avx512 {
+        out.push("avx512f");
+    }
+    if det.neon {
+        out.push("neon");
+    }
+    out
+}
+
+/// Every variant this host can actually run, portable first and comp
+/// last (comp always runs — it falls back to a bit-identical scalar
+/// compensated loop without vector units).
+pub fn available() -> Vec<Variant> {
+    let det = detected();
+    let mut out = vec![Variant::Portable];
+    if det.avx2 {
+        out.push(Variant::Avx2);
+    }
+    if det.avx512 {
+        out.push(Variant::Avx512);
+    }
+    if det.neon {
+        out.push(Variant::Neon);
+    }
+    out.push(Variant::Comp);
+    out
+}
+
+/// Whether the comp variant dispatches its vectorized kernel here (its
+/// scalar fallback produces the same bits either way).
+pub fn comp_vectorized() -> bool {
+    let det = detected();
+    det.avx2 || det.neon
+}
+
+/// Distance in units-in-the-last-place between two f64s, via the
+/// sign-magnitude integer mapping: adjacent floats are 1 apart, `+0.0`
+/// and `-0.0` are 0 apart, and the smallest positive and negative
+/// subnormals are 2 apart. Only meaningful for finite inputs (equal
+/// non-finite bit patterns still give 0).
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    fn key(x: f64) -> i64 {
+        let bits = x.to_bits() as i64;
+        if bits < 0 {
+            i64::MIN.wrapping_sub(bits)
+        } else {
+            bits
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: Detected = Detected {
+        avx2: true,
+        avx512: true,
+        neon: true,
+    };
+    const NONE: Detected = Detected {
+        avx2: false,
+        avx512: false,
+        neon: false,
+    };
+
+    #[test]
+    fn mode_strings_parse() {
+        assert_eq!(SimdMode::parse("auto"), Ok(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("off"), Ok(SimdMode::Off));
+        assert_eq!(SimdMode::parse("portable"), Ok(SimdMode::Off));
+        assert_eq!(SimdMode::parse("avx2"), Ok(SimdMode::Avx2));
+        assert_eq!(SimdMode::parse("AVX512"), Ok(SimdMode::Avx512));
+        assert_eq!(SimdMode::parse(" neon "), Ok(SimdMode::Neon));
+        assert_eq!(SimdMode::parse("comp"), Ok(SimdMode::Comp));
+        assert!(SimdMode::parse("avx1024").is_err());
+        assert!(SimdMode::parse("").is_err());
+    }
+
+    #[test]
+    fn off_forces_portable_even_with_every_feature_detected() {
+        // The env-override contract: GOOM_SIMD=off is portable no matter
+        // what the host advertises.
+        assert_eq!(resolve_with(SimdMode::Off, ALL), Variant::Portable);
+        assert_eq!(resolve_with(SimdMode::Off, NONE), Variant::Portable);
+    }
+
+    #[test]
+    fn auto_picks_the_widest_supported_lane() {
+        assert_eq!(resolve_with(SimdMode::Auto, NONE), Variant::Portable);
+        if cfg!(target_arch = "x86_64") {
+            assert_eq!(resolve_with(SimdMode::Auto, ALL), Variant::Avx512);
+            let avx2_only = Detected {
+                avx2: true,
+                avx512: false,
+                neon: false,
+            };
+            assert_eq!(resolve_with(SimdMode::Auto, avx2_only), Variant::Avx2);
+            // Wrong-arch features never dispatch.
+            assert_eq!(resolve_with(SimdMode::Neon, ALL), Variant::Portable);
+        }
+        if cfg!(target_arch = "aarch64") {
+            assert_eq!(resolve_with(SimdMode::Auto, ALL), Variant::Neon);
+            assert_eq!(resolve_with(SimdMode::Avx2, ALL), Variant::Portable);
+        }
+    }
+
+    #[test]
+    fn explicit_request_unsupported_by_host_falls_back_portable() {
+        assert_eq!(resolve_with(SimdMode::Avx2, NONE), Variant::Portable);
+        assert_eq!(resolve_with(SimdMode::Neon, NONE), Variant::Portable);
+        let avx2_only = Detected {
+            avx2: true,
+            avx512: false,
+            neon: false,
+        };
+        assert_eq!(resolve_with(SimdMode::Avx512, avx2_only), Variant::Portable);
+    }
+
+    #[test]
+    fn comp_is_always_available() {
+        assert_eq!(resolve_with(SimdMode::Comp, NONE), Variant::Comp);
+        assert_eq!(resolve_with(SimdMode::Comp, ALL), Variant::Comp);
+        let avail = available();
+        assert_eq!(avail.first(), Some(&Variant::Portable));
+        assert_eq!(avail.last(), Some(&Variant::Comp));
+    }
+
+    #[test]
+    fn active_matches_env_resolution() {
+        // Works under any GOOM_SIMD the test process was launched with
+        // (the CI matrix runs the suite under GOOM_SIMD=auto): active()
+        // must equal the pure resolution of the env var.
+        let mode = std::env::var("GOOM_SIMD")
+            .ok()
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| SimdMode::parse(&s).unwrap_or(SimdMode::Off))
+            .unwrap_or(SimdMode::Off);
+        assert_eq!(active(), resolve_with(mode, detected()));
+        assert_eq!(active_name(), active().name());
+    }
+
+    #[test]
+    fn detection_is_internally_consistent() {
+        let det = detected();
+        // avx512 is only reported on top of avx2+fma.
+        assert!(!det.avx512 || det.avx2);
+        // cpu_features names exactly the detected set.
+        let feats = cpu_features();
+        assert_eq!(feats.contains(&"avx2"), det.avx2);
+        assert_eq!(feats.contains(&"avx512f"), det.avx512);
+        assert_eq!(feats.contains(&"neon"), det.neon);
+    }
+
+    #[test]
+    fn ulp_distance_counts_adjacent_floats() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, 1.0 + f64::EPSILON), 1);
+        assert_eq!(ulp_distance(-1.0, -1.0 - f64::EPSILON), 1);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(f64::MIN_POSITIVE, 0.0), 1 << 52);
+        // Straddling zero: smallest positive vs smallest negative subnormal.
+        let tiny = f64::from_bits(1);
+        assert_eq!(ulp_distance(tiny, -tiny), 2);
+        assert_eq!(ulp_distance(f64::NEG_INFINITY, f64::NEG_INFINITY), 0);
+    }
+}

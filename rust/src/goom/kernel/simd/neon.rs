@@ -1,0 +1,111 @@
+//! aarch64 NEON microkernels: the 4×4 tile as two 2-lane f64 vectors per
+//! row, mirroring the AVX2 kernels' summation shape exactly — the even/odd
+//! dual FMA chains (fast kernel) and the TwoProd/TwoSum compensated loop
+//! (comp kernel) perform the same per-element operation sequence as their
+//! x86 counterparts, so outputs are bitwise identical across ISAs on the
+//! same inputs (FMA and ± are correctly rounded on both).
+
+use super::super::{MR, NR};
+use core::arch::aarch64::*;
+
+const _: () = assert!(MR == 4 && NR == 4);
+
+/// NEON 4×4 tile: even/odd dual FMA chains, two `float64x2_t` halves per
+/// output row. Bitwise identical to `x86::microkernel_avx2`.
+///
+/// # Safety
+/// Caller must ensure the host supports NEON, `pa.len() == MR·klen` and
+/// `pb.len() == NR·klen` for the same `klen`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn microkernel_neon(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let klen = pb.len() / NR;
+    let mut even = [[vdupq_n_f64(0.0); 2]; MR];
+    for r in 0..MR {
+        even[r] = [
+            vld1q_f64(acc[r].as_ptr()),
+            vld1q_f64(acc[r].as_ptr().add(2)),
+        ];
+    }
+    let mut odd = [[vdupq_n_f64(0.0); 2]; MR];
+    let mut a = pa.as_ptr();
+    let mut b = pb.as_ptr();
+    for _ in 0..klen / 2 {
+        let b0 = [vld1q_f64(b), vld1q_f64(b.add(2))];
+        let b1 = [vld1q_f64(b.add(NR)), vld1q_f64(b.add(NR + 2))];
+        for r in 0..MR {
+            let a0 = vdupq_n_f64(*a.add(r));
+            let a1 = vdupq_n_f64(*a.add(MR + r));
+            even[r][0] = vfmaq_f64(even[r][0], a0, b0[0]);
+            even[r][1] = vfmaq_f64(even[r][1], a0, b0[1]);
+            odd[r][0] = vfmaq_f64(odd[r][0], a1, b1[0]);
+            odd[r][1] = vfmaq_f64(odd[r][1], a1, b1[1]);
+        }
+        a = a.add(2 * MR);
+        b = b.add(2 * NR);
+    }
+    if klen % 2 == 1 {
+        let b0 = [vld1q_f64(b), vld1q_f64(b.add(2))];
+        for r in 0..MR {
+            let a0 = vdupq_n_f64(*a.add(r));
+            even[r][0] = vfmaq_f64(even[r][0], a0, b0[0]);
+            even[r][1] = vfmaq_f64(even[r][1], a0, b0[1]);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f64(acc[r].as_mut_ptr(), vaddq_f64(even[r][0], odd[r][0]));
+        vst1q_f64(
+            acc[r].as_mut_ptr().add(2),
+            vaddq_f64(even[r][1], odd[r][1]),
+        );
+    }
+}
+
+/// NEON compensated 4×4 tile: TwoProd (via FMA) + branch-free TwoSum per
+/// k-step, error folded once per slab. Bitwise identical to the scalar
+/// compensated loop in `comp.rs` and to `x86::microkernel_comp_avx2`.
+///
+/// # Safety
+/// Caller must ensure the host supports NEON, `pa.len() == MR·klen` and
+/// `pb.len() == NR·klen` for the same `klen`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn microkernel_comp_neon(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let klen = pb.len() / NR;
+    let mut s = [[vdupq_n_f64(0.0); 2]; MR];
+    for r in 0..MR {
+        s[r] = [
+            vld1q_f64(acc[r].as_ptr()),
+            vld1q_f64(acc[r].as_ptr().add(2)),
+        ];
+    }
+    let mut e = [[vdupq_n_f64(0.0); 2]; MR];
+    let mut a = pa.as_ptr();
+    let mut b = pb.as_ptr();
+    for _ in 0..klen {
+        let bv = [vld1q_f64(b), vld1q_f64(b.add(2))];
+        for r in 0..MR {
+            let av = vdupq_n_f64(*a.add(r));
+            for h in 0..2 {
+                let p = vmulq_f64(av, bv[h]);
+                let ep = vfmaq_f64(vnegq_f64(p), av, bv[h]); // av·bv − fl(av·bv)
+                let t = vaddq_f64(s[r][h], p); // TwoSum(s, p)
+                let bb = vsubq_f64(t, s[r][h]);
+                let es = vaddq_f64(
+                    vsubq_f64(s[r][h], vsubq_f64(t, bb)),
+                    vsubq_f64(p, bb),
+                );
+                s[r][h] = t;
+                e[r][h] = vaddq_f64(e[r][h], vaddq_f64(ep, es));
+            }
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    for r in 0..MR {
+        vst1q_f64(acc[r].as_mut_ptr(), vaddq_f64(s[r][0], e[r][0]));
+        vst1q_f64(acc[r].as_mut_ptr().add(2), vaddq_f64(s[r][1], e[r][1]));
+    }
+}

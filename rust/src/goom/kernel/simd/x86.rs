@@ -1,0 +1,165 @@
+//! x86_64 vector microkernels: AVX2+FMA and AVX-512F flavors of the
+//! portable 4×4 register tile, plus the AVX2 compensated kernel.
+//!
+//! All kernels consume the exact packed panel formats `matmul.rs`
+//! produces (A: k-major `MR`-row panels, B: k-major `NR`-column panels,
+//! both zero-padded past the valid rows/cols) and accumulate **into** the
+//! caller's `acc` tile, which already holds the partial sums from earlier
+//! KC slabs — the dispatch layer's copy-in/copy-out edge handling is
+//! shared with the portable path.
+//!
+//! Summation shape (the reproducibility contract): the fast kernels
+//! split the k-loop into an **even chain** and an **odd chain** of fused
+//! multiply-adds per output element — the even chain is seeded with the
+//! incoming partial, a trailing odd-length step folds into the even
+//! chain, and the two chains are added once at the end. AVX-512 packs
+//! both chains into one 8-lane register (lanes 0–3 even, 4–7 odd) but
+//! performs the *same* per-element operation sequence, so `avx2` and
+//! `avx512` (and the NEON mirror) are bitwise identical on the same
+//! inputs: FMA and addition are correctly rounded, and rounding is a
+//! function of operand values alone, not lane position.
+
+use super::super::{MR, NR};
+use core::arch::x86_64::*;
+
+// The kernels hard-code the 4×4 tile (4 f64 = one ymm row, 2 k-steps =
+// one zmm row); a tile resize must revisit them.
+const _: () = assert!(MR == 4 && NR == 4);
+
+/// AVX2+FMA 4×4 tile: even/odd dual FMA chains over the slab depth.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, `pa.len() == MR·klen`
+/// and `pb.len() == NR·klen` for the same `klen`.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn microkernel_avx2(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let klen = pb.len() / NR;
+    let mut even = [
+        _mm256_loadu_pd(acc[0].as_ptr()),
+        _mm256_loadu_pd(acc[1].as_ptr()),
+        _mm256_loadu_pd(acc[2].as_ptr()),
+        _mm256_loadu_pd(acc[3].as_ptr()),
+    ];
+    let mut odd = [_mm256_setzero_pd(); MR];
+    let mut a = pa.as_ptr();
+    let mut b = pb.as_ptr();
+    for _ in 0..klen / 2 {
+        let b0 = _mm256_loadu_pd(b);
+        let b1 = _mm256_loadu_pd(b.add(NR));
+        for r in 0..MR {
+            even[r] = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(r)), b0, even[r]);
+            odd[r] = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(MR + r)), b1, odd[r]);
+        }
+        a = a.add(2 * MR);
+        b = b.add(2 * NR);
+    }
+    if klen % 2 == 1 {
+        let b0 = _mm256_loadu_pd(b);
+        for r in 0..MR {
+            even[r] = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(r)), b0, even[r]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_pd(acc[r].as_mut_ptr(), _mm256_add_pd(even[r], odd[r]));
+    }
+}
+
+/// AVX-512F 4×4 tile: one zmm per output row carries both chains — lanes
+/// 0–3 accumulate even-k terms (seeded with the incoming partial), lanes
+/// 4–7 odd-k terms. Each paired step loads 2 consecutive packed k-rows of
+/// A and B as single zmm's and broadcasts row `r`'s (even, odd) scalar
+/// pair across the halves with one `permutexvar`. The trailing odd step
+/// and the final even+odd combine run in ymm, in exactly the order
+/// [`microkernel_avx2`] uses — bitwise identical output.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX-512F (and AVX2+FMA),
+/// `pa.len() == MR·klen` and `pb.len() == NR·klen` for the same `klen`.
+#[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn microkernel_avx512(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let klen = pb.len() / NR;
+    let idx = [
+        _mm512_set_epi64(4, 4, 4, 4, 0, 0, 0, 0),
+        _mm512_set_epi64(5, 5, 5, 5, 1, 1, 1, 1),
+        _mm512_set_epi64(6, 6, 6, 6, 2, 2, 2, 2),
+        _mm512_set_epi64(7, 7, 7, 7, 3, 3, 3, 3),
+    ];
+    let mut accv = [
+        _mm512_insertf64x4::<0>(_mm512_setzero_pd(), _mm256_loadu_pd(acc[0].as_ptr())),
+        _mm512_insertf64x4::<0>(_mm512_setzero_pd(), _mm256_loadu_pd(acc[1].as_ptr())),
+        _mm512_insertf64x4::<0>(_mm512_setzero_pd(), _mm256_loadu_pd(acc[2].as_ptr())),
+        _mm512_insertf64x4::<0>(_mm512_setzero_pd(), _mm256_loadu_pd(acc[3].as_ptr())),
+    ];
+    let mut a = pa.as_ptr();
+    let mut b = pb.as_ptr();
+    for _ in 0..klen / 2 {
+        let bv = _mm512_loadu_pd(b); // [b(k, 0..4) | b(k+1, 0..4)]
+        let av = _mm512_loadu_pd(a); // [a(k, 0..4) | a(k+1, 0..4)]
+        for r in 0..MR {
+            accv[r] = _mm512_fmadd_pd(_mm512_permutexvar_pd(idx[r], av), bv, accv[r]);
+        }
+        a = a.add(2 * MR);
+        b = b.add(2 * NR);
+    }
+    let tail = klen % 2 == 1;
+    for r in 0..MR {
+        let mut even = _mm512_castpd512_pd256(accv[r]);
+        let odd = _mm512_extractf64x4_pd::<1>(accv[r]);
+        if tail {
+            even = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(r)), _mm256_loadu_pd(b), even);
+        }
+        _mm256_storeu_pd(acc[r].as_mut_ptr(), _mm256_add_pd(even, odd));
+    }
+}
+
+/// AVX2 compensated 4×4 tile: per k-step, the product error is recovered
+/// with an FMA two-product and the running-sum error with a branch-free
+/// TwoSum; both feed a separate error accumulator that is folded into the
+/// sum once per slab (the dispatch layer round-trips only the folded sum
+/// through the output buffer). Lane position never affects rounding, so
+/// this is bitwise identical to the scalar compensated loop in
+/// `comp.rs` — the lane-width-independent reproducible flavor.
+///
+/// # Safety
+/// Caller must ensure the host supports AVX2 and FMA, `pa.len() == MR·klen`
+/// and `pb.len() == NR·klen` for the same `klen`.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn microkernel_comp_avx2(pa: &[f64], pb: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    let klen = pb.len() / NR;
+    let mut s = [
+        _mm256_loadu_pd(acc[0].as_ptr()),
+        _mm256_loadu_pd(acc[1].as_ptr()),
+        _mm256_loadu_pd(acc[2].as_ptr()),
+        _mm256_loadu_pd(acc[3].as_ptr()),
+    ];
+    let mut e = [_mm256_setzero_pd(); MR];
+    let mut a = pa.as_ptr();
+    let mut b = pb.as_ptr();
+    for _ in 0..klen {
+        let bv = _mm256_loadu_pd(b);
+        for r in 0..MR {
+            let av = _mm256_set1_pd(*a.add(r));
+            let p = _mm256_mul_pd(av, bv);
+            let ep = _mm256_fmsub_pd(av, bv, p); // exact: av·bv − fl(av·bv)
+            let t = _mm256_add_pd(s[r], p); // TwoSum(s, p)
+            let bb = _mm256_sub_pd(t, s[r]);
+            let es = _mm256_add_pd(
+                _mm256_sub_pd(s[r], _mm256_sub_pd(t, bb)),
+                _mm256_sub_pd(p, bb),
+            );
+            s[r] = t;
+            e[r] = _mm256_add_pd(e[r], _mm256_add_pd(ep, es));
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    for r in 0..MR {
+        _mm256_storeu_pd(acc[r].as_mut_ptr(), _mm256_add_pd(s[r], e[r]));
+    }
+}

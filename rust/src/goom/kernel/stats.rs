@@ -121,6 +121,13 @@ impl KernelStats {
     }
 }
 
+/// Name of the microkernel flavor the process dispatches
+/// ([`super::simd::active`]) — exported next to the counters so metrics
+/// and bench rows are attributable to the flavor that produced them.
+pub fn kernel_variant() -> &'static str {
+    super::simd::active_name()
+}
+
 /// Read the process-global counters.
 pub fn snapshot() -> KernelStats {
     KernelStats {

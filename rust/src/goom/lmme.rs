@@ -25,7 +25,7 @@
 //! blocking, one summation order (see `docs/PERFORMANCE.md`).
 
 use super::float::GoomFloat;
-use super::kernel::{self, stats, MatmulScratch, PackedB};
+use super::kernel::{self, simd, stats, MatmulScratch, PackedB};
 use super::scalar::Goom;
 use super::tensor::GoomMat;
 use std::time::Instant;
@@ -127,7 +127,22 @@ pub fn lmme_into<T: GoomFloat>(
     scratch: &mut LmmeScratch,
     threads: usize,
 ) {
-    lmme_into_reusing(a, b, out, scratch, false, false, threads)
+    lmme_into_reusing(a, b, out, scratch, false, false, threads, simd::active())
+}
+
+/// [`lmme_into`] with an explicit microkernel flavor — the bench harness
+/// and the equality-bound tests pin flavors through this (the portable
+/// flavor reproduces [`lmme_into`]'s default-dispatch output bit-for-bit)
+/// instead of mutating the process-wide dispatch.
+pub(crate) fn lmme_into_with_variant<T: GoomFloat>(
+    variant: simd::Variant,
+    a: &GoomMat<T>,
+    b: &GoomMat<T>,
+    out: &mut GoomMat<T>,
+    scratch: &mut LmmeScratch,
+    threads: usize,
+) {
+    lmme_into_reusing(a, b, out, scratch, false, false, threads, variant)
 }
 
 /// [`lmme_into`] with optional packed-operand fast paths: when `reuse_a`
@@ -138,6 +153,7 @@ pub fn lmme_into<T: GoomFloat>(
 /// panel pack (including its exp transform) for that operand; the compute
 /// loops and summation order are shared, so all four flag combinations are
 /// byte-identical.
+#[allow(clippy::too_many_arguments)]
 fn lmme_into_reusing<T: GoomFloat>(
     a: &GoomMat<T>,
     b: &GoomMat<T>,
@@ -146,6 +162,7 @@ fn lmme_into_reusing<T: GoomFloat>(
     reuse_a: bool,
     reuse_b: bool,
     threads: usize,
+    variant: simd::Variant,
 ) {
     assert_eq!(
         a.cols, b.rows,
@@ -176,6 +193,7 @@ fn lmme_into_reusing<T: GoomFloat>(
     };
     if reuse_b {
         kernel::matmul_src_reuse_b(
+            variant,
             n,
             d,
             m,
@@ -187,6 +205,7 @@ fn lmme_into_reusing<T: GoomFloat>(
         );
     } else {
         kernel::matmul_src(
+            variant,
             n,
             d,
             m,
@@ -303,6 +322,20 @@ pub fn lmme_packed_into<T: GoomFloat>(
     scratch: &mut LmmeScratch,
     threads: usize,
 ) {
+    lmme_packed_into_with_variant(simd::active(), a, rhs, out, scratch, threads)
+}
+
+/// [`lmme_packed_into`] pinned to an explicit microkernel flavor — the
+/// bench harness uses this to keep its recorded rows attributable to one
+/// flavor regardless of the process-wide dispatch.
+pub(crate) fn lmme_packed_into_with_variant<T: GoomFloat>(
+    variant: simd::Variant,
+    a: &GoomMat<T>,
+    rhs: &LmmePackedRhs,
+    out: &mut GoomMat<T>,
+    scratch: &mut LmmeScratch,
+    threads: usize,
+) {
     assert_eq!(
         a.cols, rhs.rows,
         "lmme shape mismatch: {}x{} · packed {}x{}",
@@ -317,6 +350,7 @@ pub fn lmme_packed_into<T: GoomFloat>(
     }
     let ascale = &scratch.ascale;
     kernel::matmul_src_prepacked(
+        variant,
         n,
         d,
         m,
@@ -373,11 +407,12 @@ pub fn lmme_batched_with_scratch<T: GoomFloat>(
     let mut outs = Vec::with_capacity(pairs.len());
     let mut prev_a: Option<&GoomMat<T>> = None;
     let mut prev_b: Option<&GoomMat<T>> = None;
+    let variant = simd::active();
     for &(a, b) in pairs {
         let reuse_a = prev_a.is_some_and(|p| std::ptr::eq(p, a));
         let reuse_b = prev_b.is_some_and(|p| std::ptr::eq(p, b));
         let mut out = GoomMat::<T>::zeros(0, 0);
-        lmme_into_reusing(a, b, &mut out, scratch, reuse_a, reuse_b, 1);
+        lmme_into_reusing(a, b, &mut out, scratch, reuse_a, reuse_b, 1, variant);
         prev_a = Some(a);
         prev_b = Some(b);
         outs.push(out);
@@ -596,6 +631,38 @@ mod tests {
         let small = (GoomMat::<f64>::randn(2, 3, &mut rng), GoomMat::randn(3, 4, &mut rng));
         let out = lmme_batched(&[(&small.0, &small.1)]);
         assert_eq!(out[0].logmag, lmme(&small.0, &small.1).logmag);
+    }
+
+    #[test]
+    fn lmme_flavors_dispatch_consistently_and_stay_close() {
+        let mut rng = rng_from_seed(48);
+        // d = 130 crosses the KC slab boundary inside the fused kernel.
+        let a = GoomMat::<f64>::randn(9, 130, &mut rng);
+        let b = GoomMat::<f64>::randn(130, 11, &mut rng);
+        // The explicit-variant entry point with the active flavor is the
+        // same code path as the public one — bitwise equal, whatever
+        // GOOM_SIMD the process was launched with.
+        let want = lmme(&a, &b);
+        let mut got = GoomMat::<f64>::zeros(0, 0);
+        lmme_into_with_variant(simd::active(), &a, &b, &mut got, &mut LmmeScratch::new(), 2);
+        assert_eq!(want.logmag, got.logmag);
+        assert_eq!(want.sign, got.sign);
+        // Every flavor the host can run stays close to the pinned portable
+        // reference through the full exp/scale/matmul/log round-trip.
+        let mut portable = GoomMat::<f64>::zeros(0, 0);
+        lmme_into_with_variant(
+            simd::Variant::Portable,
+            &a,
+            &b,
+            &mut portable,
+            &mut LmmeScratch::new(),
+            1,
+        );
+        for v in simd::available() {
+            let mut out = GoomMat::<f64>::zeros(0, 0);
+            lmme_into_with_variant(v, &a, &b, &mut out, &mut LmmeScratch::new(), 3);
+            assert_goommat_close(&out, &portable, 1e-8, 1e-6);
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub use lmme::{
     lmme_packed_into, lmme_vec, lmme_with_scratch, scan_lmme_par_chunked, LmmePackedRhs,
     LmmeScratch,
 };
+pub(crate) use lmme::{lmme_into_with_variant, lmme_packed_into_with_variant};
 pub use reset::{
     reset_combine, reset_scan_par, reset_scan_par_chunked, reset_scan_seq, ResetElem, ResetPair,
 };

@@ -154,6 +154,11 @@ fn serve(args: &Args) -> Result<()> {
         threads: cfg.usize("threads", cfg.usize("serve_threads", defaults.threads)?)?,
         trace_sample: cfg
             .u64("trace-sample", cfg.u64("serve_trace_sample", defaults.trace_sample)?)?,
+        simd: cfg
+            .get("simd")
+            .or_else(|| cfg.get("serve_simd"))
+            .unwrap_or(&defaults.simd)
+            .to_string(),
     };
     println!(
         "goomd: {} workers, {} kernel thread(s)/job, queue depth {}, batch max {}, cache {} entries",
@@ -309,6 +314,12 @@ fn trace(args: &Args) -> Result<()> {
 /// (comma-separated) spreads requests across mixed dimensions — the
 /// route-smoke job uses it to exercise dimensions above the old 128 cap.
 fn loadgen(args: &Args) -> Result<()> {
+    // Client-side kernel work (shared-seed verification replays) follows the
+    // same dispatch switch as the daemon.
+    if let Some(mode) = args.get("simd") {
+        goomrs::goom::kernel::simd::force_str(mode)
+            .map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
+    }
     let defaults = LoadgenConfig::default();
     let shared_seed = args.get_parsed::<u64>("seed")?;
     let cfg = LoadgenConfig {
@@ -397,6 +408,7 @@ fn bench(args: &Args) -> Result<()> {
         threads: args
             .get_usize("threads", goomrs::util::par::env_threads().unwrap_or(2))?,
         out_dir: std::path::PathBuf::from(args.get_or("out-dir", ".")),
+        simd: args.get("simd").map(String::from),
     };
     perf::run_all(&opts)?;
     if let Some(old_dir) = args.get("compare") {
@@ -441,7 +453,7 @@ USAGE:
   repro config <name>               show resolved config
   repro all                         run every experiment at default scale
   repro bench [--quick --threads=N --out-dir=DIR --compare=OLD_DIR
-               --compare-threshold=0.15]
+               --compare-threshold=0.15 --simd=MODE]
                                     run the LMME/scan/serving/routing benches;
                                     write BENCH_lmme.json / BENCH_scan.json /
                                     BENCH_serve.json / BENCH_route.json;
@@ -450,7 +462,7 @@ USAGE:
                                     (see docs/PERFORMANCE.md)
   repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
                --batch-max=16 --cache=1024 --max-request-bytes=1048576
-               --max-connections=256 --trace-sample=0]
+               --max-connections=256 --trace-sample=0 --simd=MODE]
                                     run goomd, the GOOM compute daemon
                                     (newline-JSON over TCP; see docs/SERVING.md)
   repro route --backends=host:port[,host:port...] [--port=7070
@@ -466,7 +478,8 @@ USAGE:
                                     (see docs/OBSERVABILITY.md)
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
-                 --seed=N --min-cached=N --pipeline=N --threads=N]
+                 --seed=N --min-cached=N --pipeline=N --threads=N
+                 --simd=MODE]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency,
                                     plus a per-dimension breakdown on
@@ -476,6 +489,8 @@ USAGE:
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).
+SIMD: --simd / env GOOM_SIMD picks the microkernel flavor
+  (auto|off|avx2|avx512|neon|comp; default off = portable reference).
 Artifacts: set GOOMRS_ARTIFACTS or run from the repo root (./artifacts)."
     );
 }

@@ -3,7 +3,9 @@
 //!
 //! `repro bench --compare=OLD_DIR [--compare-threshold=0.15]` runs the
 //! suites as usual, then matches rows between the old and new documents by
-//! a stable identity key (shape + implementation + thread count) and flags
+//! a stable identity key (shape + implementation + microkernel variant +
+//! thread count; rows without a `variant` field — pre-SIMD baselines —
+//! default to `portable`, which is what those baselines measured) and flags
 //! any matched row whose time grew by more than the threshold. The verdict
 //! is written next to the fresh results as `BENCH_compare.json` (machine-
 //! readable) and `BENCH_compare.md` (a table CI appends to the job
@@ -60,14 +62,18 @@ pub struct RowDelta {
 fn row_key_ns(bench: &str, row: &Json) -> Option<(String, f64, bool)> {
     let get_usize = |k: &str| row.get(k).and_then(Json::as_usize);
     let impl_name = row.get("impl").and_then(Json::as_str)?.to_string();
+    // Pre-SIMD baselines carry no `variant` field; they measured the
+    // portable microkernel, so that's the key they match under.
+    let variant = row.get("variant").and_then(Json::as_str).unwrap_or("portable").to_string();
     let iters = get_usize("iters").unwrap_or(MIN_GATING_ITERS);
     let gates = !impl_name.ends_with("_sweep") && iters >= MIN_GATING_ITERS;
     match bench {
         "lmme" => {
             let key = format!(
-                "d={} impl={} threads={}",
+                "d={} impl={} variant={} threads={}",
                 get_usize("d")?,
                 impl_name,
+                variant,
                 get_usize("threads")?
             );
             let ns = row.get("ns_per_op").and_then(Json::as_f64)?;
@@ -75,8 +81,9 @@ fn row_key_ns(bench: &str, row: &Json) -> Option<(String, f64, bool)> {
         }
         "scan" => {
             let key = format!(
-                "impl={} threads={} len={} d={}",
+                "impl={} variant={} threads={} len={} d={}",
                 impl_name,
+                variant,
                 get_usize("threads")?,
                 get_usize("len")?,
                 get_usize("d")?
@@ -303,9 +310,33 @@ mod tests {
         let by_key = |k: &str| deltas.iter().find(|d| d.key.contains(k)).unwrap();
         assert!(!by_key("d=32").regressed);
         assert!(by_key("d=128 impl=kernel ").regressed);
+        // Variant-less rows keyed as portable (baseline compatibility).
+        assert!(by_key("d=128 impl=kernel ").key.contains("variant=portable"));
         let sweep = by_key("kc_sweep");
         assert!(!sweep.regressed && !sweep.gates, "{sweep:?}");
         assert!(any_regression(&deltas));
+        // Same shape, different microkernel variant: not the same row —
+        // an avx2 measurement never gates against a portable baseline.
+        let with_variant = |variant: &str, ns: f64| {
+            let mut row = lmme_row(128, "kernel", 1, ns);
+            row.push(("variant", Json::Str(variant.to_string())));
+            row
+        };
+        let deltas = compare_docs(
+            "lmme",
+            &doc("lmme", vec![lmme_row(128, "kernel", 1, 1000.0)]),
+            &doc("lmme", vec![with_variant("avx2", 9000.0)]),
+            0.15,
+        );
+        assert!(deltas.is_empty(), "{deltas:?}");
+        let deltas = compare_docs(
+            "lmme",
+            &doc("lmme", vec![with_variant("avx2", 1000.0)]),
+            &doc("lmme", vec![with_variant("avx2", 2000.0)]),
+            0.15,
+        );
+        assert_eq!(deltas.len(), 1);
+        assert!(deltas[0].regressed && deltas[0].key.contains("variant=avx2"));
         // An under-sampled row (iters < MIN_GATING_ITERS) is info-only even
         // when it moved a lot.
         let low_iters = |ns: f64| {
@@ -313,16 +344,17 @@ mod tests {
             row.push(("iters", Json::Num(2.0)));
             row
         };
-        let deltas = compare_docs(
+        let low_deltas = compare_docs(
             "lmme",
             &doc("lmme", vec![low_iters(1000.0)]),
             &doc("lmme", vec![low_iters(2000.0)]),
             0.15,
         );
-        assert_eq!(deltas.len(), 1);
-        assert!(!deltas[0].gates && !deltas[0].regressed, "{:?}", deltas[0]);
-        assert!(!any_regression(&deltas));
-        // Verdict renders both formats without panicking and round-trips.
+        assert_eq!(low_deltas.len(), 1);
+        assert!(!low_deltas[0].gates && !low_deltas[0].regressed, "{:?}", low_deltas[0]);
+        assert!(!any_regression(&low_deltas));
+        // Verdict renders both formats without panicking and round-trips —
+        // on a comparison that carried exactly one regression.
         let vd = verdict_doc(&deltas, 0.15);
         assert_eq!(crate::util::json::parse(&crate::util::json::write(&vd)).unwrap(), vd);
         let md = verdict_markdown(&deltas, 0.15);

@@ -31,10 +31,10 @@
 pub mod compare;
 
 use crate::chain::{self, ChainSpec};
-use crate::goom::kernel::{self, stats as kernel_stats};
+use crate::goom::kernel::{self, simd, stats as kernel_stats};
 use crate::goom::{
-    lmme, lmme_into, lmme_pack_rhs, lmme_packed_into, scan_par_chunked, scan_seq, GoomMat,
-    LmmePackedRhs, LmmeScratch, ScanCost,
+    lmme, lmme_into_with_variant, lmme_pack_rhs, lmme_packed_into_with_variant,
+    scan_par_chunked, scan_seq, GoomMat, LmmePackedRhs, LmmeScratch, ScanCost,
 };
 use crate::rng::rng_from_seed;
 use crate::server::{LoadgenConfig, ServeConfig, Server};
@@ -55,21 +55,37 @@ pub struct BenchOpts {
     pub threads: usize,
     /// Directory receiving the `BENCH_*.json` files.
     pub out_dir: PathBuf,
+    /// Microkernel flavor request (`--simd=MODE`): forces the process-wide
+    /// dispatch before anything runs. `None` leaves `GOOM_SIMD` in charge.
+    pub simd: Option<String>,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        Self { quick: false, threads: par::env_threads().unwrap_or(2), out_dir: PathBuf::from(".") }
+        Self {
+            quick: false,
+            threads: par::env_threads().unwrap_or(2),
+            out_dir: PathBuf::from("."),
+            simd: None,
+        }
     }
 }
 
 /// Run all three bench suites and write their JSON files.
 pub fn run_all(opts: &BenchOpts) -> Result<()> {
+    if let Some(mode) = &opts.simd {
+        simd::force_str(mode).map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
+    }
     println!(
         "repro bench{} — threads up to {}, writing to {:?}",
         if opts.quick { " --quick" } else { "" },
         opts.threads,
         opts.out_dir
+    );
+    println!(
+        "kernel dispatch: {} (cpu features: {})",
+        kernel_stats::kernel_variant(),
+        simd::cpu_features().join(",")
     );
     let lmme = bench_lmme(opts);
     write_doc(opts, "BENCH_lmme.json", &lmme)?;
@@ -110,6 +126,15 @@ fn doc_header(bench: &str, opts: &BenchOpts, results: Vec<Json>) -> Json {
         ("quick", Json::Bool(opts.quick)),
         ("created_unix_s", num(unix_s as f64)),
         ("max_threads", num(opts.threads as f64)),
+        // Provenance: which microkernel flavor the process dispatches and
+        // what the host CPU offers — so recorded rows are attributable.
+        ("kernel_variant", Json::Str(kernel_stats::kernel_variant().to_string())),
+        (
+            "cpu_features",
+            Json::Arr(
+                simd::cpu_features().into_iter().map(|s| Json::Str(s.to_string())).collect(),
+            ),
+        ),
         ("results", Json::Arr(results)),
     ])
 }
@@ -213,6 +238,9 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
     let mut results = Vec::new();
     let mut table =
         Table::new(&["d", "impl", "threads", "ns/op", "GFLOP/s", "allocs/op", "speedup"]);
+    // Worst ulp gap vs the portable flavor observed per SIMD flavor across
+    // every measured shape (logmag space) — the `simd_max_ulp` field.
+    let mut simd_worst_ulp: BTreeMap<String, u64> = BTreeMap::new();
     for &d in dims {
         let mut rng = rng_from_seed(0xBE9C0 + d as u64);
         let a = GoomMat::<f64>::randn(d, d, &mut rng);
@@ -230,7 +258,17 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
             NaiveScratch { ea: Vec::new(), eb: Vec::new(), prod: Vec::new() };
         let (naive_ns, naive_allocs) =
             measure(warmup, iters, || lmme_naive(&a, &b, &mut naive_scratch));
-        results.push(lmme_row(d, "naive_ikj", 1, iters, naive_ns, flops, naive_allocs, 1.0));
+        results.push(lmme_row(
+            d,
+            "naive_ikj",
+            "portable",
+            1,
+            iters,
+            naive_ns,
+            flops,
+            naive_allocs,
+            1.0,
+        ));
         table.row(&[
             d.to_string(),
             "naive_ikj".into(),
@@ -245,18 +283,82 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
         if opts.threads > 1 {
             threads_sweep.push(opts.threads);
         }
+        // The recorded "kernel" rows stay pinned to the portable flavor —
+        // they are the determinism reference and the keys old baselines
+        // gate against, whatever GOOM_SIMD the run was launched with.
         for threads in threads_sweep {
             let mut scratch = LmmeScratch::new();
             let mut out = GoomMat::<f64>::zeros(0, 0);
             let (ns, allocs) = measure(warmup, iters, || {
-                lmme_into(&a, &b, &mut out, &mut scratch, threads);
+                lmme_into_with_variant(
+                    simd::Variant::Portable,
+                    &a,
+                    &b,
+                    &mut out,
+                    &mut scratch,
+                    threads,
+                );
             });
             let speedup = naive_ns / ns;
-            results.push(lmme_row(d, "kernel", threads, iters, ns, flops, allocs, speedup));
+            results.push(lmme_row(
+                d, "kernel", "portable", threads, iters, ns, flops, allocs, speedup,
+            ));
             table.row(&[
                 d.to_string(),
                 "kernel".into(),
                 threads.to_string(),
+                format!("{ns:.0}"),
+                format!("{:.2}", flops / ns),
+                format!("{allocs:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+
+        // Opt-in microkernel flavors, single-threaded against the pinned
+        // portable row above. Each row records the worst logmag ulp gap vs
+        // portable on this shape (0 for comp-vs-portable would be luck;
+        // comp is gated by its own bitwise check below).
+        let portable_out = {
+            let mut out = GoomMat::<f64>::zeros(0, 0);
+            lmme_into_with_variant(
+                simd::Variant::Portable,
+                &a,
+                &b,
+                &mut out,
+                &mut LmmeScratch::new(),
+                1,
+            );
+            out
+        };
+        for v in simd::available() {
+            if v == simd::Variant::Portable {
+                continue;
+            }
+            let mut scratch = LmmeScratch::new();
+            let mut out = GoomMat::<f64>::zeros(0, 0);
+            let (ns, allocs) = measure(warmup, iters, || {
+                lmme_into_with_variant(v, &a, &b, &mut out, &mut scratch, 1);
+            });
+            let max_ulp = out
+                .logmag
+                .iter()
+                .zip(&portable_out.logmag)
+                .map(|(&x, &y)| simd::ulp_distance(x, y))
+                .max()
+                .unwrap_or(0);
+            let worst = simd_worst_ulp.entry(v.name().to_string()).or_insert(0);
+            *worst = (*worst).max(max_ulp);
+            let speedup = naive_ns / ns;
+            let mut row =
+                lmme_row(d, "kernel", v.name(), 1, iters, ns, flops, allocs, speedup);
+            if let Json::Obj(map) = &mut row {
+                map.insert("max_ulp_vs_portable".to_string(), num(max_ulp as f64));
+            }
+            results.push(row);
+            table.row(&[
+                d.to_string(),
+                format!("kernel[{}]", v.name()),
+                "1".into(),
                 format!("{ns:.0}"),
                 format!("{:.2}", flops / ns),
                 format!("{allocs:.1}"),
@@ -272,10 +374,27 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
         let mut scratch = LmmeScratch::new();
         let mut out = GoomMat::<f64>::zeros(0, 0);
         let (ns, allocs) = measure(warmup, iters, || {
-            lmme_packed_into(&a, &rhs, &mut out, &mut scratch, 1);
+            lmme_packed_into_with_variant(
+                simd::Variant::Portable,
+                &a,
+                &rhs,
+                &mut out,
+                &mut scratch,
+                1,
+            );
         });
         let speedup = naive_ns / ns;
-        results.push(lmme_row(d, "kernel_packed_rhs", 1, iters, ns, flops, allocs, speedup));
+        results.push(lmme_row(
+            d,
+            "kernel_packed_rhs",
+            "portable",
+            1,
+            iters,
+            ns,
+            flops,
+            allocs,
+            speedup,
+        ));
         table.row(&[
             d.to_string(),
             "kernel_packed_rhs".into(),
@@ -298,10 +417,27 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
             let mut scratch = LmmeScratch::new();
             let mut out = GoomMat::<f64>::zeros(0, 0);
             let (ns, allocs) = measure(0, 1, || {
-                lmme_into(&a, &b, &mut out, &mut scratch, opts.threads.max(1));
+                lmme_into_with_variant(
+                    simd::Variant::Portable,
+                    &a,
+                    &b,
+                    &mut out,
+                    &mut scratch,
+                    opts.threads.max(1),
+                );
             });
             let sweep_threads = opts.threads.max(1);
-            results.push(lmme_row(d, "kernel_kc_sweep", sweep_threads, 1, ns, flops, allocs, 0.0));
+            results.push(lmme_row(
+                d,
+                "kernel_kc_sweep",
+                "portable",
+                sweep_threads,
+                1,
+                ns,
+                flops,
+                allocs,
+                0.0,
+            ));
             table.row(&[
                 d.to_string(),
                 "kernel_kc_sweep".into(),
@@ -317,38 +453,118 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
     table.print();
     // Convenience field for the acceptance bar: kernel speedup at the
     // largest measured shape, single-threaded.
-    let row_ns = |impl_name: &str, d: usize, threads: usize| -> f64 {
+    let row_ns = |impl_name: &str, variant: &str, d: usize, threads: usize| -> f64 {
         results
             .iter()
             .filter_map(Json::as_obj)
             .find(|o| {
                 o.get("impl").and_then(Json::as_str) == Some(impl_name)
+                    && o.get("variant").and_then(Json::as_str) == Some(variant)
                     && o.get("threads").and_then(Json::as_usize) == Some(threads)
                     && o.get("d").and_then(Json::as_usize) == Some(d)
             })
             .and_then(|o| o.get("ns_per_op").and_then(Json::as_f64))
             .unwrap_or(0.0)
     };
-    let naive_128 = row_ns("naive_ikj", 128, 1);
-    let kernel_128 = row_ns("kernel", 128, 1);
-    let packed_128 = row_ns("kernel_packed_rhs", 128, 1);
+    let naive_128 = row_ns("naive_ikj", "portable", 128, 1);
+    let kernel_128 = row_ns("kernel", "portable", 128, 1);
+    let packed_128 = row_ns("kernel_packed_rhs", "portable", 128, 1);
     let speedup_128 = if kernel_128 > 0.0 { naive_128 / kernel_128 } else { 0.0 };
     let panel_speedup_128 =
         if packed_128 > 0.0 { kernel_128 / packed_128 } else { 0.0 };
+
+    // SIMD acceptance fields: portable-vs-best-vector-flavor speedup per
+    // headline dimension (0.0 when the host has no vector flavor — the
+    // field is still present so downstream checks fail loudly, not
+    // silently). `comp` is excluded: it trades speed for accuracy.
+    let simd_speedups: Vec<(usize, f64)> = dims
+        .iter()
+        .filter(|&&d| matches!(d, 128 | 256 | 512))
+        .map(|&d| {
+            let portable = row_ns("kernel", "portable", d, 1);
+            let best_fast = results
+                .iter()
+                .filter_map(Json::as_obj)
+                .filter(|o| {
+                    o.get("impl").and_then(Json::as_str) == Some("kernel")
+                        && o.get("d").and_then(Json::as_usize) == Some(d)
+                        && o.get("threads").and_then(Json::as_usize) == Some(1)
+                        && !matches!(
+                            o.get("variant").and_then(Json::as_str),
+                            None | Some("portable") | Some("comp")
+                        )
+                })
+                .filter_map(|o| o.get("ns_per_op").and_then(Json::as_f64))
+                .fold(f64::INFINITY, f64::min);
+            let speedup = if best_fast.is_finite() && best_fast > 0.0 && portable > 0.0 {
+                portable / best_fast
+            } else {
+                0.0
+            };
+            (d, speedup)
+        })
+        .collect();
+    for (d, s) in &simd_speedups {
+        println!("simd speedup (d={d}, t1, best vector flavor vs portable): {s:.2}x");
+    }
+
+    // Comp-flavor reproducibility acceptance: the blocked, parallel comp
+    // dispatch (vectorized where the host allows) must reproduce the scalar
+    // compensated reference *bitwise* — lane width and blocking never show.
+    let comp_ok = {
+        let (n, d, m) = if opts.quick {
+            (8usize, kernel::KC + 3, 7usize)
+        } else {
+            (16, 2 * kernel::KC + 3, 12)
+        };
+        let mut rng = rng_from_seed(0xC09A);
+        let a = crate::linalg::Mat::randn(n, d, &mut rng);
+        let b = crate::linalg::Mat::randn(d, m, &mut rng);
+        let want = simd::comp::matmul_comp_reference(&a.data, &b.data, n, d, m);
+        let mut out = vec![0.0f64; n * m];
+        let mut scratch = kernel::MatmulScratch::new();
+        kernel::matmul_f64_v(
+            simd::Variant::Comp,
+            &a.data,
+            &b.data,
+            n,
+            d,
+            m,
+            &mut out,
+            &mut scratch,
+            opts.threads.max(2),
+        );
+        out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    println!("comp bitwise check: {}", if comp_ok { "EXACT" } else { "MISMATCH" });
 
     // KC bitwise acceptance: the largest swept dimension (512 full / 256
     // quick) through the KC-blocked kernel vs the seed's naive loop —
     // required to be *bitwise* equal, not just close.
     let kc_d = *dims.last().expect("non-empty dims");
-    let kc_ok = {
+    let (kc_ok, active_match) = {
         let mut rng = rng_from_seed(0xB17 + kc_d as u64);
         let a = GoomMat::<f64>::randn(kc_d, kc_d, &mut rng);
         let b = GoomMat::<f64>::randn(kc_d, kc_d, &mut rng);
-        let blocked = lmme(&a, &b);
+        let mut blocked = GoomMat::<f64>::zeros(0, 0);
+        lmme_into_with_variant(
+            simd::Variant::Portable,
+            &a,
+            &b,
+            &mut blocked,
+            &mut LmmeScratch::new(),
+            1,
+        );
         let mut naive_scratch =
             NaiveScratch { ea: Vec::new(), eb: Vec::new(), prod: Vec::new() };
         let naive = lmme_naive(&a, &b, &mut naive_scratch);
-        blocked.logmag == naive.logmag && blocked.sign == naive.sign
+        // Info field: whether the *active* dispatch reproduces portable
+        // bitwise on this shape (true under GOOM_SIMD=off by construction).
+        let active = lmme(&a, &b);
+        (
+            blocked.logmag == naive.logmag && blocked.sign == naive.sign,
+            active.logmag == blocked.logmag && active.sign == blocked.sign,
+        )
     };
     println!(
         "kc bitwise check (d={kc_d}): {}",
@@ -374,6 +590,17 @@ fn bench_lmme(opts: &BenchOpts) -> Json {
         map.insert("panel_cache_speedup_128".to_string(), num(panel_speedup_128));
         map.insert("kc_bitwise_d".to_string(), num(kc_d as f64));
         map.insert("kc_bitwise_ok".to_string(), Json::Bool(kc_ok));
+        map.insert("active_bitwise_matches_portable".to_string(), Json::Bool(active_match));
+        for (d, s) in &simd_speedups {
+            map.insert(format!("kernel_simd_speedup_{d}"), num(*s));
+        }
+        map.insert(
+            "simd_max_ulp".to_string(),
+            Json::Obj(
+                simd_worst_ulp.iter().map(|(k, &v)| (k.clone(), num(v as f64))).collect(),
+            ),
+        );
+        map.insert("simd_comp_bitwise_ok".to_string(), Json::Bool(comp_ok));
         map.insert("chain_pooled_ns_128".to_string(), num(chain_pooled_ns));
         map.insert("chain_scoped_ns_128".to_string(), num(chain_scoped_ns));
         map.insert("chain_speedup_pooled_128".to_string(), num(chain_speedup));
@@ -413,6 +640,7 @@ fn bench_chain_substrates(opts: &BenchOpts) -> (f64, f64) {
 fn lmme_row(
     d: usize,
     impl_name: &str,
+    variant: &str,
     threads: usize,
     iters: usize,
     ns: f64,
@@ -425,6 +653,7 @@ fn lmme_row(
         ("n", num(d as f64)),
         ("m", num(d as f64)),
         ("impl", Json::Str(impl_name.to_string())),
+        ("variant", Json::Str(variant.to_string())),
         ("threads", num(threads as f64)),
         ("iters", num(iters as f64)),
         ("ns_per_op", num(ns)),
@@ -554,6 +783,8 @@ fn scan_row(
 ) -> Json {
     obj(vec![
         ("impl", Json::Str(impl_name.to_string())),
+        // Scan combines go through the active dispatch — record which.
+        ("variant", Json::Str(kernel_stats::kernel_variant().to_string())),
         ("threads", num(threads as f64)),
         ("len", num(len as f64)),
         ("d", num(d as f64)),
@@ -790,7 +1021,7 @@ mod tests {
     use super::*;
 
     fn quick_opts() -> BenchOpts {
-        BenchOpts { quick: true, threads: 2, out_dir: PathBuf::from(".") }
+        BenchOpts { quick: true, threads: 2, out_dir: PathBuf::from("."), simd: None }
     }
 
     fn rows(doc: &Json) -> &[Json] {
@@ -804,9 +1035,16 @@ mod tests {
         let rows = rows(&doc);
         assert!(rows.len() >= 4, "{rows:?}");
         for row in rows {
-            for field in
-                ["d", "impl", "threads", "ns_per_op", "gflops", "allocs_per_op", "speedup_vs_naive"]
-            {
+            for field in [
+                "d",
+                "impl",
+                "variant",
+                "threads",
+                "ns_per_op",
+                "gflops",
+                "allocs_per_op",
+                "speedup_vs_naive",
+            ] {
                 assert!(row.get(field).is_some(), "missing {field} in {row:?}");
             }
             assert!(row.get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
@@ -815,6 +1053,13 @@ mod tests {
         assert!(rows
             .iter()
             .any(|r| r.get("impl").unwrap().as_str() == Some("kernel_packed_rhs")));
+        // The comp flavor is always available, so at least one non-portable
+        // variant row exists on every host — and it carries its ulp field.
+        let comp_row = rows
+            .iter()
+            .find(|r| r.get("variant").unwrap().as_str() == Some("comp"))
+            .expect("comp variant row");
+        assert!(comp_row.get("max_ulp_vs_portable").unwrap().as_f64().is_some());
         // The acceptance fields exist; the KC check must have come back
         // bitwise-exact (d=256 in quick mode crosses the slab boundary).
         assert!(doc.get("kernel_speedup_128_t1").unwrap().as_f64().is_some());
@@ -822,6 +1067,14 @@ mod tests {
         assert!(doc.get("chain_speedup_pooled_128").unwrap().as_f64().is_some());
         assert_eq!(doc.get("kc_bitwise_ok").unwrap().as_bool(), Some(true));
         assert!(doc.get("kc_bitwise_d").unwrap().as_usize().unwrap() > kernel::KC);
+        // SIMD provenance and acceptance fields.
+        assert!(doc.get("kernel_variant").unwrap().as_str().is_some());
+        assert!(doc.get("cpu_features").unwrap().as_arr().is_some());
+        assert!(doc.get("kernel_simd_speedup_128").unwrap().as_f64().is_some());
+        assert!(doc.get("kernel_simd_speedup_256").unwrap().as_f64().is_some());
+        assert!(doc.get("simd_max_ulp").is_some());
+        assert_eq!(doc.get("simd_comp_bitwise_ok").unwrap().as_bool(), Some(true));
+        assert!(doc.get("active_bitwise_matches_portable").unwrap().as_bool().is_some());
         // And the doc round-trips through the JSON writer/parser.
         let text = json::write(&doc);
         assert_eq!(json::parse(&text).unwrap(), doc);
@@ -872,6 +1125,7 @@ mod tests {
         let rows = rows(&doc);
         assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_seq")));
         assert!(rows.iter().any(|r| r.get("impl").unwrap().as_str() == Some("scan_par")));
+        assert!(rows.iter().all(|r| r.get("variant").unwrap().as_str().is_some()));
         assert!(doc.get("modeled_device").unwrap().as_arr().unwrap().len() == 3);
         // The pool-dispatch section records both substrates.
         let pool = doc.get("pool").unwrap();

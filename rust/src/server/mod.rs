@@ -92,6 +92,12 @@ pub struct ServeConfig {
     /// component enabled, so a router and its shards can each opt in
     /// independently inside one test process.
     pub trace_sample: u64,
+    /// Microkernel flavor request (`--simd=MODE`): forwarded to
+    /// [`crate::goom::kernel::simd::force_str`] at startup so every LMME
+    /// this server runs dispatches the requested flavor. Empty (the
+    /// default) leaves the process-wide dispatch untouched — the
+    /// `GOOM_SIMD` env var (or its `off` default) decides.
+    pub simd: String,
 }
 
 impl Default for ServeConfig {
@@ -108,6 +114,7 @@ impl Default for ServeConfig {
             max_connections: 256,
             threads: crate::util::par::default_threads(),
             trace_sample: 0,
+            simd: String::new(),
         }
     }
 }
@@ -142,6 +149,10 @@ impl Server {
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         if cfg.trace_sample != 0 {
             crate::obs::set_sample(cfg.trace_sample);
+        }
+        if !cfg.simd.is_empty() {
+            crate::goom::kernel::simd::force_str(&cfg.simd)
+                .map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
         }
         let (listener, addr) = bind_front(&cfg.host, cfg.port)?;
         let inner = Arc::new(ServerInner::new(cfg.clone()));

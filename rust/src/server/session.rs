@@ -943,6 +943,16 @@ fn pool_json() -> Json {
 fn kernel_json() -> Json {
     let k = kernel_stats::snapshot();
     obj(vec![
+        ("variant", Json::Str(kernel_stats::kernel_variant().to_string())),
+        (
+            "cpu_features",
+            Json::Arr(
+                crate::goom::kernel::simd::cpu_features()
+                    .into_iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
         ("lmme_ops", num(k.lmme_ops as f64)),
         ("lmme_ns_total", num(k.lmme_ns as f64)),
         ("lmme_ns_mean", num(k.mean_lmme_ns())),
