@@ -39,7 +39,13 @@
 //!   router tier (`repro route`, rendezvous-hashing canonical keys across
 //!   shards) is a second instantiation of the same reactor, so both
 //!   fronts run O(1) threads. See `docs/SERVING.md` for the wire
-//!   protocol.
+//!   protocol. The reliability layer — cost-aware admission control
+//!   with dynamic `retry_after_ms` (`server/admission.rs`), per-shard
+//!   circuit breakers with half-open probes, deterministic seeded
+//!   fault injection at every IO seam (`server/faults.rs`,
+//!   `--faults`/`GOOM_FAULTS`), graceful SIGTERM drain, and the
+//!   chaos loadgen that proves faults shed or delay but never corrupt
+//!   — is documented in `docs/RELIABILITY.md`.
 //! * [`obs`] — always-compiled, atomically-gated request tracing:
 //!   per-thread rings of typed span events keyed by a request id that
 //!   travels the wire (`id` field, forwarded router → shard), surfaced

@@ -147,6 +147,19 @@ fn serve(args: &Args) -> Result<()> {
         )?,
         retry_after_ms: cfg
             .u64("retry-after-ms", cfg.u64("serve_retry_after_ms", defaults.retry_after_ms)?)?,
+        max_retry_ms: cfg
+            .u64("max-retry-ms", cfg.u64("serve_max_retry_ms", defaults.max_retry_ms)?)?,
+        inflight_per_conn: cfg.usize(
+            "inflight-per-conn",
+            cfg.usize("serve_inflight_per_conn", defaults.inflight_per_conn)?,
+        )?,
+        idle_timeout_s: cfg
+            .u64("idle-timeout", cfg.u64("serve_idle_timeout", defaults.idle_timeout_s)?)?,
+        faults: cfg
+            .get("faults")
+            .or_else(|| cfg.get("serve_faults"))
+            .unwrap_or(&defaults.faults)
+            .to_string(),
         max_connections: cfg.usize(
             "max-connections",
             cfg.usize("serve_max_connections", defaults.max_connections)?,
@@ -212,6 +225,17 @@ fn route(args: &Args) -> Result<()> {
             .u64("retry-after-ms", cfg.u64("route_retry_after_ms", defaults.retry_after_ms)?)?,
         trace_sample: cfg
             .u64("trace-sample", cfg.u64("route_trace_sample", defaults.trace_sample)?)?,
+        inflight_per_conn: cfg.usize(
+            "inflight-per-conn",
+            cfg.usize("route_inflight_per_conn", defaults.inflight_per_conn)?,
+        )?,
+        idle_timeout_s: cfg
+            .u64("idle-timeout", cfg.u64("route_idle_timeout", defaults.idle_timeout_s)?)?,
+        faults: cfg
+            .get("faults")
+            .or_else(|| cfg.get("route_faults"))
+            .unwrap_or(&defaults.faults)
+            .to_string(),
     };
     println!(
         "goomd-router: {} backends, rendezvous-hashed on canonical request keys",
@@ -336,6 +360,7 @@ fn loadgen(args: &Args) -> Result<()> {
             "threads",
             goomrs::util::par::env_threads().unwrap_or(defaults.threads),
         )?,
+        chaos: args.flag("chaos"),
     };
     let dims_desc = if cfg.dims.is_empty() {
         format!("d={}", cfg.d)
@@ -362,6 +387,16 @@ fn loadgen(args: &Args) -> Result<()> {
         "\n  requests: {} ok, {} errors, {} served from cache, {} retries",
         report.ok, report.errors, report.cached, report.retries
     );
+    println!(
+        "  overload: {} shed ({} ms backoff served)",
+        report.shed_total, report.backoff_ms_total
+    );
+    if cfg.chaos {
+        println!(
+            "  chaos:    {} corrupt, {} reconnects",
+            report.corrupt, report.reconnects
+        );
+    }
     println!("  elapsed:  {:.3} s", report.elapsed_s);
     println!("  throughput: {:.1} req/s", report.throughput_rps);
     println!(
@@ -372,12 +407,19 @@ fn loadgen(args: &Args) -> Result<()> {
         println!("  per-dimension:");
         for p in &report.per_dim {
             println!(
-                "    d={:<5} n={:<5} p50 {:.2} ms   p99 {:.2} ms",
-                p.d, p.n, p.p50_ms, p.p99_ms
+                "    d={:<5} n={:<5} p50 {:.2} ms   p99 {:.2} ms   shed={} ({} ms backoff)",
+                p.d, p.n, p.p50_ms, p.p99_ms, p.shed, p.backoff_ms
             );
         }
     }
     println!("\n{}", metrics.summary());
+    if report.corrupt > 0 {
+        anyhow::bail!(
+            "{} delivered responses differed from the local recompute — \
+             fault injection corrupted data",
+            report.corrupt
+        );
+    }
     if report.errors > 0 {
         anyhow::bail!("{} requests failed", report.errors);
     }
@@ -462,13 +504,21 @@ USAGE:
                                     (see docs/PERFORMANCE.md)
   repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
                --batch-max=16 --cache=1024 --max-request-bytes=1048576
-               --max-connections=256 --trace-sample=0 --simd=MODE]
+               --max-connections=256 --trace-sample=0 --simd=MODE
+               --inflight-per-conn=64 --max-retry-ms=5000
+               --idle-timeout=60 --faults=PLAN]
                                     run goomd, the GOOM compute daemon
-                                    (newline-JSON over TCP; see docs/SERVING.md)
+                                    (newline-JSON over TCP; see docs/SERVING.md;
+                                    SIGTERM drains gracefully; --faults /
+                                    GOOM_FAULTS injects deterministic faults,
+                                    see docs/RELIABILITY.md)
   repro route --backends=host:port[,host:port...] [--port=7070
-               --trace-sample=0]
+               --trace-sample=0 --inflight-per-conn=64
+               --idle-timeout=60 --faults=PLAN]
                                     run the cache-aware router tier: rendezvous-
-                                    hashes canonical request keys across shards
+                                    hashes canonical request keys across shards,
+                                    with per-shard circuit breakers (metrics op,
+                                    \"health\" section)
   repro req [--addr=127.0.0.1:7077] '<json-request>'
                                     send one request line, print the response
   repro trace [--addr=A[,B,...] --limit=512 --out=trace.json]
@@ -479,13 +529,16 @@ USAGE:
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
                  --seed=N --min-cached=N --pipeline=N --threads=N
-                 --simd=MODE]
+                 --simd=MODE --chaos]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency,
-                                    plus a per-dimension breakdown on
-                                    --dims runs (--pipeline=N sends N
-                                    requests per burst, stressing the
-                                    reorder buffers)
+                                    shed/backoff totals, plus a per-dimension
+                                    breakdown on --dims runs (--pipeline=N
+                                    sends N requests per burst, stressing the
+                                    reorder buffers; --chaos verifies every
+                                    delivered response byte-for-byte against
+                                    a local recompute and exits non-zero on
+                                    any corruption)
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).

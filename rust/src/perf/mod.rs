@@ -821,6 +821,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             shared_seed,
             pipeline: 1,
             threads: 0,
+            chaos: false,
         };
         let before = kernel_stats::snapshot();
         let t0 = Instant::now();
@@ -873,6 +874,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             shared_seed: Some(7),
             pipeline: 1,
             threads: 0,
+            chaos: false,
         };
         crate::obs::set_sample(0);
         let mut metrics = crate::coordinator::Metrics::new();
@@ -903,6 +905,63 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
         if off.errors + on.errors > 0 {
             anyhow::bail!("trace overhead bench saw {} errors", off.errors + on.errors);
         }
+    }
+    // Overload goodput (info-only — never a trend gate): a deliberately
+    // tiny shard (1 worker, shallow queue, tight fairness cap) is driven
+    // well past saturation with pipelined distinct-key traffic. The
+    // admission controller must shed (nonzero shed_total, dynamic backoff
+    // hints honored by the client) while the requests it does admit keep a
+    // latency in the same regime as an unloaded run.
+    {
+        let tiny = Server::start(ServeConfig {
+            port: 0,
+            workers: 1,
+            queue_depth: 4,
+            batch_max: 1,
+            cache_capacity: 8,
+            inflight_per_conn: 2,
+            ..ServeConfig::default()
+        })
+        .context("starting overload goomd")?;
+        let mk = |clients: usize, pipeline: usize| LoadgenConfig {
+            addr: tiny.addr().to_string(),
+            clients,
+            requests,
+            d: 8,
+            steps,
+            dims: Vec::new(),
+            method: "goomc64".to_string(),
+            shared_seed: None,
+            pipeline,
+            threads: 0,
+            chaos: false,
+        };
+        let mut metrics = crate::coordinator::Metrics::new();
+        let unloaded = crate::server::loadgen(&mk(1, 1), &mut metrics)?;
+        let mut metrics = crate::coordinator::Metrics::new();
+        let overloaded = crate::server::loadgen(&mk(clients * 2, 4), &mut metrics)?;
+        let p99_ratio = if unloaded.p99_ms > 0.0 {
+            overloaded.p99_ms / unloaded.p99_ms
+        } else {
+            0.0
+        };
+        results.push(obj(vec![
+            ("scenario", Json::Str("overload_goodput".to_string())),
+            ("clients", num((clients * 2) as f64)),
+            ("requests_total", num(overloaded.total_requests as f64)),
+            ("ok", num(overloaded.ok as f64)),
+            ("errors", num(overloaded.errors as f64)),
+            ("shed_total", num(overloaded.shed_total as f64)),
+            ("backoff_ms_total", num(overloaded.backoff_ms_total as f64)),
+            ("p99_unloaded_ms", num(unloaded.p99_ms)),
+            ("p99_overloaded_ms", num(overloaded.p99_ms)),
+            ("p99_ratio", num(p99_ratio)),
+        ]));
+        println!(
+            "serve[overload_goodput]: {} shed / {} ok, p99 {:.2} ms unloaded → {:.2} ms at 2x ({:.2}x)",
+            overloaded.shed_total, overloaded.ok, unloaded.p99_ms, overloaded.p99_ms, p99_ratio
+        );
+        tiny.stop();
     }
     let counters: BTreeMap<String, Json> = [
         ("cache_hits", server.counter("cache_hits")),
@@ -965,6 +1024,7 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
                 shared_seed: Some(7),
                 pipeline,
                 threads: 0,
+                chaos: false,
             };
             let mut metrics = crate::coordinator::Metrics::new();
             let report = crate::server::loadgen(&lg, &mut metrics)?;

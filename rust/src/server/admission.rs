@@ -1,0 +1,342 @@
+//! Admission control for the serving tiers.
+//!
+//! Both reactor apps consult one [`Admission`] before accepting work:
+//! `ServeApp` (the compute shard) checks all three policies, `RelayApp`
+//! (the router) checks per-connection fairness — work executes on the
+//! shards, so that is where cost accounting lives.
+//!
+//! Three policies, all cheap enough for the reactor thread:
+//!
+//! * **Adaptive shedding** — when work is turned away, the `retry_after_ms`
+//!   hint is no longer the static config value but the *observed* time to
+//!   drain the current queue: `queue_len × mean(stage_exec) / workers`,
+//!   clamped to `[retry_after_ms, max_retry_after_ms]`. A client shedding
+//!   against a deep queue of slow jobs is told to come back later than one
+//!   shedding against a nearly-drained queue — so retries land when they
+//!   can be served instead of re-stampeding.
+//! * **Per-client fairness** — each connection gets an in-flight cap
+//!   (`--inflight-per-conn`). Under queue pressure the cap *tightens*
+//!   linearly (full cap at ≤50% queue, down to 1 at 100%), so the
+//!   heaviest pipeliners shed first and one `--pipeline=N` client cannot
+//!   starve lockstep clients out of the queue.
+//! * **Cost-aware admission** — requests are charged in the PR-4 work
+//!   currency (`d³·steps`, [`crate::server::protocol::Request::work_units`])
+//!   against a total outstanding-work budget, so one `d=1024` chain at the
+//!   budget ceiling is charged honestly as the ~400 small-chain equivalents
+//!   it is, instead of as one queue slot.
+//!
+//! Shed decisions never corrupt: a shed is always a well-formed
+//! `{"ok":false,...,"retry_after_ms":…}` line, and the loadgen client
+//! backs off and retries. Policy rationale in `docs/RELIABILITY.md`.
+
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Knobs, layered like every other serve config: defaults < `repro.conf`
+/// < CLI flags.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Per-connection in-flight cap (0 disables fairness shedding).
+    pub inflight_per_conn: usize,
+    /// Total outstanding-work budget in `d³·steps` units. Defaults to
+    /// 8 × the single-request ceiling ([`crate::server::protocol::MAX_CHAIN_WORK`]).
+    pub work_capacity: u64,
+    /// Floor for the dynamic retry hint — the pre-admission static value.
+    pub base_retry_ms: u64,
+    /// Ceiling for the dynamic retry hint.
+    pub max_retry_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            inflight_per_conn: 64,
+            work_capacity: (crate::server::protocol::MAX_CHAIN_WORK as u64)
+                .saturating_mul(8),
+            base_retry_ms: 100,
+            max_retry_ms: 5_000,
+        }
+    }
+}
+
+/// Shared admission state. All atomics — safe to consult from the reactor
+/// thread and release from pool workers without a lock.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    /// Work units currently admitted but not yet resolved.
+    outstanding: AtomicU64,
+    /// Last dynamic retry hint handed out (exported as a gauge).
+    last_retry_ms: AtomicU64,
+    shed_fairness: AtomicU64,
+    shed_cost: AtomicU64,
+    shed_queue: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let base = cfg.base_retry_ms;
+        Self {
+            cfg,
+            outstanding: AtomicU64::new(0),
+            last_retry_ms: AtomicU64::new(base),
+            shed_fairness: AtomicU64::new(0),
+            shed_cost: AtomicU64::new(0),
+            shed_queue: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// The dynamic `retry_after_ms` hint: expected time for `workers` to
+    /// drain `queue_len` jobs at the observed mean execution time. Falls
+    /// back to the static floor until `stage_exec` has samples.
+    pub fn retry_after_ms(
+        &self,
+        queue_len: usize,
+        workers: usize,
+        metrics: &Metrics,
+    ) -> u64 {
+        let ms = match metrics.timer_mean("stage_exec") {
+            Some(mean_s) if mean_s > 0.0 => {
+                let drain_s =
+                    mean_s * (queue_len.max(1) as f64) / (workers.max(1) as f64);
+                (drain_s * 1e3).ceil() as u64
+            }
+            _ => self.cfg.base_retry_ms,
+        };
+        let ms = ms.clamp(self.cfg.base_retry_ms.max(1), self.cfg.max_retry_ms.max(1));
+        self.last_retry_ms.store(ms, Ordering::Relaxed);
+        ms
+    }
+
+    /// The effective per-connection in-flight cap at the current queue
+    /// pressure: the configured cap while the queue is under half full,
+    /// tightening linearly to 1 as it fills — weighted shedding, heaviest
+    /// pipeliners first.
+    pub fn fair_cap(&self, queue_len: usize, queue_depth: usize) -> usize {
+        let cap = self.cfg.inflight_per_conn;
+        if cap == 0 {
+            return usize::MAX;
+        }
+        let pressure = queue_len as f64 / queue_depth.max(1) as f64;
+        if pressure <= 0.5 {
+            return cap;
+        }
+        let scale = ((1.0 - pressure) * 2.0).clamp(0.0, 1.0);
+        ((cap as f64 * scale).floor() as usize).max(1)
+    }
+
+    /// Fairness check for one more request on a connection already holding
+    /// `conn_inflight`. `false` means shed (tallied).
+    pub fn admit_conn(
+        &self,
+        conn_inflight: usize,
+        queue_len: usize,
+        queue_depth: usize,
+    ) -> bool {
+        if conn_inflight < self.fair_cap(queue_len, queue_depth) {
+            true
+        } else {
+            self.shed_fairness.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Cost check: reserve `work` units against the outstanding budget.
+    /// On success the caller owns the reservation and must [`release`]
+    /// it when the request resolves (any path — success, error, shed
+    /// downstream). An idle controller always admits, so a request is
+    /// never unservable no matter how the capacity is (mis)configured.
+    pub fn try_reserve(&self, work: u64) -> bool {
+        let mut cur = self.outstanding.load(Ordering::Relaxed);
+        loop {
+            if cur != 0 && cur.saturating_add(work) > self.cfg.work_capacity {
+                self.shed_cost.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match self.outstanding.compare_exchange_weak(
+                cur,
+                cur.saturating_add(work),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return a reservation made by [`try_reserve`].
+    pub fn release(&self, work: u64) {
+        let _ = self.outstanding.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| Some(cur.saturating_sub(work)),
+        );
+    }
+
+    pub fn outstanding_work(&self) -> u64 {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// Tally a queue-full shed (the bounded pool turned the job away).
+    pub fn note_queue_shed(&self) {
+        self.shed_queue.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed_fairness.load(Ordering::Relaxed)
+            + self.shed_cost.load(Ordering::Relaxed)
+            + self.shed_queue.load(Ordering::Relaxed)
+    }
+
+    /// The `"admission"` section of the `metrics` op.
+    pub fn to_json(&self, queue_len: usize, queue_depth: usize) -> Json {
+        let mut m = BTreeMap::new();
+        let n = |x: u64| Json::Num(x as f64);
+        m.insert("outstanding_work".to_string(), n(self.outstanding_work()));
+        m.insert("work_capacity".to_string(), n(self.cfg.work_capacity));
+        m.insert(
+            "inflight_per_conn".to_string(),
+            n(self.cfg.inflight_per_conn as u64),
+        );
+        m.insert(
+            "fair_cap_now".to_string(),
+            Json::Num(match self.fair_cap(queue_len, queue_depth) {
+                usize::MAX => -1.0,
+                cap => cap as f64,
+            }),
+        );
+        m.insert(
+            "retry_after_ms_last".to_string(),
+            n(self.last_retry_ms.load(Ordering::Relaxed)),
+        );
+        m.insert(
+            "shed_fairness".to_string(),
+            n(self.shed_fairness.load(Ordering::Relaxed)),
+        );
+        m.insert("shed_cost".to_string(), n(self.shed_cost.load(Ordering::Relaxed)));
+        m.insert(
+            "shed_queue_full".to_string(),
+            n(self.shed_queue.load(Ordering::Relaxed)),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adm(cfg: AdmissionConfig) -> Admission {
+        Admission::new(cfg)
+    }
+
+    #[test]
+    fn retry_hint_falls_back_to_the_static_floor_without_samples() {
+        let a = adm(AdmissionConfig { base_retry_ms: 100, ..Default::default() });
+        let m = Metrics::new();
+        assert_eq!(a.retry_after_ms(10, 2, &m), 100);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_queue_depth_and_drain_rate() {
+        let a = adm(AdmissionConfig {
+            base_retry_ms: 10,
+            max_retry_ms: 60_000,
+            ..Default::default()
+        });
+        let mut m = Metrics::new();
+        // 20 ms mean execution per job.
+        for _ in 0..32 {
+            m.record_secs("stage_exec", 0.020);
+        }
+        // 40 queued / 2 workers × 20 ms = 400 ms to drain.
+        let hint = a.retry_after_ms(40, 2, &m);
+        assert!((380..=440).contains(&hint), "hint {hint}");
+        // A short queue drains fast: clamps to the floor.
+        assert_eq!(a.retry_after_ms(0, 2, &m), 10);
+        // The ceiling clamps pathological queues.
+        let a = adm(AdmissionConfig {
+            base_retry_ms: 10,
+            max_retry_ms: 500,
+            ..Default::default()
+        });
+        assert_eq!(a.retry_after_ms(100_000, 1, &m), 500);
+    }
+
+    #[test]
+    fn fair_cap_tightens_under_pressure() {
+        let a = adm(AdmissionConfig { inflight_per_conn: 32, ..Default::default() });
+        assert_eq!(a.fair_cap(0, 64), 32, "idle queue: full cap");
+        assert_eq!(a.fair_cap(32, 64), 32, "half full: still full cap");
+        assert_eq!(a.fair_cap(48, 64), 16, "75% full: half cap");
+        assert_eq!(a.fair_cap(64, 64), 1, "full queue: cap of 1");
+        // Cap 0 disables fairness entirely.
+        let a = adm(AdmissionConfig { inflight_per_conn: 0, ..Default::default() });
+        assert_eq!(a.fair_cap(64, 64), usize::MAX);
+        assert!(a.admit_conn(1_000_000, 64, 64));
+    }
+
+    #[test]
+    fn fairness_sheds_the_heavy_pipeliner_not_the_lockstep_client() {
+        let a = adm(AdmissionConfig { inflight_per_conn: 8, ..Default::default() });
+        // At 75% pressure the cap is 4: a client with 6 in flight sheds,
+        // a lockstep client with 0 in flight still gets through.
+        assert!(!a.admit_conn(6, 48, 64));
+        assert!(a.admit_conn(0, 48, 64));
+        assert_eq!(a.shed_total(), 1);
+    }
+
+    #[test]
+    fn cost_budget_charges_big_chains_honestly() {
+        let a = adm(AdmissionConfig { work_capacity: 1_000, ..Default::default() });
+        assert!(a.try_reserve(600));
+        assert!(a.try_reserve(400));
+        assert_eq!(a.outstanding_work(), 1_000);
+        // Budget exhausted: the next unit sheds.
+        assert!(!a.try_reserve(1));
+        a.release(400);
+        assert!(a.try_reserve(300));
+        a.release(600);
+        a.release(300);
+        assert_eq!(a.outstanding_work(), 0);
+        // Releasing more than reserved saturates at zero, never wraps.
+        a.release(1);
+        assert_eq!(a.outstanding_work(), 0);
+    }
+
+    #[test]
+    fn an_idle_controller_always_admits() {
+        // Even a request bigger than the whole budget is admitted when
+        // nothing is outstanding — no request is permanently unservable.
+        let a = adm(AdmissionConfig { work_capacity: 10, ..Default::default() });
+        assert!(a.try_reserve(1_000));
+        assert!(!a.try_reserve(1));
+        a.release(1_000);
+    }
+
+    #[test]
+    fn json_section_reports_state_and_tallies() {
+        let a = adm(AdmissionConfig {
+            inflight_per_conn: 8,
+            work_capacity: 100,
+            ..Default::default()
+        });
+        assert!(a.try_reserve(40));
+        assert!(!a.admit_conn(100, 0, 64));
+        a.note_queue_shed();
+        let j = a.to_json(0, 64);
+        assert_eq!(j.get("outstanding_work").unwrap().as_f64(), Some(40.0));
+        assert_eq!(j.get("work_capacity").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("fair_cap_now").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("shed_fairness").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("shed_queue_full").unwrap().as_f64(), Some(1.0));
+        assert_eq!(a.shed_total(), 2);
+    }
+}

@@ -34,6 +34,7 @@
 //! ready — spurious readiness costs one `WouldBlock` per socket,
 //! correctness is unchanged.
 
+use super::faults;
 use super::inflight::Reply;
 use super::pool::Pool;
 use super::protocol::{err_line, num, obj, Request};
@@ -79,6 +80,18 @@ pub const BACKEND_IO_TIMEOUT: Duration = Duration::from_secs(120);
 /// A finished response line for connection `.0`, request slot `.1`.
 type Completion = (u64, u64, String);
 
+/// External control surface of one reactor: `shutdown` stops the loop on
+/// its next wakeup (best-effort final flush, then sockets close);
+/// `drain` stops accepting and lets every connection reach quiescence —
+/// responses owed are computed, reordered, and flushed — before the loop
+/// returns. Both are one-way latches set by the owner and observed on the
+/// loop's next iteration (pair with a [`Waker::wake`]).
+#[derive(Default)]
+pub struct LoopCtl {
+    pub shutdown: AtomicBool,
+    pub drain: AtomicBool,
+}
+
 /// Front-of-house knobs every reactor instantiation shares.
 #[derive(Debug, Clone)]
 pub struct FrontConfig {
@@ -88,6 +101,12 @@ pub struct FrontConfig {
     pub max_request_bytes: usize,
     pub max_connections: usize,
     pub retry_after_ms: u64,
+    /// Close an inbound connection silent this long with nothing in
+    /// flight (`Duration::ZERO` disables). Outbound backends already get
+    /// connect/IO deadline sweeps; this is the inbound twin — a slowloris
+    /// client holding a half-written line must not pin a connection slot
+    /// (and its poll fd) forever.
+    pub idle_timeout: Duration,
 }
 
 /// Reactor observability: exported through the `metrics` op (router and
@@ -358,6 +377,8 @@ struct Conn {
     emit_seq: u64,
     /// Completed lines waiting on earlier slots.
     ready: BTreeMap<u64, String>,
+    /// Last inbound bytes (or accept) — the idle-deadline clock.
+    last_activity: Instant,
     read_closed: bool,
     dead: bool,
     readable: bool,
@@ -366,6 +387,14 @@ struct Conn {
 impl Conn {
     fn finished(&self) -> bool {
         self.read_closed && self.emit_seq == self.next_seq && self.out.is_empty()
+    }
+
+    /// Nothing owed in either direction: every assigned slot has flushed
+    /// and no completed line waits behind another. Such a connection can
+    /// close without any client observing a truncated exchange — the
+    /// drain path's per-connection exit condition.
+    fn quiescent(&self) -> bool {
+        self.emit_seq == self.next_seq && self.out.is_empty() && self.ready.is_empty()
     }
 }
 
@@ -400,7 +429,7 @@ pub fn spawn<A: App>(
     name: &str,
     listener: TcpListener,
     app: A,
-    shutdown: Arc<AtomicBool>,
+    ctl: Arc<LoopCtl>,
 ) -> io::Result<(JoinHandle<()>, Arc<Waker>)> {
     #[cfg(unix)]
     let (waker, wake_rx) = waker_pair()?;
@@ -429,9 +458,10 @@ pub fn spawn<A: App>(
                     backends: HashMap::new(),
                     next_backend_id: 0,
                     listener_ready: false,
+                    accepting: true,
                 },
                 app,
-                shutdown,
+                ctl,
             }
             .run();
         })?;
@@ -455,6 +485,9 @@ pub struct Core {
     backends: HashMap<u64, BackendConn>,
     next_backend_id: u64,
     listener_ready: bool,
+    /// Cleared on drain: the listener leaves the poll set and pending
+    /// connections stay unaccepted (they reset when the loop exits).
+    accepting: bool,
 }
 
 impl Core {
@@ -466,6 +499,16 @@ impl Core {
             c.ready.insert(seq, line);
             self.stats.raise_reorder_depth(c.ready.len() as u64);
         }
+    }
+
+    /// Requests connection `conn` has in flight (assigned slots whose
+    /// responses have not flushed, the just-assigned one included) — the
+    /// admission controller's per-client fairness signal.
+    pub fn conn_inflight(&self, conn: u64) -> usize {
+        self.conns
+            .get(&conn)
+            .map(|c| (c.next_seq - c.emit_seq) as usize)
+            .unwrap_or(0)
     }
 
     /// A [`Reply`] for request slot (`conn`, `seq`): routes the finished
@@ -485,6 +528,18 @@ impl Core {
     /// in-progress connect returns its id and fails asynchronously through
     /// [`App::on_backend_down`] if the backend is unreachable.
     pub fn backend_open(&mut self, addr: &str) -> io::Result<u64> {
+        if faults::enabled() {
+            match faults::decide(faults::Site::BackendConnect) {
+                faults::Fault::Drop => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::ConnectionRefused,
+                        "fault-injected connect drop",
+                    ));
+                }
+                faults::Fault::Stall(d) => std::thread::sleep(d),
+                _ => {}
+            }
+        }
         let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
             io::Error::new(io::ErrorKind::InvalidInput, "backend address resolves to nothing")
         })?;
@@ -569,7 +624,9 @@ impl Core {
         let mut fds: Vec<sys::PollFd> = Vec::with_capacity(cap);
         let mut tokens: Vec<Option<Token>> = Vec::with_capacity(cap);
         fds.push(sys::PollFd {
-            fd: self.listener.as_raw_fd(),
+            // poll(2) ignores negative fds, so a draining loop parks the
+            // listener slot instead of shifting every index below it.
+            fd: if self.accepting { self.listener.as_raw_fd() } else { -1 },
             events: sys::POLLIN,
             revents: 0,
         });
@@ -653,7 +710,7 @@ impl Core {
     #[cfg(not(unix))]
     fn wait_ready(&mut self) {
         std::thread::sleep(Duration::from_millis(2));
-        self.listener_ready = true;
+        self.listener_ready = self.accepting;
         for conn in self.conns.values_mut() {
             conn.readable = !conn.read_closed && conn.out.len() <= MAX_OUTBUF;
         }
@@ -667,7 +724,7 @@ impl Core {
 struct Reactor<A: App> {
     core: Core,
     app: A,
-    shutdown: Arc<AtomicBool>,
+    ctl: Arc<LoopCtl>,
 }
 
 impl<A: App> Reactor<A> {
@@ -675,7 +732,7 @@ impl<A: App> Reactor<A> {
         loop {
             self.core.wait_ready();
             self.core.stats.loop_iterations.fetch_add(1, Ordering::Relaxed);
-            if self.shutdown.load(Ordering::SeqCst) {
+            if self.ctl.shutdown.load(Ordering::SeqCst) {
                 // Best-effort final pass: pending completions (e.g. pool
                 // teardown's shutdown-error lines) are delivered as far as
                 // the sockets will take them before closing.
@@ -683,13 +740,35 @@ impl<A: App> Reactor<A> {
                 self.flush_conns();
                 return;
             }
+            let draining = self.ctl.drain.load(Ordering::SeqCst);
+            if draining {
+                self.core.accepting = false;
+            }
             self.accept_ready();
             self.read_ready();
             self.backend_io();
             self.sweep_backend_deadlines();
+            self.sweep_client_deadlines();
             self.drain_completions();
             self.flush_conns();
+            if draining {
+                // Connections that owe nothing in either direction close
+                // now; the rest stay until their in-flight responses have
+                // computed, reordered, and flushed — then the next
+                // iteration catches them quiescent. The loop (and with it
+                // the listener) exits only once every connection has
+                // closed cleanly: no client sees a mid-line disconnect.
+                for c in self.core.conns.values_mut() {
+                    if c.quiescent() {
+                        c.dead = true;
+                    }
+                }
+            }
             self.core.conns.retain(|_, c| !c.dead && !c.finished());
+            if draining && self.core.conns.is_empty() {
+                self.drain_completions();
+                return;
+            }
         }
     }
 
@@ -753,6 +832,7 @@ impl<A: App> Reactor<A> {
                 next_seq: 0,
                 emit_seq: 0,
                 ready: BTreeMap::new(),
+                last_activity: Instant::now(),
                 read_closed: false,
                 dead: false,
                 // Serve bytes that raced ahead of the first poll.
@@ -773,6 +853,16 @@ impl<A: App> Reactor<A> {
         for id in ids {
             let mut events = Vec::new();
             let conn = self.core.conns.get_mut(&id).expect("conn exists");
+            if faults::enabled() {
+                match faults::decide(faults::Site::ClientRead) {
+                    faults::Fault::Drop => {
+                        conn.dead = true;
+                        continue;
+                    }
+                    faults::Fault::Stall(d) => std::thread::sleep(d),
+                    _ => {}
+                }
+            }
             // Fairness budget: one firehosing client must not pin the loop;
             // leftover bytes stay in the kernel buffer and poll reports the
             // socket readable again next iteration.
@@ -788,6 +878,7 @@ impl<A: App> Reactor<A> {
                         break;
                     }
                     Ok(n) => {
+                        conn.last_activity = Instant::now();
                         conn.session.on_bytes(&buf[..n], &mut events);
                         if conn.session.is_closed() {
                             break;
@@ -897,10 +988,17 @@ impl<A: App> Reactor<A> {
                 if !down && !b.connecting && !b.out.is_empty() {
                     // Note: a successful flush does NOT refresh the IO
                     // deadline — only responses (reads) do.
-                    down = !flush_bytes(&b.stream, &mut b.out);
+                    down = !flush_bytes(&b.stream, &mut b.out, faults::Site::BackendWrite);
                 }
             }
             let mut lines = Vec::new();
+            if !down && b.readable && !b.connecting && faults::enabled() {
+                match faults::decide(faults::Site::BackendRead) {
+                    faults::Fault::Drop => down = true,
+                    faults::Fault::Stall(d) => std::thread::sleep(d),
+                    _ => {}
+                }
+            }
             if !down && b.readable && !b.connecting {
                 let mut budget = 16;
                 loop {
@@ -986,6 +1084,32 @@ impl<A: App> Reactor<A> {
         }
     }
 
+    /// Inbound twin of [`sweep_backend_deadlines`]: a connection silent
+    /// past the idle deadline with nothing in flight is closed. In-flight
+    /// work exempts a connection — slow *responses* are the server's
+    /// fault, not the client's.
+    fn sweep_client_deadlines(&mut self) {
+        let idle = self.core.front.idle_timeout;
+        if idle.is_zero() {
+            return;
+        }
+        let now = Instant::now();
+        let mut closed = 0u64;
+        for c in self.core.conns.values_mut() {
+            if !c.dead && c.quiescent() && now.duration_since(c.last_activity) > idle {
+                c.dead = true;
+                closed += 1;
+            }
+        }
+        if closed > 0 {
+            self.app
+                .metrics()
+                .lock()
+                .expect("metrics lock")
+                .incr("clients_idle_closed", closed);
+        }
+    }
+
     fn backend_down(&mut self, id: u64) {
         if self.core.backends.remove(&id).is_some() {
             self.app.on_backend_down(&mut self.core, id);
@@ -1015,7 +1139,7 @@ impl<A: App> Reactor<A> {
             }
             let traced = obs::enabled();
             let t0 = if traced { obs::now_us() } else { 0 };
-            if !flush_bytes(&conn.stream, &mut conn.out) {
+            if !flush_bytes(&conn.stream, &mut conn.out, faults::Site::ClientWrite) {
                 errors += 1;
                 conn.dead = true;
             }
@@ -1036,11 +1160,25 @@ impl<A: App> Reactor<A> {
 
 /// Write as much of `out` as the socket takes, draining written bytes.
 /// Returns `false` when the connection is dead (hard error or EOF-write).
-fn flush_bytes(stream: &TcpStream, out: &mut Vec<u8>) -> bool {
+/// `site` is the fault-injection seam: a `short_write` decision caps this
+/// round at a prefix of the buffer — the remainder stays queued, exactly
+/// the partial-write shape a full socket produces, so correctness must
+/// not depend on a line leaving in one `write(2)`.
+fn flush_bytes(stream: &TcpStream, out: &mut Vec<u8>, site: faults::Site) -> bool {
+    let mut limit = out.len();
+    if faults::enabled() {
+        match faults::decide(site) {
+            faults::Fault::ShortWrite => {
+                limit = faults::short_write_len(out.len()).min(out.len());
+            }
+            faults::Fault::Stall(d) => std::thread::sleep(d),
+            _ => {}
+        }
+    }
     let mut written = 0usize;
     let mut alive = true;
-    while written < out.len() {
-        match (&*stream).write(&out[written..]) {
+    while written < limit {
+        match (&*stream).write(&out[written..limit]) {
             Ok(0) => {
                 alive = false;
                 break;
@@ -1075,6 +1213,7 @@ impl App for ServeApp {
             max_request_bytes: self.inner.cfg.max_request_bytes,
             max_connections: self.inner.cfg.max_connections,
             retry_after_ms: self.inner.cfg.retry_after_ms,
+            idle_timeout: Duration::from_secs(self.inner.cfg.idle_timeout_s),
         }
     }
 
@@ -1087,8 +1226,9 @@ impl App for ServeApp {
     }
 
     fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
+        let conn_inflight = core.conn_inflight(conn);
         let reply = core.reply_to(conn, seq);
-        dispatch(req, ctx, &self.inner, &self.pool, reply);
+        dispatch(req, ctx, &self.inner, &self.pool, conn_inflight, reply);
     }
 }
 

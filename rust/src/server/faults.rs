@@ -1,0 +1,413 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! A *fault plan* is a tiny comma-separated grammar parsed once at startup
+//! (`--faults=PLAN` flag, conf keys `serve_faults` / `route_faults`, or the
+//! `GOOM_FAULTS` env var — the flag wins when both are set):
+//!
+//! ```text
+//! seed=42,conn_drop=0.01,stall_ms=500@0.02,short_write=0.05
+//! ```
+//!
+//! * `seed=N` — master seed for every injection decision (default 0).
+//! * `conn_drop=P` — with probability P at a read or connect seam, kill
+//!   the connection (clients see a disconnect, backends look dead and the
+//!   router fails over). Never fires mid-response-line: the drop lands
+//!   before bytes are read, so the peer sees a clean cut, not a torn line.
+//! * `stall_ms=D@P` — with probability P at any seam, stall it for D ms
+//!   (a wedged peer / scheduling hiccup; D is capped at [`MAX_STALL_MS`]).
+//!   `stall_ms=D` alone means P = 1.
+//! * `short_write=P` — with probability P at a write seam, flush only a
+//!   prefix of the pending bytes this round (the remainder stays
+//!   buffered, exercising partial-write resumption without ever
+//!   corrupting the stream).
+//!
+//! Decisions are a pure function of `(seed, site, per-site counter)` —
+//! see [`FaultPlan::decide_at`] — so a single-threaded seam (the reactor)
+//! replays the identical fault sequence run over run. When no plan is
+//! installed the whole module costs one relaxed atomic load per seam
+//! (the same zero-cost-when-off pattern as the trace gate in
+//! [`crate::obs`]); hot paths only call deeper once [`enabled`] is true.
+//!
+//! The contract chaos runs assert (see `docs/RELIABILITY.md`): faults may
+//! *shed or delay* work, never corrupt it — every response actually
+//! delivered under a fault plan is byte-identical to the fault-free run.
+
+use crate::rng::child_seed;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Upper bound on a single injected stall — keeps chaos plans from
+/// freezing a reactor past its own backend deadlines by accident.
+pub const MAX_STALL_MS: u64 = 2_000;
+
+/// The seams a fault can fire at. Each site draws from its own
+/// deterministic decision stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Reactor about to read from an inbound client connection.
+    ClientRead = 0,
+    /// Reactor about to flush bytes to an inbound client connection.
+    ClientWrite = 1,
+    /// Reactor about to open an outbound backend connection.
+    BackendConnect = 2,
+    /// Reactor about to read from an outbound backend connection.
+    BackendRead = 3,
+    /// Reactor about to flush bytes to an outbound backend connection.
+    BackendWrite = 4,
+    /// Pool worker about to execute a batch.
+    PoolExec = 5,
+}
+
+const SITE_COUNT: usize = 6;
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::ClientRead => "client_read",
+            Site::ClientWrite => "client_write",
+            Site::BackendConnect => "backend_connect",
+            Site::BackendRead => "backend_read",
+            Site::BackendWrite => "backend_write",
+            Site::PoolExec => "pool_exec",
+        }
+    }
+
+    /// Sites where a `conn_drop` makes sense (read/connect seams).
+    fn can_drop(self) -> bool {
+        matches!(self, Site::ClientRead | Site::BackendConnect | Site::BackendRead)
+    }
+
+    /// Sites where a `short_write` makes sense (write seams).
+    fn can_short_write(self) -> bool {
+        matches!(self, Site::ClientWrite | Site::BackendWrite)
+    }
+}
+
+/// One injection decision. `None` means the seam proceeds untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    /// Kill the connection at this seam.
+    Drop,
+    /// Stall the seam for the given duration before proceeding.
+    Stall(Duration),
+    /// Flush only a prefix of the pending bytes this round.
+    ShortWrite,
+}
+
+/// A parsed fault plan. All probabilities are in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub conn_drop: f64,
+    pub stall_ms: u64,
+    pub stall_p: f64,
+    pub short_write: f64,
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 =
+        v.parse().map_err(|_| format!("fault plan: {key}={v} is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault plan: {key}={v} must be a probability in [0, 1]"));
+    }
+    Ok(p)
+}
+
+impl FaultPlan {
+    /// Parse the `key=value,key=value` grammar. Unknown keys and malformed
+    /// values are errors — a mistyped chaos plan should fail loudly at
+    /// startup, not silently inject nothing.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("fault plan: empty plan (omit --faults to disable)".to_string());
+        }
+        let mut plan = FaultPlan::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: `{part}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("fault plan: seed={value} is not a u64"))?;
+                }
+                "conn_drop" => plan.conn_drop = parse_prob(key, value)?,
+                "short_write" => plan.short_write = parse_prob(key, value)?,
+                "stall_ms" => {
+                    let (ms, p) = match value.split_once('@') {
+                        Some((ms, p)) => (ms, Some(p)),
+                        None => (value, None),
+                    };
+                    plan.stall_ms = ms
+                        .parse()
+                        .map_err(|_| format!("fault plan: stall_ms={ms} is not a u64"))?;
+                    plan.stall_p = match p {
+                        Some(p) => parse_prob("stall_ms@p", p)?,
+                        None => 1.0,
+                    };
+                    if plan.stall_ms == 0 {
+                        plan.stall_p = 0.0;
+                    }
+                }
+                other => return Err(format!("fault plan: unknown key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan can never fire — installing it leaves the gate
+    /// shut.
+    pub fn is_noop(&self) -> bool {
+        self.conn_drop == 0.0 && self.stall_p == 0.0 && self.short_write == 0.0
+    }
+
+    /// The pure decision function: what fires at `site` on that site's
+    /// `n`-th draw. Checks drop, then stall, then short-write; each kind
+    /// draws from its own stream so enabling one never shifts another's
+    /// sequence. This being a pure function of `(plan, site, n)` is what
+    /// makes chaos runs replayable.
+    pub fn decide_at(&self, site: Site, n: u64) -> Fault {
+        let u = |kind: u64| -> f64 {
+            let v = child_seed(self.seed, ((site as u64) << 56) ^ (kind << 48) ^ n);
+            (v >> 11) as f64 / (1u64 << 53) as f64
+        };
+        if site.can_drop() && self.conn_drop > 0.0 && u(1) < self.conn_drop {
+            return Fault::Drop;
+        }
+        if self.stall_p > 0.0 && u(2) < self.stall_p {
+            return Fault::Stall(Duration::from_millis(self.stall_ms.min(MAX_STALL_MS)));
+        }
+        if site.can_short_write() && self.short_write > 0.0 && u(3) < self.short_write {
+            return Fault::ShortWrite;
+        }
+        Fault::None
+    }
+}
+
+/// One relaxed load — the only cost fault injection adds when no plan is
+/// installed. Seams check this before calling [`decide`].
+#[inline]
+pub fn enabled() -> bool {
+    GATE.load(Ordering::Relaxed) != 0
+}
+
+static GATE: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+// Per-site decision counters (the `n` in `decide_at`) and injected-fault
+// tallies. Spelled out because `[AtomicU64::new(0); N]` needs a Copy
+// initializer.
+#[rustfmt::skip]
+static DECISIONS: [AtomicU64; SITE_COUNT] = [
+    AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0),
+    AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0),
+];
+#[rustfmt::skip]
+static INJECTED: [AtomicU64; SITE_COUNT] = [
+    AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0),
+    AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0),
+];
+
+/// Install a plan process-wide. A no-op plan leaves the gate shut.
+pub fn install(plan: FaultPlan) {
+    let on = !plan.is_noop();
+    *PLAN.lock().unwrap() = Some(plan);
+    GATE.store(u64::from(on), Ordering::Relaxed);
+}
+
+/// Parse and install in one step (the `--faults=` startup path).
+pub fn install_str(s: &str) -> Result<(), String> {
+    FaultPlan::parse(s).map(install)
+}
+
+/// Shut the gate and forget the plan (tests; symmetric with `install`).
+pub fn clear() {
+    GATE.store(0, Ordering::Relaxed);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// Resolve the plan string for a tier: the `--faults` flag / conf key when
+/// non-empty, else the `GOOM_FAULTS` env var, else none.
+pub fn resolve(flag: &str) -> Option<String> {
+    if !flag.is_empty() {
+        return Some(flag.to_string());
+    }
+    std::env::var("GOOM_FAULTS").ok().filter(|s| !s.is_empty())
+}
+
+/// Draw the next decision for `site` from the installed plan. Callers
+/// gate on [`enabled`] first, so the mutex is only touched in chaos runs.
+pub fn decide(site: Site) -> Fault {
+    if !enabled() {
+        return Fault::None;
+    }
+    let plan = match &*PLAN.lock().unwrap() {
+        Some(p) => p.clone(),
+        None => return Fault::None,
+    };
+    let n = DECISIONS[site as usize].fetch_add(1, Ordering::Relaxed);
+    let fault = plan.decide_at(site, n);
+    if fault != Fault::None {
+        INJECTED[site as usize].fetch_add(1, Ordering::Relaxed);
+    }
+    fault
+}
+
+/// How much of a pending `len`-byte flush a short-write fault lets
+/// through this round: half, but at least one byte so progress is
+/// guaranteed and the drain loop terminates.
+pub fn short_write_len(len: usize) -> usize {
+    (len / 2).max(1)
+}
+
+/// Per-site decision/injection tallies for the `metrics` op (`"faults"`
+/// section, present only while a plan is installed).
+pub fn stats_json() -> Json {
+    let sites = [
+        Site::ClientRead,
+        Site::ClientWrite,
+        Site::BackendConnect,
+        Site::BackendRead,
+        Site::BackendWrite,
+        Site::PoolExec,
+    ];
+    let mut pairs: Vec<(String, Json)> = Vec::new();
+    for s in sites {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "decisions".to_string(),
+            Json::Num(DECISIONS[s as usize].load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "injected".to_string(),
+            Json::Num(INJECTED[s as usize].load(Ordering::Relaxed) as f64),
+        );
+        pairs.push((s.name().to_string(), Json::Obj(m)));
+    }
+    Json::Obj(pairs.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("seed=42,conn_drop=0.01,stall_ms=500@0.02,short_write=0.05")
+            .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.conn_drop, 0.01);
+        assert_eq!(p.stall_ms, 500);
+        assert_eq!(p.stall_p, 0.02);
+        assert_eq!(p.short_write, 0.05);
+        assert!(!p.is_noop());
+    }
+
+    #[test]
+    fn stall_without_probability_means_always() {
+        let p = FaultPlan::parse("stall_ms=100").unwrap();
+        assert_eq!((p.stall_ms, p.stall_p), (100, 1.0));
+        // A zero-duration stall can never fire.
+        let p = FaultPlan::parse("stall_ms=0@0.5").unwrap();
+        assert!(p.is_noop());
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            "",
+            "conn_drop",
+            "conn_drop=maybe",
+            "conn_drop=1.5",
+            "conn_drop=-0.1",
+            "typo_key=0.5",
+            "seed=notanumber",
+            "stall_ms=x@0.5",
+            "stall_ms=100@2.0",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn seed_only_plan_is_noop_and_leaves_gate_shut() {
+        let p = FaultPlan::parse("seed=7").unwrap();
+        assert!(p.is_noop());
+        install(p);
+        assert!(!enabled());
+        clear();
+    }
+
+    #[test]
+    fn decisions_are_a_pure_function_of_seed_site_and_index() {
+        let plan = FaultPlan::parse("seed=42,conn_drop=0.2,stall_ms=50@0.2,short_write=0.2")
+            .unwrap();
+        let seq = |site: Site| -> Vec<Fault> {
+            (0..256).map(|n| plan.decide_at(site, n)).collect()
+        };
+        // Replay is exact.
+        assert_eq!(seq(Site::ClientRead), seq(Site::ClientRead));
+        // Sites draw from distinct streams.
+        assert_ne!(seq(Site::ClientRead), seq(Site::BackendRead));
+        // Every configured kind actually fires somewhere at p=0.2 over 256
+        // draws, and only at sites where it makes sense.
+        let all: Vec<Fault> = [
+            Site::ClientRead,
+            Site::ClientWrite,
+            Site::BackendConnect,
+            Site::BackendRead,
+            Site::BackendWrite,
+            Site::PoolExec,
+        ]
+        .into_iter()
+        .flat_map(seq)
+        .collect();
+        assert!(all.contains(&Fault::Drop));
+        assert!(all.iter().any(|f| matches!(f, Fault::Stall(_))));
+        assert!(all.contains(&Fault::ShortWrite));
+        assert!(seq(Site::ClientWrite).iter().all(|f| *f != Fault::Drop));
+        assert!(seq(Site::PoolExec)
+            .iter()
+            .all(|f| matches!(f, Fault::None | Fault::Stall(_))));
+    }
+
+    #[test]
+    fn disabling_one_kind_never_shifts_anothers_stream() {
+        let both =
+            FaultPlan::parse("seed=9,conn_drop=0.3,short_write=0.3").unwrap();
+        let drops_off = FaultPlan::parse("seed=9,short_write=0.3").unwrap();
+        for n in 0..256 {
+            let b = both.decide_at(Site::ClientWrite, n);
+            let d = drops_off.decide_at(Site::ClientWrite, n);
+            assert_eq!(b, d, "draw {n}: {b:?} vs {d:?}");
+        }
+    }
+
+    #[test]
+    fn stall_duration_is_capped() {
+        let p = FaultPlan::parse("stall_ms=999999").unwrap();
+        let f = (0..8).map(|n| p.decide_at(Site::PoolExec, n)).find_map(|f| match f {
+            Fault::Stall(d) => Some(d),
+            _ => None,
+        });
+        assert_eq!(f, Some(Duration::from_millis(MAX_STALL_MS)));
+    }
+
+    #[test]
+    fn short_writes_always_make_progress() {
+        assert_eq!(short_write_len(1), 1);
+        assert_eq!(short_write_len(2), 1);
+        assert_eq!(short_write_len(100), 50);
+    }
+
+    #[test]
+    fn resolve_prefers_the_flag() {
+        assert_eq!(resolve("seed=1"), Some("seed=1".to_string()));
+        // (env fallback exercised in chaos smoke; tests don't mutate env)
+    }
+}

@@ -32,14 +32,17 @@
 //! `repro req` ([`request_once`]); [`Server::start`] binds an ephemeral
 //! port for tests.
 
+pub mod admission;
 pub mod cache;
 pub mod event_loop;
+pub mod faults;
 pub mod inflight;
 pub mod pool;
 pub mod protocol;
 pub mod router;
 pub mod session;
 
+pub use admission::{Admission, AdmissionConfig};
 pub use cache::LruCache;
 pub use inflight::{Inflight, Reply};
 pub use pool::{Pool, SubmitError};
@@ -52,7 +55,7 @@ use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -98,6 +101,21 @@ pub struct ServeConfig {
     /// default) leaves the process-wide dispatch untouched — the
     /// `GOOM_SIMD` env var (or its `off` default) decides.
     pub simd: String,
+    /// Per-connection in-flight cap for admission fairness
+    /// (`--inflight-per-conn`; 0 disables). The effective cap tightens as
+    /// the queue fills — see [`admission`].
+    pub inflight_per_conn: usize,
+    /// Ceiling for the *dynamic* retry_after hint shed responses carry
+    /// (the floor is `retry_after_ms`; see [`admission`]).
+    pub max_retry_ms: u64,
+    /// Inbound client idle deadline in seconds (`--idle-timeout`; 0
+    /// disables): a connection with no outstanding work and no inbound
+    /// bytes for this long is closed — slowloris clients can't pin
+    /// connection slots forever.
+    pub idle_timeout_s: u64,
+    /// Fault-injection plan (`--faults=PLAN`, conf `serve_faults`, env
+    /// `GOOM_FAULTS`); empty = no injection. Grammar in [`faults`].
+    pub faults: String,
 }
 
 impl Default for ServeConfig {
@@ -115,6 +133,10 @@ impl Default for ServeConfig {
             threads: crate::util::par::default_threads(),
             trace_sample: 0,
             simd: String::new(),
+            inflight_per_conn: 64,
+            max_retry_ms: 5_000,
+            idle_timeout_s: 60,
+            faults: String::new(),
         }
     }
 }
@@ -139,7 +161,7 @@ pub struct Server {
     addr: SocketAddr,
     inner: Arc<ServerInner>,
     pool: Arc<Pool<Job>>,
-    shutdown: Arc<AtomicBool>,
+    ctl: Arc<event_loop::LoopCtl>,
     waker: Arc<event_loop::Waker>,
     loop_handle: Option<JoinHandle<()>>,
 }
@@ -154,6 +176,9 @@ impl Server {
             crate::goom::kernel::simd::force_str(&cfg.simd)
                 .map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
         }
+        if let Some(plan) = faults::resolve(&cfg.faults) {
+            faults::install_str(&plan).map_err(|e| anyhow!("--faults: {e}"))?;
+        }
         let (listener, addr) = bind_front(&cfg.host, cfg.port)?;
         let inner = Arc::new(ServerInner::new(cfg.clone()));
         let pool = {
@@ -166,19 +191,19 @@ impl Server {
                 move |batch| session::execute_batch(&inner, batch),
             ))
         };
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let ctl = Arc::new(event_loop::LoopCtl::default());
         let app = event_loop::ServeApp {
             inner: Arc::clone(&inner),
             pool: Arc::clone(&pool),
         };
         let (loop_handle, waker) =
-            event_loop::spawn("goomd-eventloop", listener, app, Arc::clone(&shutdown))
+            event_loop::spawn("goomd-eventloop", listener, app, Arc::clone(&ctl))
                 .context("spawning event loop")?;
         Ok(Server {
             addr,
             inner,
             pool,
-            shutdown,
+            ctl,
             waker,
             loop_handle: Some(loop_handle),
         })
@@ -211,11 +236,28 @@ impl Server {
         // loop can still deliver those responses. Then stop the loop —
         // it makes a final drain-and-flush pass before closing sockets.
         self.pool.shutdown();
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.ctl.shutdown.store(true, Ordering::SeqCst);
         self.waker.wake();
         if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
+    }
+
+    /// Graceful drain (SIGTERM path): stop accepting, let in-flight work
+    /// finish and flush through the reorder buffers, then join the loop.
+    /// No client sees a mid-line disconnect — connections close only once
+    /// quiescent. Consumes the server; `Drop`'s `stop_impl` afterwards is
+    /// a no-op (the pool and loop are already down).
+    pub fn drain(mut self) {
+        self.ctl.drain.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        // Workers finish the queued jobs (no queue clear) and exit; their
+        // completions flow back through the still-running loop.
+        self.pool.drain();
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+        self.ctl.shutdown.store(true, Ordering::SeqCst);
     }
 }
 
@@ -225,20 +267,73 @@ impl Drop for Server {
     }
 }
 
-/// `repro serve`: run the daemon until the process is killed.
+/// SIGTERM latch for graceful drains. Registered via the raw libc
+/// `signal(2)` (the repo's std-only, zero-dependency stance — same
+/// `extern "C"` idiom as the reactor's hand-rolled `poll`); the handler
+/// only stores an `AtomicBool` (async-signal-safe), and the blocking
+/// entry points poll it on their tick.
+pub(crate) mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_term(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the SIGTERM handler (no-op off unix).
+    pub fn install_term_handler() {
+        #[cfg(unix)]
+        {
+            const SIGTERM: i32 = 15;
+            extern "C" {
+                fn signal(signum: i32, handler: usize) -> usize;
+            }
+            unsafe {
+                signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+            }
+        }
+    }
+
+    /// Has SIGTERM arrived since the handler was installed?
+    pub fn term_pending() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+
+    /// Test hook: raise/clear the latch without delivering a signal.
+    #[cfg(test)]
+    pub fn set_for_test(v: bool) {
+        TERM.store(v, Ordering::SeqCst);
+    }
+}
+
+/// `repro serve`: run the daemon until SIGTERM (graceful drain, exit 0)
+/// or the process is killed.
 pub fn serve_blocking(cfg: ServeConfig) -> Result<()> {
+    sig::install_term_handler();
     let server = Server::start(cfg)?;
     println!("goomd listening on {}", server.addr());
     println!("  protocol: newline-delimited JSON — try: {{\"op\":\"info\"}}");
     let started = Instant::now();
+    let mut last_metrics = Instant::now();
     loop {
-        std::thread::sleep(Duration::from_secs(30));
-        let summary = server.metrics_summary();
-        if !summary.is_empty() {
-            println!(
-                "--- goomd metrics ({}s up) ---\n{summary}",
-                started.elapsed().as_secs()
-            );
+        std::thread::sleep(Duration::from_millis(200));
+        if sig::term_pending() {
+            println!("goomd: SIGTERM — draining (no new connections, in-flight work finishes)");
+            server.drain();
+            println!("goomd: drained cleanly after {}s up", started.elapsed().as_secs());
+            return Ok(());
+        }
+        if last_metrics.elapsed() >= Duration::from_secs(30) {
+            last_metrics = Instant::now();
+            let summary = server.metrics_summary();
+            if !summary.is_empty() {
+                println!(
+                    "--- goomd metrics ({}s up) ---\n{summary}",
+                    started.elapsed().as_secs()
+                );
+            }
         }
     }
 }
@@ -295,6 +390,13 @@ pub struct LoadgenConfig {
     /// `GOOM_THREADS`); 0 = one thread per client (full concurrency).
     /// Lower values run clients in waves on a bounded thread set.
     pub threads: usize,
+    /// Chaos-verification mode (`--chaos`): strict lockstep, reconnect on
+    /// any IO error, and every delivered chain result is byte-compared
+    /// against a local recompute — the client-side enforcement of the
+    /// byte-identity-under-faults contract (see `docs/RELIABILITY.md`).
+    /// Requires the target to run the portable kernel flavor (no
+    /// `--simd`) so client and shard compute identical bytes.
+    pub chaos: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -310,6 +412,7 @@ impl Default for LoadgenConfig {
             shared_seed: None,
             pipeline: 1,
             threads: 0,
+            chaos: false,
         }
     }
 }
@@ -328,7 +431,23 @@ pub struct LoadgenReport {
     pub p99_ms: f64,
     /// Extra attempts spent on retry_after_ms backoffs (0 when the daemon
     /// never shed load); the backoff time itself is inside the latencies.
+    /// Alias of [`shed_total`](Self::shed_total), kept for compatibility.
     pub retries: usize,
+    /// Requests the serving tier shed at least once (each shed costs one
+    /// resend after the carried `retry_after_ms` backoff). Overload runs
+    /// show their shedding here explicitly instead of burying it in the
+    /// percentiles.
+    pub shed_total: usize,
+    /// Total milliseconds of retry_after backoff the clients honored —
+    /// with `shed_total`, the observed mean hint: `backoff_ms_total /
+    /// shed_total`.
+    pub backoff_ms_total: u64,
+    /// Chaos mode only: delivered responses whose bytes differed from the
+    /// local recompute. Any nonzero value is a correctness bug — faults
+    /// may shed or delay work, never corrupt it.
+    pub corrupt: usize,
+    /// Chaos mode only: reconnects after fault-injected connection drops.
+    pub reconnects: usize,
     /// Latency breakdown per chain dimension, ascending by dimension
     /// (`--dims` runs mix dimensions in one stream — the aggregate
     /// percentiles hide which dimension pays; this doesn't). Single-`d`
@@ -345,6 +464,11 @@ pub struct DimLatency {
     pub n: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Sheds this dimension's requests absorbed (cost-aware admission
+    /// sheds big dimensions first — visible here, invisible in aggregate).
+    pub shed: usize,
+    /// Backoff milliseconds this dimension's requests slept.
+    pub backoff_ms: u64,
 }
 
 /// Hammer a live daemon with `clients` concurrent connections and report
@@ -358,19 +482,27 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         std::sync::Mutex::new(Vec::with_capacity(clients));
     let t0 = Instant::now();
     crate::util::par::par_for(clients, driver_threads, |client| {
-        let stats = run_client(client as u64, cfg);
+        let stats = if cfg.chaos {
+            run_client_chaos(client as u64, cfg)
+        } else {
+            run_client(client as u64, cfg)
+        };
         collected.lock().expect("loadgen results lock").push(stats);
     });
     let mut latencies: Vec<(usize, f64)> = Vec::new();
     let mut errors = 0usize;
     let mut cached = 0usize;
-    let mut retries = 0usize;
+    let mut sheds: Vec<(usize, u64)> = Vec::new();
+    let mut corrupt = 0usize;
+    let mut reconnects = 0usize;
     for stats in collected.into_inner().expect("loadgen results lock") {
         let stats = stats?;
         latencies.extend(stats.latencies);
         errors += stats.errors;
         cached += stats.cached;
-        retries += stats.retries;
+        sheds.extend(stats.sheds);
+        corrupt += stats.corrupt;
+        reconnects += stats.reconnects;
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
     let total = cfg.clients.max(1) * cfg.requests;
@@ -387,15 +519,35 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         this_run.record(l);
         by_dim.entry(d).or_default().record(l);
     }
+    // Shed/backoff tallies per dimension; a dimension can appear here and
+    // never in the latency map (every attempt shed), so the per-dim rows
+    // come from the union of both key sets.
+    let mut shed_by_dim: std::collections::BTreeMap<usize, (usize, u64)> =
+        std::collections::BTreeMap::new();
+    for &(d, ms) in &sheds {
+        let e = shed_by_dim.entry(d).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += ms;
+    }
+    for &d in shed_by_dim.keys() {
+        by_dim.entry(d).or_default();
+    }
     let per_dim = by_dim
         .iter()
-        .map(|(&d, h)| DimLatency {
-            d,
-            n: h.count() as usize,
-            p50_ms: h.quantile(0.50).unwrap_or(0.0) * 1e3,
-            p99_ms: h.quantile(0.99).unwrap_or(0.0) * 1e3,
+        .map(|(&d, h)| {
+            let (shed, backoff_ms) = shed_by_dim.get(&d).copied().unwrap_or((0, 0));
+            DimLatency {
+                d,
+                n: h.count() as usize,
+                p50_ms: h.quantile(0.50).unwrap_or(0.0) * 1e3,
+                p99_ms: h.quantile(0.99).unwrap_or(0.0) * 1e3,
+                shed,
+                backoff_ms,
+            }
         })
         .collect();
+    let shed_total = sheds.len();
+    let backoff_ms_total: u64 = sheds.iter().map(|&(_, ms)| ms).sum();
     let pct = |q: f64| this_run.quantile(q).unwrap_or(0.0) * 1e3;
     let report = LoadgenReport {
         total_requests: total,
@@ -407,14 +559,22 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         p50_ms: pct(0.50),
         p95_ms: pct(0.95),
         p99_ms: pct(0.99),
-        retries,
+        retries: shed_total,
+        shed_total,
+        backoff_ms_total,
+        corrupt,
+        reconnects,
         per_dim,
     };
     metrics.incr("loadgen_requests", total as u64);
     metrics.incr("loadgen_ok", ok as u64);
     metrics.incr("loadgen_errors", errors as u64);
     metrics.incr("loadgen_cached", cached as u64);
-    metrics.incr("loadgen_retries", retries as u64);
+    metrics.incr("loadgen_retries", shed_total as u64);
+    metrics.incr("loadgen_shed", shed_total as u64);
+    metrics.incr("loadgen_backoff_ms", backoff_ms_total);
+    metrics.incr("loadgen_corrupt", corrupt as u64);
+    metrics.incr("loadgen_reconnects", reconnects as u64);
     metrics.gauge("loadgen_throughput_rps", report.throughput_rps);
     metrics.gauge("loadgen_p50_ms", report.p50_ms);
     metrics.gauge("loadgen_p95_ms", report.p95_ms);
@@ -429,7 +589,23 @@ struct ClientStats {
     latencies: Vec<(usize, f64)>,
     errors: usize,
     cached: usize,
-    retries: usize,
+    /// One `(dimension, backoff_ms)` entry per shed the client honored.
+    sheds: Vec<(usize, u64)>,
+    corrupt: usize,
+    reconnects: usize,
+}
+
+impl ClientStats {
+    fn new(cap: usize) -> Self {
+        ClientStats {
+            latencies: Vec::with_capacity(cap),
+            errors: 0,
+            cached: 0,
+            sheds: Vec::new(),
+            corrupt: 0,
+            reconnects: 0,
+        }
+    }
 }
 
 /// How one response settles a request on the client side.
@@ -441,6 +617,13 @@ enum Settle {
 }
 
 fn read_settle(reader: &mut BufReader<TcpStream>) -> Result<Settle> {
+    Ok(read_settle_full(reader)?.0)
+}
+
+/// Like [`read_settle`], but also hands back the serialized `result`
+/// payload of an ok response so chaos mode can byte-compare it against a
+/// local recompute.
+fn read_settle_full(reader: &mut BufReader<TcpStream>) -> Result<(Settle, Option<String>)> {
     let mut resp = String::new();
     if reader.read_line(&mut resp)? == 0 {
         return Err(anyhow!("server closed the connection"));
@@ -449,11 +632,12 @@ fn read_settle(reader: &mut BufReader<TcpStream>) -> Result<Settle> {
         .map_err(|e| anyhow!("unparseable response: {e}"))?;
     if doc.get("ok").and_then(Json::as_bool).unwrap_or(false) {
         let cached = doc.get("cached").and_then(Json::as_bool) == Some(true);
-        return Ok(Settle::Ok { cached });
+        let result = doc.get("result").map(json::write);
+        return Ok((Settle::Ok { cached }, result));
     }
     match doc.get("retry_after_ms").and_then(Json::as_f64) {
-        Some(ms) => Ok(Settle::Retry((ms as u64).clamp(1, 1000))),
-        None => Ok(Settle::Fail),
+        Some(ms) => Ok((Settle::Retry((ms as u64).clamp(1, 1000)), None)),
+        None => Ok((Settle::Fail, None)),
     }
 }
 
@@ -466,12 +650,7 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         .with_context(|| format!("connecting to {}", cfg.addr))?;
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
-    let mut stats = ClientStats {
-        latencies: Vec::with_capacity(cfg.requests),
-        errors: 0,
-        cached: 0,
-        retries: 0,
-    };
+    let mut stats = ClientStats::new(cfg.requests);
     let line_for = |r: usize| {
         let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
         let d = if cfg.dims.is_empty() {
@@ -521,7 +700,7 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
                     stats.errors += 1;
                     break;
                 }
-                stats.retries += 1;
+                stats.sheds.push((d, backoff));
                 std::thread::sleep(Duration::from_millis(backoff));
                 attempts += 1;
                 writer.write_all(line.as_bytes())?;
@@ -540,6 +719,106 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
                     }
                 }
             }
+        }
+    }
+    Ok(stats)
+}
+
+/// Chaos-verification client (`--chaos`): strict lockstep (one request in
+/// flight), reconnect on any IO error (fault plans drop connections), and
+/// byte-compare every delivered chain result against a local recompute.
+/// The sharp spec this enforces: faults may shed or delay a response, but
+/// every response actually *delivered* must be byte-identical to the
+/// fault-free run. Mismatches count as `corrupt`.
+fn run_client_chaos(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
+    let connect = |attempt_budget: &mut usize| -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>)> {
+        // Bounded connect retries: a fault-injected or draining server may
+        // refuse for a moment; a dead one must not hang the run.
+        loop {
+            match TcpStream::connect(&cfg.addr) {
+                Ok(stream) => {
+                    let reader =
+                        BufReader::new(stream.try_clone().context("cloning stream")?);
+                    return Ok((reader, BufWriter::new(stream)));
+                }
+                Err(e) => {
+                    if *attempt_budget == 0 {
+                        return Err(anyhow!("connecting to {}: {e}", cfg.addr));
+                    }
+                    *attempt_budget -= 1;
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+    let mut connect_budget = 100usize;
+    let mut stats = ClientStats::new(cfg.requests);
+    let mut conn: Option<(BufReader<TcpStream>, BufWriter<TcpStream>)> = None;
+    // Local recompute cache: shared-seed runs verify many deliveries
+    // against one computation.
+    let mut expected: std::collections::HashMap<(usize, u64), String> =
+        std::collections::HashMap::new();
+    for r in 0..cfg.requests {
+        let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
+        let d = if cfg.dims.is_empty() {
+            cfg.d
+        } else {
+            cfg.dims[(client as usize + r) % cfg.dims.len()]
+        };
+        let line = protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed);
+        let t = Instant::now();
+        let mut attempts = 0usize;
+        let delivered: Option<(bool, Option<String>)> = loop {
+            attempts += 1;
+            if attempts > 50 {
+                break None;
+            }
+            if conn.is_none() {
+                conn = Some(connect(&mut connect_budget)?);
+                if r > 0 || attempts > 1 {
+                    stats.reconnects += 1;
+                }
+            }
+            let (reader, writer) = conn.as_mut().expect("chaos conn");
+            let io = (|| -> Result<(Settle, Option<String>)> {
+                writer.write_all(line.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                read_settle_full(reader)
+            })();
+            match io {
+                // IO error: the fault plan (or a drain) cut the
+                // connection mid-exchange. Drop it and replay the request
+                // on a fresh one — the serving tiers are stateless per
+                // line, so a replay is always safe.
+                Err(_) => conn = None,
+                Ok((Settle::Ok { cached }, result)) => break Some((cached, result)),
+                Ok((Settle::Retry(ms), _)) => {
+                    stats.sheds.push((d, ms));
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Ok((Settle::Fail, _)) => {
+                    stats.errors += 1;
+                    break None;
+                }
+            }
+        };
+        let Some((cached, result)) = delivered else {
+            if attempts > 50 {
+                stats.errors += 1;
+            }
+            continue;
+        };
+        stats.latencies.push((d, t.elapsed().as_secs_f64()));
+        stats.cached += usize::from(cached);
+        let want = match expected.entry((d, seed)) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(session::local_chain_result(&cfg.method, d, cfg.steps, seed)?)
+            }
+        };
+        if result.as_deref() != Some(want.as_str()) {
+            stats.corrupt += 1;
         }
     }
     Ok(stats)
@@ -701,6 +980,7 @@ mod tests {
             shared_seed: None,
             pipeline: 1,
             threads: 0,
+            chaos: false,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.total_requests, 24);
@@ -748,6 +1028,7 @@ mod tests {
             shared_seed: None,
             pipeline: 1,
             threads: 0,
+            chaos: false,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.ok, 12);
@@ -765,5 +1046,74 @@ mod tests {
             assert!(p.p50_ms > 0.0 && p.p50_ms <= p.p99_ms);
         }
         server.stop();
+    }
+
+    #[test]
+    fn chaos_loadgen_verifies_delivered_bytes_against_local_recompute() {
+        // Against a healthy (fault-free) server the chaos client must
+        // deliver everything, verify everything, and count zero corrupt —
+        // the baseline the chaos-smoke CI job perturbs with a fault plan.
+        let server = Server::start(test_config()).unwrap();
+        let mut metrics = Metrics::new();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 2,
+            requests: 4,
+            d: 4,
+            steps: 30,
+            chaos: true,
+            ..LoadgenConfig::default()
+        };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.ok, 8);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.corrupt, 0, "fault-free run must verify byte-identical");
+        assert_eq!(report.shed_total, report.retries, "retries aliases shed_total");
+        assert_eq!(report.backoff_ms_total, 0);
+        server.stop();
+    }
+
+    #[test]
+    fn graceful_drain_finishes_inflight_work_before_closing() {
+        // A request written just before drain() must still get its full
+        // response line: drain stops accepts but lets in-flight work
+        // finish and flush before connections close.
+        let server = Server::start(test_config()).unwrap();
+        let addr = server.addr();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = BufWriter::new(stream.try_clone().unwrap());
+        writer
+            .write_all(protocol::encode_chain_request("goomc64", 6, 400, 9).as_bytes())
+            .unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        // Let the reactor pick the line up — bytes still in the kernel
+        // buffer at drain time are a race the wire protocol can't see.
+        std::thread::sleep(Duration::from_millis(100));
+        server.drain();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        assert!(
+            reader.read_line(&mut resp).unwrap() > 0,
+            "drain must deliver the in-flight response, not cut the line"
+        );
+        let doc = json::parse(resp.trim()).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+        // After the drain the listener is gone: new connections fail (the
+        // OS may accept then reset; either way no service).
+        let refused = match TcpStream::connect(addr) {
+            Err(_) => true,
+            Ok(mut s) => {
+                use std::io::Read;
+                s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+                if s.write_all(b"{\"op\":\"info\"}\n").is_err() {
+                    true
+                } else {
+                    let mut buf = [0u8; 1];
+                    !matches!(s.read(&mut buf), Ok(n) if n > 0)
+                }
+            }
+        };
+        assert!(refused, "post-drain connections must not be served");
     }
 }

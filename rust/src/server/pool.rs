@@ -125,6 +125,24 @@ impl<J: Send + 'static> Pool<J> {
             let _ = h.join();
         }
     }
+
+    /// Graceful twin of [`shutdown`](Self::shutdown): stop accepting work
+    /// but keep every queued job. Workers drain the queue to empty (the
+    /// loop only observes the shutdown flag once the queue is dry), then
+    /// exit; this joins them. Idempotent, and a later `shutdown()` (e.g.
+    /// from `Drop`) finds nothing left to do.
+    pub fn drain(&self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            st.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("pool workers lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
 }
 
 impl<J: Send + 'static> Drop for Pool<J> {
@@ -164,6 +182,16 @@ where
                 st = shared.available.wait(st).expect("pool condvar");
             }
         };
+        // Fault seam: a `stall_ms` plan delays execution (simulating a
+        // slow kernel or a GC'd host) without touching the result — jobs
+        // can only be late here, never wrong or lost.
+        if super::faults::enabled() {
+            if let super::faults::Fault::Stall(d) =
+                super::faults::decide(super::faults::Site::PoolExec)
+            {
+                std::thread::sleep(d);
+            }
+        }
         exec(batch);
     }
 }
@@ -335,6 +363,46 @@ mod tests {
         for _ in 0..5 {
             let (_, size) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
             assert!(size <= 2, "batch_max=2 violated: {size}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_queued_jobs_instead_of_dropping_them() {
+        let pool = pool_for_tests(1, 64, 1);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (started_tx, started_rx) = mpsc::channel();
+        // Pin the worker, pile up queued jobs behind it.
+        pool.try_submit(TestJob {
+            id: 0,
+            key: None,
+            gate: Some(gate_rx),
+            started: Some(started_tx),
+            reply: tx.clone(),
+        })
+        .map_err(|_| "rejected")
+        .unwrap();
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        for id in 1..=3 {
+            pool.try_submit(plain_job(id, &tx)).map_err(|_| "rejected").unwrap();
+        }
+        // Release the gate from a helper thread so drain() can join.
+        let release = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            gate_tx.send(()).unwrap();
+        });
+        pool.drain();
+        release.join().unwrap();
+        // Every job ran — drain keeps the queue, unlike shutdown.
+        let mut seen: Vec<usize> =
+            (0..4).map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap().0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        // New work is refused, and a follow-up shutdown is a no-op.
+        match pool.try_submit(plain_job(9, &tx)) {
+            Err(SubmitError::Shutdown(_)) => {}
+            _ => panic!("expected Shutdown rejection after drain"),
         }
         pool.shutdown();
     }

@@ -369,6 +369,20 @@ impl Request {
             _ => None,
         }
     }
+
+    /// Admission cost in the [`MAX_CHAIN_WORK`] currency (`d³ · steps` —
+    /// each chain step is one d×d LMME at ~2·d³ FLOPs). Scans charge one
+    /// d×d combine per supplied matrix; LLE runs on tiny (≈3-dim) tangent
+    /// systems, so each step is charged at the smallest cube that bounds
+    /// it. Introspection ops are free — they never reach the pool.
+    pub fn work_units(&self) -> u128 {
+        match self {
+            Request::Chain(c) => (c.d as u128).pow(3) * c.steps as u128,
+            Request::Scan(s) => (s.d as u128).pow(3) * s.mats.len() as u128,
+            Request::Lle(l) => 27 * (l.steps + l.burn) as u128,
+            Request::Info | Request::Metrics | Request::Trace { .. } => 0,
+        }
+    }
 }
 
 /// Canonical keys longer than this are replaced by a 128-bit digest
@@ -674,6 +688,25 @@ mod tests {
         assert!(s2.batch_key().is_some());
         assert_ne!(s2.batch_key(), s3.batch_key());
         assert_ne!(s2.batch_key(), a.batch_key());
+    }
+
+    #[test]
+    fn work_units_charge_in_the_chain_budget_currency() {
+        let big = parse_line(r#"{"op":"chain","d":128,"steps":200000}"#).unwrap();
+        assert_eq!(big.work_units(), MAX_CHAIN_WORK, "ceiling chain = full budget");
+        let small = parse_line(r#"{"op":"chain","d":8,"steps":1000}"#).unwrap();
+        assert_eq!(small.work_units(), 512 * 1000);
+        assert!(big.work_units() > 100_000 * small.work_units() / 128);
+        let mut rng = rng_from_seed(3);
+        let mats: Vec<GoomMat<f64>> =
+            (0..3).map(|_| GoomMat::randn(2, 2, &mut rng)).collect();
+        let scan = parse_line(&encode_scan_request(&mats, 4)).unwrap();
+        assert_eq!(scan.work_units(), 8 * 3);
+        let lle = parse_line(r#"{"op":"lle","system":"lorenz","steps":100,"burn":50}"#)
+            .unwrap();
+        assert_eq!(lle.work_units(), 27 * 150);
+        assert_eq!(Request::Info.work_units(), 0);
+        assert_eq!(Request::Metrics.work_units(), 0);
     }
 
     #[test]

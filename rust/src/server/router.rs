@@ -31,16 +31,28 @@
 //! rendezvous ranking (which costs cache affinity but preserves
 //! availability) — the same one-retry ladder the blocking relay walked,
 //! so responses stay byte-identical to it.
+//!
+//! Layered *above* that ladder (never changing its per-request behavior or
+//! error bytes) is per-shard health tracking: a [`Breaker`] per backend
+//! trips open after [`FAILURE_THRESHOLD`] consecutive failures, so a dead
+//! shard stops eating a connect timeout from every request ranked onto it.
+//! Open shards are skipped during ranking (requests fail over immediately),
+//! re-probed with a dedicated `info` request after a jittered exponential
+//! backoff (half-open), and restored to the rotation the moment a probe
+//! answers. Breaker state is exported under `"health"` in the router's
+//! `metrics` op.
 
-use super::event_loop::{self, App, Core, FrontConfig, ReactorStats};
+use super::admission::{Admission, AdmissionConfig};
+use super::event_loop::{self, App, Core, FrontConfig, LoopCtl, ReactorStats};
+use super::faults;
 use super::protocol::{attach_id, err_line, num, num_or_null, obj, ok_line, Request};
 use crate::coordinator::Metrics;
 use crate::obs::{self, ReqCtx};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -64,6 +76,15 @@ pub struct RouterConfig {
     /// gate untouched (tracing stays off unless something else opened it);
     /// N opens it to 1-in-N.
     pub trace_sample: u64,
+    /// Per-connection in-flight fairness cap (0 disables): past it, the
+    /// router sheds rather than letting one pipelining client monopolize
+    /// the relay.
+    pub inflight_per_conn: usize,
+    /// Close inbound client connections idle this long (0 disables).
+    pub idle_timeout_s: u64,
+    /// Fault-injection plan (`--faults=...`); empty falls back to the
+    /// `GOOM_FAULTS` env var, and "none"/"off" disables either way.
+    pub faults: String,
 }
 
 impl Default for RouterConfig {
@@ -76,6 +97,9 @@ impl Default for RouterConfig {
             max_connections: 256,
             retry_after_ms: 100,
             trace_sample: 0,
+            inflight_per_conn: 64,
+            idle_timeout_s: 60,
+            faults: String::new(),
         }
     }
 }
@@ -127,7 +151,7 @@ struct RouterInner {
 pub struct Router {
     addr: SocketAddr,
     inner: Arc<RouterInner>,
-    shutdown: Arc<AtomicBool>,
+    ctl: Arc<LoopCtl>,
     waker: Arc<event_loop::Waker>,
     loop_handle: Option<JoinHandle<()>>,
 }
@@ -143,18 +167,21 @@ impl Router {
         if cfg.trace_sample != 0 {
             obs::set_sample(cfg.trace_sample);
         }
+        if let Some(plan) = faults::resolve(&cfg.faults) {
+            faults::install_str(&plan).map_err(|e| anyhow!("--faults: {e}"))?;
+        }
         let inner = Arc::new(RouterInner {
             cfg,
             metrics: Mutex::new(Metrics::new()),
             reactor: Arc::new(ReactorStats::default()),
             started: Instant::now(),
         });
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let ctl = Arc::new(LoopCtl::default());
         let app = RelayApp::new(Arc::clone(&inner));
         let (loop_handle, waker) =
-            event_loop::spawn("goomd-router-reactor", listener, app, Arc::clone(&shutdown))
+            event_loop::spawn("goomd-router-reactor", listener, app, Arc::clone(&ctl))
                 .context("spawning router reactor")?;
-        Ok(Router { addr, inner, shutdown, waker, loop_handle: Some(loop_handle) })
+        Ok(Router { addr, inner, ctl, waker, loop_handle: Some(loop_handle) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -176,8 +203,21 @@ impl Router {
         self.stop_impl();
     }
 
+    /// Graceful drain: stop accepting, relay every in-flight request to
+    /// completion and flush every reorder buffer, then join the reactor.
+    /// Clients that are idle (owed nothing) are closed immediately.
+    pub fn drain(mut self) {
+        self.ctl.drain.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+        // Everything is down; make the Drop-path stop a no-op.
+        self.ctl.shutdown.store(true, Ordering::SeqCst);
+    }
+
     fn stop_impl(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.ctl.shutdown.store(true, Ordering::SeqCst);
         self.waker.wake();
         if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
@@ -191,8 +231,9 @@ impl Drop for Router {
     }
 }
 
-/// `repro route`: run the router until the process is killed.
+/// `repro route`: run the router until SIGTERM (graceful drain) or kill.
 pub fn route_blocking(cfg: RouterConfig) -> Result<()> {
+    super::sig::install_term_handler();
     let router = Router::start(cfg)?;
     println!("goomd-router listening on {}", router.addr());
     println!("  backends:");
@@ -200,15 +241,159 @@ pub fn route_blocking(cfg: RouterConfig) -> Result<()> {
         println!("    {b}");
     }
     let started = Instant::now();
+    let mut last_metrics = Instant::now();
     loop {
-        std::thread::sleep(Duration::from_secs(30));
-        let summary = router.metrics_summary();
-        if !summary.is_empty() {
-            println!(
-                "--- router metrics ({}s up) ---\n{summary}",
-                started.elapsed().as_secs()
-            );
+        std::thread::sleep(Duration::from_millis(200));
+        if super::sig::term_pending() {
+            println!("SIGTERM: draining (in-flight relays will complete)...");
+            router.drain();
+            println!("drain complete, exiting");
+            return Ok(());
         }
+        if last_metrics.elapsed() >= Duration::from_secs(30) {
+            last_metrics = Instant::now();
+            let summary = router.metrics_summary();
+            if !summary.is_empty() {
+                println!(
+                    "--- router metrics ({}s up) ---\n{summary}",
+                    started.elapsed().as_secs()
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- shard breakers --
+
+/// Consecutive failures that trip a shard's breaker open. Three keeps the
+/// single-failure retry ladder exactly as it was (one blip never ejects a
+/// shard — the e2e failover tests depend on those response bytes).
+const FAILURE_THRESHOLD: u32 = 3;
+/// First open interval; doubles per consecutive re-open.
+const BREAKER_BASE_BACKOFF: Duration = Duration::from_millis(200);
+/// Backoff growth cap.
+const BREAKER_MAX_BACKOFF: Duration = Duration::from_secs(10);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    /// Healthy: ranked normally.
+    Closed,
+    /// Ejected: skipped during ranking until `until`, then probed.
+    Open,
+    /// Probe in flight: still skipped; the probe's fate decides.
+    HalfOpen,
+}
+
+/// Per-shard circuit breaker. Pure state machine — the relay app drives it
+/// from connect results, connection deaths, response lines, and probes.
+struct Breaker {
+    state: BreakerState,
+    /// When `Open`, the instant the next probe is allowed.
+    reopen_at: Instant,
+    /// Current open interval (before jitter); doubles per re-open.
+    backoff: Duration,
+    consecutive_failures: u32,
+    opens_total: u64,
+    recoveries_total: u64,
+}
+
+impl Breaker {
+    fn new() -> Self {
+        Self {
+            state: BreakerState::Closed,
+            reopen_at: Instant::now(),
+            backoff: BREAKER_BASE_BACKOFF,
+            consecutive_failures: 0,
+            opens_total: 0,
+            recoveries_total: 0,
+        }
+    }
+
+    /// Deterministic jitter (±25% of the interval, derived from the shard
+    /// index and open count) so a fleet of routers that ejected a shard
+    /// together does not re-probe it in lockstep.
+    fn jittered(&self, idx: usize) -> Duration {
+        let quarter = (self.backoff.as_millis() as u64 / 4).max(1);
+        let h = fnv1a64(&[&(idx as u64).to_le_bytes(), &self.opens_total.to_le_bytes()]);
+        let off = (h % (2 * quarter)) as i64 - quarter as i64;
+        let ms = self.backoff.as_millis() as i64 + off;
+        Duration::from_millis(ms.max(1) as u64)
+    }
+
+    /// A failure toward this shard (connect refused, connection died).
+    /// Returns `true` when this failure tripped the breaker open.
+    fn on_failure(&mut self, idx: usize) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= FAILURE_THRESHOLD {
+                    self.opens_total += 1;
+                    self.reopen_at = Instant::now() + self.jittered(idx);
+                    self.state = BreakerState::Open;
+                    return true;
+                }
+                false
+            }
+            // A half-open probe failure re-opens with a doubled interval.
+            BreakerState::HalfOpen => {
+                self.consecutive_failures += 1;
+                self.opens_total += 1;
+                self.backoff = (self.backoff * 2).min(BREAKER_MAX_BACKOFF);
+                self.reopen_at = Instant::now() + self.jittered(idx);
+                self.state = BreakerState::Open;
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// A successful response from this shard (relay or probe).
+    /// Returns `true` when it closed a non-closed breaker (a recovery).
+    fn on_success(&mut self) -> bool {
+        let recovered = self.state != BreakerState::Closed;
+        if recovered {
+            self.recoveries_total += 1;
+        }
+        self.state = BreakerState::Closed;
+        self.consecutive_failures = 0;
+        self.backoff = BREAKER_BASE_BACKOFF;
+        recovered
+    }
+
+    /// Ranking-time availability. `Open` past its deadline asks for a
+    /// probe (`HalfOpen`) — the caller launches it; traffic still skips.
+    fn available(&self) -> bool {
+        self.state == BreakerState::Closed
+    }
+
+    fn due_for_probe(&self, now: Instant) -> bool {
+        self.state == BreakerState::Open && now >= self.reopen_at
+    }
+
+    fn state_str(&self) -> &'static str {
+        match self.state {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let now = Instant::now();
+        let remaining_ms = match self.state {
+            BreakerState::Open => {
+                self.reopen_at.saturating_duration_since(now).as_millis() as f64
+            }
+            _ => 0.0,
+        };
+        obj(vec![
+            ("state", Json::Str(self.state_str().to_string())),
+            ("consecutive_failures", num(self.consecutive_failures as f64)),
+            ("opens_total", num(self.opens_total as f64)),
+            ("recoveries_total", num(self.recoveries_total as f64)),
+            ("backoff_ms", num(self.backoff.as_millis() as f64)),
+            ("reopen_in_ms", num(remaining_ms)),
+        ])
     }
 }
 
@@ -255,19 +440,92 @@ pub struct RelayApp {
     /// relays). `goomd` answers strictly in request order per connection,
     /// so the front of the queue always owns the next response line.
     pending: HashMap<u64, (usize, VecDeque<RelayEntry>)>,
+    /// Per-backend circuit breakers, indexed like `cfg.backends`. Reactor
+    /// apps are single-threaded, so no lock.
+    breakers: Vec<Breaker>,
+    /// Half-open probe connections: reactor backend-conn id → backend
+    /// index. Checked before `pending`, so a probe's `info` response is
+    /// never mistaken for a relayed answer.
+    probes: HashMap<u64, usize>,
+    /// Per-connection fairness (shared policy with the shard tier; the
+    /// router has no work queue, so cost/queue signals stay idle).
+    admission: Admission,
 }
 
 impl RelayApp {
     fn new(inner: Arc<RouterInner>) -> Self {
-        Self { inner, live: HashMap::new(), pending: HashMap::new() }
+        let breakers = inner.cfg.backends.iter().map(|_| Breaker::new()).collect();
+        let admission = Admission::new(AdmissionConfig {
+            inflight_per_conn: inner.cfg.inflight_per_conn,
+            base_retry_ms: inner.cfg.retry_after_ms,
+            ..AdmissionConfig::default()
+        });
+        Self {
+            inner,
+            live: HashMap::new(),
+            pending: HashMap::new(),
+            breakers,
+            probes: HashMap::new(),
+            admission,
+        }
+    }
+
+    /// Launch half-open probes for every open breaker past its backoff
+    /// deadline: a dedicated connection carrying one `info` request, so a
+    /// recovering shard is tested without betting client traffic on it.
+    fn tick_breakers(&mut self, core: &mut Core) {
+        let now = Instant::now();
+        for idx in 0..self.breakers.len() {
+            if !self.breakers[idx].due_for_probe(now) {
+                continue;
+            }
+            self.breakers[idx].state = BreakerState::HalfOpen;
+            match core.backend_open(&self.inner.cfg.backends[idx]) {
+                Ok(bid) => {
+                    core.backend_send(bid, "{\"op\":\"info\"}");
+                    self.probes.insert(bid, idx);
+                    self.inner
+                        .metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .incr("breaker_probes", 1);
+                }
+                Err(_) => {
+                    // Still down: re-open with a doubled interval.
+                    self.breakers[idx].on_failure(idx);
+                }
+            }
+        }
+    }
+
+    /// Failure bookkeeping toward backend `idx` (also tallies opens).
+    fn note_backend_failure(&mut self, idx: usize) {
+        if self.breakers[idx].on_failure(idx) {
+            let mut m = self.inner.metrics.lock().expect("metrics lock");
+            m.incr("breaker_opens", 1);
+            m.incr_labeled("breaker_open", &self.inner.cfg.backends[idx], 1);
+        }
+    }
+
+    /// Success bookkeeping toward backend `idx`.
+    fn note_backend_success(&mut self, idx: usize) {
+        if self.breakers[idx].on_success() {
+            self.inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("breaker_recoveries", 1);
+        }
     }
 
     /// Send `entry` to the best backend it has not yet exhausted, opening
     /// a loop-managed connection when none is live. Immediate connect
     /// errors consume attempts synchronously; asynchronous failures
     /// (refused/blackholed connects, mid-flight deaths) consume them via
-    /// [`RelayApp::on_backend_down`]. Exhausting the ranking answers the
-    /// client with the same no-backend error line the blocking relay sent.
+    /// [`RelayApp::on_backend_down`]. Backends with a tripped breaker are
+    /// skipped outright — an instant failover that consumes no retry
+    /// attempts. Exhausting the ranking answers the client with the same
+    /// no-backend error line the blocking relay sent.
     fn forward(&mut self, core: &mut Core, mut entry: RelayEntry) {
         loop {
             let Some(&idx) = entry.ranked.get(entry.rank_pos) else {
@@ -282,6 +540,16 @@ impl RelayApp {
                 core.complete(entry.conn, entry.seq, with_id(line, &entry.id));
                 return;
             };
+            if !self.breakers[idx].available() {
+                self.inner
+                    .metrics
+                    .lock()
+                    .expect("metrics lock")
+                    .incr("breaker_skips", 1);
+                entry.rank_pos += 1;
+                entry.tries = 0;
+                continue;
+            }
             let pooled = self.live.get(&idx).copied().filter(|b| core.backend_alive(*b));
             let bid = match pooled {
                 Some(b) => b,
@@ -292,6 +560,7 @@ impl RelayApp {
                         b
                     }
                     Err(_) => {
+                        self.note_backend_failure(idx);
                         entry.tries += 1;
                         if entry.tries >= 2 {
                             entry.rank_pos += 1;
@@ -316,6 +585,7 @@ impl App for RelayApp {
             max_request_bytes: self.inner.cfg.max_request_bytes,
             max_connections: self.inner.cfg.max_connections,
             retry_after_ms: self.inner.cfg.retry_after_ms,
+            idle_timeout: Duration::from_secs(self.inner.cfg.idle_timeout_s),
         }
     }
 
@@ -328,13 +598,17 @@ impl App for RelayApp {
     }
 
     fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
+        // Every request is a breaker tick: open shards past their backoff
+        // get their half-open probe before this request ranks.
+        self.tick_breakers(core);
         match req {
             Request::Info => {
                 let line = ok_line(info_json(&self.inner), false);
                 core.complete(conn, seq, with_id(line, &ctx.id));
             }
             Request::Metrics => {
-                let line = ok_line(metrics_json(&self.inner), false);
+                let line =
+                    ok_line(metrics_json(&self.inner, &self.breakers, &self.admission), false);
                 core.complete(conn, seq, with_id(line, &ctx.id));
             }
             Request::Trace { limit } => {
@@ -344,6 +618,25 @@ impl App for RelayApp {
                 core.complete(conn, seq, with_id(line, &ctx.id));
             }
             compute => {
+                // Per-client fairness, same policy as the shard tier: a
+                // connection pipelining past its cap sheds here instead of
+                // monopolizing every shard FIFO downstream.
+                let conn_inflight = core.conn_inflight(conn);
+                if !self.admission.admit_conn(conn_inflight, 0, 1) {
+                    let ms = {
+                        let mut m = self.inner.metrics.lock().expect("metrics lock");
+                        m.incr("fairness_rejects", 1);
+                        self.admission.retry_after_ms(0, 1, &m)
+                    };
+                    let line = err_line(
+                        &format!(
+                            "router busy: {conn_inflight} requests in flight on this connection"
+                        ),
+                        Some(ms),
+                    );
+                    core.complete(conn, seq, with_id(line, &ctx.id));
+                    return;
+                }
                 let key = compute
                     .canonical_key()
                     .expect("compute requests always have a canonical key");
@@ -397,6 +690,14 @@ impl App for RelayApp {
     }
 
     fn on_backend_line(&mut self, core: &mut Core, backend: u64, line: String) {
+        if let Some(idx) = self.probes.remove(&backend) {
+            // Half-open probe answered: the shard is back. Close the probe
+            // connection (relay traffic opens its own) and rejoin it to
+            // the rotation.
+            core.backend_close(backend);
+            self.note_backend_success(idx);
+            return;
+        }
         let (idx, entry) = match self.pending.get_mut(&backend) {
             None => return, // line from a connection already failed over
             Some((idx, queue)) => (*idx, queue.pop_front()),
@@ -428,10 +729,16 @@ impl App for RelayApp {
                 m.incr("route_failovers", 1);
             }
         }
+        self.note_backend_success(idx);
         core.complete(entry.conn, entry.seq, line);
     }
 
     fn on_backend_down(&mut self, core: &mut Core, backend: u64) {
+        if let Some(idx) = self.probes.remove(&backend) {
+            // Half-open probe connection died: still down, back off harder.
+            self.note_backend_failure(idx);
+            return;
+        }
         let Some((idx, queue)) = self.pending.remove(&backend) else { return };
         if self.live.get(&idx) == Some(&backend) {
             self.live.remove(&idx);
@@ -442,6 +749,9 @@ impl App for RelayApp {
                 .lock()
                 .expect("metrics lock")
                 .incr("backend_disconnects", 1);
+            // Dying while owing responses is a health strike; an idle
+            // pooled connection closing (shard restart, idle reap) is not.
+            self.note_backend_failure(idx);
         }
         // Walk the one-retry ladder for everything the dead connection
         // owed, preserving request order (retries of a batch share the
@@ -489,7 +799,7 @@ fn info_json(inner: &Arc<RouterInner>) -> Json {
     ])
 }
 
-fn metrics_json(inner: &Arc<RouterInner>) -> Json {
+fn metrics_json(inner: &Arc<RouterInner>, breakers: &[Breaker], admission: &Admission) -> Json {
     let m = inner.metrics.lock().expect("metrics lock");
     let counters: BTreeMap<String, Json> = m
         .counters_iter()
@@ -499,11 +809,27 @@ fn metrics_json(inner: &Arc<RouterInner>) -> Json {
         .gauges_iter()
         .map(|(k, v)| (k.to_string(), num_or_null(v)))
         .collect();
-    obj(vec![
+    // Per-shard breaker state, keyed by backend address: the `"health"`
+    // section the chaos-smoke job (and operators) watch for ejection and
+    // half-open recovery.
+    let health: BTreeMap<String, Json> = inner
+        .cfg
+        .backends
+        .iter()
+        .zip(breakers.iter())
+        .map(|(addr, b)| (addr.clone(), b.to_json()))
+        .collect();
+    let mut pairs = vec![
         ("counters", Json::Obj(counters)),
         ("gauges", Json::Obj(gauges)),
         ("reactor", inner.reactor.to_json()),
-    ])
+        ("health", Json::Obj(health)),
+        ("admission", admission.to_json(0, 1)),
+    ];
+    if faults::enabled() {
+        pairs.push(("faults", faults::stats_json()));
+    }
+    obj(pairs)
 }
 
 #[cfg(test)]
@@ -512,6 +838,68 @@ mod tests {
 
     fn backends(n: usize) -> Vec<String> {
         (0..n).map(|i| format!("127.0.0.1:{}", 7100 + i)).collect()
+    }
+
+    #[test]
+    fn breaker_trips_only_after_consecutive_failures_and_success_resets() {
+        let mut b = Breaker::new();
+        // Two strikes and a save: still closed — single blips never eject
+        // a shard, which keeps the one-retry failover ladder's observable
+        // behavior (and its e2e-asserted response bytes) intact.
+        assert!(!b.on_failure(0));
+        assert!(!b.on_failure(0));
+        b.on_success();
+        assert!(b.available());
+        assert_eq!(b.consecutive_failures, 0);
+        // Three consecutive: open, not available, probe due after backoff.
+        assert!(!b.on_failure(0));
+        assert!(!b.on_failure(0));
+        assert!(b.on_failure(0), "third consecutive failure trips the breaker");
+        assert!(!b.available());
+        assert_eq!(b.opens_total, 1);
+        assert!(!b.due_for_probe(Instant::now()), "backoff has not elapsed");
+        assert!(b.due_for_probe(Instant::now() + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn breaker_backoff_doubles_on_failed_probe_and_caps() {
+        let mut b = Breaker::new();
+        for _ in 0..FAILURE_THRESHOLD {
+            b.on_failure(1);
+        }
+        assert_eq!(b.backoff, BREAKER_BASE_BACKOFF);
+        // Each failed half-open probe doubles the interval, up to the cap.
+        let mut prev = b.backoff;
+        for _ in 0..10 {
+            b.state = BreakerState::HalfOpen;
+            b.on_failure(1);
+            assert!(b.backoff >= prev);
+            assert!(b.backoff <= BREAKER_MAX_BACKOFF);
+            prev = b.backoff;
+        }
+        assert_eq!(b.backoff, BREAKER_MAX_BACKOFF);
+        // A successful probe closes and resets the interval.
+        b.state = BreakerState::HalfOpen;
+        assert!(b.on_success(), "half-open -> closed is a recovery");
+        assert!(b.available());
+        assert_eq!(b.backoff, BREAKER_BASE_BACKOFF);
+        assert_eq!(b.recoveries_total, 1);
+    }
+
+    #[test]
+    fn breaker_jitter_is_deterministic_and_bounded() {
+        let mut b = Breaker::new();
+        b.opens_total = 3;
+        let j1 = b.jittered(2);
+        let j2 = b.jittered(2);
+        assert_eq!(j1, j2, "same shard + same open count -> same jitter");
+        assert!(
+            (0..16).any(|idx| b.jittered(idx) != j1),
+            "jitter must actually vary across shards"
+        );
+        let base = b.backoff.as_millis() as i64;
+        let got = j1.as_millis() as i64;
+        assert!((got - base).abs() <= base / 2, "jitter within ±25%: {got} vs {base}");
     }
 
     #[test]

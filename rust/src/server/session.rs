@@ -17,7 +17,9 @@
 //! [`execute_batch`] — the I/O driver never runs kernels, so a slow request
 //! cannot starve the accept path.
 
+use super::admission::{Admission, AdmissionConfig};
 use super::cache::LruCache;
+use super::faults;
 use super::inflight::{Inflight, Reply};
 use super::pool::{Pool, SubmitError};
 use super::protocol::{
@@ -56,18 +58,34 @@ pub struct ServerInner {
     /// The reactor's own counters (iterations, wakeups, accepted fds,
     /// reorder high-water), exported through `metrics` under `"reactor"`.
     pub reactor: Arc<super::event_loop::ReactorStats>,
+    /// Adaptive admission: queue/latency-aware dynamic retry hints,
+    /// per-connection fairness caps, and `d³·steps` cost budgeting
+    /// (exported through `metrics` under `"admission"`).
+    pub admission: Admission,
     pub started: Instant,
 }
 
 impl ServerInner {
     pub fn new(cfg: ServeConfig) -> Self {
         let cache = Mutex::new(LruCache::new(cfg.cache_capacity));
+        let admission = Admission::new(AdmissionConfig {
+            inflight_per_conn: cfg.inflight_per_conn,
+            // Outstanding-work budget: two protocol-ceiling chains per
+            // worker may be in flight (queued + executing) before
+            // cost-aware shedding starts charging admissions against it.
+            work_capacity: (super::protocol::MAX_CHAIN_WORK as u64)
+                .saturating_mul(cfg.workers.max(1) as u64)
+                .saturating_mul(2),
+            base_retry_ms: cfg.retry_after_ms,
+            max_retry_ms: cfg.max_retry_ms,
+        });
         Self {
             cfg,
             cache,
             inflight: Inflight::new(),
             metrics: Mutex::new(Metrics::new()),
             reactor: Arc::new(super::event_loop::ReactorStats::default()),
+            admission,
             started: Instant::now(),
         }
     }
@@ -245,6 +263,10 @@ pub struct Job {
     pub trace: Option<std::sync::Arc<str>>,
     /// Trace-epoch timestamp of submission (0 when untraced).
     pub enqueued_us: u64,
+    /// Work units ([`Request::work_units`]) reserved against the admission
+    /// budget when this job was created; released exactly once, when the
+    /// response delivers (or the job drops unresolved).
+    work: u64,
     inner: Arc<ServerInner>,
     resolved: bool,
 }
@@ -257,12 +279,14 @@ impl Job {
         trace: Option<std::sync::Arc<str>>,
     ) -> Self {
         let enqueued_us = if trace.is_some() { obs::now_us() } else { 0 };
+        let work = request.work_units().min(u64::MAX as u128) as u64;
         Self {
             request,
             cache_key,
             enqueued: Instant::now(),
             trace,
             enqueued_us,
+            work,
             inner,
             resolved: false,
         }
@@ -275,6 +299,7 @@ impl Job {
 
     fn deliver(&mut self, line: &str) {
         self.resolved = true;
+        self.inner.admission.release(self.work);
         for reply in self.inner.inflight.take(&self.cache_key) {
             reply(line.to_string());
         }
@@ -304,11 +329,18 @@ impl Drop for Job {
 /// fan-outs, rejections, even shutdown errors — by wrapping the reply
 /// itself) and its trace identity when sampled. The shard hot path takes
 /// the metrics lock exactly once per dispatch, on every outcome.
+///
+/// `conn_inflight` is the submitting connection's current in-flight count
+/// (the reactor's reorder-buffer depth): the admission controller's
+/// fairness signal, so one deep-pipelining client sheds before it can
+/// starve the rest. Admission applies to *compute* — introspection ops,
+/// cache hits, and coalesced joins cost no worker time and always answer.
 pub fn dispatch(
     req: Request,
     ctx: ReqCtx,
     inner: &Arc<ServerInner>,
     pool: &Pool<Job>,
+    conn_inflight: usize,
     reply: Reply,
 ) {
     // Echo the wire id on whatever line answers this request. Wrapping the
@@ -337,6 +369,22 @@ pub fn dispatch(
                 reply(ok_line(result, true));
                 return;
             }
+            // Per-client fairness: past the (pressure-tightened) per-conn
+            // in-flight cap, shed this request before it touches the queue.
+            if !inner.admission.admit_conn(conn_inflight, pool.queue_len(), pool.queue_depth())
+            {
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                m.incr("fairness_rejects", 1);
+                let ms = inner.admission.retry_after_ms(pool.queue_len(), inner.cfg.workers, &m);
+                drop(m);
+                reply(err_line(
+                    &format!(
+                        "server busy: {conn_inflight} requests in flight on this connection"
+                    ),
+                    Some(ms),
+                ));
+                return;
+            }
             if !inner.inflight.join(&key, reply) {
                 // An identical request is already computing; its resolution
                 // will answer us too.
@@ -348,23 +396,46 @@ pub fn dispatch(
                 m.incr("inflight_coalesced", 1);
                 return;
             }
+            // Cost-aware admission: charge the request's `d³·steps` work
+            // honestly against the outstanding-work budget, so one huge
+            // chain is shed where a hundred small ones are admitted.
+            let work = compute.work_units().min(u64::MAX as u128) as u64;
+            if !inner.admission.try_reserve(work) {
+                let mut m = inner.metrics.lock().expect("metrics lock");
+                m.incr("cache_misses", 1);
+                m.incr("cost_rejects", 1);
+                let ms = inner.admission.retry_after_ms(pool.queue_len(), inner.cfg.workers, &m);
+                drop(m);
+                let line =
+                    err_line("server busy: outstanding work at capacity", Some(ms));
+                for waiter in inner.inflight.take(&key) {
+                    waiter(line.clone());
+                }
+                return;
+            }
             let job = Job::new(compute, key, Arc::clone(inner), trace);
             match pool.try_submit(job) {
                 Ok(()) => {
                     inner.metrics.lock().expect("metrics lock").incr("cache_misses", 1);
                 }
                 Err(SubmitError::Full(job)) => {
-                    {
+                    let ms = {
                         let mut m = inner.metrics.lock().expect("metrics lock");
                         m.incr("cache_misses", 1);
                         m.incr("queue_rejects", 1);
-                    }
+                        inner.admission.note_queue_shed();
+                        inner.admission.retry_after_ms(
+                            pool.queue_len(),
+                            inner.cfg.workers,
+                            &m,
+                        )
+                    };
                     job.resolve(&err_line(
                         &format!(
                             "server busy: job queue is full ({} waiting)",
                             pool.queue_depth()
                         ),
-                        Some(inner.cfg.retry_after_ms),
+                        Some(ms),
                     ));
                 }
                 Err(SubmitError::Shutdown(job)) => {
@@ -613,6 +684,25 @@ fn execute_single(req: &Request, threads: usize) -> Result<Json, String> {
             Err("internal: introspection ops are answered inline".to_string())
         }
     }
+}
+
+/// The chaos-verification oracle: recompute a chain request locally and
+/// return its `result` object serialized exactly as the shard would write
+/// it. Runs the same single-job executor the workers use (batch of one,
+/// one thread — bit-identical at any thread count), so a delivered response
+/// under fault injection can be compared byte-for-byte against a fault-free
+/// computation without a second server.
+pub(crate) fn local_chain_result(
+    method: &str,
+    d: usize,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<String> {
+    let line = super::protocol::encode_chain_request(method, d, steps, seed);
+    let doc = json::parse(&line).map_err(|e| anyhow::anyhow!("encode roundtrip: {e}"))?;
+    let req = Request::parse(&doc).map_err(|e| anyhow::anyhow!("encode roundtrip: {e}"))?;
+    let result = execute_single(&req, 1).map_err(|e| anyhow::anyhow!("local chain: {e}"))?;
+    Ok(json::write(&result))
 }
 
 /// Pool executor: one call per drained batch. Multi-job batches share a
@@ -907,17 +997,24 @@ fn metrics_json(inner: &ServerInner, pool: &Pool<Job>) -> Json {
             )
         })
         .collect();
-    obj(vec![
+    let mut pairs = vec![
         ("counters", Json::Obj(counters)),
         ("gauges", Json::Obj(gauges)),
         ("timers", Json::Obj(timers)),
         ("kernel", kernel_json()),
         ("pool", pool_json()),
         ("reactor", inner.reactor.to_json()),
+        ("admission", inner.admission.to_json(pool.queue_len(), pool.queue_depth())),
         ("queue_len", num(pool.queue_len() as f64)),
         ("cache_len", num(inner.cache.lock().expect("cache lock").len() as f64)),
         ("inflight_keys", num(inner.inflight.len() as f64)),
-    ])
+    ];
+    // Only export the fault-injection section when a plan is actually armed:
+    // the metrics surface of a production shard is unchanged by the harness.
+    if faults::enabled() {
+        pairs.push(("faults", faults::stats_json()));
+    }
+    obj(pairs)
 }
 
 /// Process-global persistent-pool counters (`util::par`): how many parallel
@@ -1094,6 +1191,65 @@ mod tests {
         assert_eq!(events.len(), 2, "{events:?}");
         assert!(matches!(events[0], SessionEvent::Oversized(_)));
         assert!(matches!(events[1], SessionEvent::Close));
+    }
+
+    #[test]
+    fn chunking_never_changes_the_decoded_event_stream() {
+        // Property: however a byte stream is sliced into reads — including
+        // the adversarial chunkings a fault plan's short-write injection
+        // produces — SessionState emits the identical event sequence. One
+        // canonical whole-stream feed is the oracle; seeded random
+        // chunkings must match it exactly, including resync after
+        // oversized and malformed lines.
+        let max = 96;
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend_from_slice(b"{\"op\":\"info\"}\n");
+        stream.extend_from_slice(b"not json at all\n");
+        stream.extend_from_slice(b"\n   \n"); // blanks: no events
+        stream.extend_from_slice(&vec![b'x'; 200]); // oversized, terminated
+        stream.push(b'\n');
+        stream.extend_from_slice(b"{\"op\":\"metrics\"}\n");
+        stream.extend_from_slice(b"{\"op\":\"info\",\"id\":7}\n");
+        stream.extend_from_slice(b"{\"op\":\"trace\"") ; // valid tail, no '\n'
+
+        fn tag(ev: &SessionEvent) -> String {
+            match ev {
+                SessionEvent::Request(req, id) => format!("req:{req:?} id:{id:?}"),
+                SessionEvent::BadLine(line) => format!("bad:{line}"),
+                SessionEvent::Oversized(line) => format!("over:{line}"),
+                SessionEvent::Close => "close".to_string(),
+            }
+        }
+        fn run(stream: &[u8], max: usize, chunks: &[usize]) -> Vec<String> {
+            let mut s = SessionState::new(max);
+            let mut events = Vec::new();
+            let mut at = 0;
+            for &n in chunks {
+                let end = (at + n).min(stream.len());
+                s.on_bytes(&stream[at..end], &mut events);
+                at = end;
+            }
+            s.on_bytes(&stream[at..], &mut events);
+            s.on_eof(&mut events);
+            events.iter().map(tag).collect()
+        }
+
+        let want = run(&stream, max, &[stream.len()]);
+        assert!(want.iter().any(|t| t.starts_with("over:")), "{want:?}");
+        assert!(want.iter().any(|t| t.starts_with("bad:")), "{want:?}");
+        assert_eq!(want.last().map(String::as_str), Some("close"));
+        for trial in 0..50u64 {
+            let mut rng = rng_from_seed(1000 + trial);
+            let mut chunks = Vec::new();
+            let mut total = 0;
+            while total < stream.len() {
+                let n = 1 + (rng.next_u64() as usize) % 40;
+                chunks.push(n);
+                total += n;
+            }
+            let got = run(&stream, max, &chunks);
+            assert_eq!(got, want, "trial {trial} chunking {chunks:?}");
+        }
     }
 
     #[test]
