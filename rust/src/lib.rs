@@ -29,17 +29,23 @@
 //! * [`rnn`] — the training driver for the paper's §4.3 GOOM-SSM RNN.
 //! * [`coordinator`] — experiment registry, config, metrics, launcher.
 //! * [`server`] — `goomd`, the batched GOOM compute service: a TCP daemon
-//!   (newline-delimited JSON) built on one reusable readiness reactor
-//!   (`server/event_loop.rs`) that drives sans-IO session machines over
-//!   non-blocking sockets — inbound clients and outbound backend
-//!   connections alike — serving chain/scan/LLE requests through a
-//!   persistent worker pool with backpressure, same-shape request
-//!   batching (one stacked LMME pass), in-flight dedup of identical
-//!   requests, and an LRU cache over seeded requests. The cache-aware
-//!   router tier (`repro route`, rendezvous-hashing canonical keys across
-//!   shards) is a second instantiation of the same reactor, so both
-//!   fronts run O(1) threads. See `docs/SERVING.md` for the wire
-//!   protocol. The reliability layer — cost-aware admission control
+//!   speaking newline-delimited JSON and a length-prefixed binary framing
+//!   (`GBF1`, payloads via the [`runtime`] gbin tensor container),
+//!   negotiated per message by its first bytes, built on one reusable
+//!   readiness reactor (`server/event_loop.rs`) that drives sans-IO
+//!   session machines over non-blocking sockets — inbound clients and
+//!   outbound backend connections alike — serving chain/scan/LLE
+//!   requests through a persistent worker pool with backpressure,
+//!   same-shape request batching (one stacked LMME pass), in-flight
+//!   dedup of identical requests, and an LRU cache over seeded requests
+//!   that stores each response pre-encoded in both framings (a hit is a
+//!   single buffered write, zero re-encode, either protocol). The
+//!   cache-aware router tier (`repro route`, rendezvous-hashing
+//!   canonical keys across shards — binary twins hash to the same key,
+//!   and binary frames relay shard-ward without decode/re-encode) is a
+//!   second instantiation of the same reactor, so both fronts run O(1)
+//!   threads. See `docs/SERVING.md` for the wire protocol. The
+//!   reliability layer — cost-aware admission control
 //!   with dynamic `retry_after_ms` (`server/admission.rs`), per-shard
 //!   circuit breakers with half-open probes, deterministic seeded
 //!   fault injection at every IO seam (`server/faults.rs`,

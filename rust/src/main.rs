@@ -244,20 +244,27 @@ fn route(args: &Args) -> Result<()> {
     server::router::route_blocking(router_cfg)
 }
 
-/// `repro req [--addr=...] '<json-request>'`: send one request line to a
-/// daemon or router, print the response line, and exit non-zero when the
-/// response is an error (scriptable probe; the CI smoke job uses it).
+/// `repro req [--addr=...] [--binary] '<json-request>'`: send one request
+/// to a daemon or router, print the decoded response plus a
+/// `bytes_on_wire` line, and exit non-zero when the response is an error
+/// (scriptable probe; the CI smoke job uses it). `--binary` re-encodes
+/// the same request as a GBF1 frame — the decoded response is identical,
+/// only the wire bytes change.
 fn req(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7077").to_string();
     let line = args
         .positional
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: repro req [--addr=...] '<json-request>'"))?;
-    let resp = server::request_once(&addr, line)?;
-    println!("{resp}");
-    let doc = json::parse(resp.trim())
-        .map_err(|e| anyhow::anyhow!("unparseable response: {e}"))?;
-    if doc.get("ok").and_then(Json::as_bool) != Some(true) {
+    let shot = server::request_once_wire(&addr, line, args.flag("binary"))?;
+    println!("{}", shot.text);
+    eprintln!(
+        "bytes_on_wire: request={} response={} ({})",
+        shot.bytes_out,
+        shot.bytes_in,
+        if args.flag("binary") { "binary" } else { "json" }
+    );
+    if shot.doc.get("ok").and_then(Json::as_bool) != Some(true) {
         anyhow::bail!("request failed");
     }
     Ok(())
@@ -361,6 +368,7 @@ fn loadgen(args: &Args) -> Result<()> {
             goomrs::util::par::env_threads().unwrap_or(defaults.threads),
         )?,
         chaos: args.flag("chaos"),
+        binary: args.flag("binary"),
     };
     let dims_desc = if cfg.dims.is_empty() {
         format!("d={}", cfg.d)
@@ -519,8 +527,10 @@ USAGE:
                                     hashes canonical request keys across shards,
                                     with per-shard circuit breakers (metrics op,
                                     \"health\" section)
-  repro req [--addr=127.0.0.1:7077] '<json-request>'
-                                    send one request line, print the response
+  repro req [--addr=127.0.0.1:7077 --binary] '<json-request>'
+                                    send one request, print the decoded
+                                    response + bytes_on_wire (--binary sends
+                                    a GBF1 frame instead of a JSON line)
   repro trace [--addr=A[,B,...] --limit=512 --out=trace.json]
                                     pull span events from live tiers (router +
                                     shards) and stitch one Chrome trace-event
@@ -529,7 +539,7 @@ USAGE:
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
                  --seed=N --min-cached=N --pipeline=N --threads=N
-                 --simd=MODE --chaos]
+                 --simd=MODE --chaos --binary]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency,
                                     shed/backoff totals, plus a per-dimension
@@ -538,7 +548,8 @@ USAGE:
                                     reorder buffers; --chaos verifies every
                                     delivered response byte-for-byte against
                                     a local recompute and exits non-zero on
-                                    any corruption)
+                                    any corruption; --binary speaks the GBF1
+                                    binary framing)
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).

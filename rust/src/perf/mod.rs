@@ -16,12 +16,17 @@
 //!   counters delta that attributes wall time to compute vs queueing;
 //!   plus a `trace_overhead` row measuring what request tracing adds at
 //!   sample=1 vs the gate shut (the <2% acceptance bar for the
-//!   observability layer, recorded info-only like the route rows).
+//!   observability layer, recorded info-only like the route rows), and
+//!   `proto_{json,binary}_{miss,hit}` rows comparing the two wire
+//!   encodings — client-observed ns/req p50/p99 plus the isolated
+//!   serialize-path cost, where a cache hit re-sends pre-rendered bytes
+//!   at zero allocations in either encoding.
 //! * `BENCH_route.json` — router relay overhead: the same cache-served
 //!   traffic driven direct-to-shard and through the reactor router
-//!   (coalesced and pipelined rows), with the added ns/request at p50/p99
-//!   the relay hop costs. Recorded info-only in the trend gate — socketed
-//!   latencies on a shared runner are too noisy for the 15% bar.
+//!   (coalesced and pipelined rows, in both wire encodings), with the
+//!   added ns/request at p50/p99 the relay hop costs. Recorded info-only
+//!   in the trend gate — socketed latencies on a shared runner are too
+//!   noisy for the 15% bar.
 //!
 //! Allocation counts are real: the `repro` binary installs the counting
 //! global allocator, so `allocs_per_op: 0` on the warmed kernel rows is a
@@ -822,6 +827,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             pipeline: 1,
             threads: 0,
             chaos: false,
+            binary: false,
         };
         let before = kernel_stats::snapshot();
         let t0 = Instant::now();
@@ -875,6 +881,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             pipeline: 1,
             threads: 0,
             chaos: false,
+            binary: false,
         };
         crate::obs::set_sample(0);
         let mut metrics = crate::coordinator::Metrics::new();
@@ -935,6 +942,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             pipeline,
             threads: 0,
             chaos: false,
+            binary: false,
         };
         let mut metrics = crate::coordinator::Metrics::new();
         let unloaded = crate::server::loadgen(&mk(1, 1), &mut metrics)?;
@@ -963,6 +971,65 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
         );
         tiny.stop();
     }
+    // Protocol overhead (info-only): identical traffic in both wire
+    // encodings, miss (distinct keys, fresh daemon per protocol so the
+    // first run's cache can't warm the second's) and hit (one shared
+    // key). ns/req is client-observed p50/p99; the serialize columns
+    // isolate what the daemon pays to *emit* one response in each
+    // encoding — a cache hit re-sends pre-rendered bytes, which must
+    // cost zero allocations on either protocol.
+    for (proto, binary) in [("json", false), ("binary", true)] {
+        let ps = Server::start(ServeConfig {
+            port: 0,
+            workers: 2,
+            queue_depth: 64,
+            batch_max: 8,
+            cache_capacity: 1024,
+            ..ServeConfig::default()
+        })
+        .context("starting protocol-overhead goomd")?;
+        for (temp, shared_seed) in [("miss", None), ("hit", Some(11u64))] {
+            let lg = LoadgenConfig {
+                addr: ps.addr().to_string(),
+                clients,
+                requests,
+                d: 8,
+                steps,
+                shared_seed,
+                binary,
+                ..LoadgenConfig::default()
+            };
+            let mut metrics = crate::coordinator::Metrics::new();
+            let report = crate::server::loadgen(&lg, &mut metrics)?;
+            if report.errors > 0 {
+                anyhow::bail!(
+                    "protocol bench saw {} errors on {proto}/{temp}",
+                    report.errors
+                );
+            }
+            let (ser_ns, ser_allocs) = serialize_cost(steps, binary, temp == "hit")?;
+            results.push(obj(vec![
+                ("scenario", Json::Str(format!("proto_{proto}_{temp}"))),
+                ("protocol", Json::Str(proto.to_string())),
+                ("temperature", Json::Str(temp.to_string())),
+                ("clients", num(clients as f64)),
+                ("ok", num(report.ok as f64)),
+                ("errors", num(report.errors as f64)),
+                ("cached", num(report.cached as f64)),
+                ("ns_per_req_p50", num(report.p50_ms * 1e6)),
+                ("ns_per_req_p99", num(report.p99_ms * 1e6)),
+                ("serialize_ns_per_resp", num(ser_ns)),
+                ("serialize_allocs_per_resp", num(ser_allocs)),
+            ]));
+            println!(
+                "serve[proto_{proto}_{temp}]: p50 {:.0} ns, p99 {:.0} ns, \
+                 serialize {ser_ns:.0} ns / {ser_allocs:.2} allocs",
+                report.p50_ms * 1e6,
+                report.p99_ms * 1e6,
+            );
+        }
+        ps.stop();
+    }
     let counters: BTreeMap<String, Json> = [
         ("cache_hits", server.counter("cache_hits")),
         ("batches", server.counter("batches")),
@@ -978,6 +1045,35 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
         map.insert("daemon_counters".to_string(), Json::Obj(counters));
     }
     Ok(doc)
+}
+
+/// Measure the serialize path in isolation: what emitting one chain
+/// response costs in each encoding, free of socket and scheduling noise.
+/// `hit` re-emits a pre-rendered response — the cache-hit path is one
+/// refcount bump plus a buffered write into a pre-sized buffer, so its
+/// measured allocations must be zero. A miss renders both encodings
+/// first (the one-time cost the cache amortizes away).
+fn serialize_cost(steps: usize, binary: bool, hit: bool) -> Result<(f64, f64)> {
+    use crate::server::protocol::{Rendered, RespKind, Wire};
+    let text = crate::server::session::local_chain_result("goomc64", 8, steps, 11)?;
+    let result = json::parse(&text).map_err(|e| anyhow::anyhow!("chain result: {e}"))?;
+    let wire = if binary { Wire::Binary } else { Wire::Json };
+    let rendered = Rendered::ok(&result, true, RespKind::Generic);
+    let mut buf = Vec::with_capacity(rendered.json.len() + rendered.bin.len() + 1);
+    let (warmup, iters) = (10usize, 200usize);
+    let (ns, allocs) = if hit {
+        measure(warmup, iters, || {
+            buf.clear();
+            rendered.to_payload(wire, None).write_wire(&mut buf);
+        })
+    } else {
+        measure(warmup, iters, || {
+            buf.clear();
+            let r = Rendered::ok(&result, false, RespKind::Generic);
+            r.to_payload(wire, None).write_wire(&mut buf);
+        })
+    };
+    Ok((ns, allocs))
 }
 
 // ----------------------------------------------------------------- route --
@@ -1008,8 +1104,16 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
     let (clients, requests) = if opts.quick { (2usize, 24usize) } else { (4, 96) };
     let mut results = Vec::new();
     let mut measured: BTreeMap<String, (f64, f64)> = BTreeMap::new();
-    let paths = [("direct", a.addr().to_string()), ("routed", router.addr().to_string())];
-    for (path, addr) in paths {
+    // The binary legs reuse the JSON-warmed cache entry on purpose: a
+    // binary request and its JSON twin share the canonical key, so the
+    // cross-protocol hit IS the thing being measured.
+    let paths = [
+        ("direct", a.addr().to_string(), false),
+        ("routed", router.addr().to_string(), false),
+        ("direct_binary", a.addr().to_string(), true),
+        ("routed_binary", router.addr().to_string(), true),
+    ];
+    for (path, addr, binary) in paths {
         for (mode, pipeline) in [("coalesced", 1usize), ("pipelined", 8)] {
             let lg = LoadgenConfig {
                 addr: addr.clone(),
@@ -1025,6 +1129,7 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
                 pipeline,
                 threads: 0,
                 chaos: false,
+                binary,
             };
             let mut metrics = crate::coordinator::Metrics::new();
             let report = crate::server::loadgen(&lg, &mut metrics)?;
@@ -1037,6 +1142,7 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
             results.push(obj(vec![
                 ("path", Json::Str(path.to_string())),
                 ("mode", Json::Str(mode.to_string())),
+                ("protocol", Json::Str(if binary { "binary" } else { "json" }.to_string())),
                 ("pipeline", num(pipeline as f64)),
                 ("clients", num(clients as f64)),
                 ("requests_total", num(report.total_requests as f64)),
@@ -1059,18 +1165,43 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
     router.stop();
     a.stop();
     b.stop();
-    let delta = |mode: &str, pick: fn(&(f64, f64)) -> f64| -> f64 {
-        match (measured.get(&format!("routed:{mode}")), measured.get(&format!("direct:{mode}"))) {
+    let delta = |routed: &str, direct: &str, mode: &str, pick: fn(&(f64, f64)) -> f64| -> f64 {
+        let r = measured.get(&format!("{routed}:{mode}"));
+        let d = measured.get(&format!("{direct}:{mode}"));
+        match (r, d) {
             (Some(r), Some(d)) => pick(r) - pick(d),
             _ => 0.0,
         }
     };
+    let p50: fn(&(f64, f64)) -> f64 = |m| m.0;
+    let p99: fn(&(f64, f64)) -> f64 = |m| m.1;
     let mut doc = doc_header("route", opts, results);
     if let Json::Obj(map) = &mut doc {
-        map.insert("added_ns_p50_coalesced".to_string(), Json::Num(delta("coalesced", |m| m.0)));
-        map.insert("added_ns_p99_coalesced".to_string(), Json::Num(delta("coalesced", |m| m.1)));
-        map.insert("added_ns_p50_pipelined".to_string(), Json::Num(delta("pipelined", |m| m.0)));
-        map.insert("added_ns_p99_pipelined".to_string(), Json::Num(delta("pipelined", |m| m.1)));
+        let fields = [
+            ("added_ns_p50_coalesced", delta("routed", "direct", "coalesced", p50)),
+            ("added_ns_p99_coalesced", delta("routed", "direct", "coalesced", p99)),
+            ("added_ns_p50_pipelined", delta("routed", "direct", "pipelined", p50)),
+            ("added_ns_p99_pipelined", delta("routed", "direct", "pipelined", p99)),
+            (
+                "added_ns_p50_coalesced_binary",
+                delta("routed_binary", "direct_binary", "coalesced", p50),
+            ),
+            (
+                "added_ns_p99_coalesced_binary",
+                delta("routed_binary", "direct_binary", "coalesced", p99),
+            ),
+            (
+                "added_ns_p50_pipelined_binary",
+                delta("routed_binary", "direct_binary", "pipelined", p50),
+            ),
+            (
+                "added_ns_p99_pipelined_binary",
+                delta("routed_binary", "direct_binary", "pipelined", p99),
+            ),
+        ];
+        for (k, v) in fields {
+            map.insert(k.to_string(), Json::Num(v));
+        }
         map.insert("routed_requests".to_string(), num(routed_total as f64));
     }
     Ok(doc)
@@ -1145,12 +1276,16 @@ mod tests {
         let doc = bench_route(&quick_opts()).expect("route bench");
         assert_eq!(doc.get("bench").unwrap().as_str(), Some("route"));
         let rows = rows(&doc);
-        assert_eq!(rows.len(), 4, "{rows:?}");
+        assert_eq!(rows.len(), 8, "{rows:?}");
         for (path, mode) in [
             ("direct", "coalesced"),
             ("direct", "pipelined"),
             ("routed", "coalesced"),
             ("routed", "pipelined"),
+            ("direct_binary", "coalesced"),
+            ("direct_binary", "pipelined"),
+            ("routed_binary", "coalesced"),
+            ("routed_binary", "pipelined"),
         ] {
             let row = rows
                 .iter()
@@ -1171,6 +1306,10 @@ mod tests {
             "added_ns_p99_coalesced",
             "added_ns_p50_pipelined",
             "added_ns_p99_pipelined",
+            "added_ns_p50_coalesced_binary",
+            "added_ns_p99_coalesced_binary",
+            "added_ns_p50_pipelined_binary",
+            "added_ns_p99_pipelined_binary",
         ] {
             assert!(doc.get(field).unwrap().as_f64().is_some(), "missing {field}");
         }

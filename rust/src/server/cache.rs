@@ -5,6 +5,14 @@
 //! canonical key ([`crate::server::protocol::Request::canonical_key`]).
 //! Repeats are served from memory without touching the worker pool.
 //!
+//! The cache is generic over its value type. The serving layer stores
+//! [`crate::server::protocol::Rendered`] — the response pre-encoded in
+//! *both* wire encodings (JSON line and binary frame) behind `Arc`s — so a
+//! hit is a recency bump plus two atomic refcount increments: no JSON
+//! serialization, no frame encoding, no byte copying, in either protocol.
+//! Both protocols hit the same entry because both decode to one canonical
+//! key.
+//!
 //! The cache is LRU by *entry count*, not bytes: entries are small result
 //! documents (a chain result is ~5 numbers; a scan result is one `d×d`
 //! matrix), and the protocol bounds `d`, so count is a good-enough proxy.
@@ -17,27 +25,28 @@
 //! arbitrarily, and eviction sits on the response path of every cache
 //! miss, so it must not scale with the cache size.
 
-use crate::util::json::Json;
 use std::collections::HashMap;
 
 const NIL: usize = usize::MAX;
 
 #[derive(Debug, Clone)]
-struct Node {
+struct Node<V> {
     key: String,
-    value: Json,
+    /// `None` only for evicted slots parked on the free list (keeps the
+    /// slab reusable without demanding `V: Default`).
+    value: Option<V>,
     /// Toward more-recent (NIL at the head).
     prev: usize,
     /// Toward less-recent (NIL at the tail).
     next: usize,
 }
 
-/// An LRU map from canonical request key to result document.
+/// An LRU map from canonical request key to a cached value.
 #[derive(Debug)]
-pub struct LruCache {
+pub struct LruCache<V> {
     capacity: usize,
     map: HashMap<String, usize>,
-    nodes: Vec<Node>,
+    nodes: Vec<Node<V>>,
     free: Vec<usize>,
     /// Most recently used node (NIL when empty).
     head: usize,
@@ -45,7 +54,7 @@ pub struct LruCache {
     tail: usize,
 }
 
-impl LruCache {
+impl<V: Clone> LruCache<V> {
     /// `capacity` = max entries; 0 disables caching entirely.
     pub fn new(capacity: usize) -> Self {
         Self {
@@ -98,26 +107,26 @@ impl LruCache {
         }
     }
 
-    /// Fetch a clone of the cached result, bumping its recency.
-    pub fn get(&mut self, key: &str) -> Option<Json> {
+    /// Fetch a clone of the cached value, bumping its recency.
+    pub fn get(&mut self, key: &str) -> Option<V> {
         let i = *self.map.get(key)?;
         if self.head != i {
             self.unlink(i);
             self.push_front(i);
         }
-        Some(self.nodes[i].value.clone())
+        self.nodes[i].value.clone()
     }
 
     /// Insert (or refresh) an entry, evicting the least-recently-used one
     /// when at capacity. Returns the evicted key, if any — the serving
     /// layer counts evictions so shard operators can see cache churn.
-    pub fn insert(&mut self, key: String, value: Json) -> Option<String> {
+    pub fn insert(&mut self, key: String, value: V) -> Option<String> {
         if self.capacity == 0 {
             return None;
         }
         if let Some(&i) = self.map.get(&key) {
             // Refresh: new value, bumped recency, nothing evicted.
-            self.nodes[i].value = value;
+            self.nodes[i].value = Some(value);
             if self.head != i {
                 self.unlink(i);
                 self.push_front(i);
@@ -129,13 +138,14 @@ impl LruCache {
             let victim = self.tail;
             self.unlink(victim);
             let old_key = std::mem::take(&mut self.nodes[victim].key);
-            self.nodes[victim].value = Json::Null;
+            self.nodes[victim].value = None;
             self.map.remove(&old_key);
             self.free.push(victim);
             Some(old_key)
         } else {
             None
         };
+        let value = Some(value);
         let i = match self.free.pop() {
             Some(slot) => {
                 self.nodes[slot] =
@@ -156,6 +166,7 @@ impl LruCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     fn v(x: f64) -> Json {
         Json::Num(x)
@@ -220,6 +231,19 @@ mod tests {
         assert_eq!(c.insert("c".into(), v(3.0)), Some("b".to_string()));
         assert_eq!(c.get("c"), Some(v(3.0)));
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn non_json_value_types_work_unchanged() {
+        // The serving layer stores pre-encoded `Rendered` pairs; any Clone
+        // type must behave identically to the Json original.
+        let mut c: LruCache<Vec<u8>> = LruCache::new(2);
+        c.insert("a".into(), vec![1, 2, 3]);
+        c.insert("b".into(), vec![4]);
+        assert_eq!(c.get("a"), Some(vec![1, 2, 3]));
+        assert_eq!(c.insert("c".into(), vec![5]), Some("b".to_string()));
+        assert_eq!(c.get("b"), None);
+        assert_eq!(c.get("c"), Some(vec![5]));
     }
 
     #[test]

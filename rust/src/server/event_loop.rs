@@ -13,7 +13,8 @@
 //! * inbound client connections (sans-IO session framing, per-connection
 //!   reorder buffers so pipelined responses flush in request order),
 //! * outbound backend connections (non-blocking connect, pending-write
-//!   queues, newline-framed response reads, connect/IO deadlines,
+//!   queues, mixed-framed response reads — newline JSON lines and
+//!   length-prefixed binary frames — connect/IO deadlines,
 //!   reconnect-on-failure via the owning [`App`]),
 //! * a self-pipe waker plus an mpsc completion channel for responses
 //!   finished on other threads (pool workers).
@@ -35,10 +36,9 @@
 //! correctness is unchanged.
 
 use super::faults;
-use super::inflight::Reply;
 use super::pool::Pool;
-use super::protocol::{err_line, num, obj, Request};
-use super::session::{dispatch, Job, ServerInner, SessionEvent, SessionState};
+use super::protocol::{err_line, num, obj, Payload, Request, Wire, FRAME_HEADER, FRAME_MAGIC};
+use super::session::{dispatch, Job, ServerInner, SessionEvent, SessionState, Sink};
 use crate::coordinator::Metrics;
 use crate::obs::{self, ReqCtx, Stage};
 use crate::util::json::Json;
@@ -77,8 +77,10 @@ pub const BACKEND_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 /// the failover path.
 pub const BACKEND_IO_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// A finished response line for connection `.0`, request slot `.1`.
-type Completion = (u64, u64, String);
+/// A finished wire-ready response payload for connection `.0`, request
+/// slot `.1` — a JSON line or a binary frame; the reactor never looks
+/// inside either.
+type Completion = (u64, u64, Payload);
 
 /// External control surface of one reactor: `shutdown` stops the loop on
 /// its next wakeup (best-effort final flush, then sockets close);
@@ -156,13 +158,26 @@ pub trait App: Send + 'static {
     /// The stats block this reactor publishes (read once at spawn).
     fn stats(&self) -> Arc<ReactorStats>;
     /// One decoded client request on `(conn, seq)` with its observability
-    /// context (wire id to echo, trace id when sampled). Answer now via
-    /// [`Core::complete`], later via [`Core::reply_to`], or by relaying
+    /// context (wire id to echo, trace id when sampled) and the encoding it
+    /// arrived in (`wire`; the response must answer in kind). Answer now
+    /// via [`Core::complete`], later via [`Core::reply_to`], or by relaying
     /// through a backend connection.
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx);
+    #[allow(clippy::too_many_arguments)]
+    fn on_request(
+        &mut self,
+        core: &mut Core,
+        conn: u64,
+        seq: u64,
+        req: Request,
+        ctx: ReqCtx,
+        wire: Wire,
+    );
     /// One complete newline-framed line arrived from backend `backend`
     /// (terminator stripped, trailing whitespace trimmed).
     fn on_backend_line(&mut self, _core: &mut Core, _backend: u64, _line: String) {}
+    /// One complete binary frame arrived from backend `backend` (header
+    /// included, verbatim wire bytes — relays forward it without a decode).
+    fn on_backend_frame(&mut self, _core: &mut Core, _backend: u64, _frame: Vec<u8>) {}
     /// Backend connection `backend` is gone: connect failed, EOF, I/O
     /// error, oversized frame, or deadline. Already deregistered — every
     /// line it still owed is lost and must be failed over or failed out.
@@ -375,8 +390,8 @@ struct Conn {
     next_seq: u64,
     /// Next slot whose response may be flushed.
     emit_seq: u64,
-    /// Completed lines waiting on earlier slots.
-    ready: BTreeMap<u64, String>,
+    /// Completed wire payloads waiting on earlier slots.
+    ready: BTreeMap<u64, Payload>,
     /// Last inbound bytes (or accept) — the idle-deadline clock.
     last_activity: Instant,
     read_closed: bool,
@@ -411,12 +426,15 @@ struct BackendConn {
     last_activity: Instant,
     /// Request bytes queued behind the socket's send buffer.
     out: Vec<u8>,
-    /// Partial response line awaiting its terminator.
+    /// Partial response message — a line awaiting its terminator or a
+    /// binary frame awaiting its declared payload.
     inbuf: Vec<u8>,
-    /// Bytes of `inbuf` already scanned for a terminator — framing must
-    /// stay linear while a multi-MiB response dribbles in across reads.
+    /// Bytes of `inbuf` already scanned for a line terminator — framing
+    /// must stay linear while a multi-MiB response dribbles in across
+    /// reads (binary frames declare their length and never scan).
     scanned: usize,
-    /// Newline-framed lines owed to the app (one per line sent).
+    /// Response messages owed to the app (one per request sent, either
+    /// framing).
     awaiting: usize,
     readable: bool,
     writable: bool,
@@ -494,9 +512,9 @@ impl Core {
     /// Park the finished response for request slot (`conn`, `seq`); it
     /// flushes once every earlier slot has answered. A completion for a
     /// since-closed connection is dropped.
-    pub fn complete(&mut self, conn: u64, seq: u64, line: String) {
+    pub fn complete(&mut self, conn: u64, seq: u64, payload: impl Into<Payload>) {
         if let Some(c) = self.conns.get_mut(&conn) {
-            c.ready.insert(seq, line);
+            c.ready.insert(seq, payload.into());
             self.stats.raise_reorder_depth(c.ready.len() as u64);
         }
     }
@@ -511,14 +529,14 @@ impl Core {
             .unwrap_or(0)
     }
 
-    /// A [`Reply`] for request slot (`conn`, `seq`): routes the finished
-    /// line back through the completion channel and wakes the loop. Works
-    /// from any thread.
-    pub fn reply_to(&self, conn: u64, seq: u64) -> Reply {
+    /// A [`Sink`] for request slot (`conn`, `seq`): routes the finished
+    /// wire payload back through the completion channel and wakes the
+    /// loop. Works from any thread.
+    pub fn reply_to(&self, conn: u64, seq: u64) -> Sink {
         let tx = self.completions_tx.clone();
         let waker = Arc::clone(&self.waker);
-        Box::new(move |line| {
-            let _ = tx.send((conn, seq, line));
+        Box::new(move |payload| {
+            let _ = tx.send((conn, seq, payload));
             waker.wake();
         })
     }
@@ -572,10 +590,10 @@ impl Core {
         Ok(id)
     }
 
-    /// Queue one newline-terminated request line on backend `backend`
-    /// (the terminator is appended here). Returns `false` when the
-    /// connection is already gone.
-    pub fn backend_send(&mut self, backend: u64, line: &str) -> bool {
+    /// Queue one request payload on backend `backend` — a JSON line (the
+    /// terminator is appended by the payload's writer) or a binary frame,
+    /// sent verbatim. Returns `false` when the connection is already gone.
+    pub fn backend_send(&mut self, backend: u64, payload: &Payload) -> bool {
         match self.backends.get_mut(&backend) {
             Some(b) => {
                 if b.awaiting == 0 {
@@ -585,8 +603,7 @@ impl Core {
                     // a new request lands on it.
                     b.last_activity = Instant::now();
                 }
-                b.out.extend_from_slice(line.as_bytes());
-                b.out.push(b'\n');
+                payload.write_wire(&mut b.out);
                 b.awaiting += 1;
                 true
             }
@@ -909,7 +926,7 @@ impl<A: App> Reactor<A> {
         let mut oversized = 0u64;
         for ev in events {
             match ev {
-                SessionEvent::Request(req, wire_id) => {
+                SessionEvent::Request(req, wire_id, wire) => {
                     requests += 1;
                     let ctx = ReqCtx::admit(wire_id);
                     if let Some(trace) = &ctx.trace {
@@ -922,17 +939,17 @@ impl<A: App> Reactor<A> {
                         );
                     }
                     let seq = self.assign_seq(id);
-                    self.app.on_request(&mut self.core, id, seq, req, ctx);
+                    self.app.on_request(&mut self.core, id, seq, req, ctx, wire);
                 }
-                SessionEvent::BadLine(line) => {
+                SessionEvent::BadLine(payload) => {
                     requests += 1;
                     let seq = self.assign_seq(id);
-                    self.core.complete(id, seq, line);
+                    self.core.complete(id, seq, payload);
                 }
-                SessionEvent::Oversized(line) => {
+                SessionEvent::Oversized(payload) => {
                     oversized += 1;
                     let seq = self.assign_seq(id);
-                    self.core.complete(id, seq, line);
+                    self.core.complete(id, seq, payload);
                 }
                 SessionEvent::Close => {
                     if let Some(c) = self.core.conns.get_mut(&id) {
@@ -991,7 +1008,7 @@ impl<A: App> Reactor<A> {
                     down = !flush_bytes(&b.stream, &mut b.out, faults::Site::BackendWrite);
                 }
             }
-            let mut lines = Vec::new();
+            let mut msgs = Vec::new();
             if !down && b.readable && !b.connecting && faults::enabled() {
                 match faults::decide(faults::Site::BackendRead) {
                     faults::Fault::Drop => down = true,
@@ -1014,27 +1031,10 @@ impl<A: App> Reactor<A> {
                         Ok(n) => {
                             b.last_activity = Instant::now();
                             b.inbuf.extend_from_slice(&buf[..n]);
-                            // Scan only bytes not already searched — the
-                            // cursor survives partial reads, so framing a
-                            // response that arrives in many chunks stays
-                            // linear instead of rescanning from byte 0.
-                            while let Some(rel) =
-                                b.inbuf[b.scanned..].iter().position(|&x| x == b'\n')
-                            {
-                                let pos = b.scanned + rel;
-                                let frame: Vec<u8> = b.inbuf.drain(..=pos).collect();
-                                let line = String::from_utf8_lossy(&frame[..pos])
-                                    .trim_end()
-                                    .to_string();
-                                b.scanned = 0;
-                                b.awaiting = b.awaiting.saturating_sub(1);
-                                lines.push(line);
-                            }
-                            b.scanned = b.inbuf.len();
-                            if b.inbuf.len() > MAX_RESPONSE_BYTES {
-                                // A response outgrew the relay cap; its
-                                // remainder would desync every later line
-                                // on this connection.
+                            if drain_backend_msgs(b, &mut msgs).is_err() {
+                                // A message outgrew the relay cap; its
+                                // remainder would desync every later
+                                // message on this connection.
                                 down = true;
                                 break;
                             }
@@ -1048,8 +1048,15 @@ impl<A: App> Reactor<A> {
                     }
                 }
             }
-            for line in lines {
-                self.app.on_backend_line(&mut self.core, id, line);
+            for msg in msgs {
+                match msg {
+                    BackendMsg::Line(line) => {
+                        self.app.on_backend_line(&mut self.core, id, line);
+                    }
+                    BackendMsg::Frame(frame) => {
+                        self.app.on_backend_frame(&mut self.core, id, frame);
+                    }
+                }
             }
             if down {
                 self.backend_down(id);
@@ -1129,9 +1136,11 @@ impl<A: App> Reactor<A> {
                 continue;
             }
             // Release contiguously-completed responses, in request order.
-            while let Some(line) = conn.ready.remove(&conn.emit_seq) {
-                conn.out.extend_from_slice(line.as_bytes());
-                conn.out.push(b'\n');
+            // Each payload writes its own framing (newline for JSON lines,
+            // nothing extra for binary frames) — one buffered write, no
+            // re-encode, regardless of protocol.
+            while let Some(payload) = conn.ready.remove(&conn.emit_seq) {
+                payload.write_wire(&mut conn.out);
                 conn.emit_seq += 1;
             }
             if conn.out.is_empty() {
@@ -1154,6 +1163,71 @@ impl<A: App> Reactor<A> {
                 .lock()
                 .expect("metrics lock")
                 .incr("connection_errors", errors);
+        }
+    }
+}
+
+/// One complete message framed off a backend connection's byte stream.
+enum BackendMsg {
+    /// A newline-terminated JSON line (terminator stripped, trimmed).
+    Line(String),
+    /// A complete binary frame, header included — verbatim wire bytes.
+    Frame(Vec<u8>),
+}
+
+/// Split every complete message off the front of `b.inbuf` — backends mix
+/// newline-framed lines and magic-prefixed binary frames freely, exactly
+/// like clients (a message opening with the 4-byte frame magic is binary;
+/// fewer matching bytes than the magic is an ambiguous prefix that waits
+/// for more). `Err` means a message exceeded [`MAX_RESPONSE_BYTES`] and
+/// the connection can no longer be framed.
+fn drain_backend_msgs(b: &mut BackendConn, msgs: &mut Vec<BackendMsg>) -> Result<(), ()> {
+    loop {
+        if b.inbuf.is_empty() {
+            return Ok(());
+        }
+        let m = b.inbuf.len().min(FRAME_MAGIC.len());
+        if b.inbuf[..m] == FRAME_MAGIC[..m] {
+            if b.inbuf.len() < FRAME_HEADER {
+                // Ambiguous (partial magic) or incomplete header: no line
+                // terminator can hide in these bytes, so the scan cursor
+                // may safely skip them if the prefix later diverges.
+                b.scanned = b.inbuf.len();
+                return Ok(());
+            }
+            let len = u32::from_le_bytes(b.inbuf[4..8].try_into().expect("4 bytes")) as usize;
+            if len > MAX_RESPONSE_BYTES {
+                return Err(());
+            }
+            let total = FRAME_HEADER + len;
+            if b.inbuf.len() < total {
+                return Ok(());
+            }
+            let frame: Vec<u8> = b.inbuf.drain(..total).collect();
+            b.scanned = 0;
+            b.awaiting = b.awaiting.saturating_sub(1);
+            msgs.push(BackendMsg::Frame(frame));
+            continue;
+        }
+        // Line framing: scan only bytes not already searched — the cursor
+        // survives partial reads, so framing a response that arrives in
+        // many chunks stays linear instead of rescanning from byte 0.
+        match b.inbuf[b.scanned..].iter().position(|&x| x == b'\n') {
+            Some(rel) => {
+                let pos = b.scanned + rel;
+                let taken: Vec<u8> = b.inbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&taken[..pos]).trim_end().to_string();
+                b.scanned = 0;
+                b.awaiting = b.awaiting.saturating_sub(1);
+                msgs.push(BackendMsg::Line(line));
+            }
+            None => {
+                b.scanned = b.inbuf.len();
+                if b.inbuf.len() > MAX_RESPONSE_BYTES {
+                    return Err(());
+                }
+                return Ok(());
+            }
         }
     }
 }
@@ -1225,10 +1299,18 @@ impl App for ServeApp {
         Arc::clone(&self.inner.reactor)
     }
 
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
+    fn on_request(
+        &mut self,
+        core: &mut Core,
+        conn: u64,
+        seq: u64,
+        req: Request,
+        ctx: ReqCtx,
+        wire: Wire,
+    ) {
         let conn_inflight = core.conn_inflight(conn);
-        let reply = core.reply_to(conn, seq);
-        dispatch(req, ctx, &self.inner, &self.pool, conn_inflight, reply);
+        let sink = core.reply_to(conn, seq);
+        dispatch(req, ctx, &self.inner, &self.pool, conn_inflight, wire, sink);
     }
 }
 

@@ -406,6 +406,37 @@ mod tests {
     }
 
     #[test]
+    fn short_writes_cut_binary_frames_mid_frame_without_loss() {
+        // Replay the reactor's drain loop over one GBF1 frame: each round
+        // flushes `short_write_len` of the remainder, exactly as the
+        // write seams do when a short-write fault fires every round. The
+        // cuts must land *inside* the frame (the interesting case — a
+        // torn header or payload the peer must buffer and resume), and
+        // the reassembled stream must be byte-identical.
+        let frame: Vec<u8> = {
+            let mut f = b"GBF1".to_vec();
+            let payload = b"\x02\x00\x01\x01\x00"; // tag | id_len=0 | ok | cached | rkind
+            f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            f.extend_from_slice(payload);
+            f
+        };
+        let mut received = Vec::new();
+        let mut cuts = Vec::new();
+        while received.len() < frame.len() {
+            let n = short_write_len(frame.len() - received.len());
+            received.extend_from_slice(&frame[received.len()..received.len() + n]);
+            cuts.push(received.len());
+        }
+        assert_eq!(received, frame, "drain loop reassembles the frame verbatim");
+        assert!(cuts.len() > 1, "a {} byte frame never flushed whole", frame.len());
+        // At least one cut tears the frame body (after the 8-byte header,
+        // before the end) — partial-payload resumption is exercised.
+        assert!(cuts.iter().any(|&c| c > 8 && c < frame.len()), "cuts: {cuts:?}");
+        // And a frame shorter than its own header gets torn mid-header.
+        assert!(short_write_len(8 + 2) < 8, "first cut of a 10-byte frame tears the header");
+    }
+
+    #[test]
     fn resolve_prefers_the_flag() {
         assert_eq!(resolve("seed=1"), Some("seed=1".to_string()));
         // (env fallback exercised in chaos smoke; tests don't mutate env)

@@ -5,19 +5,24 @@
 //! [`Inflight`] registry closes that window: the first arrival for a key
 //! becomes the *leader* and submits one job; everyone else *coalesces*,
 //! parking a [`Reply`] under the key. When the job resolves, every parked
-//! reply receives the same response line, byte for byte.
+//! reply receives the same [`Rendered`] response — pre-encoded once in
+//! both wire encodings — so mixed JSON and binary waiters each get bytes
+//! identical to what a solo request on their own protocol would have
+//! produced, without per-waiter re-serialization.
 //!
 //! Replies are transport-agnostic callbacks, so the same registry serves
 //! the readiness event loop (a reply re-arms the connection's write slot)
 //! and any blocking driver (a reply sends on an mpsc channel).
 
+use crate::server::protocol::Rendered;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// A one-shot response sink: called exactly once with the finished response
-/// line (no trailing newline). Must be cheap and non-blocking — replies run
-/// on pool worker threads.
-pub type Reply = Box<dyn FnOnce(String) + Send + 'static>;
+/// rendered in both encodings (the sink picks its wire's bytes and splices
+/// its own id). Must be cheap and non-blocking — replies run on pool worker
+/// threads.
+pub type Reply = Box<dyn FnOnce(Rendered) + Send + 'static>;
 
 /// Registry of compute keys currently being executed, each with the replies
 /// waiting on the result.
@@ -70,10 +75,14 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
+    fn resp(line: &str) -> Rendered {
+        Rendered { json: line.into(), bin: Vec::new().into() }
+    }
+
     fn reply_into(tx: &mpsc::Sender<String>) -> Reply {
         let tx = tx.clone();
-        Box::new(move |line| {
-            let _ = tx.send(line);
+        Box::new(move |r: Rendered| {
+            let _ = tx.send(r.json.to_string());
         })
     }
 
@@ -90,7 +99,7 @@ mod tests {
         let waiters = inflight.take("k");
         assert_eq!(waiters.len(), 3);
         for w in waiters {
-            w("resp".to_string());
+            w(resp("resp"));
         }
         let got: Vec<String> = (0..3).map(|_| rx.try_recv().unwrap()).collect();
         assert!(got.iter().all(|l| l == "resp"), "byte-identical fan-out");

@@ -53,7 +53,7 @@ pub use session::{Job, ServerInner};
 use crate::coordinator::Metrics;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -314,7 +314,9 @@ pub fn serve_blocking(cfg: ServeConfig) -> Result<()> {
     sig::install_term_handler();
     let server = Server::start(cfg)?;
     println!("goomd listening on {}", server.addr());
-    println!("  protocol: newline-delimited JSON — try: {{\"op\":\"info\"}}");
+    println!(
+        "  protocol: newline-delimited JSON or GBF1 binary frames — try: {{\"op\":\"info\"}}"
+    );
     let started = Instant::now();
     let mut last_metrics = Instant::now();
     loop {
@@ -353,6 +355,93 @@ pub fn request_once(addr: &str, line: &str) -> Result<String> {
         return Err(anyhow!("server closed the connection without answering"));
     }
     Ok(resp.trim_end().to_string())
+}
+
+/// Outcome of one wire-level probe request: the decoded response document
+/// plus the exact request/response byte counts (`repro req` prints these
+/// as `bytes_on_wire`, making the binary protocol's size win observable
+/// without the bench harness).
+#[derive(Debug, Clone)]
+pub struct OneShot {
+    /// Printable response text: the raw JSON response line verbatim, or
+    /// the decoded binary frame re-rendered as JSON.
+    pub text: String,
+    /// Decoded response — identical shape for both encodings.
+    pub doc: Json,
+    /// Bytes the request occupied on the wire (JSON line + newline, or
+    /// the whole binary frame).
+    pub bytes_out: usize,
+    /// Bytes the response occupied on the wire.
+    pub bytes_in: usize,
+}
+
+/// Like [`request_once`], but protocol-aware: `binary` re-encodes the
+/// JSON request line as a GBF1 frame (the wire `id`, when present, rides
+/// along) and reads a frame back. Either way the response is decoded so
+/// callers see one document shape.
+pub fn request_once_wire(addr: &str, line: &str, binary: bool) -> Result<OneShot> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+    let out: Vec<u8> = if binary {
+        let doc = json::parse(line.trim())
+            .map_err(|e| anyhow!("request is not valid JSON: {e}"))?;
+        let req = Request::parse(&doc).map_err(|e| anyhow!("invalid request: {e}"))?;
+        let id = protocol::parse_id(&doc).map_err(|e| anyhow!("invalid id: {e}"))?;
+        protocol::encode_request_frame(&req, id.as_ref())
+    } else {
+        let mut b = line.as_bytes().to_vec();
+        b.push(b'\n');
+        b
+    };
+    writer.write_all(&out)?;
+    writer.flush()?;
+    if binary {
+        let (doc, bytes_in) = read_response_doc(&mut reader, true)?;
+        let text = json::write(&doc);
+        Ok(OneShot { text, doc, bytes_out: out.len(), bytes_in })
+    } else {
+        // Keep the raw response line verbatim: scripts grep `repro req`
+        // output, so the JSON mode's stdout must not change shape.
+        let mut resp = String::new();
+        if reader.read_line(&mut resp)? == 0 {
+            return Err(anyhow!("server closed the connection without answering"));
+        }
+        let bytes_in = resp.len();
+        let text = resp.trim_end().to_string();
+        let doc = json::parse(&text).map_err(|e| anyhow!("unparseable response: {e}"))?;
+        Ok(OneShot { text, doc, bytes_out: out.len(), bytes_in })
+    }
+}
+
+/// Read one complete response in the given encoding and decode it to the
+/// shared document shape, returning the wire byte count alongside.
+fn read_response_doc(reader: &mut BufReader<TcpStream>, binary: bool) -> Result<(Json, usize)> {
+    if binary {
+        let mut header = [0u8; protocol::FRAME_HEADER];
+        reader
+            .read_exact(&mut header)
+            .context("reading response frame header")?;
+        if header[..4] != protocol::FRAME_MAGIC {
+            return Err(anyhow!("response does not start with the GBF1 frame magic"));
+        }
+        let len = u32::from_le_bytes(header[4..8].try_into().expect("4 bytes")) as usize;
+        let mut payload = vec![0u8; len];
+        reader.read_exact(&mut payload).context("reading response frame payload")?;
+        let doc = protocol::decode_response_frame(&payload)
+            .map_err(|e| anyhow!("bad response frame: {e}"))?;
+        Ok((doc, protocol::FRAME_HEADER + len))
+    } else {
+        let mut resp = String::new();
+        if reader.read_line(&mut resp)? == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        let n = resp.len();
+        let doc = json::parse(resp.trim())
+            .map_err(|e| anyhow!("unparseable response: {e}"))?;
+        Ok((doc, n))
+    }
 }
 
 // ---------------------------------------------------------------- loadgen --
@@ -397,6 +486,12 @@ pub struct LoadgenConfig {
     /// Requires the target to run the portable kernel flavor (no
     /// `--simd`) so client and shard compute identical bytes.
     pub chaos: bool,
+    /// Speak the GBF1 binary framing instead of JSON lines (`--binary`):
+    /// requests go out as frames, responses are read as frames. Decoded
+    /// results are bit-identical to the JSON protocol's — same canonical
+    /// key, same cache entry — so every verification mode (incl. chaos
+    /// byte-compare) works unchanged.
+    pub binary: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -413,6 +508,7 @@ impl Default for LoadgenConfig {
             pipeline: 1,
             threads: 0,
             chaos: false,
+            binary: false,
         }
     }
 }
@@ -616,20 +712,19 @@ enum Settle {
     Fail,
 }
 
-fn read_settle(reader: &mut BufReader<TcpStream>) -> Result<Settle> {
-    Ok(read_settle_full(reader)?.0)
+fn read_settle(reader: &mut BufReader<TcpStream>, binary: bool) -> Result<Settle> {
+    Ok(read_settle_full(reader, binary)?.0)
 }
 
 /// Like [`read_settle`], but also hands back the serialized `result`
 /// payload of an ok response so chaos mode can byte-compare it against a
-/// local recompute.
-fn read_settle_full(reader: &mut BufReader<TcpStream>) -> Result<(Settle, Option<String>)> {
-    let mut resp = String::new();
-    if reader.read_line(&mut resp)? == 0 {
-        return Err(anyhow!("server closed the connection"));
-    }
-    let doc = json::parse(resp.trim())
-        .map_err(|e| anyhow!("unparseable response: {e}"))?;
+/// local recompute. Both encodings decode to the same document shape, so
+/// the settle logic (and the byte-compare) is protocol-blind.
+fn read_settle_full(
+    reader: &mut BufReader<TcpStream>,
+    binary: bool,
+) -> Result<(Settle, Option<String>)> {
+    let (doc, _) = read_response_doc(reader, binary)?;
     if doc.get("ok").and_then(Json::as_bool).unwrap_or(false) {
         let cached = doc.get("cached").and_then(Json::as_bool) == Some(true);
         let result = doc.get("result").map(json::write);
@@ -638,6 +733,23 @@ fn read_settle_full(reader: &mut BufReader<TcpStream>) -> Result<(Settle, Option
     match doc.get("retry_after_ms").and_then(Json::as_f64) {
         Some(ms) => Ok((Settle::Retry((ms as u64).clamp(1, 1000)), None)),
         None => Ok((Settle::Fail, None)),
+    }
+}
+
+/// The wire bytes of one generated chain request in the configured
+/// encoding: a newline-terminated JSON line, or a GBF1 binary frame of
+/// the same canonical request (so both encodings hit the same cache
+/// entry on the serving side).
+fn chain_wire_bytes(cfg: &LoadgenConfig, d: usize, seed: u64) -> Vec<u8> {
+    let line = protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed);
+    if cfg.binary {
+        let doc = json::parse(&line).expect("generated request is valid JSON");
+        let req = Request::parse(&doc).expect("generated request parses");
+        protocol::encode_request_frame(&req, None)
+    } else {
+        let mut b = line.into_bytes();
+        b.push(b'\n');
+        b
     }
 }
 
@@ -651,20 +763,20 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = BufWriter::new(stream);
     let mut stats = ClientStats::new(cfg.requests);
-    let line_for = |r: usize| {
+    let wire_for = |r: usize| {
         let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
         let d = if cfg.dims.is_empty() {
             cfg.d
         } else {
             cfg.dims[(client as usize + r) % cfg.dims.len()]
         };
-        (protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed), d)
+        (chain_wire_bytes(cfg, d, seed), d)
     };
     let window = cfg.pipeline.max(1);
     let mut r = 0usize;
     while r < cfg.requests {
-        let burst: Vec<(String, usize)> =
-            (r..(r + window).min(cfg.requests)).map(line_for).collect();
+        let burst: Vec<(Vec<u8>, usize)> =
+            (r..(r + window).min(cfg.requests)).map(wire_for).collect();
         r += burst.len();
         // Latency is client-observed end-to-end: the clock starts when the
         // burst goes out and keeps running across retry_after_ms backoffs,
@@ -673,26 +785,25 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         // burst's start, so a response's latency includes the queueing the
         // pipelining itself created — that head-of-line wait is real.
         let t = Instant::now();
-        for (line, _) in &burst {
-            writer.write_all(line.as_bytes())?;
-            writer.write_all(b"\n")?;
+        for (bytes, _) in &burst {
+            writer.write_all(bytes)?;
         }
         writer.flush()?;
         // Responses come back strictly in request order (the serving
         // tiers' reorder buffers guarantee it); shed requests are retried
         // sequentially after the burst settles.
-        let mut resend: Vec<(String, usize, u64)> = Vec::new();
-        for (line, d) in &burst {
-            match read_settle(&mut reader)? {
+        let mut resend: Vec<(Vec<u8>, usize, u64)> = Vec::new();
+        for (bytes, d) in &burst {
+            match read_settle(&mut reader, cfg.binary)? {
                 Settle::Ok { cached } => {
                     stats.latencies.push((*d, t.elapsed().as_secs_f64()));
                     stats.cached += usize::from(cached);
                 }
-                Settle::Retry(ms) => resend.push((line.clone(), *d, ms)),
+                Settle::Retry(ms) => resend.push((bytes.clone(), *d, ms)),
                 Settle::Fail => stats.errors += 1,
             }
         }
-        for (line, d, first_backoff) in resend {
+        for (bytes, d, first_backoff) in resend {
             let mut backoff = first_backoff;
             let mut attempts = 1usize;
             loop {
@@ -703,10 +814,9 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
                 stats.sheds.push((d, backoff));
                 std::thread::sleep(Duration::from_millis(backoff));
                 attempts += 1;
-                writer.write_all(line.as_bytes())?;
-                writer.write_all(b"\n")?;
+                writer.write_all(&bytes)?;
                 writer.flush()?;
-                match read_settle(&mut reader)? {
+                match read_settle(&mut reader, cfg.binary)? {
                     Settle::Ok { cached } => {
                         stats.latencies.push((d, t.elapsed().as_secs_f64()));
                         stats.cached += usize::from(cached);
@@ -765,7 +875,7 @@ fn run_client_chaos(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
         } else {
             cfg.dims[(client as usize + r) % cfg.dims.len()]
         };
-        let line = protocol::encode_chain_request(&cfg.method, d, cfg.steps, seed);
+        let bytes = chain_wire_bytes(cfg, d, seed);
         let t = Instant::now();
         let mut attempts = 0usize;
         let delivered: Option<(bool, Option<String>)> = loop {
@@ -781,10 +891,9 @@ fn run_client_chaos(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
             }
             let (reader, writer) = conn.as_mut().expect("chaos conn");
             let io = (|| -> Result<(Settle, Option<String>)> {
-                writer.write_all(line.as_bytes())?;
-                writer.write_all(b"\n")?;
+                writer.write_all(&bytes)?;
                 writer.flush()?;
-                read_settle_full(reader)
+                read_settle_full(reader, cfg.binary)
             })();
             match io {
                 // IO error: the fault plan (or a drain) cut the
@@ -981,6 +1090,7 @@ mod tests {
             pipeline: 1,
             threads: 0,
             chaos: false,
+            binary: false,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.total_requests, 24);
@@ -1029,6 +1139,7 @@ mod tests {
             pipeline: 1,
             threads: 0,
             chaos: false,
+            binary: false,
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.ok, 12);
@@ -1070,6 +1181,65 @@ mod tests {
         assert_eq!(report.corrupt, 0, "fault-free run must verify byte-identical");
         assert_eq!(report.shed_total, report.retries, "retries aliases shed_total");
         assert_eq!(report.backoff_ms_total, 0);
+        server.stop();
+    }
+
+    #[test]
+    fn binary_loadgen_shares_the_json_protocol_cache() {
+        let server = Server::start(test_config()).unwrap();
+        let mut metrics = Metrics::new();
+        let binary = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 2,
+            requests: 4,
+            d: 4,
+            steps: 30,
+            shared_seed: Some(21),
+            binary: true,
+            ..LoadgenConfig::default()
+        };
+        // Warm the cache over JSON, then drive the same canonical request
+        // over the binary framing: every binary request must land on the
+        // JSON-warmed entry (shared canonical key ⇒ shared cache line).
+        let warm = LoadgenConfig {
+            clients: 1,
+            requests: 1,
+            binary: false,
+            ..binary.clone()
+        };
+        let report = loadgen(&warm, &mut metrics).unwrap();
+        assert_eq!(report.errors, 0);
+        let report = loadgen(&binary, &mut metrics).unwrap();
+        assert_eq!(report.ok, 8);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.cached, 8, "binary requests must hit the JSON-warmed cache");
+        // Chaos verification speaks binary too: decoded results must be
+        // byte-identical to the local JSON-domain recompute.
+        let chaos = LoadgenConfig { chaos: true, ..binary };
+        let report = loadgen(&chaos, &mut metrics).unwrap();
+        assert_eq!(report.ok, 8);
+        assert_eq!(report.corrupt, 0, "binary results must decode bit-identical");
+        server.stop();
+    }
+
+    #[test]
+    fn request_once_wire_reports_bytes_for_both_protocols() {
+        let server = Server::start(test_config()).unwrap();
+        let addr = server.addr().to_string();
+        let line = r#"{"op":"chain","method":"goomc64","d":4,"steps":40,"seed":3}"#;
+        let json = request_once_wire(&addr, line, false).unwrap();
+        let bin = request_once_wire(&addr, line, true).unwrap();
+        assert_eq!(json.doc.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(bin.doc.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            json.doc.get("result").unwrap(),
+            bin.doc.get("result").unwrap(),
+            "decoded results must be identical across protocols"
+        );
+        // The second request hit the first one's cache entry.
+        assert_eq!(bin.doc.get("cached").unwrap().as_bool(), Some(true));
+        assert!(json.bytes_out > 0 && json.bytes_in > 0);
+        assert!(bin.bytes_out > 0 && bin.bytes_in > 0);
         server.stop();
     }
 

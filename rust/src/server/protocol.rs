@@ -1,7 +1,9 @@
-//! `goomd` wire protocol: newline-delimited JSON over TCP.
+//! `goomd` wire protocol: newline-delimited JSON and GBIN binary frames
+//! over TCP, mixed freely on one connection.
 //!
-//! Every request is one JSON object on one line; every response is one JSON
-//! object on one line. Requests select an operation with `"op"`:
+//! **JSON framing** (the original protocol; unchanged): every request is
+//! one JSON object on one line; every response is one JSON object on one
+//! line. Requests select an operation with `"op"`:
 //!
 //! ```text
 //! {"op":"chain","method":"goomc64","d":8,"steps":1000,"seed":42}
@@ -16,15 +18,29 @@
 //! `{"ok":false,"error":"…"}` (with `"retry_after_ms"` when the server is
 //! shedding load and the client should back off and retry).
 //!
-//! Any request may carry an optional `"id"` (string or integer): it is
-//! echoed verbatim as the first key of the response line, forwarded
-//! router → shard so cross-tier traces stitch on it, and — while tracing
-//! is sampled on (`--trace-sample`) — it forces the request to be traced
-//! (see [`crate::obs`]). The `id` is *not* part of the canonical form:
-//! cache identity and rendezvous routing ignore it.
+//! **Binary framing** (opt-in per message, negotiated by the first bytes):
+//! a message starting with the GBIN-derived magic [`FRAME_MAGIC`]
+//! (`"GBF1"`) is a length-prefixed frame — `magic | u32 payload_len |
+//! payload` — whose dense tensor payloads ride the `runtime/gbin.rs`
+//! container instead of float text. Anything else (JSON starts `{`) is a
+//! newline-framed line, so existing clients keep working unmodified. A
+//! binary request decodes to the same [`Request`] value as its JSON twin,
+//! so both spellings share one canonical form, one cache key, and one
+//! rendezvous placement by construction. Responses answer in the
+//! encoding of their request. See `docs/SERVING.md` § Wire protocol for
+//! the full layout and compatibility matrix.
 //!
-//! GOOM zeros (logmag = -inf) have no JSON literal; the protocol encodes
-//! them as `null` in `logmag` arrays, both directions.
+//! Any request may carry an optional `"id"` (string or integer): it is
+//! echoed verbatim as the first key of the response line (or the id slot
+//! of the response frame), forwarded router → shard so cross-tier traces
+//! stitch on it, and — while tracing is sampled on (`--trace-sample`) —
+//! it forces the request to be traced (see [`crate::obs`]). The `id` is
+//! *not* part of the canonical form: cache identity and rendezvous
+//! routing ignore it.
+//!
+//! GOOM zeros (logmag = -inf) have no JSON literal; the JSON protocol
+//! encodes them as `null` in `logmag` arrays, both directions. Binary
+//! frames carry them natively as IEEE `-inf`.
 //!
 //! Decoding validates *shape and bounds* here; semantic checks that need
 //! the wider library (e.g. whether a dynamical system exists) happen at
@@ -32,8 +48,10 @@
 
 use crate::chain::Method;
 use crate::goom::GoomMat;
+use crate::runtime::gbin::{self, HostTensor};
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Hard per-request bounds: a single request must never be able to pin a
 /// worker for unbounded time or memory.
@@ -462,19 +480,28 @@ pub const MAX_ID_BYTES: usize = 256;
 pub fn parse_id(doc: &Json) -> Result<Option<Json>, String> {
     match doc.get("id") {
         None => Ok(None),
-        Some(Json::Str(s)) => {
+        Some(v) => validate_id_value(v).map(Some),
+    }
+}
+
+/// The `id` validity rule shared by both protocols: a string of bounded
+/// size, or an integer in `[0, 2^53)` (the range the JSON writer
+/// reproduces exactly).
+pub fn validate_id_value(v: &Json) -> Result<Json, String> {
+    match v {
+        Json::Str(s) => {
             if s.len() > MAX_ID_BYTES {
                 return Err(format!("'id' exceeds {MAX_ID_BYTES} bytes"));
             }
-            Ok(Some(Json::Str(s.clone())))
+            Ok(Json::Str(s.clone()))
         }
-        Some(Json::Num(x)) => {
+        Json::Num(x) => {
             if *x < 0.0 || x.fract() != 0.0 || *x >= 9_007_199_254_740_992.0 {
                 return Err("'id' must be a string or an integer in [0, 2^53)".to_string());
             }
-            Ok(Some(Json::Num(*x)))
+            Ok(Json::Num(*x))
         }
-        Some(_) => Err("'id' must be a string or an integer".to_string()),
+        _ => Err("'id' must be a string or an integer".to_string()),
     }
 }
 
@@ -534,6 +561,619 @@ pub fn encode_scan_request(mats: &[GoomMat<f64>], chunks: usize) -> String {
             ),
         ),
     ]))
+}
+
+// ------------------------------------------------------- binary framing --
+
+/// Binary frame magic, derived from the gbin container's `"GBIN"`: `GB` +
+/// `F1` for "frame, version 1". JSON lines start with `{` (or whitespace),
+/// so the first bytes of any message classify it unambiguously.
+pub const FRAME_MAGIC: [u8; 4] = *b"GBF1";
+
+/// Bytes of `magic | u32 payload_len` before the payload.
+pub const FRAME_HEADER: usize = 8;
+
+const REQ_TAG: u8 = 0x01;
+const RESP_TAG: u8 = 0x02;
+
+/// Result-body encodings inside an ok response frame.
+const RESULT_JSON: u8 = 0;
+const RESULT_SCAN: u8 = 1;
+
+/// Which encoding a message arrived in — responses always answer in kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    Json,
+    Binary,
+}
+
+/// One finished wire response in a concrete encoding. `Json` payloads are
+/// complete response lines without the terminator (the flush path appends
+/// `\n`); `Bin` payloads are complete frames written verbatim. Bytes are
+/// reference-counted so cache hits and coalesced fan-outs share one
+/// encoding instead of re-serializing (or even copying) it per waiter.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Json(Arc<str>),
+    Bin(Arc<[u8]>),
+}
+
+impl Payload {
+    /// Append this response's exact wire bytes to an output buffer — the
+    /// single buffered write a cache hit costs (no allocation: the bytes
+    /// were encoded when the entry was filled).
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Json(s) => {
+                out.extend_from_slice(s.as_bytes());
+                out.push(b'\n');
+            }
+            Payload::Bin(b) => out.extend_from_slice(b),
+        }
+    }
+
+    /// Bytes this response occupies on the wire (terminator included).
+    pub fn wire_len(&self) -> usize {
+        match self {
+            Payload::Json(s) => s.len() + 1,
+            Payload::Bin(b) => b.len(),
+        }
+    }
+}
+
+impl From<String> for Payload {
+    fn from(s: String) -> Self {
+        Payload::Json(Arc::from(s))
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(b: Vec<u8>) -> Self {
+        Payload::Bin(Arc::from(b))
+    }
+}
+
+/// A response rendered once in *both* encodings, id-less and canonical.
+/// This is what the in-flight registry fans out and what the cache stores:
+/// each waiter picks its own wire's bytes (an `Arc` clone) and splices its
+/// own id, so N coalesced waiters — JSON and binary mixed — share two
+/// serializations total, and a cache hit re-encodes nothing.
+#[derive(Clone, Debug)]
+pub struct Rendered {
+    pub json: Arc<str>,
+    pub bin: Arc<[u8]>,
+}
+
+/// How to encode a success result into a binary frame body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespKind {
+    /// Compact JSON text inside the frame (small scalar documents:
+    /// chain/lle results, introspection).
+    Generic,
+    /// Dense gbin tensor container (scan results: `logmag`/`sign`
+    /// matrices plus a `meta` tensor).
+    Scan,
+}
+
+impl Rendered {
+    pub fn ok(result: &Json, cached: bool, kind: RespKind) -> Self {
+        Rendered {
+            json: Arc::from(ok_line(result.clone(), cached)),
+            bin: Arc::from(encode_ok_frame(result, cached, kind, None)),
+        }
+    }
+
+    pub fn err(msg: &str, retry_after_ms: Option<u64>) -> Self {
+        Rendered {
+            json: Arc::from(err_line(msg, retry_after_ms)),
+            bin: Arc::from(encode_err_frame(msg, retry_after_ms, None)),
+        }
+    }
+
+    /// Pick the wire encoding for one waiter and splice its id. With no id
+    /// (the common case) this is an `Arc` clone — zero bytes copied.
+    pub fn to_payload(&self, wire: Wire, id: Option<&Json>) -> Payload {
+        match (wire, id) {
+            (Wire::Json, None) => Payload::Json(Arc::clone(&self.json)),
+            (Wire::Json, Some(id)) => Payload::Json(Arc::from(attach_id(&self.json, id))),
+            (Wire::Binary, None) => Payload::Bin(Arc::clone(&self.bin)),
+            (Wire::Binary, Some(id)) => Payload::Bin(Arc::from(frame_with_id(&self.bin, id))),
+        }
+    }
+}
+
+/// What the front of a mixed-protocol receive buffer holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameScan {
+    /// Not enough bytes to classify or complete a message.
+    NeedMore,
+    /// A newline-framed text line: content ends at `nl` (the `\n` index).
+    Line { nl: usize },
+    /// A complete binary frame of `total` bytes (header + payload).
+    Frame { total: usize },
+    /// A binary frame header announcing a `len`-byte payload that has not
+    /// fully arrived — callers can enforce size caps before buffering.
+    PartialFrame { len: usize },
+}
+
+/// Classify the front of a buffer: binary iff it starts with the full
+/// [`FRAME_MAGIC`] (a proper prefix of the magic is still ambiguous —
+/// `NeedMore`); anything else is line-framed.
+pub fn scan_wire(buf: &[u8]) -> FrameScan {
+    let m = buf.len().min(FRAME_MAGIC.len());
+    if buf[..m] == FRAME_MAGIC[..m] {
+        if buf.len() < FRAME_HEADER {
+            return FrameScan::NeedMore;
+        }
+        let len = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes")) as usize;
+        let total = FRAME_HEADER + len;
+        if buf.len() >= total {
+            FrameScan::Frame { total }
+        } else {
+            FrameScan::PartialFrame { len }
+        }
+    } else {
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(nl) => FrameScan::Line { nl },
+            None => FrameScan::NeedMore,
+        }
+    }
+}
+
+/// Prepend the frame header to a finished payload.
+fn wrap_frame(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Bounded little-endian reader over a frame payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!("binary frame truncated at byte {}", self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes after the frame body",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, x: usize) {
+    out.extend_from_slice(&(x as u32).to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_id(out: &mut Vec<u8>, id: Option<&Json>) {
+    match id {
+        None => put_u32(out, 0),
+        Some(id) => {
+            let txt = json::write(id);
+            put_u32(out, txt.len());
+            out.extend_from_slice(txt.as_bytes());
+        }
+    }
+}
+
+fn take_id(cur: &mut Cur) -> Result<Option<Json>, String> {
+    let n = cur.u32()? as usize;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > MAX_ID_BYTES {
+        return Err(format!("'id' exceeds {MAX_ID_BYTES} bytes"));
+    }
+    let raw = cur.take(n)?;
+    let txt = std::str::from_utf8(raw).map_err(|_| "'id' is not utf-8".to_string())?;
+    let v = json::parse(txt).map_err(|e| format!("bad 'id': {e}"))?;
+    validate_id_value(&v).map(Some)
+}
+
+const OP_CHAIN: u8 = 1;
+const OP_SCAN: u8 = 2;
+const OP_LLE: u8 = 3;
+const OP_INFO: u8 = 4;
+const OP_METRICS: u8 = 5;
+const OP_TRACE: u8 = 6;
+
+fn method_tag(m: Method) -> u8 {
+    match m {
+        Method::F32 => 0,
+        Method::F64 => 1,
+        Method::GoomC64 => 2,
+        Method::GoomC128 => 3,
+        Method::GoomHlo => unreachable!("goomhlo is rejected before encoding"),
+    }
+}
+
+/// Encode one request as a complete binary frame. The encoding has no
+/// defaults — every field is explicit and fixed-width — so a decoded
+/// request re-encodes to the same bytes (the binary canonical form the
+/// router forwards shard-ward).
+pub fn encode_request_frame(req: &Request, id: Option<&Json>) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.push(REQ_TAG);
+    put_id(&mut p, id);
+    match req {
+        Request::Info => p.push(OP_INFO),
+        Request::Metrics => p.push(OP_METRICS),
+        Request::Trace { limit } => {
+            p.push(OP_TRACE);
+            put_u64(&mut p, *limit as u64);
+        }
+        Request::Chain(c) => {
+            p.push(OP_CHAIN);
+            p.push(method_tag(c.method));
+            put_u32(&mut p, c.d);
+            put_u64(&mut p, c.steps as u64);
+            put_u64(&mut p, c.seed);
+        }
+        Request::Lle(l) => {
+            p.push(OP_LLE);
+            put_u32(&mut p, l.system.len());
+            p.extend_from_slice(l.system.as_bytes());
+            put_u64(&mut p, l.steps as u64);
+            put_u64(&mut p, l.burn as u64);
+            put_u32(&mut p, l.chunks);
+        }
+        Request::Scan(s) => {
+            p.push(OP_SCAN);
+            put_u32(&mut p, s.d);
+            put_u32(&mut p, s.chunks);
+            let n = s.mats.len();
+            let mut logmag = Vec::with_capacity(n * s.d * s.d);
+            let mut sign = Vec::with_capacity(n * s.d * s.d);
+            for m in &s.mats {
+                logmag.extend_from_slice(&m.logmag);
+                sign.extend_from_slice(&m.sign);
+            }
+            let shape = vec![n, s.d, s.d];
+            let mut tensors = BTreeMap::new();
+            tensors.insert(
+                "logmag".to_string(),
+                HostTensor::F64 { shape: shape.clone(), data: logmag },
+            );
+            tensors.insert("sign".to_string(), HostTensor::F64 { shape, data: sign });
+            p.extend_from_slice(&gbin::encode_gbin(&tensors));
+        }
+    }
+    wrap_frame(p)
+}
+
+fn bounded(name: &str, v: u64, min: usize, max: usize) -> Result<usize, String> {
+    if v < min as u64 || v > max as u64 {
+        return Err(format!("'{name}' = {v} out of range [{min}, {max}]"));
+    }
+    Ok(v as usize)
+}
+
+/// Decode one binary request frame *payload* (header already stripped) to
+/// the same `(Request, id)` its JSON twin parses to — every bounds check
+/// mirrors [`Request::parse`] exactly, so both spellings share one
+/// canonical form and one cache key by construction.
+pub fn decode_request_frame(payload: &[u8]) -> Result<(Request, Option<Json>), String> {
+    let mut cur = Cur { buf: payload, pos: 0 };
+    if cur.u8()? != REQ_TAG {
+        return Err("frame is not a request".to_string());
+    }
+    let id = take_id(&mut cur)?;
+    let op = cur.u8()?;
+    let req = match op {
+        OP_INFO => {
+            cur.done()?;
+            Request::Info
+        }
+        OP_METRICS => {
+            cur.done()?;
+            Request::Metrics
+        }
+        OP_TRACE => {
+            let limit = bounded("limit", cur.u64()?, 1, MAX_TRACE_LIMIT)?;
+            cur.done()?;
+            Request::Trace { limit }
+        }
+        OP_CHAIN => {
+            let method = match cur.u8()? {
+                0 => Method::F32,
+                1 => Method::F64,
+                2 => Method::GoomC64,
+                3 => Method::GoomC128,
+                other => return Err(format!("unknown method tag {other}")),
+            };
+            let d = bounded("d", cur.u32()? as u64, 1, MAX_CHAIN_D)?;
+            let steps = bounded("steps", cur.u64()?, 0, MAX_CHAIN_STEPS)?;
+            let seed = cur.u64()?;
+            if seed >= 9_007_199_254_740_992 {
+                return Err("'seed' must be an integer in [0, 2^53)".to_string());
+            }
+            cur.done()?;
+            let work = (d as u128).pow(3) * steps as u128;
+            if work > MAX_CHAIN_WORK {
+                return Err(format!(
+                    "chain work d^3*steps = {work} exceeds the budget {MAX_CHAIN_WORK}; \
+                     reduce 'steps' at large 'd'"
+                ));
+            }
+            Request::Chain(ChainReq { method, d, steps, seed })
+        }
+        OP_LLE => {
+            let n = cur.u32()? as usize;
+            let system = std::str::from_utf8(cur.take(n)?)
+                .map_err(|_| "'system' is not utf-8".to_string())?
+                .to_ascii_lowercase();
+            let steps = bounded("steps", cur.u64()?, 1, MAX_LLE_STEPS)?;
+            let burn = bounded("burn", cur.u64()?, 0, MAX_LLE_BURN)?;
+            let chunks = bounded("chunks", cur.u32()? as u64, 1, MAX_CHUNKS)?;
+            cur.done()?;
+            Request::Lle(LleReq { system, steps, burn, chunks })
+        }
+        OP_SCAN => {
+            let d = bounded("d", cur.u32()? as u64, 1, MAX_SCAN_D)?;
+            let chunks = bounded("chunks", cur.u32()? as u64, 1, MAX_CHUNKS)?;
+            let tensors =
+                gbin::decode_gbin(cur.rest()).map_err(|e| format!("scan payload: {e:#}"))?;
+            let (lm_shape, lm) = match tensors.get("logmag") {
+                Some(HostTensor::F64 { shape, data }) => (shape, data),
+                _ => return Err("scan requires an f64 'logmag' tensor".to_string()),
+            };
+            let (sg_shape, sg) = match tensors.get("sign") {
+                Some(HostTensor::F64 { shape, data }) => (shape, data),
+                _ => return Err("scan requires an f64 'sign' tensor".to_string()),
+            };
+            let n = match lm_shape.as_slice() {
+                [n, rd, cd] if *rd == d && *cd == d => *n,
+                other => {
+                    return Err(format!("'logmag' shape {other:?} does not match [n, {d}, {d}]"))
+                }
+            };
+            if sg_shape != lm_shape {
+                return Err(format!(
+                    "'sign' shape {sg_shape:?} does not match 'logmag' {lm_shape:?}"
+                ));
+            }
+            if n == 0 {
+                return Err("'logmag' must hold at least one matrix".to_string());
+            }
+            if n > MAX_SCAN_LEN {
+                return Err(format!("'logmag' holds {n} matrices (max {MAX_SCAN_LEN})"));
+            }
+            let mut mats = Vec::with_capacity(n);
+            for t in 0..n {
+                let mut m = GoomMat::<f64>::zeros(d, d);
+                let base = t * d * d;
+                for i in 0..d * d {
+                    let l = lm[base + i];
+                    // JSON can only express finite magnitudes or the GOOM
+                    // zero (`null` → -inf); hold binary to the same set so
+                    // the canonical JSON form round-trips exactly.
+                    if !l.is_finite() && l != f64::NEG_INFINITY {
+                        return Err(format!("logmag[{t}][{i}] not a number"));
+                    }
+                    let s = sg[base + i];
+                    if s != 1.0 && s != -1.0 {
+                        return Err(format!("sign[{t}][{i}] must be 1 or -1, got {s}"));
+                    }
+                    m.logmag[i] = l;
+                    m.sign[i] = s;
+                }
+                mats.push(m);
+            }
+            Request::Scan(ScanReq { d, mats, chunks })
+        }
+        other => return Err(format!("unknown op tag {other}")),
+    };
+    Ok((req, id))
+}
+
+/// Encode a success response frame. `RespKind::Scan` results travel as a
+/// gbin tensor container (dense `logmag`/`sign` + a 3-entry `meta` tensor
+/// `[d, len, log_frobenius]`); everything else embeds compact JSON text.
+/// Non-finite scan values decode back to `null`, matching the JSON wire.
+pub fn encode_ok_frame(result: &Json, cached: bool, kind: RespKind, id: Option<&Json>) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.push(RESP_TAG);
+    put_id(&mut p, id);
+    p.push(1); // ok
+    p.push(cached as u8);
+    if kind == RespKind::Scan {
+        if let Some(body) = scan_result_tensors(result) {
+            p.push(RESULT_SCAN);
+            p.extend_from_slice(&body);
+            return wrap_frame(p);
+        }
+    }
+    p.push(RESULT_JSON);
+    let txt = json::write(result);
+    put_u32(&mut p, txt.len());
+    p.extend_from_slice(txt.as_bytes());
+    wrap_frame(p)
+}
+
+/// Encode an error response frame (mirror of [`err_line`]).
+pub fn encode_err_frame(msg: &str, retry_after_ms: Option<u64>, id: Option<&Json>) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.push(RESP_TAG);
+    put_id(&mut p, id);
+    p.push(0); // err
+    put_u32(&mut p, msg.len());
+    p.extend_from_slice(msg.as_bytes());
+    match retry_after_ms {
+        None => p.push(0),
+        Some(ms) => {
+            p.push(1);
+            put_u64(&mut p, ms);
+        }
+    }
+    wrap_frame(p)
+}
+
+/// Build the gbin container for a scan result document; `None` when the
+/// document does not look like one (the caller falls back to JSON text).
+fn scan_result_tensors(result: &Json) -> Option<Vec<u8>> {
+    let d = result.get("d")?.as_usize()?;
+    let len = result.get("len")?.as_usize()?;
+    let logmag = result.get("logmag")?.as_arr()?;
+    let sign = result.get("sign")?.as_arr()?;
+    let frob = result.get("log_frobenius")?;
+    if logmag.len() != d * d || sign.len() != d * d {
+        return None;
+    }
+    let to_f64 = |v: &Json| match v {
+        Json::Null => Some(f64::NAN),
+        Json::Num(x) => Some(*x),
+        _ => None,
+    };
+    let lm: Option<Vec<f64>> = logmag.iter().map(to_f64).collect();
+    let sg: Option<Vec<f64>> = sign.iter().map(to_f64).collect();
+    let meta = vec![d as f64, len as f64, to_f64(frob)?];
+    let mut tensors = BTreeMap::new();
+    tensors.insert("logmag".to_string(), HostTensor::F64 { shape: vec![d, d], data: lm? });
+    tensors.insert("sign".to_string(), HostTensor::F64 { shape: vec![d, d], data: sg? });
+    tensors.insert("meta".to_string(), HostTensor::F64 { shape: vec![3], data: meta });
+    Some(gbin::encode_gbin(&tensors))
+}
+
+/// Decode one binary response frame *payload* to the same JSON document
+/// its newline twin parses to: `{"id":…,"ok":…,"cached":…,"result":…}` or
+/// `{"id":…,"ok":false,"error":…,"retry_after_ms":…}`. Clients get one
+/// document shape regardless of wire encoding — decoded results are
+/// value-identical across protocols.
+pub fn decode_response_frame(payload: &[u8]) -> Result<Json, String> {
+    let mut cur = Cur { buf: payload, pos: 0 };
+    if cur.u8()? != RESP_TAG {
+        return Err("frame is not a response".to_string());
+    }
+    let id = take_id(&mut cur)?;
+    let mut doc = BTreeMap::new();
+    if let Some(id) = id {
+        doc.insert("id".to_string(), id);
+    }
+    match cur.u8()? {
+        0 => {
+            let n = cur.u32()? as usize;
+            let msg = std::str::from_utf8(cur.take(n)?)
+                .map_err(|_| "error message is not utf-8".to_string())?
+                .to_string();
+            doc.insert("ok".to_string(), Json::Bool(false));
+            doc.insert("error".to_string(), Json::Str(msg));
+            if cur.u8()? != 0 {
+                doc.insert("retry_after_ms".to_string(), num(cur.u64()? as f64));
+            }
+            cur.done()?;
+        }
+        1 => {
+            let cached = cur.u8()? != 0;
+            doc.insert("ok".to_string(), Json::Bool(true));
+            doc.insert("cached".to_string(), Json::Bool(cached));
+            let result = match cur.u8()? {
+                RESULT_JSON => {
+                    let n = cur.u32()? as usize;
+                    let txt = std::str::from_utf8(cur.take(n)?)
+                        .map_err(|_| "result is not utf-8".to_string())?;
+                    cur.done()?;
+                    json::parse(txt).map_err(|e| format!("bad result json: {e}"))?
+                }
+                RESULT_SCAN => {
+                    let tensors = gbin::decode_gbin(cur.rest())
+                        .map_err(|e| format!("scan result payload: {e:#}"))?;
+                    decode_scan_result(&tensors)?
+                }
+                other => return Err(format!("unknown result kind {other}")),
+            };
+            doc.insert("result".to_string(), result);
+        }
+        other => return Err(format!("unknown response status {other}")),
+    }
+    Ok(Json::Obj(doc))
+}
+
+fn decode_scan_result(tensors: &BTreeMap<String, HostTensor>) -> Result<Json, String> {
+    let meta = match tensors.get("meta") {
+        Some(HostTensor::F64 { data, .. }) if data.len() == 3 => data,
+        _ => return Err("scan result missing 3-entry 'meta' tensor".to_string()),
+    };
+    let lm = match tensors.get("logmag") {
+        Some(HostTensor::F64 { data, .. }) => data,
+        _ => return Err("scan result missing f64 'logmag' tensor".to_string()),
+    };
+    let sg = match tensors.get("sign") {
+        Some(HostTensor::F64 { data, .. }) => data,
+        _ => return Err("scan result missing f64 'sign' tensor".to_string()),
+    };
+    // Exactly `scan_result_json`'s document: non-finite magnitudes (GOOM
+    // zeros, overflow) become `null`, signs stay plain numbers.
+    Ok(obj(vec![
+        ("d", num(meta[0])),
+        ("len", num(meta[1])),
+        ("logmag", Json::Arr(lm.iter().copied().map(num_or_null).collect())),
+        ("sign", Json::Arr(sg.iter().map(|&x| num(x)).collect())),
+        ("log_frobenius", num_or_null(meta[2])),
+    ]))
+}
+
+/// Splice an `id` into a finished id-less response frame — the binary
+/// analogue of [`attach_id`]: the frame body past the id slot is reused
+/// byte-for-byte, so coalesced waiters sharing one rendered frame each
+/// get their own id without re-encoding the result.
+pub fn frame_with_id(frame: &[u8], id: &Json) -> Vec<u8> {
+    // magic(4) | len(4) | tag(1) | id_len(4) | id | rest
+    if frame.len() < FRAME_HEADER + 5 || frame[..4] != FRAME_MAGIC {
+        return frame.to_vec();
+    }
+    let old_id_len = u32::from_le_bytes(frame[9..13].try_into().expect("4 bytes")) as usize;
+    let rest_at = FRAME_HEADER + 5 + old_id_len;
+    if rest_at > frame.len() {
+        return frame.to_vec();
+    }
+    let id_txt = json::write(id);
+    let rest = &frame[rest_at..];
+    let payload_len = 5 + id_txt.len() + rest.len();
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload_len);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.push(frame[FRAME_HEADER]);
+    out.extend_from_slice(&(id_txt.len() as u32).to_le_bytes());
+    out.extend_from_slice(id_txt.as_bytes());
+    out.extend_from_slice(rest);
+    out
 }
 
 #[cfg(test)]
@@ -813,5 +1453,270 @@ mod tests {
         let doc = json::parse(&err).unwrap();
         assert_eq!(doc.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    // ------------------------------------------------- binary frame codec --
+
+    fn decode_frame(frame: &[u8]) -> Result<(Request, Option<Json>), String> {
+        assert_eq!(&frame[..4], &FRAME_MAGIC);
+        let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+        assert_eq!(frame.len(), FRAME_HEADER + len, "self-describing length");
+        decode_request_frame(&frame[FRAME_HEADER..])
+    }
+
+    fn random_scan_req(seed: u64, d: usize, n: usize) -> Request {
+        let mut rng = rng_from_seed(seed);
+        let mut mats = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut m = GoomMat::<f64>::zeros(d, d);
+            for i in 0..d * d {
+                m.logmag[i] = match rng.next_u64() % 8 {
+                    0 => f64::NEG_INFINITY, // GOOM zero
+                    _ => (rng.next_u64() % 2_000_000) as f64 / 1000.0 - 1000.0,
+                };
+                m.sign[i] = if rng.next_u64() % 2 == 0 { 1.0 } else { -1.0 };
+            }
+            mats.push(m);
+        }
+        Request::Scan(ScanReq { d, mats, chunks: 1 + (seed as usize % MAX_CHUNKS) })
+    }
+
+    #[test]
+    fn binary_request_frames_round_trip_every_op() {
+        let reqs = vec![
+            Request::Info,
+            Request::Metrics,
+            Request::Trace { limit: 77 },
+            Request::Chain(ChainReq {
+                method: Method::GoomC128,
+                d: 16,
+                steps: 5000,
+                seed: 9_007_199_254_740_991, // 2^53 - 1, the largest JSON-exact seed
+            }),
+            Request::Lle(LleReq {
+                system: "lorenz".into(),
+                steps: 4000,
+                burn: 1000,
+                chunks: 64,
+            }),
+            random_scan_req(11, 3, 5),
+        ];
+        for req in reqs {
+            for id in [None, Some(Json::Str("req-1".into())), Some(Json::Num(7.0))] {
+                let frame = encode_request_frame(&req, id.as_ref());
+                let (back, back_id) = decode_frame(&frame).unwrap();
+                assert_eq!(back, req);
+                assert_eq!(back_id, id);
+                // Binary canonical form: decode∘encode is the identity on
+                // frames, like canonical_line round-trips for JSON.
+                assert_eq!(encode_request_frame(&back, back_id.as_ref()), frame);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_and_json_twins_share_one_canonical_key() {
+        let chain = parse_line(r#"{"op":"chain","method":"f64","d":9,"steps":17,"seed":3}"#)
+            .unwrap();
+        let scan = random_scan_req(21, 4, 3);
+        for req in [chain, scan] {
+            let frame = encode_request_frame(&req, None);
+            let (bin_req, _) = decode_frame(&frame).unwrap();
+            assert_eq!(bin_req.canonical_key(), req.canonical_key());
+            assert_eq!(bin_req.canonical_line(), req.canonical_line());
+            // And the JSON spelling of the canonical form parses back to
+            // the same request — both wires name one cache entry.
+            let twin = parse_line(&req.canonical_line().unwrap()).unwrap();
+            assert_eq!(bin_req, twin);
+        }
+    }
+
+    #[test]
+    fn binary_decode_enforces_the_same_bounds_as_json() {
+        // Each case: mutate one field of a valid frame, expect an error
+        // whose text matches the JSON-side rejection family.
+        let check = |req: &Request, mutate: &dyn Fn(&mut Vec<u8>), needle: &str| {
+            let mut frame = encode_request_frame(req, None);
+            mutate(&mut frame);
+            let err = decode_request_frame(&frame[FRAME_HEADER..]).unwrap_err();
+            assert!(err.contains(needle), "want '{needle}' in '{err}'");
+        };
+        let chain = Request::Chain(ChainReq {
+            method: Method::GoomC64,
+            d: 8,
+            steps: 1000,
+            seed: 42,
+        });
+        // d = 2048 > MAX_CHAIN_D (offset: header 8 + tag 1 + id_len 4 + op 1 + method 1).
+        check(&chain, &|f| f[15..19].copy_from_slice(&2048u32.to_le_bytes()), "'d' = 2048");
+        // steps over MAX_CHAIN_STEPS.
+        check(
+            &chain,
+            &|f| f[19..27].copy_from_slice(&300_000u64.to_le_bytes()),
+            "'steps' = 300000",
+        );
+        // seed = 2^53 (first non-exact integer).
+        check(
+            &chain,
+            &|f| f[27..35].copy_from_slice(&9_007_199_254_740_992u64.to_le_bytes()),
+            "'seed' must be an integer in [0, 2^53)",
+        );
+        // Work budget: d=1024 at steps=1000 blows d³·steps.
+        check(&chain, &|f| f[15..19].copy_from_slice(&1024u32.to_le_bytes()), "exceeds the budget");
+        // Unknown method tag.
+        check(&chain, &|f| f[14] = 9, "unknown method tag 9");
+        // Unknown op tag.
+        check(&chain, &|f| f[13] = 0, "unknown op tag 0");
+        // Trailing garbage after a fixed-size body is rejected, not ignored.
+        check(
+            &chain,
+            &|f| {
+                f.push(0);
+                let len = (f.len() - FRAME_HEADER) as u32;
+                f[4..8].copy_from_slice(&len.to_le_bytes());
+            },
+            "trailing bytes",
+        );
+        // Scan: NaN logmag (JSON has no literal for it) and sign ≠ ±1.
+        let scan = random_scan_req(5, 2, 1);
+        let sign_err = decode_frame(&{
+            let Request::Scan(s) = &scan else { unreachable!() };
+            let mut bad = s.clone();
+            bad.mats[0].sign[2] = 0.5;
+            encode_request_frame(&Request::Scan(bad), None)
+        })
+        .unwrap_err();
+        assert!(sign_err.contains("must be 1 or -1"), "{sign_err}");
+        let nan_err = decode_frame(&{
+            let Request::Scan(s) = &scan else { unreachable!() };
+            let mut bad = s.clone();
+            bad.mats[0].logmag[1] = f64::NAN;
+            encode_request_frame(&Request::Scan(bad), None)
+        })
+        .unwrap_err();
+        assert!(nan_err.contains("not a number"), "{nan_err}");
+        // +inf is not a GOOM value either (JSON could never have said it).
+        let inf_err = decode_frame(&{
+            let Request::Scan(s) = &scan else { unreachable!() };
+            let mut bad = s.clone();
+            bad.mats[0].logmag[0] = f64::INFINITY;
+            encode_request_frame(&Request::Scan(bad), None)
+        })
+        .unwrap_err();
+        assert!(inf_err.contains("not a number"), "{inf_err}");
+    }
+
+    #[test]
+    fn every_truncation_of_a_request_frame_payload_errors() {
+        for req in [
+            Request::Chain(ChainReq { method: Method::F32, d: 4, steps: 10, seed: 1 }),
+            random_scan_req(31, 2, 2),
+            Request::Trace { limit: 5 },
+        ] {
+            let frame = encode_request_frame(&req, Some(&Json::Num(3.0)));
+            let payload = &frame[FRAME_HEADER..];
+            for cut in 0..payload.len() {
+                assert!(
+                    decode_request_frame(&payload[..cut]).is_err(),
+                    "cut at {cut}/{} must error",
+                    payload.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn response_frames_decode_to_the_json_twin_document() {
+        // Generic (chain-shaped) result, miss then hit.
+        let result = obj(vec![
+            ("d", num(8.0)),
+            ("final_max_logmag", num(123.456)),
+            ("failed", Json::Bool(false)),
+            ("dynamic_range_decades", Json::Null),
+        ]);
+        for cached in [false, true] {
+            let frame = encode_ok_frame(&result, cached, RespKind::Generic, None);
+            let doc = decode_response_frame(&frame[FRAME_HEADER..]).unwrap();
+            assert_eq!(doc, json::parse(&ok_line(result.clone(), cached)).unwrap());
+        }
+        // Scan result rides gbin tensors yet decodes to the same document,
+        // GOOM zeros (`null`) included.
+        let scan_result = obj(vec![
+            ("d", num(2.0)),
+            ("len", num(3.0)),
+            ("logmag", Json::Arr(vec![num(1.5), Json::Null, num(-2.0), num(0.0)])),
+            ("sign", Json::Arr(vec![num(1.0), num(1.0), num(-1.0), num(1.0)])),
+            ("log_frobenius", num(4.25)),
+        ]);
+        let frame = encode_ok_frame(&scan_result, false, RespKind::Scan, None);
+        let doc = decode_response_frame(&frame[FRAME_HEADER..]).unwrap();
+        assert_eq!(doc, json::parse(&ok_line(scan_result.clone(), false)).unwrap());
+        // A scan-kind result that is not scan-shaped falls back to JSON text.
+        let odd = obj(vec![("x", num(1.0))]);
+        let frame = encode_ok_frame(&odd, false, RespKind::Scan, None);
+        let doc = decode_response_frame(&frame[FRAME_HEADER..]).unwrap();
+        assert_eq!(doc, json::parse(&ok_line(odd, false)).unwrap());
+        // Errors, with and without retry_after_ms.
+        for retry in [None, Some(250)] {
+            let frame = encode_err_frame("server busy: no", retry, None);
+            let doc = decode_response_frame(&frame[FRAME_HEADER..]).unwrap();
+            assert_eq!(doc, json::parse(&err_line("server busy: no", retry)).unwrap());
+        }
+    }
+
+    #[test]
+    fn frame_with_id_matches_encoding_the_id_directly() {
+        let result = obj(vec![("v", num(9.0))]);
+        let bare = encode_ok_frame(&result, true, RespKind::Generic, None);
+        for id in [Json::Str("abc".into()), Json::Num(12.0)] {
+            let spliced = frame_with_id(&bare, &id);
+            let direct = encode_ok_frame(&result, true, RespKind::Generic, Some(&id));
+            assert_eq!(spliced, direct);
+            let doc = decode_response_frame(&spliced[FRAME_HEADER..]).unwrap();
+            assert_eq!(doc.get("id"), Some(&id));
+        }
+        // Splicing over an existing id replaces it.
+        let twice = frame_with_id(&frame_with_id(&bare, &Json::Num(1.0)), &Json::Num(2.0));
+        let doc = decode_response_frame(&twice[FRAME_HEADER..]).unwrap();
+        assert_eq!(doc.get("id"), Some(&Json::Num(2.0)));
+        // And the Rendered fan-out path agrees with both single encoders.
+        let r = Rendered::ok(&result, true, RespKind::Generic);
+        let id = Json::Num(5.0);
+        let direct = encode_ok_frame(&result, true, RespKind::Generic, Some(&id));
+        match r.to_payload(Wire::Binary, Some(&id)) {
+            Payload::Bin(b) => assert_eq!(&b[..], &direct[..]),
+            other => panic!("wrong payload kind {other:?}"),
+        }
+        match r.to_payload(Wire::Json, Some(&id)) {
+            Payload::Json(s) => {
+                assert_eq!(&s[..], attach_id(&ok_line(result.clone(), true), &id))
+            }
+            other => panic!("wrong payload kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scan_wire_classifies_mixed_buffers() {
+        // Ambiguous magic prefixes need more bytes.
+        for p in [&b""[..], b"G", b"GB", b"GBF"] {
+            assert_eq!(scan_wire(p), FrameScan::NeedMore, "{p:?}");
+        }
+        // Anything diverging from the magic is line-framed.
+        assert_eq!(scan_wire(b"{\"op\":\"info\"}"), FrameScan::NeedMore);
+        assert_eq!(scan_wire(b"{\"op\":\"info\"}\n"), FrameScan::Line { nl: 13 });
+        assert_eq!(scan_wire(b"GBX corrupt\n"), FrameScan::Line { nl: 11 });
+        assert_eq!(scan_wire(b"GBFX\n"), FrameScan::Line { nl: 4 });
+        // Frame header declares the payload; completeness is byte-exact.
+        let frame = encode_request_frame(&Request::Info, None);
+        assert_eq!(scan_wire(&frame[..4]), FrameScan::NeedMore);
+        assert_eq!(scan_wire(&frame[..7]), FrameScan::NeedMore);
+        let len = frame.len() - FRAME_HEADER;
+        assert_eq!(scan_wire(&frame[..8]), FrameScan::PartialFrame { len });
+        assert_eq!(scan_wire(&frame[..frame.len() - 1]), FrameScan::PartialFrame { len });
+        assert_eq!(scan_wire(&frame), FrameScan::Frame { total: frame.len() });
+        // Trailing bytes past one frame don't change the classification.
+        let mut two = frame.clone();
+        two.extend_from_slice(b"{\"op\":\"info\"}\n");
+        assert_eq!(scan_wire(&two), FrameScan::Frame { total: frame.len() });
     }
 }

@@ -11,10 +11,17 @@
 //! removing a backend only remaps the keys that backend owned.
 //!
 //! Requests are re-encoded in canonical form before forwarding, so shards
-//! see normalized traffic regardless of client spelling. Introspection ops
-//! (`info`/`metrics`) are answered by the router itself — its metrics
-//! carry per-shard routing counters (`routed[host:port]`), failovers,
-//! errors, and the reactor's own counters under `"reactor"`.
+//! see normalized traffic regardless of client spelling. Both wire
+//! encodings relay: a JSON client's request forwards as the canonical
+//! JSON line, a binary client's as the canonical binary frame — and the
+//! shard's response (line or frame) relays back to the client *verbatim*,
+//! with no decode/re-encode round-trip in the router. Because a binary
+//! request and its JSON twin derive the same canonical key, they rank
+//! onto the same shard and share its cache entry. Introspection ops
+//! (`info`/`metrics`) are answered by the router itself, in the client's
+//! encoding — its metrics carry per-shard routing counters
+//! (`routed[host:port]`), failovers, errors, and the reactor's own
+//! counters under `"reactor"`.
 //!
 //! The router runs on the shared serving reactor
 //! ([`super::event_loop`]): one loop thread multiplexes every client
@@ -45,7 +52,10 @@
 use super::admission::{Admission, AdmissionConfig};
 use super::event_loop::{self, App, Core, FrontConfig, LoopCtl, ReactorStats};
 use super::faults;
-use super::protocol::{attach_id, err_line, num, num_or_null, obj, ok_line, Request};
+use super::protocol::{
+    attach_id, encode_request_frame, num, num_or_null, obj, Payload, Rendered, Request, RespKind,
+    Wire,
+};
 use crate::coordinator::Metrics;
 use crate::obs::{self, ReqCtx};
 use crate::util::json::Json;
@@ -399,16 +409,17 @@ impl Breaker {
 
 // -------------------------------------------------------------- relay app --
 
-/// One relayed request awaiting its backend's response line.
+/// One relayed request awaiting its backend's response message.
 struct RelayEntry {
     /// Reactor client connection and request slot the answer belongs to.
     conn: u64,
     seq: u64,
-    /// Canonical request line — with the client's `id` spliced back on when
-    /// one was sent, so the shard traces under the same id and echoes it
-    /// (the echoed response relays to the client verbatim). (Re)sent as-is
-    /// on every attempt.
-    line: String,
+    /// Canonical request payload in the client's own encoding — a JSON
+    /// line or a binary frame — with the client's `id` spliced back on
+    /// when one was sent, so the shard traces under the same id and echoes
+    /// it (the echoed response relays to the client verbatim, without a
+    /// decode/re-encode round-trip). (Re)sent as-is on every attempt.
+    payload: Payload,
     /// Rendezvous ranking for this request's key, best first.
     ranked: Vec<usize>,
     /// Position in `ranked` currently being tried.
@@ -417,17 +428,10 @@ struct RelayEntry {
     /// the possibly-stale pooled connection, then one fresh retry — the
     /// blocking relay's ladder).
     tries: u8,
-    /// The client's wire `id`, for error lines the router itself mints
-    /// (shard responses already carry the echo).
+    /// The client's wire `id` and encoding, for responses the router
+    /// itself mints (shard responses already carry the echo).
     id: Option<Json>,
-}
-
-/// Echo helper: splice the wire `id` onto a router-minted response line.
-fn with_id(line: String, id: &Option<Json>) -> String {
-    match id {
-        Some(id) => attach_id(&line, id),
-        None => line,
-    }
+    wire: Wire,
 }
 
 /// Sans-IO relay brain: requests in, backend sends + completions out. All
@@ -482,7 +486,7 @@ impl RelayApp {
             self.breakers[idx].state = BreakerState::HalfOpen;
             match core.backend_open(&self.inner.cfg.backends[idx]) {
                 Ok(bid) => {
-                    core.backend_send(bid, "{\"op\":\"info\"}");
+                    core.backend_send(bid, &Payload::from("{\"op\":\"info\"}".to_string()));
                     self.probes.insert(bid, idx);
                     self.inner
                         .metrics
@@ -525,19 +529,19 @@ impl RelayApp {
     /// [`RelayApp::on_backend_down`]. Backends with a tripped breaker are
     /// skipped outright — an instant failover that consumes no retry
     /// attempts. Exhausting the ranking answers the client with the same
-    /// no-backend error line the blocking relay sent.
+    /// no-backend error the blocking relay sent, in the client's encoding.
     fn forward(&mut self, core: &mut Core, mut entry: RelayEntry) {
         loop {
             let Some(&idx) = entry.ranked.get(entry.rank_pos) else {
                 self.inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
-                let line = err_line(
+                let r = Rendered::err(
                     &format!(
                         "no backend available for request (tried {})",
                         entry.ranked.len()
                     ),
                     Some(self.inner.cfg.retry_after_ms),
                 );
-                core.complete(entry.conn, entry.seq, with_id(line, &entry.id));
+                core.complete(entry.conn, entry.seq, r.to_payload(entry.wire, entry.id.as_ref()));
                 return;
             };
             if !self.breakers[idx].available() {
@@ -570,11 +574,59 @@ impl RelayApp {
                     }
                 },
             };
-            core.backend_send(bid, &entry.line);
+            core.backend_send(bid, &entry.payload);
             let pending = self.pending.get_mut(&bid);
             pending.expect("pending queue exists for this conn").1.push_back(entry);
             return;
         }
+    }
+
+    /// One complete backend message — a JSON line or a binary frame —
+    /// relayed to the client connection that owns the FIFO front. Shard
+    /// responses are never decoded here: bytes in, bytes out, whichever
+    /// encoding the request went out in.
+    fn backend_msg(&mut self, core: &mut Core, backend: u64, payload: Payload) {
+        if let Some(idx) = self.probes.remove(&backend) {
+            // Half-open probe answered: the shard is back. Close the probe
+            // connection (relay traffic opens its own) and rejoin it to
+            // the rotation. Any complete message counts as life.
+            core.backend_close(backend);
+            self.note_backend_success(idx);
+            return;
+        }
+        let (idx, entry) = match self.pending.get_mut(&backend) {
+            None => return, // message from a connection already failed over
+            Some((idx, queue)) => (*idx, queue.pop_front()),
+        };
+        let Some(entry) = entry else {
+            // A response nobody asked for: the framing is desynced, and
+            // every later message on this connection would mis-match.
+            // Nothing is in flight, so the connection is safe to drop —
+            // closed in the core too, or its fd would stay polled until
+            // the remote side closed. The next request toward this backend
+            // opens a fresh one.
+            self.pending.remove(&backend);
+            if self.live.get(&idx) == Some(&backend) {
+                self.live.remove(&idx);
+            }
+            core.backend_close(backend);
+            self.inner
+                .metrics
+                .lock()
+                .expect("metrics lock")
+                .incr("backend_protocol_errors", 1);
+            return;
+        };
+        let addr = &self.inner.cfg.backends[idx];
+        {
+            let mut m = self.inner.metrics.lock().expect("metrics lock");
+            m.incr_labeled("routed", addr, 1);
+            if entry.rank_pos > 0 {
+                m.incr("route_failovers", 1);
+            }
+        }
+        self.note_backend_success(idx);
+        core.complete(entry.conn, entry.seq, payload);
     }
 }
 
@@ -597,25 +649,35 @@ impl App for RelayApp {
         Arc::clone(&self.inner.reactor)
     }
 
-    fn on_request(&mut self, core: &mut Core, conn: u64, seq: u64, req: Request, ctx: ReqCtx) {
+    #[allow(clippy::too_many_arguments)]
+    fn on_request(
+        &mut self,
+        core: &mut Core,
+        conn: u64,
+        seq: u64,
+        req: Request,
+        ctx: ReqCtx,
+        wire: Wire,
+    ) {
         // Every request is a breaker tick: open shards past their backoff
         // get their half-open probe before this request ranks.
         self.tick_breakers(core);
+        let id = ctx.id;
         match req {
             Request::Info => {
-                let line = ok_line(info_json(&self.inner), false);
-                core.complete(conn, seq, with_id(line, &ctx.id));
+                let r = Rendered::ok(&info_json(&self.inner), false, RespKind::Generic);
+                core.complete(conn, seq, r.to_payload(wire, id.as_ref()));
             }
             Request::Metrics => {
-                let line =
-                    ok_line(metrics_json(&self.inner, &self.breakers, &self.admission), false);
-                core.complete(conn, seq, with_id(line, &ctx.id));
+                let m = metrics_json(&self.inner, &self.breakers, &self.admission);
+                let r = Rendered::ok(&m, false, RespKind::Generic);
+                core.complete(conn, seq, r.to_payload(wire, id.as_ref()));
             }
             Request::Trace { limit } => {
                 // The router's own spans; clients stitch cross-tier traces
                 // by also asking each shard and merging (`repro trace`).
-                let line = ok_line(obs::spans_json(limit), false);
-                core.complete(conn, seq, with_id(line, &ctx.id));
+                let r = Rendered::ok(&obs::spans_json(limit), false, RespKind::Generic);
+                core.complete(conn, seq, r.to_payload(wire, id.as_ref()));
             }
             compute => {
                 // Per-client fairness, same policy as the shard tier: a
@@ -628,48 +690,66 @@ impl App for RelayApp {
                         m.incr("fairness_rejects", 1);
                         self.admission.retry_after_ms(0, 1, &m)
                     };
-                    let line = err_line(
+                    let r = Rendered::err(
                         &format!(
                             "router busy: {conn_inflight} requests in flight on this connection"
                         ),
                         Some(ms),
                     );
-                    core.complete(conn, seq, with_id(line, &ctx.id));
+                    core.complete(conn, seq, r.to_payload(wire, id.as_ref()));
                     return;
                 }
                 let key = compute
                     .canonical_key()
                     .expect("compute requests always have a canonical key");
-                let line = compute
-                    .canonical_line()
-                    .expect("compute requests always encode");
-                // Forward the wire id with the canonical line: the shard
-                // traces the relayed request under the client's id (the
-                // cross-tier stitch) and its echoed response relays back
-                // verbatim. The id is NOT part of the canonical key, so
-                // routing and shard caching are unaffected.
-                let line = with_id(line, &ctx.id);
+                // Forward the wire id with the canonical encoding: the
+                // shard traces the relayed request under the client's id
+                // (the cross-tier stitch) and its echoed response relays
+                // back verbatim — a JSON line or a binary frame, never
+                // decoded or re-encoded in the router. The id is NOT part
+                // of the canonical key, so routing and shard caching are
+                // unaffected; a binary request and its JSON twin share the
+                // same key and therefore the same shard.
+                let payload = match wire {
+                    Wire::Json => {
+                        let line = compute
+                            .canonical_line()
+                            .expect("compute requests always encode");
+                        let line = match &id {
+                            Some(id) => attach_id(&line, id),
+                            None => line,
+                        };
+                        Payload::from(line)
+                    }
+                    Wire::Binary => Payload::from(encode_request_frame(&compute, id.as_ref())),
+                };
                 // Canonicalizing spells out defaults (and re-attaches the
                 // id), so a request that just fit the inbound cap can
                 // exceed it (by ~tens of bytes). Reject here with a clear
                 // error rather than letting the shard's identical cap
-                // produce a confusing rejection.
-                if line.len() > self.inner.cfg.max_request_bytes {
+                // produce a confusing rejection. Bytes are counted the way
+                // the inbound cap counts them: line sans newline for JSON,
+                // whole frame for binary.
+                let canonical_bytes = match &payload {
+                    Payload::Json(s) => s.len(),
+                    Payload::Bin(b) => b.len(),
+                };
+                if canonical_bytes > self.inner.cfg.max_request_bytes {
                     self.inner
                         .metrics
                         .lock()
                         .expect("metrics lock")
                         .incr("oversized_rejects", 1);
-                    let err = err_line(
+                    let r = Rendered::err(
                         &format!(
                             "canonical request form is {} bytes, exceeding {} \
                              (raise --max-request-bytes on router and shards)",
-                            line.len(),
+                            canonical_bytes,
                             self.inner.cfg.max_request_bytes
                         ),
                         None,
                     );
-                    core.complete(conn, seq, with_id(err, &ctx.id));
+                    core.complete(conn, seq, r.to_payload(wire, id.as_ref()));
                     return;
                 }
                 let ranked = rendezvous_rank(&key, &self.inner.cfg.backends);
@@ -678,11 +758,12 @@ impl App for RelayApp {
                     RelayEntry {
                         conn,
                         seq,
-                        line,
+                        payload,
                         ranked,
                         rank_pos: 0,
                         tries: 0,
-                        id: ctx.id,
+                        id,
+                        wire,
                     },
                 );
             }
@@ -690,47 +771,11 @@ impl App for RelayApp {
     }
 
     fn on_backend_line(&mut self, core: &mut Core, backend: u64, line: String) {
-        if let Some(idx) = self.probes.remove(&backend) {
-            // Half-open probe answered: the shard is back. Close the probe
-            // connection (relay traffic opens its own) and rejoin it to
-            // the rotation.
-            core.backend_close(backend);
-            self.note_backend_success(idx);
-            return;
-        }
-        let (idx, entry) = match self.pending.get_mut(&backend) {
-            None => return, // line from a connection already failed over
-            Some((idx, queue)) => (*idx, queue.pop_front()),
-        };
-        let Some(entry) = entry else {
-            // A response nobody asked for: the framing is desynced, and
-            // every later line on this connection would mis-match. Nothing
-            // is in flight, so the connection is safe to drop — closed in
-            // the core too, or its fd would stay polled until the remote
-            // side closed. The next request toward this backend opens a
-            // fresh one.
-            self.pending.remove(&backend);
-            if self.live.get(&idx) == Some(&backend) {
-                self.live.remove(&idx);
-            }
-            core.backend_close(backend);
-            self.inner
-                .metrics
-                .lock()
-                .expect("metrics lock")
-                .incr("backend_protocol_errors", 1);
-            return;
-        };
-        let addr = &self.inner.cfg.backends[idx];
-        {
-            let mut m = self.inner.metrics.lock().expect("metrics lock");
-            m.incr_labeled("routed", addr, 1);
-            if entry.rank_pos > 0 {
-                m.incr("route_failovers", 1);
-            }
-        }
-        self.note_backend_success(idx);
-        core.complete(entry.conn, entry.seq, line);
+        self.backend_msg(core, backend, Payload::from(line));
+    }
+
+    fn on_backend_frame(&mut self, core: &mut Core, backend: u64, frame: Vec<u8>) {
+        self.backend_msg(core, backend, Payload::from(frame));
     }
 
     fn on_backend_down(&mut self, core: &mut Core, backend: u64) {

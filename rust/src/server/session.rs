@@ -2,13 +2,16 @@
 //!
 //! [`SessionState`] is a pure per-connection state machine: transport bytes
 //! go in ([`SessionState::on_bytes`] / [`SessionState::on_eof`]), framed
-//! protocol events come out — decoded requests, ready-to-send error lines,
-//! and close signals. It owns framing (newline splitting, the
-//! `max_request_bytes` slow-loris guard with bounded discard/resync) and
-//! decoding, but touches no sockets, so the same protocol code is driven by
-//! both instantiations of the serving reactor ([`super::event_loop`]) —
-//! the compute daemon and the router's relay app ([`super::router`]) —
-//! and by plain unit tests.
+//! protocol events come out — decoded requests, ready-to-send error
+//! payloads, and close signals. It owns mixed-mode framing — newline
+//! splitting for JSON, magic-prefixed length framing for binary (see
+//! [`super::protocol`]), negotiated per *message* by the first bytes —
+//! plus the `max_request_bytes` slow-loris guard with bounded
+//! discard/resync in both framings, and decoding. It touches no sockets,
+//! so the same protocol code is driven by both instantiations of the
+//! serving reactor ([`super::event_loop`]) — the compute daemon and the
+//! router's relay app ([`super::router`]) — and by plain unit tests; the
+//! reactor itself stays protocol-blind.
 //!
 //! [`dispatch`] turns a decoded request into a response: introspection ops
 //! answer inline, cache hits are served from memory, and compute ops are
@@ -23,7 +26,8 @@ use super::faults;
 use super::inflight::{Inflight, Reply};
 use super::pool::{Pool, SubmitError};
 use super::protocol::{
-    attach_id, err_line, method_slug, num, num_or_null, obj, ok_line, parse_id, Request,
+    decode_request_frame, encode_err_frame, err_line, method_slug, num, num_or_null, obj,
+    parse_id, Payload, Rendered, Request, RespKind, Wire, FRAME_HEADER, FRAME_MAGIC,
 };
 use super::ServeConfig;
 use crate::chain::{self, ChainResult, ChainSpec, Method};
@@ -52,7 +56,9 @@ thread_local! {
 /// request registry, metrics.
 pub struct ServerInner {
     pub cfg: ServeConfig,
-    pub cache: Mutex<LruCache>,
+    /// Canonical key → the hit response pre-encoded in both wire
+    /// encodings: a hit re-serializes nothing on either protocol.
+    pub cache: Mutex<LruCache<Rendered>>,
     pub inflight: Inflight,
     pub metrics: Mutex<Metrics>,
     /// The reactor's own counters (iterations, wakeups, accepted fds,
@@ -97,42 +103,67 @@ impl ServerInner {
 #[derive(Debug)]
 pub enum SessionEvent {
     /// A fully-decoded request plus its optional wire `id` (echoed on the
-    /// response and carried into trace spans): hand both to [`dispatch`].
-    Request(Request, Option<Json>),
-    /// A line that failed to decode; the payload is the complete response
-    /// line to send (counted as a request by the driver).
-    BadLine(String),
-    /// A line that exceeded `max_request_bytes`; the payload is the
-    /// complete response line to send.
-    Oversized(String),
+    /// response and carried into trace spans) and the encoding it arrived
+    /// in (the response answers in kind): hand all three to [`dispatch`].
+    Request(Request, Option<Json>, Wire),
+    /// A message that failed to decode; the payload is the complete
+    /// response — in the encoding of the offending message — to send
+    /// (counted as a request by the driver).
+    BadLine(Payload),
+    /// A message that exceeded `max_request_bytes`; the payload is the
+    /// complete response to send, in the offending message's encoding.
+    Oversized(Payload),
     /// Stop reading and close once pending responses have flushed.
     Close,
 }
 
+/// Framing phase of the machine between messages of either protocol.
+enum Mode {
+    /// Classifying / accumulating the current message.
+    Scan,
+    /// Discarding an oversized newline-framed line; the count is bytes of
+    /// that line seen so far (the rejection fires when its `\n` arrives).
+    DiscardLine(usize),
+    /// Skipping the payload of an oversized binary frame; the count is
+    /// payload bytes still to skip. The rejection was already emitted when
+    /// the header was parsed — frames declare their length up front, so
+    /// nothing needs buffering and resync is exact.
+    DiscardFrame(usize),
+}
+
 /// Pure per-connection protocol state: bytes in, events out, no sockets.
 ///
-/// Framing rules (identical to the pre-refactor blocking reader):
-/// * requests are newline-delimited; blank lines are ignored;
+/// Framing rules (JSON rules identical to the pre-binary machine):
+/// * a message starting with the full 4-byte [`FRAME_MAGIC`] is a binary
+///   frame: 8-byte header, then exactly the declared payload. Anything
+///   else — including a message that diverges from the magic after 1–3
+///   bytes — is a newline-delimited line; blank lines are ignored. The two
+///   framings mix freely on one connection;
 /// * a line whose content exceeds `max_request_bytes` is answered with a
 ///   structured protocol error, and the rest of the line is discarded
-///   (bounded) so the session can resync on the next newline;
+///   (bounded) so the session can resync on the next newline; an
+///   oversized *frame* is rejected as soon as its header arrives and its
+///   payload is skipped exactly — binary resync needs no scanning;
 /// * past the discard cap (16 × max, floor 4 MiB) the connection closes;
-/// * an unterminated trailing line at EOF is still decoded and answered.
+/// * an unterminated trailing message at EOF is still answered — lines are
+///   decoded as if terminated, incomplete frames get a truncation error in
+///   binary.
+///
+/// Every transition depends only on the byte stream's content, never on
+/// how the transport chunked it (the chunking property tests below).
 pub struct SessionState {
     max: usize,
     buf: Vec<u8>,
-    /// `Some(n)` while discarding an oversized line; `n` = bytes of that
-    /// line seen so far.
-    discarding: Option<usize>,
+    mode: Mode,
     closed: bool,
 }
 
 impl SessionState {
     pub fn new(max_request_bytes: usize) -> Self {
-        Self { max: max_request_bytes, buf: Vec::new(), discarding: None, closed: false }
+        Self { max: max_request_bytes, buf: Vec::new(), mode: Mode::Scan, closed: false }
     }
 
-    /// Total bytes of one oversized line we are willing to skip while
+    /// Total bytes of one oversized message we are willing to skip while
     /// resyncing before giving up and closing.
     fn discard_cap(&self) -> usize {
         self.max.saturating_mul(16).max(1 << 22)
@@ -144,89 +175,183 @@ impl SessionState {
         self.closed
     }
 
+    /// True while the buffered message prefix is consistent with (or
+    /// already committed to) binary framing.
+    fn magic_prefix(&self) -> bool {
+        let m = self.buf.len().min(FRAME_MAGIC.len());
+        self.buf[..m] == FRAME_MAGIC[..m]
+    }
+
     /// Feed freshly-read transport bytes; events append to `out` in
     /// protocol order.
     pub fn on_bytes(&mut self, mut data: &[u8], out: &mut Vec<SessionEvent>) {
         while !data.is_empty() && !self.closed {
-            if let Some(mut discarded) = self.discarding {
-                match data.iter().position(|&b| b == b'\n') {
-                    Some(pos) => {
-                        // Terminator found: answer and resync.
-                        self.discarding = None;
-                        out.push(SessionEvent::Oversized(oversized_line(self.max)));
-                        data = &data[pos + 1..];
-                    }
-                    None => {
-                        discarded += data.len();
-                        if discarded > self.discard_cap() {
+            match self.mode {
+                Mode::DiscardLine(mut discarded) => {
+                    match data.iter().position(|&b| b == b'\n') {
+                        Some(pos) => {
+                            // Terminator found: answer and resync.
+                            self.mode = Mode::Scan;
                             out.push(SessionEvent::Oversized(oversized_line(self.max)));
-                            out.push(SessionEvent::Close);
-                            self.closed = true;
-                        } else {
-                            self.discarding = Some(discarded);
+                            data = &data[pos + 1..];
                         }
-                        data = &[];
+                        None => {
+                            discarded += data.len();
+                            if discarded > self.discard_cap() {
+                                out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                                out.push(SessionEvent::Close);
+                                self.closed = true;
+                            } else {
+                                self.mode = Mode::DiscardLine(discarded);
+                            }
+                            data = &[];
+                        }
                     }
                 }
-                continue;
-            }
-            match data.iter().position(|&b| b == b'\n') {
-                Some(pos) => {
-                    if self.buf.len() + pos > self.max {
-                        // Oversized but already terminated: resync now.
-                        self.buf.clear();
-                        out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                Mode::DiscardFrame(remaining) => {
+                    // The frame told us its exact length: skip it, no scan.
+                    let take = remaining.min(data.len());
+                    data = &data[take..];
+                    if take == remaining {
+                        self.mode = Mode::Scan;
                     } else {
-                        self.buf.extend_from_slice(&data[..pos]);
-                        let line = std::mem::take(&mut self.buf);
-                        if let Some(ev) = decode_line(&line) {
-                            out.push(ev);
-                        }
+                        self.mode = Mode::DiscardFrame(remaining - take);
                     }
-                    data = &data[pos + 1..];
                 }
-                None => {
-                    let total = self.buf.len() + data.len();
-                    if total > self.max {
-                        self.buf.clear();
-                        if total > self.discard_cap() {
-                            out.push(SessionEvent::Oversized(oversized_line(self.max)));
-                            out.push(SessionEvent::Close);
-                            self.closed = true;
-                        } else {
-                            self.discarding = Some(total);
+                Mode::Scan => {
+                    // Resolve binary-vs-line byte by byte while the prefix
+                    // still matches the frame magic (≤ 8 probe bytes per
+                    // message; a JSON `{` diverges on its first byte).
+                    while self.magic_prefix()
+                        && self.buf.len() < FRAME_HEADER
+                        && !data.is_empty()
+                    {
+                        let i = self.buf.len();
+                        if i < FRAME_MAGIC.len() && data[0] != FRAME_MAGIC[i] {
+                            break; // diverged: the message is a line
                         }
-                    } else {
-                        self.buf.extend_from_slice(data);
+                        self.buf.push(data[0]);
+                        data = &data[1..];
                     }
-                    data = &[];
+                    if self.magic_prefix() && self.buf.len() >= FRAME_MAGIC.len() {
+                        self.frame_bytes(&mut data, out);
+                    } else {
+                        self.line_bytes(&mut data, out);
+                    }
                 }
             }
         }
     }
 
+    /// Binary branch of [`Self::on_bytes`]: the buffer holds a confirmed
+    /// frame prefix (full magic, possibly header/payload bytes).
+    fn frame_bytes(&mut self, data: &mut &[u8], out: &mut Vec<SessionEvent>) {
+        if self.buf.len() < FRAME_HEADER {
+            debug_assert!(data.is_empty(), "probe loop drains data first");
+            return;
+        }
+        let len = u32::from_le_bytes(self.buf[4..8].try_into().expect("4 bytes")) as usize;
+        if len > self.max {
+            // Reject at the header — the deterministic earliest point — and
+            // skip the declared payload exactly.
+            self.buf.clear();
+            out.push(SessionEvent::Oversized(oversized_frame(self.max)));
+            if len > self.discard_cap() {
+                out.push(SessionEvent::Close);
+                self.closed = true;
+            } else {
+                self.mode = Mode::DiscardFrame(len);
+            }
+            return;
+        }
+        let total = FRAME_HEADER + len;
+        let take = (total - self.buf.len()).min(data.len());
+        self.buf.extend_from_slice(&data[..take]);
+        *data = &data[take..];
+        if self.buf.len() == total {
+            let frame = std::mem::take(&mut self.buf);
+            out.push(decode_frame(&frame[FRAME_HEADER..]));
+        }
+    }
+
+    /// Line branch of [`Self::on_bytes`] (identical to the pre-binary
+    /// machine; the buffer may hold 1–3 probe bytes that diverged from the
+    /// magic — they are part of the line).
+    fn line_bytes(&mut self, data: &mut &[u8], out: &mut Vec<SessionEvent>) {
+        match data.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if self.buf.len() + pos > self.max {
+                    // Oversized but already terminated: resync now.
+                    self.buf.clear();
+                    out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                } else {
+                    self.buf.extend_from_slice(&data[..pos]);
+                    let line = std::mem::take(&mut self.buf);
+                    if let Some(ev) = decode_line(&line) {
+                        out.push(ev);
+                    }
+                }
+                *data = &data[pos + 1..];
+            }
+            None => {
+                let total = self.buf.len() + data.len();
+                if total > self.max {
+                    self.buf.clear();
+                    if total > self.discard_cap() {
+                        out.push(SessionEvent::Oversized(oversized_line(self.max)));
+                        out.push(SessionEvent::Close);
+                        self.closed = true;
+                    } else {
+                        self.mode = Mode::DiscardLine(total);
+                    }
+                } else {
+                    self.buf.extend_from_slice(data);
+                }
+                *data = &[];
+            }
+        }
+    }
+
     /// Signal transport EOF. An unterminated trailing line is decoded as if
-    /// newline-terminated (mid-line disconnects still get their answer);
+    /// newline-terminated (mid-line disconnects still get their answer); an
+    /// incomplete binary frame is answered with a binary truncation error;
     /// an unfinished oversized line gets its rejection before the close.
     pub fn on_eof(&mut self, out: &mut Vec<SessionEvent>) {
         if self.closed {
             return;
         }
         self.closed = true;
-        if self.discarding.take().is_some() {
-            out.push(SessionEvent::Oversized(oversized_line(self.max)));
-        } else if !self.buf.is_empty() {
-            let line = std::mem::take(&mut self.buf);
-            if let Some(ev) = decode_line(&line) {
-                out.push(ev);
+        match self.mode {
+            Mode::DiscardLine(_) => {
+                out.push(SessionEvent::Oversized(oversized_line(self.max)));
+            }
+            // An oversized frame's rejection already fired at its header.
+            Mode::DiscardFrame(_) => {}
+            Mode::Scan => {
+                if self.magic_prefix() && self.buf.len() >= FRAME_MAGIC.len() {
+                    // A started frame can never complete: answer in kind.
+                    self.buf.clear();
+                    out.push(SessionEvent::BadLine(
+                        encode_err_frame("truncated binary frame", None, None).into(),
+                    ));
+                } else if !self.buf.is_empty() {
+                    let line = std::mem::take(&mut self.buf);
+                    if let Some(ev) = decode_line(&line) {
+                        out.push(ev);
+                    }
+                }
             }
         }
         out.push(SessionEvent::Close);
     }
 }
 
-fn oversized_line(max: usize) -> String {
-    err_line(&format!("request exceeds {max} bytes"), None)
+fn oversized_line(max: usize) -> Payload {
+    err_line(&format!("request exceeds {max} bytes"), None).into()
+}
+
+fn oversized_frame(max: usize) -> Payload {
+    encode_err_frame(&format!("request exceeds {max} bytes"), None, None).into()
 }
 
 fn decode_line(line: &[u8]) -> Option<SessionEvent> {
@@ -235,16 +360,25 @@ fn decode_line(line: &[u8]) -> Option<SessionEvent> {
     if text.is_empty() {
         return None;
     }
+    let bad = |msg: &str| SessionEvent::BadLine(err_line(msg, None).into());
     Some(match json::parse(text) {
-        Err(e) => SessionEvent::BadLine(err_line(&format!("bad json: {e}"), None)),
+        Err(e) => bad(&format!("bad json: {e}")),
         Ok(doc) => match Request::parse(&doc) {
-            Err(e) => SessionEvent::BadLine(err_line(&e, None)),
+            Err(e) => bad(&e),
             Ok(req) => match parse_id(&doc) {
-                Err(e) => SessionEvent::BadLine(err_line(&e, None)),
-                Ok(id) => SessionEvent::Request(req, id),
+                Err(e) => bad(&e),
+                Ok(id) => SessionEvent::Request(req, id, Wire::Json),
             },
         },
     })
+}
+
+/// Decode one complete binary frame payload; failures answer in binary.
+fn decode_frame(payload: &[u8]) -> SessionEvent {
+    match decode_request_frame(payload) {
+        Ok((req, id)) => SessionEvent::Request(req, id, Wire::Binary),
+        Err(e) => SessionEvent::BadLine(encode_err_frame(&e, None, None).into()),
+    }
 }
 
 // ---------------------------------------------------------------- jobs --
@@ -252,8 +386,8 @@ fn decode_line(line: &[u8]) -> Option<SessionEvent> {
 /// One queued unit of work. The responses' recipients are *not* stored
 /// here: every reply waiting on this computation — the submitter and any
 /// coalesced duplicates — is parked in the [`Inflight`] registry under
-/// `cache_key`, and [`Job::resolve`] fans the finished line out to all of
-/// them.
+/// `cache_key`, and [`Job::resolve`] fans the finished response (rendered
+/// once in both wire encodings) out to all of them.
 pub struct Job {
     pub request: Request,
     pub cache_key: String,
@@ -292,16 +426,17 @@ impl Job {
         }
     }
 
-    /// Deliver the finished response line to every coalesced waiter.
-    pub fn resolve(mut self, line: &str) {
-        self.deliver(line);
+    /// Deliver the finished response to every coalesced waiter; each sink
+    /// picks its own wire's pre-encoded bytes from the clone it receives.
+    pub fn resolve(mut self, resp: &Rendered) {
+        self.deliver(resp);
     }
 
-    fn deliver(&mut self, line: &str) {
+    fn deliver(&mut self, resp: &Rendered) {
         self.resolved = true;
         self.inner.admission.release(self.work);
         for reply in self.inner.inflight.take(&self.cache_key) {
-            reply(line.to_string());
+            reply(resp.clone());
         }
     }
 }
@@ -311,21 +446,29 @@ impl Drop for Job {
     /// must still answer its waiters, or their connections would hang.
     fn drop(&mut self) {
         if !self.resolved {
-            self.deliver(&err_line("server shut down before the job completed", None));
+            self.deliver(&Rendered::err("server shut down before the job completed", None));
         }
     }
 }
 
 // -------------------------------------------------------------- dispatch --
 
+/// A one-shot transport sink: receives the finished wire bytes for one
+/// request — already in the connection's encoding, id spliced — and hands
+/// them to the driver (reactor write slot, mpsc channel, …).
+pub type Sink = Box<dyn FnOnce(Payload) + Send + 'static>;
+
 /// Route one decoded request to its response. Introspection ops and cache
-/// hits call `reply` before returning; compute ops park it in the
-/// in-flight registry and return immediately (the pool calls it later).
-/// Concurrent identical requests coalesce: one computation, one response
-/// line fanned out to every waiter.
+/// hits answer `sink` before returning; compute ops park it in the
+/// in-flight registry and return immediately (the pool answers it later).
+/// Concurrent identical requests coalesce: one computation, one
+/// [`Rendered`] response fanned out to every waiter — each waiter's sink
+/// picks the bytes for its own wire (`wire`) and splices its own id, so a
+/// JSON and a binary client coalescing on one key each receive exactly
+/// what a solo request on their protocol would have.
 ///
-/// The request's [`ReqCtx`] carries its wire `id` (spliced onto whatever
-/// line eventually answers — computed results, cache hits, coalesced
+/// The request's [`ReqCtx`] carries its wire `id` (echoed on whatever
+/// response eventually answers — computed results, cache hits, coalesced
 /// fan-outs, rejections, even shutdown errors — by wrapping the reply
 /// itself) and its trace identity when sampled. The shard hot path takes
 /// the metrics lock exactly once per dispatch, on every outcome.
@@ -341,32 +484,38 @@ pub fn dispatch(
     inner: &Arc<ServerInner>,
     pool: &Pool<Job>,
     conn_inflight: usize,
-    reply: Reply,
+    wire: Wire,
+    sink: Sink,
 ) {
-    // Echo the wire id on whatever line answers this request. Wrapping the
-    // reply (rather than editing the job's result line) keeps the computed
-    // body byte-identical across coalesced waiters with different ids.
-    let reply: Reply = match ctx.id {
-        None => reply,
-        Some(id) => Box::new(move |line: String| reply(attach_id(&line, &id))),
-    };
+    let ReqCtx { id, trace } = ctx;
+    // Project the shared double-encoded response onto this connection's
+    // wire and id at the last moment: the Rendered body stays byte-shared
+    // across coalesced waiters with different ids and even protocols.
+    let reply: Reply = Box::new(move |r: Rendered| sink(r.to_payload(wire, id.as_ref())));
     match req {
-        Request::Info => reply(ok_line(info_json(inner), false)),
-        Request::Metrics => reply(ok_line(metrics_json(inner, pool), false)),
-        Request::Trace { limit } => reply(ok_line(obs::spans_json(limit), false)),
+        Request::Info => {
+            reply(Rendered::ok(&info_json(inner), false, RespKind::Generic))
+        }
+        Request::Metrics => {
+            reply(Rendered::ok(&metrics_json(inner, pool), false, RespKind::Generic))
+        }
+        Request::Trace { limit } => {
+            reply(Rendered::ok(&obs::spans_json(limit), false, RespKind::Generic))
+        }
         compute => {
-            let trace = ctx.trace;
             let t0 = trace.as_ref().map(|_| obs::now_us()).unwrap_or(0);
             let key = compute
                 .canonical_key()
                 .expect("compute requests always have a canonical key");
             let hit = inner.cache.lock().expect("cache lock").get(&key);
-            if let Some(result) = hit {
+            if let Some(resp) = hit {
                 if let Some(tr) = &trace {
                     obs::record(tr, TIER, Stage::CacheHit, t0, (obs::now_us() - t0) as f64);
                 }
                 inner.metrics.lock().expect("metrics lock").incr("cache_hits", 1);
-                reply(ok_line(result, true));
+                // Pre-encoded in both wires at insert time: a hit touches
+                // no serializer in either protocol.
+                reply(resp);
                 return;
             }
             // Per-client fairness: past the (pressure-tightened) per-conn
@@ -377,7 +526,7 @@ pub fn dispatch(
                 m.incr("fairness_rejects", 1);
                 let ms = inner.admission.retry_after_ms(pool.queue_len(), inner.cfg.workers, &m);
                 drop(m);
-                reply(err_line(
+                reply(Rendered::err(
                     &format!(
                         "server busy: {conn_inflight} requests in flight on this connection"
                     ),
@@ -406,10 +555,9 @@ pub fn dispatch(
                 m.incr("cost_rejects", 1);
                 let ms = inner.admission.retry_after_ms(pool.queue_len(), inner.cfg.workers, &m);
                 drop(m);
-                let line =
-                    err_line("server busy: outstanding work at capacity", Some(ms));
+                let resp = Rendered::err("server busy: outstanding work at capacity", Some(ms));
                 for waiter in inner.inflight.take(&key) {
-                    waiter(line.clone());
+                    waiter(resp.clone());
                 }
                 return;
             }
@@ -430,7 +578,7 @@ pub fn dispatch(
                             &m,
                         )
                     };
-                    job.resolve(&err_line(
+                    job.resolve(&Rendered::err(
                         &format!(
                             "server busy: job queue is full ({} waiting)",
                             pool.queue_depth()
@@ -440,7 +588,7 @@ pub fn dispatch(
                 }
                 Err(SubmitError::Shutdown(job)) => {
                     inner.metrics.lock().expect("metrics lock").incr("cache_misses", 1);
-                    job.resolve(&err_line("server is shutting down", None));
+                    job.resolve(&Rendered::err("server is shutting down", None));
                 }
             }
         }
@@ -881,11 +1029,21 @@ fn try_execute_scan_batch(inner: &ServerInner, jobs: Vec<Job>) -> Option<Vec<Job
 }
 
 fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>, exec_s: f64) {
-    let line = match out {
+    let resp = match out {
         Ok(result) => {
+            // Scan results carry a binary tensor body; everything else is a
+            // JSON blob in both wires.
+            let kind = match &job.request {
+                Request::Scan(_) => RespKind::Scan,
+                _ => RespKind::Generic,
+            };
             let ser_start = job.trace.as_ref().map(|_| obs::now_us()).unwrap_or(0);
             let t_ser = Instant::now();
-            let line = ok_line(result.clone(), false);
+            // Serialize exactly once per encoding for the whole lifetime of
+            // this result: the miss response now, and its `cached:true`
+            // twin that every future hit re-sends verbatim.
+            let resp = Rendered::ok(&result, false, kind);
+            let hit = Rendered::ok(&result, true, kind);
             let ser_s = t_ser.elapsed().as_secs_f64();
             if let Some(tr) = &job.trace {
                 obs::record(tr, TIER, Stage::Serialize, ser_start, ser_s * 1e6);
@@ -894,7 +1052,7 @@ fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>, exec_s: f64)
                 .cache
                 .lock()
                 .expect("cache lock")
-                .insert(job.cache_key.clone(), result);
+                .insert(job.cache_key.clone(), hit);
             // One metrics acquisition per finished job, stage timers
             // included (the per-stage histograms are always on — they cost
             // a bucket increment, not a span).
@@ -906,14 +1064,14 @@ fn finish(inner: &ServerInner, job: Job, out: Result<Json, String>, exec_s: f64)
             m.record_secs("job_latency", job.enqueued.elapsed().as_secs_f64());
             m.record_secs("stage_exec", exec_s);
             m.record_secs("stage_serialize", ser_s);
-            line
+            resp
         }
         Err(msg) => {
             inner.metrics.lock().expect("metrics lock").incr("requests_err", 1);
-            err_line(&msg, None)
+            Rendered::err(&msg, None)
         }
     };
-    job.resolve(&line);
+    job.resolve(&resp);
 }
 
 // ----------------------------------------------------------- introspection --
@@ -1069,11 +1227,67 @@ mod tests {
     use super::*;
     use crate::goom::lmme;
     use crate::rng::rng_from_seed;
+    use crate::server::protocol::{decode_response_frame, encode_request_frame, ChainReq};
 
     fn feed(state: &mut SessionState, data: &[u8]) -> Vec<SessionEvent> {
         let mut out = Vec::new();
         state.on_bytes(data, &mut out);
         out
+    }
+
+    /// Render an outgoing payload as comparable text: JSON lines verbatim,
+    /// binary frames through the response decoder (which is itself checked
+    /// against the JSON twin in the protocol tests).
+    fn text(p: &Payload) -> String {
+        match p {
+            Payload::Json(s) => s.to_string(),
+            Payload::Bin(b) => json::write(
+                &decode_response_frame(&b[FRAME_HEADER..]).expect("binary response decodes"),
+            ),
+        }
+    }
+
+    fn tag(ev: &SessionEvent) -> String {
+        match ev {
+            SessionEvent::Request(req, id, wire) => {
+                format!("req:{req:?} id:{id:?} wire:{wire:?}")
+            }
+            SessionEvent::BadLine(p) => format!("bad:{}", text(p)),
+            SessionEvent::Oversized(p) => format!("over:{}", text(p)),
+            SessionEvent::Close => "close".to_string(),
+        }
+    }
+
+    /// Feed `stream` through a fresh machine in the given chunk sizes
+    /// (remainder in one piece), then EOF; return the tagged event stream.
+    fn run(stream: &[u8], max: usize, chunks: &[usize]) -> Vec<String> {
+        let mut s = SessionState::new(max);
+        let mut events = Vec::new();
+        let mut at = 0;
+        for &n in chunks {
+            let end = (at + n).min(stream.len());
+            s.on_bytes(&stream[at..end], &mut events);
+            at = end;
+        }
+        s.on_bytes(&stream[at..], &mut events);
+        s.on_eof(&mut events);
+        events.iter().map(tag).collect()
+    }
+
+    /// Oracle-vs-chunked equality over 50 seeded random chunkings.
+    fn assert_chunking_invariant(stream: &[u8], max: usize, want: &[String]) {
+        for trial in 0..50u64 {
+            let mut rng = rng_from_seed(1000 + trial);
+            let mut chunks = Vec::new();
+            let mut total = 0;
+            while total < stream.len() {
+                let n = 1 + (rng.next_u64() as usize) % 40;
+                chunks.push(n);
+                total += n;
+            }
+            let got = run(stream, max, &chunks);
+            assert_eq!(got, want, "trial {trial} chunking {chunks:?}");
+        }
     }
 
     #[test]
@@ -1088,7 +1302,7 @@ mod tests {
         }
         events.extend(feed(&mut s, &[b'\n']));
         assert_eq!(events.len(), 1);
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _, Wire::Json)));
     }
 
     #[test]
@@ -1097,16 +1311,17 @@ mod tests {
         let burst = b"{\"op\":\"info\"}\nnot json\n\n{\"op\":\"metrics\"}\n";
         let events = feed(&mut s, burst);
         assert_eq!(events.len(), 3, "{events:?}");
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _, _)));
         match &events[1] {
-            SessionEvent::BadLine(line) => {
+            SessionEvent::BadLine(p) => {
+                let line = text(p);
                 assert!(line.contains("bad json"), "{line}");
                 // Responses are byte-identical to the protocol encoder's.
                 assert!(line.starts_with("{\"error\":"), "{line}");
             }
             other => panic!("expected BadLine, got {other:?}"),
         }
-        assert!(matches!(events[2], SessionEvent::Request(Request::Metrics, _)));
+        assert!(matches!(events[2], SessionEvent::Request(Request::Metrics, _, _)));
     }
 
     #[test]
@@ -1117,7 +1332,7 @@ mod tests {
         assert!(events.is_empty());
         s.on_eof(&mut events);
         assert_eq!(events.len(), 2, "{events:?}");
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _, _)));
         assert!(matches!(events[1], SessionEvent::Close));
         assert!(s.is_closed());
         // Garbage tails still get their error before the close.
@@ -1145,12 +1360,12 @@ mod tests {
         let events = feed(&mut s, &burst);
         assert_eq!(events.len(), 2, "{events:?}");
         match &events[0] {
-            SessionEvent::Oversized(line) => {
-                assert_eq!(line, &err_line("request exceeds 64 bytes", None));
+            SessionEvent::Oversized(p) => {
+                assert_eq!(text(p), err_line("request exceeds 64 bytes", None));
             }
             other => panic!("expected Oversized, got {other:?}"),
         }
-        assert!(matches!(events[1], SessionEvent::Request(Request::Info, _)));
+        assert!(matches!(events[1], SessionEvent::Request(Request::Info, _, _)));
         // Oversized line dribbling in across chunks: the rejection arrives
         // when the terminator does, and the session keeps serving.
         let mut s = SessionState::new(max);
@@ -1159,7 +1374,7 @@ mod tests {
         let events = feed(&mut s, b"tail\n{\"op\":\"metrics\"}\n");
         assert_eq!(events.len(), 2, "{events:?}");
         assert!(matches!(events[0], SessionEvent::Oversized(_)));
-        assert!(matches!(events[1], SessionEvent::Request(Request::Metrics, _)));
+        assert!(matches!(events[1], SessionEvent::Request(Request::Metrics, _, _)));
     }
 
     #[test]
@@ -1210,46 +1425,58 @@ mod tests {
         stream.push(b'\n');
         stream.extend_from_slice(b"{\"op\":\"metrics\"}\n");
         stream.extend_from_slice(b"{\"op\":\"info\",\"id\":7}\n");
-        stream.extend_from_slice(b"{\"op\":\"trace\"") ; // valid tail, no '\n'
-
-        fn tag(ev: &SessionEvent) -> String {
-            match ev {
-                SessionEvent::Request(req, id) => format!("req:{req:?} id:{id:?}"),
-                SessionEvent::BadLine(line) => format!("bad:{line}"),
-                SessionEvent::Oversized(line) => format!("over:{line}"),
-                SessionEvent::Close => "close".to_string(),
-            }
-        }
-        fn run(stream: &[u8], max: usize, chunks: &[usize]) -> Vec<String> {
-            let mut s = SessionState::new(max);
-            let mut events = Vec::new();
-            let mut at = 0;
-            for &n in chunks {
-                let end = (at + n).min(stream.len());
-                s.on_bytes(&stream[at..end], &mut events);
-                at = end;
-            }
-            s.on_bytes(&stream[at..], &mut events);
-            s.on_eof(&mut events);
-            events.iter().map(tag).collect()
-        }
+        stream.extend_from_slice(b"{\"op\":\"trace\""); // valid tail, no '\n'
 
         let want = run(&stream, max, &[stream.len()]);
         assert!(want.iter().any(|t| t.starts_with("over:")), "{want:?}");
         assert!(want.iter().any(|t| t.starts_with("bad:")), "{want:?}");
         assert_eq!(want.last().map(String::as_str), Some("close"));
-        for trial in 0..50u64 {
-            let mut rng = rng_from_seed(1000 + trial);
-            let mut chunks = Vec::new();
-            let mut total = 0;
-            while total < stream.len() {
-                let n = 1 + (rng.next_u64() as usize) % 40;
-                chunks.push(n);
-                total += n;
-            }
-            let got = run(&stream, max, &chunks);
-            assert_eq!(got, want, "trial {trial} chunking {chunks:?}");
-        }
+        assert_chunking_invariant(&stream, max, &want);
+    }
+
+    #[test]
+    fn mixed_protocol_chunking_never_changes_the_decoded_event_stream() {
+        // Property: a stream interleaving JSON lines and binary frames —
+        // including a corrupt-magic line, an oversized frame, a
+        // garbage-payload frame, and a frame truncated by EOF — decodes to
+        // the identical event sequence under every read chunking. The
+        // one-shot feed is the oracle.
+        let max = 256;
+        let chain = Request::Chain(ChainReq {
+            method: Method::GoomC64,
+            d: 4,
+            steps: 10,
+            seed: 7,
+        });
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend_from_slice(b"{\"op\":\"info\"}\n");
+        stream.extend_from_slice(&encode_request_frame(&chain, Some(&Json::Num(9.0))));
+        stream.extend_from_slice(b"not json at all\n");
+        // Diverges from the magic at its fourth byte: a (bad) JSON line.
+        stream.extend_from_slice(b"GBFX garbage line\n");
+        // Oversized frame: rejected at the header, payload skipped exactly.
+        stream.extend_from_slice(&FRAME_MAGIC);
+        stream.extend_from_slice(&600u32.to_le_bytes());
+        stream.extend_from_slice(&[0u8; 600]);
+        stream.extend_from_slice(&encode_request_frame(&Request::Info, None));
+        // Complete frame whose payload is not a request: binary BadLine.
+        stream.extend_from_slice(&FRAME_MAGIC);
+        stream.extend_from_slice(&3u32.to_le_bytes());
+        stream.extend_from_slice(&[0xff, 0xfe, 0xfd]);
+        stream.extend_from_slice(b"{\"op\":\"metrics\"}\n");
+        // Truncated frame: 100-byte payload declared, EOF after 10.
+        stream.extend_from_slice(&FRAME_MAGIC);
+        stream.extend_from_slice(&100u32.to_le_bytes());
+        stream.extend_from_slice(&[0u8; 10]);
+
+        let want = run(&stream, max, &[stream.len()]);
+        assert!(want.iter().any(|t| t.contains("wire:Binary")), "{want:?}");
+        assert!(want.iter().any(|t| t.contains("wire:Json")), "{want:?}");
+        assert!(want.iter().any(|t| t.starts_with("over:")), "{want:?}");
+        let bad = want.iter().filter(|t| t.starts_with("bad:")).count();
+        assert_eq!(bad, 4, "bad json, corrupt magic, bad payload, truncation: {want:?}");
+        assert_eq!(want.last().map(String::as_str), Some("close"));
+        assert_chunking_invariant(&stream, max, &want);
     }
 
     #[test]
@@ -1258,7 +1485,7 @@ mod tests {
         assert!(feed(&mut s, b"\n   \n\r\n\t\n").is_empty());
         let events = feed(&mut s, b"  {\"op\":\"info\"}  \r\n");
         assert_eq!(events.len(), 1);
-        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _)));
+        assert!(matches!(events[0], SessionEvent::Request(Request::Info, _, _)));
     }
 
     #[test]

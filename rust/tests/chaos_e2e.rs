@@ -54,6 +54,7 @@ fn fault_injection_sheds_or_delays_but_never_corrupts() {
         pipeline: 1,
         threads: 0,
         chaos: true,
+        binary: false,
     };
     let mut metrics = Metrics::new();
     let report = server::loadgen(&cfg, &mut metrics).expect("chaos loadgen");
@@ -63,6 +64,16 @@ fn fault_injection_sheds_or_delays_but_never_corrupts() {
     assert_eq!(report.corrupt, 0, "fault injection corrupted a response");
     assert_eq!(report.errors, 0, "chaos client gave up on a request");
     assert_eq!(report.ok, 4 * 12, "every request eventually answered");
+
+    // Same contract over GBF1 binary framing, against the same live fault
+    // plan: short writes now cut frames mid-header and mid-payload, drops
+    // force reconnect+replay of framed requests — delivered results must
+    // still decode byte-identical to the local recompute.
+    let bin = LoadgenConfig { binary: true, ..cfg.clone() };
+    let report = server::loadgen(&bin, &mut metrics).expect("binary chaos loadgen");
+    assert_eq!(report.corrupt, 0, "fault injection corrupted a binary response");
+    assert_eq!(report.errors, 0, "binary chaos client gave up on a request");
+    assert_eq!(report.ok, 4 * 12, "every binary request eventually answered");
 
     // The plan was armed and observable: the shard's metrics op exports a
     // "faults" section only when injection is enabled.
