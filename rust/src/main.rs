@@ -165,6 +165,7 @@ fn serve(args: &Args) -> Result<()> {
             cfg.usize("serve_max_connections", defaults.max_connections)?,
         )?,
         threads: cfg.usize("threads", cfg.usize("serve_threads", defaults.threads)?)?,
+        reactors: cfg.usize("reactors", cfg.usize("serve_reactors", defaults.reactors)?)?,
         trace_sample: cfg
             .u64("trace-sample", cfg.u64("serve_trace_sample", defaults.trace_sample)?)?,
         simd: cfg
@@ -174,7 +175,8 @@ fn serve(args: &Args) -> Result<()> {
             .to_string(),
     };
     println!(
-        "goomd: {} workers, {} kernel thread(s)/job, queue depth {}, batch max {}, cache {} entries",
+        "goomd: {} reactor(s), {} workers, {} kernel thread(s)/job, queue depth {}, batch max {}, cache {} entries",
+        serve_cfg.reactors.max(1),
         serve_cfg.workers,
         serve_cfg.threads,
         serve_cfg.queue_depth,
@@ -236,10 +238,16 @@ fn route(args: &Args) -> Result<()> {
             .or_else(|| cfg.get("route_faults"))
             .unwrap_or(&defaults.faults)
             .to_string(),
+        reactors: cfg.usize("reactors", cfg.usize("route_reactors", defaults.reactors)?)?,
+        backend_pool: cfg
+            .usize("backend-pool", cfg.usize("route_backend_pool", defaults.backend_pool)?)?,
     };
     println!(
-        "goomd-router: {} backends, rendezvous-hashed on canonical request keys",
-        router_cfg.backends.len()
+        "goomd-router: {} backends, rendezvous-hashed on canonical request keys \
+         ({} reactor(s), backend pool {}/shard)",
+        router_cfg.backends.len(),
+        router_cfg.reactors.max(1),
+        router_cfg.backend_pool.max(1)
     );
     server::router::route_blocking(router_cfg)
 }
@@ -369,6 +377,8 @@ fn loadgen(args: &Args) -> Result<()> {
         )?,
         chaos: args.flag("chaos"),
         binary: args.flag("binary"),
+        connections: args.get_usize("connections", defaults.connections)?,
+        offered_load: args.get_f64("offered-load", defaults.offered_load)?,
     };
     let dims_desc = if cfg.dims.is_empty() {
         format!("d={}", cfg.d)
@@ -389,6 +399,13 @@ fn loadgen(args: &Args) -> Result<()> {
         cfg.shared_seed.map_or(String::new(), |s| format!(" seed={s}")),
         if cfg.pipeline > 1 { format!(" pipeline={}", cfg.pipeline) } else { String::new() },
     );
+    if cfg.offered_load > 0.0 {
+        println!(
+            "  open loop: {} connection(s) pacing {} req/s offered (sheds dropped, not resent)",
+            if cfg.connections > 0 { cfg.connections } else { cfg.clients },
+            cfg.offered_load
+        );
+    }
     let mut metrics = Metrics::new();
     let report = server::loadgen(&cfg, &mut metrics)?;
     println!(
@@ -510,7 +527,8 @@ USAGE:
                                     --compare gates ns/op
                                     against a previous run's artifacts
                                     (see docs/PERFORMANCE.md)
-  repro serve [--port=7077 --workers=4 --threads=1 --queue-depth=64
+  repro serve [--port=7077 --workers=4 --threads=1 --reactors=1
+               --queue-depth=64
                --batch-max=16 --cache=1024 --max-request-bytes=1048576
                --max-connections=256 --trace-sample=0 --simd=MODE
                --inflight-per-conn=64 --max-retry-ms=5000
@@ -521,12 +539,15 @@ USAGE:
                                     GOOM_FAULTS injects deterministic faults,
                                     see docs/RELIABILITY.md)
   repro route --backends=host:port[,host:port...] [--port=7070
+               --reactors=1 --backend-pool=1
                --trace-sample=0 --inflight-per-conn=64
                --idle-timeout=60 --faults=PLAN]
                                     run the cache-aware router tier: rendezvous-
                                     hashes canonical request keys across shards,
                                     with per-shard circuit breakers (metrics op,
-                                    \"health\" section)
+                                    \"health\" section); --reactors=N shards the
+                                    event loop, --backend-pool=K pools K conns
+                                    per shard (kills head-of-line blocking)
   repro req [--addr=127.0.0.1:7077 --binary] '<json-request>'
                                     send one request, print the decoded
                                     response + bytes_on_wire (--binary sends
@@ -539,6 +560,7 @@ USAGE:
   repro loadgen [--addr=127.0.0.1:7077 --clients=8 --requests=32
                  --method=goomc64 --d=8 --dims=8,64,256 --steps=500
                  --seed=N --min-cached=N --pipeline=N --threads=N
+                 --connections=N --offered-load=RPS
                  --simd=MODE --chaos --binary]
                                     drive a live daemon or router; print
                                     throughput and p50/p95/p99 latency,
@@ -549,7 +571,11 @@ USAGE:
                                     delivered response byte-for-byte against
                                     a local recompute and exits non-zero on
                                     any corruption; --binary speaks the GBF1
-                                    binary framing)
+                                    binary framing; --offered-load=RPS switches
+                                    to open loop: --connections conns pace
+                                    requests at the offered rate regardless of
+                                    responses, sheds are dropped not resent —
+                                    the saturation-curve mode)
 
 Config layering: built-in defaults < ./repro.conf < --key=value flags.
 Threads: --threads defaults to env GOOM_THREADS (kernel fan-out per job).

@@ -24,9 +24,13 @@
 //! * `BENCH_route.json` — router relay overhead: the same cache-served
 //!   traffic driven direct-to-shard and through the reactor router
 //!   (coalesced and pipelined rows, in both wire encodings), with the
-//!   added ns/request at p50/p99 the relay hop costs. Recorded info-only
-//!   in the trend gate — socketed latencies on a shared runner are too
-//!   noisy for the 15% bar.
+//!   added ns/request at p50/p99 the relay hop costs; plus `saturation`
+//!   rows — open-loop goodput + p99 vs offered load for every topology in
+//!   reactors ∈ {1,2} × backend-pool ∈ {1,2}, with the goodput ratio of
+//!   the sharded/pooled front over the classic single-reactor relay at
+//!   the latter's saturation point. Recorded info-only in the trend
+//!   gate — socketed latencies on a shared runner are too noisy for the
+//!   15% bar.
 //!
 //! Allocation counts are real: the `repro` binary installs the counting
 //! global allocator, so `allocs_per_op: 0` on the warmed kernel rows is a
@@ -828,6 +832,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             threads: 0,
             chaos: false,
             binary: false,
+            ..LoadgenConfig::default()
         };
         let before = kernel_stats::snapshot();
         let t0 = Instant::now();
@@ -882,6 +887,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             threads: 0,
             chaos: false,
             binary: false,
+            ..LoadgenConfig::default()
         };
         crate::obs::set_sample(0);
         let mut metrics = crate::coordinator::Metrics::new();
@@ -943,6 +949,7 @@ fn bench_serve(opts: &BenchOpts) -> Result<Json> {
             threads: 0,
             chaos: false,
             binary: false,
+            ..LoadgenConfig::default()
         };
         let mut metrics = crate::coordinator::Metrics::new();
         let unloaded = crate::server::loadgen(&mk(1, 1), &mut metrics)?;
@@ -1130,6 +1137,7 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
                 threads: 0,
                 chaos: false,
                 binary,
+                ..LoadgenConfig::default()
             };
             let mut metrics = crate::coordinator::Metrics::new();
             let report = crate::server::loadgen(&lg, &mut metrics)?;
@@ -1163,6 +1171,15 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
         .map(|addr| router.counter(&format!("routed[{addr}]")))
         .sum();
     router.stop();
+    // Saturation curves (info-only, separate `saturation` key so the
+    // 8-row `results` contract stays intact): the open-loop loadgen
+    // drives each reactors × backend-pool topology at offered loads
+    // bracketing the single-reactor front's measured saturation point.
+    // Goodput = completed/elapsed (sheds are dropped, not resent) and the
+    // ratio field records the acceptance headline — what the sharded,
+    // pooled front sustains at the load that saturates reactors=1/pool=1.
+    let (sat_rows, sat_base_rps, sat_ratio) =
+        bench_route_saturation(opts, &[a.addr().to_string(), b.addr().to_string()])?;
     a.stop();
     b.stop();
     let delta = |routed: &str, direct: &str, mode: &str, pick: fn(&(f64, f64)) -> f64| -> f64 {
@@ -1203,8 +1220,101 @@ fn bench_route(opts: &BenchOpts) -> Result<Json> {
             map.insert(k.to_string(), Json::Num(v));
         }
         map.insert("routed_requests".to_string(), num(routed_total as f64));
+        map.insert("saturation".to_string(), Json::Arr(sat_rows));
+        map.insert("saturation_base_offered_rps".to_string(), num(sat_base_rps));
+        map.insert("saturation_goodput_ratio_2x2_vs_1x1".to_string(), num(sat_ratio));
     }
     Ok(doc)
+}
+
+/// The saturation sweep behind `BENCH_route.json`'s `saturation` rows:
+/// a closed-loop burn on a reactors=1/pool=1 router estimates the
+/// single-reactor saturation throughput, then every topology in
+/// reactors ∈ {1,2} × pool ∈ {1,2} is driven open-loop at 0.5× / 1.0× /
+/// 1.5× that rate. Cache-hit traffic (one shared key) keeps kernels out
+/// of the measurement, so the curves isolate the serving front. Returns
+/// `(rows, base_offered_rps, goodput ratio of 2×2 vs 1×1 at 1.0×)`.
+fn bench_route_saturation(
+    opts: &BenchOpts,
+    backends: &[String],
+) -> Result<(Vec<Json>, f64, f64)> {
+    use crate::server::{Router, RouterConfig};
+    let mk_router = |reactors: usize, pool: usize| -> Result<Router> {
+        Router::start(RouterConfig {
+            port: 0,
+            backends: backends.to_vec(),
+            reactors,
+            backend_pool: pool,
+            ..RouterConfig::default()
+        })
+        .context("starting saturation router")
+    };
+    let conns = if opts.quick { 4usize } else { 8 };
+    let requests = if opts.quick { 32usize } else { 96 };
+    let mk_lg = |addr: String, offered: f64| LoadgenConfig {
+        addr,
+        clients: conns,
+        requests,
+        d: 6,
+        steps: 40,
+        method: "goomc64".to_string(),
+        shared_seed: Some(7),
+        connections: conns,
+        offered_load: offered,
+        ..LoadgenConfig::default()
+    };
+    // Closed-loop estimate of where the single-reactor front saturates.
+    let base_rps = {
+        let r = mk_router(1, 1)?;
+        let lg = LoadgenConfig {
+            pipeline: 4,
+            ..mk_lg(r.addr().to_string(), 0.0)
+        };
+        let mut metrics = crate::coordinator::Metrics::new();
+        let report = crate::server::loadgen(&lg, &mut metrics)?;
+        r.stop();
+        report.throughput_rps.max(1.0)
+    };
+    let mut rows = Vec::new();
+    let mut goodput_at_base: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for (reactors, pool) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+        let r = mk_router(reactors, pool)?;
+        for mult in [0.5f64, 1.0, 1.5] {
+            let offered = base_rps * mult;
+            let mut metrics = crate::coordinator::Metrics::new();
+            let report =
+                crate::server::loadgen(&mk_lg(r.addr().to_string(), offered), &mut metrics)?;
+            let goodput = report.ok as f64 / report.elapsed_s.max(1e-9);
+            if mult == 1.0 {
+                goodput_at_base.insert((reactors, pool), goodput);
+            }
+            rows.push(obj(vec![
+                ("reactors", num(reactors as f64)),
+                ("pool", num(pool as f64)),
+                ("offered_mult", num(mult)),
+                ("offered_rps", num(offered)),
+                ("goodput_rps", num(goodput)),
+                ("ok", num(report.ok as f64)),
+                ("shed", num(report.shed_total as f64)),
+                ("errors", num(report.errors as f64)),
+                ("p50_ms", num(report.p50_ms)),
+                ("p99_ms", num(report.p99_ms)),
+                ("elapsed_s", num(report.elapsed_s)),
+            ]));
+            println!(
+                "route[saturation r{reactors}/p{pool} @{mult:.1}x]: offered {offered:.0} rps, \
+                 goodput {goodput:.0} rps, p99 {:.2} ms, {} shed",
+                report.p99_ms, report.shed_total
+            );
+        }
+        r.stop();
+    }
+    let ratio = match (goodput_at_base.get(&(2, 2)), goodput_at_base.get(&(1, 1))) {
+        (Some(&sharded), Some(&single)) if single > 0.0 => sharded / single,
+        _ => 0.0,
+    };
+    println!("route[saturation]: goodput ratio 2x2 vs 1x1 at {base_rps:.0} rps offered = {ratio:.2}x");
+    Ok((rows, base_rps, ratio))
 }
 
 #[cfg(test)]
@@ -1314,6 +1424,32 @@ mod tests {
             assert!(doc.get(field).unwrap().as_f64().is_some(), "missing {field}");
         }
         assert!(doc.get("routed_requests").unwrap().as_usize().unwrap() > 0);
+        // Saturation curves: 4 topologies × 3 offered loads, every row
+        // carrying the schema docs/PERFORMANCE.md documents, plus the
+        // headline ratio field.
+        let sat = doc.get("saturation").unwrap().as_arr().expect("saturation rows");
+        assert_eq!(sat.len(), 12, "{sat:?}");
+        for row in sat {
+            for field in [
+                "reactors",
+                "pool",
+                "offered_mult",
+                "offered_rps",
+                "goodput_rps",
+                "ok",
+                "shed",
+                "errors",
+                "p50_ms",
+                "p99_ms",
+                "elapsed_s",
+            ] {
+                assert!(row.get(field).is_some(), "missing {field} in {row:?}");
+            }
+            assert!(row.get("goodput_rps").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(row.get("errors").unwrap().as_usize(), Some(0));
+        }
+        assert!(doc.get("saturation_base_offered_rps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(doc.get("saturation_goodput_ratio_2x2_vs_1x1").unwrap().as_f64().unwrap() > 0.0);
         let text = json::write(&doc);
         assert_eq!(json::parse(&text).unwrap(), doc);
     }

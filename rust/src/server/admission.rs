@@ -3,7 +3,11 @@
 //! Both reactor apps consult one [`Admission`] before accepting work:
 //! `ServeApp` (the compute shard) checks all three policies, `RelayApp`
 //! (the router) checks per-connection fairness — work executes on the
-//! shards, so that is where cost accounting lives.
+//! shards, so that is where cost accounting lives. A sharded front
+//! (`--reactors=N`) shares a single `Arc<Admission>` across all of its
+//! reactors: the state is entirely atomics, so every loop thread consults
+//! and releases it lock-free, and the work budget / fairness policy
+//! stays a property of the process, not of one loop.
 //!
 //! Three policies, all cheap enough for the reactor thread:
 //!

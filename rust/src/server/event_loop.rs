@@ -26,6 +26,20 @@
 //! errors, connection accounting, ordering, and flow control live here,
 //! once — `serve` and `route` are two instantiations of the same front.
 //!
+//! The front itself shards: [`spawn_sharded`] runs `--reactors=N` reactor
+//! threads per tier. At N = 1 one reactor owns the listener directly —
+//! byte-for-byte the PR-5 shape. At N > 1 a dedicated **acceptor** thread
+//! owns the listener and deals accepted sockets round-robin to the
+//! reactors over per-reactor channels (waking each target out of `poll`),
+//! so no two reactors ever race an `accept(2)`. Each reactor owns its
+//! clients end-to-end — sessions never migrate between loops — which is
+//! what keeps response ordering and byte-identity untouched: the reorder
+//! buffer, completion channel, and idle-deadline sweep of a connection all
+//! live on the one reactor that accepted it. Each reactor likewise owns a
+//! private [`ReactorStats`] block (no cross-loop counter races on
+//! `max_reorder_depth`), registered in a shared [`ReactorSet`] that the
+//! `metrics` op rolls up.
+//!
 //! `poll(2)` is declared directly against the C library std already links
 //! (no new dependencies); on Linux the outbound connect path declares
 //! `socket(2)`/`connect(2)` the same way so backend connections are truly
@@ -45,7 +59,7 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -113,7 +127,10 @@ pub struct FrontConfig {
 
 /// Reactor observability: exported through the `metrics` op (router and
 /// daemon alike) under `"reactor"`. All monotonic except the high-water
-/// reorder depth.
+/// reorder depth. With a sharded front each reactor owns a private block
+/// (registered in a [`ReactorSet`]): `max_reorder_depth` is a per-loop
+/// high-water mark, not a cross-loop shared counter, and the rollup takes
+/// the max across blocks rather than racing N loops on one atomic.
 #[derive(Default)]
 pub struct ReactorStats {
     /// Loop iterations (each: poll + accept + I/O + flush).
@@ -143,6 +160,56 @@ impl ReactorStats {
             ("fds_accepted", g(&self.fds_accepted)),
             ("fds_connected", g(&self.fds_connected)),
             ("max_reorder_depth", g(&self.max_reorder_depth)),
+        ])
+    }
+}
+
+/// Registry of the per-reactor [`ReactorStats`] blocks behind one front.
+/// Each reactor registers its own block at spawn; the `metrics` op rolls
+/// them up under `"reactor"` — sums for the monotonic counters, max for
+/// the reorder high-water — plus a `"per_reactor"` breakdown array, so a
+/// sharded front exports the same top-level counter names a single
+/// reactor always has.
+#[derive(Default)]
+pub struct ReactorSet {
+    stats: Mutex<Vec<Arc<ReactorStats>>>,
+}
+
+impl ReactorSet {
+    /// Allocate and register the stats block for one reactor.
+    pub fn register(&self) -> Arc<ReactorStats> {
+        let block = Arc::new(ReactorStats::default());
+        self.stats.lock().expect("reactor set lock").push(Arc::clone(&block));
+        block
+    }
+
+    /// Snapshot of every registered block (test/introspection helper).
+    pub fn blocks(&self) -> Vec<Arc<ReactorStats>> {
+        self.stats.lock().expect("reactor set lock").clone()
+    }
+
+    /// Rolled-up JSON form for the `metrics` op (`"reactor"` sub-object):
+    /// the five classic counters aggregated across reactors, plus
+    /// `"reactors"` (the shard count) and `"per_reactor"` (one classic
+    /// block per loop, in spawn order).
+    pub fn to_json(&self) -> Json {
+        let blocks = self.blocks();
+        let sum = |f: fn(&ReactorStats) -> &AtomicU64| {
+            num(blocks.iter().map(|b| f(b).load(Ordering::Relaxed)).sum::<u64>() as f64)
+        };
+        let peak = blocks
+            .iter()
+            .map(|b| b.max_reorder_depth.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0);
+        obj(vec![
+            ("loop_iterations", sum(|b| &b.loop_iterations)),
+            ("wakeups", sum(|b| &b.wakeups)),
+            ("fds_accepted", sum(|b| &b.fds_accepted)),
+            ("fds_connected", sum(|b| &b.fds_connected)),
+            ("max_reorder_depth", num(peak as f64)),
+            ("reactors", num(blocks.len() as f64)),
+            ("per_reactor", Json::Arr(blocks.iter().map(|b| b.to_json()).collect())),
         ])
     }
 }
@@ -440,14 +507,98 @@ struct BackendConn {
     writable: bool,
 }
 
-/// Start a reactor thread named `name` driving `app` over `listener`.
-/// The returned [`Waker`] interrupts `poll` — used by job completions and
-/// by `stop()` paths.
-pub fn spawn<A: App>(
+/// Thread handles of one (possibly sharded) serving front: the reactor
+/// threads with their wakers, plus — only when sharded — the acceptor
+/// thread that owns the listener.
+pub struct FrontHandles {
+    pub reactors: Vec<JoinHandle<()>>,
+    pub wakers: Vec<Arc<Waker>>,
+    pub acceptor: Option<JoinHandle<()>>,
+}
+
+impl FrontHandles {
+    /// Kick every reactor out of `poll` — pair with a `LoopCtl` latch.
+    pub fn wake_all(&self) {
+        for w in &self.wakers {
+            w.wake();
+        }
+    }
+
+    /// Join the acceptor (first, so no new sockets land mid-teardown)
+    /// and then every reactor. Idempotent: joined handles drain out.
+    pub fn join_all(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.reactors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start one reactor thread per app in `apps`, all serving `listener`.
+///
+/// With one app this is exactly the classic single-reactor front: the
+/// loop thread owns the listener and accepts directly. With N > 1 apps an
+/// acceptor thread owns the listener and deals accepted sockets
+/// round-robin to the reactors over per-reactor channels (waking the
+/// target loop), so accept order is deterministic and no loop contends on
+/// `accept(2)`. Connection-cap enforcement stays global either way via a
+/// shared connection count, and conn ids are strided by reactor index so
+/// they remain globally unique across loops.
+pub fn spawn_sharded<A: App>(
     name: &str,
     listener: TcpListener,
+    apps: Vec<A>,
+    ctl: Arc<LoopCtl>,
+) -> io::Result<FrontHandles> {
+    assert!(!apps.is_empty(), "a front needs at least one reactor");
+    let shards = apps.len();
+    let conn_count = Arc::new(AtomicUsize::new(0));
+    if shards == 1 {
+        let app = apps.into_iter().next().expect("one app");
+        let (handle, waker) =
+            spawn_reactor(name.to_string(), Some(listener), None, app, ctl, conn_count, 0, 1)?;
+        return Ok(FrontHandles { reactors: vec![handle], wakers: vec![waker], acceptor: None });
+    }
+    let mut reactors = Vec::with_capacity(shards);
+    let mut wakers = Vec::with_capacity(shards);
+    let mut lanes = Vec::with_capacity(shards);
+    for (i, app) in apps.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let (handle, waker) = spawn_reactor(
+            format!("{name}-{i}"),
+            None,
+            Some(rx),
+            app,
+            Arc::clone(&ctl),
+            Arc::clone(&conn_count),
+            i as u64,
+            shards as u64,
+        )?;
+        lanes.push((tx, Arc::clone(&waker)));
+        reactors.push(handle);
+        wakers.push(waker);
+    }
+    let acceptor = std::thread::Builder::new()
+        .name(format!("{name}-acceptor"))
+        .spawn(move || acceptor_loop(listener, lanes, ctl))?;
+    Ok(FrontHandles { reactors, wakers, acceptor: Some(acceptor) })
+}
+
+/// Start one reactor thread. Exactly one of `listener` (solo front: the
+/// loop accepts directly) and `incoming` (sharded front: the acceptor
+/// deals sockets over this channel) is `Some`.
+#[allow(clippy::too_many_arguments)]
+fn spawn_reactor<A: App>(
+    name: String,
+    listener: Option<TcpListener>,
+    incoming: Option<mpsc::Receiver<TcpStream>>,
     app: A,
     ctl: Arc<LoopCtl>,
+    conn_count: Arc<AtomicUsize>,
+    conn_id_start: u64,
+    conn_id_step: u64,
 ) -> io::Result<(JoinHandle<()>, Arc<Waker>)> {
     #[cfg(unix)]
     let (waker, wake_rx) = waker_pair()?;
@@ -457,40 +608,101 @@ pub fn spawn<A: App>(
     let loop_waker = Arc::clone(&waker);
     let front = app.front();
     let stats = app.stats();
-    let handle = std::thread::Builder::new()
-        .name(name.to_string())
-        .spawn(move || {
-            let (tx, rx) = mpsc::channel::<Completion>();
-            Reactor {
-                core: Core {
-                    listener,
-                    front,
-                    stats,
-                    waker: loop_waker,
-                    #[cfg(unix)]
-                    wake_rx,
-                    completions_tx: tx,
-                    completions_rx: rx,
-                    conns: HashMap::new(),
-                    next_conn_id: 0,
-                    backends: HashMap::new(),
-                    next_backend_id: 0,
-                    listener_ready: false,
-                    accepting: true,
-                },
-                app,
-                ctl,
-            }
-            .run();
-        })?;
+    let handle = std::thread::Builder::new().name(name).spawn(move || {
+        let (tx, rx) = mpsc::channel::<Completion>();
+        Reactor {
+            core: Core {
+                listener,
+                incoming,
+                front,
+                stats,
+                waker: loop_waker,
+                #[cfg(unix)]
+                wake_rx,
+                completions_tx: tx,
+                completions_rx: rx,
+                conns: HashMap::new(),
+                next_conn_id: conn_id_start,
+                conn_id_step,
+                conn_count,
+                backends: HashMap::new(),
+                next_backend_id: 0,
+                listener_ready: false,
+                accepting: true,
+            },
+            app,
+            ctl,
+        }
+        .run();
+    })?;
     Ok((handle, waker))
+}
+
+/// Wait (bounded) for the listener to become readable so the acceptor
+/// neither spins on a non-blocking socket nor sleeps through a burst.
+#[cfg(unix)]
+fn acceptor_wait(listener: &TcpListener) {
+    use std::os::unix::io::AsRawFd;
+    let mut fds =
+        [sys::PollFd { fd: listener.as_raw_fd(), events: sys::POLLIN, revents: 0 }];
+    // Bounded timeout so shutdown/drain latches are observed promptly.
+    unsafe {
+        sys::poll(fds.as_mut_ptr(), 1 as sys::Nfds, 200);
+    }
+}
+
+#[cfg(not(unix))]
+fn acceptor_wait(_listener: &TcpListener) {
+    std::thread::sleep(Duration::from_millis(2));
+}
+
+/// The sharded front's acceptor: sole owner of the listener, dealing each
+/// accepted socket to the next reactor round-robin and waking it. Exits —
+/// dropping the listener, so new connections are refused at the kernel —
+/// as soon as shutdown or drain latches; sockets already dealt stay with
+/// their reactor and drain there.
+fn acceptor_loop(
+    listener: TcpListener,
+    lanes: Vec<(mpsc::Sender<TcpStream>, Arc<Waker>)>,
+    ctl: Arc<LoopCtl>,
+) {
+    let mut next = 0usize;
+    loop {
+        if ctl.shutdown.load(Ordering::SeqCst) || ctl.drain.load(Ordering::SeqCst) {
+            return;
+        }
+        acceptor_wait(&listener);
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let (tx, waker) = &lanes[next % lanes.len()];
+                    next += 1;
+                    if tx.send(stream).is_ok() {
+                        waker.wake();
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // e.g. EMFILE — back off instead of spinning (see
+                    // the solo accept path for the same reasoning).
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+    }
 }
 
 /// Socket-facing reactor state, handed to [`App`] hooks so the protocol
 /// brain can complete responses and drive backend connections without
 /// owning any I/O itself.
 pub struct Core {
-    listener: TcpListener,
+    /// `Some` on a solo front (the loop accepts directly); `None` on a
+    /// sharded front, where the acceptor thread owns the listener.
+    listener: Option<TcpListener>,
+    /// Sharded front only: sockets the acceptor dealt to this reactor.
+    incoming: Option<mpsc::Receiver<TcpStream>>,
     front: FrontConfig,
     stats: Arc<ReactorStats>,
     waker: Arc<Waker>,
@@ -500,6 +712,12 @@ pub struct Core {
     completions_rx: mpsc::Receiver<Completion>,
     conns: HashMap<u64, Conn>,
     next_conn_id: u64,
+    /// Conn-id stride (= reactor count): ids stay globally unique across
+    /// the loops of a sharded front without any cross-loop coordination.
+    conn_id_step: u64,
+    /// Open inbound connections across *every* reactor of this front —
+    /// the connection cap is a front-wide limit, not a per-loop one.
+    conn_count: Arc<AtomicUsize>,
     backends: HashMap<u64, BackendConn>,
     next_backend_id: u64,
     listener_ready: bool,
@@ -641,9 +859,13 @@ impl Core {
         let mut fds: Vec<sys::PollFd> = Vec::with_capacity(cap);
         let mut tokens: Vec<Option<Token>> = Vec::with_capacity(cap);
         fds.push(sys::PollFd {
-            // poll(2) ignores negative fds, so a draining loop parks the
-            // listener slot instead of shifting every index below it.
-            fd: if self.accepting { self.listener.as_raw_fd() } else { -1 },
+            // poll(2) ignores negative fds, so a draining (or sharded —
+            // no listener here) loop parks the listener slot instead of
+            // shifting every index below it.
+            fd: match &self.listener {
+                Some(l) if self.accepting => l.as_raw_fd(),
+                _ => -1,
+            },
             events: sys::POLLIN,
             revents: 0,
         });
@@ -727,7 +949,7 @@ impl Core {
     #[cfg(not(unix))]
     fn wait_ready(&mut self) {
         std::thread::sleep(Duration::from_millis(2));
-        self.listener_ready = self.accepting;
+        self.listener_ready = self.accepting && self.listener.is_some();
         for conn in self.conns.values_mut() {
             conn.readable = !conn.read_closed && conn.out.len() <= MAX_OUTBUF;
         }
@@ -781,7 +1003,12 @@ impl<A: App> Reactor<A> {
                     }
                 }
             }
+            let before = self.core.conns.len();
             self.core.conns.retain(|_, c| !c.dead && !c.finished());
+            let removed = before - self.core.conns.len();
+            if removed > 0 {
+                self.core.conn_count.fetch_sub(removed, Ordering::Relaxed);
+            }
             if draining && self.core.conns.is_empty() {
                 self.drain_completions();
                 return;
@@ -790,11 +1017,26 @@ impl<A: App> Reactor<A> {
     }
 
     fn accept_ready(&mut self) {
+        // Sharded front: drain sockets the acceptor dealt us. Sockets
+        // still queued when draining starts are dropped with the channel
+        // when the loop exits (they reset, same as an unaccepted backlog).
+        if let Some(rx) = self.core.incoming.take() {
+            if self.core.accepting {
+                while let Ok(stream) = rx.try_recv() {
+                    self.on_accept(stream);
+                }
+            }
+            self.core.incoming = Some(rx);
+        }
         if !self.core.listener_ready {
             return;
         }
         loop {
-            match self.core.listener.accept() {
+            let accepted = match &self.core.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
                 Ok((stream, _peer)) => self.on_accept(stream),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(_) => {
@@ -814,7 +1056,7 @@ impl<A: App> Reactor<A> {
             return; // drops (closes) the stream
         }
         let max_connections = self.core.front.max_connections.max(1);
-        if self.core.conns.len() >= max_connections {
+        if self.core.conn_count.load(Ordering::Relaxed) >= max_connections {
             self.app
                 .metrics()
                 .lock()
@@ -835,8 +1077,9 @@ impl<A: App> Reactor<A> {
         }
         self.app.metrics().lock().expect("metrics lock").incr("connections", 1);
         self.core.stats.fds_accepted.fetch_add(1, Ordering::Relaxed);
+        self.core.conn_count.fetch_add(1, Ordering::Relaxed);
         let id = self.core.next_conn_id;
-        self.core.next_conn_id += 1;
+        self.core.next_conn_id += self.core.conn_id_step;
         if obs::enabled() {
             obs::record_conn(id, self.core.front.service, Stage::Accept, obs::now_us(), 0.0);
         }
@@ -1278,6 +1521,9 @@ fn flush_bytes(stream: &TcpStream, out: &mut Vec<u8>, site: faults::Site) -> boo
 pub struct ServeApp {
     pub inner: Arc<ServerInner>,
     pub pool: Arc<Pool<Job>>,
+    /// This reactor's private stats block (registered in the server's
+    /// [`ReactorSet`] — one per loop of a sharded front).
+    pub stats: Arc<ReactorStats>,
 }
 
 impl App for ServeApp {
@@ -1296,7 +1542,7 @@ impl App for ServeApp {
     }
 
     fn stats(&self) -> Arc<ReactorStats> {
-        Arc::clone(&self.inner.reactor)
+        Arc::clone(&self.stats)
     }
 
     fn on_request(
@@ -1332,6 +1578,32 @@ mod tests {
         }
         assert_eq!(doc.get("loop_iterations").unwrap().as_usize(), Some(3));
         assert_eq!(doc.get("max_reorder_depth").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn reactor_set_rolls_up_sums_and_reorder_peak() {
+        let set = ReactorSet::default();
+        let a = set.register();
+        let b = set.register();
+        a.loop_iterations.fetch_add(5, Ordering::Relaxed);
+        b.loop_iterations.fetch_add(7, Ordering::Relaxed);
+        a.fds_accepted.fetch_add(2, Ordering::Relaxed);
+        b.fds_accepted.fetch_add(3, Ordering::Relaxed);
+        a.raise_reorder_depth(9); // the peak is a max across loops, not a sum
+        b.raise_reorder_depth(4);
+        let doc = set.to_json();
+        assert_eq!(doc.get("loop_iterations").unwrap().as_usize(), Some(12));
+        assert_eq!(doc.get("fds_accepted").unwrap().as_usize(), Some(5));
+        assert_eq!(doc.get("max_reorder_depth").unwrap().as_usize(), Some(9));
+        assert_eq!(doc.get("reactors").unwrap().as_usize(), Some(2));
+        match doc.get("per_reactor") {
+            Some(Json::Arr(blocks)) => {
+                assert_eq!(blocks.len(), 2);
+                assert_eq!(blocks[0].get("loop_iterations").unwrap().as_usize(), Some(5));
+                assert_eq!(blocks[1].get("fds_accepted").unwrap().as_usize(), Some(3));
+            }
+            other => panic!("per_reactor missing or not an array: {other:?}"),
+        }
     }
 
     #[test]

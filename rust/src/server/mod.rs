@@ -57,7 +57,6 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Daemon tuning knobs (`repro serve --port=… --workers=… --queue-depth=…`).
@@ -69,6 +68,13 @@ pub struct ServeConfig {
     pub host: String,
     /// Worker threads executing jobs.
     pub workers: usize,
+    /// Reactor threads fronting the sockets (`--reactors`). 1 (the
+    /// default) is the classic single-loop front where the reactor owns
+    /// the listener. N > 1 adds an acceptor thread that deals accepted
+    /// connections round-robin to N reactor loops — each connection lives
+    /// its whole life on one loop, so ordering and byte-identity are
+    /// unchanged; only the accept path and poll sets shard.
+    pub reactors: usize,
     /// Max jobs waiting in the queue before submissions are shed.
     pub queue_depth: usize,
     /// Max same-key jobs folded into one stacked pass.
@@ -124,6 +130,7 @@ impl Default for ServeConfig {
             port: 7077,
             host: "127.0.0.1".to_string(),
             workers: 4,
+            reactors: 1,
             queue_depth: 64,
             batch_max: 16,
             cache_capacity: 1024,
@@ -154,16 +161,16 @@ pub(crate) fn bind_front(host: &str, port: u16) -> Result<(TcpListener, SocketAd
     Ok((listener, addr))
 }
 
-/// A running daemon: reactor thread + worker pool, stoppable for tests.
-/// The thread set is fixed at start (1 loop + `workers`) no matter how
-/// many connections arrive.
+/// A running daemon: reactor thread(s) + worker pool, stoppable for
+/// tests. The thread set is fixed at start (`reactors` loops + `workers`,
+/// plus one acceptor when `reactors > 1`) no matter how many connections
+/// arrive.
 pub struct Server {
     addr: SocketAddr,
     inner: Arc<ServerInner>,
     pool: Arc<Pool<Job>>,
     ctl: Arc<event_loop::LoopCtl>,
-    waker: Arc<event_loop::Waker>,
-    loop_handle: Option<JoinHandle<()>>,
+    front: event_loop::FrontHandles,
 }
 
 impl Server {
@@ -192,21 +199,16 @@ impl Server {
             ))
         };
         let ctl = Arc::new(event_loop::LoopCtl::default());
-        let app = event_loop::ServeApp {
-            inner: Arc::clone(&inner),
-            pool: Arc::clone(&pool),
-        };
-        let (loop_handle, waker) =
-            event_loop::spawn("goomd-eventloop", listener, app, Arc::clone(&ctl))
-                .context("spawning event loop")?;
-        Ok(Server {
-            addr,
-            inner,
-            pool,
-            ctl,
-            waker,
-            loop_handle: Some(loop_handle),
-        })
+        let apps: Vec<event_loop::ServeApp> = (0..cfg.reactors.max(1))
+            .map(|_| event_loop::ServeApp {
+                inner: Arc::clone(&inner),
+                pool: Arc::clone(&pool),
+                stats: inner.reactor.register(),
+            })
+            .collect();
+        let front = event_loop::spawn_sharded("goomd-eventloop", listener, apps, Arc::clone(&ctl))
+            .context("spawning event loop")?;
+        Ok(Server { addr, inner, pool, ctl, front })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -233,14 +235,12 @@ impl Server {
     fn stop_impl(&mut self) {
         // Drain the pool first, while the event loop still runs: queued
         // jobs resolve their waiters with a shutdown-error line, and the
-        // loop can still deliver those responses. Then stop the loop —
-        // it makes a final drain-and-flush pass before closing sockets.
+        // loop can still deliver those responses. Then stop the loop(s) —
+        // each makes a final drain-and-flush pass before closing sockets.
         self.pool.shutdown();
         self.ctl.shutdown.store(true, Ordering::SeqCst);
-        self.waker.wake();
-        if let Some(h) = self.loop_handle.take() {
-            let _ = h.join();
-        }
+        self.front.wake_all();
+        self.front.join_all();
     }
 
     /// Graceful drain (SIGTERM path): stop accepting, let in-flight work
@@ -250,13 +250,11 @@ impl Server {
     /// a no-op (the pool and loop are already down).
     pub fn drain(mut self) {
         self.ctl.drain.store(true, Ordering::SeqCst);
-        self.waker.wake();
+        self.front.wake_all();
         // Workers finish the queued jobs (no queue clear) and exit; their
-        // completions flow back through the still-running loop.
+        // completions flow back through the still-running loop(s).
         self.pool.drain();
-        if let Some(h) = self.loop_handle.take() {
-            let _ = h.join();
-        }
+        self.front.join_all();
         self.ctl.shutdown.store(true, Ordering::SeqCst);
     }
 }
@@ -492,6 +490,19 @@ pub struct LoadgenConfig {
     /// key, same cache entry — so every verification mode (incl. chaos
     /// byte-compare) works unchanged.
     pub binary: bool,
+    /// Open-loop mode connection count (`--connections`); 0 falls back to
+    /// `clients`. Only meaningful with `offered_load > 0`.
+    pub connections: usize,
+    /// Offered load in requests/second across all connections
+    /// (`--offered-load`). 0 (the default) keeps the classic closed loop
+    /// — each client waits for responses before sending more, so the
+    /// target only ever sees what it can absorb. Positive switches to an
+    /// **open loop**: each connection injects requests on a fixed pacing
+    /// schedule regardless of how many responses are still outstanding,
+    /// and a shed response costs the request (counted in `shed_total`, no
+    /// resend) — the honest way to measure a saturation curve, where
+    /// goodput = delivered/elapsed under a load the target didn't choose.
+    pub offered_load: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -509,6 +520,8 @@ impl Default for LoadgenConfig {
             threads: 0,
             chaos: false,
             binary: false,
+            connections: 0,
+            offered_load: 0.0,
         }
     }
 }
@@ -569,16 +582,29 @@ pub struct DimLatency {
 
 /// Hammer a live daemon with `clients` concurrent connections and report
 /// throughput + latency percentiles, recording everything into `metrics`.
+/// With `offered_load > 0` the run is open-loop instead: `connections`
+/// paced injectors drive the configured aggregate RPS (see
+/// [`LoadgenConfig::offered_load`]).
 pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenReport> {
-    let clients = cfg.clients.max(1);
+    let open_loop = cfg.offered_load > 0.0;
+    let clients = if open_loop {
+        if cfg.connections > 0 { cfg.connections } else { cfg.clients.max(1) }
+    } else {
+        cfg.clients.max(1)
+    };
     // threads == 0 keeps the historical behavior (every client concurrent);
     // a bound runs the clients in waves on the shared parallel substrate.
-    let driver_threads = if cfg.threads == 0 { clients } else { cfg.threads };
+    // Open-loop pacing REQUIRES full concurrency — an injector parked
+    // behind a wave would pace nothing — so it always gets it.
+    let driver_threads =
+        if cfg.threads == 0 || open_loop { clients } else { cfg.threads };
     let collected: std::sync::Mutex<Vec<Result<ClientStats>>> =
         std::sync::Mutex::new(Vec::with_capacity(clients));
     let t0 = Instant::now();
     crate::util::par::par_for(clients, driver_threads, |client| {
-        let stats = if cfg.chaos {
+        let stats = if open_loop {
+            run_client_open(client as u64, clients, cfg)
+        } else if cfg.chaos {
             run_client_chaos(client as u64, cfg)
         } else {
             run_client(client as u64, cfg)
@@ -601,7 +627,7 @@ pub fn loadgen(cfg: &LoadgenConfig, metrics: &mut Metrics) -> Result<LoadgenRepo
         reconnects += stats.reconnects;
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
-    let total = cfg.clients.max(1) * cfg.requests;
+    let total = clients * cfg.requests;
     let ok = latencies.len();
     // Percentiles come from THIS run's samples only (a caller may reuse one
     // Metrics across runs, whose timers would blend them), but through the
@@ -831,6 +857,76 @@ fn run_client(client: u64, cfg: &LoadgenConfig) -> Result<ClientStats> {
             }
         }
     }
+    Ok(stats)
+}
+
+/// Open-loop injector: one paced connection of a saturation-curve run.
+/// The writer side sends request `r` at `start + r·interval` — a fixed
+/// schedule derived from the offered load, NOT from response arrivals —
+/// while this thread reads responses as they come. A shed response is
+/// accounted (dimension + carried backoff hint) and the request is
+/// *lost*, never resent: under overload an open-loop client keeps
+/// offering at the configured rate, so goodput and p99 bend exactly where
+/// the serving tier saturates instead of the load politely slowing down.
+/// Latency for each delivered response runs from its scheduled send, so
+/// queueing delay the overload created is inside the percentiles.
+fn run_client_open(client: u64, connections: usize, cfg: &LoadgenConfig) -> Result<ClientStats> {
+    let interval = Duration::from_secs_f64(connections as f64 / cfg.offered_load.max(1e-9));
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to {}", cfg.addr))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut stats = ClientStats::new(cfg.requests);
+    // Send timestamps + dimensions, pushed before each write. Responses
+    // come back strictly in request order (the serving tiers' reorder
+    // buffers guarantee it), so the reader pops the front to match.
+    let sent: std::sync::Mutex<std::collections::VecDeque<(usize, Instant)>> =
+        std::sync::Mutex::new(std::collections::VecDeque::with_capacity(cfg.requests));
+    let wire_for = |r: usize| {
+        let seed = cfg.shared_seed.unwrap_or(client * 100_000 + r as u64);
+        let d = if cfg.dims.is_empty() {
+            cfg.d
+        } else {
+            cfg.dims[(client as usize + r) % cfg.dims.len()]
+        };
+        (chain_wire_bytes(cfg, d, seed), d)
+    };
+    let write_err: Result<()> = std::thread::scope(|s| {
+        let writer_handle = s.spawn(|| -> Result<()> {
+            let mut writer = BufWriter::new(stream);
+            let start = Instant::now();
+            for r in 0..cfg.requests {
+                let due = start + interval.mul_f64(r as f64);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                let (bytes, d) = wire_for(r);
+                sent.lock().expect("open-loop send log").push_back((d, Instant::now()));
+                writer.write_all(&bytes)?;
+                writer.flush()?;
+            }
+            Ok(())
+        });
+        for _ in 0..cfg.requests {
+            let settle = read_settle(&mut reader, cfg.binary)?;
+            let (d, t0) = sent
+                .lock()
+                .expect("open-loop send log")
+                .pop_front()
+                .expect("a response implies a logged send");
+            match settle {
+                Settle::Ok { cached } => {
+                    stats.latencies.push((d, t0.elapsed().as_secs_f64()));
+                    stats.cached += usize::from(cached);
+                }
+                // Open loop: the shed is the datum. Account it, drop it.
+                Settle::Retry(ms) => stats.sheds.push((d, ms)),
+                Settle::Fail => stats.errors += 1,
+            }
+        }
+        writer_handle.join().expect("open-loop writer thread")
+    });
+    write_err?;
     Ok(stats)
 }
 
@@ -1091,6 +1187,7 @@ mod tests {
             threads: 0,
             chaos: false,
             binary: false,
+            ..LoadgenConfig::default()
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.total_requests, 24);
@@ -1140,6 +1237,7 @@ mod tests {
             threads: 0,
             chaos: false,
             binary: false,
+            ..LoadgenConfig::default()
         };
         let report = loadgen(&cfg, &mut metrics).unwrap();
         assert_eq!(report.ok, 12);
@@ -1156,6 +1254,60 @@ mod tests {
             assert_eq!(p.n, 4, "dimension {} request share", p.d);
             assert!(p.p50_ms > 0.0 && p.p50_ms <= p.p99_ms);
         }
+        server.stop();
+    }
+
+    #[test]
+    fn open_loop_loadgen_paces_offered_load_and_accounts_every_request() {
+        let server = Server::start(test_config()).unwrap();
+        let mut metrics = Metrics::new();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 1, // ignored: open loop sizes by `connections`
+            connections: 2,
+            offered_load: 200.0,
+            requests: 10,
+            d: 4,
+            steps: 20,
+            ..LoadgenConfig::default()
+        };
+        let report = loadgen(&cfg, &mut metrics).unwrap();
+        assert_eq!(report.total_requests, 20);
+        // Open loop settles every request exactly once: delivered, shed
+        // (no resend — the shed IS the datum), or failed.
+        assert_eq!(report.ok + report.shed_total + report.errors, 20);
+        assert_eq!(report.errors, 0);
+        // 10 requests per connection at 100 rps each = a ≥90 ms schedule;
+        // pacing must stretch the run (closed loop on a warm cache would
+        // finish in a few ms).
+        assert!(report.elapsed_s >= 0.08, "open loop must pace sends: {}", report.elapsed_s);
+        server.stop();
+    }
+
+    #[test]
+    fn sharded_reactors_all_accept_under_many_connections() {
+        let server = Server::start(ServeConfig { reactors: 3, ..test_config() }).unwrap();
+        let conns: Vec<TcpStream> =
+            (0..64).map(|_| TcpStream::connect(server.addr()).unwrap()).collect();
+        // Every connection is served regardless of which reactor owns it.
+        for stream in &conns {
+            let info = roundtrip(stream, r#"{"op":"info"}"#);
+            assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+        }
+        let metrics = roundtrip(&conns[0], r#"{"op":"metrics"}"#);
+        let reactor = metrics.get("result").unwrap().get("reactor").unwrap();
+        assert_eq!(reactor.get("reactors").unwrap().as_usize(), Some(3));
+        assert_eq!(reactor.get("fds_accepted").unwrap().as_usize(), Some(64));
+        let per = reactor.get("per_reactor").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 3);
+        for (i, block) in per.iter().enumerate() {
+            let accepted = block.get("fds_accepted").unwrap().as_usize().unwrap();
+            // The acceptor deals strictly round-robin: 64 connections over
+            // 3 reactors is 22/21/21 — every loop takes its full share.
+            assert!(accepted >= 21, "reactor {i} accepted only {accepted} of 64");
+            assert!(block.get("loop_iterations").unwrap().as_usize().unwrap() > 0);
+        }
+        drop(conns);
         server.stop();
     }
 

@@ -24,20 +24,27 @@
 //! counters under `"reactor"`.
 //!
 //! The router runs on the shared serving reactor
-//! ([`super::event_loop`]): one loop thread multiplexes every client
-//! connection *and* every backend connection, so the front is O(1)
-//! threads regardless of client or shard count (the pre-reactor router
-//! burned one blocking thread per client session). [`RelayApp`] is the
-//! sans-IO brain: client bytes frame into canonical requests, each
-//! request pipelines onto the loop-managed connection of its top-ranked
-//! backend, and because `goomd` answers strictly in request order per
-//! connection, a per-backend FIFO matches response lines back to their
-//! requests while the reactor's per-client reorder buffers restore client
-//! order. On a backend failure every in-flight request on that connection
-//! retries once on a fresh connection, then fails over down its
-//! rendezvous ranking (which costs cache affinity but preserves
-//! availability) — the same one-retry ladder the blocking relay walked,
-//! so responses stay byte-identical to it.
+//! ([`super::event_loop`]): `--reactors=N` loop threads (one by default)
+//! multiplex every client connection *and* every backend connection, so
+//! the front is O(1) threads regardless of client or shard count (the
+//! pre-reactor router burned one blocking thread per client session).
+//! [`RelayApp`] is the sans-IO brain — one instance per reactor, since
+//! backend connections are loop-owned: client bytes frame into canonical
+//! requests, each request picks a connection from the loop-managed
+//! **pool** of up to `--backend-pool=K` connections toward its top-ranked
+//! backend (least outstanding relays wins; the pool grows a connection
+//! only when every pooled one is busy), and because `goomd` answers
+//! strictly in request order per connection, a per-connection FIFO
+//! matches response messages back to their requests while the reactor's
+//! per-client reorder buffers restore client order. K = 1 reproduces the
+//! single shared connection per shard exactly; K > 1 removes cross-client
+//! head-of-line blocking — a slow request occupies one pooled connection
+//! while fast requests overtake it on another, with per-connection FIFO
+//! order (and therefore byte-identity) untouched. On a backend failure
+//! every in-flight request on that connection retries once on a fresh
+//! connection, then fails over down its rendezvous ranking (which costs
+//! cache affinity but preserves availability) — the same one-retry ladder
+//! the blocking relay walked, so responses stay byte-identical to it.
 //!
 //! Layered *above* that ladder (never changing its per-request behavior or
 //! error bytes) is per-shard health tracking: a [`Breaker`] per backend
@@ -47,10 +54,13 @@
 //! re-probed with a dedicated `info` request after a jittered exponential
 //! backoff (half-open), and restored to the rotation the moment a probe
 //! answers. Breaker state is exported under `"health"` in the router's
-//! `metrics` op.
+//! `metrics` op. Breakers (and the admission fairness state) are shared
+//! across the reactors of a sharded front behind one short-held mutex /
+//! lock-free atomics respectively: shard health is a property of the
+//! shard, not of whichever reactor observed the failure.
 
 use super::admission::{Admission, AdmissionConfig};
-use super::event_loop::{self, App, Core, FrontConfig, LoopCtl, ReactorStats};
+use super::event_loop::{self, App, Core, FrontConfig, LoopCtl, ReactorSet, ReactorStats};
 use super::faults;
 use super::protocol::{
     attach_id, encode_request_frame, num, num_or_null, obj, Payload, Rendered, Request, RespKind,
@@ -64,7 +74,6 @@ use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// `repro route` tuning knobs.
@@ -95,6 +104,17 @@ pub struct RouterConfig {
     /// Fault-injection plan (`--faults=...`); empty falls back to the
     /// `GOOM_FAULTS` env var, and "none"/"off" disables either way.
     pub faults: String,
+    /// Reactor loop threads fronting the sockets (`--reactors`); see
+    /// [`super::ServeConfig::reactors`] — identical semantics, router
+    /// tier. Each reactor runs its own [`RelayApp`] (backend connections
+    /// are loop-owned) over shared breaker/admission state.
+    pub reactors: usize,
+    /// Loop-managed backend connections per shard per reactor
+    /// (`--backend-pool`). 1 (the default) is the classic single shared
+    /// connection; K > 1 eliminates cross-client head-of-line blocking:
+    /// each request takes the pooled connection with the fewest
+    /// outstanding relays, growing the pool only when all are busy.
+    pub backend_pool: usize,
 }
 
 impl Default for RouterConfig {
@@ -110,6 +130,8 @@ impl Default for RouterConfig {
             inflight_per_conn: 64,
             idle_timeout_s: 60,
             faults: String::new(),
+            reactors: 1,
+            backend_pool: 1,
         }
     }
 }
@@ -152,22 +174,23 @@ pub fn rendezvous_rank(key: &str, backends: &[String]) -> Vec<usize> {
 struct RouterInner {
     cfg: RouterConfig,
     metrics: Mutex<Metrics>,
-    reactor: Arc<ReactorStats>,
+    /// Per-reactor stat blocks; `metrics` rolls them up (plus a
+    /// `per_reactor` breakdown) under `"reactor"`.
+    reactor: ReactorSet,
     started: Instant,
 }
 
-/// A running router: one reactor thread relaying clients to shards,
-/// stoppable for tests.
+/// A running router: `--reactors=N` reactor threads relaying clients to
+/// shards (plus an acceptor thread when N > 1), stoppable for tests.
 pub struct Router {
     addr: SocketAddr,
     inner: Arc<RouterInner>,
     ctl: Arc<LoopCtl>,
-    waker: Arc<event_loop::Waker>,
-    loop_handle: Option<JoinHandle<()>>,
+    front: event_loop::FrontHandles,
 }
 
 impl Router {
-    /// Bind and begin relaying on a reactor thread.
+    /// Bind and begin relaying on the reactor threads.
     pub fn start(cfg: RouterConfig) -> Result<Router> {
         anyhow::ensure!(
             !cfg.backends.is_empty(),
@@ -183,15 +206,38 @@ impl Router {
         let inner = Arc::new(RouterInner {
             cfg,
             metrics: Mutex::new(Metrics::new()),
-            reactor: Arc::new(ReactorStats::default()),
+            reactor: ReactorSet::default(),
             started: Instant::now(),
         });
         let ctl = Arc::new(LoopCtl::default());
-        let app = RelayApp::new(Arc::clone(&inner));
-        let (loop_handle, waker) =
-            event_loop::spawn("goomd-router-reactor", listener, app, Arc::clone(&ctl))
-                .context("spawning router reactor")?;
-        Ok(Router { addr, inner, ctl, waker, loop_handle: Some(loop_handle) })
+        // Shard health and fairness state are shared across reactors: a
+        // breaker trip observed by one reactor must eject the shard for
+        // all of them, and the admission policy is per shard-fleet, not
+        // per loop. Breakers sit behind one short-held mutex (locked only
+        // for state flips and ranking checks); `Admission` is all-atomic
+        // and needs no lock at all.
+        let breakers: Arc<Mutex<Vec<Breaker>>> = Arc::new(Mutex::new(
+            inner.cfg.backends.iter().map(|_| Breaker::new()).collect(),
+        ));
+        let admission = Arc::new(Admission::new(AdmissionConfig {
+            inflight_per_conn: inner.cfg.inflight_per_conn,
+            base_retry_ms: inner.cfg.retry_after_ms,
+            ..AdmissionConfig::default()
+        }));
+        let apps: Vec<RelayApp> = (0..inner.cfg.reactors.max(1))
+            .map(|_| {
+                RelayApp::new(
+                    Arc::clone(&inner),
+                    inner.reactor.register(),
+                    Arc::clone(&breakers),
+                    Arc::clone(&admission),
+                )
+            })
+            .collect();
+        let front =
+            event_loop::spawn_sharded("goomd-router-reactor", listener, apps, Arc::clone(&ctl))
+                .context("spawning router reactors")?;
+        Ok(Router { addr, inner, ctl, front })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -207,31 +253,27 @@ impl Router {
         self.inner.metrics.lock().expect("metrics lock").summary()
     }
 
-    /// Stop relaying: wake the reactor out of `poll` and join it (live
-    /// client and backend connections close with the loop).
+    /// Stop relaying: wake every reactor out of `poll` and join the front
+    /// (live client and backend connections close with their loops).
     pub fn stop(mut self) {
         self.stop_impl();
     }
 
     /// Graceful drain: stop accepting, relay every in-flight request to
-    /// completion and flush every reorder buffer, then join the reactor.
+    /// completion and flush every reorder buffer, then join the front.
     /// Clients that are idle (owed nothing) are closed immediately.
     pub fn drain(mut self) {
         self.ctl.drain.store(true, Ordering::SeqCst);
-        self.waker.wake();
-        if let Some(h) = self.loop_handle.take() {
-            let _ = h.join();
-        }
+        self.front.wake_all();
+        self.front.join_all();
         // Everything is down; make the Drop-path stop a no-op.
         self.ctl.shutdown.store(true, Ordering::SeqCst);
     }
 
     fn stop_impl(&mut self) {
         self.ctl.shutdown.store(true, Ordering::SeqCst);
-        self.waker.wake();
-        if let Some(h) = self.loop_handle.take() {
-            let _ = h.join();
-        }
+        self.front.wake_all();
+        self.front.join_all();
     }
 }
 
@@ -435,37 +477,48 @@ struct RelayEntry {
 }
 
 /// Sans-IO relay brain: requests in, backend sends + completions out. All
-/// socket work happens in the reactor core.
+/// socket work happens in the reactor core. One `RelayApp` per reactor —
+/// backend connections (and therefore `live`/`pending`/`probes`) are
+/// loop-owned — while breaker and admission state is shared across the
+/// whole front.
 pub struct RelayApp {
     inner: Arc<RouterInner>,
-    /// Backend index → the live loop-managed connection toward it.
-    live: HashMap<usize, u64>,
+    /// This reactor's stat block (registered in the shared [`ReactorSet`]).
+    stats: Arc<ReactorStats>,
+    /// Backend index → pool of live loop-managed connections toward it,
+    /// at most `cfg.backend_pool` long. Requests take the member with the
+    /// fewest outstanding relays; the pool grows only when every member
+    /// is busy, so `backend_pool = 1` reproduces the old single shared
+    /// connection exactly.
+    live: HashMap<usize, Vec<u64>>,
     /// Reactor backend-conn id → (backend index, FIFO of in-flight
     /// relays). `goomd` answers strictly in request order per connection,
     /// so the front of the queue always owns the next response line.
     pending: HashMap<u64, (usize, VecDeque<RelayEntry>)>,
-    /// Per-backend circuit breakers, indexed like `cfg.backends`. Reactor
-    /// apps are single-threaded, so no lock.
-    breakers: Vec<Breaker>,
+    /// Per-backend circuit breakers, indexed like `cfg.backends`. Shared
+    /// by every reactor of the front behind a short-held mutex: one
+    /// reactor's trip ejects the shard for all of them.
+    breakers: Arc<Mutex<Vec<Breaker>>>,
     /// Half-open probe connections: reactor backend-conn id → backend
     /// index. Checked before `pending`, so a probe's `info` response is
     /// never mistaken for a relayed answer.
     probes: HashMap<u64, usize>,
-    /// Per-connection fairness (shared policy with the shard tier; the
-    /// router has no work queue, so cost/queue signals stay idle).
-    admission: Admission,
+    /// Per-connection fairness, shared across reactors (all-atomic, so no
+    /// lock; shared policy with the shard tier — the router has no work
+    /// queue, so cost/queue signals stay idle).
+    admission: Arc<Admission>,
 }
 
 impl RelayApp {
-    fn new(inner: Arc<RouterInner>) -> Self {
-        let breakers = inner.cfg.backends.iter().map(|_| Breaker::new()).collect();
-        let admission = Admission::new(AdmissionConfig {
-            inflight_per_conn: inner.cfg.inflight_per_conn,
-            base_retry_ms: inner.cfg.retry_after_ms,
-            ..AdmissionConfig::default()
-        });
+    fn new(
+        inner: Arc<RouterInner>,
+        stats: Arc<ReactorStats>,
+        breakers: Arc<Mutex<Vec<Breaker>>>,
+        admission: Arc<Admission>,
+    ) -> Self {
         Self {
             inner,
+            stats,
             live: HashMap::new(),
             pending: HashMap::new(),
             breakers,
@@ -477,13 +530,22 @@ impl RelayApp {
     /// Launch half-open probes for every open breaker past its backoff
     /// deadline: a dedicated connection carrying one `info` request, so a
     /// recovering shard is tested without betting client traffic on it.
+    /// The Open → HalfOpen flip happens under the shared lock, so exactly
+    /// one reactor of the front wins each probe.
     fn tick_breakers(&mut self, core: &mut Core) {
         let now = Instant::now();
-        for idx in 0..self.breakers.len() {
-            if !self.breakers[idx].due_for_probe(now) {
-                continue;
+        let due: Vec<usize> = {
+            let mut breakers = self.breakers.lock().expect("breaker lock");
+            let mut due = Vec::new();
+            for idx in 0..breakers.len() {
+                if breakers[idx].due_for_probe(now) {
+                    breakers[idx].state = BreakerState::HalfOpen;
+                    due.push(idx);
+                }
             }
-            self.breakers[idx].state = BreakerState::HalfOpen;
+            due
+        };
+        for idx in due {
             match core.backend_open(&self.inner.cfg.backends[idx]) {
                 Ok(bid) => {
                     core.backend_send(bid, &Payload::from("{\"op\":\"info\"}".to_string()));
@@ -496,7 +558,7 @@ impl RelayApp {
                 }
                 Err(_) => {
                     // Still down: re-open with a doubled interval.
-                    self.breakers[idx].on_failure(idx);
+                    self.breakers.lock().expect("breaker lock")[idx].on_failure(idx);
                 }
             }
         }
@@ -504,7 +566,8 @@ impl RelayApp {
 
     /// Failure bookkeeping toward backend `idx` (also tallies opens).
     fn note_backend_failure(&mut self, idx: usize) {
-        if self.breakers[idx].on_failure(idx) {
+        let tripped = self.breakers.lock().expect("breaker lock")[idx].on_failure(idx);
+        if tripped {
             let mut m = self.inner.metrics.lock().expect("metrics lock");
             m.incr("breaker_opens", 1);
             m.incr_labeled("breaker_open", &self.inner.cfg.backends[idx], 1);
@@ -513,7 +576,8 @@ impl RelayApp {
 
     /// Success bookkeeping toward backend `idx`.
     fn note_backend_success(&mut self, idx: usize) {
-        if self.breakers[idx].on_success() {
+        let recovered = self.breakers.lock().expect("breaker lock")[idx].on_success();
+        if recovered {
             self.inner
                 .metrics
                 .lock()
@@ -522,15 +586,19 @@ impl RelayApp {
         }
     }
 
-    /// Send `entry` to the best backend it has not yet exhausted, opening
-    /// a loop-managed connection when none is live. Immediate connect
-    /// errors consume attempts synchronously; asynchronous failures
-    /// (refused/blackholed connects, mid-flight deaths) consume them via
-    /// [`RelayApp::on_backend_down`]. Backends with a tripped breaker are
-    /// skipped outright — an instant failover that consumes no retry
-    /// attempts. Exhausting the ranking answers the client with the same
-    /// no-backend error the blocking relay sent, in the client's encoding.
+    /// Send `entry` to the best backend it has not yet exhausted, picking
+    /// the pooled connection with the fewest outstanding relays and
+    /// opening a fresh loop-managed one when the pool is empty, or when
+    /// every member is busy and the pool is still under
+    /// `cfg.backend_pool`. Immediate connect errors consume attempts
+    /// synchronously; asynchronous failures (refused/blackholed connects,
+    /// mid-flight deaths) consume them via [`RelayApp::on_backend_down`].
+    /// Backends with a tripped breaker are skipped outright — an instant
+    /// failover that consumes no retry attempts. Exhausting the ranking
+    /// answers the client with the same no-backend error the blocking
+    /// relay sent, in the client's encoding.
     fn forward(&mut self, core: &mut Core, mut entry: RelayEntry) {
+        let pool_cap = self.inner.cfg.backend_pool.max(1);
         loop {
             let Some(&idx) = entry.ranked.get(entry.rank_pos) else {
                 self.inner.metrics.lock().expect("metrics lock").incr("route_errors", 1);
@@ -544,7 +612,7 @@ impl RelayApp {
                 core.complete(entry.conn, entry.seq, r.to_payload(entry.wire, entry.id.as_ref()));
                 return;
             };
-            if !self.breakers[idx].available() {
+            if !self.breakers.lock().expect("breaker lock")[idx].available() {
                 self.inner
                     .metrics
                     .lock()
@@ -554,12 +622,26 @@ impl RelayApp {
                 entry.tries = 0;
                 continue;
             }
-            let pooled = self.live.get(&idx).copied().filter(|b| core.backend_alive(*b));
-            let bid = match pooled {
+            // Least-outstanding pick over the live pool; `None` asks for a
+            // fresh connection (empty pool, or all members busy with room
+            // to grow). With `pool_cap = 1` this degenerates to exactly
+            // the old behavior: reuse the one live connection or open it.
+            let pick = {
+                let pending = &self.pending;
+                let pool = self.live.entry(idx).or_default();
+                pool.retain(|b| core.backend_alive(*b));
+                let outstanding =
+                    |b: &u64| pending.get(b).map_or(0, |(_, queue)| queue.len());
+                let pick = pool.iter().copied().min_by_key(outstanding);
+                let grow =
+                    pool.len() < pool_cap && pick.map_or(true, |b| outstanding(&b) > 0);
+                if grow { None } else { pick }
+            };
+            let bid = match pick {
                 Some(b) => b,
                 None => match core.backend_open(&self.inner.cfg.backends[idx]) {
                     Ok(b) => {
-                        self.live.insert(idx, b);
+                        self.live.entry(idx).or_default().push(b);
                         self.pending.insert(b, (idx, VecDeque::new()));
                         b
                     }
@@ -606,8 +688,8 @@ impl RelayApp {
             // the remote side closed. The next request toward this backend
             // opens a fresh one.
             self.pending.remove(&backend);
-            if self.live.get(&idx) == Some(&backend) {
-                self.live.remove(&idx);
+            if let Some(pool) = self.live.get_mut(&idx) {
+                pool.retain(|b| *b != backend);
             }
             core.backend_close(backend);
             self.inner
@@ -646,7 +728,7 @@ impl App for RelayApp {
     }
 
     fn stats(&self) -> Arc<ReactorStats> {
-        Arc::clone(&self.inner.reactor)
+        Arc::clone(&self.stats)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -785,8 +867,8 @@ impl App for RelayApp {
             return;
         }
         let Some((idx, queue)) = self.pending.remove(&backend) else { return };
-        if self.live.get(&idx) == Some(&backend) {
-            self.live.remove(&idx);
+        if let Some(pool) = self.live.get_mut(&idx) {
+            pool.retain(|b| *b != backend);
         }
         if !queue.is_empty() {
             self.inner
@@ -844,7 +926,11 @@ fn info_json(inner: &Arc<RouterInner>) -> Json {
     ])
 }
 
-fn metrics_json(inner: &Arc<RouterInner>, breakers: &[Breaker], admission: &Admission) -> Json {
+fn metrics_json(
+    inner: &Arc<RouterInner>,
+    breakers: &Mutex<Vec<Breaker>>,
+    admission: &Admission,
+) -> Json {
     let m = inner.metrics.lock().expect("metrics lock");
     let counters: BTreeMap<String, Json> = m
         .counters_iter()
@@ -856,7 +942,8 @@ fn metrics_json(inner: &Arc<RouterInner>, breakers: &[Breaker], admission: &Admi
         .collect();
     // Per-shard breaker state, keyed by backend address: the `"health"`
     // section the chaos-smoke job (and operators) watch for ejection and
-    // half-open recovery.
+    // half-open recovery. One snapshot under the shared lock.
+    let breakers = breakers.lock().expect("breaker lock");
     let health: BTreeMap<String, Json> = inner
         .cfg
         .backends
@@ -864,6 +951,7 @@ fn metrics_json(inner: &Arc<RouterInner>, breakers: &[Breaker], admission: &Admi
         .zip(breakers.iter())
         .map(|(addr, b)| (addr.clone(), b.to_json()))
         .collect();
+    drop(breakers);
     let mut pairs = vec![
         ("counters", Json::Obj(counters)),
         ("gauges", Json::Obj(gauges)),

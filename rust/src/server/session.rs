@@ -61,9 +61,11 @@ pub struct ServerInner {
     pub cache: Mutex<LruCache<Rendered>>,
     pub inflight: Inflight,
     pub metrics: Mutex<Metrics>,
-    /// The reactor's own counters (iterations, wakeups, accepted fds,
-    /// reorder high-water), exported through `metrics` under `"reactor"`.
-    pub reactor: Arc<super::event_loop::ReactorStats>,
+    /// The per-reactor counter blocks (iterations, wakeups, accepted fds,
+    /// reorder high-water — one block per loop of the sharded front),
+    /// exported through `metrics` under `"reactor"` as a rollup plus a
+    /// `"per_reactor"` breakdown.
+    pub reactor: super::event_loop::ReactorSet,
     /// Adaptive admission: queue/latency-aware dynamic retry hints,
     /// per-connection fairness caps, and `d³·steps` cost budgeting
     /// (exported through `metrics` under `"admission"`).
@@ -90,7 +92,7 @@ impl ServerInner {
             cache,
             inflight: Inflight::new(),
             metrics: Mutex::new(Metrics::new()),
-            reactor: Arc::new(super::event_loop::ReactorStats::default()),
+            reactor: super::event_loop::ReactorSet::default(),
             admission,
             started: Instant::now(),
         }

@@ -55,6 +55,7 @@ fn fault_injection_sheds_or_delays_but_never_corrupts() {
         threads: 0,
         chaos: true,
         binary: false,
+        ..LoadgenConfig::default()
     };
     let mut metrics = Metrics::new();
     let report = server::loadgen(&cfg, &mut metrics).expect("chaos loadgen");

@@ -9,6 +9,7 @@ use goomrs::server::{protocol, request_once, Router, RouterConfig, Server, Serve
 use goomrs::util::json::{self, Json};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 fn start_shard() -> Server {
     Server::start(ServeConfig {
@@ -272,6 +273,167 @@ fn backend_death_mid_pipeline_fails_over_with_byte_identical_responses() {
     assert_eq!(router.counter(&format!("routed[{}]", live.addr())), 12);
     assert!(router.counter("route_failovers") >= 1, "no failover exercised");
     assert_eq!(router.counter("route_errors"), 0);
+    router.stop();
+    live.stop();
+    fresh.stop();
+}
+
+#[test]
+fn backend_pool_lets_fast_requests_overtake_a_slow_one() {
+    // One shard with two workers behind a router with a 2-deep backend
+    // pool: a slow compute occupies pooled connection 1 while a fast
+    // request from another client relays on connection 2. With the old
+    // single shared connection per shard the fast response could only
+    // arrive after the slow one finished (per-connection FIFO) — the
+    // cross-client head-of-line blocking the pool exists to remove.
+    let shard = Server::start(ServeConfig {
+        port: 0,
+        workers: 2,
+        queue_depth: 16,
+        batch_max: 1,
+        cache_capacity: 64,
+        max_request_bytes: 64 * 1024,
+        retry_after_ms: 5,
+        ..ServeConfig::default()
+    })
+    .expect("shard start");
+    let router = Router::start(RouterConfig {
+        port: 0,
+        backends: vec![shard.addr().to_string()],
+        backend_pool: 2,
+        ..RouterConfig::default()
+    })
+    .expect("router start");
+    let mut slow = Client::connect(router.addr());
+    let mut fast = Client::connect(router.addr());
+    // Launch the slow chain (hundreds of ms of kernel time) and give the
+    // relay a beat to put it in flight on pooled connection 1.
+    let t0 = Instant::now();
+    let slow_req = protocol::encode_chain_request("goomc64", 64, 2500, 1);
+    slow.writer.write_all(slow_req.as_bytes()).unwrap();
+    slow.writer.write_all(b"\n").unwrap();
+    slow.writer.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let resp = fast.roundtrip(&protocol::encode_chain_request("goomc64", 4, 10, 2));
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    let t_fast = t0.elapsed();
+    let mut line = String::new();
+    slow.reader.read_line(&mut line).unwrap();
+    let t_slow = t0.elapsed();
+    let doc = json::parse(line.trim()).expect("valid JSON");
+    assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true), "{doc:?}");
+    // The overtake must be decisive, not a photo finish at the tail of
+    // the slow compute.
+    assert!(
+        t_fast < t_slow / 2,
+        "fast response blocked behind slow one: fast {t_fast:?} vs slow {t_slow:?}"
+    );
+    // And it came from the pool: the router grew a second loop-managed
+    // connection toward the single shard.
+    let metrics = fast.roundtrip(r#"{"op":"metrics"}"#);
+    let reactor = metrics.get("result").unwrap().get("reactor").unwrap();
+    assert!(
+        reactor.get("fds_connected").unwrap().as_usize().unwrap() >= 2,
+        "{reactor:?}"
+    );
+    router.stop();
+    shard.stop();
+}
+
+#[test]
+fn pooled_sharded_front_fails_over_with_byte_identical_responses() {
+    // The mid-pipeline-death byte-identity contract, now under the full
+    // new topology: --reactors=2 (each pipelining client owned by its own
+    // reactor, each reactor owning private backend pools) and
+    // --backend-pool=4 (pooled connections toward the dying backend fail
+    // individually — accepted-then-killed and connect-refused paths both
+    // walk the one-retry ladder).
+    let live = start_shard();
+    let dying = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dying_addr = dying.local_addr().unwrap().to_string();
+    let killer = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = dying.accept() {
+            let mut sink = [0u8; 4096];
+            let _ = s.read(&mut sink);
+        } // connection and listener both drop (close) here
+    });
+    let router = Router::start(RouterConfig {
+        port: 0,
+        backends: vec![live.addr().to_string(), dying_addr],
+        reactors: 2,
+        backend_pool: 4,
+        ..RouterConfig::default()
+    })
+    .expect("router start");
+    // Two clients, dealt round-robin to the two reactors, each pipelining
+    // 8 distinct requests in one burst. With two backends the odds that
+    // none of the 16 ranks the dying backend first are 2^-16.
+    let streams: Vec<TcpStream> = (0..2)
+        .map(|_| TcpStream::connect(router.addr()).expect("connect"))
+        .collect();
+    let lines: Vec<Vec<String>> = (0..2u64)
+        .map(|c| {
+            (0..8u64)
+                .map(|i| {
+                    protocol::encode_chain_request(
+                        "goomc64",
+                        5,
+                        30 + i as usize,
+                        5000 + c * 100 + i,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    for (stream, client_lines) in streams.iter().zip(&lines) {
+        let mut writer = stream;
+        let mut burst = String::new();
+        for line in client_lines {
+            burst.push_str(line);
+            burst.push('\n');
+        }
+        writer.write_all(burst.as_bytes()).unwrap();
+    }
+    let mut responses: Vec<Vec<String>> = Vec::new();
+    for stream in &streams {
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut client_responses = Vec::new();
+        for i in 0..8 {
+            let mut resp = String::new();
+            assert!(reader.read_line(&mut resp).unwrap() > 0, "missing response {i}");
+            client_responses.push(resp.trim_end().to_string());
+        }
+        responses.push(client_responses);
+    }
+    killer.join().unwrap();
+    // Every response, on both clients, in request order, byte-identical
+    // to a fresh shard's answer for the same canonical line.
+    let fresh = start_shard();
+    for (client_lines, client_responses) in lines.iter().zip(&responses) {
+        for (req, got) in client_lines.iter().zip(client_responses) {
+            let doc = json::parse(req).unwrap();
+            let canonical = protocol::Request::parse(&doc)
+                .expect("valid request")
+                .canonical_line()
+                .expect("compute request");
+            let want =
+                request_once(&fresh.addr().to_string(), &canonical).expect("fresh shard");
+            assert_eq!(got, &want, "relayed response diverged for {req}");
+        }
+    }
+    assert_eq!(router.counter(&format!("routed[{}]", live.addr())), 16);
+    assert!(router.counter("route_failovers") >= 1, "no failover exercised");
+    assert_eq!(router.counter("route_errors"), 0);
+    // Both reactors actually served a client (the acceptor dealt them out).
+    let mut client = Client::connect(router.addr());
+    let metrics = client.roundtrip(r#"{"op":"metrics"}"#);
+    let reactor = metrics.get("result").unwrap().get("reactor").unwrap();
+    assert_eq!(reactor.get("reactors").unwrap().as_usize(), Some(2));
+    let per = reactor.get("per_reactor").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), 2);
+    for block in per {
+        assert!(block.get("fds_accepted").unwrap().as_usize().unwrap() >= 1, "{per:?}");
+    }
     router.stop();
     live.stop();
     fresh.stop();
